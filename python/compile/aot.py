@@ -1,0 +1,129 @@
+"""AOT emitter: lower the L2 graphs to HLO *text* artifacts for Rust.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` 0.1.6
+crate links) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+Emits one ``.hlo.txt`` per executable plus ``manifest.json`` describing
+every artifact (name, parameter shapes, output shape, metadata) so the Rust
+runtime can validate its inputs before handing them to PJRT.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.imc_crossbar import xbar_gemm
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def gemm_artifacts():
+    """Crossbar GEMM executables at the tile shapes the coordinator uses."""
+    arts = []
+    for (m, k, n), adc in [
+        ((64, 128, 64), 4),
+        ((64, 128, 64), 8),
+        ((256, 256, 128), 8),
+    ]:
+        name = f"xbar_gemm_{m}x{k}x{n}_adc{adc}"
+
+        def fn(x, w, _adc=adc):
+            return (xbar_gemm(x, w, adc_bits=_adc, xbar_rows=128),)
+
+        arts.append(
+            dict(
+                name=name,
+                lowered=jax.jit(fn).lower(_spec((m, k)), _spec((k, n))),
+                params=[list(s) for s in [(m, k), (k, n)]],
+                output=[m, n],
+                meta=dict(kind="xbar_gemm", m=m, k=k, n=n, adc_bits=adc,
+                          xbar_rows=128),
+            )
+        )
+    return arts
+
+
+def cnn_artifacts(batch: int = 4):
+    """Full functional CNN forward (batch, 32, 32, 3) -> (batch, 10)."""
+    arts = []
+    shapes = [s for s, _ in model.cnn_param_shapes()]
+    for adc in (4, 8):
+        name = f"cnn_fwd_b{batch}_adc{adc}"
+
+        def fn(x, w1, b1, w2, b2, w3, b3, _adc=adc):
+            return (
+                model.cnn_forward(
+                    x, w1, b1, w2, b2, w3, b3, adc_bits=_adc, xbar_rows=128
+                ),
+            )
+
+        specs = [_spec((batch, 32, 32, 3))] + [_spec(s) for s in shapes]
+        arts.append(
+            dict(
+                name=name,
+                lowered=jax.jit(fn).lower(*specs),
+                params=[[batch, 32, 32, 3]] + [list(s) for s in shapes],
+                output=[batch, 10],
+                meta=dict(kind="cnn_fwd", batch=batch, adc_bits=adc,
+                          act_clip=model.ACT_CLIP, w_clip=model.W_CLIP),
+            )
+        )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="emit artifacts whose name contains this")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for art in gemm_artifacts() + cnn_artifacts():
+        if args.only and args.only not in art["name"]:
+            continue
+        path = os.path.join(args.out_dir, art["name"] + ".hlo.txt")
+        text = to_hlo_text(art["lowered"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            dict(
+                name=art["name"],
+                file=art["name"] + ".hlo.txt",
+                params=art["params"],
+                output=art["output"],
+                meta=art["meta"],
+            )
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""L1 Pallas kernel: functional model of a bit-serial IMC crossbar GEMM.
+
+This is the compute hot-spot of SIAM's functional fabric model. One grid
+step processes one (bm x bn) output block against one 128-row crossbar
+slice, mirroring the hardware decomposition of Section 3 of the paper:
+
+  * weights are bit-sliced across ``w_bits`` crossbar columns (1 bit/cell,
+    two's complement: the MSB plane carries weight -2^(w_bits-1));
+  * inputs are applied bit-serially over ``x_bits`` cycles (no DAC,
+    sequential bit-serial computing, Section 3 "Intra-Chiplet IMC
+    Architecture");
+  * each crossbar column's analog sum (a 0/1-matmul partial sum, at most
+    ``xbar_rows``) is digitized by a flash ADC of ``adc_bits`` resolution;
+  * shift-and-add circuits recombine the ADC outputs across input and
+    weight bit planes;
+  * accumulation *across* crossbars (the K dimension) is digital and exact.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): one crossbar tile is
+one VMEM block; the bit-plane matmuls are MXU-shaped (128x128); BlockSpec
+expresses the HBM->VMEM schedule that the paper's tile/chiplet hierarchy
+expresses with buffers. ``interpret=True`` everywhere — the CPU PJRT plugin
+cannot run Mosaic custom-calls; numerics are validated against
+``ref.py`` and real-TPU utilization is estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def adc_quantize(s: jax.Array, adc_bits: int, xbar_rows: int) -> jax.Array:
+    """Flash-ADC transfer function for a column analog sum.
+
+    The ADC has ``2**adc_bits`` levels spanning the full-scale range of the
+    column current, i.e. ``xbar_rows`` unit cell currents. When the level
+    count covers the range (``2**adc_bits - 1 >= xbar_rows``) read-out is
+    lossless; otherwise the sum is uniformly quantized with step
+    ``xbar_rows / (2**adc_bits - 1)`` (round-half-even, as both jnp and the
+    behavioural RTL use).
+    """
+    levels = (1 << adc_bits) - 1
+    if levels >= xbar_rows:
+        return s
+    step = xbar_rows / levels
+    return jnp.round(s / step) * step
+
+
+def _xbar_block_kernel(x_ref, w_ref, o_ref, *, x_bits, w_bits, adc_bits, xbar_rows):
+    """One (bm, rows) x (rows, bn) crossbar block with bit-serial read-out."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # unsigned integers 0 .. 2**x_bits - 1, as f32
+    w = w_ref[...]  # two's complement integers, as f32
+
+    # Two's-complement weight bit planes: u = w mod 2**w_bits, bit b of u
+    # contributes +2**b for b < w_bits-1 and -2**(w_bits-1) for the MSB.
+    w_u = jnp.mod(w, float(1 << w_bits))
+
+    acc = jnp.zeros_like(o_ref[...])
+    for t in range(x_bits):
+        x_t = jnp.mod(jnp.floor(x / float(1 << t)), 2.0)
+        for b in range(w_bits):
+            w_b = jnp.mod(jnp.floor(w_u / float(1 << b)), 2.0)
+            s = jnp.dot(x_t, w_b, preferred_element_type=jnp.float32)
+            q = adc_quantize(s, adc_bits, xbar_rows)
+            sign = -1.0 if b == w_bits - 1 else 1.0
+            acc = acc + (sign * float(1 << (t + b))) * q
+    o_ref[...] += acc
+
+
+def _pad_to(a: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = a.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(a, pads)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("x_bits", "w_bits", "adc_bits", "xbar_rows", "bm", "bn"),
+)
+def xbar_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    x_bits: int = 8,
+    w_bits: int = 8,
+    adc_bits: int = 4,
+    xbar_rows: int = 128,
+    bm: int = 128,
+    bn: int = 128,
+) -> jax.Array:
+    """Quantized GEMM through the IMC crossbar fabric.
+
+    ``x`` is (M, K) with unsigned integer values, ``w`` is (K, N) with
+    signed integer values (both carried as float32). K is split into
+    ``xbar_rows``-row crossbars, each with its own ADC; zero-padded rows
+    contribute nothing (an unprogrammed cell draws no current).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, xbar_rows)
+    wp = _pad_to(_pad_to(w, 0, xbar_rows), 1, bn)
+    gm, gk = xp.shape[0] // bm, xp.shape[1] // xbar_rows
+    gn = wp.shape[1] // bn
+
+    kernel = functools.partial(
+        _xbar_block_kernel,
+        x_bits=x_bits,
+        w_bits=w_bits,
+        adc_bits=adc_bits,
+        xbar_rows=xbar_rows,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, xbar_rows), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((xbar_rows, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(xp, wp)
+    return out[:m, :n]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the IMC crossbar kernel.
+
+Two references:
+
+* ``ref_exact``  — ideal integer GEMM (what an infinitely precise ADC, or a
+  digital MAC array, would compute).
+* ``ref_quantized`` — the same bit-serial / bit-sliced / flash-ADC math as
+  the Pallas kernel, written as straight-line jnp over K-slices. The kernel
+  must match this bit-for-bit; it must match ``ref_exact`` whenever the ADC
+  resolution covers the crossbar row count.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_exact(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _adc(s: jnp.ndarray, adc_bits: int, xbar_rows: int) -> jnp.ndarray:
+    levels = (1 << adc_bits) - 1
+    if levels >= xbar_rows:
+        return s
+    step = xbar_rows / levels
+    return jnp.round(s / step) * step
+
+
+def ref_quantized(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    x_bits: int = 8,
+    w_bits: int = 8,
+    adc_bits: int = 4,
+    xbar_rows: int = 128,
+) -> jnp.ndarray:
+    """Bit-exact model of the crossbar fabric, independent of Pallas."""
+    m, k = x.shape
+    _, n = w.shape
+    w_u = jnp.mod(w, float(1 << w_bits))
+    out = jnp.zeros((m, n), dtype=jnp.float32)
+    for k0 in range(0, k, xbar_rows):
+        xs = x[:, k0 : k0 + xbar_rows]
+        ws = w_u[k0 : k0 + xbar_rows, :]
+        for t in range(x_bits):
+            x_t = jnp.mod(jnp.floor(xs / float(1 << t)), 2.0)
+            for b in range(w_bits):
+                w_b = jnp.mod(jnp.floor(ws / float(1 << b)), 2.0)
+                s = jnp.dot(x_t, w_b, preferred_element_type=jnp.float32)
+                q = _adc(s, adc_bits, xbar_rows)
+                sign = -1.0 if b == w_bits - 1 else 1.0
+                out = out + (sign * float(1 << (t + b))) * q
+    return out

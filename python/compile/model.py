@@ -1,0 +1,186 @@
+"""L2: functional DNN compute graph on the IMC crossbar fabric.
+
+Every conv / fc layer is computed by quantizing activations (uint8) and
+weights (int8 two's complement), im2col-ing the activation tensor, and
+pushing the GEMM through the L1 Pallas crossbar kernel — exactly the
+dataflow of SIAM's chiplet fabric (Section 5 of the paper): crossbar MACs,
+digital shift-and-add, (global) accumulation, then pooling / ReLU in the
+chiplet's digital units.
+
+This module is build-time only. ``aot.py`` lowers the jitted functions to
+HLO text; the Rust runtime (rust/src/runtime) executes the artifacts on the
+request path. Python never serves.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.imc_crossbar import xbar_gemm
+
+# Fixed-point scales: activations live in [0, ACT_CLIP), weights in
+# [-W_CLIP, W_CLIP). Static scales keep the AOT graph weight-agnostic.
+ACT_CLIP = 4.0
+W_CLIP = 1.0
+X_LEVELS = 255.0
+W_LEVELS = 127.0
+
+
+def quantize_act(x: jax.Array) -> jax.Array:
+    """[0, ACT_CLIP) floats -> integer codes 0..255 (carried as f32)."""
+    return jnp.round(jnp.clip(x, 0.0, ACT_CLIP) * (X_LEVELS / ACT_CLIP))
+
+
+def quantize_w(w: jax.Array) -> jax.Array:
+    """[-W_CLIP, W_CLIP) floats -> integer codes -127..127 (as f32)."""
+    return jnp.round(jnp.clip(w, -W_CLIP, W_CLIP) * (W_LEVELS / W_CLIP))
+
+
+def dequant_scale() -> float:
+    return (ACT_CLIP / X_LEVELS) * (W_CLIP / W_LEVELS)
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1, padding: int = 1):
+    """(N,H,W,C) -> (N*OH*OW, kh*kw*C) patch matrix, row-major over (i,j,c)."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                xp[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            )
+    patches = jnp.concatenate(cols, axis=-1)  # (N, OH, OW, kh*kw*C)
+    return patches.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+def conv2d_imc(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+    adc_bits: int = 8,
+    xbar_rows: int = 128,
+) -> jax.Array:
+    """Conv layer on the crossbar fabric. x:(N,H,W,C) w:(kh,kw,C,F) b:(F,)."""
+    kh, kw, c, f = w.shape
+    xq, (n, oh, ow) = im2col(quantize_act(x), kh, kw, stride, padding)
+    wq = quantize_w(w).reshape(kh * kw * c, f)
+    acc = xbar_gemm(xq, wq, adc_bits=adc_bits, xbar_rows=xbar_rows)
+    y = acc * dequant_scale() + b
+    return y.reshape(n, oh, ow, f)
+
+
+def fc_imc(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    adc_bits: int = 8,
+    xbar_rows: int = 128,
+) -> jax.Array:
+    """Fully-connected layer on the crossbar fabric. x:(N,K) w:(K,F)."""
+    acc = xbar_gemm(
+        quantize_act(x), quantize_w(w), adc_bits=adc_bits, xbar_rows=xbar_rows
+    )
+    return acc * dequant_scale() + b
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2/2 max pool — the chiplet pooling unit (max mode)."""
+    n, h, w, c = x.shape
+    return jnp.max(x.reshape(n, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def avgpool2(x: jax.Array) -> jax.Array:
+    """2x2/2 average pool — the chiplet pooling unit (avg mode)."""
+    n, h, w, c = x.shape
+    return jnp.mean(x.reshape(n, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+class CnnParams(NamedTuple):
+    """Weights of the small CIFAR CNN used by the functional e2e example."""
+
+    w1: jax.Array  # (3,3,3,C1)
+    b1: jax.Array
+    w2: jax.Array  # (3,3,C1,C2)
+    b2: jax.Array
+    w3: jax.Array  # (8*8*C2, 10)
+    b3: jax.Array
+
+
+CNN_C1, CNN_C2 = 8, 16
+
+
+def cnn_param_shapes(c1: int = CNN_C1, c2: int = CNN_C2):
+    return [
+        ((3, 3, 3, c1), "w1"),
+        ((c1,), "b1"),
+        ((3, 3, c1, c2), "w2"),
+        ((c2,), "b2"),
+        ((8 * 8 * c2, 10), "w3"),
+        ((10,), "b3"),
+    ]
+
+
+def init_cnn_params(seed: int = 0, c1: int = CNN_C1, c2: int = CNN_C2) -> CnnParams:
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    he = lambda k, shp, fan: jax.random.normal(k, shp) * (2.0 / fan) ** 0.5
+    return CnnParams(
+        w1=he(keys[0], (3, 3, 3, c1), 27),
+        b1=jnp.zeros((c1,)),
+        w2=he(keys[1], (3, 3, c1, c2), 9 * c1),
+        b2=jnp.zeros((c2,)),
+        w3=he(keys[2], (8 * 8 * c2, 10), 8 * 8 * c2),
+        b3=jnp.zeros((10,)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits", "xbar_rows"))
+def cnn_forward(
+    x: jax.Array,
+    w1, b1, w2, b2, w3, b3,
+    *,
+    adc_bits: int = 8,
+    xbar_rows: int = 128,
+):
+    """CIFAR-shaped CNN, every MAC through the crossbar fabric.
+
+    x: (N, 32, 32, 3) in [0, 1]. Returns (N, 10) logits.
+    """
+    kw = dict(adc_bits=adc_bits, xbar_rows=xbar_rows)
+    h = relu(conv2d_imc(x, w1, b1, **kw))
+    h = maxpool2(h)  # 16x16
+    h = relu(conv2d_imc(h, w2, b2, **kw))
+    h = maxpool2(h)  # 8x8
+    h = h.reshape(h.shape[0], -1)
+    return fc_imc(h, w3, b3, **kw)
+
+
+def cnn_forward_ref(x, w1, b1, w2, b2, w3, b3):
+    """Float reference of the same CNN (no crossbar, no quantization)."""
+
+    def conv(x, w, b):
+        y = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return y + b
+
+    h = relu(conv(x, w1, b1))
+    h = maxpool2(h)
+    h = relu(conv(h, w2, b2))
+    h = maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    return h @ w3 + b3

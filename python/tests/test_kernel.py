@@ -1,0 +1,121 @@
+"""Kernel vs ref allclose — the CORE correctness signal for L1.
+
+Hypothesis sweeps shapes, crossbar geometry, bit widths and ADC resolution;
+the Pallas kernel (interpret=True) must agree with the pure-jnp oracle
+everywhere, and with the exact GEMM whenever the ADC is lossless.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.imc_crossbar import adc_quantize, xbar_gemm
+from compile.kernels.ref import ref_exact, ref_quantized
+
+
+def _rand(rng, m, k, n, x_bits, w_bits):
+    x = rng.integers(0, 1 << x_bits, (m, k)).astype(np.float32)
+    w = rng.integers(-(1 << (w_bits - 1)), 1 << (w_bits - 1), (k, n)).astype(
+        np.float32
+    )
+    return jnp.array(x), jnp.array(w)
+
+
+def _tol(out):
+    # quantized outputs are multiples of a non-representable step; allow
+    # fp32 reassociation error proportional to magnitude
+    return 1e-5 * float(jnp.max(jnp.abs(out)) + 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 200),
+    n=st.integers(1, 40),
+    xbar_rows=st.sampled_from([16, 32, 64, 128]),
+    adc_bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_quantized_ref(m, k, n, xbar_rows, adc_bits, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k, n, 8, 8)
+    out = xbar_gemm(x, w, adc_bits=adc_bits, xbar_rows=xbar_rows)
+    ref = ref_quantized(x, w, adc_bits=adc_bits, xbar_rows=xbar_rows)
+    np.testing.assert_allclose(out, ref, atol=_tol(ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(1, 150),
+    n=st.integers(1, 32),
+    x_bits=st.sampled_from([1, 2, 4, 8]),
+    w_bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_lossless_adc_is_exact_gemm(m, k, n, x_bits, w_bits, seed):
+    # 8-bit ADC covers <=255 unit currents: lossless for xbar_rows<=128,
+    # so the bit-serial fabric must reproduce the exact integer GEMM.
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k, n, x_bits, w_bits)
+    out = xbar_gemm(
+        x, w, x_bits=x_bits, w_bits=w_bits, adc_bits=8, xbar_rows=128
+    )
+    ref = ref_exact(x, w)
+    np.testing.assert_allclose(out, ref, atol=_tol(ref))
+
+
+@pytest.mark.parametrize("xbar_rows", [64, 128])
+@pytest.mark.parametrize("adc_bits", [3, 4, 5])
+def test_quantization_error_shrinks_with_adc_bits(xbar_rows, adc_bits):
+    rng = np.random.default_rng(7)
+    x, w = _rand(rng, 16, 256, 16, 8, 8)
+    ex = ref_exact(x, w)
+    scale = float(jnp.max(jnp.abs(ex)))
+    err_lo = float(
+        jnp.max(jnp.abs(xbar_gemm(x, w, adc_bits=adc_bits, xbar_rows=xbar_rows) - ex))
+    )
+    err_hi = float(
+        jnp.max(
+            jnp.abs(xbar_gemm(x, w, adc_bits=adc_bits + 2, xbar_rows=xbar_rows) - ex)
+        )
+    )
+    assert err_hi <= err_lo + 1e-4 * scale
+
+
+def test_adc_quantize_lossless_identity():
+    s = jnp.arange(0.0, 129.0)
+    np.testing.assert_array_equal(adc_quantize(s, 8, 128), s)
+
+
+def test_adc_quantize_step_levels():
+    # 2-bit ADC over 12-row crossbar: 3 steps of 4 (round-half-even: 2->0)
+    s = jnp.array([0.0, 1.0, 2.0, 3.0, 5.0, 11.0, 12.0])
+    q = adc_quantize(s, 2, 12)
+    np.testing.assert_allclose(q, [0.0, 0.0, 0.0, 4.0, 4.0, 12.0, 12.0])
+
+
+def test_zero_input_zero_output():
+    x = jnp.zeros((8, 64))
+    w = jnp.array(np.random.default_rng(1).integers(-128, 128, (64, 8)), jnp.float32)
+    np.testing.assert_array_equal(xbar_gemm(x, w, adc_bits=4), jnp.zeros((8, 8)))
+
+
+def test_negative_weights_two_complement():
+    # single -1 weight, input 1 => output -1 through the MSB-negative plane
+    x = jnp.ones((1, 1), jnp.float32)
+    w = jnp.full((1, 1), -1.0, jnp.float32)
+    out = xbar_gemm(x, w, adc_bits=8, xbar_rows=128)
+    np.testing.assert_allclose(out, [[-1.0]], atol=1e-6)
+
+
+def test_k_padding_is_invisible():
+    # K not a multiple of xbar_rows must behave as zero-filled extra rows
+    rng = np.random.default_rng(3)
+    x, w = _rand(rng, 4, 100, 4, 8, 8)
+    out = xbar_gemm(x, w, adc_bits=4, xbar_rows=64)
+    xp = jnp.pad(x, ((0, 0), (0, 28)))
+    wp = jnp.pad(w, ((0, 28), (0, 0)))
+    out_p = xbar_gemm(xp, wp, adc_bits=4, xbar_rows=64)
+    np.testing.assert_allclose(out, out_p, atol=_tol(out))

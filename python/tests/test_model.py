@@ -1,0 +1,97 @@
+"""L2 model tests: shapes, quantized-vs-float fidelity, im2col correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def test_im2col_matches_conv():
+    # im2col + exact GEMM must equal lax.conv for arbitrary tensors
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 5))
+    cols, (n, oh, ow) = model.im2col(x, 3, 3, 1, 1)
+    got = (cols @ w.reshape(27, 5)).reshape(n, oh, ow, 5)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_im2col_stride2_shape():
+    x = jnp.zeros((1, 16, 16, 4))
+    cols, (n, oh, ow) = model.im2col(x, 3, 3, stride=2, padding=1)
+    assert (n, oh, ow) == (1, 8, 8)
+    assert cols.shape == (64, 36)
+
+
+def test_quantize_act_range():
+    x = jnp.array([-1.0, 0.0, model.ACT_CLIP / 2, model.ACT_CLIP, 100.0])
+    q = model.quantize_act(x)
+    assert float(q[0]) == 0.0
+    assert float(q[-1]) == 255.0
+    assert jnp.all((q >= 0) & (q <= 255))
+    assert jnp.all(q == jnp.round(q))
+
+
+def test_quantize_w_range():
+    w = jnp.array([-10.0, -1.0, 0.0, 0.5, 1.0, 10.0])
+    q = model.quantize_w(w)
+    assert jnp.all((q >= -127) & (q <= 127))
+    assert jnp.all(q == jnp.round(q))
+
+
+def test_cnn_forward_shape():
+    params = model.init_cnn_params(0)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (2, 32, 32, 3))
+    out = model.cnn_forward(x, *params, adc_bits=8)
+    assert out.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_cnn_quantized_tracks_float_ref():
+    # With a lossless ADC the only error is 8-bit weight/act quantization;
+    # logits must correlate strongly and mostly agree on argmax.
+    params = model.init_cnn_params(3)
+    x = jax.random.uniform(jax.random.PRNGKey(4), (8, 32, 32, 3))
+    q = np.asarray(model.cnn_forward(x, *params, adc_bits=8))
+    f = np.asarray(model.cnn_forward_ref(x, *params))
+    corr = np.corrcoef(q.ravel(), f.ravel())[0, 1]
+    assert corr > 0.95, f"logit correlation too low: {corr}"
+    top1 = (q.argmax(1) == f.argmax(1)).mean()
+    assert top1 >= 0.5, f"top-1 agreement too low: {top1}"
+
+
+def test_cnn_adc4_degrades_gracefully():
+    params = model.init_cnn_params(5)
+    x = jax.random.uniform(jax.random.PRNGKey(6), (4, 32, 32, 3))
+    q8 = np.asarray(model.cnn_forward(x, *params, adc_bits=8))
+    q4 = np.asarray(model.cnn_forward(x, *params, adc_bits=4))
+    f = np.asarray(model.cnn_forward_ref(x, *params))
+    err8 = np.abs(q8 - f).mean()
+    err4 = np.abs(q4 - f).mean()
+    assert err4 >= err8 - 1e-6  # coarser ADC can't be more accurate
+    assert np.all(np.isfinite(q4))
+
+
+def test_pool_units():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    mp = model.maxpool2(x)
+    ap = model.avgpool2(x)
+    assert mp.shape == (1, 2, 2, 1)
+    np.testing.assert_allclose(mp[0, :, :, 0], [[5.0, 7.0], [13.0, 15.0]])
+    np.testing.assert_allclose(ap[0, :, :, 0], [[2.5, 4.5], [10.5, 12.5]])
+
+
+@pytest.mark.parametrize("batch", [1, 4])
+def test_aot_lowering_produces_hlo_text(batch, tmp_path):
+    # the AOT path must produce parseable non-trivial HLO text
+    from compile import aot
+
+    arts = aot.cnn_artifacts(batch=batch)
+    text = aot.to_hlo_text(arts[0]["lowered"])
+    assert "HloModule" in text
+    assert len(text) > 1000

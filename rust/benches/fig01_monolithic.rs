@@ -1,0 +1,42 @@
+//! Fig. 1a: total chip area and normalized fabrication cost of a
+//! *monolithic* RRAM IMC architecture across DNNs. Paper shape: area
+//! grows with model size up to ~1200 mm² (DenseNet-110); cost grows
+//! exponentially with area.
+
+use siam::config::{ChipMode, SiamConfig};
+use siam::coordinator::simulate;
+use siam::cost::CostModel;
+use siam::util::table::{eng, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Fig. 1a: monolithic IMC area & fabrication cost ==\n");
+    let nets = [
+        ("lenet5", "cifar10"),
+        ("resnet110", "cifar10"),
+        ("nin", "cifar10"),
+        ("vgg19", "cifar100"),
+        ("resnet50", "imagenet"),
+        ("densenet110", "cifar10"),
+        ("vgg16", "imagenet"),
+    ];
+    let cost = CostModel::default();
+    let mut t = Table::new(&["network", "tiles", "area mm2", "norm. cost", "yield %"]);
+    for (model, ds) in nets {
+        let cfg = SiamConfig::paper_default()
+            .with_model(model, ds)
+            .with_chip_mode(ChipMode::Monolithic);
+        let rep = simulate(&cfg)?;
+        let area = rep.total.area_mm2();
+        t.row(&[
+            model.into(),
+            rep.total_tiles.to_string(),
+            eng(area),
+            format!("{:.3}", cost.normalized_die_cost(area)),
+            format!("{:.1}", 100.0 * cost.yield_of(area)),
+        ]);
+    }
+    t.print();
+    println!("\npaper anchors: ResNet-50 ≈ 802 tiles; DenseNet-110 ≈ 2184 tiles / ~1200 mm²;");
+    println!("cost grows super-linearly (log-scale in the paper) with area. ");
+    Ok(())
+}

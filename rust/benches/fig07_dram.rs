@@ -1,0 +1,66 @@
+//! Fig. 7: DRAM engine experiments.
+//! (a) EDP-prediction accuracy vs the fraction of the 3000-instruction
+//!     stream actually simulated (paper: 50 % ⇒ <2 % EDP error).
+//! (b) DRAM EDP (DDR4) across DNNs (paper: exponential growth with
+//!     model size).
+
+use siam::config::{DramConfig, DramKind, SiamConfig};
+use siam::dnn::build_model;
+use siam::dram;
+use siam::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    println!("== Fig. 7a: EDP accuracy vs simulated instruction fraction ==\n");
+    let bytes = 3000 * 64; // the paper's 3000-instruction experiment
+    let full = dram::estimate_with(
+        bytes,
+        &DramConfig {
+            kind: DramKind::Ddr4,
+            bus_bits: 64,
+            subset_fraction: 1.0,
+        },
+    );
+    let mut t = Table::new(&["fraction %", "EDP (pJ*ns)", "error %", "sim requests"]);
+    for pct in [10, 25, 50, 75, 100] {
+        let rep = dram::estimate_with(
+            bytes,
+            &DramConfig {
+                kind: DramKind::Ddr4,
+                bus_bits: 64,
+                subset_fraction: pct as f64 / 100.0,
+            },
+        );
+        let err = 100.0 * (rep.edp() - full.edp()).abs() / full.edp();
+        t.row(&[
+            pct.to_string(),
+            format!("{:.4e}", rep.edp()),
+            format!("{err:.2}"),
+            format!("{:.0}", rep.requests as f64 * rep.simulated_fraction),
+        ]);
+    }
+    t.print();
+    println!("\npaper anchor: 50% of instructions ⇒ <2% EDP degradation.\n");
+
+    println!("== Fig. 7b: DRAM EDP (DDR4) across DNNs ==\n");
+    let mut t = Table::new(&["network", "model MB", "latency ms", "energy mJ", "EDP (pJ*ns)"]);
+    for (model, ds) in [
+        ("resnet110", "cifar10"),
+        ("resnet50", "imagenet"),
+        ("vgg19", "cifar100"),
+        ("vgg16", "imagenet"),
+    ] {
+        let stats = build_model(model, ds)?.stats();
+        let cfg = SiamConfig::paper_default();
+        let rep = dram::estimate(&stats, &cfg);
+        t.row(&[
+            model.into(),
+            format!("{:.1}", stats.model_bytes(8) as f64 / 1e6),
+            format!("{:.2}", rep.latency_ns / 1e6),
+            format!("{:.2}", rep.energy_pj / 1e9),
+            format!("{:.3e}", rep.edp()),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: EDP grows super-linearly (~quadratically) with model size.");
+    Ok(())
+}

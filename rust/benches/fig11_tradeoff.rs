@@ -1,0 +1,72 @@
+//! Fig. 11: NoP vs NoC trade-off for ResNet-110 on CIFAR-10.
+//! (a) EDAP(NoP)/EDAP(NoC) ratio for homogeneous (several chiplet
+//!     counts) and custom architectures vs tiles/chiplet — the ratio
+//!     falls as tiles/chiplet grows; the custom curve is smallest and
+//!     flattest.
+//! (b) NoP and NoC EDP separately at 36 chiplets — NoP EDP falls,
+//!     NoC EDP grows with tiles/chiplet.
+
+use siam::config::SiamConfig;
+use siam::dnn::build_model;
+use siam::mapping::{build_traffic, map_dnn, Placement};
+use siam::util::table::Table;
+
+fn nets(cfg: &SiamConfig) -> anyhow::Result<(siam::noc::NocReport, siam::nop::NopReport)> {
+    let dnn = build_model(&cfg.dnn.model, &cfg.dnn.dataset)?;
+    let map = map_dnn(&dnn, cfg)?;
+    let pl = Placement::new(map.num_chiplets);
+    let traffic = build_traffic(&dnn, &map, &pl, cfg);
+    Ok((
+        siam::noc::evaluate(cfg, &traffic, map.num_chiplets),
+        siam::nop::evaluate(cfg, &traffic, &pl),
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let tiles_opts = [4usize, 9, 16, 25, 36];
+
+    println!("== Fig. 11a: EDAP(NoP) / EDAP(NoC), ResNet-110 ==\n");
+    let mut headers = vec!["architecture".to_string()];
+    headers.extend(tiles_opts.iter().map(|t| format!("{t} t/c")));
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(&hdr);
+    for count in [Some(36usize), Some(64), Some(100), None] {
+        let label = count
+            .map(|c| format!("homogeneous {c}"))
+            .unwrap_or_else(|| "custom".into());
+        let mut row = vec![label];
+        for &tiles in &tiles_opts {
+            let mut cfg = SiamConfig::paper_default().with_tiles_per_chiplet(tiles);
+            if let Some(c) = count {
+                cfg = cfg.with_total_chiplets(c);
+            }
+            match nets(&cfg) {
+                Ok((noc, nop)) => {
+                    let ratio = nop.metrics.edap() / noc.metrics.edap().max(1e-30);
+                    row.push(format!("{ratio:.2}"));
+                }
+                Err(_) => row.push("-".into()), // does not fit
+            }
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!("\npaper shape: ratio falls with tiles/chiplet; custom smallest & flat.\n");
+
+    println!("== Fig. 11b: NoP vs NoC EDP, 36 homogeneous chiplets ==\n");
+    let mut t = Table::new(&["tiles/chiplet", "NoP EDP (pJ*ns)", "NoC EDP (pJ*ns)"]);
+    for &tiles in &tiles_opts {
+        let cfg = SiamConfig::paper_default()
+            .with_tiles_per_chiplet(tiles)
+            .with_total_chiplets(36);
+        let (noc, nop) = nets(&cfg)?;
+        t.row(&[
+            tiles.to_string(),
+            format!("{:.3e}", nop.metrics.edp()),
+            format!("{:.3e}", noc.metrics.edp()),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: NoP EDP decreases, NoC EDP increases with tiles/chiplet.");
+    Ok(())
+}

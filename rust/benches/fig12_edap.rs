@@ -1,0 +1,53 @@
+//! Fig. 12: overall EDAP (a) and total area (b) of homogeneous (16-100
+//! chiplets) and custom RRAM chiplet architectures for ResNet-110 /
+//! CIFAR-10, vs tiles per chiplet. Paper shape: custom beats
+//! homogeneous; EDAP improves with more tiles/chiplet; homogeneous area
+//! grows with tiles/chiplet while custom area shrinks.
+
+use siam::config::SiamConfig;
+use siam::coordinator::simulate;
+use siam::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let tiles_opts = [4usize, 9, 16, 25, 36];
+    let counts: [Option<usize>; 4] = [Some(36), Some(64), Some(100), None];
+
+    for (name, select) in [
+        (
+            "Fig. 12a: overall EDAP (pJ*ns*mm2)",
+            (|r: &siam::coordinator::SimReport| format!("{:.3e}", r.total.edap()))
+                as fn(&siam::coordinator::SimReport) -> String,
+        ),
+        ("Fig. 12b: total area (mm2)", |r| {
+            format!("{:.1}", r.total.area_mm2())
+        }),
+    ] {
+        println!("== {name}, ResNet-110 / CIFAR-10 ==\n");
+        let mut headers = vec!["architecture".to_string()];
+        headers.extend(tiles_opts.iter().map(|t| format!("{t} t/c")));
+        let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut t = Table::new(&hdr);
+        for count in counts {
+            let label = count
+                .map(|c| format!("homogeneous {c}"))
+                .unwrap_or_else(|| "custom".into());
+            let mut row = vec![label];
+            for &tiles in &tiles_opts {
+                let mut cfg = SiamConfig::paper_default().with_tiles_per_chiplet(tiles);
+                if let Some(c) = count {
+                    cfg = cfg.with_total_chiplets(c);
+                }
+                match simulate(&cfg) {
+                    Ok(rep) => row.push(select(&rep)),
+                    Err(_) => row.push("-".into()),
+                }
+            }
+            t.row(&row);
+        }
+        t.print();
+        println!();
+    }
+    println!("paper shape: custom < homogeneous EDAP everywhere; homogeneous area");
+    println!("grows with tiles/chiplet (fixed count × bigger chiplet), custom shrinks.");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! L3 hot-path microbenchmark (§Perf): the cycle-accurate network
+//! simulation is SIAM's dominant cost (the paper's BookSim runs are why
+//! VGG-16 takes 4.26 h). This bench measures PacketSim throughput on
+//! synthetic and real traces, for the before/after log in
+//! EXPERIMENTS.md §Perf.
+
+use siam::config::SiamConfig;
+use siam::dnn::build_model;
+use siam::mapping::{build_traffic, map_dnn, Flow, Placement};
+use siam::noc::{Mesh, PacketSim};
+use std::time::Instant;
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+    // warm-up
+    let mut total_packets = f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        total_packets = f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "{name:<42} {:>10.3} ms/run   {:>8.1} Mpkt/s",
+        dt * 1e3,
+        total_packets as f64 / dt / 1e6
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== NoC/NoP hot-path throughput ==\n");
+
+    // synthetic: uniform-random flows on a 6x6 mesh
+    let mesh = Mesh::new(36);
+    let sim = PacketSim::new(&mesh);
+    let mut flows = Vec::new();
+    let mut rng = siam::util::Rng::new(1);
+    for _ in 0..256 {
+        let src = rng.below(36) as u32;
+        let dst = rng.below(36) as u32;
+        if src != dst {
+            flows.push(Flow {
+                src,
+                dst,
+                count: 2000,
+                start: rng.below(8),
+                stride: 1 + rng.below(4),
+            });
+        }
+    }
+    let total: u64 = flows.iter().map(|f| f.count).sum();
+    bench("synthetic 6x6 mesh, ~500k packets", 5, || {
+        sim.run(&flows);
+        total
+    });
+
+    // real traces: all NoC epochs of ResNet-110 and ResNet-50
+    for (model, ds) in [("resnet110", "cifar10"), ("resnet50", "imagenet")] {
+        let cfg = SiamConfig::paper_default();
+        let dnn = build_model(model, ds)?;
+        let map = map_dnn(&dnn, &cfg)?;
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let tile_mesh = Mesh::new(cfg.chiplet.tiles_per_chiplet);
+        let tsim = PacketSim::new(&tile_mesh);
+        let packets: u64 = traffic
+            .noc_epochs
+            .iter()
+            .map(|e| Flow::total_packets(&e.flows))
+            .sum();
+        bench(
+            &format!("{model} full NoC trace ({packets} packets)"),
+            3,
+            || {
+                for ep in &traffic.noc_epochs {
+                    tsim.run(&ep.flows);
+                }
+                packets
+            },
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,362 @@
+//! The circuit estimator (Section 4.3.1): bottom-up composition from
+//! device → crossbar → tile → chiplet → system, evaluated layer-wise
+//! exactly as the paper describes.
+
+use super::components as comp;
+use super::tech::Tech;
+use crate::config::{ChipMode, ReadOut, SiamConfig};
+use crate::dnn::{Dnn, LayerKind};
+use crate::mapping::{MappingResult, Traffic};
+use crate::metrics::{Breakdown, Metrics};
+
+/// Per-layer compute cost (energy per inference, latency per inference).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerCircuit {
+    pub energy_pj: f64,
+    pub latency_ns: f64,
+    /// ADC conversions performed (exposed for ablations).
+    pub conversions: u64,
+}
+
+/// Output of the circuit estimator.
+#[derive(Debug, Clone, Default)]
+pub struct CircuitReport {
+    /// Weight-layer costs, parallel chiplets already folded in.
+    pub per_layer: Vec<LayerCircuit>,
+    /// IMC compute area: chiplets × (tiles + digital units), µm².
+    pub chiplets_area_um2: f64,
+    /// Global accumulator + global buffer area, µm².
+    pub global_area_um2: f64,
+    /// Total compute energy per inference, pJ.
+    pub energy_pj: f64,
+    /// Total compute latency per inference (layers execute sequentially),
+    /// ns.
+    pub latency_ns: f64,
+    /// All-on (peak) leakage, µW.
+    pub leakage_uw: f64,
+    /// Leakage energy actually accrued, pJ. Idle chiplets/crossbars are
+    /// power-gated (the paper gates the global accumulator and buffer
+    /// when unused; we extend gating to idle layers' fabric), so only
+    /// the active layer's share of the fabric leaks during its slot.
+    pub leakage_energy_pj: f64,
+    /// Component-class breakdown of energy.
+    pub energy_breakdown: Breakdown,
+}
+
+impl CircuitReport {
+    pub fn total_metrics(&self) -> Metrics {
+        Metrics {
+            area_um2: self.chiplets_area_um2 + self.global_area_um2,
+            energy_pj: self.energy_pj,
+            latency_ns: self.latency_ns,
+            leakage_uw: self.leakage_uw,
+        }
+    }
+}
+
+/// Fixed per-chiplet digital units (pool/act/accumulator/output buffer).
+const CHIPLET_OUT_BUFFER_BITS: f64 = 32.0 * 1024.0 * 8.0; // 32 kB
+
+pub struct CircuitEstimator<'a> {
+    cfg: &'a SiamConfig,
+    tech: Tech,
+}
+
+impl<'a> CircuitEstimator<'a> {
+    pub fn new(cfg: &'a SiamConfig) -> Self {
+        CircuitEstimator {
+            cfg,
+            tech: Tech::from_device(&cfg.device),
+        }
+    }
+
+    fn adcs_per_xbar(&self) -> f64 {
+        (self.cfg.chiplet.xbar_cols / self.cfg.chiplet.cols_per_adc) as f64
+    }
+
+    /// One crossbar + its peripherals (ADCs, muxes, shift-add), µm².
+    pub fn xbar_unit_area(&self) -> f64 {
+        let ch = &self.cfg.chiplet;
+        let arr = comp::xbar_array(&self.cfg.device, ch, &self.tech);
+        let adc = comp::flash_adc(ch.adc_bits, &self.tech);
+        let mux = comp::column_mux(ch.cols_per_adc, &self.tech);
+        let sa = comp::shift_add(&self.tech);
+        arr.area_um2 + self.adcs_per_xbar() * (adc.area_um2 + mux.area_um2) + sa.area_um2
+    }
+
+    /// One tile: crossbars + tile input/output buffer + tile accumulator.
+    pub fn tile_area(&self) -> f64 {
+        let ch = &self.cfg.chiplet;
+        let buf = comp::buffer_bit(ch.buffer_type, &self.tech);
+        let buf_bits = (ch.xbars_per_tile * ch.xbar_rows) as f64
+            * self.cfg.dnn.activation_precision as f64
+            * 2.0;
+        let acc = comp::accumulator(&self.tech);
+        ch.xbars_per_tile as f64 * self.xbar_unit_area() + buf_bits * buf.area_um2 + acc.area_um2
+    }
+
+    /// One chiplet: tiles + pooling + activation + chiplet accumulator +
+    /// output buffer (NoC and NoP interface areas are owned by their
+    /// engines).
+    pub fn chiplet_area(&self) -> f64 {
+        let ch = &self.cfg.chiplet;
+        let buf = comp::buffer_bit(ch.buffer_type, &self.tech);
+        ch.tiles_per_chiplet as f64 * self.tile_area()
+            + comp::pooling_unit(&self.tech).area_um2
+            + comp::activation_unit(&self.tech).area_um2
+            + comp::accumulator(&self.tech).area_um2
+            + CHIPLET_OUT_BUFFER_BITS * buf.area_um2
+    }
+
+    /// Compute cost of one weight layer (Eq.-1 geometry, bit-serial
+    /// read-out, ADC, shift-add, intra-chiplet accumulation, buffers).
+    pub fn layer_cost(
+        &self,
+        layer: &crate::dnn::Layer,
+        lm: &crate::mapping::LayerMapping,
+    ) -> LayerCircuit {
+        let ch = &self.cfg.chiplet;
+        let dev = &self.cfg.device;
+        let act_bits = self.cfg.dnn.activation_precision as f64;
+        let vectors = (layer.input_vectors() * self.cfg.dnn.batch) as f64;
+
+        let cols_per_weight = (self.cfg.dnn.weight_precision as f64
+            / dev.bits_per_cell as f64)
+            .ceil();
+        let cols_used = layer.weight_cols() as f64 * cols_per_weight;
+        let rows_used = layer.weight_rows() as f64;
+
+        // --- latency: bit-serial cycles × mux groups (× rows if
+        // sequential read-out), crossbars fully parallel, vectors
+        // streamed through the pipeline.
+        let seq_factor = match ch.read_out {
+            ReadOut::Parallel => 1.0,
+            ReadOut::Sequential => ch.xbar_rows as f64,
+        };
+        let cycles_per_vec = act_bits * ch.cols_per_adc as f64 * seq_factor;
+        let pipeline_depth = 20.0;
+        let latency_ns = (vectors * cycles_per_vec + pipeline_depth) * self.clk_ns();
+
+        // --- energy
+        let arr = comp::xbar_array(dev, ch, &self.tech);
+        let adc = comp::flash_adc(ch.adc_bits, &self.tech);
+        let mux = comp::column_mux(ch.cols_per_adc, &self.tech);
+        let sa = comp::shift_add(&self.tech);
+        let acc = comp::accumulator(&self.tech);
+        let buf = comp::buffer_bit(ch.buffer_type, &self.tech);
+
+        // ADC conversions: every used column, every input bit, every vector
+        let conversions = vectors * cols_used * act_bits;
+        // array column-group cycles across the used crossbars
+        let xbar_cycles = vectors
+            * act_bits
+            * ch.cols_per_adc as f64
+            * seq_factor
+            * (cols_used / ch.xbar_cols as f64).max(1.0)
+            * (rows_used / ch.xbar_rows as f64).max(1.0);
+        // digital accumulation across row-crossbars (N_r-1 adds per col)
+        let row_xbars = lm.rows as f64;
+        let acc_adds = vectors * layer.weight_cols() as f64 * (row_xbars - 1.0).max(0.0);
+        // buffers: read each input vector act_bits-wide per row, write out
+        let buf_bits = vectors * (rows_used * act_bits + layer.weight_cols() as f64 * act_bits);
+
+        let energy_pj = conversions * (adc.energy_per_op_pj + mux.energy_per_op_pj)
+            + xbar_cycles * arr.energy_per_op_pj
+            + conversions * sa.energy_per_op_pj
+            + acc_adds * acc.energy_per_op_pj
+            + buf_bits * buf.energy_per_op_pj;
+
+        LayerCircuit {
+            energy_pj,
+            latency_ns,
+            conversions: conversions as u64,
+        }
+    }
+
+    fn clk_ns(&self) -> f64 {
+        self.cfg.clock_period_ns()
+    }
+
+    /// Full circuit estimation for a mapped DNN.
+    pub fn estimate(&self, dnn: &Dnn, map: &MappingResult, traffic: &Traffic) -> CircuitReport {
+        let mut rep = CircuitReport::default();
+        let ch = &self.cfg.chiplet;
+        let tech = &self.tech;
+
+        // ---- areas
+        let monolithic = self.cfg.system.chip_mode == ChipMode::Monolithic;
+        rep.chiplets_area_um2 = if monolithic {
+            // one big chip with exactly the used tiles + one set of units
+            map.total_tiles(ch.xbars_per_tile) as f64 * self.tile_area()
+                + comp::pooling_unit(tech).area_um2
+                + comp::activation_unit(tech).area_um2
+                + comp::accumulator(tech).area_um2
+        } else {
+            map.num_chiplets as f64 * self.chiplet_area()
+        };
+        let gbuf_bits = self.cfg.system.global_buffer_kb as f64 * 1024.0 * 8.0;
+        let buf = comp::buffer_bit(ch.buffer_type, tech);
+        let gacc = comp::accumulator(tech);
+        rep.global_area_um2 =
+            gbuf_bits * buf.area_um2 + self.cfg.system.accumulator_size as f64 * gacc.area_um2;
+
+        // ---- per weight-layer compute
+        let mut e_imc = 0.0;
+        let total_xbars = map.total_xbars().max(1) as f64;
+        let mut active_share_time_ns = 0.0; // Σ share × layer latency
+        for lm in &map.per_layer {
+            let layer = &dnn.layers[lm.layer_idx];
+            let lc = self.layer_cost(layer, lm);
+            e_imc += lc.energy_pj;
+            rep.latency_ns += lc.latency_ns;
+            rep.energy_pj += lc.energy_pj;
+            active_share_time_ns += lc.latency_ns * lm.xbars as f64 / total_xbars;
+            rep.per_layer.push(lc);
+        }
+        rep.energy_breakdown.push("imc_compute", Metrics {
+            energy_pj: e_imc,
+            ..Metrics::ZERO
+        });
+
+        // ---- pooling / activation units over the non-weight layers
+        let (mut pool_elems, mut act_elems) = (0.0, 0.0);
+        for l in &dnn.layers {
+            match l.kind {
+                LayerKind::MaxPool { .. } | LayerKind::AvgPool { .. } | LayerKind::GlobalAvgPool => {
+                    pool_elems += l.ifm.elems() as f64
+                }
+                LayerKind::Relu | LayerKind::Sigmoid => act_elems += l.ofm.elems() as f64,
+                LayerKind::ResidualAdd { .. } => act_elems += l.ofm.elems() as f64,
+                _ => {}
+            }
+        }
+        let batch = self.cfg.dnn.batch as f64;
+        let pool = comp::pooling_unit(tech);
+        let act = comp::activation_unit(tech);
+        let e_pool = pool_elems * batch * pool.energy_per_op_pj;
+        let e_act = act_elems * batch * act.energy_per_op_pj;
+        rep.energy_pj += e_pool + e_act;
+        // pooled through 64-wide units, pipelined
+        rep.latency_ns += (pool_elems + act_elems) * batch / 64.0 * self.clk_ns();
+        rep.energy_breakdown.push("pool_act", Metrics {
+            energy_pj: e_pool + e_act,
+            ..Metrics::ZERO
+        });
+
+        // ---- global accumulator + buffer (paper: gated off when unused)
+        let gacc_e = traffic.accumulator_adds as f64 * gacc.energy_per_op_pj;
+        let gbuf_e = (traffic.global_buffer_writes + traffic.global_buffer_reads) as f64
+            * self.cfg.dnn.activation_precision as f64
+            * buf.energy_per_op_pj;
+        rep.energy_pj += gacc_e + gbuf_e;
+        rep.latency_ns += traffic.accumulator_adds as f64
+            / self.cfg.system.accumulator_size as f64
+            * self.clk_ns();
+        rep.energy_breakdown.push("global_acc_buf", Metrics {
+            energy_pj: gacc_e + gbuf_e,
+            ..Metrics::ZERO
+        });
+
+        // ---- leakage (area-proportional densities)
+        let adc = comp::flash_adc(ch.adc_bits, tech);
+        let adcs_total = map.total_xbars() as f64 * self.adcs_per_xbar();
+        rep.leakage_uw = adcs_total * adc.leakage_uw
+            + rep.chiplets_area_um2 * 2.0e-3  // ~2 mW/mm² logic+SRAM density
+            + rep.global_area_um2 * 2.0e-3;
+        // power-gated fabric: only the running layer's share leaks
+        // (µW × ns = fJ ⇒ /1e3 to pJ)
+        rep.leakage_energy_pj = rep.leakage_uw * active_share_time_ns / 1.0e3;
+        rep.energy_pj += rep.leakage_energy_pj;
+        rep.energy_breakdown.push("leakage", Metrics {
+            energy_pj: rep.leakage_energy_pj,
+            ..Metrics::ZERO
+        });
+
+        rep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SiamConfig;
+    use crate::dnn::build_model;
+    use crate::mapping::{build_traffic, map_dnn, Placement};
+
+    fn run(model: &str, ds: &str, cfg: &SiamConfig) -> CircuitReport {
+        let dnn = build_model(model, ds).unwrap();
+        let map = map_dnn(&dnn, cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, cfg);
+        CircuitEstimator::new(cfg).estimate(&dnn, &map, &traffic)
+    }
+
+    #[test]
+    fn tile_area_near_calibration_anchor() {
+        // ≈0.5 mm² per 16-crossbar tile at the paper's configuration
+        let cfg = SiamConfig::paper_default();
+        let est = CircuitEstimator::new(&cfg);
+        let mm2 = est.tile_area() / 1e6;
+        assert!((0.2..0.9).contains(&mm2), "tile area {mm2} mm²");
+    }
+
+    #[test]
+    fn resnet50_energy_near_gpu_claim_anchor() {
+        // 130× vs V100 (≈82 mJ/inference) ⇒ expect O(0.5–2 mJ)
+        let cfg = SiamConfig::paper_default().with_model("resnet50", "imagenet");
+        let rep = run("resnet50", "imagenet", &cfg);
+        let mj = rep.energy_pj / 1e9;
+        assert!((0.1..5.0).contains(&mj), "ResNet-50 energy {mj} mJ");
+    }
+
+    #[test]
+    fn monolithic_area_matches_fig1_scale() {
+        // Fig. 1a: ResNet-50 monolithic RRAM IMC ≈ 450 mm² (802 tiles)
+        let cfg = SiamConfig::paper_default()
+            .with_chip_mode(ChipMode::Monolithic)
+            .with_model("resnet50", "imagenet");
+        let rep = run("resnet50", "imagenet", &cfg);
+        let mm2 = rep.chiplets_area_um2 / 1e6;
+        assert!((150.0..900.0).contains(&mm2), "monolithic area {mm2} mm²");
+    }
+
+    #[test]
+    fn sequential_readout_is_slower() {
+        let mut cfg = SiamConfig::paper_default();
+        let fast = run("lenet5", "cifar10", &cfg).latency_ns;
+        cfg.chiplet.read_out = ReadOut::Sequential;
+        let slow = run("lenet5", "cifar10", &cfg).latency_ns;
+        assert!(slow > 10.0 * fast, "sequential {slow} vs parallel {fast}");
+    }
+
+    #[test]
+    fn higher_adc_resolution_costs_energy() {
+        let mut cfg = SiamConfig::paper_default();
+        let e4 = run("resnet110", "cifar10", &cfg).energy_pj;
+        cfg.chiplet.adc_bits = 8;
+        let e8 = run("resnet110", "cifar10", &cfg).energy_pj;
+        assert!(e8 > e4);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let cfg = SiamConfig::paper_default();
+        let rep = run("resnet110", "cifar10", &cfg);
+        let sum: f64 = rep
+            .energy_breakdown
+            .components
+            .iter()
+            .map(|(_, m)| m.energy_pj)
+            .sum();
+        assert!((sum - rep.energy_pj).abs() / rep.energy_pj < 1e-9);
+    }
+
+    #[test]
+    fn batch_scales_energy_linearly() {
+        let mut cfg = SiamConfig::paper_default();
+        let e1 = run("lenet5", "cifar10", &cfg).energy_pj;
+        cfg.dnn.batch = 4;
+        let e4 = run("lenet5", "cifar10", &cfg).energy_pj;
+        assert!((e4 / e1 - 4.0).abs() < 0.2, "batch scaling {}", e4 / e1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Circuit & intra-chiplet estimator (Section 4.3.1 of the paper) —
+//! NeuroSim-style bottom-up area/energy/latency models for the IMC
+//! crossbar, peripherals (flash ADC, column mux, shift-add), buffers,
+//! accumulators, pooling and activation units, composed device → crossbar
+//! → tile → chiplet → system.
+
+pub mod components;
+pub mod estimator;
+pub mod tech;
+
+pub use estimator::{CircuitEstimator, CircuitReport, LayerCircuit};
+pub use tech::Tech;

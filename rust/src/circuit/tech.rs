@@ -1,0 +1,72 @@
+//! Technology scaling. All component base numbers are calibrated at
+//! 32 nm (the paper's node) against published NeuroSim / ISAAC figures;
+//! other nodes scale classically: area ∝ F², dynamic energy ∝ F^1.3
+//! (capacitance × mildly-scaling V_dd²), leakage density roughly constant
+//! per µm² (so leakage ∝ area).
+
+use crate::config::DeviceConfig;
+
+/// Scaling factors relative to the 32 nm calibration point.
+#[derive(Debug, Clone, Copy)]
+pub struct Tech {
+    pub node_nm: u32,
+    /// Area multiplier vs 32 nm.
+    pub area: f64,
+    /// Dynamic-energy multiplier vs 32 nm.
+    pub energy: f64,
+    /// Leakage multiplier vs 32 nm.
+    pub leakage: f64,
+}
+
+impl Tech {
+    pub fn new(node_nm: u32) -> Tech {
+        let s = node_nm as f64 / 32.0;
+        Tech {
+            node_nm,
+            area: s * s,
+            energy: s.powf(1.3),
+            leakage: s * s,
+        }
+    }
+
+    pub fn from_device(dev: &DeviceConfig) -> Tech {
+        Tech::new(dev.tech_node_nm)
+    }
+
+    /// Feature size in µm.
+    pub fn f_um(&self) -> f64 {
+        self.node_nm as f64 * 1e-3
+    }
+
+    /// Area of `n` F² in µm².
+    pub fn f2_um2(&self, n: f64) -> f64 {
+        let f = self.f_um();
+        n * f * f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_node_is_identity() {
+        let t = Tech::new(32);
+        assert!((t.area - 1.0).abs() < 1e-12);
+        assert!((t.energy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smaller_node_shrinks() {
+        let t = Tech::new(16);
+        assert!((t.area - 0.25).abs() < 1e-12);
+        assert!(t.energy < 1.0 && t.energy > 0.25);
+    }
+
+    #[test]
+    fn f2_area() {
+        let t = Tech::new(32);
+        // 4F² RRAM cell at 32nm = 4 * 0.032² = 0.004096 µm²
+        assert!((t.f2_um2(4.0) - 0.004096).abs() < 1e-9);
+    }
+}

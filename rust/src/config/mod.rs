@@ -1,0 +1,155 @@
+//! User-facing configuration: the Table-2 inputs of the SIAM paper.
+//!
+//! A [`SiamConfig`] fully describes one architecture point: the DNN
+//! workload, the device/technology, the intra-chiplet fabric (crossbars,
+//! ADCs, buffers, NoC) and the inter-chiplet system (chiplet structure,
+//! NoP, DRAM). Configurations are TOML files (see `configs/`), with
+//! programmatic builders for design-space sweeps.
+
+mod parse;
+mod types;
+mod validate;
+
+pub use parse::Value;
+pub use types::*;
+pub use validate::ValidationError;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+impl SiamConfig {
+    /// Paper defaults (Section 6.1): RRAM 1 bit/cell, 128×128 crossbars,
+    /// 4-bit flash ADC with 8:1 column mux, parallel read-out, 16 tiles
+    /// per chiplet, 32 nm, 1 GHz, mesh NoC, GRS NoP @ 0.54 pJ/bit,
+    /// DDR4 DRAM.
+    pub fn paper_default() -> Self {
+        SiamConfig::default()
+    }
+
+    /// Load and validate a TOML configuration file (overrides applied on
+    /// top of the paper defaults).
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse and validate a TOML configuration string.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let cfg = parse::apply(SiamConfig::default(), text)
+            .map_err(|e| anyhow::anyhow!("parsing config: {e}"))?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_toml_string(&self) -> Result<String> {
+        Ok(parse::write(self))
+    }
+
+    /// Total IMC crossbars per chiplet: S = tiles/chiplet × crossbars/tile.
+    pub fn chiplet_size_xbars(&self) -> usize {
+        self.chiplet.tiles_per_chiplet * self.chiplet.xbars_per_tile
+    }
+
+    /// Clock period of the intra-chiplet logic, ns.
+    pub fn clock_period_ns(&self) -> f64 {
+        1.0e3 / self.chiplet.frequency_mhz
+    }
+
+    /// Builder-style override helpers used by the sweep driver.
+    pub fn with_model(mut self, model: &str, dataset: &str) -> Self {
+        self.dnn.model = model.to_string();
+        self.dnn.dataset = dataset.to_string();
+        self
+    }
+
+    pub fn with_tiles_per_chiplet(mut self, tiles: usize) -> Self {
+        self.chiplet.tiles_per_chiplet = tiles;
+        self
+    }
+
+    pub fn with_chiplet_structure(mut self, structure: ChipletStructure) -> Self {
+        self.system.structure = structure;
+        self
+    }
+
+    pub fn with_total_chiplets(mut self, count: usize) -> Self {
+        self.system.structure = ChipletStructure::Homogeneous;
+        self.system.total_chiplets = Some(count);
+        self
+    }
+
+    pub fn with_chip_mode(mut self, mode: ChipMode) -> Self {
+        self.system.chip_mode = mode;
+        self
+    }
+
+    pub fn with_nop_frequency_mhz(mut self, f: f64) -> Self {
+        self.system.nop.frequency_mhz = f;
+        self
+    }
+
+    /// Scale NoP link bandwidth (the Fig. 14d "NoP speed-up" axis).
+    pub fn with_nop_speedup(mut self, factor: f64) -> Self {
+        self.system.nop.gbps_per_lane *= factor;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_toml() {
+        let cfg = SiamConfig::paper_default();
+        let text = cfg.to_toml_string().unwrap();
+        let back = SiamConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.chiplet.xbar_rows, cfg.chiplet.xbar_rows);
+        assert_eq!(back.dnn.model, cfg.dnn.model);
+        assert_eq!(back.system.nop.ebit_pj, cfg.system.nop.ebit_pj);
+    }
+
+    #[test]
+    fn default_matches_paper_section_6_1() {
+        let cfg = SiamConfig::paper_default();
+        assert_eq!(cfg.chiplet.xbar_rows, 128);
+        assert_eq!(cfg.chiplet.xbar_cols, 128);
+        assert_eq!(cfg.chiplet.adc_bits, 4);
+        assert_eq!(cfg.chiplet.cols_per_adc, 8);
+        assert_eq!(cfg.chiplet.tiles_per_chiplet, 16);
+        assert_eq!(cfg.chiplet.xbars_per_tile, 16);
+        assert_eq!(cfg.device.tech_node_nm, 32);
+        assert_eq!(cfg.device.bits_per_cell, 1);
+        assert_eq!(cfg.dnn.weight_precision, 8);
+        assert!((cfg.chiplet.frequency_mhz - 1000.0).abs() < 1e-9);
+        assert!((cfg.system.nop.ebit_pj - 0.54).abs() < 1e-9);
+        assert_eq!(cfg.system.nop.channel_width, 32);
+        assert!((cfg.system.nop.frequency_mhz - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chiplet_size() {
+        let cfg = SiamConfig::paper_default();
+        assert_eq!(cfg.chiplet_size_xbars(), 256);
+    }
+
+    #[test]
+    fn builders() {
+        let cfg = SiamConfig::paper_default()
+            .with_model("vgg16", "imagenet")
+            .with_tiles_per_chiplet(36)
+            .with_total_chiplets(64);
+        assert_eq!(cfg.dnn.model, "vgg16");
+        assert_eq!(cfg.chiplet.tiles_per_chiplet, 36);
+        assert_eq!(cfg.system.total_chiplets, Some(64));
+        assert_eq!(cfg.system.structure, ChipletStructure::Homogeneous);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let mut cfg = SiamConfig::paper_default();
+        cfg.chiplet.xbar_rows = 0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,501 @@
+//! Minimal TOML-subset parser/writer for SIAM config files.
+//!
+//! The offline build environment vendors no TOML crate, so we parse the
+//! subset the `configs/` presets need: `[section]` / `[section.sub]`
+//! headers, `key = value` pairs with string / bool / integer / float /
+//! numeric-array values, and `#` comments. Unknown keys are an error —
+//! catching config typos is part of the validation story.
+
+use super::types::*;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Array(Vec<f64>),
+}
+
+impl Value {
+    fn parse(raw: &str, line: usize) -> Result<Value, String> {
+        let raw = raw.trim();
+        if let Some(s) = raw.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+            return Ok(Value::Str(s.to_string()));
+        }
+        if raw == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if raw == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(inner) = raw.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            let mut out = Vec::new();
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                out.push(
+                    part.parse::<f64>()
+                        .map_err(|_| format!("line {line}: bad array element '{part}'"))?,
+                );
+            }
+            return Ok(Value::Array(out));
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(format!("line {line}: cannot parse value '{raw}'"))
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+}
+
+/// Parse `text` into flattened `section.key -> Value` pairs.
+pub fn parse_flat(text: &str) -> Result<BTreeMap<String, Value>, String> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (i, line) in text.lines().enumerate() {
+        let n = i + 1;
+        let line = match line.find('#') {
+            // naive comment strip is fine: our strings never contain '#'
+            Some(pos) => &line[..pos],
+            None => line,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = h.trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(format!("line {n}: expected 'key = value', got '{line}'"));
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, Value::parse(v, n)?);
+    }
+    Ok(out)
+}
+
+macro_rules! take {
+    ($map:expr, $key:expr, $slot:expr, $conv:expr) => {
+        if let Some(v) = $map.remove($key) {
+            $slot = $conv(&v).ok_or_else(|| format!("bad value for {}", $key))?;
+        }
+    };
+}
+
+fn mem_cell(v: &Value) -> Option<MemCell> {
+    match v {
+        Value::Str(s) if s == "rram" => Some(MemCell::Rram),
+        Value::Str(s) if s == "sram" => Some(MemCell::Sram),
+        _ => None,
+    }
+}
+
+fn read_out(v: &Value) -> Option<ReadOut> {
+    match v {
+        Value::Str(s) if s == "sequential" => Some(ReadOut::Sequential),
+        Value::Str(s) if s == "parallel" => Some(ReadOut::Parallel),
+        _ => None,
+    }
+}
+
+fn buffer_type(v: &Value) -> Option<BufferType> {
+    match v {
+        Value::Str(s) if s == "sram" => Some(BufferType::Sram),
+        Value::Str(s) if s == "registerfile" => Some(BufferType::RegisterFile),
+        _ => None,
+    }
+}
+
+fn noc_topology(v: &Value) -> Option<NocTopology> {
+    match v {
+        Value::Str(s) if s == "mesh" => Some(NocTopology::Mesh),
+        Value::Str(s) if s == "tree" => Some(NocTopology::Tree),
+        Value::Str(s) if s == "htree" => Some(NocTopology::HTree),
+        _ => None,
+    }
+}
+
+fn chip_mode(v: &Value) -> Option<ChipMode> {
+    match v {
+        Value::Str(s) if s == "monolithic" => Some(ChipMode::Monolithic),
+        Value::Str(s) if s == "chiplet" => Some(ChipMode::Chiplet),
+        _ => None,
+    }
+}
+
+fn structure(v: &Value) -> Option<ChipletStructure> {
+    match v {
+        Value::Str(s) if s == "homogeneous" => Some(ChipletStructure::Homogeneous),
+        Value::Str(s) if s == "custom" => Some(ChipletStructure::Custom),
+        _ => None,
+    }
+}
+
+fn dram_kind(v: &Value) -> Option<DramKind> {
+    match v {
+        Value::Str(s) if s == "ddr3" => Some(DramKind::Ddr3),
+        Value::Str(s) if s == "ddr4" => Some(DramKind::Ddr4),
+        _ => None,
+    }
+}
+
+fn string(v: &Value) -> Option<String> {
+    match v {
+        Value::Str(s) => Some(s.clone()),
+        _ => None,
+    }
+}
+
+fn u8v(v: &Value) -> Option<u8> {
+    v.as_usize().and_then(|u| u8::try_from(u).ok())
+}
+
+fn u32v(v: &Value) -> Option<u32> {
+    v.as_usize().and_then(|u| u32::try_from(u).ok())
+}
+
+/// Apply flattened pairs on top of a default config.
+pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
+    let mut m = parse_flat(text)?;
+
+    take!(m, "dnn.model", cfg.dnn.model, string);
+    take!(m, "dnn.dataset", cfg.dnn.dataset, string);
+    take!(m, "dnn.weight_precision", cfg.dnn.weight_precision, u8v);
+    take!(
+        m,
+        "dnn.activation_precision",
+        cfg.dnn.activation_precision,
+        u8v
+    );
+    take!(m, "dnn.batch", cfg.dnn.batch, Value::as_usize);
+    if let Some(v) = m.remove("dnn.sparsity") {
+        match v {
+            Value::Array(a) => cfg.dnn.sparsity = Some(a),
+            _ => return Err("dnn.sparsity must be an array".into()),
+        }
+    }
+
+    take!(m, "device.tech_node_nm", cfg.device.tech_node_nm, u32v);
+    take!(m, "device.cell", cfg.device.cell, mem_cell);
+    take!(m, "device.bits_per_cell", cfg.device.bits_per_cell, u8v);
+    take!(m, "device.r_on", cfg.device.r_on, Value::as_f64);
+    take!(m, "device.r_off_ratio", cfg.device.r_off_ratio, Value::as_f64);
+    take!(m, "device.v_read", cfg.device.v_read, Value::as_f64);
+
+    take!(m, "chiplet.xbar_rows", cfg.chiplet.xbar_rows, Value::as_usize);
+    take!(m, "chiplet.xbar_cols", cfg.chiplet.xbar_cols, Value::as_usize);
+    take!(
+        m,
+        "chiplet.tiles_per_chiplet",
+        cfg.chiplet.tiles_per_chiplet,
+        Value::as_usize
+    );
+    take!(
+        m,
+        "chiplet.xbars_per_tile",
+        cfg.chiplet.xbars_per_tile,
+        Value::as_usize
+    );
+    take!(m, "chiplet.buffer_type", cfg.chiplet.buffer_type, buffer_type);
+    take!(m, "chiplet.adc_bits", cfg.chiplet.adc_bits, u8v);
+    take!(
+        m,
+        "chiplet.cols_per_adc",
+        cfg.chiplet.cols_per_adc,
+        Value::as_usize
+    );
+    take!(m, "chiplet.read_out", cfg.chiplet.read_out, read_out);
+    take!(m, "chiplet.noc_topology", cfg.chiplet.noc_topology, noc_topology);
+    take!(m, "chiplet.noc_width", cfg.chiplet.noc_width, Value::as_usize);
+    take!(
+        m,
+        "chiplet.noc_buffer_depth",
+        cfg.chiplet.noc_buffer_depth,
+        Value::as_usize
+    );
+    take!(
+        m,
+        "chiplet.frequency_mhz",
+        cfg.chiplet.frequency_mhz,
+        Value::as_f64
+    );
+
+    take!(m, "system.chip_mode", cfg.system.chip_mode, chip_mode);
+    take!(m, "system.structure", cfg.system.structure, structure);
+    if let Some(v) = m.remove("system.total_chiplets") {
+        cfg.system.total_chiplets =
+            Some(v.as_usize().ok_or("bad value for system.total_chiplets")?);
+    }
+    take!(
+        m,
+        "system.accumulator_size",
+        cfg.system.accumulator_size,
+        Value::as_usize
+    );
+    take!(
+        m,
+        "system.global_buffer_kb",
+        cfg.system.global_buffer_kb,
+        Value::as_usize
+    );
+
+    take!(
+        m,
+        "system.nop.frequency_mhz",
+        cfg.system.nop.frequency_mhz,
+        Value::as_f64
+    );
+    take!(m, "system.nop.ebit_pj", cfg.system.nop.ebit_pj, Value::as_f64);
+    take!(
+        m,
+        "system.nop.gbps_per_lane",
+        cfg.system.nop.gbps_per_lane,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "system.nop.channel_width",
+        cfg.system.nop.channel_width,
+        Value::as_usize
+    );
+    take!(
+        m,
+        "system.nop.txrx_area_um2",
+        cfg.system.nop.txrx_area_um2,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "system.nop.clocking_area_um2",
+        cfg.system.nop.clocking_area_um2,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "system.nop.lanes_per_clock",
+        cfg.system.nop.lanes_per_clock,
+        Value::as_usize
+    );
+    take!(
+        m,
+        "system.nop.wire_length_mm",
+        cfg.system.nop.wire_length_mm,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "system.nop.wire_pitch_um",
+        cfg.system.nop.wire_pitch_um,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "system.nop.wire_r_ohm_per_mm",
+        cfg.system.nop.wire_r_ohm_per_mm,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "system.nop.wire_c_ff_per_mm",
+        cfg.system.nop.wire_c_ff_per_mm,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "system.nop.router_ports",
+        cfg.system.nop.router_ports,
+        Value::as_usize
+    );
+
+    take!(m, "dram.kind", cfg.dram.kind, dram_kind);
+    take!(m, "dram.bus_bits", cfg.dram.bus_bits, Value::as_usize);
+    take!(
+        m,
+        "dram.subset_fraction",
+        cfg.dram.subset_fraction,
+        Value::as_f64
+    );
+
+    if let Some(k) = m.keys().next() {
+        return Err(format!("unknown config key '{k}'"));
+    }
+    Ok(cfg)
+}
+
+fn fmt_enum(cfg: &SiamConfig) -> [String; 7] {
+    [
+        match cfg.device.cell {
+            MemCell::Rram => "rram",
+            MemCell::Sram => "sram",
+        }
+        .into(),
+        match cfg.chiplet.buffer_type {
+            BufferType::Sram => "sram",
+            BufferType::RegisterFile => "registerfile",
+        }
+        .into(),
+        match cfg.chiplet.read_out {
+            ReadOut::Sequential => "sequential",
+            ReadOut::Parallel => "parallel",
+        }
+        .into(),
+        match cfg.chiplet.noc_topology {
+            NocTopology::Mesh => "mesh",
+            NocTopology::Tree => "tree",
+            NocTopology::HTree => "htree",
+        }
+        .into(),
+        match cfg.system.chip_mode {
+            ChipMode::Monolithic => "monolithic",
+            ChipMode::Chiplet => "chiplet",
+        }
+        .into(),
+        match cfg.system.structure {
+            ChipletStructure::Homogeneous => "homogeneous",
+            ChipletStructure::Custom => "custom",
+        }
+        .into(),
+        match cfg.dram.kind {
+            DramKind::Ddr3 => "ddr3",
+            DramKind::Ddr4 => "ddr4",
+        }
+        .into(),
+    ]
+}
+
+/// Serialize a config back to the TOML subset.
+pub fn write(cfg: &SiamConfig) -> String {
+    let [cell, buf, ro, noc, mode, structure, dram] = fmt_enum(cfg);
+    let mut s = String::new();
+    use std::fmt::Write;
+    writeln!(s, "[dnn]").unwrap();
+    writeln!(s, "model = \"{}\"", cfg.dnn.model).unwrap();
+    writeln!(s, "dataset = \"{}\"", cfg.dnn.dataset).unwrap();
+    writeln!(s, "weight_precision = {}", cfg.dnn.weight_precision).unwrap();
+    writeln!(s, "activation_precision = {}", cfg.dnn.activation_precision).unwrap();
+    writeln!(s, "batch = {}", cfg.dnn.batch).unwrap();
+    if let Some(sp) = &cfg.dnn.sparsity {
+        let parts: Vec<String> = sp.iter().map(|v| format!("{v}")).collect();
+        writeln!(s, "sparsity = [{}]", parts.join(", ")).unwrap();
+    }
+    writeln!(s, "\n[device]").unwrap();
+    writeln!(s, "tech_node_nm = {}", cfg.device.tech_node_nm).unwrap();
+    writeln!(s, "cell = \"{cell}\"").unwrap();
+    writeln!(s, "bits_per_cell = {}", cfg.device.bits_per_cell).unwrap();
+    writeln!(s, "r_on = {}", cfg.device.r_on).unwrap();
+    writeln!(s, "r_off_ratio = {}", cfg.device.r_off_ratio).unwrap();
+    writeln!(s, "v_read = {}", cfg.device.v_read).unwrap();
+    writeln!(s, "\n[chiplet]").unwrap();
+    writeln!(s, "xbar_rows = {}", cfg.chiplet.xbar_rows).unwrap();
+    writeln!(s, "xbar_cols = {}", cfg.chiplet.xbar_cols).unwrap();
+    writeln!(s, "tiles_per_chiplet = {}", cfg.chiplet.tiles_per_chiplet).unwrap();
+    writeln!(s, "xbars_per_tile = {}", cfg.chiplet.xbars_per_tile).unwrap();
+    writeln!(s, "buffer_type = \"{buf}\"").unwrap();
+    writeln!(s, "adc_bits = {}", cfg.chiplet.adc_bits).unwrap();
+    writeln!(s, "cols_per_adc = {}", cfg.chiplet.cols_per_adc).unwrap();
+    writeln!(s, "read_out = \"{ro}\"").unwrap();
+    writeln!(s, "noc_topology = \"{noc}\"").unwrap();
+    writeln!(s, "noc_width = {}", cfg.chiplet.noc_width).unwrap();
+    writeln!(s, "noc_buffer_depth = {}", cfg.chiplet.noc_buffer_depth).unwrap();
+    writeln!(s, "frequency_mhz = {}", cfg.chiplet.frequency_mhz).unwrap();
+    writeln!(s, "\n[system]").unwrap();
+    writeln!(s, "chip_mode = \"{mode}\"").unwrap();
+    writeln!(s, "structure = \"{structure}\"").unwrap();
+    if let Some(c) = cfg.system.total_chiplets {
+        writeln!(s, "total_chiplets = {c}").unwrap();
+    }
+    writeln!(s, "accumulator_size = {}", cfg.system.accumulator_size).unwrap();
+    writeln!(s, "global_buffer_kb = {}", cfg.system.global_buffer_kb).unwrap();
+    writeln!(s, "\n[system.nop]").unwrap();
+    writeln!(s, "frequency_mhz = {}", cfg.system.nop.frequency_mhz).unwrap();
+    writeln!(s, "ebit_pj = {}", cfg.system.nop.ebit_pj).unwrap();
+    writeln!(s, "gbps_per_lane = {}", cfg.system.nop.gbps_per_lane).unwrap();
+    writeln!(s, "channel_width = {}", cfg.system.nop.channel_width).unwrap();
+    writeln!(s, "txrx_area_um2 = {}", cfg.system.nop.txrx_area_um2).unwrap();
+    writeln!(s, "clocking_area_um2 = {}", cfg.system.nop.clocking_area_um2).unwrap();
+    writeln!(s, "lanes_per_clock = {}", cfg.system.nop.lanes_per_clock).unwrap();
+    writeln!(s, "wire_length_mm = {}", cfg.system.nop.wire_length_mm).unwrap();
+    writeln!(s, "wire_pitch_um = {}", cfg.system.nop.wire_pitch_um).unwrap();
+    writeln!(s, "wire_r_ohm_per_mm = {}", cfg.system.nop.wire_r_ohm_per_mm).unwrap();
+    writeln!(s, "wire_c_ff_per_mm = {}", cfg.system.nop.wire_c_ff_per_mm).unwrap();
+    writeln!(s, "router_ports = {}", cfg.system.nop.router_ports).unwrap();
+    writeln!(s, "\n[dram]").unwrap();
+    writeln!(s, "kind = \"{dram}\"").unwrap();
+    writeln!(s, "bus_bits = {}", cfg.dram.bus_bits).unwrap();
+    writeln!(s, "subset_fraction = {}", cfg.dram.subset_fraction).unwrap();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let m = parse_flat(
+            "# comment\n[dnn]\nmodel = \"vgg16\"\nbatch = 4\n[system.nop]\nebit_pj = 0.54\n",
+        )
+        .unwrap();
+        assert_eq!(m["dnn.model"], Value::Str("vgg16".into()));
+        assert_eq!(m["dnn.batch"], Value::Int(4));
+        assert_eq!(m["system.nop.ebit_pj"], Value::Float(0.54));
+    }
+
+    #[test]
+    fn arrays_parse() {
+        let m = parse_flat("[dnn]\nsparsity = [0.1, 0.2, 0.3]\n").unwrap();
+        assert_eq!(m["dnn.sparsity"], Value::Array(vec![0.1, 0.2, 0.3]));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let cfg = SiamConfig::default();
+        let err = apply(cfg, "[dnn]\nmodle = \"oops\"\n").unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn bad_line_reports_number() {
+        let err = parse_flat("[dnn]\nmodel \"x\"\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn apply_overrides_defaults() {
+        let cfg = apply(
+            SiamConfig::default(),
+            "[chiplet]\ntiles_per_chiplet = 36\n[system]\nstructure = \"homogeneous\"\ntotal_chiplets = 64\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.chiplet.tiles_per_chiplet, 36);
+        assert_eq!(cfg.system.structure, ChipletStructure::Homogeneous);
+        assert_eq!(cfg.system.total_chiplets, Some(64));
+    }
+}

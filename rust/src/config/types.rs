@@ -1,0 +1,277 @@
+//! Configuration data types — one struct per block of Table 2.
+
+
+/// Memory cell technology of the IMC crossbar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemCell {
+    Rram,
+    Sram,
+}
+
+/// Crossbar read-out: one row at a time (sequential) or all rows in
+/// parallel with analog summation on the bitline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadOut {
+    Sequential,
+    Parallel,
+}
+
+/// On-chip buffer implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferType {
+    Sram,
+    RegisterFile,
+}
+
+/// Intra-chiplet interconnect topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NocTopology {
+    Mesh,
+    Tree,
+    HTree,
+}
+
+/// Whole-system integration style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipMode {
+    Monolithic,
+    Chiplet,
+}
+
+/// Chiplet allocation policy (Section 4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipletStructure {
+    /// Fixed, user-supplied chiplet count; error if the DNN does not fit.
+    Homogeneous,
+    /// Exactly as many chiplets as the DNN needs.
+    Custom,
+}
+
+/// DRAM standard for the external-memory chiplet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DramKind {
+    Ddr3,
+    Ddr4,
+}
+
+/// DNN algorithm block of Table 2.
+#[derive(Debug, Clone)]
+pub struct DnnConfig {
+    /// Model-zoo name: lenet5, resnet20/56/110, resnet50, vgg16, vgg19,
+    /// densenet110, drivenet, nin.
+    pub model: String,
+    /// cifar10 | cifar100 | imagenet (sets input resolution / classes).
+    pub dataset: String,
+    /// Weight precision N_bits (Eq. 1).
+    pub weight_precision: u8,
+    /// Activation precision (bit-serial input cycles).
+    pub activation_precision: u8,
+    /// Optional layer-wise weight sparsity in [0,1); scales mapped cells.
+    pub sparsity: Option<Vec<f64>>,
+    /// Inference batch size (the paper evaluates batch 1).
+    pub batch: usize,
+}
+
+impl Default for DnnConfig {
+    fn default() -> Self {
+        DnnConfig {
+            model: "resnet110".into(),
+            dataset: "cifar10".into(),
+            weight_precision: 8,
+            activation_precision: 8,
+            sparsity: None,
+            batch: 1,
+        }
+    }
+}
+
+/// Device & technology block of Table 2.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub tech_node_nm: u32,
+    pub cell: MemCell,
+    /// Levels per RRAM cell as bits (1 => binary cell).
+    pub bits_per_cell: u8,
+    /// RRAM on-resistance, ohms.
+    pub r_on: f64,
+    /// Off/on resistance ratio (paper: 100).
+    pub r_off_ratio: f64,
+    /// Read voltage, volts.
+    pub v_read: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            tech_node_nm: 32,
+            cell: MemCell::Rram,
+            bits_per_cell: 1,
+            r_on: 1.0e5,
+            r_off_ratio: 100.0,
+            v_read: 0.15,
+        }
+    }
+}
+
+/// Intra-chiplet architecture block of Table 2.
+#[derive(Debug, Clone)]
+pub struct ChipletConfig {
+    /// IMC crossbar rows (PE_x in Eq. 1).
+    pub xbar_rows: usize,
+    /// IMC crossbar columns (PE_y in Eq. 1).
+    pub xbar_cols: usize,
+    /// IMC tiles per chiplet ("Chiplet Size" input).
+    pub tiles_per_chiplet: usize,
+    /// Crossbar arrays per tile (paper: 16).
+    pub xbars_per_tile: usize,
+    pub buffer_type: BufferType,
+    /// Flash-ADC resolution, bits.
+    pub adc_bits: u8,
+    /// Columns sharing one ADC via the column mux (paper: 8).
+    pub cols_per_adc: usize,
+    pub read_out: ReadOut,
+    pub noc_topology: NocTopology,
+    /// NoC channel (flit) width, bits.
+    pub noc_width: usize,
+    /// NoC router input-buffer depth in flits.
+    pub noc_buffer_depth: usize,
+    /// Chiplet logic & NoC clock, MHz.
+    pub frequency_mhz: f64,
+}
+
+impl Default for ChipletConfig {
+    fn default() -> Self {
+        ChipletConfig {
+            xbar_rows: 128,
+            xbar_cols: 128,
+            tiles_per_chiplet: 16,
+            xbars_per_tile: 16,
+            buffer_type: BufferType::Sram,
+            adc_bits: 4,
+            cols_per_adc: 8,
+            read_out: ReadOut::Parallel,
+            noc_topology: NocTopology::Mesh,
+            noc_width: 32,
+            noc_buffer_depth: 4,
+            frequency_mhz: 1000.0,
+        }
+    }
+}
+
+/// Network-on-package parameters (Section 4.4, defaults from [30] —
+/// Poulton et al. ground-referenced signaling).
+#[derive(Debug, Clone)]
+pub struct NopConfig {
+    /// NoP packet/router clock, MHz (paper: 250 MHz bandwidth).
+    pub frequency_mhz: f64,
+    /// Serial lane rate, Gb/s (GRS lanes are multi-Gb/s serial links —
+    /// Poulton et al. run 20 Gb/s; the conservative default of 1 matches the paper's 250 MHz x 32-lane NoP budget with 4:1 serialization).
+    pub gbps_per_lane: f64,
+    /// Energy per bit of the TX/RX pair, pJ/bit (paper: 0.54).
+    pub ebit_pj: f64,
+    /// Parallel TX/RX lanes per link ("NoP channel width", paper: 32).
+    pub channel_width: usize,
+    /// TX+RX macro area per channel, µm² (paper: 5304).
+    pub txrx_area_um2: f64,
+    /// Clocking circuit (LC-PLL) area, µm² (paper: 10609).
+    pub clocking_area_um2: f64,
+    /// Data lanes sharing one clocking lane (SIMBA: 4).
+    pub lanes_per_clock: usize,
+    /// Interposer wire length between adjacent chiplets, mm.
+    pub wire_length_mm: f64,
+    /// NoP wire pitch, µm (shielded GRS wiring; ~56× on-chip pitch).
+    pub wire_pitch_um: f64,
+    /// Wire resistance per mm, ohm (PTM interposer global wire).
+    pub wire_r_ohm_per_mm: f64,
+    /// Wire capacitance per mm, fF (PTM interposer global wire).
+    pub wire_c_ff_per_mm: f64,
+    /// NoP router ports (paper default: 5).
+    pub router_ports: usize,
+}
+
+impl NopConfig {
+    /// Bits moved per NoP packet-clock cycle over one link:
+    /// lanes × (lane rate / packet clock).
+    pub fn bits_per_cycle(&self) -> u64 {
+        let per_lane = (self.gbps_per_lane * 1000.0 / self.frequency_mhz).max(1.0);
+        (self.channel_width as f64 * per_lane).round() as u64
+    }
+}
+
+impl Default for NopConfig {
+    fn default() -> Self {
+        NopConfig {
+            frequency_mhz: 250.0,
+            gbps_per_lane: 1.0,
+            ebit_pj: 0.54,
+            channel_width: 32,
+            txrx_area_um2: 5304.0,
+            clocking_area_um2: 10609.0,
+            lanes_per_clock: 4,
+            wire_length_mm: 2.5,
+            wire_pitch_um: 5.6, // 56× the 0.1 µm on-chip intermediate pitch
+            wire_r_ohm_per_mm: 25.0,
+            wire_c_ff_per_mm: 200.0,
+            router_ports: 5,
+        }
+    }
+}
+
+/// DRAM engine parameters (Section 4.5).
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    pub kind: DramKind,
+    /// Data-bus width, bits (x64 DIMM).
+    pub bus_bits: usize,
+    /// Instruction-subset fraction used by the fast estimator (Fig. 7a):
+    /// 1.0 = simulate everything, 0.5 = simulate half and extrapolate.
+    pub subset_fraction: f64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        DramConfig {
+            kind: DramKind::Ddr4,
+            bus_bits: 64,
+            subset_fraction: 0.5,
+        }
+    }
+}
+
+/// Inter-chiplet architecture block of Table 2.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub chip_mode: ChipMode,
+    pub structure: ChipletStructure,
+    /// Homogeneous mode: fixed chiplet count (must be a perfect square for
+    /// the mesh placement). Ignored by custom mode.
+    pub total_chiplets: Option<usize>,
+    /// Global accumulator width, elements accumulated per cycle.
+    pub accumulator_size: usize,
+    /// Global buffer capacity, kB.
+    pub global_buffer_kb: usize,
+    pub nop: NopConfig,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            chip_mode: ChipMode::Chiplet,
+            structure: ChipletStructure::Custom,
+            total_chiplets: None,
+            accumulator_size: 64,
+            global_buffer_kb: 256,
+            nop: NopConfig::default(),
+        }
+    }
+}
+
+/// Complete SIAM configuration (all Table-2 blocks).
+#[derive(Debug, Clone, Default)]
+pub struct SiamConfig {
+    pub dnn: DnnConfig,
+    pub device: DeviceConfig,
+    pub chiplet: ChipletConfig,
+    pub system: SystemConfig,
+    pub dram: DramConfig,
+}

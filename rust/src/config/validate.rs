@@ -1,0 +1,183 @@
+//! Configuration validation: reject physically meaningless inputs early,
+//! with actionable messages (the paper's engine "throws an error and
+//! requests an increase in chiplets" — we extend that spirit to every
+//! input).
+
+use super::types::*;
+
+/// Error raised when a [`SiamConfig`] is inconsistent or out of the
+/// modeled range.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValidationError(pub String);
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid SIAM config: {}", self.0)
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+impl SiamConfig {
+    pub fn validate(&self) -> Result<(), ValidationError> {
+        let err = |msg: String| Err(ValidationError(msg));
+
+        if self.chiplet.xbar_rows == 0 || self.chiplet.xbar_cols == 0 {
+            return err("crossbar dimensions must be non-zero".into());
+        }
+        if !self.chiplet.xbar_rows.is_power_of_two() || !self.chiplet.xbar_cols.is_power_of_two() {
+            return err(format!(
+                "crossbar dims must be powers of two, got {}x{}",
+                self.chiplet.xbar_rows, self.chiplet.xbar_cols
+            ));
+        }
+        if self.chiplet.tiles_per_chiplet == 0 || self.chiplet.xbars_per_tile == 0 {
+            return err("chiplet must contain at least one tile and one crossbar".into());
+        }
+        if self.chiplet.adc_bits == 0 || self.chiplet.adc_bits > 12 {
+            return err(format!(
+                "ADC resolution {} out of supported range 1..=12",
+                self.chiplet.adc_bits
+            ));
+        }
+        if self.chiplet.cols_per_adc == 0 || self.chiplet.xbar_cols % self.chiplet.cols_per_adc != 0
+        {
+            return err(format!(
+                "cols_per_adc {} must divide crossbar columns {}",
+                self.chiplet.cols_per_adc, self.chiplet.xbar_cols
+            ));
+        }
+        if self.chiplet.frequency_mhz <= 0.0 {
+            return err("chiplet frequency must be positive".into());
+        }
+        if self.chiplet.noc_width == 0 {
+            return err("NoC width must be non-zero".into());
+        }
+        if self.chiplet.noc_buffer_depth == 0 {
+            return err("NoC buffer depth must be non-zero".into());
+        }
+        if self.dnn.weight_precision == 0 || self.dnn.weight_precision > 32 {
+            return err(format!(
+                "weight precision {} out of range 1..=32",
+                self.dnn.weight_precision
+            ));
+        }
+        if self.dnn.activation_precision == 0 || self.dnn.activation_precision > 32 {
+            return err(format!(
+                "activation precision {} out of range 1..=32",
+                self.dnn.activation_precision
+            ));
+        }
+        if self.dnn.batch == 0 {
+            return err("batch must be >= 1".into());
+        }
+        if let Some(sp) = &self.dnn.sparsity {
+            if sp.iter().any(|&s| !(0.0..1.0).contains(&s)) {
+                return err("sparsity values must lie in [0, 1)".into());
+            }
+        }
+        if self.device.bits_per_cell == 0 || self.device.bits_per_cell > 4 {
+            return err(format!(
+                "bits per cell {} out of supported range 1..=4",
+                self.device.bits_per_cell
+            ));
+        }
+        if self.device.tech_node_nm < 7 || self.device.tech_node_nm > 130 {
+            return err(format!(
+                "tech node {} nm outside modeled range 7..=130",
+                self.device.tech_node_nm
+            ));
+        }
+        if self.device.r_on <= 0.0 || self.device.r_off_ratio <= 1.0 {
+            return err("RRAM resistances must satisfy r_on > 0, r_off/r_on > 1".into());
+        }
+        if self.system.structure == ChipletStructure::Homogeneous
+            && self.system.total_chiplets.is_none()
+        {
+            return err("homogeneous structure requires total_chiplets".into());
+        }
+        if let Some(c) = self.system.total_chiplets {
+            if c == 0 {
+                return err("total_chiplets must be >= 1".into());
+            }
+        }
+        if self.system.accumulator_size == 0 {
+            return err("accumulator size must be >= 1".into());
+        }
+        if self.system.nop.frequency_mhz <= 0.0 || self.system.nop.channel_width == 0 {
+            return err("NoP frequency and channel width must be positive".into());
+        }
+        if self.system.nop.ebit_pj <= 0.0 {
+            return err("NoP energy-per-bit must be positive".into());
+        }
+        if self.system.nop.gbps_per_lane <= 0.0 {
+            return err("NoP lane rate must be positive".into());
+        }
+        if self.system.nop.lanes_per_clock == 0 || self.system.nop.router_ports < 2 {
+            return err("NoP lanes_per_clock >= 1 and router_ports >= 2 required".into());
+        }
+        if !(0.0 < self.dram.subset_fraction && self.dram.subset_fraction <= 1.0) {
+            return err(format!(
+                "DRAM subset fraction {} must be in (0, 1]",
+                self.dram.subset_fraction
+            ));
+        }
+        if self.dram.bus_bits == 0 || self.dram.bus_bits % 8 != 0 {
+            return err("DRAM bus width must be a positive multiple of 8".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(SiamConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn homogeneous_requires_count() {
+        let mut cfg = SiamConfig::default();
+        cfg.system.structure = ChipletStructure::Homogeneous;
+        cfg.system.total_chiplets = None;
+        assert!(cfg.validate().is_err());
+        cfg.system.total_chiplets = Some(36);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn mux_must_divide_columns() {
+        let mut cfg = SiamConfig::default();
+        cfg.chiplet.cols_per_adc = 7;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn sparsity_range_checked() {
+        let mut cfg = SiamConfig::default();
+        cfg.dnn.sparsity = Some(vec![0.5, 1.5]);
+        assert!(cfg.validate().is_err());
+        cfg.dnn.sparsity = Some(vec![0.0, 0.9]);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn subset_fraction_bounds() {
+        let mut cfg = SiamConfig::default();
+        cfg.dram.subset_fraction = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.dram.subset_fraction = 1.0;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn error_message_is_actionable() {
+        let mut cfg = SiamConfig::default();
+        cfg.chiplet.adc_bits = 0;
+        let e = cfg.validate().unwrap_err();
+        assert!(e.to_string().contains("ADC"));
+    }
+}

@@ -1,0 +1,93 @@
+//! Design-space exploration driver: sweep tiles/chiplet × chiplet count
+//! (the paper's Figs. 9, 11, 12, 14 axes) and rank by a figure of merit.
+
+use super::{simulate, SimReport};
+use crate::config::{ChipletStructure, SiamConfig};
+use anyhow::Result;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub tiles_per_chiplet: usize,
+    /// None = custom structure (exactly-fitting chiplet count).
+    pub total_chiplets: Option<usize>,
+    pub report: SimReport,
+}
+
+impl SweepPoint {
+    pub fn edap(&self) -> f64 {
+        self.report.total.edap()
+    }
+}
+
+/// Sweep the chiplet design space. Points that do not fit (homogeneous
+/// overflow) are skipped, mirroring Algorithm 1's error path.
+pub fn sweep(
+    base: &SiamConfig,
+    tiles_options: &[usize],
+    chiplet_counts: &[Option<usize>],
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for &tiles in tiles_options {
+        for &count in chiplet_counts {
+            let cfg = match count {
+                Some(c) => base.clone().with_tiles_per_chiplet(tiles).with_total_chiplets(c),
+                None => base
+                    .clone()
+                    .with_tiles_per_chiplet(tiles)
+                    .with_chiplet_structure(ChipletStructure::Custom),
+            };
+            match simulate(&cfg) {
+                Ok(report) => out.push(SweepPoint {
+                    tiles_per_chiplet: tiles,
+                    total_chiplets: count,
+                    report,
+                }),
+                // homogeneous architecture too small: skip the point
+                // (Algorithm 1's error path)
+                Err(e)
+                    if e
+                        .downcast_ref::<crate::mapping::MappingError>()
+                        .is_some_and(|m| {
+                            matches!(m, crate::mapping::MappingError::ExceedsChiplets { .. })
+                        }) =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The EDAP-optimal point of a sweep.
+pub fn best_by_edap(points: &[SweepPoint]) -> Option<&SweepPoint> {
+    points
+        .iter()
+        .min_by(|a, b| a.edap().partial_cmp(&b.edap()).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_skips_too_small_architectures() {
+        let base = SiamConfig::paper_default(); // resnet110
+        let pts = sweep(&base, &[16], &[Some(1), None]).unwrap();
+        // 1 homogeneous chiplet cannot fit ResNet-110 => skipped;
+        // the custom point always exists.
+        assert_eq!(pts.len(), 1);
+        assert!(pts[0].total_chiplets.is_none());
+    }
+
+    #[test]
+    fn best_point_exists() {
+        let base = SiamConfig::paper_default();
+        let pts = sweep(&base, &[9, 16], &[None]).unwrap();
+        assert_eq!(pts.len(), 2);
+        let best = best_by_edap(&pts).unwrap();
+        assert!(best.edap() <= pts[0].edap());
+    }
+}

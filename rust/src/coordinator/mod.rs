@@ -1,0 +1,129 @@
+//! The coordinator: SIAM's top-level wrapper, in Rust. Runs the
+//! partition & mapping engine, then the circuit, NoC, NoP and DRAM
+//! engines concurrently (the paper: "all engines except the partition
+//! and mapping engine work simultaneously"), and aggregates everything
+//! into a [`SimReport`].
+
+pub mod dse;
+pub mod report;
+pub mod sensitivity;
+
+pub use dse::{sweep, SweepPoint};
+pub use report::SimReport;
+pub use sensitivity::{layer_cycles_vs_nop_speedup, layer_latency_vs_chiplets, LayerPoint};
+
+use crate::circuit::CircuitEstimator;
+use crate::config::SiamConfig;
+use crate::dnn::build_model;
+use crate::mapping::{build_traffic, map_dnn, Placement};
+use anyhow::{Context, Result};
+
+/// Run the full SIAM pipeline for one configuration.
+pub fn simulate(cfg: &SiamConfig) -> Result<SimReport> {
+    let t0 = std::time::Instant::now();
+    cfg.validate()?;
+    let dnn = build_model(&cfg.dnn.model, &cfg.dnn.dataset)?;
+
+    // ---- Engine 1 (sequential by necessity): partition & mapping
+    let map = map_dnn(&dnn, cfg).context("partition & mapping")?;
+    let placement = Placement::new(map.num_chiplets);
+    let traffic = build_traffic(&dnn, &map, &placement, cfg);
+
+    // ---- Engines 2-4 run concurrently on the mapping outputs
+    let stats = dnn.stats();
+    let (circuit, noc, nop, dram) = std::thread::scope(|s| {
+        let circuit = s.spawn(|| CircuitEstimator::new(cfg).estimate(&dnn, &map, &traffic));
+        let noc = s.spawn(|| crate::noc::evaluate(cfg, &traffic, map.num_chiplets));
+        let nop = s.spawn(|| crate::nop::evaluate(cfg, &traffic, &placement));
+        let dram = s.spawn(|| crate::dram::estimate(&stats, cfg));
+        (
+            circuit.join().expect("circuit engine"),
+            noc.join().expect("noc engine"),
+            nop.join().expect("nop engine"),
+            dram.join().expect("dram engine"),
+        )
+    });
+
+    Ok(SimReport::assemble(
+        cfg,
+        &dnn,
+        &map,
+        &traffic,
+        circuit,
+        noc,
+        nop,
+        dram,
+        t0.elapsed().as_secs_f64(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipMode, ChipletStructure};
+
+    #[test]
+    fn paper_default_simulates() {
+        let rep = simulate(&SiamConfig::paper_default()).unwrap();
+        assert_eq!(rep.model, "resnet110");
+        assert!(rep.num_chiplets > 0);
+        assert!(rep.total.energy_pj > 0.0);
+        assert!(rep.total.latency_ns > 0.0);
+        assert!(rep.total.area_um2 > 0.0);
+        assert!(rep.wall_seconds < 120.0);
+    }
+
+    #[test]
+    fn custom_beats_homogeneous_edap() {
+        // Fig. 12a: custom architecture outperforms homogeneous (fewer
+        // chiplets => smaller NoP => lower EDAP).
+        let custom = simulate(
+            &SiamConfig::paper_default().with_chiplet_structure(ChipletStructure::Custom),
+        )
+        .unwrap();
+        let homog = simulate(&SiamConfig::paper_default().with_total_chiplets(64)).unwrap();
+        assert!(
+            custom.total.edap() < homog.total.edap(),
+            "custom {} vs homogeneous {}",
+            custom.total.edap(),
+            homog.total.edap()
+        );
+    }
+
+    #[test]
+    fn monolithic_has_zero_nop() {
+        let rep =
+            simulate(&SiamConfig::paper_default().with_chip_mode(ChipMode::Monolithic)).unwrap();
+        assert_eq!(rep.nop.energy_pj, 0.0);
+        assert_eq!(rep.num_chiplets, 1);
+    }
+
+    #[test]
+    fn report_json_and_summary_render() {
+        let rep = simulate(&SiamConfig::paper_default()).unwrap();
+        let s = rep.summary();
+        assert!(s.contains("resnet110"));
+        assert!(s.contains("EDAP"));
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("\"model\""));
+        crate::util::json::parse(&j).expect("report JSON parses");
+    }
+
+    #[test]
+    fn imc_dominates_energy_nop_dominates_area() {
+        // Fig. 10 shape: energy mostly IMC circuit; area mostly NoP.
+        let rep = simulate(&SiamConfig::paper_default()).unwrap();
+        assert!(
+            rep.circuit.energy_pj > rep.noc.energy_pj,
+            "IMC energy {} vs NoC {}",
+            rep.circuit.energy_pj,
+            rep.noc.energy_pj
+        );
+        assert!(
+            rep.nop.area_um2 > rep.noc.area_um2,
+            "NoP area {} vs NoC {}",
+            rep.nop.area_um2,
+            rep.noc.area_um2
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! Simulation report: the hardware performance metrics SIAM emits
+//! (area, energy, latency, energy-efficiency, power, leakage, IMC
+//! utilization) plus per-engine breakdowns, with text and JSON renderers.
+
+use crate::circuit::CircuitReport;
+use crate::config::SiamConfig;
+use crate::dnn::Dnn;
+use crate::dram::DramReport;
+use crate::mapping::{MappingResult, Traffic};
+use crate::metrics::{Breakdown, Metrics};
+use crate::noc::NocReport;
+use crate::nop::NopReport;
+use crate::util::json::Json;
+use crate::util::table::eng;
+
+/// Complete output of one SIAM run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub model: String,
+    pub dataset: String,
+    pub params: usize,
+    pub macs: usize,
+    pub num_chiplets: usize,
+    pub num_chiplets_required: usize,
+    pub total_tiles: usize,
+    pub xbar_utilization: f64,
+    pub cell_utilization: f64,
+    pub inter_chiplet_bits: f64,
+    pub intra_chiplet_bits: f64,
+    pub accumulator_adds: u64,
+    /// IMC circuit metrics (compute + global acc/buffer).
+    pub circuit: Metrics,
+    /// Intra-chiplet interconnect.
+    pub noc: Metrics,
+    /// Inter-chiplet interconnect.
+    pub nop: Metrics,
+    /// Off-chip weight load (reported separately; excluded from the
+    /// inference totals per Section 6.1).
+    pub dram: DramReport,
+    /// Inference totals (circuit + NoC + NoP; leakage energy folded in).
+    pub total: Metrics,
+    pub noc_cycles: u64,
+    pub nop_cycles: u64,
+    /// Yielded silicon (chiplet dies incl. NoP drivers/routers), mm² —
+    /// excludes the passive interposer wiring; drives the cost model.
+    pub silicon_area_mm2: f64,
+    pub wall_seconds: f64,
+}
+
+impl SimReport {
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble(
+        cfg: &SiamConfig,
+        dnn: &Dnn,
+        map: &MappingResult,
+        traffic: &Traffic,
+        circuit: CircuitReport,
+        noc: NocReport,
+        nop: NopReport,
+        dram: DramReport,
+        wall_seconds: f64,
+    ) -> SimReport {
+        let stats = dnn.stats();
+        let c = circuit.total_metrics();
+        // Layer-by-layer dataflow: compute, NoC and NoP phases serialize.
+        // Circuit energy already contains the power-gated fabric leakage;
+        // the interconnect's own leakage accrues over its active window.
+        let mut total = Metrics {
+            area_um2: c.area_um2 + noc.metrics.area_um2 + nop.metrics.area_um2,
+            energy_pj: c.energy_pj + noc.metrics.energy_pj + nop.metrics.energy_pj,
+            latency_ns: c.latency_ns + noc.metrics.latency_ns + nop.metrics.latency_ns,
+            leakage_uw: c.leakage_uw + noc.metrics.leakage_uw + nop.metrics.leakage_uw,
+        };
+        total.energy_pj += noc.metrics.leakage_energy_pj() + nop.metrics.leakage_energy_pj();
+        let silicon_area_mm2 =
+            (c.area_um2 + noc.metrics.area_um2 + nop.die_area_um2) / 1.0e6;
+
+        SimReport {
+            model: dnn.name.clone(),
+            dataset: cfg.dnn.dataset.clone(),
+            params: stats.params,
+            macs: stats.macs,
+            num_chiplets: map.num_chiplets,
+            num_chiplets_required: map.num_chiplets_required,
+            total_tiles: map.total_tiles(cfg.chiplet.xbars_per_tile),
+            xbar_utilization: map.xbar_utilization(),
+            cell_utilization: map.cell_utilization(),
+            inter_chiplet_bits: traffic.inter_chiplet_bits,
+            intra_chiplet_bits: traffic.intra_chiplet_bits,
+            accumulator_adds: traffic.accumulator_adds,
+            circuit: c,
+            noc: noc.metrics,
+            nop: nop.metrics,
+            dram,
+            total,
+            noc_cycles: noc.cycles,
+            nop_cycles: nop.cycles,
+            silicon_area_mm2,
+            wall_seconds,
+        }
+    }
+
+    /// Inferences per joule (the Section-6.5 comparison metric).
+    pub fn inferences_per_joule(&self) -> f64 {
+        1.0e12 / self.total.energy_pj
+    }
+
+    /// Throughput at batch 1, inferences/s.
+    pub fn inferences_per_second(&self) -> f64 {
+        1.0e9 / self.total.latency_ns
+    }
+
+    /// Fig. 10-style breakdown across IMC / NoC / NoP.
+    pub fn component_breakdown(&self) -> Breakdown {
+        let mut b = Breakdown::default();
+        b.push("imc_circuit", self.circuit);
+        b.push("noc", self.noc);
+        b.push("nop", self.nop);
+        b
+    }
+
+    pub fn summary(&self) -> String {
+        let t = &self.total;
+        format!(
+            "{model} on {ds}: {params:.2}M params, {chiplets} chiplets ({req} used), \
+             {tiles} tiles, util {util:.1}%\n\
+             area {area} mm² | energy {energy} µJ | latency {lat} ms | \
+             power {pw} mW | EDAP {edap:.3e} pJ·ns·mm²\n\
+             eff {eff:.1} inf/J | {ips:.2} inf/s | NoC {nocp:.1}% E, NoP {nopp:.1}% E | \
+             DRAM load {dram_ms:.2} ms / {dram_mj:.2} mJ | sim {wall:.2}s",
+            model = self.model,
+            ds = self.dataset,
+            params = self.params as f64 / 1e6,
+            chiplets = self.num_chiplets,
+            req = self.num_chiplets_required,
+            tiles = self.total_tiles,
+            util = 100.0 * self.xbar_utilization,
+            area = eng(t.area_mm2()),
+            energy = eng(t.energy_uj()),
+            lat = eng(t.latency_ms()),
+            pw = eng(t.avg_power_mw()),
+            edap = t.edap(),
+            eff = self.inferences_per_joule(),
+            ips = self.inferences_per_second(),
+            nocp = 100.0 * self.noc.energy_pj / t.energy_pj,
+            nopp = 100.0 * self.nop.energy_pj / t.energy_pj,
+            dram_ms = self.dram.latency_ns / 1e6,
+            dram_mj = self.dram.energy_pj / 1e9,
+            wall = self.wall_seconds,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let m = |x: &Metrics| {
+            let mut o = Json::obj();
+            o.set("area_mm2", x.area_mm2())
+                .set("energy_pj", x.energy_pj)
+                .set("latency_ns", x.latency_ns)
+                .set("leakage_uw", x.leakage_uw)
+                .set("edp", x.edp())
+                .set("edap", x.edap());
+            o
+        };
+        let mut o = Json::obj();
+        o.set("model", self.model.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("params", self.params)
+            .set("macs", self.macs)
+            .set("num_chiplets", self.num_chiplets)
+            .set("num_chiplets_required", self.num_chiplets_required)
+            .set("total_tiles", self.total_tiles)
+            .set("xbar_utilization", self.xbar_utilization)
+            .set("cell_utilization", self.cell_utilization)
+            .set("inter_chiplet_bits", self.inter_chiplet_bits)
+            .set("intra_chiplet_bits", self.intra_chiplet_bits)
+            .set("accumulator_adds", self.accumulator_adds)
+            .set("circuit", m(&self.circuit))
+            .set("noc", m(&self.noc))
+            .set("nop", m(&self.nop))
+            .set("total", m(&self.total))
+            .set("silicon_area_mm2", self.silicon_area_mm2)
+            .set("noc_cycles", self.noc_cycles)
+            .set("nop_cycles", self.nop_cycles)
+            .set("inferences_per_joule", self.inferences_per_joule())
+            .set("inferences_per_second", self.inferences_per_second())
+            .set("wall_seconds", self.wall_seconds);
+        let mut d = Json::obj();
+        d.set("latency_ns", self.dram.latency_ns)
+            .set("energy_pj", self.dram.energy_pj)
+            .set("requests", self.dram.requests)
+            .set("row_hit_rate", self.dram.row_hit_rate);
+        o.set("dram", d);
+        o
+    }
+}

@@ -1,0 +1,152 @@
+//! Layer-sensitivity analysis (Section 6.4, Fig. 14c/d): map a single
+//! DNN layer across a varying number of chiplets and model the
+//! compute/communication trade, SIMBA-style.
+//!
+//! Model: with `k` chiplets assigned to one layer, the layer's input
+//! vectors are processed in parallel across the chiplets (column-split
+//! weights replicated as needed), so compute time scales ≈ 1/k; the
+//! input activation stream, however, must reach *all* k chiplets; with
+//! a row/column multicast tree on the mesh the stream is sent once plus
+//! a per-extra-destination replication overhead (~5 % per chiplet).
+//! Small-compute layers therefore show the U-shape SIMBA measures
+//! (res3a_branch1 rises again at 16 chiplets) while compute-heavy layers
+//! keep improving through 8 chiplets (res5[a-c]_branch2b).
+
+use crate::config::{ReadOut, SiamConfig};
+use crate::dnn::Dnn;
+
+/// One point of the sensitivity curve.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerPoint {
+    pub chiplets: usize,
+    pub compute_ns: f64,
+    pub nop_ns: f64,
+}
+
+impl LayerPoint {
+    pub fn total_ns(&self) -> f64 {
+        self.compute_ns + self.nop_ns
+    }
+}
+
+/// Latency of `layer_name` mapped across `k` chiplets, for each k.
+pub fn layer_latency_vs_chiplets(
+    cfg: &SiamConfig,
+    dnn: &Dnn,
+    layer_name: &str,
+    counts: &[usize],
+) -> Option<Vec<LayerPoint>> {
+    let layer = dnn.layers.iter().find(|l| l.name == layer_name)?;
+    if !layer.is_weight_layer() {
+        return None;
+    }
+    let act_bits = cfg.dnn.activation_precision as f64;
+    let seq = match cfg.chiplet.read_out {
+        ReadOut::Parallel => 1.0,
+        ReadOut::Sequential => cfg.chiplet.xbar_rows as f64,
+    };
+    let cycles_per_vec = act_bits * cfg.chiplet.cols_per_adc as f64 * seq;
+    let vectors = layer.input_vectors() as f64;
+    let clk_ns = cfg.clock_period_ns();
+    let nop_clk_ns = 1.0e3 / cfg.system.nop.frequency_mhz;
+    let bpc = cfg.system.nop.bits_per_cycle() as f64;
+    let in_bits = layer.ifm.elems() as f64 * act_bits;
+
+    Some(
+        counts
+            .iter()
+            .map(|&k| {
+                let kf = k as f64;
+                let compute_ns =
+                    (vectors / kf).ceil() * cycles_per_vec * clk_ns + 20.0 * clk_ns;
+                // one multicast stream + 5 % replication per extra dst
+                let nop_ns =
+                    (in_bits / bpc).ceil() * nop_clk_ns * (1.0 + 0.05 * (kf - 1.0));
+                LayerPoint {
+                    chiplets: k,
+                    compute_ns,
+                    nop_ns,
+                }
+            })
+            .collect(),
+    )
+}
+
+/// Fig. 14d: normalized total cycles of a layer (fixed chiplet count)
+/// as the NoP bandwidth is scaled by `speedups`.
+pub fn layer_cycles_vs_nop_speedup(
+    cfg: &SiamConfig,
+    dnn: &Dnn,
+    layer_name: &str,
+    chiplets: usize,
+    speedups: &[f64],
+) -> Option<Vec<(f64, f64)>> {
+    let base = layer_latency_vs_chiplets(cfg, dnn, layer_name, &[chiplets])?[0];
+    let norm = base.total_ns();
+    Some(
+        speedups
+            .iter()
+            .map(|&s| (s, (base.compute_ns + base.nop_ns / s) / norm))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::build_model;
+
+    #[test]
+    fn res3a_branch1_shows_u_shape() {
+        // Fig. 14c top: latency falls then rises slightly at 16 chiplets
+        // (SIMBA-like NoP bandwidth, as in the calibration experiment)
+        let cfg = SiamConfig::paper_default().with_nop_speedup(4.0);
+        let dnn = build_model("resnet50", "imagenet").unwrap();
+        let pts =
+            layer_latency_vs_chiplets(&cfg, &dnn, "res3a_branch1", &[1, 2, 4, 8, 16]).unwrap();
+        let t: Vec<f64> = pts.iter().map(|p| p.total_ns()).collect();
+        assert!(t[1] < t[0], "2 chiplets faster than 1");
+        let min = t.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            t[4] > min,
+            "16-chiplet point should sit above the minimum (U-shape), got {t:?}"
+        );
+    }
+
+    #[test]
+    fn res5_branch2b_keeps_decreasing() {
+        // Fig. 14c bottom: compute-heavy layer improves monotonically
+        // (SIMBA-like NoP bandwidth, as in the calibration experiment)
+        let cfg = SiamConfig::paper_default().with_nop_speedup(4.0);
+        let dnn = build_model("resnet50", "imagenet").unwrap();
+        let pts =
+            layer_latency_vs_chiplets(&cfg, &dnn, "res5a_branch2b", &[1, 2, 4, 8]).unwrap();
+        for w in pts.windows(2) {
+            assert!(
+                w[1].total_ns() <= w[0].total_ns(),
+                "latency should not increase: {pts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn nop_speedup_monotone() {
+        // Fig. 14d: more NoP bandwidth, fewer normalized cycles
+        let cfg = SiamConfig::paper_default().with_nop_speedup(4.0);
+        let dnn = build_model("resnet50", "imagenet").unwrap();
+        let pts =
+            layer_cycles_vs_nop_speedup(&cfg, &dnn, "res3a_branch1", 4, &[1.0, 2.0, 4.0, 8.0])
+                .unwrap();
+        assert!((pts[0].1 - 1.0).abs() < 1e-9);
+        for w in pts.windows(2) {
+            assert!(w[1].1 < w[0].1);
+        }
+    }
+
+    #[test]
+    fn unknown_layer_is_none() {
+        let cfg = SiamConfig::paper_default();
+        let dnn = build_model("resnet50", "imagenet").unwrap();
+        assert!(layer_latency_vs_chiplets(&cfg, &dnn, "nope", &[1]).is_none());
+    }
+}

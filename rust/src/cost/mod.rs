@@ -1,0 +1,119 @@
+//! Fabrication cost model (Appendix A): dies per wafer, Poisson yield,
+//! normalized cost, verified at 98 % against a commercial processor
+//! (SkyLake-SP [39]) in the paper.
+
+/// Wafer/process assumptions of Appendix A's verification experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Wafer diameter, mm (300 mm wafers ⇒ the paper uses D = 152.4 mm
+    /// in its verification; both supported).
+    pub wafer_diameter_mm: f64,
+    /// Defect density D0, defects/mm².
+    pub defect_density_per_mm2: f64,
+    /// Reference die area for normalization, mm².
+    pub reference_area_mm2: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Appendix A verification point: A_ref = 296 mm², D0 = 0.012/mm²,
+        // D = 152.4 mm.
+        CostModel {
+            wafer_diameter_mm: 152.4,
+            defect_density_per_mm2: 0.012,
+            reference_area_mm2: 296.0,
+        }
+    }
+}
+
+impl CostModel {
+    /// Equation 3: dies per wafer.
+    pub fn dies_per_wafer(&self, area_mm2: f64) -> f64 {
+        let d = self.wafer_diameter_mm;
+        d * std::f64::consts::PI * (d / (4.0 * area_mm2) - 1.0 / (2.0 * area_mm2).sqrt())
+    }
+
+    /// Poisson yield: η = e^(−D0·A).
+    pub fn yield_of(&self, area_mm2: f64) -> f64 {
+        (-self.defect_density_per_mm2 * area_mm2).exp()
+    }
+
+    /// Equation 5: cost of a die of `area_mm2`, normalized to the
+    /// reference die.
+    pub fn normalized_die_cost(&self, area_mm2: f64) -> f64 {
+        let n_ref = self.dies_per_wafer(self.reference_area_mm2);
+        let n_tgt = self.dies_per_wafer(area_mm2);
+        (n_ref * self.yield_of(self.reference_area_mm2)) / (n_tgt * self.yield_of(area_mm2))
+    }
+
+    /// System cost of a chiplet architecture: `n` chiplets of equal area
+    /// (normalized units). Known-good-die assembly: each chiplet yields
+    /// independently — the win over one monolithic die.
+    pub fn chiplet_system_cost(&self, n: usize, chiplet_area_mm2: f64) -> f64 {
+        n as f64 * self.normalized_die_cost(chiplet_area_mm2)
+    }
+
+    /// Fig. 13 metric: relative improvement (%) of a chiplet system over
+    /// a monolithic die of `mono_area_mm2`.
+    pub fn improvement_pct(&self, mono_area_mm2: f64, n: usize, chiplet_area_mm2: f64) -> f64 {
+        let mono = self.normalized_die_cost(mono_area_mm2);
+        let chip = self.chiplet_system_cost(n, chiplet_area_mm2);
+        100.0 * (mono - chip) / mono
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appendix_a_verification_point() {
+        // Reference die must normalize to exactly 1.0
+        let m = CostModel::default();
+        assert!((m.normalized_die_cost(296.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dies_per_wafer_formula() {
+        let m = CostModel::default();
+        // hand-evaluated Eq. 3 at A = 296 mm², D = 152.4 mm
+        let d = 152.4_f64;
+        let expect = d * std::f64::consts::PI * (d / (4.0 * 296.0) - 1.0 / (2.0_f64 * 296.0).sqrt());
+        assert!((m.dies_per_wafer(296.0) - expect).abs() < 1e-9);
+        assert!(expect > 0.0);
+    }
+
+    #[test]
+    fn cost_grows_superlinearly_with_area() {
+        // Fig. 1a: exponential cost growth (yield term) — doubling area
+        // must more than double cost.
+        let m = CostModel::default();
+        let c1 = m.normalized_die_cost(200.0);
+        let c2 = m.normalized_die_cost(400.0);
+        assert!(c2 > 2.0 * c1, "{c1} vs {c2}");
+    }
+
+    #[test]
+    fn chiplets_cheaper_for_large_systems() {
+        // 16 × 25 mm² chiplets vs one 400 mm² die
+        let m = CostModel::default();
+        let imp = m.improvement_pct(400.0, 16, 25.0);
+        assert!(imp > 0.0, "improvement {imp}%");
+    }
+
+    #[test]
+    fn tiny_systems_gain_little() {
+        // Fig. 13: ResNet-110-class (small area) improvement ≈ 0
+        let m = CostModel::default();
+        let imp = m.improvement_pct(12.0, 2, 6.0);
+        assert!(imp.abs() < 10.0, "improvement {imp}%");
+    }
+
+    #[test]
+    fn yield_is_poisson() {
+        let m = CostModel::default();
+        assert!((m.yield_of(0.0) - 1.0).abs() < 1e-12);
+        let y = m.yield_of(296.0);
+        assert!(((-0.012_f64 * 296.0).exp() - y).abs() < 1e-12);
+    }
+}

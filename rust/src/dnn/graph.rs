@@ -1,0 +1,248 @@
+//! The DNN graph: an ordered layer list with skip-edges (residual /
+//! concat `from` indices), plus a builder that performs shape inference.
+
+use super::layer::{infer_ofm, Layer, LayerKind, TensorShape};
+use super::stats::DnnStats;
+
+/// A DNN workload: layers in topological (execution) order. Branches are
+/// encoded as `ResidualAdd { from }` / `Concat { from }` layers referring
+/// back to earlier layer indices, which is sufficient for the chain-with-
+/// skips topologies of the evaluated networks and keeps the mapping
+/// engine's sequential-packing semantics identical to the paper's.
+#[derive(Debug, Clone)]
+pub struct Dnn {
+    pub name: String,
+    pub dataset: String,
+    pub input: TensorShape,
+    pub layers: Vec<Layer>,
+}
+
+impl Dnn {
+    pub fn stats(&self) -> DnnStats {
+        DnnStats::of(self)
+    }
+
+    /// Indices of weight-bearing layers (the ones mapped to crossbars).
+    pub fn weight_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_weight_layer())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Check internal consistency: shape chain and skip-edge targets.
+    ///
+    /// Branch layers (e.g. projection shortcuts) may read an *earlier*
+    /// layer's output instead of the immediately preceding one, so a
+    /// layer's ifm must match either the previous ofm or some earlier
+    /// layer's ofm (or the network input).
+    pub fn check(&self) -> Result<(), String> {
+        let mut prev = self.input;
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.ifm != prev {
+                let feeds = self.input == l.ifm
+                    || self.layers[..i].iter().any(|e| e.ofm == l.ifm);
+                if !feeds {
+                    return Err(format!(
+                        "layer {i} ({}) ifm {:?} matches neither previous ofm {:?} nor any earlier layer",
+                        l.name, l.ifm, prev
+                    ));
+                }
+            }
+            match l.kind {
+                LayerKind::ResidualAdd { from } | LayerKind::Concat { from } => {
+                    if from >= i {
+                        return Err(format!(
+                            "layer {i} ({}) skip-edge from {from} is not earlier",
+                            l.name
+                        ));
+                    }
+                }
+                _ => {}
+            }
+            prev = l.ofm;
+        }
+        Ok(())
+    }
+}
+
+/// Builder with running shape inference.
+pub struct DnnBuilder {
+    name: String,
+    dataset: String,
+    input: TensorShape,
+    cur: TensorShape,
+    pub(crate) layers: Vec<Layer>,
+}
+
+impl DnnBuilder {
+    pub fn new(name: &str, dataset: &str, input: (usize, usize, usize)) -> Self {
+        let input = TensorShape::new(input.0, input.1, input.2);
+        DnnBuilder {
+            name: name.into(),
+            dataset: dataset.into(),
+            input,
+            cur: input,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Current output shape (for builders that need to branch).
+    pub fn shape(&self) -> TensorShape {
+        self.cur
+    }
+
+    /// Index of the most recently added layer.
+    pub fn last_index(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, kind: LayerKind) -> usize {
+        let ifm = self.cur;
+        let mut ofm = infer_ofm(&kind, ifm);
+        if let LayerKind::Concat { from } = kind {
+            ofm.c = ifm.c + self.layers[from].ofm.c;
+        }
+        self.layers.push(Layer {
+            name: name.into(),
+            kind,
+            ifm,
+            ofm,
+        });
+        self.cur = ofm;
+        self.layers.len() - 1
+    }
+
+    pub fn conv(
+        &mut self,
+        name: impl Into<String>,
+        k: usize,
+        stride: usize,
+        padding: usize,
+        out_ch: usize,
+    ) -> usize {
+        self.push(
+            name,
+            LayerKind::Conv {
+                kh: k,
+                kw: k,
+                stride,
+                padding,
+                out_ch,
+            },
+        )
+    }
+
+    pub fn relu(&mut self, name: impl Into<String>) -> usize {
+        self.push(name, LayerKind::Relu)
+    }
+
+    pub fn maxpool(&mut self, name: impl Into<String>, k: usize, stride: usize) -> usize {
+        self.push(name, LayerKind::MaxPool { k, stride, padding: 0 })
+    }
+
+    pub fn maxpool_pad(
+        &mut self,
+        name: impl Into<String>,
+        k: usize,
+        stride: usize,
+        padding: usize,
+    ) -> usize {
+        self.push(name, LayerKind::MaxPool { k, stride, padding })
+    }
+
+    pub fn avgpool(&mut self, name: impl Into<String>, k: usize, stride: usize) -> usize {
+        self.push(name, LayerKind::AvgPool { k, stride, padding: 0 })
+    }
+
+    pub fn global_avgpool(&mut self, name: impl Into<String>) -> usize {
+        self.push(name, LayerKind::GlobalAvgPool)
+    }
+
+    pub fn fc(&mut self, name: impl Into<String>, out_features: usize) -> usize {
+        self.push(name, LayerKind::Fc { out_features })
+    }
+
+    pub fn residual_add(&mut self, name: impl Into<String>, from: usize) -> usize {
+        self.push(name, LayerKind::ResidualAdd { from })
+    }
+
+    pub fn concat(&mut self, name: impl Into<String>, from: usize) -> usize {
+        self.push(name, LayerKind::Concat { from })
+    }
+
+    /// Force the current shape (used for projection-shortcut bookkeeping
+    /// where the skip path is itself a conv recorded earlier).
+    pub fn set_shape(&mut self, s: TensorShape) {
+        self.cur = s;
+    }
+
+    pub fn build(self) -> Dnn {
+        let dnn = Dnn {
+            name: self.name,
+            dataset: self.dataset,
+            input: self.input,
+            layers: self.layers,
+        };
+        if let Err(e) = dnn.check() {
+            panic!("DnnBuilder produced an inconsistent graph: {e}");
+        }
+        dnn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains_shapes() {
+        let mut b = DnnBuilder::new("tiny", "cifar10", (32, 32, 3));
+        b.conv("c1", 3, 1, 1, 16);
+        b.relu("r1");
+        b.maxpool("p1", 2, 2);
+        b.fc("fc", 10);
+        let dnn = b.build();
+        assert_eq!(dnn.layers.len(), 4);
+        assert_eq!(dnn.layers[2].ofm, TensorShape::new(16, 16, 16));
+        assert_eq!(dnn.layers[3].ofm, TensorShape::new(1, 1, 10));
+        assert!(dnn.check().is_ok());
+    }
+
+    #[test]
+    fn concat_adds_channels() {
+        let mut b = DnnBuilder::new("d", "cifar10", (8, 8, 4));
+        let a = b.conv("c1", 3, 1, 1, 4); // ofm c=4
+        b.conv("c2", 3, 1, 1, 6);
+        b.concat("cat", a);
+        let dnn = b.build();
+        assert_eq!(dnn.layers[2].ofm.c, 10);
+    }
+
+    #[test]
+    fn weight_layers_listed() {
+        let mut b = DnnBuilder::new("t", "cifar10", (32, 32, 3));
+        b.conv("c", 3, 1, 1, 8);
+        b.relu("r");
+        b.fc("f", 10);
+        let dnn = b.build();
+        assert_eq!(dnn.weight_layers(), vec![0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent")]
+    fn bad_skip_edge_panics() {
+        let mut b = DnnBuilder::new("bad", "cifar10", (8, 8, 3));
+        b.conv("c", 3, 1, 1, 3);
+        // Manually corrupt: residual from a future layer
+        b.layers.push(Layer {
+            name: "res".into(),
+            kind: LayerKind::ResidualAdd { from: 99 },
+            ifm: b.cur,
+            ofm: b.cur,
+        });
+        b.build();
+    }
+}

@@ -1,0 +1,212 @@
+//! Layer types and shape inference.
+
+
+/// (height, width, channels) of a feature map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl TensorShape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        TensorShape { h, w, c }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// Layer operator. Only `Conv` and `Fc` carry weights and map onto IMC
+/// crossbars; the rest contribute activations traffic and digital-unit
+/// work (pooling / activation / elementwise add / concat).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv {
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        padding: usize,
+        out_ch: usize,
+    },
+    Fc {
+        out_features: usize,
+    },
+    MaxPool {
+        k: usize,
+        stride: usize,
+        padding: usize,
+    },
+    AvgPool {
+        k: usize,
+        stride: usize,
+        padding: usize,
+    },
+    /// Global average pool to 1×1.
+    GlobalAvgPool,
+    Relu,
+    Sigmoid,
+    /// Residual addition with the output of layer `from` (index into the
+    /// DNN layer list). Requires buffering that layer's activations.
+    ResidualAdd {
+        from: usize,
+    },
+    /// Channel concatenation with the output of layer `from` (DenseNet).
+    Concat {
+        from: usize,
+    },
+}
+
+/// One node of the DNN graph with inferred input/output shapes.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub ifm: TensorShape,
+    pub ofm: TensorShape,
+}
+
+impl Layer {
+    /// Weight parameters (zero for non-weight layers). Biases included.
+    pub fn params(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { kh, kw, out_ch, .. } => kh * kw * self.ifm.c * out_ch + out_ch,
+            LayerKind::Fc { out_features } => self.ifm.elems() * out_features + out_features,
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate operations for one inference.
+    pub fn macs(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { kh, kw, .. } => self.ofm.elems() * kh * kw * self.ifm.c,
+            LayerKind::Fc { out_features } => self.ifm.elems() * out_features,
+            _ => 0,
+        }
+    }
+
+    /// Does this layer own IMC crossbars?
+    pub fn is_weight_layer(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+    }
+
+    /// Rows of the unrolled weight matrix (Kx·Ky·Nif for conv, K for fc) —
+    /// the numerator of N_r in Eq. 1.
+    pub fn weight_rows(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { kh, kw, .. } => kh * kw * self.ifm.c,
+            LayerKind::Fc { .. } => self.ifm.elems(),
+            _ => 0,
+        }
+    }
+
+    /// Columns of the unrolled weight matrix (Nof) — the numerator of N_c
+    /// in Eq. 1 before the ×N_bits bit-slicing.
+    pub fn weight_cols(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { out_ch, .. } => out_ch,
+            LayerKind::Fc { out_features } => out_features,
+            _ => 0,
+        }
+    }
+
+    /// Number of input vectors pushed through the crossbars per inference
+    /// (spatial positions for conv, 1 for fc).
+    pub fn input_vectors(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { .. } => self.ofm.h * self.ofm.w,
+            LayerKind::Fc { .. } => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// Shape inference for a layer kind applied to an input shape.
+pub fn infer_ofm(kind: &LayerKind, ifm: TensorShape) -> TensorShape {
+    match *kind {
+        LayerKind::Conv {
+            kh,
+            kw,
+            stride,
+            padding,
+            out_ch,
+        } => TensorShape::new(
+            (ifm.h + 2 * padding - kh) / stride + 1,
+            (ifm.w + 2 * padding - kw) / stride + 1,
+            out_ch,
+        ),
+        LayerKind::Fc { out_features } => TensorShape::new(1, 1, out_features),
+        LayerKind::MaxPool { k, stride, padding } | LayerKind::AvgPool { k, stride, padding } => {
+            TensorShape::new(
+                (ifm.h + 2 * padding - k) / stride + 1,
+                (ifm.w + 2 * padding - k) / stride + 1,
+                ifm.c,
+            )
+        }
+        LayerKind::GlobalAvgPool => TensorShape::new(1, 1, ifm.c),
+        LayerKind::Relu | LayerKind::Sigmoid | LayerKind::ResidualAdd { .. } => ifm,
+        LayerKind::Concat { .. } => ifm, // channel count fixed by the builder
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(kh: usize, stride: usize, padding: usize, out_ch: usize) -> LayerKind {
+        LayerKind::Conv {
+            kh,
+            kw: kh,
+            stride,
+            padding,
+            out_ch,
+        }
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        let ifm = TensorShape::new(32, 32, 3);
+        let ofm = infer_ofm(&conv(3, 1, 1, 16), ifm);
+        assert_eq!(ofm, TensorShape::new(32, 32, 16));
+        let ofm2 = infer_ofm(&conv(3, 2, 1, 32), ifm);
+        assert_eq!(ofm2, TensorShape::new(16, 16, 32));
+        let ofm7 = infer_ofm(&conv(7, 2, 3, 64), TensorShape::new(224, 224, 3));
+        assert_eq!(ofm7, TensorShape::new(112, 112, 64));
+    }
+
+    #[test]
+    fn pool_shape_inference() {
+        let ifm = TensorShape::new(32, 32, 16);
+        let ofm = infer_ofm(&LayerKind::MaxPool { k: 2, stride: 2, padding: 0 }, ifm);
+        assert_eq!(ofm, TensorShape::new(16, 16, 16));
+    }
+
+    #[test]
+    fn params_and_macs() {
+        let l = Layer {
+            name: "conv1".into(),
+            kind: conv(3, 1, 1, 16),
+            ifm: TensorShape::new(32, 32, 3),
+            ofm: TensorShape::new(32, 32, 16),
+        };
+        assert_eq!(l.params(), 3 * 3 * 3 * 16 + 16);
+        assert_eq!(l.macs(), 32 * 32 * 16 * 27);
+        assert_eq!(l.weight_rows(), 27);
+        assert_eq!(l.weight_cols(), 16);
+        assert_eq!(l.input_vectors(), 1024);
+    }
+
+    #[test]
+    fn fc_params() {
+        let l = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Fc { out_features: 10 },
+            ifm: TensorShape::new(1, 1, 64),
+            ofm: TensorShape::new(1, 1, 10),
+        };
+        assert_eq!(l.params(), 64 * 10 + 10);
+        assert_eq!(l.input_vectors(), 1);
+    }
+}

@@ -1,0 +1,64 @@
+//! DenseNet (Huang et al.). Plain (non-BC) construction: 3 dense blocks
+//! of (depth-4)/3 3×3 conv layers with growth rate `k`, transitions with
+//! a 1×1 conv + 2×2 average pool, global average pool and FC classifier.
+//!
+//! The paper's "DenseNet-110 (28.1M)" corresponds to the L=100, k=24
+//! configuration of the DenseNet paper (27.2M); we expose it as
+//! `densenet110` and note the naming in DESIGN.md.
+
+use crate::dnn::graph::{Dnn, DnnBuilder};
+
+pub fn densenet(depth: usize, growth: usize, input: (usize, usize, usize), classes: usize) -> Dnn {
+    assert!((depth - 4) % 3 == 0, "densenet depth must be 3n+4");
+    let per_block = (depth - 4) / 3;
+    let mut b = DnnBuilder::new(&format!("densenet{depth}"), "cifar", input);
+    b.conv("conv0", 3, 1, 1, 16);
+    for blk in 0..3 {
+        for i in 0..per_block {
+            let stack = b.last_index();
+            b.conv(format!("d{blk}_{i}_conv"), 3, 1, 1, growth);
+            b.relu(format!("d{blk}_{i}_relu"));
+            b.concat(format!("d{blk}_{i}_cat"), stack);
+        }
+        if blk < 2 {
+            let ch = b.shape().c;
+            b.conv(format!("t{blk}_conv"), 1, 1, 0, ch);
+            b.relu(format!("t{blk}_relu"));
+            b.avgpool(format!("t{blk}_pool"), 2, 2);
+        }
+    }
+    b.global_avgpool("gap");
+    b.fc("fc", classes);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densenet_growth() {
+        let d = densenet(40, 12, (32, 32, 3), 10);
+        // after block 0: 16 + 12*12 = 160 channels
+        let t0 = d.layers.iter().find(|l| l.name == "t0_conv").unwrap();
+        assert_eq!(t0.ifm.c, 160);
+        // spatial: 32 -> 16 -> 8
+        let gap = d.layers.iter().find(|l| l.name == "gap").unwrap();
+        assert_eq!(gap.ifm.h, 8);
+        assert_eq!(gap.ifm.c, 160 + 12 * 12 + 12 * 12);
+    }
+
+    #[test]
+    fn densenet40_params_match_paper() {
+        // DenseNet paper: L=40, k=12 => 1.0M params
+        let p = densenet(40, 12, (32, 32, 3), 10).stats().params as f64;
+        assert!((p - 1.0e6).abs() / 1.0e6 < 0.15, "params {p}");
+    }
+
+    #[test]
+    fn densenet100_k24_params_match_paper() {
+        // DenseNet paper: L=100, k=24 => 27.2M params
+        let p = densenet(100, 24, (32, 32, 3), 10).stats().params as f64;
+        assert!((p - 27.2e6).abs() / 27.2e6 < 0.15, "params {p}");
+    }
+}

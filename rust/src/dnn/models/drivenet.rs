@@ -1,0 +1,39 @@
+//! DriveNet / PilotNet (Bojarski et al.) — the small DNN SIMBA uses for
+//! its chiplet-scaling study; we use it for the Fig. 14b analogue.
+
+use crate::dnn::graph::{Dnn, DnnBuilder};
+
+pub fn drivenet(outputs: usize) -> Dnn {
+    let mut b = DnnBuilder::new("drivenet", "driving", (66, 200, 3));
+    b.conv("conv1", 5, 2, 0, 24);
+    b.relu("relu1");
+    b.conv("conv2", 5, 2, 0, 36);
+    b.relu("relu2");
+    b.conv("conv3", 5, 2, 0, 48);
+    b.relu("relu3");
+    b.conv("conv4", 3, 1, 0, 64);
+    b.relu("relu4");
+    b.conv("conv5", 3, 1, 0, 64);
+    b.relu("relu5");
+    b.fc("fc1", 100);
+    b.relu("relu6");
+    b.fc("fc2", 50);
+    b.relu("relu7");
+    b.fc("fc3", outputs);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pilotnet_shapes() {
+        let d = drivenet(10);
+        // 66x200 -> 31x98 -> 14x47 -> 5x22 -> 3x20 -> 1x18
+        let conv5 = d.layers.iter().find(|l| l.name == "conv5").unwrap();
+        assert_eq!((conv5.ofm.h, conv5.ofm.w, conv5.ofm.c), (1, 18, 64));
+        let fc1 = d.layers.iter().find(|l| l.name == "fc1").unwrap();
+        assert_eq!(fc1.ifm.elems(), 1152);
+    }
+}

@@ -1,0 +1,34 @@
+//! LeNet-5 (the paper's smallest Fig. 1a workload).
+
+use crate::dnn::graph::{Dnn, DnnBuilder};
+
+pub fn lenet5(input: (usize, usize, usize), classes: usize) -> Dnn {
+    let mut b = DnnBuilder::new("lenet5", "cifar10", input);
+    b.conv("conv1", 5, 1, 0, 6);
+    b.relu("relu1");
+    b.avgpool("pool1", 2, 2);
+    b.conv("conv2", 5, 1, 0, 16);
+    b.relu("relu2");
+    b.avgpool("pool2", 2, 2);
+    b.fc("fc1", 120);
+    b.relu("relu3");
+    b.fc("fc2", 84);
+    b.relu("relu4");
+    b.fc("fc3", classes);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_shapes() {
+        let d = lenet5((32, 32, 3), 10);
+        // 32 -> 28 -> 14 -> 10 -> 5
+        assert_eq!(d.layers[3].ofm.h, 10);
+        assert_eq!(d.layers[5].ofm.h, 5);
+        assert_eq!(d.layers[6].ifm.elems(), 400);
+        assert_eq!(d.stats().weight_layers, 5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Model zoo: builders for every DNN the paper evaluates.
+
+pub mod densenet;
+pub mod drivenet;
+pub mod lenet;
+pub mod nin;
+pub mod resnet;
+pub mod vgg;

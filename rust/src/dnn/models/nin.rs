@@ -1,0 +1,43 @@
+//! Network-in-Network (Lin et al.) — a compact all-conv CIFAR model used
+//! as an extra small-workload point for design-space sweeps.
+
+use crate::dnn::graph::{Dnn, DnnBuilder};
+
+pub fn nin(input: (usize, usize, usize), classes: usize) -> Dnn {
+    let mut b = DnnBuilder::new("nin", "cifar", input);
+    b.conv("conv1", 5, 1, 2, 192);
+    b.relu("relu1");
+    b.conv("cccp1", 1, 1, 0, 160);
+    b.relu("relu2");
+    b.conv("cccp2", 1, 1, 0, 96);
+    b.relu("relu3");
+    b.maxpool("pool1", 2, 2);
+    b.conv("conv2", 5, 1, 2, 192);
+    b.relu("relu4");
+    b.conv("cccp3", 1, 1, 0, 192);
+    b.relu("relu5");
+    b.conv("cccp4", 1, 1, 0, 192);
+    b.relu("relu6");
+    b.avgpool("pool2", 2, 2);
+    b.conv("conv3", 3, 1, 1, 192);
+    b.relu("relu7");
+    b.conv("cccp5", 1, 1, 0, 192);
+    b.relu("relu8");
+    b.conv("cccp6", 1, 1, 0, classes);
+    b.global_avgpool("gap");
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nin_structure() {
+        let d = nin((32, 32, 3), 10);
+        assert_eq!(d.stats().weight_layers, 9);
+        assert_eq!(d.layers.last().unwrap().ofm.c, 10);
+        let p = d.stats().params as f64;
+        assert!((p - 0.97e6).abs() / 0.97e6 < 0.1, "params {p}");
+    }
+}

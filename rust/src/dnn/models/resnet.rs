@@ -1,0 +1,140 @@
+//! ResNets: the CIFAR family (6n+2: ResNet-20/56/110) and ResNet-50
+//! (ImageNet, bottleneck blocks, Caffe layer naming so the SIMBA
+//! calibration experiment can address `res3a_branch1` and
+//! `res5[a-c]_branch2b` — Fig. 14c/d of the paper).
+
+use crate::dnn::graph::{Dnn, DnnBuilder};
+
+
+/// CIFAR ResNet with `2n` conv layers per stage over 3 stages
+/// (16/32/64 channels) plus stem and classifier: depth = 6n+2.
+/// n=3 → ResNet-20, n=9 → ResNet-56, n=18 → ResNet-110.
+pub fn resnet_cifar(n: usize, input: (usize, usize, usize), classes: usize) -> Dnn {
+    let depth = 6 * n + 2;
+    let mut b = DnnBuilder::new(&format!("resnet{depth}"), "cifar", input);
+    b.conv("conv1", 3, 1, 1, 16);
+    b.relu("relu1");
+    let mut skip = b.last_index();
+    for (stage, ch) in [(2usize, 16usize), (3, 32), (4, 64)] {
+        for blk in 0..n {
+            let first = blk == 0 && stage != 2;
+            let stride = if first { 2 } else { 1 };
+            let tag = format!("res{stage}_{blk}");
+            b.conv(format!("{tag}_conv1"), 3, stride, 1, ch);
+            b.relu(format!("{tag}_relu1"));
+            b.conv(format!("{tag}_conv2"), 3, 1, 1, ch);
+            if first {
+                // projection shortcut: 1x1/2 conv from the skip point.
+                // Builder is a chain, so record the projection as a layer
+                // reading the *block input* shape. We emulate the branch by
+                // inserting it before the add and wiring the add to it.
+                let main_out = b.shape();
+                let block_in = b.layers[skip].ofm;
+                b.set_shape(block_in);
+                let proj = b.conv(format!("res{stage}a_branch1"), 1, 2, 0, ch);
+                b.set_shape(main_out);
+                b.residual_add(format!("{tag}_add"), proj);
+            } else {
+                b.residual_add(format!("{tag}_add"), skip);
+            }
+            b.relu(format!("{tag}_relu2"));
+            skip = b.last_index();
+        }
+    }
+    b.global_avgpool("gap");
+    b.fc("fc", classes);
+    b.build()
+}
+
+/// ResNet-50 (ImageNet): stem 7×7/2 + 3×3/2 max-pool, bottleneck stages
+/// [3,4,6,3] with widths (64,128,256,512)×4, global average pool, FC-1000.
+pub fn resnet50(input: (usize, usize, usize), classes: usize) -> Dnn {
+    let mut b = DnnBuilder::new("resnet50", "imagenet", input);
+    b.conv("conv1", 7, 2, 3, 64);
+    b.relu("conv1_relu");
+    b.maxpool_pad("pool1", 3, 2, 1);
+    let mut skip = b.last_index();
+    let stages: [(usize, usize, usize); 4] =
+        [(2, 64, 3), (3, 128, 4), (4, 256, 6), (5, 512, 3)];
+    for (stage, width, blocks) in stages {
+        for blk in 0..blocks {
+            let letter = (b'a' + blk as u8) as char;
+            let tag = format!("res{stage}{letter}");
+            let first = blk == 0;
+            // conv4_x (caffe res3..res5) downsample at the first block of
+            // stages 3..5; stage 2 keeps stride 1 after the max-pool.
+            let stride = if first && stage != 2 { 2 } else { 1 };
+            let out = width * 4;
+            b.conv(format!("{tag}_branch2a"), 1, stride, 0, width);
+            b.relu(format!("{tag}_branch2a_relu"));
+            b.conv(format!("{tag}_branch2b"), 3, 1, 1, width);
+            b.relu(format!("{tag}_branch2b_relu"));
+            b.conv(format!("{tag}_branch2c"), 1, 1, 0, out);
+            if first {
+                let main_out = b.shape();
+                let block_in = b.layers[skip].ofm;
+                b.set_shape(block_in);
+                let proj = b.conv(format!("res{stage}a_branch1"), 1, stride, 0, out);
+                b.set_shape(main_out);
+                b.residual_add(format!("{tag}_add"), proj);
+            } else {
+                b.residual_add(format!("{tag}_add"), skip);
+            }
+            b.relu(format!("{tag}_relu"));
+            skip = b.last_index();
+        }
+    }
+    b.global_avgpool("gap");
+    b.fc("fc1000", classes);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layer::TensorShape;
+
+    #[test]
+    fn resnet110_shape_and_params() {
+        let d = resnet_cifar(18, (32, 32, 3), 10);
+        let s = d.stats();
+        // 1 stem + 108 block convs + 2 projections + 1 fc = 112 weight layers
+        assert_eq!(s.weight_layers, 112);
+        let p = s.params as f64;
+        assert!((p - 1.73e6).abs() / 1.73e6 < 0.05, "params {p}");
+        assert!(d.check().is_ok());
+    }
+
+    #[test]
+    fn resnet20_params() {
+        let d = resnet_cifar(3, (32, 32, 3), 10);
+        let p = d.stats().params as f64;
+        assert!((p - 0.27e6).abs() / 0.27e6 < 0.1, "params {p}");
+    }
+
+    #[test]
+    fn resnet50_params_and_names() {
+        let d = resnet50((224, 224, 3), 1000);
+        let p = d.stats().params as f64;
+        // torchvision resnet50: 25.56M
+        assert!((p - 25.5e6).abs() / 25.5e6 < 0.03, "params {p}");
+        assert!(d.layers.iter().any(|l| l.name == "res3a_branch1"));
+        assert!(d.layers.iter().any(|l| l.name == "res5a_branch2b"));
+        assert!(d.layers.iter().any(|l| l.name == "res5c_branch2b"));
+        // res3a_branch1 downsamples 56 -> 28
+        let l = d.layers.iter().find(|l| l.name == "res3a_branch1").unwrap();
+        assert_eq!(l.ofm.h, 28);
+        assert_eq!(l.ofm.c, 512);
+    }
+
+    #[test]
+    fn stage_spatial_sizes() {
+        let d = resnet50((224, 224, 3), 1000);
+        let at = |n: &str| d.layers.iter().find(|l| l.name == n).unwrap().ofm;
+        assert_eq!(at("res2a_branch2b").h, 56);
+        assert_eq!(at("res3a_branch2b").h, 28);
+        assert_eq!(at("res4a_branch2b").h, 14);
+        assert_eq!(at("res5a_branch2b").h, 7);
+        assert_eq!(at("gap"), TensorShape::new(1, 1, 2048));
+    }
+}

@@ -1,0 +1,110 @@
+//! VGG-16 / VGG-19 (Simonyan & Zisserman). Plan entries: `C(n)` conv3×3
+//! with n output channels, `M` 2×2/2 max-pool. The classifier follows the
+//! original 4096-4096-classes head; for CIFAR inputs the first FC sees a
+//! 1×1×512 map.
+
+use crate::dnn::graph::{Dnn, DnnBuilder};
+
+#[derive(Clone, Copy)]
+pub enum P {
+    C(usize),
+    M,
+}
+
+pub const VGG16_PLAN: [P; 18] = [
+    P::C(64),
+    P::C(64),
+    P::M,
+    P::C(128),
+    P::C(128),
+    P::M,
+    P::C(256),
+    P::C(256),
+    P::C(256),
+    P::M,
+    P::C(512),
+    P::C(512),
+    P::C(512),
+    P::M,
+    P::C(512),
+    P::C(512),
+    P::C(512),
+    P::M,
+];
+
+pub const VGG19_PLAN: [P; 21] = [
+    P::C(64),
+    P::C(64),
+    P::M,
+    P::C(128),
+    P::C(128),
+    P::M,
+    P::C(256),
+    P::C(256),
+    P::C(256),
+    P::C(256),
+    P::M,
+    P::C(512),
+    P::C(512),
+    P::C(512),
+    P::C(512),
+    P::M,
+    P::C(512),
+    P::C(512),
+    P::C(512),
+    P::C(512),
+    P::M,
+];
+
+pub fn vgg(plan: &[P], input: (usize, usize, usize), classes: usize) -> Dnn {
+    let name = if plan.len() == 18 { "vgg16" } else { "vgg19" };
+    let mut b = DnnBuilder::new(name, "any", input);
+    let (mut ci, mut pi) = (0usize, 0usize);
+    for step in plan {
+        match step {
+            P::C(ch) => {
+                ci += 1;
+                b.conv(format!("conv{ci}"), 3, 1, 1, *ch);
+                b.relu(format!("relu{ci}"));
+            }
+            P::M => {
+                pi += 1;
+                b.maxpool(format!("pool{pi}"), 2, 2);
+            }
+        }
+    }
+    b.fc("fc6", 4096);
+    b.relu("relu_fc6");
+    b.fc("fc7", 4096);
+    b.relu("relu_fc7");
+    b.fc("fc8", classes);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_imagenet_params() {
+        let d = vgg(&VGG16_PLAN, (224, 224, 3), 1000);
+        let p = d.stats().params as f64;
+        // torchvision vgg16: 138.36M
+        assert!((p - 138.36e6).abs() / 138.36e6 < 0.01, "params {p}");
+    }
+
+    #[test]
+    fn vgg19_cifar_shapes() {
+        let d = vgg(&VGG19_PLAN, (32, 32, 3), 100);
+        // five pools: 32 -> 1
+        let last_conv = d
+            .layers
+            .iter()
+            .rev()
+            .find(|l| l.name.starts_with("pool"))
+            .unwrap();
+        assert_eq!(last_conv.ofm.h, 1);
+        assert_eq!(d.layers.last().unwrap().ofm.c, 100);
+        assert_eq!(d.stats().weight_layers, 16 + 3);
+    }
+}

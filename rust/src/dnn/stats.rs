@@ -1,0 +1,104 @@
+//! Aggregate workload statistics consumed by the cost / DRAM engines and
+//! the report writer.
+
+use super::graph::Dnn;
+use super::layer::LayerKind;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DnnStats {
+    /// Total weights + biases.
+    pub params: usize,
+    /// Total MACs per inference.
+    pub macs: usize,
+    /// Total activation elements produced per inference.
+    pub activations: usize,
+    /// Weight-bearing layers.
+    pub weight_layers: usize,
+    /// All layers (incl. pool/relu/add/concat).
+    pub total_layers: usize,
+    /// Residual / concat skip edges (drives extra buffer provisioning —
+    /// the paper's "branched structure" cost).
+    pub skip_edges: usize,
+    /// Peak activation elements that must be held for a future skip edge.
+    pub peak_skip_buffer: usize,
+}
+
+impl DnnStats {
+    pub fn of(dnn: &Dnn) -> DnnStats {
+        let mut s = DnnStats {
+            total_layers: dnn.layers.len(),
+            ..Default::default()
+        };
+        // live skip-edge buffer tracking: for each layer with a later
+        // skip consumer, its ofm stays buffered until consumed.
+        let mut consumers: Vec<Option<usize>> = vec![None; dnn.layers.len()];
+        for (i, l) in dnn.layers.iter().enumerate() {
+            if let LayerKind::ResidualAdd { from } | LayerKind::Concat { from } = l.kind {
+                consumers[from] = Some(i);
+                s.skip_edges += 1;
+            }
+        }
+        let mut live: usize = 0;
+        let mut expiry: Vec<(usize, usize)> = Vec::new(); // (consumer, elems)
+        for (i, l) in dnn.layers.iter().enumerate() {
+            s.params += l.params();
+            s.macs += l.macs();
+            s.activations += l.ofm.elems();
+            if l.is_weight_layer() {
+                s.weight_layers += 1;
+            }
+            expiry.retain(|&(at, elems)| {
+                if at == i {
+                    live -= elems;
+                    false
+                } else {
+                    true
+                }
+            });
+            if let Some(at) = consumers[i] {
+                live += l.ofm.elems();
+                expiry.push((at, l.ofm.elems()));
+            }
+            s.peak_skip_buffer = s.peak_skip_buffer.max(live);
+        }
+        s
+    }
+
+    /// Model size in bytes at the given weight precision.
+    pub fn model_bytes(&self, weight_bits: u8) -> usize {
+        (self.params * weight_bits as usize).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dnn::graph::DnnBuilder;
+
+    #[test]
+    fn stats_add_up() {
+        let mut b = DnnBuilder::new("t", "cifar10", (8, 8, 3));
+        b.conv("c1", 3, 1, 1, 4);
+        b.relu("r1");
+        let c1 = 1; // relu output index
+        b.conv("c2", 3, 1, 1, 4);
+        b.residual_add("res", c1);
+        b.fc("fc", 10);
+        let s = b.build().stats();
+        assert_eq!(s.weight_layers, 3);
+        assert_eq!(s.skip_edges, 1);
+        let conv1 = 3 * 3 * 3 * 4 + 4;
+        let conv2 = 3 * 3 * 4 * 4 + 4;
+        let fc = 8 * 8 * 4 * 10 + 10;
+        assert_eq!(s.params, conv1 + conv2 + fc);
+        assert_eq!(s.peak_skip_buffer, 8 * 8 * 4);
+    }
+
+    #[test]
+    fn model_bytes_rounding() {
+        let mut b = DnnBuilder::new("t", "cifar10", (4, 4, 1));
+        b.fc("f", 3); // 16*3+3 = 51 params
+        let s = b.build().stats();
+        assert_eq!(s.model_bytes(8), 51);
+        assert_eq!(s.model_bytes(4), 26); // ceil(51*4/8)
+    }
+}

@@ -1,0 +1,226 @@
+//! DRAM engine (Section 4.5): request generation from the model size,
+//! a RAMULATOR-style bank-state timing simulation, a VAMPIRE-style
+//! event-based power model, and the instruction-subset fast estimator of
+//! Fig. 7a (simulate a fraction, extrapolate, <2 % EDP error at 50 %).
+
+pub mod timing;
+
+pub use timing::{params, DramEnergy, DramTiming};
+
+use crate::config::{DramConfig, SiamConfig};
+use crate::dnn::DnnStats;
+use crate::metrics::Metrics;
+
+/// One DRAM read request (64 B cache-line granularity).
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub addr: u64,
+}
+
+/// Result of the DRAM access estimation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DramReport {
+    /// Total transfer latency, ns.
+    pub latency_ns: f64,
+    /// Total energy (array + IO + background), pJ.
+    pub energy_pj: f64,
+    /// Requests issued (after subset extrapolation).
+    pub requests: u64,
+    /// Row-buffer hit rate of the simulated stream.
+    pub row_hit_rate: f64,
+    /// Fraction of requests actually simulated.
+    pub simulated_fraction: f64,
+}
+
+impl DramReport {
+    pub fn edp(&self) -> f64 {
+        self.energy_pj * self.latency_ns
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        Metrics {
+            area_um2: 0.0, // commodity DRAM chiplet: excluded from die cost
+            energy_pj: self.energy_pj,
+            latency_ns: self.latency_ns,
+            leakage_uw: 0.0,
+        }
+    }
+}
+
+/// Generate the weight-load request stream: `model_bytes` sequential
+/// reads at 64 B granularity, striped across banks the way a DIMM maps
+/// consecutive addresses (row-interleaved within a bank after the
+/// column bits).
+pub fn generate_requests(model_bytes: usize, n: Option<usize>) -> Vec<Request> {
+    let lines = model_bytes.div_ceil(64).max(1);
+    let take = n.unwrap_or(lines).min(lines);
+    (0..take)
+        .map(|i| Request {
+            addr: (i as u64) * 64,
+        })
+        .collect()
+}
+
+/// Bank-state timing simulation of an in-order read stream.
+///
+/// Address mapping: column bits (within a row) → bank → row, so a
+/// sequential stream sweeps a full row in one bank, then moves to the
+/// next bank (bank-interleaved rows hide tRP+tRCD behind transfers).
+pub fn simulate(requests: &[Request], t: &DramTiming, e: &DramEnergy, bus_bits: usize) -> DramReport {
+    if requests.is_empty() {
+        return DramReport::default();
+    }
+    let bytes_per_burst = bus_bits / 8 * t.burst_beats; // x64 BL8 = 64 B
+    let bursts_per_row = (t.row_bytes * 8) / (bus_bits * t.burst_beats); // per x-width row slice
+
+    let mut bank_row: Vec<Option<u64>> = vec![None; t.banks];
+    let mut bank_ready: Vec<u64> = vec![0; t.banks]; // cycle bank can ACT
+    let mut bus_free: u64 = 0;
+    let mut act_times: std::collections::VecDeque<u64> = Default::default();
+
+    let (mut acts, mut hits, mut bursts) = (0u64, 0u64, 0u64);
+    let mut now: u64 = 0;
+
+    for r in requests {
+        let line = r.addr / bytes_per_burst as u64;
+        let bank = (line / bursts_per_row as u64) as usize % t.banks;
+        let row = line / (bursts_per_row as u64 * t.banks as u64);
+
+        let mut issue = now;
+        if bank_row[bank] != Some(row) {
+            // precharge + activate
+            let mut act_at = issue.max(bank_ready[bank]);
+            // tFAW: at most 4 ACTs in any tFAW window
+            if act_times.len() == 4 {
+                let oldest = *act_times.front().unwrap();
+                act_at = act_at.max(oldest + t.tfaw);
+                act_times.pop_front();
+            }
+            act_times.push_back(act_at);
+            let prp = if bank_row[bank].is_some() { t.trp } else { 0 };
+            issue = act_at + prp + t.trcd;
+            bank_row[bank] = Some(row);
+            bank_ready[bank] = act_at + prp + t.tras;
+            acts += 1;
+        } else {
+            hits += 1;
+        }
+        // CAS latency is pipelined; the bus is occupied tCCD per burst
+        let data_at = (issue + t.cl).max(bus_free);
+        bus_free = data_at + t.tccd;
+        bursts += 1;
+        now = issue; // next command no earlier than this request's issue
+    }
+    let completion = bus_free + t.tccd;
+    let latency_ns = completion as f64 * t.tck_ns;
+
+    let io_bytes = (bursts as usize * bytes_per_burst) as f64;
+    let energy_pj = acts as f64 * e.act_pre_pj
+        + bursts as f64 * e.rd_burst_pj
+        + io_bytes * e.io_pj_per_byte
+        + e.background_mw * latency_ns / 1.0e3; // mW·ns = pJ/1000… (mW=pJ/ns)
+
+    DramReport {
+        latency_ns,
+        energy_pj,
+        requests: requests.len() as u64,
+        row_hit_rate: hits as f64 / requests.len() as f64,
+        simulated_fraction: 1.0,
+    }
+}
+
+/// Full engine entry point: generate requests for the DNN's weights,
+/// simulate `cfg.dram.subset_fraction` of them, extrapolate (Fig. 7a's
+/// speed/accuracy trade).
+pub fn estimate(stats: &DnnStats, cfg: &SiamConfig) -> DramReport {
+    estimate_with(stats.model_bytes(cfg.dnn.weight_precision), &cfg.dram)
+}
+
+pub fn estimate_with(model_bytes: usize, dc: &DramConfig) -> DramReport {
+    let (t, e) = params(dc.kind);
+    let total_lines = model_bytes.div_ceil(64).max(1);
+    let sim_lines = ((total_lines as f64 * dc.subset_fraction).ceil() as usize).max(1);
+    let reqs = generate_requests(model_bytes, Some(sim_lines));
+    let mut rep = simulate(&reqs, &t, &e, dc.bus_bits);
+    let scale = total_lines as f64 / sim_lines as f64;
+    rep.latency_ns *= scale;
+    rep.energy_pj *= scale;
+    rep.requests = total_lines as u64;
+    rep.simulated_fraction = 1.0 / scale;
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DramConfig, DramKind};
+
+    fn dc(kind: DramKind, frac: f64) -> DramConfig {
+        DramConfig {
+            kind,
+            bus_bits: 64,
+            subset_fraction: frac,
+        }
+    }
+
+    #[test]
+    fn sequential_stream_hits_rows() {
+        let (t, e) = timing::ddr4();
+        let reqs = generate_requests(1 << 20, None); // 1 MB
+        let rep = simulate(&reqs, &t, &e, 64);
+        assert!(rep.row_hit_rate > 0.85, "hit rate {}", rep.row_hit_rate);
+    }
+
+    #[test]
+    fn bandwidth_bounded_by_bus() {
+        // sequential reads approach the x64 DDR4-2400 peak (19.2 GB/s);
+        // tCCD_L (6 cycles per 64 B) caps us at ~12.8 GB/s
+        let (t, e) = timing::ddr4();
+        let bytes = 8 << 20;
+        let rep = simulate(&generate_requests(bytes, None), &t, &e, 64);
+        let gbs = bytes as f64 / rep.latency_ns; // B/ns = GB/s
+        assert!((6.0..20.0).contains(&gbs), "throughput {gbs} GB/s");
+    }
+
+    #[test]
+    fn subset_extrapolation_accurate() {
+        // Fig. 7a: 50% of instructions => <2% EDP error
+        let bytes = 3000 * 64; // "3000 DRAM instructions"
+        let full = estimate_with(bytes, &dc(DramKind::Ddr4, 1.0));
+        let half = estimate_with(bytes, &dc(DramKind::Ddr4, 0.5));
+        let err = (half.edp() - full.edp()).abs() / full.edp();
+        assert!(err < 0.02, "EDP error {err}");
+    }
+
+    #[test]
+    fn subset_runs_fewer_requests() {
+        let bytes = 1 << 22;
+        let half = estimate_with(bytes, &dc(DramKind::Ddr4, 0.5));
+        assert!((half.simulated_fraction - 0.5).abs() < 0.01);
+        assert_eq!(half.requests as usize, bytes / 64);
+    }
+
+    #[test]
+    fn ddr3_higher_energy_than_ddr4() {
+        let bytes = 1 << 22;
+        let e3 = estimate_with(bytes, &dc(DramKind::Ddr3, 1.0));
+        let e4 = estimate_with(bytes, &dc(DramKind::Ddr4, 1.0));
+        assert!(e3.energy_pj > e4.energy_pj);
+    }
+
+    #[test]
+    fn edp_grows_superlinearly_with_model_size() {
+        // Fig. 7b: exponential EDP growth with DNN size (E and T both
+        // grow ~linearly => EDP ~quadratically)
+        let small = estimate_with(1 << 20, &dc(DramKind::Ddr4, 1.0));
+        let big = estimate_with(16 << 20, &dc(DramKind::Ddr4, 1.0));
+        let ratio = big.edp() / small.edp();
+        assert!(ratio > 100.0, "EDP ratio {ratio} for 16x model size");
+    }
+
+    #[test]
+    fn empty_model_safe() {
+        let rep = estimate_with(0, &dc(DramKind::Ddr4, 0.5));
+        assert!(rep.latency_ns >= 0.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! DDR3/DDR4 device timing + per-event energy parameters (Micron
+//! datasheets [26][27], the same sources the paper's customized
+//! RAMULATOR/VAMPIRE use).
+
+use crate::config::DramKind;
+
+#[derive(Debug, Clone, Copy)]
+pub struct DramTiming {
+    /// Clock period, ns (command clock).
+    pub tck_ns: f64,
+    /// CAS latency, cycles.
+    pub cl: u64,
+    /// RAS-to-CAS delay, cycles.
+    pub trcd: u64,
+    /// Row precharge, cycles.
+    pub trp: u64,
+    /// Row active minimum, cycles.
+    pub tras: u64,
+    /// Column-to-column delay (burst occupancy on the data bus), cycles.
+    pub tccd: u64,
+    /// Four-activate window, cycles.
+    pub tfaw: u64,
+    /// Banks (DDR4: bank groups × banks/group).
+    pub banks: usize,
+    /// Row (page) size, bytes.
+    pub row_bytes: usize,
+    /// Burst length in beats (BL8).
+    pub burst_beats: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct DramEnergy {
+    /// One ACT+PRE pair, pJ.
+    pub act_pre_pj: f64,
+    /// One read burst (core array + peripheral), pJ.
+    pub rd_burst_pj: f64,
+    /// IO energy per byte driven on the bus, pJ/B.
+    pub io_pj_per_byte: f64,
+    /// Background (standby) power, mW.
+    pub background_mw: f64,
+}
+
+/// DDR3-1600 (MT41K256M8, 2 Gb, x8 ranks on a x64 DIMM).
+pub fn ddr3() -> (DramTiming, DramEnergy) {
+    (
+        DramTiming {
+            tck_ns: 1.25,
+            cl: 11,
+            trcd: 11,
+            trp: 11,
+            tras: 28,
+            tccd: 4,
+            tfaw: 32,
+            banks: 8,
+            row_bytes: 2048,
+            burst_beats: 8,
+        },
+        DramEnergy {
+            // IDD0=95 mA, IDD3N=45 mA @1.5 V over tRC≈49 ns
+            act_pre_pj: 2500.0,
+            // (IDD4R−IDD3N)≈110 mA @1.5 V over 5 ns burst
+            rd_burst_pj: 1200.0,
+            io_pj_per_byte: 15.0,
+            background_mw: 60.0,
+        },
+    )
+}
+
+/// DDR4-2400 (MT40A1G4, 4 Gb, x4/x8 on a x64 DIMM).
+pub fn ddr4() -> (DramTiming, DramEnergy) {
+    (
+        DramTiming {
+            tck_ns: 0.833,
+            cl: 17,
+            trcd: 17,
+            trp: 17,
+            tras: 39,
+            tccd: 6, // tCCD_L
+            tfaw: 26,
+            banks: 16,
+            row_bytes: 1024,
+            burst_beats: 8,
+        },
+        DramEnergy {
+            // IDD0=55 mA, IDD3N=42 mA @1.2 V over tRC≈47 ns
+            act_pre_pj: 1500.0,
+            // (IDD4R−IDD3N)≈98 mA @1.2 V over 5 ns burst
+            rd_burst_pj: 800.0,
+            io_pj_per_byte: 10.0,
+            background_mw: 45.0,
+        },
+    )
+}
+
+pub fn params(kind: DramKind) -> (DramTiming, DramEnergy) {
+    match kind {
+        DramKind::Ddr3 => ddr3(),
+        DramKind::Ddr4 => ddr4(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddr4_is_faster_but_lower_energy() {
+        let (t3, e3) = ddr3();
+        let (t4, e4) = ddr4();
+        assert!(t4.tck_ns < t3.tck_ns);
+        assert!(e4.act_pre_pj < e3.act_pre_pj);
+        assert!(e4.io_pj_per_byte < e3.io_pj_per_byte);
+        assert!(t4.banks > t3.banks);
+    }
+
+    #[test]
+    fn timing_sanity() {
+        for (t, _) in [ddr3(), ddr4()] {
+            assert!(t.tras >= t.trcd);
+            assert!(t.row_bytes.is_power_of_two());
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Published GPU baselines for the Section-6.5 comparison. All numbers
+//! are adopted from the SIMBA paper [35], exactly as SIAM does: batch-1
+//! ResNet-50 inference on Nvidia V100 and T4.
+
+/// One GPU datapoint (batch-1 ResNet-50 ImageNet inference).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuBaseline {
+    pub name: &'static str,
+    /// Die area, mm².
+    pub area_mm2: f64,
+    /// Board power while inferencing, W.
+    pub power_w: f64,
+    /// Inference throughput at batch 1, images/s.
+    pub throughput_ips: f64,
+}
+
+impl GpuBaseline {
+    /// Energy per inference, mJ.
+    pub fn energy_per_inference_mj(&self) -> f64 {
+        self.power_w / self.throughput_ips * 1e3
+    }
+
+    /// Energy efficiency, inferences/J.
+    pub fn inferences_per_joule(&self) -> f64 {
+        self.throughput_ips / self.power_w
+    }
+}
+
+/// Nvidia V100 (SXM2): 815 mm², 300 W, ≈3.6 inf/J at batch 1 [35].
+pub const V100: GpuBaseline = GpuBaseline {
+    name: "V100",
+    area_mm2: 815.0,
+    power_w: 300.0,
+    throughput_ips: 1080.0,
+};
+
+/// Nvidia T4: 525 mm² (SIAM quotes the board-normalized figure), 70 W,
+/// ≈6.4 inf/J at batch 1 [35].
+pub const T4: GpuBaseline = GpuBaseline {
+    name: "T4",
+    area_mm2: 525.0,
+    power_w: 70.0,
+    throughput_ips: 450.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_energy_per_inference() {
+        // 300 W / 1080 ips ≈ 278 mJ
+        let e = V100.energy_per_inference_mj();
+        assert!((250.0..320.0).contains(&e), "{e}");
+    }
+
+    #[test]
+    fn t4_more_efficient_than_v100() {
+        assert!(T4.inferences_per_joule() > V100.inferences_per_joule());
+    }
+
+    #[test]
+    fn ratio_between_gpus_matches_paper() {
+        // paper: IMC is 130× vs V100 and 72× vs T4 ⇒ V100/T4 energy
+        // ratio ≈ 130/72 ≈ 1.8
+        let r = V100.energy_per_inference_mj() / T4.energy_per_inference_mj();
+        assert!((1.4..2.3).contains(&r), "V100/T4 ratio {r}");
+    }
+}

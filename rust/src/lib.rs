@@ -1,0 +1,49 @@
+//! # SIAM-RS
+//!
+//! A Rust reproduction of **SIAM: Chiplet-based Scalable In-Memory
+//! Acceleration with Mesh for Deep Neural Networks** (Krishnan et al.,
+//! ACM TECS 2021, DOI 10.1145/3476999).
+//!
+//! SIAM is an end-to-end benchmarking simulator for chiplet-based
+//! in-memory-computing (IMC) DNN accelerators. This crate implements the
+//! paper's four engines plus the substrates they need:
+//!
+//! * [`config`] — the Table-2 user inputs (TOML presets in `configs/`).
+//! * [`dnn`] — layer graph + model zoo (ResNet/VGG/DenseNet/LeNet/...).
+//! * [`mapping`] — partition & mapping engine (Eq. 1 + Algorithm 1).
+//! * [`circuit`] — NeuroSim-style bottom-up circuit estimator.
+//! * [`noc`] — cycle-accurate intra-chiplet network simulator.
+//! * [`nop`] — network-on-package engine (wires, TX/RX drivers, router).
+//! * [`dram`] — Ramulator/VAMPIRE-style DDR3/DDR4 access estimator.
+//! * [`cost`] — Appendix-A fabrication cost / yield model.
+//! * [`runtime`] — PJRT executor for the AOT-compiled Pallas crossbar
+//!   kernels (functional inference mode; Python never serves).
+//! * [`coordinator`] — orchestration, design-space exploration, reports.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use siam::config::SiamConfig;
+//! use siam::coordinator::simulate;
+//!
+//! let cfg = SiamConfig::paper_default();
+//! let report = simulate(&cfg).unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod circuit;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod dnn;
+pub mod dram;
+pub mod gpu_baseline;
+pub mod mapping;
+pub mod metrics;
+pub mod noc;
+pub mod nop;
+pub mod runtime;
+pub mod util;
+
+pub use config::SiamConfig;
+pub use metrics::Metrics;

@@ -1,0 +1,193 @@
+//! SIAM command-line launcher.
+//!
+//! ```text
+//! siam simulate  [--config F] [--model M --dataset D] [--tiles N]
+//!                [--chiplets N] [--monolithic] [--json PATH]
+//! siam sweep     [--config F] [--model M --dataset D]
+//!                [--tiles 4,9,16,25,36] [--counts 16,36,64,100]
+//! siam functional [--artifacts DIR] [--adc 8] [--seed 42]
+//! siam models
+//! siam config    (print the paper-default TOML)
+//! ```
+//!
+//! Argument parsing is in-tree (the offline build vendors no clap).
+
+use anyhow::{bail, Context, Result};
+use siam::config::{ChipMode, SiamConfig};
+use siam::coordinator::{self, simulate};
+use siam::util::table::{eng, Table};
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)> {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            // boolean flags take no value
+            if matches!(name, "monolithic" | "help") {
+                flags.insert(name.to_string(), "true".into());
+                i += 1;
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .with_context(|| format!("--{name} needs a value"))?;
+                flags.insert(name.to_string(), v.clone());
+                i += 2;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    Ok((pos, flags))
+}
+
+fn build_config(flags: &HashMap<String, String>) -> Result<SiamConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => SiamConfig::from_toml_file(path)?,
+        None => SiamConfig::paper_default(),
+    };
+    if let Some(m) = flags.get("model") {
+        cfg.dnn.model = m.clone();
+    }
+    if let Some(d) = flags.get("dataset") {
+        cfg.dnn.dataset = d.clone();
+    }
+    if let Some(t) = flags.get("tiles") {
+        cfg.chiplet.tiles_per_chiplet = t.parse().context("--tiles")?;
+    }
+    if let Some(c) = flags.get("chiplets") {
+        cfg = cfg.with_total_chiplets(c.parse().context("--chiplets")?);
+    }
+    if flags.contains_key("monolithic") {
+        cfg.system.chip_mode = ChipMode::Monolithic;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn parse_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|p| p.trim().parse::<usize>().context("bad list element"))
+        .collect()
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = build_config(flags)?;
+    let rep = simulate(&cfg)?;
+    println!("{}", rep.summary());
+    if let Some(path) = flags.get("json") {
+        std::fs::write(path, rep.to_json().to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = build_config(flags)?;
+    let tiles = parse_list(flags.get("tiles").map(String::as_str).unwrap_or("4,9,16,25,36"))?;
+    let counts: Vec<Option<usize>> = match flags.get("counts") {
+        Some(c) => parse_list(c)?.into_iter().map(Some).chain([None]).collect(),
+        None => vec![None],
+    };
+    let pts = coordinator::sweep(&cfg, &tiles, &counts)?;
+    let mut t = Table::new(&[
+        "tiles/chiplet",
+        "chiplets",
+        "area mm2",
+        "energy uJ",
+        "latency ms",
+        "EDAP",
+    ]);
+    for p in &pts {
+        t.row(&[
+            p.tiles_per_chiplet.to_string(),
+            p.total_chiplets
+                .map(|c| c.to_string())
+                .unwrap_or_else(|| format!("custom({})", p.report.num_chiplets)),
+            eng(p.report.total.area_mm2()),
+            eng(p.report.total.energy_uj()),
+            eng(p.report.total.latency_ms()),
+            format!("{:.3e}", p.report.total.edap()),
+        ]);
+    }
+    t.print();
+    if let Some(best) = coordinator::dse::best_by_edap(&pts) {
+        println!(
+            "\nEDAP-optimal: {} tiles/chiplet, {} chiplets",
+            best.tiles_per_chiplet, best.report.num_chiplets
+        );
+    }
+    Ok(())
+}
+
+fn cmd_functional(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let adc: u8 = flags.get("adc").map(String::as_str).unwrap_or("8").parse()?;
+    let seed: u64 = flags.get("seed").map(String::as_str).unwrap_or("42").parse()?;
+    let rt = siam::runtime::Runtime::open(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let run = siam::runtime::functional::run_cnn(&rt, adc, seed)?;
+    println!(
+        "functional CNN (batch {}, ADC {} bits) in {:.3}s:",
+        run.batch, run.adc_bits, run.exec_seconds
+    );
+    for b in 0..run.batch {
+        let row = &run.logits[b * run.classes..(b + 1) * run.classes];
+        let strs: Vec<String> = row.iter().map(|v| format!("{v:+.3}")).collect();
+        println!("  image {b}: [{}] -> class {}", strs.join(", "), run.argmax()[b]);
+    }
+    Ok(())
+}
+
+fn cmd_models() -> Result<()> {
+    let mut t = Table::new(&["model", "dataset", "params (M)", "MACs (G)", "layers"]);
+    for name in siam::dnn::zoo_names() {
+        let ds = match *name {
+            "resnet50" | "vgg16" => "imagenet",
+            "vgg19" => "cifar100",
+            "drivenet" => "drivenet",
+            _ => "cifar10",
+        };
+        let dnn = siam::dnn::build_model(name, ds)?;
+        let s = dnn.stats();
+        t.row(&[
+            name.to_string(),
+            ds.to_string(),
+            format!("{:.2}", s.params as f64 / 1e6),
+            format!("{:.2}", s.macs as f64 / 1e9),
+            s.total_layers.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+const USAGE: &str = "usage: siam <simulate|sweep|functional|models|config> [flags]
+  simulate   --model resnet110 --dataset cifar10 [--tiles 16] [--chiplets 36]
+             [--monolithic] [--config file.toml] [--json out.json]
+  sweep      --model resnet110 --dataset cifar10 [--tiles 4,9,16] [--counts 36,64]
+  functional [--artifacts artifacts] [--adc 4|8] [--seed 42]
+  models     list the model zoo
+  config     print the paper-default configuration TOML";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args)?;
+    if flags.contains_key("help") || pos.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match pos[0].as_str() {
+        "simulate" => cmd_simulate(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "functional" => cmd_functional(&flags),
+        "models" => cmd_models(),
+        "config" => {
+            print!("{}", SiamConfig::paper_default().to_toml_string()?);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}

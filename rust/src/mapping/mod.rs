@@ -1,0 +1,110 @@
+//! Partition & mapping engine (Section 4.2 of the paper).
+//!
+//! Implements Eq. 1 (layer → crossbar rows/columns), Algorithm 1
+//! (layer-wise partitioning onto chiplets, homogeneous and custom), the
+//! crossbar/cell utilization accounting of Fig. 9, the inter-/intra-
+//! chiplet traffic volumes, and the global accumulator/buffer access
+//! counts that feed the circuit, NoC and NoP engines.
+
+mod partition;
+mod placement;
+mod traffic;
+
+pub use partition::{map_dnn, ChipletShare, LayerMapping, MappingError, MappingResult};
+pub use placement::Placement;
+pub use traffic::{build_traffic, Flow, Traffic};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipletStructure, SiamConfig};
+    use crate::dnn::build_model;
+
+    fn cfg() -> SiamConfig {
+        SiamConfig::paper_default()
+    }
+
+    #[test]
+    fn resnet110_custom_mapping_is_consistent() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg()).unwrap();
+        // every weight layer mapped, shares sum to layer totals
+        assert_eq!(map.per_layer.len(), dnn.weight_layers().len());
+        for lm in &map.per_layer {
+            let sum: usize = lm.chiplets.iter().map(|c| c.xbars).sum();
+            assert_eq!(sum, lm.xbars, "layer {} shares", lm.layer_idx);
+            assert_eq!(lm.xbars, lm.rows * lm.cols);
+        }
+        // no chiplet over capacity
+        let s = cfg().chiplet_size_xbars();
+        for (c, used) in map.chiplet_used_xbars.iter().enumerate() {
+            assert!(*used <= s, "chiplet {c} over capacity: {used} > {s}");
+        }
+        assert!(map.num_chiplets > 0);
+        assert!(map.xbar_utilization() > 0.3 && map.xbar_utilization() <= 1.0);
+    }
+
+    #[test]
+    fn paper_resnet50_tile_count() {
+        // Paper Section 1: ResNet-50, 8-bit, 128x128 crossbars, 16
+        // crossbars per tile => 802 tiles. Our mapping must land close
+        // (exact packing differs slightly from [34]'s).
+        let dnn = build_model("resnet50", "imagenet").unwrap();
+        let map = map_dnn(&dnn, &cfg()).unwrap();
+        let xbars: usize = map.per_layer.iter().map(|l| l.xbars).sum();
+        let tiles = xbars.div_ceil(16);
+        assert!(
+            (700..=900).contains(&tiles),
+            "ResNet-50 tiles {tiles} not near the paper's 802"
+        );
+    }
+
+    #[test]
+    fn homogeneous_rejects_overflow() {
+        let dnn = build_model("resnet50", "imagenet").unwrap();
+        let cfg = cfg()
+            .with_chiplet_structure(ChipletStructure::Homogeneous)
+            .with_total_chiplets(4);
+        match map_dnn(&dnn, &cfg) {
+            Err(MappingError::ExceedsChiplets { required, available }) => {
+                assert!(required > available);
+                assert_eq!(available, 4);
+            }
+            other => panic!("expected overflow error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn homogeneous_spreads_across_all_chiplets() {
+        // Fig. 4 left: the generic architecture distributes the DNN over
+        // the whole fixed array (more chiplets in use than custom needs).
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let custom = map_dnn(&dnn, &cfg()).unwrap();
+        let homog = map_dnn(
+            &dnn,
+            &cfg().with_total_chiplets(custom.num_chiplets_required + 10),
+        )
+        .unwrap();
+        assert_eq!(homog.num_chiplets, custom.num_chiplets_required + 10);
+        assert!(
+            homog.num_chiplets_required > custom.num_chiplets_required,
+            "homogeneous should spread: {} vs {}",
+            homog.num_chiplets_required,
+            custom.num_chiplets_required
+        );
+    }
+
+    #[test]
+    fn utilization_improves_with_smaller_chiplets() {
+        // Fig. 9 trend: fewer tiles per chiplet -> finer allocation
+        // granularity -> utilization can only stay equal or improve.
+        let dnn = build_model("vgg16", "imagenet").unwrap();
+        let u4 = map_dnn(&dnn, &cfg().with_tiles_per_chiplet(4))
+            .unwrap()
+            .xbar_utilization();
+        let u36 = map_dnn(&dnn, &cfg().with_tiles_per_chiplet(36))
+            .unwrap()
+            .xbar_utilization();
+        assert!(u4 >= u36 - 0.05, "u4={u4} u36={u36}");
+    }
+}

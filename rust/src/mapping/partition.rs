@@ -1,0 +1,380 @@
+//! Algorithm 1: layer-wise partition of a DNN onto IMC chiplets.
+
+use crate::config::{ChipMode, ChipletStructure, SiamConfig};
+use crate::dnn::Dnn;
+
+/// Crossbars a layer occupies on one chiplet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChipletShare {
+    pub chiplet: usize,
+    pub xbars: usize,
+}
+
+/// Mapping of one weight-bearing layer (Eq. 1 + Algorithm 1 lines 4-9).
+#[derive(Debug, Clone)]
+pub struct LayerMapping {
+    /// Index into `dnn.layers`.
+    pub layer_idx: usize,
+    /// N_i^r — rows of crossbars.
+    pub rows: usize,
+    /// N_i^c — columns of crossbars.
+    pub cols: usize,
+    /// N_i^Total = rows × cols.
+    pub xbars: usize,
+    /// Chiplets hosting the layer and how many crossbars on each
+    /// (uniform split per the paper's workload-balance rule).
+    pub chiplets: Vec<ChipletShare>,
+    /// Fraction of programmed cells within the allocated crossbars.
+    pub cell_utilization: f64,
+}
+
+impl LayerMapping {
+    /// Does this layer span more than one chiplet (global accumulator on)?
+    pub fn spans_chiplets(&self) -> bool {
+        self.chiplets.len() > 1
+    }
+
+    /// Tiles the layer occupies on a given chiplet.
+    pub fn tiles_on(&self, chiplet: usize, xbars_per_tile: usize) -> usize {
+        self.chiplets
+            .iter()
+            .find(|s| s.chiplet == chiplet)
+            .map(|s| s.xbars.div_ceil(xbars_per_tile))
+            .unwrap_or(0)
+    }
+}
+
+/// Output of the partition & mapping engine.
+#[derive(Debug, Clone)]
+pub struct MappingResult {
+    /// Per weight-layer mapping, in execution order.
+    pub per_layer: Vec<LayerMapping>,
+    /// Chiplets the architecture *contains* (= required for custom,
+    /// user-fixed for homogeneous).
+    pub num_chiplets: usize,
+    /// Chiplets the DNN actually occupies.
+    pub num_chiplets_required: usize,
+    /// Crossbars used per chiplet (length = num_chiplets).
+    pub chiplet_used_xbars: Vec<usize>,
+    /// Crossbars per chiplet (S).
+    pub chiplet_capacity: usize,
+}
+
+impl MappingResult {
+    /// Fig. 9 metric: used crossbars over allocated capacity in *used*
+    /// chiplets.
+    pub fn xbar_utilization(&self) -> f64 {
+        let used: usize = self.chiplet_used_xbars.iter().sum();
+        let cap = self.num_chiplets_required * self.chiplet_capacity;
+        if cap == 0 {
+            0.0
+        } else {
+            used as f64 / cap as f64
+        }
+    }
+
+    /// Cell-level utilization: programmed cells over cells in allocated
+    /// crossbars (accounts for partially-filled edge crossbars).
+    pub fn cell_utilization(&self) -> f64 {
+        let (mut used, mut cap) = (0.0, 0.0);
+        for lm in &self.per_layer {
+            used += lm.cell_utilization * lm.xbars as f64;
+            cap += lm.xbars as f64;
+        }
+        if cap == 0.0 {
+            0.0
+        } else {
+            used / cap
+        }
+    }
+
+    /// Total crossbars mapped.
+    pub fn total_xbars(&self) -> usize {
+        self.per_layer.iter().map(|l| l.xbars).sum()
+    }
+
+    /// Total IMC tiles (for comparisons against [34]'s tile counts).
+    pub fn total_tiles(&self, xbars_per_tile: usize) -> usize {
+        self.total_xbars().div_ceil(xbars_per_tile)
+    }
+}
+
+/// Errors from Algorithm 1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MappingError {
+    /// Homogeneous architecture too small (Algorithm 1 line 12).
+    ExceedsChiplets { required: usize, available: usize },
+    /// The DNN has no weight layers.
+    EmptyDnn,
+}
+
+impl std::fmt::Display for MappingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MappingError::ExceedsChiplets {
+                required,
+                available,
+            } => write!(
+                f,
+                "DNN requires {required} chiplets but the homogeneous architecture \
+                 provides only {available}; increase total_chiplets"
+            ),
+            MappingError::EmptyDnn => write!(f, "DNN contains no weight layers"),
+        }
+    }
+}
+
+impl std::error::Error for MappingError {}
+
+/// Eq. 1: crossbar rows/columns for a layer, including multi-bit cells
+/// and optional weight sparsity (rows compress).
+pub fn eq1_rows_cols(
+    weight_rows: usize,
+    weight_cols: usize,
+    weight_bits: u8,
+    bits_per_cell: u8,
+    xbar_rows: usize,
+    xbar_cols: usize,
+    sparsity: f64,
+) -> (usize, usize, f64) {
+    let eff_rows = ((weight_rows as f64) * (1.0 - sparsity)).ceil().max(1.0) as usize;
+    let cols_per_weight = (weight_bits as usize).div_ceil(bits_per_cell as usize);
+    let total_cols = weight_cols * cols_per_weight;
+    let n_r = eff_rows.div_ceil(xbar_rows);
+    let n_c = total_cols.div_ceil(xbar_cols);
+    // programmed cells / allocated cells
+    let util = (eff_rows * total_cols) as f64 / ((n_r * xbar_rows) * (n_c * xbar_cols)) as f64;
+    (n_r, n_c, util)
+}
+
+/// Algorithm 1 with the paper's packing rules:
+/// * a layer needing more than one chiplet gets dedicated chiplets with a
+///   uniform split (workload balance);
+/// * custom mode packs small layers into shared chiplets (first-fit into
+///   the open chiplet) for high utilization and allocates exactly the
+///   required count;
+/// * homogeneous mode spreads the layers round-robin across *all* of the
+///   user-fixed chiplets (Fig. 4 left: the generic architecture uses the
+///   whole array, leaving unused crossbars inside chiplets) and errors
+///   out if the DNN does not fit.
+///
+/// Monolithic chip mode maps everything onto one "chiplet" with unbounded
+/// capacity (used for the Fig. 1/13 baselines).
+pub fn map_dnn(dnn: &Dnn, cfg: &SiamConfig) -> Result<MappingResult, MappingError> {
+    let widx = dnn.weight_layers();
+    if widx.is_empty() {
+        return Err(MappingError::EmptyDnn);
+    }
+    let s = cfg.chiplet_size_xbars();
+    let monolithic = cfg.system.chip_mode == ChipMode::Monolithic;
+    let homogeneous = !monolithic && cfg.system.structure == ChipletStructure::Homogeneous;
+    let fixed_count = cfg.system.total_chiplets.unwrap_or(0);
+
+    // ---- pass 1: Eq. 1 geometry for every weight layer
+    let mut geom = Vec::with_capacity(widx.len());
+    for (li, &idx) in widx.iter().enumerate() {
+        let layer = &dnn.layers[idx];
+        let sparsity = cfg
+            .dnn
+            .sparsity
+            .as_ref()
+            .and_then(|v| v.get(li))
+            .copied()
+            .unwrap_or(0.0);
+        geom.push((
+            idx,
+            eq1_rows_cols(
+                layer.weight_rows(),
+                layer.weight_cols(),
+                cfg.dnn.weight_precision,
+                cfg.device.bits_per_cell,
+                cfg.chiplet.xbar_rows,
+                cfg.chiplet.xbar_cols,
+                sparsity,
+            ),
+        ));
+    }
+    let total_all: usize = geom.iter().map(|(_, (r, c, _))| r * c).sum();
+
+    // ---- pass 2: sequential packing at an effective capacity.
+    // Custom: capacity = S (exactly the required chiplets are built).
+    // Homogeneous: the DNN is balanced over the *whole* fixed array, so
+    // the effective capacity shrinks to ~N_total/C (Fig. 4 left: generic
+    // architectures leave unused crossbars in every chiplet). If packing
+    // fragmentation overflows the array, the capacity is relaxed toward
+    // S before giving up (Algorithm 1's error path).
+    let pack = |cap: usize| -> (Vec<LayerMapping>, Vec<usize>) {
+        let mut per_layer = Vec::with_capacity(geom.len());
+        let mut used: Vec<usize> = Vec::new();
+        let mut open: Option<usize> = None;
+        for &(idx, (rows, cols, cell_util)) in &geom {
+            let total = rows * cols;
+            let chiplets = if monolithic {
+                if used.is_empty() {
+                    used.push(0);
+                }
+                used[0] += total;
+                vec![ChipletShare {
+                    chiplet: 0,
+                    xbars: total,
+                }]
+            } else if let Some(oc) = open.filter(|&oc| used[oc] + total <= cap) {
+                used[oc] += total;
+                if used[oc] == cap {
+                    open = None;
+                }
+                vec![ChipletShare {
+                    chiplet: oc,
+                    xbars: total,
+                }]
+            } else {
+                let n_chip = total.div_ceil(cap);
+                let base = total / n_chip;
+                let extra = total % n_chip;
+                let mut shares = Vec::with_capacity(n_chip);
+                for j in 0..n_chip {
+                    let x = base + usize::from(j < extra);
+                    let id = used.len();
+                    used.push(x);
+                    shares.push(ChipletShare {
+                        chiplet: id,
+                        xbars: x,
+                    });
+                }
+                let last = shares.last().unwrap();
+                open = (used[last.chiplet] < cap).then_some(last.chiplet);
+                shares
+            };
+            per_layer.push(LayerMapping {
+                layer_idx: idx,
+                rows,
+                cols,
+                xbars: total,
+                chiplets,
+                cell_utilization: cell_util,
+            });
+        }
+        (per_layer, used)
+    };
+
+    let (per_layer, mut used) = if monolithic {
+        pack(usize::MAX)
+    } else if homogeneous {
+        if fixed_count == 0 {
+            return Err(MappingError::ExceedsChiplets {
+                required: 1,
+                available: 0,
+            });
+        }
+        // Balance over the array, with a locality floor of S/4: the
+        // generic architecture both *spreads* the DNN across the fixed
+        // array (Fig. 14b: more chiplets => longer paths) and
+        // *localizes* more when chiplets are bigger (Fig. 11b: NoP cost
+        // falls with tiles/chiplet). Relax on fragmentation.
+        let mut cap = total_all
+            .div_ceil(fixed_count)
+            .max(s.div_ceil(4))
+            .max(1)
+            .min(s);
+        loop {
+            let (pl, u) = pack(cap);
+            if u.len() <= fixed_count {
+                break (pl, u);
+            }
+            if cap >= s {
+                return Err(MappingError::ExceedsChiplets {
+                    required: u.len(),
+                    available: fixed_count,
+                });
+            }
+            cap = (cap + cap / 4 + 1).min(s);
+        }
+    } else {
+        pack(s)
+    };
+
+    let required = used.len();
+    let num_chiplets = if monolithic {
+        1
+    } else if homogeneous {
+        fixed_count
+    } else {
+        required
+    };
+    used.resize(num_chiplets, 0);
+
+    Ok(MappingResult {
+        per_layer,
+        num_chiplets,
+        num_chiplets_required: required,
+        chiplet_used_xbars: used,
+        chiplet_capacity: if monolithic { usize::MAX } else { s },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SiamConfig;
+    use crate::dnn::build_model;
+
+    #[test]
+    fn eq1_matches_paper_example() {
+        // ResNet-50 conv example from Section 1: 8-bit, 128x128 crossbars.
+        // res2a_branch2b: 3x3x64 -> 64: rows=576 -> N_r=5, cols=64*8=512
+        // -> N_c=4 => 20 crossbars.
+        let (r, c, util) = eq1_rows_cols(576, 64, 8, 1, 128, 128, 0.0);
+        assert_eq!((r, c), (5, 4));
+        assert!(util > 0.85 && util <= 1.0);
+    }
+
+    #[test]
+    fn eq1_multibit_cells_halve_columns() {
+        let (_, c1, _) = eq1_rows_cols(128, 64, 8, 1, 128, 128, 0.0);
+        let (_, c2, _) = eq1_rows_cols(128, 64, 8, 2, 128, 128, 0.0);
+        assert_eq!(c1, 4);
+        assert_eq!(c2, 2);
+    }
+
+    #[test]
+    fn eq1_sparsity_compresses_rows() {
+        let (r0, _, _) = eq1_rows_cols(1024, 64, 8, 1, 128, 128, 0.0);
+        let (r5, _, _) = eq1_rows_cols(1024, 64, 8, 1, 128, 128, 0.5);
+        assert_eq!(r0, 8);
+        assert_eq!(r5, 4);
+    }
+
+    #[test]
+    fn uniform_split_balances_within_one_xbar() {
+        let dnn = build_model("vgg16", "imagenet").unwrap();
+        let map = map_dnn(&dnn, &SiamConfig::paper_default()).unwrap();
+        for lm in &map.per_layer {
+            if lm.spans_chiplets() {
+                let min = lm.chiplets.iter().map(|c| c.xbars).min().unwrap();
+                let max = lm.chiplets.iter().map(|c| c.xbars).max().unwrap();
+                assert!(max - min <= 1, "imbalanced split {min}..{max}");
+            }
+        }
+    }
+
+    #[test]
+    fn monolithic_uses_single_chip() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let cfg = SiamConfig::paper_default().with_chip_mode(crate::config::ChipMode::Monolithic);
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        assert_eq!(map.num_chiplets, 1);
+        assert!(map.per_layer.iter().all(|l| !l.spans_chiplets()));
+    }
+
+    #[test]
+    fn small_layers_share_chiplets() {
+        // LeNet-5 is tiny: everything must fit in very few chiplets.
+        let dnn = build_model("lenet5", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &SiamConfig::paper_default()).unwrap();
+        assert!(
+            map.num_chiplets_required <= 2,
+            "lenet used {} chiplets",
+            map.num_chiplets_required
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! Chiplet placement on the interposer mesh.
+//!
+//! Chiplets are placed row-major on the smallest square mesh that holds
+//! them (the paper places chiplets "to achieve the least Manhattan
+//! distance" for the sequential layer chain — row-major snake order is
+//! the optimal sequential embedding on a mesh). Two special nodes are
+//! appended: the global accumulator/buffer and the DRAM chiplet, attached
+//! at the mesh boundary (Fig. 2 of the paper).
+
+
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// Mesh width (columns).
+    pub width: usize,
+    /// Mesh height (rows), including the extra row for special nodes if
+    /// needed.
+    pub height: usize,
+    /// Number of compute chiplets.
+    pub chiplets: usize,
+    /// Node id of the global accumulator + buffer.
+    pub accumulator_node: usize,
+    /// Node id of the DRAM chiplet.
+    pub dram_node: usize,
+}
+
+impl Placement {
+    /// Place `chiplets` compute chiplets plus the two special nodes.
+    pub fn new(chiplets: usize) -> Placement {
+        assert!(chiplets > 0);
+        // smallest square that holds the compute chiplets
+        let side = (chiplets as f64).sqrt().ceil() as usize;
+        let width = side.max(1);
+        // special nodes go into the remaining slots of the square, or an
+        // extra row below it.
+        let total = chiplets + 2;
+        let height = total.div_ceil(width);
+        Placement {
+            width,
+            height,
+            chiplets,
+            accumulator_node: chiplets,
+            dram_node: chiplets + 1,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.chiplets + 2
+    }
+
+    /// (row, col) of a node id. Row-major snake order: odd rows run
+    /// right-to-left so consecutive ids are always mesh neighbours.
+    pub fn coord(&self, node: usize) -> (usize, usize) {
+        let r = node / self.width;
+        let c = node % self.width;
+        if r % 2 == 0 {
+            (r, c)
+        } else {
+            (r, self.width - 1 - c)
+        }
+    }
+
+    /// Manhattan hop distance between two nodes.
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ra, ca) = self.coord(a);
+        let (rb, cb) = self.coord(b);
+        ra.abs_diff(rb) + ca.abs_diff(cb)
+    }
+
+    /// Total links in the mesh (for area accounting): 2·W·H − W − H.
+    pub fn links(&self) -> usize {
+        let (w, h) = (self.width, self.height);
+        2 * w * h - w - h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_placement() {
+        let p = Placement::new(16);
+        assert_eq!(p.width, 4);
+        assert_eq!(p.nodes(), 18);
+        assert!(p.height >= 5); // 16 compute + 2 specials need a 5th row
+    }
+
+    #[test]
+    fn snake_order_keeps_neighbours_adjacent() {
+        let p = Placement::new(16);
+        for i in 0..15 {
+            assert_eq!(p.hops(i, i + 1), 1, "nodes {i},{} not adjacent", i + 1);
+        }
+    }
+
+    #[test]
+    fn hops_symmetric_and_zero_on_self() {
+        let p = Placement::new(9);
+        assert_eq!(p.hops(0, 0), 0);
+        assert_eq!(p.hops(0, 8), p.hops(8, 0));
+    }
+
+    #[test]
+    fn single_chiplet() {
+        let p = Placement::new(1);
+        assert_eq!(p.width, 1);
+        assert_eq!(p.nodes(), 3);
+        assert_eq!(p.coord(2), (2, 0));
+    }
+
+    #[test]
+    fn link_count() {
+        let p = Placement::new(16); // 4 wide, >=5 tall
+        let expected = 2 * p.width * p.height - p.width - p.height;
+        assert_eq!(p.links(), expected);
+    }
+}

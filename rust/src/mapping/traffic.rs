@@ -1,0 +1,383 @@
+//! Traffic generation — Algorithm 2 of the paper, at both granularities:
+//! tile-level flows inside each chiplet (NoC) and chiplet-level flows on
+//! the interposer (NoP), plus the global accumulator / buffer access
+//! counts the circuit engine needs.
+//!
+//! Traces are *flow-compressed*: Algorithm 2 enumerates packets
+//! `(s, d, k)` with `k` advancing once per source iteration and once per
+//! packet round; packet `n` of pair `(s, d)` is injected at
+//! `n·(n_src+1) + s_idx`. A [`Flow`] stores `(src, dst, count, start,
+//! stride)` instead of materializing billions of tuples; the network
+//! simulators consume flows directly.
+
+use super::partition::MappingResult;
+use super::placement::Placement;
+use crate::config::SiamConfig;
+use crate::dnn::{Dnn, LayerKind};
+
+/// A compressed packet sequence between one source and one destination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flow {
+    pub src: u32,
+    pub dst: u32,
+    /// Number of packets.
+    pub count: u64,
+    /// Injection cycle of the first packet.
+    pub start: u64,
+    /// Cycles between consecutive packets of this flow.
+    pub stride: u64,
+}
+
+impl Flow {
+    pub fn total_packets(flows: &[Flow]) -> u64 {
+        flows.iter().map(|f| f.count).sum()
+    }
+}
+
+/// One timestamp epoch (Algorithm 2 resets k per layer pair).
+pub type Epoch = Vec<Flow>;
+
+/// An epoch tagged with the weight-layer position that produced it, so
+/// the coordinator can overlap epochs belonging to the same layer
+/// (chiplets of one layer communicate in parallel) while serializing
+/// across layers.
+#[derive(Debug, Clone)]
+pub struct LabeledEpoch {
+    /// Position in the weight-layer sequence.
+    pub layer: usize,
+    /// Chiplet the epoch runs on (NoC epochs; 0 for NoP).
+    pub chiplet: usize,
+    pub flows: Epoch,
+}
+
+/// Complete traffic picture for one mapped DNN.
+#[derive(Debug, Clone, Default)]
+pub struct Traffic {
+    /// NoP epochs (chiplet-granularity), one per layer transition that
+    /// crosses chiplets (activations, partial sums, skip edges).
+    pub nop_epochs: Vec<LabeledEpoch>,
+    /// NoC epochs (tile-granularity), tagged with chiplet + layer.
+    pub noc_epochs: Vec<LabeledEpoch>,
+    /// Logical activation volume crossing chiplets, bits.
+    pub inter_chiplet_bits: f64,
+    /// Logical activation volume moving tile-to-tile inside chiplets, bits.
+    pub intra_chiplet_bits: f64,
+    /// Global accumulator additions (partial-sum reduction).
+    pub accumulator_adds: u64,
+    /// Global buffer write accesses (elements).
+    pub global_buffer_writes: u64,
+    /// Global buffer read accesses (elements).
+    pub global_buffer_reads: u64,
+}
+
+/// Packets per (src, dst) pair when `total_packets` worth of data is
+/// sliced uniformly across the sources (each source multicasts its slice
+/// to every destination — the uniform split of Section 4.2).
+fn per_source(total_packets: u64, srcs: usize) -> u64 {
+    total_packets.div_ceil(srcs.max(1) as u64)
+}
+
+/// Algorithm 2 inner loops for one (source set, destination set) pair.
+fn alg2_flows(srcs: &[u32], dsts: &[u32], packets_per_pair: u64, epoch: &mut Epoch) {
+    if packets_per_pair == 0 || srcs.is_empty() || dsts.is_empty() {
+        return;
+    }
+    let stride = srcs.len() as u64 + 1;
+    for (si, &s) in srcs.iter().enumerate() {
+        for &d in dsts {
+            if s == d {
+                continue;
+            }
+            epoch.push(Flow {
+                src: s,
+                dst: d,
+                count: packets_per_pair,
+                start: si as u64,
+                stride,
+            });
+        }
+    }
+}
+
+/// Tile ranges occupied by each weight layer on each chiplet.
+/// `tile_ranges[layer][k] = (chiplet, first_tile, n_tiles)`.
+fn assign_tiles(
+    map: &MappingResult,
+    xbars_per_tile: usize,
+    tiles_per_chiplet: usize,
+) -> Vec<Vec<(usize, usize, usize)>> {
+    let mut cursor = vec![0usize; map.num_chiplets];
+    let mut out = Vec::with_capacity(map.per_layer.len());
+    for lm in &map.per_layer {
+        let mut spans = Vec::with_capacity(lm.chiplets.len());
+        for share in &lm.chiplets {
+            let tiles = share.xbars.div_ceil(xbars_per_tile).max(1);
+            let tiles = tiles.min(tiles_per_chiplet);
+            let first = cursor[share.chiplet] % tiles_per_chiplet;
+            cursor[share.chiplet] += tiles;
+            spans.push((share.chiplet, first, tiles));
+        }
+        out.push(spans);
+    }
+    out
+}
+
+fn tile_ids(first: usize, n: usize, tiles_per_chiplet: usize) -> Vec<u32> {
+    (0..n)
+        .map(|i| ((first + i) % tiles_per_chiplet) as u32)
+        .collect()
+}
+
+/// Build NoC + NoP traffic for a mapped DNN (Algorithm 2 at both levels).
+pub fn build_traffic(
+    dnn: &Dnn,
+    map: &MappingResult,
+    placement: &Placement,
+    cfg: &SiamConfig,
+) -> Traffic {
+    let q = cfg.dnn.activation_precision as u64;
+    let w_noc = cfg.chiplet.noc_width as u64;
+    let w_nop = cfg.system.nop.bits_per_cycle();
+    // partial sums carry accumulated precision (weight + act + log2 rows)
+    let q_partial =
+        (cfg.dnn.weight_precision as u64 + q + (cfg.chiplet.xbar_rows as f64).log2() as u64)
+            .min(32);
+    let tiles_pc = cfg.chiplet.tiles_per_chiplet;
+    let widx = dnn.weight_layers();
+    let tiles = assign_tiles(map, cfg.chiplet.xbars_per_tile, tiles_pc);
+
+    let mut t = Traffic::default();
+
+    // NoP port inside a chiplet is reached through tile 0 (the tile
+    // adjacent to the chiplet's NoP router, Fig. 2).
+    const NOP_PORT_TILE: u32 = 0;
+
+    for li in 0..map.per_layer.len() {
+        let lm = &map.per_layer[li];
+        let layer = &dnn.layers[lm.layer_idx];
+        // activations leaving this weight layer (after its fused
+        // pool/relu ops): the input of the next weight layer, or this
+        // layer's ofm for the last one.
+        let (a_out, next) = if li + 1 < map.per_layer.len() {
+            let nl = &dnn.layers[map.per_layer[li + 1].layer_idx];
+            (nl.ifm.elems() as u64, Some(li + 1))
+        } else {
+            (layer.ofm.elems() as u64, None)
+        };
+
+        let src_chiplets: Vec<u32> = lm.chiplets.iter().map(|s| s.chiplet as u32).collect();
+
+        // ---- partial-sum reduction over the NoP (layer spans chiplets)
+        if lm.spans_chiplets() {
+            let n = lm.chiplets.len() as u64;
+            let out_elems = layer.ofm.elems() as u64;
+            t.accumulator_adds += (n - 1) * out_elems;
+            t.global_buffer_writes += n * out_elems;
+            t.global_buffer_reads += out_elems;
+            let np = (out_elems * q_partial).div_ceil(w_nop);
+            let mut epoch = Epoch::new();
+            alg2_flows(
+                &src_chiplets,
+                &[placement.accumulator_node as u32],
+                np,
+                &mut epoch,
+            );
+            t.inter_chiplet_bits += (n * out_elems * q_partial) as f64;
+            t.nop_epochs.push(LabeledEpoch {
+                layer: li,
+                chiplet: 0,
+                flows: epoch,
+            });
+        }
+
+        // ---- activations to the next weight layer
+        if let Some(nj) = next {
+            let nm = &map.per_layer[nj];
+            let dst_chiplets: Vec<u32> = nm.chiplets.iter().map(|s| s.chiplet as u32).collect();
+            let np_nop = (a_out * q).div_ceil(w_nop);
+            let np_noc = (a_out * q).div_ceil(w_noc);
+
+            // effective source: the accumulator if we just reduced there
+            let eff_srcs: Vec<u32> = if lm.spans_chiplets() {
+                vec![placement.accumulator_node as u32]
+            } else {
+                src_chiplets.clone()
+            };
+            let crosses = eff_srcs != dst_chiplets || eff_srcs.len() > 1;
+            if crosses {
+                let mut epoch = Epoch::new();
+                alg2_flows(
+                    &eff_srcs,
+                    &dst_chiplets,
+                    per_source(np_nop, eff_srcs.len()),
+                    &mut epoch,
+                );
+                if !epoch.is_empty() {
+                    t.inter_chiplet_bits +=
+                        (a_out * q) as f64 * dst_chiplets.len() as f64;
+                    t.nop_epochs.push(LabeledEpoch {
+                        layer: li,
+                        chiplet: 0,
+                        flows: epoch,
+                    });
+                }
+            }
+
+            // NoC inside each participating chiplet
+            for (k, share) in lm.chiplets.iter().enumerate() {
+                let (c, first, n_t) = tiles[li][k];
+                debug_assert_eq!(c, share.chiplet);
+                let srcs = tile_ids(first, n_t, tiles_pc);
+                // destination tiles: next layer's tiles if co-resident,
+                // else the NoP port tile.
+                let co = tiles[nj].iter().find(|(cc, _, _)| *cc == c);
+                let dsts = match co {
+                    Some(&(_, f2, n2)) if !crosses => tile_ids(f2, n2, tiles_pc),
+                    _ => vec![NOP_PORT_TILE],
+                };
+                let mut epoch = Epoch::new();
+                alg2_flows(&srcs, &dsts, per_source(np_noc, srcs.len()), &mut epoch);
+                if !epoch.is_empty() {
+                    t.intra_chiplet_bits += (a_out * q) as f64;
+                    t.noc_epochs.push(LabeledEpoch {
+                        layer: li,
+                        chiplet: c,
+                        flows: epoch,
+                    });
+                }
+            }
+            // incoming side: NoP port -> next layer's tiles
+            if crosses {
+                for &(c, f2, n2) in &tiles[nj] {
+                    let dsts = tile_ids(f2, n2, tiles_pc);
+                    let mut epoch = Epoch::new();
+                    alg2_flows(&[NOP_PORT_TILE], &dsts, np_noc, &mut epoch);
+                    if !epoch.is_empty() {
+                        t.intra_chiplet_bits += (a_out * q) as f64;
+                        t.noc_epochs.push(LabeledEpoch {
+                            layer: nj,
+                            chiplet: c,
+                            flows: epoch,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- residual / concat skip edges: source activations shipped to the
+    // chiplets that perform the add (owner of the consuming layer).
+    let owner_of = |layer_idx: usize| -> Option<&Vec<(usize, usize, usize)>> {
+        // nearest preceding weight layer's tiles
+        let wpos = widx.iter().rposition(|&w| w <= layer_idx)?;
+        tiles.get(wpos)
+    };
+    for (i, l) in dnn.layers.iter().enumerate() {
+        if let LayerKind::ResidualAdd { from } | LayerKind::Concat { from } = l.kind {
+            let (Some(src_t), Some(dst_t)) = (owner_of(from), owner_of(i)) else {
+                continue;
+            };
+            let src_c: Vec<u32> = src_t.iter().map(|&(c, _, _)| c as u32).collect();
+            let dst_c: Vec<u32> = dst_t.iter().map(|&(c, _, _)| c as u32).collect();
+            if src_c == dst_c {
+                continue; // buffered locally
+            }
+            let elems = dnn.layers[from].ofm.elems() as u64;
+            let np = per_source((elems * q).div_ceil(w_nop), src_c.len());
+            let mut epoch = Epoch::new();
+            alg2_flows(&src_c, &dst_c, np, &mut epoch);
+            if !epoch.is_empty() {
+                t.inter_chiplet_bits += (elems * q) as f64 * dst_c.len() as f64;
+                t.nop_epochs.push(LabeledEpoch {
+                    layer: widx.iter().rposition(|&w| w <= i).unwrap_or(0),
+                    chiplet: 0,
+                    flows: epoch,
+                });
+            }
+        }
+    }
+
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SiamConfig;
+    use crate::dnn::build_model;
+    use crate::mapping::map_dnn;
+
+    fn setup(model: &str, ds: &str, cfg: &SiamConfig) -> (Traffic, MappingResult) {
+        let dnn = build_model(model, ds).unwrap();
+        let map = map_dnn(&dnn, cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let t = build_traffic(&dnn, &map, &pl, cfg);
+        (t, map)
+    }
+
+    #[test]
+    fn alg2_timestamp_semantics() {
+        let mut e = Epoch::new();
+        alg2_flows(&[0, 1], &[2, 3], 5, &mut e);
+        assert_eq!(e.len(), 4);
+        // stride is n_src + 1 = 3; source 1 starts one cycle later
+        assert!(e.iter().all(|f| f.stride == 3));
+        assert_eq!(e.iter().find(|f| f.src == 0).unwrap().start, 0);
+        assert_eq!(e.iter().find(|f| f.src == 1).unwrap().start, 1);
+        assert_eq!(Flow::total_packets(&e), 20);
+    }
+
+    #[test]
+    fn alg2_skips_self_loops() {
+        let mut e = Epoch::new();
+        alg2_flows(&[0, 1], &[1, 2], 1, &mut e);
+        assert!(e.iter().all(|f| f.src != f.dst));
+        assert_eq!(e.len(), 3);
+    }
+
+    #[test]
+    fn resnet110_generates_traffic() {
+        let cfg = SiamConfig::paper_default();
+        let (t, map) = setup("resnet110", "cifar10", &cfg);
+        assert!(t.intra_chiplet_bits > 0.0);
+        assert!(t.inter_chiplet_bits > 0.0);
+        assert!(t.noc_epochs.iter().all(|e| e.chiplet < map.num_chiplets));
+        // residual network with spanning layers must use the accumulator
+        if map.per_layer.iter().any(|l| l.spans_chiplets()) {
+            assert!(t.accumulator_adds > 0);
+        }
+    }
+
+    #[test]
+    fn bigger_chiplets_reduce_nop_share() {
+        // Fig. 11 trend: more tiles per chiplet localizes computation.
+        let cfg4 = SiamConfig::paper_default().with_tiles_per_chiplet(4);
+        let cfg36 = SiamConfig::paper_default().with_tiles_per_chiplet(36);
+        let (t4, _) = setup("resnet110", "cifar10", &cfg4);
+        let (t36, _) = setup("resnet110", "cifar10", &cfg36);
+        assert!(
+            t36.inter_chiplet_bits < t4.inter_chiplet_bits,
+            "NoP volume should shrink: {} vs {}",
+            t36.inter_chiplet_bits,
+            t4.inter_chiplet_bits
+        );
+    }
+
+    #[test]
+    fn monolithic_has_no_nop_traffic() {
+        let cfg =
+            SiamConfig::paper_default().with_chip_mode(crate::config::ChipMode::Monolithic);
+        let (t, _) = setup("resnet110", "cifar10", &cfg);
+        assert_eq!(t.inter_chiplet_bits, 0.0);
+        assert!(t.nop_epochs.is_empty());
+    }
+
+    #[test]
+    fn flow_counts_match_volume() {
+        let cfg = SiamConfig::paper_default();
+        let (t, _) = setup("lenet5", "cifar10", &cfg);
+        for e in &t.noc_epochs {
+            assert!(Flow::total_packets(&e.flows) > 0);
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Hardware performance metric types shared by every SIAM engine.
+//!
+//! All engines report their results as [`Metrics`] (area / energy /
+//! latency / leakage) which compose additively across components and
+//! provide the paper's derived figures of merit: energy-delay product
+//! (EDP), energy-delay-area product (EDAP), power, and TOPS/W style
+//! energy efficiency.
+
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Mul};
+
+/// Area/energy/latency/leakage bundle for a hardware component or system.
+///
+/// Units are fixed across the whole simulator:
+/// * area — µm²
+/// * energy — pJ (dynamic, per inference unless stated otherwise)
+/// * latency — ns
+/// * leakage — µW
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Metrics {
+    pub area_um2: f64,
+    pub energy_pj: f64,
+    pub latency_ns: f64,
+    pub leakage_uw: f64,
+}
+
+impl Metrics {
+    pub const ZERO: Metrics = Metrics {
+        area_um2: 0.0,
+        energy_pj: 0.0,
+        latency_ns: 0.0,
+        leakage_uw: 0.0,
+    };
+
+    pub fn new(area_um2: f64, energy_pj: f64, latency_ns: f64) -> Self {
+        Metrics {
+            area_um2,
+            energy_pj,
+            latency_ns,
+            leakage_uw: 0.0,
+        }
+    }
+
+    pub fn with_leakage(mut self, leakage_uw: f64) -> Self {
+        self.leakage_uw = leakage_uw;
+        self
+    }
+
+    /// Energy-delay product in pJ·ns.
+    pub fn edp(&self) -> f64 {
+        self.energy_pj * self.latency_ns
+    }
+
+    /// Energy-delay-area product in pJ·ns·mm² (area converted to mm² so the
+    /// magnitudes stay comparable with the paper's plots).
+    pub fn edap(&self) -> f64 {
+        self.edp() * self.area_mm2()
+    }
+
+    pub fn area_mm2(&self) -> f64 {
+        self.area_um2 / 1.0e6
+    }
+
+    pub fn energy_uj(&self) -> f64 {
+        self.energy_pj / 1.0e6
+    }
+
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_pj / 1.0e9
+    }
+
+    pub fn latency_ms(&self) -> f64 {
+        self.latency_ns / 1.0e6
+    }
+
+    /// Average dynamic power in mW over the latency window.
+    pub fn avg_power_mw(&self) -> f64 {
+        if self.latency_ns == 0.0 {
+            0.0
+        } else {
+            self.energy_pj / self.latency_ns // pJ/ns == mW
+        }
+    }
+
+    /// Leakage energy accumulated over the latency window, in pJ.
+    pub fn leakage_energy_pj(&self) -> f64 {
+        // µW * ns = femto-J ⇒ /1000 to pJ
+        self.leakage_uw * self.latency_ns / 1.0e3
+    }
+
+    /// Serial composition: areas and energies add, latencies add.
+    pub fn then(&self, other: &Metrics) -> Metrics {
+        *self + *other
+    }
+
+    /// Parallel composition: areas and energies add, latency is the max.
+    pub fn alongside(&self, other: &Metrics) -> Metrics {
+        Metrics {
+            area_um2: self.area_um2 + other.area_um2,
+            energy_pj: self.energy_pj + other.energy_pj,
+            latency_ns: self.latency_ns.max(other.latency_ns),
+            leakage_uw: self.leakage_uw + other.leakage_uw,
+        }
+    }
+
+    /// Replicate a component `n` times operating in parallel (area and
+    /// energy scale, latency unchanged).
+    pub fn replicate(&self, n: usize) -> Metrics {
+        Metrics {
+            area_um2: self.area_um2 * n as f64,
+            energy_pj: self.energy_pj * n as f64,
+            latency_ns: self.latency_ns,
+            leakage_uw: self.leakage_uw * n as f64,
+        }
+    }
+
+    /// Repeat an operation `n` times serially on the same hardware (energy
+    /// and latency scale, area unchanged).
+    pub fn repeat(&self, n: usize) -> Metrics {
+        Metrics {
+            area_um2: self.area_um2,
+            energy_pj: self.energy_pj * n as f64,
+            latency_ns: self.latency_ns * n as f64,
+            leakage_uw: self.leakage_uw,
+        }
+    }
+}
+
+impl Add for Metrics {
+    type Output = Metrics;
+    fn add(self, o: Metrics) -> Metrics {
+        Metrics {
+            area_um2: self.area_um2 + o.area_um2,
+            energy_pj: self.energy_pj + o.energy_pj,
+            latency_ns: self.latency_ns + o.latency_ns,
+            leakage_uw: self.leakage_uw + o.leakage_uw,
+        }
+    }
+}
+
+impl AddAssign for Metrics {
+    fn add_assign(&mut self, o: Metrics) {
+        *self = *self + o;
+    }
+}
+
+impl Mul<f64> for Metrics {
+    type Output = Metrics;
+    fn mul(self, s: f64) -> Metrics {
+        Metrics {
+            area_um2: self.area_um2 * s,
+            energy_pj: self.energy_pj * s,
+            latency_ns: self.latency_ns * s,
+            leakage_uw: self.leakage_uw * s,
+        }
+    }
+}
+
+impl Sum for Metrics {
+    fn sum<I: Iterator<Item = Metrics>>(iter: I) -> Metrics {
+        iter.fold(Metrics::ZERO, |a, b| a + b)
+    }
+}
+
+/// Named breakdown of a system metric into components (Fig. 10 of the
+/// paper: IMC circuit vs NoC vs NoP).
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    pub components: Vec<(String, Metrics)>,
+}
+
+impl Breakdown {
+    pub fn push(&mut self, name: impl Into<String>, m: Metrics) {
+        self.components.push((name.into(), m));
+    }
+
+    pub fn total(&self) -> Metrics {
+        self.components.iter().map(|(_, m)| *m).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<Metrics> {
+        self.components
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| *m)
+    }
+
+    /// Percentage share of each component for a metric selector.
+    pub fn shares(&self, select: impl Fn(&Metrics) -> f64) -> Vec<(String, f64)> {
+        let total: f64 = self.components.iter().map(|(_, m)| select(m)).sum();
+        self.components
+            .iter()
+            .map(|(n, m)| {
+                let share = if total > 0.0 {
+                    100.0 * select(m) / total
+                } else {
+                    0.0
+                };
+                (n.clone(), share)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edp_edap() {
+        let m = Metrics::new(2.0e6, 10.0, 5.0); // 2 mm², 10 pJ, 5 ns
+        assert_eq!(m.edp(), 50.0);
+        assert!((m.edap() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serial_vs_parallel_composition() {
+        let a = Metrics::new(1.0, 2.0, 3.0);
+        let b = Metrics::new(10.0, 20.0, 30.0);
+        let s = a.then(&b);
+        assert_eq!(s.latency_ns, 33.0);
+        let p = a.alongside(&b);
+        assert_eq!(p.latency_ns, 30.0);
+        assert_eq!(p.energy_pj, 22.0);
+    }
+
+    #[test]
+    fn replicate_and_repeat() {
+        let a = Metrics::new(1.0, 2.0, 3.0);
+        let r = a.replicate(4);
+        assert_eq!(r.area_um2, 4.0);
+        assert_eq!(r.latency_ns, 3.0);
+        let q = a.repeat(4);
+        assert_eq!(q.area_um2, 1.0);
+        assert_eq!(q.latency_ns, 12.0);
+    }
+
+    #[test]
+    fn power_units() {
+        // 1000 pJ over 10 ns = 100 mW
+        let m = Metrics::new(0.0, 1000.0, 10.0);
+        assert!((m.avg_power_mw() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_shares_sum_to_100() {
+        let mut b = Breakdown::default();
+        b.push("imc", Metrics::new(10.0, 1.0, 1.0));
+        b.push("noc", Metrics::new(30.0, 1.0, 1.0));
+        b.push("nop", Metrics::new(60.0, 1.0, 1.0));
+        let shares = b.shares(|m| m.area_um2);
+        let total: f64 = shares.iter().map(|(_, s)| s).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+        assert!((shares[2].1 - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leakage_energy() {
+        let m = Metrics::new(0.0, 0.0, 1000.0).with_leakage(5.0);
+        // 5 µW over 1 µs = 5 pJ
+        assert!((m.leakage_energy_pj() - 5.0).abs() < 1e-12);
+    }
+}

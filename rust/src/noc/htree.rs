@@ -1,0 +1,94 @@
+//! Analytical H-tree / tree point-to-point interconnect model (the
+//! NeuroSim-style alternative to the mesh NoC — Table 1 row "NoC-mesh,
+//! NoC-tree and H-Tree").
+//!
+//! An H-tree over `n` leaves has `log2(n)` levels; all traffic funnels
+//! through the root, so an epoch's latency is dominated by root
+//! serialization plus the tree depth, and its energy by bits × levels
+//! traversed.
+
+use super::sim::EpochResult;
+use crate::circuit::Tech;
+use crate::mapping::Flow;
+
+pub struct HTreeModel {
+    pub leaves: usize,
+    pub levels: u32,
+    /// Cycles to cross one tree level.
+    pub level_delay: u64,
+    /// Energy per flit per level, pJ (wire halves per level going down).
+    pub flit_level_energy_pj: f64,
+    /// Total wiring + mux area, µm².
+    pub area_um2: f64,
+}
+
+impl HTreeModel {
+    pub fn new(leaves: usize, flit_bits: usize, tile_pitch_mm: f64, tech: &Tech) -> Self {
+        let levels = (leaves.max(2) as f64).log2().ceil() as u32;
+        // total H-tree wire length ≈ pitch × leaves (geometric series)
+        let wire_mm = tile_pitch_mm * leaves as f64;
+        HTreeModel {
+            leaves,
+            levels,
+            level_delay: 2,
+            flit_level_energy_pj: 0.04 * flit_bits as f64 * tile_pitch_mm * tech.energy,
+            area_um2: flit_bits as f64 * 0.2 * wire_mm * 1000.0 * tech.area.sqrt(),
+        }
+    }
+
+    /// All flows share the root: serialize packets, add depth latency.
+    pub fn run(&self, flows: &[Flow]) -> EpochResult {
+        let packets: u64 = flows.iter().map(|f| f.count).sum();
+        if packets == 0 {
+            return EpochResult::default();
+        }
+        let depth = 2 * self.levels as u64 * self.level_delay; // up + down
+        let completion = packets + depth;
+        EpochResult {
+            completion_cycles: completion,
+            packets,
+            // average packet waits half the serialization queue
+            total_latency_cycles: packets * depth + packets * packets / 2,
+            flit_hops: packets * 2 * self.levels as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(count: u64) -> Flow {
+        Flow {
+            src: 0,
+            dst: 1,
+            count,
+            start: 0,
+            stride: 1,
+        }
+    }
+
+    #[test]
+    fn levels_log2() {
+        let t = Tech::new(32);
+        assert_eq!(HTreeModel::new(16, 32, 0.7, &t).levels, 4);
+        assert_eq!(HTreeModel::new(9, 32, 0.7, &t).levels, 4); // ceil
+    }
+
+    #[test]
+    fn root_serializes() {
+        let t = Tech::new(32);
+        let h = HTreeModel::new(16, 32, 0.7, &t);
+        let r1 = h.run(&[f(10)]);
+        let r2 = h.run(&[f(10), f(10)]);
+        assert_eq!(r2.packets, 20);
+        assert!(r2.completion_cycles > r1.completion_cycles);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let t = Tech::new(32);
+        let h = HTreeModel::new(8, 32, 0.7, &t);
+        assert_eq!(h.run(&[]), EpochResult::default());
+    }
+}

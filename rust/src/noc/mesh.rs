@@ -1,0 +1,148 @@
+//! Mesh geometry shared by the NoC (tiles) and NoP (chiplets) simulators:
+//! node coordinates, X–Y routing, link identifiers.
+
+use crate::mapping::Placement;
+
+/// Directions out of a router. `L` is the local ejection port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    East = 0,
+    West = 1,
+    North = 2,
+    South = 3,
+}
+
+/// A 2-D mesh with an arbitrary node→coordinate embedding.
+#[derive(Debug, Clone)]
+pub struct Mesh {
+    pub width: usize,
+    pub height: usize,
+    coords: Vec<(u16, u16)>, // (row, col) per node id
+}
+
+impl Mesh {
+    /// Square-ish mesh over `n` nodes in snake order (consecutive ids are
+    /// neighbours — the placement rule of Section 6.1).
+    pub fn new(n: usize) -> Mesh {
+        assert!(n > 0);
+        let width = (n as f64).sqrt().ceil() as usize;
+        let height = n.div_ceil(width);
+        let coords = (0..n)
+            .map(|i| {
+                let r = i / width;
+                let c = i % width;
+                let c = if r % 2 == 0 { c } else { width - 1 - c };
+                (r as u16, c as u16)
+            })
+            .collect();
+        Mesh {
+            width,
+            height,
+            coords,
+        }
+    }
+
+    /// Mesh over a chiplet placement (compute chiplets + accumulator +
+    /// DRAM nodes).
+    pub fn from_placement(p: &Placement) -> Mesh {
+        let coords = (0..p.nodes())
+            .map(|i| {
+                let (r, c) = p.coord(i);
+                (r as u16, c as u16)
+            })
+            .collect();
+        Mesh {
+            width: p.width,
+            height: p.height,
+            coords,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn coord(&self, node: u32) -> (u16, u16) {
+        self.coords[node as usize]
+    }
+
+    pub fn hops(&self, a: u32, b: u32) -> u32 {
+        let (ra, ca) = self.coord(a);
+        let (rb, cb) = self.coord(b);
+        (ra.abs_diff(rb) + ca.abs_diff(cb)) as u32
+    }
+
+    /// Unique link id for (row, col, dir). Four slots per grid position.
+    fn link_id(&self, r: u16, c: u16, d: Dir) -> u32 {
+        ((r as usize * self.width + c as usize) * 4 + d as usize) as u32
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.width * self.height * 4
+    }
+
+    /// X–Y route: the sequence of link ids from `a` to `b` (column-first,
+    /// then row — the paper's X–Y dimension order).
+    pub fn route(&self, a: u32, b: u32, out: &mut Vec<u32>) {
+        out.clear();
+        let (ra, ca) = self.coord(a);
+        let (rb, cb) = self.coord(b);
+        let (mut r, mut c) = (ra, ca);
+        while c != cb {
+            let d = if cb > c { Dir::East } else { Dir::West };
+            out.push(self.link_id(r, c, d));
+            c = if cb > c { c + 1 } else { c - 1 };
+        }
+        while r != rb {
+            let d = if rb > r { Dir::South } else { Dir::North };
+            out.push(self.link_id(r, c, d));
+            r = if rb > r { r + 1 } else { r - 1 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snake_adjacency() {
+        let m = Mesh::new(16);
+        for i in 0..15u32 {
+            assert_eq!(m.hops(i, i + 1), 1);
+        }
+    }
+
+    #[test]
+    fn route_length_equals_hops() {
+        let m = Mesh::new(16);
+        let mut buf = Vec::new();
+        for a in 0..16u32 {
+            for b in 0..16u32 {
+                m.route(a, b, &mut buf);
+                assert_eq!(buf.len() as u32, m.hops(a, b), "{a}->{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn xy_routes_column_first() {
+        let m = Mesh::new(9); // 3x3
+        let mut buf = Vec::new();
+        // node 0 is (0,0); node 8 is (2,0) in snake order
+        let (r8, c8) = m.coord(8);
+        m.route(0, 8, &mut buf);
+        assert_eq!(buf.len() as u16, r8 + c8);
+    }
+
+    #[test]
+    fn links_unique_per_route_step() {
+        let m = Mesh::new(25);
+        let mut buf = Vec::new();
+        m.route(0, 24, &mut buf);
+        let mut sorted = buf.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), buf.len());
+    }
+}

@@ -1,0 +1,175 @@
+//! Intra-chiplet NoC engine (Section 4.3.2): a customized cycle-accurate
+//! network simulator in the spirit of BookSim, driven by Algorithm-2
+//! traces, plus router/link power-area models and an analytical
+//! H-tree/P2P alternative.
+
+pub mod htree;
+pub mod mesh;
+pub mod power;
+pub mod sim;
+
+pub use mesh::Mesh;
+pub use sim::{EpochResult, FlitSim, PacketSim};
+
+use crate::config::{NocTopology, SiamConfig};
+use crate::mapping::Traffic;
+use crate::metrics::Metrics;
+
+/// Aggregated NoC evaluation for a mapped DNN.
+#[derive(Debug, Clone, Default)]
+pub struct NocReport {
+    /// Total NoC metrics (area = all routers+links across chiplets).
+    pub metrics: Metrics,
+    pub cycles: u64,
+    pub packets: u64,
+    pub flit_hops: u64,
+    pub avg_packet_latency_cycles: f64,
+}
+
+/// Evaluate all NoC epochs of a traffic picture.
+///
+/// Epochs of the *same* weight layer run on different chiplets in
+/// parallel (their cycle counts max-combine); different layers execute
+/// sequentially (cycle counts add) — the paper's layer-by-layer dataflow
+/// (Algorithm 4).
+pub fn evaluate(cfg: &SiamConfig, traffic: &Traffic, num_chiplets: usize) -> NocReport {
+    let tech = crate::circuit::Tech::from_device(&cfg.device);
+    let tiles = cfg.chiplet.tiles_per_chiplet;
+    let mesh = Mesh::new(tiles.max(2));
+
+    // per-(layer, chiplet) serialized cycles, then max across chiplets
+    // per layer, then sum across layers.
+    let mut per_key: std::collections::BTreeMap<(usize, usize), u64> = Default::default();
+    let mut packets = 0u64;
+    let mut flit_hops = 0u64;
+    let mut lat_sum = 0u64;
+
+    let tile_pitch_mm = 0.7; // ~sqrt of the 0.5 mm² calibrated tile
+    let htree = htree::HTreeModel::new(tiles.max(2), cfg.chiplet.noc_width, tile_pitch_mm, &tech);
+    let psim = PacketSim::new(&mesh);
+
+    for ep in &traffic.noc_epochs {
+        let r = match cfg.chiplet.noc_topology {
+            NocTopology::Mesh => psim.run(&ep.flows),
+            NocTopology::Tree | NocTopology::HTree => htree.run(&ep.flows),
+        };
+        *per_key.entry((ep.layer, ep.chiplet)).or_default() += r.completion_cycles;
+        packets += r.packets;
+        flit_hops += r.flit_hops;
+        lat_sum += r.total_latency_cycles;
+    }
+    let mut per_layer: std::collections::BTreeMap<usize, u64> = Default::default();
+    for ((layer, _chiplet), cyc) in per_key {
+        let e = per_layer.entry(layer).or_default();
+        *e = (*e).max(cyc);
+    }
+    let cycles: u64 = per_layer.values().sum();
+
+    // ---- power & area
+    let router = power::router(
+        cfg.chiplet.noc_width,
+        cfg.chiplet.noc_buffer_depth,
+        5,
+        &tech,
+    );
+    let link = power::link(cfg.chiplet.noc_width, tile_pitch_mm, &tech);
+    let (area, leakage, e_per_hop) = match cfg.chiplet.noc_topology {
+        NocTopology::Mesh => {
+            let links = (2 * mesh.width * mesh.height - mesh.width - mesh.height) as f64;
+            (
+                num_chiplets as f64 * (tiles as f64 * router.area_um2 + links * link.area_um2),
+                num_chiplets as f64 * tiles as f64 * router.leakage_uw,
+                router.flit_energy_pj + link.flit_energy_pj,
+            )
+        }
+        NocTopology::Tree | NocTopology::HTree => (
+            num_chiplets as f64 * htree.area_um2,
+            num_chiplets as f64 * 2.0 * tech.leakage,
+            htree.flit_level_energy_pj,
+        ),
+    };
+
+    let clk_ns = 1.0e3 / cfg.chiplet.frequency_mhz;
+    NocReport {
+        metrics: Metrics {
+            area_um2: area,
+            energy_pj: flit_hops as f64 * e_per_hop,
+            latency_ns: cycles as f64 * clk_ns,
+            leakage_uw: leakage,
+        },
+        cycles,
+        packets,
+        flit_hops,
+        avg_packet_latency_cycles: if packets == 0 {
+            0.0
+        } else {
+            lat_sum as f64 / packets as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SiamConfig;
+    use crate::dnn::build_model;
+    use crate::mapping::{build_traffic, map_dnn, Placement};
+
+    fn report(model: &str, cfg: &SiamConfig) -> NocReport {
+        let dnn = build_model(model, "cifar10").unwrap();
+        let map = map_dnn(&dnn, cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, cfg);
+        evaluate(cfg, &traffic, map.num_chiplets)
+    }
+
+    #[test]
+    fn resnet110_noc_produces_work() {
+        let cfg = SiamConfig::paper_default();
+        let rep = report("resnet110", &cfg);
+        assert!(rep.cycles > 0);
+        assert!(rep.packets > 0);
+        assert!(rep.metrics.energy_pj > 0.0);
+        assert!(rep.metrics.area_um2 > 0.0);
+    }
+
+    #[test]
+    fn wider_noc_reduces_latency() {
+        let mut cfg = SiamConfig::paper_default();
+        cfg.chiplet.noc_width = 16;
+        let narrow = report("resnet110", &cfg);
+        cfg.chiplet.noc_width = 64;
+        let wide = report("resnet110", &cfg);
+        assert!(
+            wide.cycles < narrow.cycles,
+            "wide {} vs narrow {}",
+            wide.cycles,
+            narrow.cycles
+        );
+    }
+
+    #[test]
+    fn htree_differs_from_mesh() {
+        let mut cfg = SiamConfig::paper_default();
+        let mesh = report("lenet5", &cfg);
+        cfg.chiplet.noc_topology = NocTopology::HTree;
+        let htree = report("lenet5", &cfg);
+        assert_ne!(mesh.cycles, htree.cycles);
+    }
+
+    #[test]
+    fn more_tiles_per_chiplet_increases_noc_cost() {
+        // Fig. 11b: NoC EDP grows with tiles/chiplet (bigger mesh, more
+        // intra-chiplet traffic).
+        let cfg4 = SiamConfig::paper_default().with_tiles_per_chiplet(4);
+        let cfg36 = SiamConfig::paper_default().with_tiles_per_chiplet(36);
+        let r4 = report("resnet110", &cfg4);
+        let r36 = report("resnet110", &cfg36);
+        let edp4 = r4.metrics.edp();
+        let edp36 = r36.metrics.edp();
+        assert!(
+            edp36 > edp4,
+            "NoC EDP should grow with chiplet size: {edp4} vs {edp36}"
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! NoC router + link area/energy models (Orion-style constants at 32 nm,
+//! scaled by flit width and technology).
+
+use crate::circuit::Tech;
+
+#[derive(Debug, Clone, Copy)]
+pub struct RouterModel {
+    /// Router silicon area, µm².
+    pub area_um2: f64,
+    /// Energy per flit traversing the router (buffer + crossbar + arb), pJ.
+    pub flit_energy_pj: f64,
+    /// Router leakage, µW.
+    pub leakage_uw: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Wire area per link, µm² (repeaters + wiring track share).
+    pub area_um2: f64,
+    /// Energy per flit per link traversal, pJ.
+    pub flit_energy_pj: f64,
+}
+
+/// 5-port input-buffered wormhole router.
+/// Anchor: 32-bit, 4-deep buffers at 32 nm ≈ 12 000 µm², 0.32 pJ/flit.
+pub fn router(flit_bits: usize, buffer_depth: usize, ports: usize, tech: &Tech) -> RouterModel {
+    let w = flit_bits as f64 / 32.0;
+    let p = ports as f64 / 5.0;
+    let b = buffer_depth as f64 / 4.0;
+    RouterModel {
+        area_um2: 12_000.0 * w * p * (0.6 + 0.4 * b) * tech.area,
+        flit_energy_pj: 0.32 * w * (0.7 + 0.3 * b) * tech.energy,
+        leakage_uw: 18.0 * w * p * tech.leakage,
+    }
+}
+
+/// On-chip link between adjacent tiles.
+/// Anchor: 32-bit, 0.7 mm (the pitch of a ~0.5 mm² tile) at 32 nm:
+/// 0.9 pJ/flit ≈ 0.04 pJ/bit/mm repeated wire.
+pub fn link(flit_bits: usize, length_mm: f64, tech: &Tech) -> LinkModel {
+    let bits = flit_bits as f64;
+    LinkModel {
+        // 0.2 µm wire pitch × length, all bits, plus repeater overhead
+        area_um2: bits * 0.2 * (length_mm * 1000.0) * 1.15 * tech.area.sqrt(),
+        flit_energy_pj: 0.04 * bits * length_mm * tech.energy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_scales_with_width() {
+        let t = Tech::new(32);
+        let r32 = router(32, 4, 5, &t);
+        let r64 = router(64, 4, 5, &t);
+        assert!((r64.area_um2 / r32.area_um2 - 2.0).abs() < 1e-9);
+        assert!(r64.flit_energy_pj > r32.flit_energy_pj);
+    }
+
+    #[test]
+    fn link_energy_proportional_to_length() {
+        let t = Tech::new(32);
+        let l1 = link(32, 1.0, &t);
+        let l2 = link(32, 2.0, &t);
+        assert!((l2.flit_energy_pj / l1.flit_energy_pj - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn anchors() {
+        let t = Tech::new(32);
+        let r = router(32, 4, 5, &t);
+        assert!((r.area_um2 - 12_000.0).abs() < 1.0);
+        assert!((r.flit_energy_pj - 0.32).abs() < 1e-9);
+        let l = link(32, 0.7, &t);
+        assert!((l.flit_energy_pj - 0.896).abs() < 1e-6);
+    }
+}

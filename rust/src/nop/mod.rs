@@ -1,0 +1,173 @@
+//! NoP engine (Section 4.4): chiplet-to-chiplet communication over the
+//! passive interposer — trace generation reuses Algorithm 2 (done by the
+//! mapping engine), latency comes from the same cycle-accurate mesh
+//! simulator as the NoC (customized BookSim analogue), and area/power
+//! come from the PTM wire model + measured TX/RX driver figures
+//! (Algorithm 3).
+
+pub mod driver;
+pub mod wire;
+
+pub use driver::{DriverModel, SIGNALING_SURVEY};
+pub use wire::WireModel;
+
+use crate::config::SiamConfig;
+use crate::mapping::{Placement, Traffic};
+use crate::metrics::Metrics;
+use crate::noc::{Mesh, PacketSim};
+
+/// Aggregated NoP evaluation.
+#[derive(Debug, Clone, Default)]
+pub struct NopReport {
+    pub metrics: Metrics,
+    pub cycles: u64,
+    pub packets: u64,
+    pub flit_hops: u64,
+    /// Effective signaling frequency after the wire timing check, MHz.
+    pub eff_freq_mhz: f64,
+    /// Bits that crossed the interposer (drives Algorithm-3 energy).
+    pub bits: f64,
+    /// On-chiplet silicon (TX/RX + clocking macros + NoP routers), µm².
+    pub die_area_um2: f64,
+    /// Passive interposer wiring tracks (not yielded silicon), µm².
+    pub interposer_area_um2: f64,
+}
+
+/// Evaluate the NoP for a mapped DNN: cycle-accurate latency over the
+/// chiplet mesh + driver/wire energy and area.
+pub fn evaluate(cfg: &SiamConfig, traffic: &Traffic, placement: &Placement) -> NopReport {
+    let tech = crate::circuit::Tech::from_device(&cfg.device);
+    let wire = WireModel::new(&cfg.system.nop);
+    let drv = DriverModel::new(&cfg.system.nop);
+    let mesh = Mesh::from_placement(placement);
+    let psim = PacketSim::new(&mesh);
+
+    // Layer-parallel / cross-layer-serial composition as for the NoC —
+    // but the interposer is one shared network, so all epochs of one
+    // layer share it and we *sum* within a layer too.
+    let mut per_layer: std::collections::BTreeMap<usize, u64> = Default::default();
+    let mut packets = 0u64;
+    let mut flit_hops = 0u64;
+    for ep in &traffic.nop_epochs {
+        let r = psim.run(&ep.flows);
+        *per_layer.entry(ep.layer).or_default() += r.completion_cycles;
+        packets += r.packets;
+        flit_hops += r.flit_hops;
+    }
+    let cycles: u64 = per_layer.values().sum();
+
+    // ---- energy: Algorithm 3 (bits × E_bit) for every link traversal;
+    // each hop re-drives the wire through a TX/RX pair.
+    let bits_per_flit = cfg.system.nop.bits_per_cycle() as f64;
+    let bits = flit_hops as f64 * bits_per_flit;
+    let router_e = crate::noc::power::router(
+        cfg.system.nop.channel_width,
+        4,
+        cfg.system.nop.router_ports,
+        &tech,
+    );
+    let energy_pj = drv.energy_pj(bits) + flit_hops as f64 * router_e.flit_energy_pj;
+
+    // ---- area: per-chiplet NoP router + TX/RX + clocking macros (one
+    // macro set per mesh port — every neighbour link is independently
+    // driven), plus the interposer wiring tracks.
+    let nodes = placement.nodes() as f64;
+    let ports_per_node = 4.0_f64.min(cfg.system.nop.router_ports as f64 - 1.0);
+    let die_area = nodes * (ports_per_node * drv.area_per_chiplet_um2 + router_e.area_um2);
+    let interposer_area = placement.links() as f64 * wire.link_area_um2;
+    let area = die_area + interposer_area;
+
+    let clk_ns = 1.0e3 / wire.eff_freq_mhz;
+    NopReport {
+        metrics: Metrics {
+            area_um2: area,
+            energy_pj,
+            latency_ns: cycles as f64 * clk_ns,
+            leakage_uw: nodes * (ports_per_node * drv.leakage_uw + router_e.leakage_uw),
+        },
+        cycles,
+        packets,
+        flit_hops,
+        eff_freq_mhz: wire.eff_freq_mhz,
+        bits,
+        die_area_um2: die_area,
+        interposer_area_um2: interposer_area,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipMode, SiamConfig};
+    use crate::dnn::build_model;
+    use crate::mapping::{build_traffic, map_dnn};
+
+    fn report(model: &str, ds: &str, cfg: &SiamConfig) -> NopReport {
+        let dnn = build_model(model, ds).unwrap();
+        let map = map_dnn(&dnn, cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, cfg);
+        evaluate(cfg, &traffic, &pl)
+    }
+
+    #[test]
+    fn resnet110_nop_active() {
+        let cfg = SiamConfig::paper_default();
+        let rep = report("resnet110", "cifar10", &cfg);
+        assert!(rep.cycles > 0);
+        assert!(rep.bits > 0.0);
+        assert!(rep.metrics.area_um2 > 0.0);
+        assert!((rep.eff_freq_mhz - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monolithic_nop_is_empty() {
+        let cfg = SiamConfig::paper_default().with_chip_mode(ChipMode::Monolithic);
+        let rep = report("resnet110", "cifar10", &cfg);
+        assert_eq!(rep.cycles, 0);
+        assert_eq!(rep.packets, 0);
+    }
+
+    #[test]
+    fn nop_dominates_area_on_chiplet_arch() {
+        // Fig. 10: NoP ≈ 85% of ResNet-110 custom-architecture area —
+        // driver + clocking macros and 56×-pitch wires are huge.
+        let cfg = SiamConfig::paper_default();
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let nop = evaluate(&cfg, &traffic, &pl);
+        let noc = crate::noc::evaluate(&cfg, &traffic, map.num_chiplets);
+        assert!(
+            nop.metrics.area_um2 > noc.metrics.area_um2,
+            "NoP area {} should exceed NoC area {}",
+            nop.metrics.area_um2,
+            noc.metrics.area_um2
+        );
+    }
+
+    #[test]
+    fn faster_nop_reduces_latency() {
+        // Fig. 14d trend: NoP bandwidth speed-up cuts NoP stall time
+        let cfg1 = SiamConfig::paper_default();
+        let cfg4 = SiamConfig::paper_default().with_nop_speedup(4.0);
+        let r1 = report("resnet110", "cifar10", &cfg1);
+        let r4 = report("resnet110", "cifar10", &cfg4);
+        assert!(
+            r4.metrics.latency_ns < r1.metrics.latency_ns,
+            "{} vs {}",
+            r4.metrics.latency_ns,
+            r1.metrics.latency_ns
+        );
+    }
+
+    #[test]
+    fn ebit_scales_energy() {
+        let mut cfg = SiamConfig::paper_default();
+        let base = report("resnet110", "cifar10", &cfg);
+        cfg.system.nop.ebit_pj = 1.08; // 2×
+        let hot = report("resnet110", "cifar10", &cfg);
+        assert!(hot.metrics.energy_pj > 1.4 * base.metrics.energy_pj);
+    }
+}

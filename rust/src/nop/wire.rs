@@ -1,0 +1,101 @@
+//! NoP interconnect wire model (Section 4.4): PTM-style RC parameters for
+//! the interposer wires, timing closure against the requested bandwidth,
+//! and wiring area from the shielded-GRS pitch.
+
+use crate::config::NopConfig;
+
+#[derive(Debug, Clone, Copy)]
+pub struct WireModel {
+    /// Total resistance of one chiplet-to-chiplet wire, Ω.
+    pub r_ohm: f64,
+    /// Total capacitance of one wire, fF.
+    pub c_ff: f64,
+    /// 50% distributed-RC delay (0.38·R·C), ns.
+    pub delay_ns: f64,
+    /// Maximum signaling frequency the wire supports, MHz.
+    pub max_freq_mhz: f64,
+    /// Frequency actually used: min(requested, max) — "if the timing
+    /// parameters do not satisfy the bandwidth, the NoP engine chooses
+    /// the maximum allowable bandwidth".
+    pub eff_freq_mhz: f64,
+    /// Wiring area of one link (all channels + shielding), µm².
+    pub link_area_um2: f64,
+    /// Energy of one wire transition, pJ (CV², used as a cross-check on
+    /// the measured E_bit, not added on top of it).
+    pub wire_energy_pj: f64,
+}
+
+impl WireModel {
+    pub fn new(nop: &NopConfig) -> WireModel {
+        let l = nop.wire_length_mm;
+        let r_ohm = nop.wire_r_ohm_per_mm * l;
+        let c_ff = nop.wire_c_ff_per_mm * l;
+        // Elmore 50% point of a distributed RC line
+        let delay_ns = 0.38 * r_ohm * (c_ff * 1e-15) * 1e9;
+        // one bit per cycle; require half-period >= delay
+        let max_freq_mhz = if delay_ns > 0.0 {
+            1.0e3 / (2.0 * delay_ns)
+        } else {
+            f64::INFINITY
+        };
+        let eff_freq_mhz = nop.frequency_mhz.min(max_freq_mhz);
+        // shielded differential pair: signal + shield per lane
+        let track_um = nop.wire_pitch_um * 2.0;
+        let link_area_um2 = track_um * (l * 1000.0) * nop.channel_width as f64;
+        // CV² with 0.4 V GRS swing
+        let v = 0.4;
+        let wire_energy_pj = (c_ff * 1e-15) * v * v * 1e12;
+        WireModel {
+            r_ohm,
+            c_ff,
+            delay_ns,
+            max_freq_mhz,
+            eff_freq_mhz,
+            link_area_um2,
+            wire_energy_pj,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NopConfig;
+
+    #[test]
+    fn default_wire_meets_250mhz() {
+        let w = WireModel::new(&NopConfig::default());
+        // 2.5 mm interposer wire: RC delay well under the 2 ns half-period
+        assert!(w.delay_ns < 2.0, "delay {} ns", w.delay_ns);
+        assert!((w.eff_freq_mhz - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slow_wire_clamps_bandwidth() {
+        let mut nop = NopConfig::default();
+        nop.wire_r_ohm_per_mm = 2000.0;
+        nop.wire_c_ff_per_mm = 4000.0;
+        nop.wire_length_mm = 10.0;
+        let w = WireModel::new(&nop);
+        assert!(w.eff_freq_mhz < nop.frequency_mhz);
+        assert!((w.eff_freq_mhz - w.max_freq_mhz).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_scales_with_channels() {
+        let mut nop = NopConfig::default();
+        let w32 = WireModel::new(&nop);
+        nop.channel_width = 64;
+        let w64 = WireModel::new(&nop);
+        assert!((w64.link_area_um2 / w32.link_area_um2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wire_energy_below_measured_ebit() {
+        // the 0.54 pJ/bit GRS measurement includes the driver; the bare
+        // wire CV² must come out lower
+        let nop = NopConfig::default();
+        let w = WireModel::new(&nop);
+        assert!(w.wire_energy_pj < nop.ebit_pj, "{}", w.wire_energy_pj);
+    }
+}

@@ -1,0 +1,132 @@
+//! Functional inference mode: run real DNN compute through the
+//! AOT-compiled IMC crossbar executables, so the simulator reports not
+//! just performance but the *numerical* effect of the crossbar fabric
+//! (ADC quantization) on model outputs.
+
+use super::Runtime;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// He-style synthetic weights in [-1, 1] (clipped), deterministic.
+pub fn synth_weights(rng: &mut Rng, shape: &[usize]) -> Vec<f32> {
+    let fan_in: usize = shape[..shape.len() - 1].iter().product::<usize>().max(1);
+    let std = (2.0 / fan_in as f64).sqrt();
+    (0..shape.iter().product::<usize>())
+        .map(|_| (rng.normal() * std).clamp(-1.0, 1.0) as f32)
+        .collect()
+}
+
+/// Synthetic input batch in [0, 1] — a tiny-CIFAR-like workload.
+pub fn synth_images(rng: &mut Rng, batch: usize) -> Vec<f32> {
+    (0..batch * 32 * 32 * 3).map(|_| rng.f64() as f32).collect()
+}
+
+/// Result of one functional CNN forward.
+#[derive(Debug, Clone)]
+pub struct FunctionalRun {
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub classes: usize,
+    pub adc_bits: u8,
+    /// Wall-clock of the PJRT execution (the Rust hot path), seconds.
+    pub exec_seconds: f64,
+}
+
+impl FunctionalRun {
+    pub fn argmax(&self) -> Vec<usize> {
+        (0..self.batch)
+            .map(|b| {
+                let row = &self.logits[b * self.classes..(b + 1) * self.classes];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Run the functional CNN (batch 4, CIFAR-shaped) through the crossbar
+/// fabric artifact with the given ADC resolution (4 or 8).
+pub fn run_cnn(rt: &Runtime, adc_bits: u8, seed: u64) -> Result<FunctionalRun> {
+    let name = format!("cnn_fwd_b4_adc{adc_bits}");
+    let exe = rt.load(&name)?;
+    let batch = exe.info.params[0][0];
+    let classes = exe.info.output[1];
+
+    let mut rng = Rng::new(seed);
+    let mut inputs = vec![synth_images(&mut rng, batch)];
+    for shape in &exe.info.params[1..] {
+        inputs.push(synth_weights(&mut rng, shape));
+    }
+
+    let t0 = std::time::Instant::now();
+    let logits = exe.run_f32(&inputs)?;
+    let exec_seconds = t0.elapsed().as_secs_f64();
+    Ok(FunctionalRun {
+        logits,
+        batch,
+        classes,
+        adc_bits,
+        exec_seconds,
+    })
+}
+
+/// Exact integer GEMM reference (the Rust-side oracle for the lossless
+/// 8-bit-ADC crossbar artifact): x (m×k, integer codes) · w (k×n).
+pub fn ref_gemm(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let xv = x[i * k + l];
+            if xv == 0.0 {
+                continue;
+            }
+            let (row, orow) = (&w[l * n..(l + 1) * n], &mut out[i * n..(i + 1) * n]);
+            for (o, &wv) in orow.iter_mut().zip(row) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Integer test data for the GEMM artifacts (uint8 codes / int8 codes,
+/// carried as f32, matching the kernel's contract).
+pub fn synth_gemm_inputs(rng: &mut Rng, m: usize, k: usize, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let x = (0..m * k).map(|_| rng.below(256) as f32).collect();
+    let w = (0..k * n)
+        .map(|_| rng.range(0, 255) as f32 - 128.0)
+        .collect();
+    (x, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ref_gemm_identity() {
+        // 2x2 identity times anything
+        let x = vec![1.0, 0.0, 0.0, 1.0];
+        let w = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(ref_gemm(&x, &w, 2, 2, 2), w);
+    }
+
+    #[test]
+    fn synth_weights_bounded() {
+        let mut rng = Rng::new(1);
+        let w = synth_weights(&mut rng, &[3, 3, 3, 8]);
+        assert_eq!(w.len(), 216);
+        assert!(w.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn synth_gemm_inputs_in_code_range() {
+        let mut rng = Rng::new(2);
+        let (x, w) = synth_gemm_inputs(&mut rng, 4, 8, 4);
+        assert!(x.iter().all(|&v| (0.0..256.0).contains(&v) && v.fract() == 0.0));
+        assert!(w.iter().all(|&v| (-128.0..128.0).contains(&v)));
+    }
+}

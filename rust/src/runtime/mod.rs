@@ -1,0 +1,169 @@
+//! PJRT runtime: load the AOT-compiled Pallas/JAX artifacts
+//! (`artifacts/*.hlo.txt`, emitted once by `python/compile/aot.py`) and
+//! execute them from Rust. Python is never on this path — the
+//! interchange format is HLO *text* (xla_extension 0.5.1 rejects jax's
+//! 64-bit-id serialized protos; the text parser reassigns ids).
+
+pub mod functional;
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// Parameter shapes, in call order.
+    pub params: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output: Vec<usize>,
+    /// Metadata (kind, adc_bits, …) as parsed JSON.
+    pub meta: Json,
+}
+
+impl ArtifactInfo {
+    fn from_json(v: &Json) -> Result<ArtifactInfo> {
+        let shape = |j: &Json| -> Result<Vec<usize>> {
+            j.as_arr()
+                .ok_or_else(|| anyhow!("shape not an array"))?
+                .iter()
+                .map(|d| {
+                    d.as_f64()
+                        .map(|f| f as usize)
+                        .ok_or_else(|| anyhow!("bad dim"))
+                })
+                .collect()
+        };
+        Ok(ArtifactInfo {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .context("manifest entry missing name")?
+                .to_string(),
+            file: v
+                .get("file")
+                .and_then(Json::as_str)
+                .context("manifest entry missing file")?
+                .to_string(),
+            params: v
+                .get("params")
+                .and_then(Json::as_arr)
+                .context("missing params")?
+                .iter()
+                .map(shape)
+                .collect::<Result<_>>()?,
+            output: shape(v.get("output").context("missing output")?)?,
+            meta: v.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(Json::as_f64)
+    }
+}
+
+/// A compiled artifact ready to execute on the PJRT CPU client.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 inputs; shapes are validated against the
+    /// manifest. Returns the flattened f32 output.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if inputs.len() != self.info.params.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.info.name,
+                self.info.params.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&self.info.params).enumerate() {
+            let elems: usize = shape.iter().product();
+            if data.len() != elems {
+                bail!(
+                    "{}: input {i} has {} elems, shape {:?} needs {elems}",
+                    self.info.name,
+                    data.len(),
+                    shape
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The artifact registry + PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Vec<ArtifactInfo>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (reads `manifest.json`, creates the
+    /// PJRT CPU client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!(
+                "reading {:?} — run `make artifacts` first",
+                dir.join("manifest.json")
+            )
+        })?;
+        let parsed = json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let manifest = parsed
+            .as_arr()
+            .context("manifest.json is not an array")?
+            .iter()
+            .map(ArtifactInfo::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+        })
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::open("artifacts")
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.manifest.iter().find(|a| a.name == name)
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let info = self
+            .find(name)
+            .with_context(|| {
+                let names: Vec<&str> = self.manifest.iter().map(|a| a.name.as_str()).collect();
+                format!("artifact '{name}' not in manifest ({names:?})")
+            })?
+            .clone();
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { info, exe })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration tests: the full pipeline (mapping → circuit/NoC/NoP/DRAM
+//! → report) across models, modes and configs, asserting the paper's
+//! qualitative results end-to-end.
+
+use siam::config::{ChipMode, ChipletStructure, SiamConfig};
+use siam::coordinator::{simulate, sweep};
+use siam::cost::CostModel;
+use siam::gpu_baseline::{T4, V100};
+
+#[test]
+fn every_zoo_model_simulates() {
+    for name in siam::dnn::zoo_names() {
+        let ds = match *name {
+            "resnet50" | "vgg16" => "imagenet",
+            "vgg19" => "cifar100",
+            "drivenet" => "drivenet",
+            _ => "cifar10",
+        };
+        let cfg = SiamConfig::paper_default().with_model(name, ds);
+        let rep = simulate(&cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(rep.total.energy_pj > 0.0, "{name} energy");
+        assert!(rep.total.latency_ns > 0.0, "{name} latency");
+        assert!(rep.total.area_um2 > 0.0, "{name} area");
+        let min_util = if rep.total_tiles > 20 { 0.3 } else { 0.02 };
+        assert!(
+            rep.xbar_utilization > min_util && rep.xbar_utilization <= 1.0,
+            "{name} utilization {}",
+            rep.xbar_utilization
+        );
+    }
+}
+
+#[test]
+fn gpu_comparison_shape_holds() {
+    // Section 6.5: IMC wins on energy-efficiency by >30x against both
+    // GPUs and the V100 < T4 efficiency ordering is preserved.
+    let cfg = SiamConfig::paper_default()
+        .with_model("resnet50", "imagenet")
+        .with_tiles_per_chiplet(36);
+    let rep = simulate(&cfg).unwrap();
+    let eff = rep.inferences_per_joule();
+    let vs_v100 = eff / V100.inferences_per_joule();
+    let vs_t4 = eff / T4.inferences_per_joule();
+    assert!(vs_v100 > 30.0, "V100 advantage only {vs_v100:.1}x");
+    assert!(vs_t4 > 15.0, "T4 advantage only {vs_t4:.1}x");
+    assert!(vs_v100 > vs_t4, "V100 must be the weaker baseline");
+    // area: IMC die smaller than both GPUs (paper: 273 vs 525 / 815 mm²)
+    assert!(rep.total.area_mm2() < T4.area_mm2);
+}
+
+#[test]
+fn fig13_cost_improvement_shape() {
+    // small nets gain ~nothing; big nets gain a lot
+    let cost = CostModel::default();
+    let improvement = |model: &str, ds: &str| {
+        let base = SiamConfig::paper_default().with_model(model, ds);
+        let mono = simulate(&base.clone().with_chip_mode(ChipMode::Monolithic)).unwrap();
+        let chip = simulate(&base).unwrap();
+        cost.improvement_pct(
+            mono.silicon_area_mm2,
+            chip.num_chiplets,
+            chip.silicon_area_mm2 / chip.num_chiplets as f64,
+        )
+    };
+    let small = improvement("resnet110", "cifar10");
+    let big = improvement("vgg16", "imagenet");
+    assert!(big > 50.0, "VGG-16 improvement {big:.1}%");
+    assert!(small < big, "ResNet-110 ({small:.1}%) must gain less than VGG-16 ({big:.1}%)");
+}
+
+#[test]
+fn sweep_over_grid_is_consistent() {
+    let pts = sweep(
+        &SiamConfig::paper_default(),
+        &[9, 16],
+        &[Some(36), None],
+    )
+    .unwrap();
+    assert_eq!(pts.len(), 4);
+    for p in &pts {
+        // homogeneous architecture contains at least the used chiplets
+        assert!(p.report.num_chiplets >= p.report.num_chiplets_required);
+        if p.total_chiplets.is_none() {
+            assert_eq!(p.report.num_chiplets, p.report.num_chiplets_required);
+        }
+    }
+}
+
+#[test]
+fn config_file_round_trip_drives_simulation() {
+    let text = SiamConfig::paper_default()
+        .with_model("lenet5", "cifar10")
+        .to_toml_string()
+        .unwrap();
+    let dir = std::env::temp_dir().join("siam_test_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.toml");
+    std::fs::write(&path, &text).unwrap();
+    let cfg = SiamConfig::from_toml_file(&path).unwrap();
+    assert_eq!(cfg.dnn.model, "lenet5");
+    let rep = simulate(&cfg).unwrap();
+    assert_eq!(rep.model, "lenet5");
+}
+
+#[test]
+fn presets_in_configs_dir_are_valid() {
+    for entry in std::fs::read_dir(concat!(env!("CARGO_MANIFEST_DIR"), "/configs")).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) == Some("toml") {
+            SiamConfig::from_toml_file(&path)
+                .unwrap_or_else(|e| panic!("preset {path:?} invalid: {e}"));
+        }
+    }
+}
+
+#[test]
+fn chiplet_beats_monolithic_on_cost_not_performance() {
+    // chiplet architectures pay interconnect overhead but win fab cost
+    let base = SiamConfig::paper_default().with_model("vgg19", "cifar100");
+    let mono = simulate(&base.clone().with_chip_mode(ChipMode::Monolithic)).unwrap();
+    let chip = simulate(&base).unwrap();
+    // energy overhead of the chiplet system is bounded (same compute,
+    // plus NoP transfers and idle-window leakage)
+    let ratio = chip.total.energy_pj / mono.total.energy_pj;
+    assert!((1.0..15.0).contains(&ratio), "energy ratio {ratio}");
+    // fab cost must improve
+    let cost = CostModel::default();
+    let mono_c = cost.normalized_die_cost(mono.silicon_area_mm2);
+    let chip_c = cost.chiplet_system_cost(
+        chip.num_chiplets,
+        chip.silicon_area_mm2 / chip.num_chiplets as f64,
+    );
+    assert!(chip_c < mono_c);
+}
+
+#[test]
+fn bigger_batch_serializes() {
+    let mut cfg = SiamConfig::paper_default().with_model("lenet5", "cifar10");
+    let r1 = simulate(&cfg).unwrap();
+    cfg.dnn.batch = 8;
+    let r8 = simulate(&cfg).unwrap();
+    assert!(r8.total.latency_ns > 4.0 * r1.total.latency_ns);
+    assert!(r8.total.energy_pj > 4.0 * r1.total.energy_pj);
+}
+
+#[test]
+fn sparsity_reduces_crossbars() {
+    let dnn = siam::dnn::build_model("vgg16", "imagenet").unwrap();
+    let nlayers = dnn.weight_layers().len();
+    let mut cfg = SiamConfig::paper_default().with_model("vgg16", "imagenet");
+    let dense = simulate(&cfg).unwrap();
+    cfg.dnn.sparsity = Some(vec![0.5; nlayers]);
+    let sparse = simulate(&cfg).unwrap();
+    assert!(sparse.total_tiles < dense.total_tiles);
+    assert!(sparse.total.energy_pj < dense.total.energy_pj);
+}
+
+#[test]
+fn homogeneous_architecture_variants_rank_sanely() {
+    // Fig. 12a at 16 t/c: more homogeneous chiplets => more area & EDAP
+    let e36 = simulate(&SiamConfig::paper_default().with_total_chiplets(36)).unwrap();
+    let e100 = simulate(&SiamConfig::paper_default().with_total_chiplets(100)).unwrap();
+    assert!(e100.total.area_um2 > e36.total.area_um2);
+    assert!(e100.total.edap() > e36.total.edap());
+}

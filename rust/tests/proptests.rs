@@ -1,0 +1,246 @@
+//! Property-based tests on coordinator/engine invariants, driven by the
+//! in-tree deterministic RNG harness (`siam::util::check_property` —
+//! the offline build vendors no proptest).
+
+use siam::config::SiamConfig;
+use siam::dnn::build_model;
+use siam::mapping::{build_traffic, map_dnn, Flow, Placement};
+use siam::noc::{FlitSim, Mesh, PacketSim};
+use siam::util::{check_property, Rng};
+
+const MODELS: &[(&str, &str)] = &[
+    ("lenet5", "cifar10"),
+    ("nin", "cifar10"),
+    ("resnet20", "cifar10"),
+    ("resnet56", "cifar10"),
+    ("resnet110", "cifar10"),
+    ("drivenet", "drivenet"),
+];
+
+fn random_cfg(rng: &mut Rng) -> SiamConfig {
+    let mut cfg = SiamConfig::paper_default();
+    cfg.chiplet.xbar_rows = 1 << rng.range(5, 8); // 32..256
+    cfg.chiplet.xbar_cols = 1 << rng.range(5, 8);
+    cfg.chiplet.tiles_per_chiplet = rng.range(2, 36) as usize;
+    cfg.chiplet.xbars_per_tile = [4, 8, 16][rng.below(3) as usize];
+    cfg.chiplet.cols_per_adc = [4, 8][rng.below(2) as usize];
+    // keep cols_per_adc dividing xbar_cols (both powers of two >= 4)
+    cfg.dnn.weight_precision = [4, 8, 16][rng.below(3) as usize];
+    cfg.device.bits_per_cell = [1, 2][rng.below(2) as usize];
+    cfg.validate().expect("generated config must be valid");
+    cfg
+}
+
+#[test]
+fn mapping_invariants_hold_for_random_configs() {
+    check_property("mapping_invariants", 40, 0xA11CE, |rng| {
+        let (model, ds) = MODELS[rng.below(MODELS.len() as u64) as usize];
+        let cfg = random_cfg(rng);
+        let dnn = build_model(model, ds).unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let s = cfg.chiplet_size_xbars();
+
+        // 1. every weight layer mapped, share sums match totals
+        assert_eq!(map.per_layer.len(), dnn.weight_layers().len());
+        for lm in &map.per_layer {
+            let sum: usize = lm.chiplets.iter().map(|c| c.xbars).sum();
+            assert_eq!(sum, lm.xbars);
+            assert_eq!(lm.xbars, lm.rows * lm.cols);
+            assert!(lm.cell_utilization > 0.0 && lm.cell_utilization <= 1.0);
+            // 2. uniform split: imbalance <= 1 crossbar
+            if lm.spans_chiplets() {
+                let min = lm.chiplets.iter().map(|c| c.xbars).min().unwrap();
+                let max = lm.chiplets.iter().map(|c| c.xbars).max().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+        // 3. no chiplet over capacity; used counts consistent
+        let mut used = vec![0usize; map.num_chiplets];
+        for lm in &map.per_layer {
+            for sh in &lm.chiplets {
+                used[sh.chiplet] += sh.xbars;
+            }
+        }
+        for (c, (&got, &want)) in used.iter().zip(&map.chiplet_used_xbars).enumerate() {
+            assert_eq!(got, want, "chiplet {c} usage mismatch");
+            assert!(got <= s, "chiplet {c} over capacity");
+        }
+        // 4. utilization in (0, 1]
+        let u = map.xbar_utilization();
+        assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+    });
+}
+
+#[test]
+fn traffic_flows_are_wellformed() {
+    check_property("traffic_wellformed", 25, 0xBEEF, |rng| {
+        let (model, ds) = MODELS[rng.below(MODELS.len() as u64) as usize];
+        let cfg = random_cfg(rng);
+        let dnn = build_model(model, ds).unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let t = build_traffic(&dnn, &map, &pl, &cfg);
+
+        let nodes = pl.nodes() as u32;
+        for ep in &t.nop_epochs {
+            for f in &ep.flows {
+                assert!(f.src < nodes && f.dst < nodes, "NoP node out of range");
+                assert_ne!(f.src, f.dst, "self-loop flow");
+                assert!(f.count > 0 && f.stride > 0);
+            }
+        }
+        let tiles = cfg.chiplet.tiles_per_chiplet as u32;
+        for ep in &t.noc_epochs {
+            assert!(ep.chiplet < map.num_chiplets);
+            for f in &ep.flows {
+                assert!(f.src < tiles && f.dst < tiles, "tile out of range");
+                assert_ne!(f.src, f.dst);
+            }
+        }
+        // volumes are non-negative and consistent with epochs
+        assert!(t.intra_chiplet_bits >= 0.0);
+        if t.nop_epochs.is_empty() {
+            assert_eq!(t.accumulator_adds, 0);
+        }
+    });
+}
+
+#[test]
+fn packet_sim_conserves_packets_and_orders_flows() {
+    check_property("packet_conservation", 30, 0xC0FFEE, |rng| {
+        let n = rng.range(4, 36) as usize;
+        let mesh = Mesh::new(n);
+        let mut flows = Vec::new();
+        for _ in 0..rng.range(1, 20) {
+            let src = rng.below(n as u64) as u32;
+            let dst = rng.below(n as u64) as u32;
+            if src == dst {
+                continue;
+            }
+            flows.push(Flow {
+                src,
+                dst,
+                count: rng.range(1, 200),
+                start: rng.below(16),
+                stride: rng.range(1, 8),
+            });
+        }
+        let want: u64 = flows.iter().map(|f| f.count).sum();
+        let res = PacketSim::new(&mesh).run(&flows);
+        // 1. conservation
+        assert_eq!(res.packets, want);
+        // 2. completion bounds: at least the busiest link's serialization,
+        //    at most fully-serialized whole trace
+        if want > 0 {
+            assert!(res.completion_cycles >= 1);
+            let max_span: u64 = flows
+                .iter()
+                .map(|f| f.start + (f.count - 1) * f.stride + 1)
+                .max()
+                .unwrap_or(0);
+            let bound = max_span
+                + want * (mesh.width + mesh.height) as u64 * 4
+                + 4 * (mesh.width + mesh.height) as u64;
+            assert!(
+                res.completion_cycles <= bound,
+                "completion {} > bound {bound}",
+                res.completion_cycles
+            );
+            // 3. avg latency at least the minimum hop pipeline
+            assert!(res.avg_latency() >= 1.0);
+        }
+    });
+}
+
+#[test]
+fn packet_sim_tracks_flit_sim_on_random_small_traces() {
+    check_property("packet_vs_flit", 12, 0xD1CE, |rng| {
+        let mesh = Mesh::new(9 + rng.below(8) as usize);
+        let mut flows = Vec::new();
+        for _ in 0..rng.range(1, 6) {
+            let src = rng.below(mesh.nodes() as u64) as u32;
+            let dst = rng.below(mesh.nodes() as u64) as u32;
+            if src == dst {
+                continue;
+            }
+            flows.push(Flow {
+                src,
+                dst,
+                count: rng.range(5, 40),
+                start: rng.below(4),
+                stride: rng.range(1, 4),
+            });
+        }
+        if flows.is_empty() {
+            return;
+        }
+        let p = PacketSim::new(&mesh).run(&flows);
+        let f = FlitSim::new(&mesh, 16).run(&flows);
+        assert_eq!(p.packets, f.packets, "packet conservation differs");
+        let rel = (p.completion_cycles as f64 - f.completion_cycles as f64).abs()
+            / f.completion_cycles.max(1) as f64;
+        assert!(
+            rel < 0.5,
+            "packet {} vs flit {} (rel {rel:.2})",
+            p.completion_cycles,
+            f.completion_cycles
+        );
+    });
+}
+
+#[test]
+fn dram_subset_estimator_bounded_error() {
+    check_property("dram_subset_error", 20, 0x5EED, |rng| {
+        let bytes = (rng.range(64, 4096) * 64) as usize;
+        let full = siam::dram::estimate_with(
+            bytes,
+            &siam::config::DramConfig {
+                kind: siam::config::DramKind::Ddr4,
+                bus_bits: 64,
+                subset_fraction: 1.0,
+            },
+        );
+        let frac = 0.25 + 0.5 * rng.f64();
+        let sub = siam::dram::estimate_with(
+            bytes,
+            &siam::config::DramConfig {
+                kind: siam::config::DramKind::Ddr4,
+                bus_bits: 64,
+                subset_fraction: frac,
+            },
+        );
+        let err = (sub.edp() - full.edp()).abs() / full.edp();
+        // Fig. 7a: extrapolation error stays small for >=25% subsets
+        assert!(err < 0.10, "EDP error {err:.3} at fraction {frac:.2}");
+    });
+}
+
+#[test]
+fn cost_model_monotone_in_area() {
+    check_property("cost_monotone", 50, 0xFACE, |rng| {
+        let m = siam::cost::CostModel::default();
+        let a = 5.0 + rng.f64() * 500.0;
+        let b = a + 1.0 + rng.f64() * 100.0;
+        assert!(
+            m.normalized_die_cost(b) > m.normalized_die_cost(a),
+            "cost must grow with area: {a} vs {b}"
+        );
+        assert!(m.yield_of(b) < m.yield_of(a));
+    });
+}
+
+#[test]
+fn metrics_composition_laws() {
+    check_property("metrics_laws", 50, 0xABCD, |rng| {
+        let m1 = siam::Metrics::new(rng.f64() * 100.0, rng.f64() * 100.0, rng.f64() * 100.0);
+        let m2 = siam::Metrics::new(rng.f64() * 100.0, rng.f64() * 100.0, rng.f64() * 100.0);
+        let serial = m1.then(&m2);
+        let parallel = m1.alongside(&m2);
+        assert!(serial.latency_ns >= parallel.latency_ns);
+        assert!((serial.energy_pj - parallel.energy_pj).abs() < 1e-9);
+        assert!((serial.area_um2 - parallel.area_um2).abs() < 1e-9);
+        let r = m1.replicate(3);
+        assert!((r.area_um2 - 3.0 * m1.area_um2).abs() < 1e-9);
+        assert!((r.latency_ns - m1.latency_ns).abs() < 1e-9);
+    });
+}

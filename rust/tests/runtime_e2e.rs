@@ -1,0 +1,146 @@
+//! Runtime end-to-end tests: load the AOT-compiled Pallas crossbar
+//! artifacts on the PJRT CPU client from Rust and validate numerics
+//! against Rust-side oracles — the cross-language correctness proof of
+//! the three-layer stack.
+//!
+//! Requires `make artifacts` (skipped gracefully if absent, but the CI
+//! flow always builds them first).
+
+use siam::runtime::{functional, Runtime};
+use siam::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match Runtime::open(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime e2e ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "xbar_gemm_64x128x64_adc4",
+        "xbar_gemm_64x128x64_adc8",
+        "xbar_gemm_256x256x128_adc8",
+        "cnn_fwd_b4_adc4",
+        "cnn_fwd_b4_adc8",
+    ] {
+        assert!(rt.find(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn lossless_crossbar_gemm_matches_exact_integer_gemm() {
+    // 8-bit flash ADC covers the 128-row column current losslessly, so
+    // the bit-serial crossbar must reproduce the exact integer product.
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("xbar_gemm_64x128x64_adc8").unwrap();
+    let (m, k, n) = (64, 128, 64);
+    for seed in [1u64, 7, 42] {
+        let mut rng = Rng::new(seed);
+        let (x, w) = functional::synth_gemm_inputs(&mut rng, m, k, n);
+        let got = exe.run_f32(&[x.clone(), w.clone()]).unwrap();
+        let want = functional::ref_gemm(&x, &w, m, k, n);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1.0, // fp32 reassociation on ~1e6 sums
+                "seed {seed} elem {i}: crossbar {a} vs exact {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lossy_adc_deviates_but_correlates() {
+    let Some(rt) = runtime() else { return };
+    let e4 = rt.load("xbar_gemm_64x128x64_adc4").unwrap();
+    let (m, k, n) = (64, 128, 64);
+    let mut rng = Rng::new(3);
+    let (x, w) = functional::synth_gemm_inputs(&mut rng, m, k, n);
+    let got = e4.run_f32(&[x.clone(), w.clone()]).unwrap();
+    let want = functional::ref_gemm(&x, &w, m, k, n);
+    // 4-bit ADC quantization must introduce real error...
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err > 10.0, "4-bit ADC should quantize ({max_err})");
+    // ...but the outputs stay strongly correlated with the ideal GEMM
+    let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+    let (mg, mw) = (mean(&got), mean(&want));
+    let (mut num, mut dg, mut dw) = (0.0f64, 0.0f64, 0.0f64);
+    for (a, b) in got.iter().zip(&want) {
+        num += ((a - mg) * (b - mw)) as f64;
+        dg += ((a - mg) * (a - mg)) as f64;
+        dw += ((b - mw) * (b - mw)) as f64;
+    }
+    let corr = num / (dg.sqrt() * dw.sqrt());
+    assert!(corr > 0.85, "correlation {corr}");
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("xbar_gemm_64x128x64_adc8").unwrap();
+    // wrong arity
+    assert!(exe.run_f32(&[vec![0.0; 64 * 128]]).is_err());
+    // wrong element count
+    assert!(exe
+        .run_f32(&[vec![0.0; 64 * 128 + 1], vec![0.0; 128 * 64]])
+        .is_err());
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    let Some(rt) = runtime() else { return };
+    let err = match rt.load("does_not_exist") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("loading a missing artifact must fail"),
+    };
+    assert!(err.contains("does_not_exist"), "{err}");
+}
+
+#[test]
+fn functional_cnn_runs_and_adc_matters() {
+    let Some(rt) = runtime() else { return };
+    let r8 = functional::run_cnn(&rt, 8, 42).unwrap();
+    let r4 = functional::run_cnn(&rt, 4, 42).unwrap();
+    assert_eq!(r8.logits.len(), r8.batch * r8.classes);
+    assert!(r8.logits.iter().all(|v| v.is_finite()));
+    assert!(r4.logits.iter().all(|v| v.is_finite()));
+    // same weights, different ADC resolution => different numerics
+    let dev = r8
+        .logits
+        .iter()
+        .zip(&r4.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(dev > 1e-3, "ADC resolution must affect the output ({dev})");
+    // determinism: same seed, same result
+    let r8b = functional::run_cnn(&rt, 8, 42).unwrap();
+    assert_eq!(r8.logits, r8b.logits);
+}
+
+#[test]
+fn gemm_scales_to_larger_tiles() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("xbar_gemm_256x256x128_adc8").unwrap();
+    let (m, k, n) = (256, 256, 128);
+    let mut rng = Rng::new(11);
+    let (x, w) = functional::synth_gemm_inputs(&mut rng, m, k, n);
+    let got = exe.run_f32(&[x.clone(), w.clone()]).unwrap();
+    let want = functional::ref_gemm(&x, &w, m, k, n);
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    // K=256 spans two 128-row crossbars with digital (exact) accumulation
+    assert!(max_err <= 2.0, "max err {max_err}");
+}
