@@ -1,12 +1,14 @@
 //! Design-space exploration (the paper's Figs. 11/12 axes): sweep tiles
-//! per chiplet × chiplet count for a DNN, print the EDAP landscape and
-//! the optimal point.
+//! per chiplet × chiplet count for a DNN with the parallel memoizing
+//! sweep engine, print the EDAP landscape, the ranking, and the
+//! serial-vs-parallel wall-clock.
 //!
 //! Run with: `cargo run --release --example design_space_exploration [model] [dataset]`
 
 use siam::config::SiamConfig;
-use siam::coordinator::{dse, sweep};
+use siam::coordinator::{FigureOfMerit, SweepBuilder};
 use siam::util::table::{eng, Table};
+use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -18,9 +20,16 @@ fn main() -> anyhow::Result<()> {
     let counts = [Some(16), Some(36), Some(64), Some(100), None];
 
     println!("== DSE for {model}/{dataset}: tiles/chiplet × chiplet count ==\n");
-    let pts = sweep(&base, &tiles, &counts)?;
+    let t0 = Instant::now();
+    let result = SweepBuilder::new(&base)
+        .tiles(&tiles)
+        .chiplet_counts(&counts)
+        .figure_of_merit(FigureOfMerit::Edap)
+        .run()?;
+    let parallel_s = t0.elapsed().as_secs_f64();
 
     let mut t = Table::new(&[
+        "rank",
         "tiles/chiplet",
         "chiplets",
         "used",
@@ -30,8 +39,9 @@ fn main() -> anyhow::Result<()> {
         "latency ms",
         "EDAP pJ·ns·mm2",
     ]);
-    for p in &pts {
+    for (rank, p) in result.ranked().iter().enumerate() {
         t.row(&[
+            (rank + 1).to_string(),
             p.tiles_per_chiplet.to_string(),
             p.total_chiplets
                 .map(|c| c.to_string())
@@ -46,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    if let Some(best) = dse::best_by_edap(&pts) {
+    if let Some(best) = result.best() {
         println!(
             "\nEDAP-optimal design: {} tiles/chiplet, {} chiplets ({}) -> {:.3e}",
             best.tiles_per_chiplet,
@@ -57,5 +67,21 @@ fn main() -> anyhow::Result<()> {
             best.edap()
         );
     }
+
+    // serial reference: same grid on one worker, fresh caches
+    let t0 = Instant::now();
+    let serial = SweepBuilder::new(&base)
+        .tiles(&tiles)
+        .chiplet_counts(&counts)
+        .serial()
+        .run()?;
+    let serial_s = t0.elapsed().as_secs_f64();
+    assert_eq!(serial.len(), result.len(), "engines must agree");
+    println!(
+        "\nsweep wall-clock: serial {serial_s:.2}s, parallel {parallel_s:.2}s \
+         ({:.1}x speedup on {} points)",
+        serial_s / parallel_s.max(1e-9),
+        result.len(),
+    );
     Ok(())
 }

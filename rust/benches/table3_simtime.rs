@@ -4,10 +4,18 @@
 //! roughly size-proportional growth are the reproducible shape (our
 //! substrate is a Rust reimplementation, so absolute times are far
 //! smaller).
+//!
+//! The second section measures what Table 3 is really about —
+//! design-space-exploration throughput: the same Fig. 11/12 grid swept
+//! by the serial reference engine and by the parallel memoizing engine
+//! (`SweepBuilder`), with the rankings cross-checked point by point.
+//! This is the before/after evidence for the sweep-engine rework logged
+//! in CHANGES.md.
 
 use siam::config::SiamConfig;
-use siam::coordinator::simulate;
+use siam::coordinator::{simulate, SweepBuilder};
 use siam::util::table::Table;
+use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     println!("== Table 3: SIAM simulation time ==\n");
@@ -27,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let mut first: Option<f64> = None;
     for (model, ds, paper_h) in nets {
         let cfg = SiamConfig::paper_default().with_model(model, ds);
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let rep = simulate(&cfg)?;
         let secs = t0.elapsed().as_secs_f64();
         let base = *first.get_or_insert(secs);
@@ -41,6 +49,54 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     println!("\npaper shape: simulation time grows with model size;");
-    println!("VGG-16 is the slowest, ResNet-110 the fastest.");
+    println!("VGG-16 is the slowest, ResNet-110 the fastest.\n");
+
+    println!("== DSE sweep wall-clock: serial vs parallel engine ==\n");
+    let tiles = [4usize, 9, 16, 25, 36];
+    let counts = [Some(16), Some(36), Some(64), Some(100), None];
+    let mut t = Table::new(&[
+        "network",
+        "points",
+        "serial (s)",
+        "parallel (s)",
+        "speedup",
+        "epoch cache",
+    ]);
+    for (model, ds) in [("resnet110", "cifar10"), ("vgg19", "cifar100")] {
+        let base = SiamConfig::paper_default().with_model(model, ds);
+        let builder = SweepBuilder::new(&base).tiles(&tiles).chiplet_counts(&counts);
+
+        let t0 = Instant::now();
+        let serial = builder.clone().serial().run()?;
+        let serial_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let parallel = builder.run()?;
+        let parallel_s = t0.elapsed().as_secs_f64();
+
+        // correctness gate: identical surviving points in identical order
+        assert_eq!(serial.len(), parallel.len(), "{model}: point count differs");
+        for (s, p) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!(s.tiles_per_chiplet, p.tiles_per_chiplet);
+            assert_eq!(s.total_chiplets, p.total_chiplets);
+            assert_eq!(
+                s.edap().to_bits(),
+                p.edap().to_bits(),
+                "{model}: EDAP diverged at {} t/c",
+                s.tiles_per_chiplet
+            );
+        }
+
+        t.row(&[
+            model.into(),
+            parallel.len().to_string(),
+            format!("{serial_s:.2}"),
+            format!("{parallel_s:.2}"),
+            format!("{:.1}x", serial_s / parallel_s.max(1e-9)),
+            "shared".into(),
+        ]);
+    }
+    t.print();
+    println!("\nrankings verified bit-identical between engines.");
     Ok(())
 }

@@ -17,9 +17,13 @@ use crate::config::{BufferType, ChipletConfig, DeviceConfig, MemCell};
 /// A circuit block: fixed area + leakage, per-operation energy/latency.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Component {
+    /// Fixed silicon area, µm².
     pub area_um2: f64,
+    /// Energy per operation, pJ.
     pub energy_per_op_pj: f64,
+    /// Latency per operation, ns.
     pub latency_per_op_ns: f64,
+    /// Static leakage, µW.
     pub leakage_uw: f64,
 }
 

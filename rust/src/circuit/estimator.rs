@@ -4,18 +4,112 @@
 
 use super::components as comp;
 use super::tech::Tech;
-use crate::config::{ChipMode, ReadOut, SiamConfig};
+use crate::config::{BufferType, ChipMode, MemCell, ReadOut, SiamConfig};
 use crate::dnn::{Dnn, LayerKind};
 use crate::mapping::{MappingResult, Traffic};
 use crate::metrics::{Breakdown, Metrics};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Per-layer compute cost (energy per inference, latency per inference).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LayerCircuit {
+    /// Compute energy of the layer per inference, pJ.
     pub energy_pj: f64,
+    /// Compute latency of the layer per inference, ns.
     pub latency_ns: f64,
     /// ADC conversions performed (exposed for ablations).
     pub conversions: u64,
+}
+
+/// Every input [`CircuitEstimator::layer_cost`] reads, with floats
+/// stored as bit patterns so the key is `Eq + Hash`. Two configurations
+/// with equal keys produce identical per-layer cost vectors; design
+/// points of a sweep that vary only `tiles_per_chiplet` / chiplet count
+/// (the Figs. 9/11/12 axes) therefore share one entry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct LayerCostKey {
+    model: String,
+    dataset: String,
+    weight_precision: u8,
+    activation_precision: u8,
+    batch: usize,
+    sparsity_bits: Option<Vec<u64>>,
+    cell: MemCell,
+    bits_per_cell: u8,
+    tech_node_nm: u32,
+    r_on_bits: u64,
+    r_off_ratio_bits: u64,
+    v_read_bits: u64,
+    xbar_rows: usize,
+    xbar_cols: usize,
+    adc_bits: u8,
+    cols_per_adc: usize,
+    read_out: ReadOut,
+    buffer_type: BufferType,
+    frequency_bits: u64,
+}
+
+impl LayerCostKey {
+    fn of(cfg: &SiamConfig) -> LayerCostKey {
+        LayerCostKey {
+            model: cfg.dnn.model.clone(),
+            dataset: cfg.dnn.dataset.clone(),
+            weight_precision: cfg.dnn.weight_precision,
+            activation_precision: cfg.dnn.activation_precision,
+            batch: cfg.dnn.batch,
+            sparsity_bits: cfg
+                .dnn
+                .sparsity
+                .as_ref()
+                .map(|v| v.iter().map(|s| s.to_bits()).collect()),
+            cell: cfg.device.cell,
+            bits_per_cell: cfg.device.bits_per_cell,
+            tech_node_nm: cfg.device.tech_node_nm,
+            r_on_bits: cfg.device.r_on.to_bits(),
+            r_off_ratio_bits: cfg.device.r_off_ratio.to_bits(),
+            v_read_bits: cfg.device.v_read.to_bits(),
+            xbar_rows: cfg.chiplet.xbar_rows,
+            xbar_cols: cfg.chiplet.xbar_cols,
+            adc_bits: cfg.chiplet.adc_bits,
+            cols_per_adc: cfg.chiplet.cols_per_adc,
+            read_out: cfg.chiplet.read_out,
+            buffer_type: cfg.chiplet.buffer_type,
+            frequency_bits: cfg.chiplet.frequency_mhz.to_bits(),
+        }
+    }
+}
+
+/// Thread-safe cache of per-layer compute-cost vectors, keyed by the
+/// complete circuit-relevant configuration (see [`LayerCostKey`] —
+/// notably *not* `tiles_per_chiplet` or the chiplet count, which the
+/// per-layer costs are independent of).
+///
+/// Shared across the points of a design-space sweep via
+/// [`crate::coordinator::SweepContext`], so the Eq.-1 geometry walk and
+/// the bit-serial energy model run once per sweep instead of once per
+/// point. A cache hit returns the exact vector the uncached path would
+/// compute.
+#[derive(Debug, Default)]
+pub struct LayerCostCache {
+    map: Mutex<HashMap<LayerCostKey, Arc<Vec<LayerCircuit>>>>,
+}
+
+impl LayerCostCache {
+    /// Create an empty cache.
+    pub fn new() -> LayerCostCache {
+        LayerCostCache::default()
+    }
+
+    /// Number of distinct circuit configurations cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// Output of the circuit estimator.
@@ -44,6 +138,7 @@ pub struct CircuitReport {
 }
 
 impl CircuitReport {
+    /// Compute area/energy/latency/leakage rolled into one [`Metrics`].
     pub fn total_metrics(&self) -> Metrics {
         Metrics {
             area_um2: self.chiplets_area_um2 + self.global_area_um2,
@@ -57,12 +152,15 @@ impl CircuitReport {
 /// Fixed per-chiplet digital units (pool/act/accumulator/output buffer).
 const CHIPLET_OUT_BUFFER_BITS: f64 = 32.0 * 1024.0 * 8.0; // 32 kB
 
+/// Bottom-up circuit estimator for one configuration (Section 4.3.1).
 pub struct CircuitEstimator<'a> {
     cfg: &'a SiamConfig,
     tech: Tech,
 }
 
 impl<'a> CircuitEstimator<'a> {
+    /// Estimator for `cfg`, with technology scaling resolved from the
+    /// device block.
     pub fn new(cfg: &'a SiamConfig) -> Self {
         CircuitEstimator {
             cfg,
@@ -177,8 +275,48 @@ impl<'a> CircuitEstimator<'a> {
         self.cfg.clock_period_ns()
     }
 
+    /// The per-layer cost vector for a mapped DNN, through the cache
+    /// when one is supplied.
+    fn layer_costs(
+        &self,
+        dnn: &Dnn,
+        map: &MappingResult,
+        cache: Option<&LayerCostCache>,
+    ) -> Arc<Vec<LayerCircuit>> {
+        let compute = || {
+            Arc::new(
+                map.per_layer
+                    .iter()
+                    .map(|lm| self.layer_cost(&dnn.layers[lm.layer_idx], lm))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        match cache {
+            Some(c) => {
+                let key = LayerCostKey::of(self.cfg);
+                c.map.lock().unwrap().entry(key).or_insert_with(compute).clone()
+            }
+            None => compute(),
+        }
+    }
+
     /// Full circuit estimation for a mapped DNN.
     pub fn estimate(&self, dnn: &Dnn, map: &MappingResult, traffic: &Traffic) -> CircuitReport {
+        self.estimate_cached(dnn, map, traffic, None)
+    }
+
+    /// [`estimate`](CircuitEstimator::estimate) with an optional
+    /// [`LayerCostCache`] shared across sweep points. Per-layer compute
+    /// costs are independent of the chiplet partitioning, so a sweep
+    /// computes them once; results are bit-identical to the uncached
+    /// path.
+    pub fn estimate_cached(
+        &self,
+        dnn: &Dnn,
+        map: &MappingResult,
+        traffic: &Traffic,
+        cache: Option<&LayerCostCache>,
+    ) -> CircuitReport {
         let mut rep = CircuitReport::default();
         let ch = &self.cfg.chiplet;
         let tech = &self.tech;
@@ -200,13 +338,12 @@ impl<'a> CircuitEstimator<'a> {
         rep.global_area_um2 =
             gbuf_bits * buf.area_um2 + self.cfg.system.accumulator_size as f64 * gacc.area_um2;
 
-        // ---- per weight-layer compute
+        // ---- per weight-layer compute (vector shared via the cache)
+        let costs = self.layer_costs(dnn, map, cache);
         let mut e_imc = 0.0;
         let total_xbars = map.total_xbars().max(1) as f64;
         let mut active_share_time_ns = 0.0; // Σ share × layer latency
-        for lm in &map.per_layer {
-            let layer = &dnn.layers[lm.layer_idx];
-            let lc = self.layer_cost(layer, lm);
+        for (lm, &lc) in map.per_layer.iter().zip(costs.iter()) {
             e_imc += lc.energy_pj;
             rep.latency_ns += lc.latency_ns;
             rep.energy_pj += lc.energy_pj;
@@ -349,6 +486,37 @@ mod tests {
             .map(|(_, m)| m.energy_pj)
             .sum();
         assert!((sum - rep.energy_pj).abs() / rep.energy_pj < 1e-9);
+    }
+
+    #[test]
+    fn layer_cost_cache_is_transparent() {
+        // cached and uncached estimation must agree bit-for-bit, and
+        // points differing only in tiles/chiplet must share one entry
+        let cache = LayerCostCache::new();
+        let cfg16 = SiamConfig::paper_default();
+        let cfg36 = SiamConfig::paper_default().with_tiles_per_chiplet(36);
+        for cfg in [&cfg16, &cfg36] {
+            let dnn = build_model("resnet110", "cifar10").unwrap();
+            let map = map_dnn(&dnn, cfg).unwrap();
+            let pl = Placement::new(map.num_chiplets);
+            let traffic = build_traffic(&dnn, &map, &pl, cfg);
+            let est = CircuitEstimator::new(cfg);
+            let plain = est.estimate(&dnn, &map, &traffic);
+            let cached = est.estimate_cached(&dnn, &map, &traffic, Some(&cache));
+            assert_eq!(plain.energy_pj.to_bits(), cached.energy_pj.to_bits());
+            assert_eq!(plain.latency_ns.to_bits(), cached.latency_ns.to_bits());
+            assert_eq!(plain.per_layer.len(), cached.per_layer.len());
+        }
+        assert_eq!(cache.len(), 1, "tiles/chiplet must not split the key");
+        // a different ADC resolution is a genuinely different circuit
+        let mut cfg_adc = SiamConfig::paper_default();
+        cfg_adc.chiplet.adc_bits = 8;
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg_adc).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg_adc);
+        CircuitEstimator::new(&cfg_adc).estimate_cached(&dnn, &map, &traffic, Some(&cache));
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

@@ -8,5 +8,5 @@ pub mod components;
 pub mod estimator;
 pub mod tech;
 
-pub use estimator::{CircuitEstimator, CircuitReport, LayerCircuit};
+pub use estimator::{CircuitEstimator, CircuitReport, LayerCircuit, LayerCostCache};
 pub use tech::Tech;

@@ -9,6 +9,7 @@ use crate::config::DeviceConfig;
 /// Scaling factors relative to the 32 nm calibration point.
 #[derive(Debug, Clone, Copy)]
 pub struct Tech {
+    /// Technology node, nm.
     pub node_nm: u32,
     /// Area multiplier vs 32 nm.
     pub area: f64,
@@ -19,6 +20,7 @@ pub struct Tech {
 }
 
 impl Tech {
+    /// Scaling factors for `node_nm` relative to 32 nm.
     pub fn new(node_nm: u32) -> Tech {
         let s = node_nm as f64 / 32.0;
         Tech {
@@ -29,6 +31,7 @@ impl Tech {
         }
     }
 
+    /// Scaling factors for a device configuration's node.
     pub fn from_device(dev: &DeviceConfig) -> Tech {
         Tech::new(dev.tech_node_nm)
     }

@@ -42,6 +42,7 @@ impl SiamConfig {
         Ok(cfg)
     }
 
+    /// Serialize the configuration back to the TOML subset.
     pub fn to_toml_string(&self) -> Result<String> {
         Ok(parse::write(self))
     }
@@ -56,34 +57,41 @@ impl SiamConfig {
         1.0e3 / self.chiplet.frequency_mhz
     }
 
-    /// Builder-style override helpers used by the sweep driver.
+    /// Builder-style override: set the DNN workload.
     pub fn with_model(mut self, model: &str, dataset: &str) -> Self {
         self.dnn.model = model.to_string();
         self.dnn.dataset = dataset.to_string();
         self
     }
 
+    /// Builder-style override: set the chiplet size in tiles (the
+    /// Figs. 9/11/12 sweep axis).
     pub fn with_tiles_per_chiplet(mut self, tiles: usize) -> Self {
         self.chiplet.tiles_per_chiplet = tiles;
         self
     }
 
+    /// Builder-style override: set the chiplet allocation policy.
     pub fn with_chiplet_structure(mut self, structure: ChipletStructure) -> Self {
         self.system.structure = structure;
         self
     }
 
+    /// Builder-style override: fix a homogeneous architecture with
+    /// `count` chiplets.
     pub fn with_total_chiplets(mut self, count: usize) -> Self {
         self.system.structure = ChipletStructure::Homogeneous;
         self.system.total_chiplets = Some(count);
         self
     }
 
+    /// Builder-style override: monolithic vs chiplet integration.
     pub fn with_chip_mode(mut self, mode: ChipMode) -> Self {
         self.system.chip_mode = mode;
         self
     }
 
+    /// Builder-style override: set the NoP packet clock.
     pub fn with_nop_frequency_mhz(mut self, f: f64) -> Self {
         self.system.nop.frequency_mhz = f;
         self

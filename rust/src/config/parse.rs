@@ -9,12 +9,18 @@
 use super::types::*;
 use std::collections::BTreeMap;
 
+/// A parsed TOML-subset value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Double-quoted string.
     Str(String),
+    /// `true` / `false`.
     Bool(bool),
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// Numeric array (`[0.1, 0.2]`).
     Array(Vec<f64>),
 }
 

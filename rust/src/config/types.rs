@@ -2,44 +2,55 @@
 
 
 /// Memory cell technology of the IMC crossbar.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MemCell {
+    /// Resistive RAM crosspoint cell.
     Rram,
+    /// 6T SRAM bitcell used as an IMC cell.
     Sram,
 }
 
 /// Crossbar read-out: one row at a time (sequential) or all rows in
 /// parallel with analog summation on the bitline.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ReadOut {
+    /// One row at a time (digital-friendly, slow).
     Sequential,
+    /// All rows at once with analog bitline summation.
     Parallel,
 }
 
 /// On-chip buffer implementation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BufferType {
+    /// SRAM banks (dense, slower).
     Sram,
+    /// Register file (fast, area/energy hungry).
     RegisterFile,
 }
 
 /// Intra-chiplet interconnect topology.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NocTopology {
+    /// 2-D mesh with X-Y wormhole routing (the paper's default).
     Mesh,
+    /// Binary tree (modeled analytically like the H-tree).
     Tree,
+    /// NeuroSim-style H-tree.
     HTree,
 }
 
 /// Whole-system integration style.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ChipMode {
+    /// One large die, no NoP (the Fig. 1/13 baseline).
     Monolithic,
+    /// 2.5-D chiplet system on a passive interposer.
     Chiplet,
 }
 
 /// Chiplet allocation policy (Section 4.2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ChipletStructure {
     /// Fixed, user-supplied chiplet count; error if the DNN does not fit.
     Homogeneous,
@@ -48,9 +59,11 @@ pub enum ChipletStructure {
 }
 
 /// DRAM standard for the external-memory chiplet.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DramKind {
+    /// DDR3-1600 timing/energy (Micron [26]).
     Ddr3,
+    /// DDR4-2400 timing/energy (Micron [27]).
     Ddr4,
 }
 
@@ -88,7 +101,9 @@ impl Default for DnnConfig {
 /// Device & technology block of Table 2.
 #[derive(Debug, Clone)]
 pub struct DeviceConfig {
+    /// CMOS technology node, nm (the paper evaluates 32 nm).
     pub tech_node_nm: u32,
+    /// IMC memory-cell technology.
     pub cell: MemCell,
     /// Levels per RRAM cell as bits (1 => binary cell).
     pub bits_per_cell: u8,
@@ -124,12 +139,15 @@ pub struct ChipletConfig {
     pub tiles_per_chiplet: usize,
     /// Crossbar arrays per tile (paper: 16).
     pub xbars_per_tile: usize,
+    /// Implementation of the tile/chiplet buffers.
     pub buffer_type: BufferType,
     /// Flash-ADC resolution, bits.
     pub adc_bits: u8,
     /// Columns sharing one ADC via the column mux (paper: 8).
     pub cols_per_adc: usize,
+    /// Crossbar read-out scheme.
     pub read_out: ReadOut,
+    /// Intra-chiplet interconnect topology.
     pub noc_topology: NocTopology,
     /// NoC channel (flit) width, bits.
     pub noc_width: usize,
@@ -220,6 +238,7 @@ impl Default for NopConfig {
 /// DRAM engine parameters (Section 4.5).
 #[derive(Debug, Clone)]
 pub struct DramConfig {
+    /// DRAM standard of the memory chiplet.
     pub kind: DramKind,
     /// Data-bus width, bits (x64 DIMM).
     pub bus_bits: usize,
@@ -241,7 +260,9 @@ impl Default for DramConfig {
 /// Inter-chiplet architecture block of Table 2.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
+    /// Monolithic die or chiplet system.
     pub chip_mode: ChipMode,
+    /// Chiplet allocation policy (custom vs homogeneous).
     pub structure: ChipletStructure,
     /// Homogeneous mode: fixed chiplet count (must be a perfect square for
     /// the mesh placement). Ignored by custom mode.
@@ -250,6 +271,7 @@ pub struct SystemConfig {
     pub accumulator_size: usize,
     /// Global buffer capacity, kB.
     pub global_buffer_kb: usize,
+    /// Network-on-package parameters.
     pub nop: NopConfig,
 }
 
@@ -269,9 +291,14 @@ impl Default for SystemConfig {
 /// Complete SIAM configuration (all Table-2 blocks).
 #[derive(Debug, Clone, Default)]
 pub struct SiamConfig {
+    /// DNN algorithm block.
     pub dnn: DnnConfig,
+    /// Device & technology block.
     pub device: DeviceConfig,
+    /// Intra-chiplet architecture block.
     pub chiplet: ChipletConfig,
+    /// Inter-chiplet system block.
     pub system: SystemConfig,
+    /// DRAM engine block.
     pub dram: DramConfig,
 }

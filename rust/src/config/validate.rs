@@ -19,6 +19,8 @@ impl std::fmt::Display for ValidationError {
 impl std::error::Error for ValidationError {}
 
 impl SiamConfig {
+    /// Reject physically meaningless or inconsistent inputs with an
+    /// actionable message; every engine assumes a validated config.
     pub fn validate(&self) -> Result<(), ValidationError> {
         let err = |msg: String| Err(ValidationError(msg));
 

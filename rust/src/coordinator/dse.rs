@@ -1,64 +1,351 @@
-//! Design-space exploration driver: sweep tiles/chiplet × chiplet count
-//! (the paper's Figs. 9, 11, 12, 14 axes) and rank by a figure of merit.
+//! Design-space exploration: a parallel, memoizing sweep engine over
+//! the `tiles/chiplet × chiplet count` axes of the paper's Figs. 9, 11,
+//! 12 and 14.
+//!
+//! [`SweepBuilder`] is the front door: it fixes a point grid, evaluates
+//! every point through the staged pipeline (see
+//! [`pipeline`](super::pipeline)) and ranks the results by a
+//! [`FigureOfMerit`]. Evaluation runs on a work-stealing pool of scoped
+//! threads — workers claim grid indices from a shared atomic counter,
+//! so a slow point (say VGG-16 at 4 tiles/chiplet) never idles the
+//! other cores — while the sweep-invariant stages (DNN graph, per-layer
+//! circuit costs, DRAM estimate) and repeated NoC/NoP epochs are shared
+//! through one [`SweepContext`].
+//!
+//! Results are returned **in grid order regardless of completion
+//! order**, and every stage cache is keyed by the full set of inputs it
+//! reads, so the parallel engine is bit-identical to the serial one
+//! (asserted by the regression tests below and measured by
+//! `benches/table3_simtime.rs`).
 
-use super::{simulate, SimReport};
+use super::pipeline::{run_point, SweepContext};
+use super::SimReport;
 use crate::config::{ChipletStructure, SiamConfig};
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// The `tiles_per_chiplet` coordinate of the point.
     pub tiles_per_chiplet: usize,
     /// None = custom structure (exactly-fitting chiplet count).
     pub total_chiplets: Option<usize>,
+    /// The full simulation report of the point.
     pub report: SimReport,
 }
 
 impl SweepPoint {
+    /// Energy-delay-area product of the point (the default ranking key).
     pub fn edap(&self) -> f64 {
         self.report.total.edap()
     }
 }
 
-/// Sweep the chiplet design space. Points that do not fit (homogeneous
-/// overflow) are skipped, mirroring Algorithm 1's error path.
+/// Ranking key for sweep results. All variants are "lower is better"
+/// after internal sign normalization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FigureOfMerit {
+    /// Energy × delay × area (the paper's Fig. 12 metric).
+    #[default]
+    Edap,
+    /// Energy × delay.
+    Edp,
+    /// Total inference energy.
+    Energy,
+    /// Total inference latency.
+    Latency,
+    /// Total area.
+    Area,
+    /// Energy efficiency (ranked higher-is-better internally).
+    InferencesPerJoule,
+}
+
+impl FigureOfMerit {
+    /// Scalar score of a report under this figure of merit; lower is
+    /// better for every variant.
+    pub fn score(&self, report: &SimReport) -> f64 {
+        match self {
+            FigureOfMerit::Edap => report.total.edap(),
+            FigureOfMerit::Edp => report.total.edp(),
+            FigureOfMerit::Energy => report.total.energy_pj,
+            FigureOfMerit::Latency => report.total.latency_ns,
+            FigureOfMerit::Area => report.total.area_um2,
+            FigureOfMerit::InferencesPerJoule => -report.inferences_per_joule(),
+        }
+    }
+}
+
+/// Outcome of a sweep: all surviving points in deterministic grid order
+/// plus the ranking configuration.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    /// Evaluated points in grid order (tiles-major, counts-minor);
+    /// points whose homogeneous architecture could not fit the DNN are
+    /// skipped, mirroring Algorithm 1's error path.
+    pub points: Vec<SweepPoint>,
+    fom: FigureOfMerit,
+}
+
+impl SweepResult {
+    /// Points sorted by the figure of merit, best first. Ties keep grid
+    /// order (stable sort), so rankings are deterministic.
+    pub fn ranked(&self) -> Vec<&SweepPoint> {
+        let mut v: Vec<&SweepPoint> = self.points.iter().collect();
+        v.sort_by(|a, b| self.fom.score(&a.report).total_cmp(&self.fom.score(&b.report)));
+        v
+    }
+
+    /// The best point under the configured figure of merit.
+    pub fn best(&self) -> Option<&SweepPoint> {
+        self.ranked().into_iter().next()
+    }
+
+    /// Number of surviving points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when no point survived (e.g. every architecture overflowed).
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// Builder for a design-space sweep: point grid, figure of merit,
+/// parallelism and early-exit budget.
+///
+/// # Examples
+///
+/// ```
+/// use siam::config::SiamConfig;
+/// use siam::coordinator::{FigureOfMerit, SweepBuilder};
+///
+/// let base = SiamConfig::paper_default().with_model("lenet5", "cifar10");
+/// let result = SweepBuilder::new(&base)
+///     .tiles(&[4, 16])
+///     .chiplet_counts(&[None]) // custom (exactly-fitting) architecture
+///     .figure_of_merit(FigureOfMerit::Edap)
+///     .run()
+///     .unwrap();
+/// assert_eq!(result.len(), 2);
+/// let best = result.best().unwrap();
+/// assert!(result.points.iter().all(|p| best.edap() <= p.edap()));
+/// ```
+#[derive(Debug, Clone)]
+pub struct SweepBuilder {
+    base: SiamConfig,
+    tiles: Vec<usize>,
+    counts: Vec<Option<usize>>,
+    fom: FigureOfMerit,
+    threads: Option<usize>,
+    budget: Option<usize>,
+}
+
+impl SweepBuilder {
+    /// A sweep over `base` with the paper's default grid: tiles/chiplet
+    /// ∈ {4, 9, 16, 25, 36} on the custom (exactly-fitting)
+    /// architecture, ranked by EDAP, using all available cores.
+    pub fn new(base: &SiamConfig) -> SweepBuilder {
+        SweepBuilder {
+            base: base.clone(),
+            tiles: vec![4, 9, 16, 25, 36],
+            counts: vec![None],
+            fom: FigureOfMerit::default(),
+            threads: None,
+            budget: None,
+        }
+    }
+
+    /// Set the tiles-per-chiplet axis of the grid.
+    pub fn tiles(mut self, tiles: &[usize]) -> SweepBuilder {
+        self.tiles = tiles.to_vec();
+        self
+    }
+
+    /// Set the chiplet-count axis of the grid; `None` entries evaluate
+    /// the custom (exactly-fitting) architecture.
+    pub fn chiplet_counts(mut self, counts: &[Option<usize>]) -> SweepBuilder {
+        self.counts = counts.to_vec();
+        self
+    }
+
+    /// Set the ranking key (default: EDAP).
+    pub fn figure_of_merit(mut self, fom: FigureOfMerit) -> SweepBuilder {
+        self.fom = fom;
+        self
+    }
+
+    /// Fix the worker count (default: all available cores).
+    pub fn threads(mut self, threads: usize) -> SweepBuilder {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    /// Force single-threaded evaluation (the reference engine used by
+    /// the determinism regression tests).
+    pub fn serial(self) -> SweepBuilder {
+        self.threads(1)
+    }
+
+    /// Early-exit budget: evaluate only the first `budget` grid points
+    /// (grid order, so the truncation is deterministic). Useful for
+    /// bounding coarse scans of large grids.
+    pub fn budget(mut self, budget: usize) -> SweepBuilder {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// The grid in deterministic order: tiles-major, counts-minor,
+    /// truncated to the budget.
+    fn grid(&self) -> Vec<(usize, Option<usize>)> {
+        let mut g: Vec<(usize, Option<usize>)> = self
+            .tiles
+            .iter()
+            .flat_map(|&t| self.counts.iter().map(move |&c| (t, c)))
+            .collect();
+        if let Some(b) = self.budget {
+            g.truncate(b);
+        }
+        g
+    }
+
+    /// Evaluate the sweep and return the surviving points in grid
+    /// order.
+    ///
+    /// Points whose homogeneous architecture cannot fit the DNN are
+    /// skipped (Algorithm 1's error path); any other failure aborts the
+    /// sweep with the first error in grid order.
+    pub fn run(&self) -> Result<SweepResult> {
+        let grid = self.grid();
+        let ctx = SweepContext::new(&self.base)?;
+        let threads = self
+            .threads
+            .unwrap_or_else(default_threads)
+            .min(grid.len().max(1));
+
+        if threads <= 1 {
+            let mut points = Vec::with_capacity(grid.len());
+            for &(tiles, count) in &grid {
+                if let Some(p) = eval_point(&self.base, &ctx, tiles, count)? {
+                    points.push(p);
+                }
+            }
+            return Ok(SweepResult {
+                points,
+                fom: self.fom,
+            });
+        }
+
+        // Work-stealing pool: workers claim the next unevaluated grid
+        // index from a shared counter and write into their point's slot,
+        // so results land in grid order no matter who finishes when.
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<Option<SweepPoint>>>>> =
+            grid.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= grid.len() {
+                        break;
+                    }
+                    let (tiles, count) = grid[i];
+                    let r = eval_point(&self.base, &ctx, tiles, count);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+
+        let mut points = Vec::with_capacity(grid.len());
+        for slot in slots {
+            match slot.into_inner().unwrap() {
+                Some(Ok(Some(p))) => points.push(p),
+                Some(Ok(None)) => {} // skipped: architecture too small
+                Some(Err(e)) => return Err(e),
+                None => unreachable!("every grid index is claimed by a worker"),
+            }
+        }
+        Ok(SweepResult {
+            points,
+            fom: self.fom,
+        })
+    }
+}
+
+/// Worker threads used when the caller does not fix a count.
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Evaluate one grid point; `Ok(None)` means the point is skipped
+/// because the homogeneous architecture cannot fit the DNN.
+fn eval_point(
+    base: &SiamConfig,
+    ctx: &SweepContext,
+    tiles: usize,
+    count: Option<usize>,
+) -> Result<Option<SweepPoint>> {
+    let cfg = match count {
+        Some(c) => base.clone().with_tiles_per_chiplet(tiles).with_total_chiplets(c),
+        None => base
+            .clone()
+            .with_tiles_per_chiplet(tiles)
+            .with_chiplet_structure(ChipletStructure::Custom),
+    };
+    match run_point(&cfg, ctx, false) {
+        Ok(report) => Ok(Some(SweepPoint {
+            tiles_per_chiplet: tiles,
+            total_chiplets: count,
+            report,
+        })),
+        // homogeneous architecture too small: skip the point
+        // (Algorithm 1's error path)
+        Err(e)
+            if e.downcast_ref::<crate::mapping::MappingError>()
+                .is_some_and(|m| {
+                    matches!(m, crate::mapping::MappingError::ExceedsChiplets { .. })
+                }) =>
+        {
+            Ok(None)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Sweep the chiplet design space on all available cores. Points that
+/// do not fit (homogeneous overflow) are skipped, mirroring Algorithm
+/// 1's error path. Kept as the stable functional entry point; the
+/// builder exposes the full engine.
 pub fn sweep(
     base: &SiamConfig,
     tiles_options: &[usize],
     chiplet_counts: &[Option<usize>],
 ) -> Result<Vec<SweepPoint>> {
-    let mut out = Vec::new();
-    for &tiles in tiles_options {
-        for &count in chiplet_counts {
-            let cfg = match count {
-                Some(c) => base.clone().with_tiles_per_chiplet(tiles).with_total_chiplets(c),
-                None => base
-                    .clone()
-                    .with_tiles_per_chiplet(tiles)
-                    .with_chiplet_structure(ChipletStructure::Custom),
-            };
-            match simulate(&cfg) {
-                Ok(report) => out.push(SweepPoint {
-                    tiles_per_chiplet: tiles,
-                    total_chiplets: count,
-                    report,
-                }),
-                // homogeneous architecture too small: skip the point
-                // (Algorithm 1's error path)
-                Err(e)
-                    if e
-                        .downcast_ref::<crate::mapping::MappingError>()
-                        .is_some_and(|m| {
-                            matches!(m, crate::mapping::MappingError::ExceedsChiplets { .. })
-                        }) =>
-                {
-                    continue
-                }
-                Err(e) => return Err(e),
-            }
-        }
-    }
-    Ok(out)
+    Ok(SweepBuilder::new(base)
+        .tiles(tiles_options)
+        .chiplet_counts(chiplet_counts)
+        .run()?
+        .points)
+}
+
+/// [`sweep`] on a single thread — the reference engine the parallel
+/// path is validated against (and the "before" side of the
+/// `table3_simtime` speedup measurement).
+pub fn sweep_serial(
+    base: &SiamConfig,
+    tiles_options: &[usize],
+    chiplet_counts: &[Option<usize>],
+) -> Result<Vec<SweepPoint>> {
+    Ok(SweepBuilder::new(base)
+        .tiles(tiles_options)
+        .chiplet_counts(chiplet_counts)
+        .serial()
+        .run()?
+        .points)
 }
 
 /// The EDAP-optimal point of a sweep.
@@ -71,6 +358,7 @@ pub fn best_by_edap(points: &[SweepPoint]) -> Option<&SweepPoint> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pipeline::tests::assert_reports_identical;
 
     #[test]
     fn sweep_skips_too_small_architectures() {
@@ -89,5 +377,84 @@ mod tests {
         assert_eq!(pts.len(), 2);
         let best = best_by_edap(&pts).unwrap();
         assert!(best.edap() <= pts[0].edap());
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_rankings() {
+        // The headline regression: on the paper-default grid the
+        // parallel engine must return byte-identical points, in the
+        // same order, as the serial reference.
+        let base = SiamConfig::paper_default();
+        let tiles = [4, 9, 16];
+        let counts = [Some(36), None];
+        let serial = sweep_serial(&base, &tiles, &counts).unwrap();
+        let parallel = sweep(&base, &tiles, &counts).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.tiles_per_chiplet, p.tiles_per_chiplet);
+            assert_eq!(s.total_chiplets, p.total_chiplets);
+            assert_reports_identical(&s.report, &p.report);
+        }
+        // identical rankings, not just identical sets
+        let key = |pts: &[SweepPoint]| -> Vec<(usize, Option<usize>, u64)> {
+            let r = SweepResult {
+                points: pts.to_vec(),
+                fom: FigureOfMerit::Edap,
+            };
+            r.ranked()
+                .iter()
+                .map(|p| (p.tiles_per_chiplet, p.total_chiplets, p.edap().to_bits()))
+                .collect()
+        };
+        assert_eq!(key(&serial), key(&parallel));
+    }
+
+    #[test]
+    fn builder_budget_truncates_grid_deterministically() {
+        let base = SiamConfig::paper_default();
+        let full = SweepBuilder::new(&base)
+            .tiles(&[9, 16])
+            .chiplet_counts(&[None])
+            .run()
+            .unwrap();
+        let capped = SweepBuilder::new(&base)
+            .tiles(&[9, 16])
+            .chiplet_counts(&[None])
+            .budget(1)
+            .run()
+            .unwrap();
+        assert_eq!(full.len(), 2);
+        assert_eq!(capped.len(), 1);
+        assert_eq!(
+            capped.points[0].tiles_per_chiplet,
+            full.points[0].tiles_per_chiplet
+        );
+    }
+
+    #[test]
+    fn figure_of_merit_ranking_is_sorted() {
+        let base = SiamConfig::paper_default();
+        for fom in [
+            FigureOfMerit::Edap,
+            FigureOfMerit::Energy,
+            FigureOfMerit::Latency,
+            FigureOfMerit::InferencesPerJoule,
+        ] {
+            let res = SweepBuilder::new(&base)
+                .tiles(&[9, 16, 25])
+                .chiplet_counts(&[None])
+                .figure_of_merit(fom)
+                .run()
+                .unwrap();
+            let ranked = res.ranked();
+            assert_eq!(ranked.len(), 3);
+            for w in ranked.windows(2) {
+                assert!(fom.score(&w[0].report) <= fom.score(&w[1].report));
+            }
+            assert_eq!(
+                res.best().unwrap().tiles_per_chiplet,
+                ranked[0].tiles_per_chiplet
+            );
+        }
     }
 }

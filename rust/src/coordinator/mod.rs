@@ -1,60 +1,41 @@
-//! The coordinator: SIAM's top-level wrapper, in Rust. Runs the
-//! partition & mapping engine, then the circuit, NoC, NoP and DRAM
-//! engines concurrently (the paper: "all engines except the partition
-//! and mapping engine work simultaneously"), and aggregates everything
-//! into a [`SimReport`].
+//! The coordinator: SIAM's top-level wrapper, in Rust.
+//!
+//! [`simulate`] evaluates one configuration through the staged pipeline
+//! in [`pipeline`]: partition & mapping first (sequential by necessity),
+//! then the circuit, NoC, NoP and DRAM engines concurrently (the paper:
+//! "all engines except the partition and mapping engine work
+//! simultaneously"), aggregated into a [`SimReport`].
+//!
+//! For design-space exploration use [`SweepBuilder`]: it evaluates whole
+//! grids of `(tiles_per_chiplet, chiplet count)` points on a
+//! work-stealing thread pool while sharing the sweep-invariant stage
+//! outputs through a [`SweepContext`] — see `ARCHITECTURE.md` at the
+//! repository root for the pipeline diagram and which stages are cached
+//! versus evaluated per point.
 
 pub mod dse;
+pub mod pipeline;
 pub mod report;
 pub mod sensitivity;
 
-pub use dse::{sweep, SweepPoint};
+pub use dse::{
+    best_by_edap, sweep, sweep_serial, FigureOfMerit, SweepBuilder, SweepPoint, SweepResult,
+};
+pub use pipeline::SweepContext;
 pub use report::SimReport;
 pub use sensitivity::{layer_cycles_vs_nop_speedup, layer_latency_vs_chiplets, LayerPoint};
 
-use crate::circuit::CircuitEstimator;
 use crate::config::SiamConfig;
-use crate::dnn::build_model;
-use crate::mapping::{build_traffic, map_dnn, Placement};
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 /// Run the full SIAM pipeline for one configuration.
+///
+/// Builds a fresh [`SweepContext`] and evaluates the single point with
+/// the stage-3 engines running concurrently. Sweeping many points this
+/// way wastes the shared context — use [`SweepBuilder`] instead.
 pub fn simulate(cfg: &SiamConfig) -> Result<SimReport> {
-    let t0 = std::time::Instant::now();
-    cfg.validate()?;
-    let dnn = build_model(&cfg.dnn.model, &cfg.dnn.dataset)?;
-
-    // ---- Engine 1 (sequential by necessity): partition & mapping
-    let map = map_dnn(&dnn, cfg).context("partition & mapping")?;
-    let placement = Placement::new(map.num_chiplets);
-    let traffic = build_traffic(&dnn, &map, &placement, cfg);
-
-    // ---- Engines 2-4 run concurrently on the mapping outputs
-    let stats = dnn.stats();
-    let (circuit, noc, nop, dram) = std::thread::scope(|s| {
-        let circuit = s.spawn(|| CircuitEstimator::new(cfg).estimate(&dnn, &map, &traffic));
-        let noc = s.spawn(|| crate::noc::evaluate(cfg, &traffic, map.num_chiplets));
-        let nop = s.spawn(|| crate::nop::evaluate(cfg, &traffic, &placement));
-        let dram = s.spawn(|| crate::dram::estimate(&stats, cfg));
-        (
-            circuit.join().expect("circuit engine"),
-            noc.join().expect("noc engine"),
-            nop.join().expect("nop engine"),
-            dram.join().expect("dram engine"),
-        )
-    });
-
-    Ok(SimReport::assemble(
-        cfg,
-        &dnn,
-        &map,
-        &traffic,
-        circuit,
-        noc,
-        nop,
-        dram,
-        t0.elapsed().as_secs_f64(),
-    ))
+    let ctx = SweepContext::new(cfg)?;
+    pipeline::run_point(cfg, &ctx, true)
 }
 
 #[cfg(test)]

@@ -1,0 +1,315 @@
+//! The staged per-point simulation pipeline and the sweep-invariant
+//! [`SweepContext`].
+//!
+//! One SIAM evaluation decomposes into stages (see `ARCHITECTURE.md`
+//! for the full diagram):
+//!
+//! ```text
+//! DNN graph build ──► partition & mapping ──► { circuit, NoC, NoP, DRAM } ──► metrics
+//!   (cached)              (per point)          (cached)(keyed)(keyed)(cached)    (per point)
+//! ```
+//!
+//! * **Sweep-invariant stages** — the DNN graph/stats, the per-layer
+//!   circuit compute costs, and the DRAM weight-load estimate do not
+//!   depend on the `(tiles_per_chiplet, chiplet count)` axes the
+//!   design-space sweep varies, so they are computed once and shared
+//!   through an immutable [`SweepContext`].
+//! * **Keyed stages** — NoC/NoP epoch simulations repeat across
+//!   neighbouring points whenever the trace coincides; they go through
+//!   the [`crate::noc::EpochCache`].
+//! * **Per-point stages** — partition & mapping (Algorithm 1), traffic
+//!   generation (Algorithm 2) and metric assembly genuinely differ per
+//!   point and always run.
+//!
+//! Every cache is keyed by the complete set of configuration fields its
+//! stage reads, so [`run_point`] returns bit-identical results whether
+//! a context is shared across a sweep or built fresh per call.
+
+use crate::circuit::{CircuitEstimator, CircuitReport, LayerCostCache};
+use crate::config::SiamConfig;
+use crate::coordinator::report::SimReport;
+use crate::dnn::{build_model, Dnn, DnnStats};
+use crate::dram::DramReport;
+use crate::mapping::{build_traffic, map_dnn, MappingResult, Placement, Traffic};
+use crate::noc::{EpochCache, NocReport};
+use crate::nop::NopReport;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Immutable bundle of sweep-invariant stage outputs plus the shared
+/// caches, safe to share across worker threads (`&SweepContext: Send`).
+///
+/// Build one per sweep (or per single simulation) from the base
+/// configuration; every [`run_point`] evaluated against it reuses:
+///
+/// * the DNN layer graph and its aggregate statistics,
+/// * per-layer circuit compute costs ([`LayerCostCache`]),
+/// * DRAM weight-load estimates (keyed by model size + DRAM config),
+/// * NoC/NoP epoch results ([`EpochCache`]).
+pub struct SweepContext {
+    dnn: Arc<Dnn>,
+    stats: DnnStats,
+    model: String,
+    dataset: String,
+    layer_costs: LayerCostCache,
+    epoch_cache: EpochCache,
+    dram_cache: Mutex<HashMap<DramKey, DramReport>>,
+}
+
+/// Everything `dram::estimate` reads: model size and the DRAM block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct DramKey {
+    model_bytes: usize,
+    kind: crate::config::DramKind,
+    bus_bits: usize,
+    subset_fraction_bits: u64,
+}
+
+impl DramKey {
+    fn of(cfg: &SiamConfig, model_bytes: usize) -> DramKey {
+        DramKey {
+            model_bytes,
+            kind: cfg.dram.kind,
+            bus_bits: cfg.dram.bus_bits,
+            subset_fraction_bits: cfg.dram.subset_fraction.to_bits(),
+        }
+    }
+}
+
+impl SweepContext {
+    /// Build the context for `base`: constructs the DNN graph once and
+    /// initializes the shared (empty) stage caches.
+    pub fn new(base: &SiamConfig) -> Result<SweepContext> {
+        let dnn = Arc::new(build_model(&base.dnn.model, &base.dnn.dataset)?);
+        let stats = dnn.stats();
+        Ok(SweepContext {
+            dnn,
+            stats,
+            model: base.dnn.model.clone(),
+            dataset: base.dnn.dataset.clone(),
+            layer_costs: LayerCostCache::new(),
+            epoch_cache: EpochCache::new(),
+            dram_cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The prebuilt DNN layer graph.
+    pub fn dnn(&self) -> &Dnn {
+        &self.dnn
+    }
+
+    /// Aggregate statistics of the prebuilt DNN.
+    pub fn stats(&self) -> DnnStats {
+        self.stats
+    }
+
+    /// The shared NoC/NoP epoch cache (hit/miss counters included).
+    pub fn epoch_cache(&self) -> &EpochCache {
+        &self.epoch_cache
+    }
+
+    /// The shared per-layer circuit-cost cache.
+    pub fn layer_costs(&self) -> &LayerCostCache {
+        &self.layer_costs
+    }
+
+    fn matches_model(&self, cfg: &SiamConfig) -> bool {
+        cfg.dnn.model == self.model && cfg.dnn.dataset == self.dataset
+    }
+}
+
+/// Stage 1: the DNN layer graph — reused from the context when the
+/// model/dataset match, rebuilt otherwise (correctness guard for callers
+/// that mutate the workload between points).
+pub(crate) fn stage_dnn(cfg: &SiamConfig, ctx: &SweepContext) -> Result<Arc<Dnn>> {
+    if ctx.matches_model(cfg) {
+        Ok(ctx.dnn.clone())
+    } else {
+        Ok(Arc::new(build_model(&cfg.dnn.model, &cfg.dnn.dataset)?))
+    }
+}
+
+/// Stage 2 (always per point): partition & mapping (Algorithm 1),
+/// interposer placement, and Algorithm-2 traffic generation.
+pub(crate) fn stage_mapping(
+    cfg: &SiamConfig,
+    dnn: &Dnn,
+) -> Result<(MappingResult, Placement, Traffic)> {
+    let map = map_dnn(dnn, cfg).context("partition & mapping")?;
+    let placement = Placement::new(map.num_chiplets);
+    let traffic = build_traffic(dnn, &map, &placement, cfg);
+    Ok((map, placement, traffic))
+}
+
+/// Stage 3a: circuit estimation, sharing per-layer compute costs
+/// through the context.
+pub(crate) fn stage_circuit(
+    cfg: &SiamConfig,
+    ctx: &SweepContext,
+    dnn: &Dnn,
+    map: &MappingResult,
+    traffic: &Traffic,
+) -> CircuitReport {
+    CircuitEstimator::new(cfg).estimate_cached(dnn, map, traffic, Some(&ctx.layer_costs))
+}
+
+/// Stage 3b: intra-chiplet NoC simulation through the shared epoch
+/// cache.
+pub(crate) fn stage_noc(
+    cfg: &SiamConfig,
+    ctx: &SweepContext,
+    traffic: &Traffic,
+    num_chiplets: usize,
+) -> NocReport {
+    crate::noc::evaluate_cached(cfg, traffic, num_chiplets, Some(&ctx.epoch_cache))
+}
+
+/// Stage 3c: inter-chiplet NoP simulation through the shared epoch
+/// cache.
+pub(crate) fn stage_nop(
+    cfg: &SiamConfig,
+    ctx: &SweepContext,
+    traffic: &Traffic,
+    placement: &Placement,
+) -> NopReport {
+    crate::nop::evaluate_cached(cfg, traffic, placement, Some(&ctx.epoch_cache))
+}
+
+/// Stage 3d: DRAM weight-load estimation, memoized on (model bytes,
+/// DRAM config) — invariant across the whole sweep grid.
+pub(crate) fn stage_dram(cfg: &SiamConfig, ctx: &SweepContext, stats: &DnnStats) -> DramReport {
+    let bytes = stats.model_bytes(cfg.dnn.weight_precision);
+    let key = DramKey::of(cfg, bytes);
+    if let Some(r) = ctx.dram_cache.lock().unwrap().get(&key) {
+        return *r;
+    }
+    let r = crate::dram::estimate_with(bytes, &cfg.dram);
+    ctx.dram_cache.lock().unwrap().insert(key, r);
+    r
+}
+
+/// Run the full staged pipeline for one design point against a context.
+///
+/// With `concurrent_engines` the four stage-3 engines run on scoped
+/// threads (the paper: "all engines except the partition and mapping
+/// engine work simultaneously") — right for one-off simulations. Sweep
+/// workers pass `false` since the sweep executor already saturates the
+/// cores with whole points. Both modes produce identical reports.
+pub fn run_point(
+    cfg: &SiamConfig,
+    ctx: &SweepContext,
+    concurrent_engines: bool,
+) -> Result<SimReport> {
+    let t0 = std::time::Instant::now();
+    cfg.validate()?;
+    let dnn = stage_dnn(cfg, ctx)?;
+    let stats = if ctx.matches_model(cfg) {
+        ctx.stats
+    } else {
+        dnn.stats()
+    };
+
+    let (map, placement, traffic) = stage_mapping(cfg, &dnn)?;
+
+    let (circuit, noc, nop, dram) = if concurrent_engines {
+        std::thread::scope(|s| {
+            let circuit = s.spawn(|| stage_circuit(cfg, ctx, &dnn, &map, &traffic));
+            let noc = s.spawn(|| stage_noc(cfg, ctx, &traffic, map.num_chiplets));
+            let nop = s.spawn(|| stage_nop(cfg, ctx, &traffic, &placement));
+            let dram = s.spawn(|| stage_dram(cfg, ctx, &stats));
+            (
+                circuit.join().expect("circuit engine"),
+                noc.join().expect("noc engine"),
+                nop.join().expect("nop engine"),
+                dram.join().expect("dram engine"),
+            )
+        })
+    } else {
+        (
+            stage_circuit(cfg, ctx, &dnn, &map, &traffic),
+            stage_noc(cfg, ctx, &traffic, map.num_chiplets),
+            stage_nop(cfg, ctx, &traffic, &placement),
+            stage_dram(cfg, ctx, &stats),
+        )
+    };
+
+    Ok(SimReport::assemble(
+        cfg,
+        &dnn,
+        &map,
+        &traffic,
+        circuit,
+        noc,
+        nop,
+        dram,
+        t0.elapsed().as_secs_f64(),
+    ))
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::config::SiamConfig;
+
+    /// Compare two reports on every deterministic field, bit-for-bit.
+    pub(crate) fn assert_reports_identical(a: &SimReport, b: &SimReport) {
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.num_chiplets, b.num_chiplets);
+        assert_eq!(a.num_chiplets_required, b.num_chiplets_required);
+        assert_eq!(a.total_tiles, b.total_tiles);
+        assert_eq!(a.noc_cycles, b.noc_cycles);
+        assert_eq!(a.nop_cycles, b.nop_cycles);
+        assert_eq!(a.accumulator_adds, b.accumulator_adds);
+        for (x, y) in [
+            (a.total.area_um2, b.total.area_um2),
+            (a.total.energy_pj, b.total.energy_pj),
+            (a.total.latency_ns, b.total.latency_ns),
+            (a.total.leakage_uw, b.total.leakage_uw),
+            (a.circuit.energy_pj, b.circuit.energy_pj),
+            (a.noc.energy_pj, b.noc.energy_pj),
+            (a.nop.energy_pj, b.nop.energy_pj),
+            (a.dram.energy_pj, b.dram.energy_pj),
+            (a.dram.latency_ns, b.dram.latency_ns),
+            (a.xbar_utilization, b.xbar_utilization),
+            (a.silicon_area_mm2, b.silicon_area_mm2),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+        }
+    }
+
+    #[test]
+    fn shared_context_matches_fresh_context() {
+        let base = SiamConfig::paper_default();
+        let shared = SweepContext::new(&base).unwrap();
+        for tiles in [9, 16] {
+            let cfg = base.clone().with_tiles_per_chiplet(tiles);
+            let warm = run_point(&cfg, &shared, false).unwrap();
+            let cold_ctx = SweepContext::new(&cfg).unwrap();
+            let cold = run_point(&cfg, &cold_ctx, false).unwrap();
+            assert_reports_identical(&warm, &cold);
+        }
+        // the second point must have reused sweep-invariant work
+        assert_eq!(shared.layer_costs().len(), 1);
+        assert!(shared.epoch_cache().hits() > 0, "expected epoch reuse");
+    }
+
+    #[test]
+    fn concurrent_and_serial_engines_agree() {
+        let cfg = SiamConfig::paper_default();
+        let ctx = SweepContext::new(&cfg).unwrap();
+        let a = run_point(&cfg, &ctx, true).unwrap();
+        let b = run_point(&cfg, &ctx, false).unwrap();
+        assert_reports_identical(&a, &b);
+    }
+
+    #[test]
+    fn context_guards_against_model_mismatch() {
+        // a caller may reuse a context with a different workload; the
+        // pipeline must rebuild rather than silently reuse
+        let ctx = SweepContext::new(&SiamConfig::paper_default()).unwrap();
+        let other = SiamConfig::paper_default().with_model("lenet5", "cifar10");
+        let rep = run_point(&other, &ctx, false).unwrap();
+        assert_eq!(rep.model, "lenet5");
+    }
+}

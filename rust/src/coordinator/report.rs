@@ -16,17 +16,29 @@ use crate::util::table::eng;
 /// Complete output of one SIAM run.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Simulated model (zoo name).
     pub model: String,
+    /// Dataset variant.
     pub dataset: String,
+    /// Model parameters.
     pub params: usize,
+    /// MACs per inference.
     pub macs: usize,
+    /// Chiplets the architecture contains.
     pub num_chiplets: usize,
+    /// Chiplets the DNN actually occupies.
     pub num_chiplets_required: usize,
+    /// IMC tiles the mapping uses.
     pub total_tiles: usize,
+    /// Crossbar-level utilization (Fig. 9 metric).
     pub xbar_utilization: f64,
+    /// Programmed-cell utilization within allocated crossbars.
     pub cell_utilization: f64,
+    /// Activation/partial-sum bits crossing the interposer.
     pub inter_chiplet_bits: f64,
+    /// Activation bits moving tile-to-tile inside chiplets.
     pub intra_chiplet_bits: f64,
+    /// Global accumulator additions.
     pub accumulator_adds: u64,
     /// IMC circuit metrics (compute + global acc/buffer).
     pub circuit: Metrics,
@@ -39,15 +51,21 @@ pub struct SimReport {
     pub dram: DramReport,
     /// Inference totals (circuit + NoC + NoP; leakage energy folded in).
     pub total: Metrics,
+    /// Serialized NoC cycles.
     pub noc_cycles: u64,
+    /// Serialized NoP cycles.
     pub nop_cycles: u64,
     /// Yielded silicon (chiplet dies incl. NoP drivers/routers), mm² —
     /// excludes the passive interposer wiring; drives the cost model.
     pub silicon_area_mm2: f64,
+    /// Wall-clock the simulation took, seconds.
     pub wall_seconds: f64,
 }
 
 impl SimReport {
+    /// Fold the four engine outputs into the paper's reported totals
+    /// (layer-serial dataflow; interconnect leakage accrues over its
+    /// active window).
     #[allow(clippy::too_many_arguments)]
     pub fn assemble(
         cfg: &SiamConfig,
@@ -119,6 +137,7 @@ impl SimReport {
         b
     }
 
+    /// One-paragraph human-readable summary of the headline metrics.
     pub fn summary(&self) -> String {
         let t = &self.total;
         format!(
@@ -150,6 +169,7 @@ impl SimReport {
         )
     }
 
+    /// Machine-readable report (stable keys; parsed back in tests).
     pub fn to_json(&self) -> Json {
         let m = |x: &Metrics| {
             let mut o = Json::obj();

@@ -18,12 +18,16 @@ use crate::dnn::Dnn;
 /// One point of the sensitivity curve.
 #[derive(Debug, Clone, Copy)]
 pub struct LayerPoint {
+    /// Chiplets assigned to the layer.
     pub chiplets: usize,
+    /// Compute time of the layer, ns.
     pub compute_ns: f64,
+    /// NoP streaming time of the layer, ns.
     pub nop_ns: f64,
 }
 
 impl LayerPoint {
+    /// Compute + communication time, ns.
     pub fn total_ns(&self) -> f64 {
         self.compute_ns + self.nop_ns
     }

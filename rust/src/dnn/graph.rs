@@ -11,13 +11,18 @@ use super::stats::DnnStats;
 /// engine's sequential-packing semantics identical to the paper's.
 #[derive(Debug, Clone)]
 pub struct Dnn {
+    /// Model name (zoo key).
     pub name: String,
+    /// Dataset variant the shapes were built for.
     pub dataset: String,
+    /// Network input shape.
     pub input: TensorShape,
+    /// Layers in execution order.
     pub layers: Vec<Layer>,
 }
 
 impl Dnn {
+    /// Aggregate parameter/MAC/buffer statistics.
     pub fn stats(&self) -> DnnStats {
         DnnStats::of(self)
     }
@@ -78,6 +83,7 @@ pub struct DnnBuilder {
 }
 
 impl DnnBuilder {
+    /// Start a graph with the given input shape.
     pub fn new(name: &str, dataset: &str, input: (usize, usize, usize)) -> Self {
         let input = TensorShape::new(input.0, input.1, input.2);
         DnnBuilder {
@@ -99,6 +105,7 @@ impl DnnBuilder {
         self.layers.len() - 1
     }
 
+    /// Append a layer, inferring its output shape; returns its index.
     pub fn push(&mut self, name: impl Into<String>, kind: LayerKind) -> usize {
         let ifm = self.cur;
         let mut ofm = infer_ofm(&kind, ifm);
@@ -115,6 +122,7 @@ impl DnnBuilder {
         self.layers.len() - 1
     }
 
+    /// Append a square convolution.
     pub fn conv(
         &mut self,
         name: impl Into<String>,
@@ -135,14 +143,17 @@ impl DnnBuilder {
         )
     }
 
+    /// Append a ReLU.
     pub fn relu(&mut self, name: impl Into<String>) -> usize {
         self.push(name, LayerKind::Relu)
     }
 
+    /// Append an unpadded max pool.
     pub fn maxpool(&mut self, name: impl Into<String>, k: usize, stride: usize) -> usize {
         self.push(name, LayerKind::MaxPool { k, stride, padding: 0 })
     }
 
+    /// Append a padded max pool.
     pub fn maxpool_pad(
         &mut self,
         name: impl Into<String>,
@@ -153,22 +164,27 @@ impl DnnBuilder {
         self.push(name, LayerKind::MaxPool { k, stride, padding })
     }
 
+    /// Append an average pool.
     pub fn avgpool(&mut self, name: impl Into<String>, k: usize, stride: usize) -> usize {
         self.push(name, LayerKind::AvgPool { k, stride, padding: 0 })
     }
 
+    /// Append a global average pool.
     pub fn global_avgpool(&mut self, name: impl Into<String>) -> usize {
         self.push(name, LayerKind::GlobalAvgPool)
     }
 
+    /// Append a fully-connected layer.
     pub fn fc(&mut self, name: impl Into<String>, out_features: usize) -> usize {
         self.push(name, LayerKind::Fc { out_features })
     }
 
+    /// Append a residual add reading layer `from`.
     pub fn residual_add(&mut self, name: impl Into<String>, from: usize) -> usize {
         self.push(name, LayerKind::ResidualAdd { from })
     }
 
+    /// Append a channel concat reading layer `from`.
     pub fn concat(&mut self, name: impl Into<String>, from: usize) -> usize {
         self.push(name, LayerKind::Concat { from })
     }
@@ -179,6 +195,7 @@ impl DnnBuilder {
         self.cur = s;
     }
 
+    /// Finish and consistency-check the graph (panics on builder bugs).
     pub fn build(self) -> Dnn {
         let dnn = Dnn {
             name: self.name,

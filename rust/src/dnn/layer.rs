@@ -4,16 +4,21 @@
 /// (height, width, channels) of a feature map.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TensorShape {
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
+    /// Channels.
     pub c: usize,
 }
 
 impl TensorShape {
+    /// Build an (h, w, c) shape.
     pub fn new(h: usize, w: usize, c: usize) -> Self {
         TensorShape { h, w, c }
     }
 
+    /// Total elements (h × w × c).
     pub fn elems(&self) -> usize {
         self.h * self.w * self.c
     }
@@ -24,37 +29,57 @@ impl TensorShape {
 /// work (pooling / activation / elementwise add / concat).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayerKind {
+    /// 2-D convolution.
     Conv {
+        /// Kernel height.
         kh: usize,
+        /// Kernel width.
         kw: usize,
+        /// Spatial stride.
         stride: usize,
+        /// Zero padding on each border.
         padding: usize,
+        /// Output channels.
         out_ch: usize,
     },
+    /// Fully-connected layer.
     Fc {
+        /// Output features.
         out_features: usize,
     },
+    /// Max pooling.
     MaxPool {
+        /// Window size.
         k: usize,
+        /// Spatial stride.
         stride: usize,
+        /// Zero padding on each border.
         padding: usize,
     },
+    /// Average pooling.
     AvgPool {
+        /// Window size.
         k: usize,
+        /// Spatial stride.
         stride: usize,
+        /// Zero padding on each border.
         padding: usize,
     },
     /// Global average pool to 1×1.
     GlobalAvgPool,
+    /// Rectified linear activation.
     Relu,
+    /// Sigmoid activation (LUT-based in hardware).
     Sigmoid,
     /// Residual addition with the output of layer `from` (index into the
     /// DNN layer list). Requires buffering that layer's activations.
     ResidualAdd {
+        /// Index of the skip-edge source layer.
         from: usize,
     },
     /// Channel concatenation with the output of layer `from` (DenseNet).
     Concat {
+        /// Index of the skip-edge source layer.
         from: usize,
     },
 }
@@ -62,9 +87,14 @@ pub enum LayerKind {
 /// One node of the DNN graph with inferred input/output shapes.
 #[derive(Debug, Clone)]
 pub struct Layer {
+    /// Layer name (Caffe-style for ResNet-50, so calibration
+    /// experiments can address specific layers).
     pub name: String,
+    /// Operator and its parameters.
     pub kind: LayerKind,
+    /// Input feature-map shape.
     pub ifm: TensorShape,
+    /// Output feature-map shape.
     pub ofm: TensorShape,
 }
 

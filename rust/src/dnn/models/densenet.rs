@@ -8,6 +8,8 @@
 
 use crate::dnn::graph::{Dnn, DnnBuilder};
 
+/// Plain DenseNet with `(depth-4)/3` conv layers per dense block and
+/// growth rate `growth`.
 pub fn densenet(depth: usize, growth: usize, input: (usize, usize, usize), classes: usize) -> Dnn {
     assert!((depth - 4) % 3 == 0, "densenet depth must be 3n+4");
     let per_block = (depth - 4) / 3;

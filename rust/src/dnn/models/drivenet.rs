@@ -3,6 +3,8 @@
 
 use crate::dnn::graph::{Dnn, DnnBuilder};
 
+/// DriveNet / PilotNet: five convs and a 100-50-`outputs` head over a
+/// 66×200 camera input.
 pub fn drivenet(outputs: usize) -> Dnn {
     let mut b = DnnBuilder::new("drivenet", "driving", (66, 200, 3));
     b.conv("conv1", 5, 2, 0, 24);

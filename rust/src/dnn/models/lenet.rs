@@ -2,6 +2,7 @@
 
 use crate::dnn::graph::{Dnn, DnnBuilder};
 
+/// LeNet-5: two 5×5 conv stages plus a 120-84-`classes` classifier.
 pub fn lenet5(input: (usize, usize, usize), classes: usize) -> Dnn {
     let mut b = DnnBuilder::new("lenet5", "cifar10", input);
     b.conv("conv1", 5, 1, 0, 6);

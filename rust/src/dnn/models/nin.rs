@@ -3,6 +3,7 @@
 
 use crate::dnn::graph::{Dnn, DnnBuilder};
 
+/// Network-in-Network: three conv+cccp stages with a global pool head.
 pub fn nin(input: (usize, usize, usize), classes: usize) -> Dnn {
     let mut b = DnnBuilder::new("nin", "cifar", input);
     b.conv("conv1", 5, 1, 2, 192);

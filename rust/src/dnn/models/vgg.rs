@@ -5,12 +5,16 @@
 
 use crate::dnn::graph::{Dnn, DnnBuilder};
 
+/// One step of a VGG plan.
 #[derive(Clone, Copy)]
 pub enum P {
+    /// 3×3 convolution with the given output channels.
     C(usize),
+    /// 2×2 stride-2 max pool.
     M,
 }
 
+/// The 13-conv / 5-pool body of VGG-16.
 pub const VGG16_PLAN: [P; 18] = [
     P::C(64),
     P::C(64),
@@ -32,6 +36,7 @@ pub const VGG16_PLAN: [P; 18] = [
     P::M,
 ];
 
+/// The 16-conv / 5-pool body of VGG-19.
 pub const VGG19_PLAN: [P; 21] = [
     P::C(64),
     P::C(64),
@@ -56,6 +61,7 @@ pub const VGG19_PLAN: [P; 21] = [
     P::M,
 ];
 
+/// Build a VGG network from a plan plus the 4096-4096-`classes` head.
 pub fn vgg(plan: &[P], input: (usize, usize, usize), classes: usize) -> Dnn {
     let name = if plan.len() == 18 { "vgg16" } else { "vgg19" };
     let mut b = DnnBuilder::new(name, "any", input);

@@ -4,6 +4,7 @@
 use super::graph::Dnn;
 use super::layer::LayerKind;
 
+/// Aggregate workload statistics of a [`Dnn`].
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DnnStats {
     /// Total weights + biases.
@@ -24,6 +25,7 @@ pub struct DnnStats {
 }
 
 impl DnnStats {
+    /// Walk the graph and aggregate.
     pub fn of(dnn: &Dnn) -> DnnStats {
         let mut s = DnnStats {
             total_layers: dnn.layers.len(),

@@ -14,6 +14,7 @@ use crate::metrics::Metrics;
 /// One DRAM read request (64 B cache-line granularity).
 #[derive(Debug, Clone, Copy)]
 pub struct Request {
+    /// Byte address of the 64 B line.
     pub addr: u64,
 }
 
@@ -33,10 +34,12 @@ pub struct DramReport {
 }
 
 impl DramReport {
+    /// Energy-delay product of the weight load, pJ·ns.
     pub fn edp(&self) -> f64 {
         self.energy_pj * self.latency_ns
     }
 
+    /// As a [`Metrics`] bundle (area 0: commodity DRAM die excluded).
     pub fn metrics(&self) -> Metrics {
         Metrics {
             area_um2: 0.0, // commodity DRAM chiplet: excluded from die cost
@@ -136,6 +139,7 @@ pub fn estimate(stats: &DnnStats, cfg: &SiamConfig) -> DramReport {
     estimate_with(stats.model_bytes(cfg.dnn.weight_precision), &cfg.dram)
 }
 
+/// [`estimate`] from an explicit model size (testing / sweeps).
 pub fn estimate_with(model_bytes: usize, dc: &DramConfig) -> DramReport {
     let (t, e) = params(dc.kind);
     let total_lines = model_bytes.div_ceil(64).max(1);

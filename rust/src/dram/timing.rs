@@ -4,6 +4,7 @@
 
 use crate::config::DramKind;
 
+/// Device timing parameters in command-clock cycles.
 #[derive(Debug, Clone, Copy)]
 pub struct DramTiming {
     /// Clock period, ns (command clock).
@@ -28,6 +29,7 @@ pub struct DramTiming {
     pub burst_beats: usize,
 }
 
+/// Per-event energy parameters (VAMPIRE-style).
 #[derive(Debug, Clone, Copy)]
 pub struct DramEnergy {
     /// One ACT+PRE pair, pJ.
@@ -92,6 +94,7 @@ pub fn ddr4() -> (DramTiming, DramEnergy) {
     )
 }
 
+/// Timing + energy parameters for a DRAM standard.
 pub fn params(kind: DramKind) -> (DramTiming, DramEnergy) {
     match kind {
         DramKind::Ddr3 => ddr3(),

@@ -5,6 +5,7 @@
 /// One GPU datapoint (batch-1 ResNet-50 ImageNet inference).
 #[derive(Debug, Clone, Copy)]
 pub struct GpuBaseline {
+    /// Marketing name.
     pub name: &'static str,
     /// Die area, mm².
     pub area_mm2: f64,

@@ -30,6 +30,19 @@
 //! let report = simulate(&cfg).unwrap();
 //! println!("{}", report.summary());
 //! ```
+//!
+//! Design-space sweeps run through the parallel memoizing engine in
+//! [`coordinator::dse`] (`SweepBuilder`): points are evaluated on a
+//! work-stealing thread pool while sweep-invariant stage outputs (DNN
+//! graph, per-layer circuit costs, DRAM estimates, repeated NoC/NoP
+//! epochs) are shared through a [`coordinator::SweepContext`].
+//!
+//! A guided tour of the crate — module-by-module dataflow, the staged
+//! sweep pipeline, and which stages are cached versus evaluated per
+//! point — lives in [ARCHITECTURE.md](../../../ARCHITECTURE.md) at the
+//! repository root.
+
+#![warn(missing_docs)]
 
 pub mod circuit;
 pub mod config;

@@ -6,7 +6,9 @@ use crate::dnn::Dnn;
 /// Crossbars a layer occupies on one chiplet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ChipletShare {
+    /// Chiplet id.
     pub chiplet: usize,
+    /// Crossbars of the layer placed on that chiplet.
     pub xbars: usize,
 }
 

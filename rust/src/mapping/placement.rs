@@ -8,6 +8,8 @@
 //! at the mesh boundary (Fig. 2 of the paper).
 
 
+/// Row-major snake placement of chiplets + special nodes on the
+/// interposer mesh.
 #[derive(Debug, Clone)]
 pub struct Placement {
     /// Mesh width (columns).
@@ -43,6 +45,7 @@ impl Placement {
         }
     }
 
+    /// Total mesh nodes (compute chiplets + accumulator + DRAM).
     pub fn nodes(&self) -> usize {
         self.chiplets + 2
     }

@@ -16,9 +16,14 @@ use crate::config::SiamConfig;
 use crate::dnn::{Dnn, LayerKind};
 
 /// A compressed packet sequence between one source and one destination.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `Hash`/`Eq` make whole flow traces usable as cache keys (see
+/// [`crate::noc::EpochCache`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Flow {
+    /// Source node id (tile for NoC epochs, chiplet for NoP epochs).
     pub src: u32,
+    /// Destination node id.
     pub dst: u32,
     /// Number of packets.
     pub count: u64,
@@ -29,6 +34,7 @@ pub struct Flow {
 }
 
 impl Flow {
+    /// Total packets across a slice of flows.
     pub fn total_packets(flows: &[Flow]) -> u64 {
         flows.iter().map(|f| f.count).sum()
     }
@@ -47,6 +53,7 @@ pub struct LabeledEpoch {
     pub layer: usize,
     /// Chiplet the epoch runs on (NoC epochs; 0 for NoP).
     pub chiplet: usize,
+    /// The epoch's flow-compressed packet trace.
     pub flows: Epoch,
 }
 

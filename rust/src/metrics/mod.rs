@@ -18,13 +18,18 @@ use std::ops::{Add, AddAssign, Mul};
 /// * leakage — µW
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Metrics {
+    /// Silicon area, µm².
     pub area_um2: f64,
+    /// Dynamic energy, pJ.
     pub energy_pj: f64,
+    /// Latency, ns.
     pub latency_ns: f64,
+    /// Leakage power, µW.
     pub leakage_uw: f64,
 }
 
 impl Metrics {
+    /// The additive identity.
     pub const ZERO: Metrics = Metrics {
         area_um2: 0.0,
         energy_pj: 0.0,
@@ -32,6 +37,7 @@ impl Metrics {
         leakage_uw: 0.0,
     };
 
+    /// Bundle area/energy/latency with zero leakage.
     pub fn new(area_um2: f64, energy_pj: f64, latency_ns: f64) -> Self {
         Metrics {
             area_um2,
@@ -41,6 +47,7 @@ impl Metrics {
         }
     }
 
+    /// Attach a leakage figure.
     pub fn with_leakage(mut self, leakage_uw: f64) -> Self {
         self.leakage_uw = leakage_uw;
         self
@@ -57,18 +64,22 @@ impl Metrics {
         self.edp() * self.area_mm2()
     }
 
+    /// Area in mm².
     pub fn area_mm2(&self) -> f64 {
         self.area_um2 / 1.0e6
     }
 
+    /// Energy in µJ.
     pub fn energy_uj(&self) -> f64 {
         self.energy_pj / 1.0e6
     }
 
+    /// Energy in mJ.
     pub fn energy_mj(&self) -> f64 {
         self.energy_pj / 1.0e9
     }
 
+    /// Latency in ms.
     pub fn latency_ms(&self) -> f64 {
         self.latency_ns / 1.0e6
     }
@@ -166,18 +177,22 @@ impl Sum for Metrics {
 /// paper: IMC circuit vs NoC vs NoP).
 #[derive(Debug, Clone, Default)]
 pub struct Breakdown {
+    /// `(component name, metrics)` pairs in insertion order.
     pub components: Vec<(String, Metrics)>,
 }
 
 impl Breakdown {
+    /// Append a named component.
     pub fn push(&mut self, name: impl Into<String>, m: Metrics) {
         self.components.push((name.into(), m));
     }
 
+    /// Sum of all components.
     pub fn total(&self) -> Metrics {
         self.components.iter().map(|(_, m)| *m).sum()
     }
 
+    /// Look up a component by name.
     pub fn get(&self, name: &str) -> Option<Metrics> {
         self.components
             .iter()

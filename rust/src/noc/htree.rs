@@ -11,8 +11,11 @@ use super::sim::EpochResult;
 use crate::circuit::Tech;
 use crate::mapping::Flow;
 
+/// Analytical H-tree interconnect over `leaves` tiles.
 pub struct HTreeModel {
+    /// Leaf (tile) count.
     pub leaves: usize,
+    /// Tree levels: ceil(log2(leaves)).
     pub levels: u32,
     /// Cycles to cross one tree level.
     pub level_delay: u64,
@@ -23,6 +26,8 @@ pub struct HTreeModel {
 }
 
 impl HTreeModel {
+    /// Model an H-tree over `leaves` tiles at the given flit width and
+    /// tile pitch.
     pub fn new(leaves: usize, flit_bits: usize, tile_pitch_mm: f64, tech: &Tech) -> Self {
         let levels = (leaves.max(2) as f64).log2().ceil() as u32;
         // total H-tree wire length ≈ pitch × leaves (geometric series)

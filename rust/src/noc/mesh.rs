@@ -6,16 +6,22 @@ use crate::mapping::Placement;
 /// Directions out of a router. `L` is the local ejection port.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dir {
+    /// +x neighbour.
     East = 0,
+    /// −x neighbour.
     West = 1,
+    /// −y neighbour.
     North = 2,
+    /// +y neighbour.
     South = 3,
 }
 
 /// A 2-D mesh with an arbitrary node→coordinate embedding.
 #[derive(Debug, Clone)]
 pub struct Mesh {
+    /// Columns.
     pub width: usize,
+    /// Rows.
     pub height: usize,
     coords: Vec<(u16, u16)>, // (row, col) per node id
 }
@@ -58,14 +64,17 @@ impl Mesh {
         }
     }
 
+    /// Number of nodes embedded in the mesh.
     pub fn nodes(&self) -> usize {
         self.coords.len()
     }
 
+    /// (row, col) of a node id.
     pub fn coord(&self, node: u32) -> (u16, u16) {
         self.coords[node as usize]
     }
 
+    /// Manhattan hop distance between two nodes.
     pub fn hops(&self, a: u32, b: u32) -> u32 {
         let (ra, ca) = self.coord(a);
         let (rb, cb) = self.coord(b);
@@ -77,6 +86,7 @@ impl Mesh {
         ((r as usize * self.width + c as usize) * 4 + d as usize) as u32
     }
 
+    /// Size of the link-id space (4 directed slots per grid position).
     pub fn num_links(&self) -> usize {
         self.width * self.height * 4
     }

@@ -9,7 +9,7 @@ pub mod power;
 pub mod sim;
 
 pub use mesh::Mesh;
-pub use sim::{EpochResult, FlitSim, PacketSim};
+pub use sim::{EpochCache, EpochResult, FlitSim, PacketSim};
 
 use crate::config::{NocTopology, SiamConfig};
 use crate::mapping::Traffic;
@@ -20,9 +20,13 @@ use crate::metrics::Metrics;
 pub struct NocReport {
     /// Total NoC metrics (area = all routers+links across chiplets).
     pub metrics: Metrics,
+    /// Serialized NoC cycles across the layer sequence.
     pub cycles: u64,
+    /// Packets delivered over all epochs.
     pub packets: u64,
+    /// Flit-link traversals over all epochs (drives energy).
     pub flit_hops: u64,
+    /// Mean packet latency across all epochs, cycles.
     pub avg_packet_latency_cycles: f64,
 }
 
@@ -33,6 +37,19 @@ pub struct NocReport {
 /// sequentially (cycle counts add) — the paper's layer-by-layer dataflow
 /// (Algorithm 4).
 pub fn evaluate(cfg: &SiamConfig, traffic: &Traffic, num_chiplets: usize) -> NocReport {
+    evaluate_cached(cfg, traffic, num_chiplets, None)
+}
+
+/// [`evaluate`] with an optional [`EpochCache`] shared across sweep
+/// points: mesh-topology epochs identical to previously simulated ones
+/// are replayed instead of re-simulated. Passing `None` is equivalent to
+/// [`evaluate`]; results are bit-identical either way.
+pub fn evaluate_cached(
+    cfg: &SiamConfig,
+    traffic: &Traffic,
+    num_chiplets: usize,
+    cache: Option<&EpochCache>,
+) -> NocReport {
     let tech = crate::circuit::Tech::from_device(&cfg.device);
     let tiles = cfg.chiplet.tiles_per_chiplet;
     let mesh = Mesh::new(tiles.max(2));
@@ -50,7 +67,10 @@ pub fn evaluate(cfg: &SiamConfig, traffic: &Traffic, num_chiplets: usize) -> Noc
 
     for ep in &traffic.noc_epochs {
         let r = match cfg.chiplet.noc_topology {
-            NocTopology::Mesh => psim.run(&ep.flows),
+            NocTopology::Mesh => match cache {
+                Some(c) => psim.run_cached(&ep.flows, c),
+                None => psim.run(&ep.flows),
+            },
             NocTopology::Tree | NocTopology::HTree => htree.run(&ep.flows),
         };
         *per_key.entry((ep.layer, ep.chiplet)).or_default() += r.completion_cycles;

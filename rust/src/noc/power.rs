@@ -3,6 +3,7 @@
 
 use crate::circuit::Tech;
 
+/// Area/energy/leakage figures of one NoC router.
 #[derive(Debug, Clone, Copy)]
 pub struct RouterModel {
     /// Router silicon area, µm².
@@ -13,6 +14,7 @@ pub struct RouterModel {
     pub leakage_uw: f64,
 }
 
+/// Area/energy figures of one inter-tile link.
 #[derive(Debug, Clone, Copy)]
 pub struct LinkModel {
     /// Wire area per link, µm² (repeaters + wiring track share).

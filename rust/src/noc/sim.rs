@@ -10,17 +10,27 @@
 //! * [`FlitSim`] — a faithful cycle-by-cycle router model (5-port,
 //!   input-buffered, credit flow control, round-robin arbitration) used
 //!   as the golden reference on small traces.
+//!
+//! For design-space sweeps, [`EpochCache`] memoizes epoch results keyed
+//! by `(mesh dims, simulator parameters, flow trace)`: neighbouring
+//! sweep points share most of their Algorithm-2 traces (the NoC traffic
+//! of a layer does not depend on the chiplet count, and the NoP traffic
+//! repeats whenever the chiplet allocation coincides), so identical
+//! epochs are simulated once and replayed from the cache thereafter.
 
 use super::mesh::Mesh;
 use crate::mapping::Flow;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Result of simulating one epoch (one Algorithm-2 trace).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EpochResult {
     /// Cycle at which the last tail flit is ejected.
     pub completion_cycles: u64,
+    /// Packets delivered during the epoch.
     pub packets: u64,
     /// Σ per-packet (arrival − injection): for avg-latency reporting.
     pub total_latency_cycles: u64,
@@ -29,6 +39,7 @@ pub struct EpochResult {
 }
 
 impl EpochResult {
+    /// Mean packet latency in cycles (0 for an empty epoch).
     pub fn avg_latency(&self) -> f64 {
         if self.packets == 0 {
             0.0
@@ -37,12 +48,72 @@ impl EpochResult {
         }
     }
 
+    /// Fold another epoch in, serially (epochs execute layer-by-layer,
+    /// so completion cycles add).
     pub fn accumulate(&mut self, o: &EpochResult) {
-        // epochs are serialized (layer-by-layer execution)
         self.completion_cycles += o.completion_cycles;
         self.packets += o.packets;
         self.total_latency_cycles += o.total_latency_cycles;
         self.flit_hops += o.flit_hops;
+    }
+}
+
+/// Cache key: the complete input of one [`PacketSim::run`] call. The
+/// snake-order coordinate embedding is a pure function of the mesh
+/// dimensions and node count, so `(width, height, nodes)` plus the
+/// simulator parameters and the flow trace pin the result exactly.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct EpochKey {
+    width: u16,
+    height: u16,
+    nodes: u32,
+    router_delay: u64,
+    flits_per_packet: u64,
+    extrapolate: bool,
+    flows: Box<[Flow]>,
+}
+
+/// Soft bound on retained epochs; past it, new results are returned but
+/// not stored (protects pathological sweeps from unbounded growth).
+const EPOCH_CACHE_CAP: usize = 1 << 16;
+
+/// Thread-safe memo table for epoch results, shared across the points of
+/// a design-space sweep (see the crate's `ARCHITECTURE.md`).
+///
+/// Identical `(mesh dims, simulator parameters, flow trace)` inputs hit
+/// the cache and skip re-simulation; distinct inputs never alias, so a
+/// cached sweep is numerically identical to an uncached one.
+#[derive(Debug, Default)]
+pub struct EpochCache {
+    map: Mutex<HashMap<EpochKey, EpochResult>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EpochCache {
+    /// Create an empty cache.
+    pub fn new() -> EpochCache {
+        EpochCache::default()
+    }
+
+    /// Lookups answered from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to simulate.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct epochs currently retained.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when no epoch has been stored yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -59,6 +130,9 @@ pub struct PacketSim<'m> {
 }
 
 impl<'m> PacketSim<'m> {
+    /// List-scheduling simulator over `mesh` with the paper's defaults:
+    /// 2-cycle routers, single-flit packets, steady-state extrapolation
+    /// enabled.
     pub fn new(mesh: &'m Mesh) -> Self {
         PacketSim {
             mesh,
@@ -68,7 +142,25 @@ impl<'m> PacketSim<'m> {
         }
     }
 
-    /// Simulate one epoch of flows (timestamps restart at 0).
+    /// Simulate one epoch of flows (timestamps restart at 0) and return
+    /// its completion cycle, packet count, latency sum and flit-hop
+    /// count.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use siam::mapping::Flow;
+    /// use siam::noc::{Mesh, PacketSim};
+    ///
+    /// let mesh = Mesh::new(16); // 4x4 tile mesh
+    /// let sim = PacketSim::new(&mesh);
+    /// // one packet from tile 0 to its neighbour
+    /// let epoch = [Flow { src: 0, dst: 1, count: 1, start: 0, stride: 1 }];
+    /// let result = sim.run(&epoch);
+    /// assert_eq!(result.packets, 1);
+    /// // 1 hop: router pipeline (2 cycles) + 1 serialization cycle
+    /// assert_eq!(result.completion_cycles, 3);
+    /// ```
     pub fn run(&self, flows: &[Flow]) -> EpochResult {
         let mut res = EpochResult::default();
         if flows.is_empty() {
@@ -162,6 +254,33 @@ impl<'m> PacketSim<'m> {
         res
     }
 
+    /// [`run`](PacketSim::run) through an [`EpochCache`]: identical
+    /// epochs (same mesh dimensions, simulator parameters and flow
+    /// trace) are simulated once and replayed thereafter. Results are
+    /// bit-identical to the uncached path.
+    pub fn run_cached(&self, flows: &[Flow], cache: &EpochCache) -> EpochResult {
+        let key = EpochKey {
+            width: self.mesh.width as u16,
+            height: self.mesh.height as u16,
+            nodes: self.mesh.nodes() as u32,
+            router_delay: self.router_delay,
+            flits_per_packet: self.flits_per_packet,
+            extrapolate: self.extrapolate,
+            flows: flows.into(),
+        };
+        if let Some(r) = cache.map.lock().unwrap().get(&key) {
+            cache.hits.fetch_add(1, Ordering::Relaxed);
+            return *r;
+        }
+        cache.misses.fetch_add(1, Ordering::Relaxed);
+        let r = self.run(flows);
+        let mut map = cache.map.lock().unwrap();
+        if map.len() < EPOCH_CACHE_CAP {
+            map.insert(key, r);
+        }
+        r
+    }
+
     /// Schedule one packet along its route (wormhole list scheduling).
     #[inline]
     fn send(&self, r: &[u32], inject: u64, busy: &mut [u64], res: &mut EpochResult) {
@@ -182,7 +301,9 @@ impl<'m> PacketSim<'m> {
 /// Golden-reference flit-level simulator (small traces only).
 pub struct FlitSim<'m> {
     mesh: &'m Mesh,
+    /// Input-buffer depth per link, flits (credit backpressure bound).
     pub buffer_depth: usize,
+    /// Router pipeline cycles per hop.
     pub router_delay: u64,
 }
 
@@ -194,6 +315,8 @@ struct FlitPkt {
 }
 
 impl<'m> FlitSim<'m> {
+    /// Cycle-accurate simulator over `mesh` with the given input-buffer
+    /// depth and the default 2-cycle router pipeline.
     pub fn new(mesh: &'m Mesh, buffer_depth: usize) -> Self {
         FlitSim {
             mesh,
@@ -432,5 +555,36 @@ mod tests {
     fn empty_epoch_is_zero() {
         let m = Mesh::new(4);
         assert_eq!(PacketSim::new(&m).run(&[]), EpochResult::default());
+    }
+
+    #[test]
+    fn cache_replays_identical_epochs() {
+        let m = Mesh::new(16);
+        let sim = PacketSim::new(&m);
+        let cache = EpochCache::new();
+        let flows = vec![flow(0, 10, 50, 0, 2), flow(3, 10, 50, 1, 2)];
+        let a = sim.run_cached(&flows, &cache);
+        let b = sim.run_cached(&flows, &cache);
+        assert_eq!(a, b);
+        assert_eq!(a, sim.run(&flows), "cached result must match uncached");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn cache_distinguishes_meshes_and_traces() {
+        let m1 = Mesh::new(16);
+        let m2 = Mesh::new(9);
+        let cache = EpochCache::new();
+        let flows = vec![flow(0, 5, 10, 0, 1)];
+        let r1 = PacketSim::new(&m1).run_cached(&flows, &cache);
+        let r2 = PacketSim::new(&m2).run_cached(&flows, &cache);
+        assert_eq!(cache.misses(), 2, "different meshes must not alias");
+        assert_eq!(r1, PacketSim::new(&m1).run(&flows));
+        assert_eq!(r2, PacketSim::new(&m2).run(&flows));
+        let other = vec![flow(0, 5, 11, 0, 1)];
+        PacketSim::new(&m1).run_cached(&other, &cache);
+        assert_eq!(cache.misses(), 3, "different traces must not alias");
     }
 }

@@ -16,6 +16,7 @@ pub const SIGNALING_SURVEY: &[(&str, f64, f64)] = &[
     ("turner_grs_intra [40]", 1.17, 7000.0),
 ];
 
+/// TX/RX driver + clocking figures for one NoP configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct DriverModel {
     /// Energy per transferred bit, pJ (TX + RX + clocking).
@@ -27,6 +28,8 @@ pub struct DriverModel {
 }
 
 impl DriverModel {
+    /// Driver figures for a NoP configuration (channel count × macro
+    /// areas, shared clocking lanes).
     pub fn new(nop: &NopConfig) -> DriverModel {
         let channels = nop.channel_width as f64;
         let clocks = (nop.channel_width as f64 / nop.lanes_per_clock as f64).ceil();

@@ -14,14 +14,18 @@ pub use wire::WireModel;
 use crate::config::SiamConfig;
 use crate::mapping::{Placement, Traffic};
 use crate::metrics::Metrics;
-use crate::noc::{Mesh, PacketSim};
+use crate::noc::{EpochCache, Mesh, PacketSim};
 
 /// Aggregated NoP evaluation.
 #[derive(Debug, Clone, Default)]
 pub struct NopReport {
+    /// Total NoP metrics (drivers, routers, interposer wiring).
     pub metrics: Metrics,
+    /// Serialized NoP cycles across the layer sequence.
     pub cycles: u64,
+    /// Packets delivered over the interposer.
     pub packets: u64,
+    /// Flit-link traversals over the interposer mesh.
     pub flit_hops: u64,
     /// Effective signaling frequency after the wire timing check, MHz.
     pub eff_freq_mhz: f64,
@@ -36,6 +40,19 @@ pub struct NopReport {
 /// Evaluate the NoP for a mapped DNN: cycle-accurate latency over the
 /// chiplet mesh + driver/wire energy and area.
 pub fn evaluate(cfg: &SiamConfig, traffic: &Traffic, placement: &Placement) -> NopReport {
+    evaluate_cached(cfg, traffic, placement, None)
+}
+
+/// [`evaluate`] with an optional shared [`EpochCache`]: identical
+/// interposer epochs across sweep points are replayed from the cache.
+/// Passing `None` is equivalent to [`evaluate`]; results are
+/// bit-identical either way.
+pub fn evaluate_cached(
+    cfg: &SiamConfig,
+    traffic: &Traffic,
+    placement: &Placement,
+    cache: Option<&EpochCache>,
+) -> NopReport {
     let tech = crate::circuit::Tech::from_device(&cfg.device);
     let wire = WireModel::new(&cfg.system.nop);
     let drv = DriverModel::new(&cfg.system.nop);
@@ -49,7 +66,10 @@ pub fn evaluate(cfg: &SiamConfig, traffic: &Traffic, placement: &Placement) -> N
     let mut packets = 0u64;
     let mut flit_hops = 0u64;
     for ep in &traffic.nop_epochs {
-        let r = psim.run(&ep.flows);
+        let r = match cache {
+            Some(c) => psim.run_cached(&ep.flows, c),
+            None => psim.run(&ep.flows),
+        };
         *per_layer.entry(ep.layer).or_default() += r.completion_cycles;
         packets += r.packets;
         flit_hops += r.flit_hops;

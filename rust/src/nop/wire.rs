@@ -4,6 +4,7 @@
 
 use crate::config::NopConfig;
 
+/// RC timing and wiring-area figures of one interposer link.
 #[derive(Debug, Clone, Copy)]
 pub struct WireModel {
     /// Total resistance of one chiplet-to-chiplet wire, Ω.
@@ -26,6 +27,7 @@ pub struct WireModel {
 }
 
 impl WireModel {
+    /// Evaluate the PTM-style RC model for a NoP configuration.
     pub fn new(nop: &NopConfig) -> WireModel {
         let l = nop.wire_length_mm;
         let r_ohm = nop.wire_r_ohm_per_mm * l;

@@ -24,15 +24,20 @@ pub fn synth_images(rng: &mut Rng, batch: usize) -> Vec<f32> {
 /// Result of one functional CNN forward.
 #[derive(Debug, Clone)]
 pub struct FunctionalRun {
+    /// Flattened `batch × classes` logits.
     pub logits: Vec<f32>,
+    /// Images in the batch.
     pub batch: usize,
+    /// Classifier width.
     pub classes: usize,
+    /// Flash-ADC resolution the kernel was compiled for.
     pub adc_bits: u8,
     /// Wall-clock of the PJRT execution (the Rust hot path), seconds.
     pub exec_seconds: f64,
 }
 
 impl FunctionalRun {
+    /// Predicted class per image.
     pub fn argmax(&self) -> Vec<usize> {
         (0..self.batch)
             .map(|b| {

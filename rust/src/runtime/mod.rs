@@ -13,7 +13,9 @@ use std::path::{Path, PathBuf};
 /// One entry of `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct ArtifactInfo {
+    /// Artifact name (e.g. `xbar_gemm_64x128x64_adc8`).
     pub name: String,
+    /// HLO text file name within the artifacts directory.
     pub file: String,
     /// Parameter shapes, in call order.
     pub params: Vec<Vec<usize>>,
@@ -59,6 +61,7 @@ impl ArtifactInfo {
         })
     }
 
+    /// Numeric metadata field, if present.
     pub fn meta_f64(&self, key: &str) -> Option<f64> {
         self.meta.get(key).and_then(Json::as_f64)
     }
@@ -66,6 +69,7 @@ impl ArtifactInfo {
 
 /// A compiled artifact ready to execute on the PJRT CPU client.
 pub struct Executable {
+    /// Manifest entry the executable was loaded from.
     pub info: ArtifactInfo,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -107,6 +111,7 @@ impl Executable {
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// Parsed `manifest.json` entries.
     pub manifest: Vec<ArtifactInfo>,
 }
 
@@ -141,6 +146,7 @@ impl Runtime {
         Runtime::open("artifacts")
     }
 
+    /// Manifest entry by artifact name.
     pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
         self.manifest.iter().find(|a| a.name == name)
     }
@@ -163,6 +169,7 @@ impl Runtime {
         Ok(Executable { info, exe })
     }
 
+    /// PJRT platform name (e.g. `cpu`; `stub` in offline builds).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

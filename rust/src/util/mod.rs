@@ -11,10 +11,12 @@ pub mod table;
 pub struct Rng(u64);
 
 impl Rng {
+    /// Seeded generator (seed 0 is remapped to 1).
     pub fn new(seed: u64) -> Rng {
         Rng(seed.max(1))
     }
 
+    /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.0;
         x ^= x >> 12;

@@ -8,6 +8,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -15,12 +16,14 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "column mismatch");
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// Render to an aligned string.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -48,6 +51,7 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -1,0 +1,231 @@
+//! Offline in-tree stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate, implementing exactly the API subset SIAM uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait for `Result` and `Option`,
+//! and the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! The build environment vendors no external crates, so this shim keeps
+//! the crate's error-handling idiomatic while remaining fully offline.
+//! Semantics follow the real crate where they matter:
+//!
+//! * `Display` shows the outermost context (or the root error when no
+//!   context was attached); `Debug` shows the whole cause chain.
+//! * [`Error::downcast_ref`] reaches *through* context layers to the
+//!   original typed error, so `match`-style recovery keeps working.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamically typed error with a human-readable context stack.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+    /// Context strings, innermost first (pushed as the error propagates).
+    context: Vec<String>,
+}
+
+/// Plain-message error used by [`anyhow!`] and `Option` contexts.
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Wrap a typed error.
+    pub fn new<E: StdError + Send + Sync + 'static>(e: E) -> Error {
+        Error {
+            inner: Box::new(e),
+            context: Vec::new(),
+        }
+    }
+
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error::new(MessageError(msg.to_string()))
+    }
+
+    /// Attach a higher-level context message (shown by `Display`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// Downcast to the original typed error, looking through any context
+    /// layers added along the way.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.inner.downcast_ref::<E>()
+    }
+
+    /// The root error this `Error` was built from.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cause: &(dyn StdError + 'static) = &*self.inner;
+        while let Some(src) = cause.source() {
+            cause = src;
+        }
+        cause
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            Some(c) => f.write_str(c),
+            None => write!(f, "{}", self.inner),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")?;
+        let mut causes: Vec<String> = self
+            .context
+            .iter()
+            .rev()
+            .skip(1)
+            .map(String::clone)
+            .collect();
+        causes.push(self.inner.to_string());
+        // When no context exists, Display already printed the root.
+        if self.context.is_empty() {
+            causes.pop();
+        }
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option` (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl StdError for Typed {}
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Error::new(Typed(7)).context("outer");
+        assert_eq!(e.to_string(), "outer");
+    }
+
+    #[test]
+    fn downcast_through_context() {
+        fn fails() -> Result<()> {
+            Err(Typed(3)).context("ctx")
+        }
+        let e = fails().unwrap_err();
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(3)));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let e = anyhow!("x = {}", 5);
+        assert_eq!(e.to_string(), "x = 5");
+        fn bailer() -> Result<()> {
+            ensure!(1 + 1 == 2);
+            bail!("boom {}", 9)
+        }
+        assert_eq!(bailer().unwrap_err().to_string(), "boom 9");
+    }
+}
