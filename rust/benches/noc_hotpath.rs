@@ -1,13 +1,15 @@
-//! L3 hot-path microbenchmark (§Perf): the cycle-accurate network
-//! simulation is SIAM's dominant cost (the paper's BookSim runs are why
-//! VGG-16 takes 4.26 h). This bench measures PacketSim throughput on
-//! synthetic and real traces, for the before/after log in
-//! EXPERIMENTS.md §Perf.
+//! L3 hot-path microbenchmark (§Perf): the interconnect simulation is
+//! SIAM's dominant cost (the paper's BookSim runs are why VGG-16 takes
+//! 4.26 h). This bench measures per-engine throughput — the flow-level
+//! epoch engine against the per-packet scheduler — on synthetic and
+//! real traces. The headline single-point speedup lives in
+//! `table3_simtime` (and `BENCH_noc.json`); this binary is for quick
+//! relative profiling while hacking on the engines.
 
 use siam::config::SiamConfig;
 use siam::dnn::build_model;
 use siam::mapping::{build_traffic, map_dnn, Flow, Placement};
-use siam::noc::{Mesh, PacketSim};
+use siam::noc::{FlowSim, Mesh, PacketSim};
 use std::time::Instant;
 
 fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
@@ -19,7 +21,7 @@ fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
     }
     let dt = t0.elapsed().as_secs_f64() / iters as f64;
     println!(
-        "{name:<42} {:>10.3} ms/run   {:>8.1} Mpkt/s",
+        "{name:<52} {:>10.3} ms/run   {:>8.1} Mpkt/s",
         dt * 1e3,
         total_packets as f64 / dt / 1e6
     );
@@ -28,7 +30,9 @@ fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
 fn main() -> anyhow::Result<()> {
     println!("== NoC/NoP hot-path throughput ==\n");
 
-    // synthetic: uniform-random flows on a 6x6 mesh
+    // synthetic: uniform-random flows on a 6x6 mesh (irregular strides —
+    // the flow-level engine delegates these to the per-packet scheduler,
+    // so the two rows should roughly agree)
     let mesh = Mesh::new(36);
     let sim = PacketSim::new(&mesh);
     let mut flows = Vec::new();
@@ -47,8 +51,13 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let total: u64 = flows.iter().map(|f| f.count).sum();
-    bench("synthetic 6x6 mesh, ~500k packets", 5, || {
+    bench("packet-level  synthetic 6x6 mesh, ~500k packets", 5, || {
         sim.run(&flows);
+        total
+    });
+    let mut fsim = FlowSim::new(&mesh);
+    bench("flow-level    synthetic 6x6 mesh, ~500k packets", 5, || {
+        fsim.run(&flows);
         total
     });
 
@@ -67,11 +76,22 @@ fn main() -> anyhow::Result<()> {
             .map(|e| Flow::total_packets(&e.flows))
             .sum();
         bench(
-            &format!("{model} full NoC trace ({packets} packets)"),
+            &format!("packet-level  {model} full NoC trace ({packets} packets)"),
             3,
             || {
                 for ep in &traffic.noc_epochs {
                     tsim.run(&ep.flows);
+                }
+                packets
+            },
+        );
+        let mut fsim = FlowSim::new(&tile_mesh);
+        bench(
+            &format!("flow-level    {model} full NoC trace ({packets} packets)"),
+            3,
+            || {
+                for ep in &traffic.noc_epochs {
+                    fsim.run(&ep.flows);
                 }
                 packets
             },

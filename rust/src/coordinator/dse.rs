@@ -77,6 +77,35 @@ impl FigureOfMerit {
     }
 }
 
+/// Shared-stage cache statistics of one sweep run, read off the
+/// [`SweepContext`] after the grid completes. The epoch counters are
+/// the headline: they say how much NoC/NoP simulation the flow-level
+/// engine actually had to do versus replay.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepStats {
+    /// Epoch simulations answered from the shared [`EpochCache`].
+    ///
+    /// [`EpochCache`]: crate::noc::EpochCache
+    pub epoch_hits: u64,
+    /// Epoch simulations that had to run an engine.
+    pub epoch_misses: u64,
+    /// Distinct epochs retained at the end of the sweep.
+    pub epochs_cached: usize,
+}
+
+impl SweepStats {
+    /// Fraction of epoch lookups answered from the cache (0 when the
+    /// sweep simulated no epochs).
+    pub fn epoch_hit_rate(&self) -> f64 {
+        let total = self.epoch_hits + self.epoch_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.epoch_hits as f64 / total as f64
+        }
+    }
+}
+
 /// Outcome of a sweep: all surviving points in deterministic grid order
 /// plus the ranking configuration.
 #[derive(Debug, Clone)]
@@ -85,6 +114,8 @@ pub struct SweepResult {
     /// points whose homogeneous architecture could not fit the DNN are
     /// skipped, mirroring Algorithm 1's error path.
     pub points: Vec<SweepPoint>,
+    /// Cache statistics of the run (epoch hit/miss counts).
+    pub stats: SweepStats,
     fom: FigureOfMerit,
 }
 
@@ -234,6 +265,7 @@ impl SweepBuilder {
             }
             return Ok(SweepResult {
                 points,
+                stats: stats_of(&ctx),
                 fom: self.fom,
             });
         }
@@ -241,9 +273,10 @@ impl SweepBuilder {
         // Work-stealing pool: workers claim the next unevaluated grid
         // index from a shared counter and write into their point's slot,
         // so results land in grid order no matter who finishes when.
+        // (`None` until claimed; `Ok(None)` marks a skipped point.)
+        type PointSlot = Mutex<Option<Result<Option<SweepPoint>>>>;
         let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Result<Option<SweepPoint>>>>> =
-            grid.iter().map(|_| Mutex::new(None)).collect();
+        let slots: Vec<PointSlot> = grid.iter().map(|_| Mutex::new(None)).collect();
         std::thread::scope(|s| {
             for _ in 0..threads {
                 s.spawn(|| loop {
@@ -269,8 +302,19 @@ impl SweepBuilder {
         }
         Ok(SweepResult {
             points,
+            stats: stats_of(&ctx),
             fom: self.fom,
         })
+    }
+}
+
+/// Read the shared-stage cache counters off a finished sweep's context.
+fn stats_of(ctx: &SweepContext) -> SweepStats {
+    let cache = ctx.epoch_cache();
+    SweepStats {
+        epoch_hits: cache.hits(),
+        epoch_misses: cache.misses(),
+        epochs_cached: cache.len(),
     }
 }
 
@@ -399,6 +443,7 @@ mod tests {
         let key = |pts: &[SweepPoint]| -> Vec<(usize, Option<usize>, u64)> {
             let r = SweepResult {
                 points: pts.to_vec(),
+                stats: SweepStats::default(),
                 fom: FigureOfMerit::Edap,
             };
             r.ranked()
@@ -407,6 +452,24 @@ mod tests {
                 .collect()
         };
         assert_eq!(key(&serial), key(&parallel));
+    }
+
+    #[test]
+    fn sweep_reports_cache_stats() {
+        let base = SiamConfig::paper_default();
+        let res = SweepBuilder::new(&base)
+            .tiles(&[9, 16])
+            .chiplet_counts(&[None])
+            .run()
+            .unwrap();
+        let s = res.stats;
+        assert!(s.epoch_misses > 0, "a cold sweep must simulate something");
+        assert!(s.epochs_cached > 0);
+        assert!((0.0..=1.0).contains(&s.epoch_hit_rate()));
+        assert!(
+            s.epochs_cached <= s.epoch_misses as usize,
+            "cannot retain more epochs than were simulated"
+        );
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod sensitivity;
 
 pub use dse::{
     best_by_edap, sweep, sweep_serial, FigureOfMerit, SweepBuilder, SweepPoint, SweepResult,
+    SweepStats,
 };
 pub use pipeline::SweepContext;
 pub use report::SimReport;

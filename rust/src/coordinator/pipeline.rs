@@ -15,8 +15,10 @@
 //!   design-space sweep varies, so they are computed once and shared
 //!   through an immutable [`SweepContext`].
 //! * **Keyed stages** — NoC/NoP epoch simulations repeat across
-//!   neighbouring points whenever the trace coincides; they go through
-//!   the [`crate::noc::EpochCache`].
+//!   neighbouring points whenever the trace coincides; the flow-level
+//!   engine ([`crate::noc::FlowSim`]) answers them through the sharded
+//!   [`crate::noc::EpochCache`], keyed by 128-bit trace fingerprints
+//!   over canonicalized (order-independent) flow traces.
 //! * **Per-point stages** — partition & mapping (Algorithm 1), traffic
 //!   generation (Algorithm 2) and metric assembly genuinely differ per
 //!   point and always run.
@@ -154,8 +156,8 @@ pub(crate) fn stage_circuit(
     CircuitEstimator::new(cfg).estimate_cached(dnn, map, traffic, Some(&ctx.layer_costs))
 }
 
-/// Stage 3b: intra-chiplet NoC simulation through the shared epoch
-/// cache.
+/// Stage 3b: intra-chiplet NoC simulation — the flow-level epoch engine
+/// ([`crate::noc::FlowSim`]) through the shared sharded epoch cache.
 pub(crate) fn stage_noc(
     cfg: &SiamConfig,
     ctx: &SweepContext,
@@ -165,8 +167,8 @@ pub(crate) fn stage_noc(
     crate::noc::evaluate_cached(cfg, traffic, num_chiplets, Some(&ctx.epoch_cache))
 }
 
-/// Stage 3c: inter-chiplet NoP simulation through the shared epoch
-/// cache.
+/// Stage 3c: inter-chiplet NoP simulation — the flow-level epoch engine
+/// over the interposer mesh, through the shared sharded epoch cache.
 pub(crate) fn stage_nop(
     cfg: &SiamConfig,
     ctx: &SweepContext,

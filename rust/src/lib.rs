@@ -12,7 +12,8 @@
 //! * [`dnn`] — layer graph + model zoo (ResNet/VGG/DenseNet/LeNet/...).
 //! * [`mapping`] — partition & mapping engine (Eq. 1 + Algorithm 1).
 //! * [`circuit`] — NeuroSim-style bottom-up circuit estimator.
-//! * [`noc`] — cycle-accurate intra-chiplet network simulator.
+//! * [`noc`] — intra-chiplet network simulator (three-tier engine
+//!   hierarchy: flow-level, packet-level, flit-level golden).
 //! * [`nop`] — network-on-package engine (wires, TX/RX drivers, router).
 //! * [`dram`] — Ramulator/VAMPIRE-style DDR3/DDR4 access estimator.
 //! * [`cost`] — Appendix-A fabrication cost / yield model.

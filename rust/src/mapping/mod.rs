@@ -12,7 +12,7 @@ mod traffic;
 
 pub use partition::{map_dnn, ChipletShare, LayerMapping, MappingError, MappingResult};
 pub use placement::Placement;
-pub use traffic::{build_traffic, Flow, Traffic};
+pub use traffic::{build_traffic, canonicalize_flows, Flow, Traffic};
 
 #[cfg(test)]
 mod tests {

@@ -43,6 +43,19 @@ impl Flow {
 /// One timestamp epoch (Algorithm 2 resets k per layer pair).
 pub type Epoch = Vec<Flow>;
 
+/// Sort an epoch's flows into the canonical `(start, src, dst, count,
+/// stride)` order.
+///
+/// Two epochs containing the same flow multiset always serialize to the
+/// same trace, so order-permuted but otherwise identical epochs produce
+/// one [`crate::noc::EpochCache`] fingerprint (one miss, then hits) and
+/// one well-defined schedule — the simulators process flows with tied
+/// start cycles in trace order, so canonicalization also pins that tie
+/// break. [`build_traffic`] canonicalizes every epoch it emits.
+pub fn canonicalize_flows(flows: &mut [Flow]) {
+    flows.sort_unstable_by_key(|f| (f.start, f.src, f.dst, f.count, f.stride));
+}
+
 /// An epoch tagged with the weight-layer position that produced it, so
 /// the coordinator can overlap epochs belonging to the same layer
 /// (chiplets of one layer communicate in parallel) while serializing
@@ -189,6 +202,7 @@ pub fn build_traffic(
                 np,
                 &mut epoch,
             );
+            canonicalize_flows(&mut epoch);
             t.inter_chiplet_bits += (n * out_elems * q_partial) as f64;
             t.nop_epochs.push(LabeledEpoch {
                 layer: li,
@@ -219,6 +233,7 @@ pub fn build_traffic(
                     per_source(np_nop, eff_srcs.len()),
                     &mut epoch,
                 );
+                canonicalize_flows(&mut epoch);
                 if !epoch.is_empty() {
                     t.inter_chiplet_bits +=
                         (a_out * q) as f64 * dst_chiplets.len() as f64;
@@ -244,6 +259,7 @@ pub fn build_traffic(
                 };
                 let mut epoch = Epoch::new();
                 alg2_flows(&srcs, &dsts, per_source(np_noc, srcs.len()), &mut epoch);
+                canonicalize_flows(&mut epoch);
                 if !epoch.is_empty() {
                     t.intra_chiplet_bits += (a_out * q) as f64;
                     t.noc_epochs.push(LabeledEpoch {
@@ -259,6 +275,7 @@ pub fn build_traffic(
                     let dsts = tile_ids(f2, n2, tiles_pc);
                     let mut epoch = Epoch::new();
                     alg2_flows(&[NOP_PORT_TILE], &dsts, np_noc, &mut epoch);
+                    canonicalize_flows(&mut epoch);
                     if !epoch.is_empty() {
                         t.intra_chiplet_bits += (a_out * q) as f64;
                         t.noc_epochs.push(LabeledEpoch {
@@ -293,6 +310,7 @@ pub fn build_traffic(
             let np = per_source((elems * q).div_ceil(w_nop), src_c.len());
             let mut epoch = Epoch::new();
             alg2_flows(&src_c, &dst_c, np, &mut epoch);
+            canonicalize_flows(&mut epoch);
             if !epoch.is_empty() {
                 t.inter_chiplet_bits += (elems * q) as f64 * dst_c.len() as f64;
                 t.nop_epochs.push(LabeledEpoch {
@@ -377,6 +395,47 @@ mod tests {
         let (t, _) = setup("resnet110", "cifar10", &cfg);
         assert_eq!(t.inter_chiplet_bits, 0.0);
         assert!(t.nop_epochs.is_empty());
+    }
+
+    #[test]
+    fn permuted_epochs_share_one_cache_entry() {
+        use crate::noc::{EpochCache, Mesh, PacketSim};
+        // the same flow set in two different orders must canonicalize to
+        // one trace: one cache miss, then a hit
+        let f = |src: u32, start: u64| Flow {
+            src,
+            dst: 5,
+            count: 7,
+            start,
+            stride: 3,
+        };
+        let mut a = vec![f(2, 2), f(0, 0), f(1, 1)];
+        let mut b = vec![a[1], a[2], a[0]];
+        canonicalize_flows(&mut a);
+        canonicalize_flows(&mut b);
+        assert_eq!(a, b, "permutations must canonicalize identically");
+
+        let mesh = Mesh::new(9);
+        let sim = PacketSim::new(&mesh);
+        let cache = EpochCache::new();
+        let ra = sim.run_cached(&a, &cache);
+        let rb = sim.run_cached(&b, &cache);
+        assert_eq!(ra, rb);
+        assert_eq!(cache.misses(), 1, "permuted epochs must alias");
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn emitted_epochs_are_canonical() {
+        let cfg = SiamConfig::paper_default();
+        let (t, _) = setup("resnet110", "cifar10", &cfg);
+        let key = |f: &Flow| (f.start, f.src, f.dst, f.count, f.stride);
+        for ep in t.noc_epochs.iter().chain(&t.nop_epochs) {
+            assert!(
+                ep.flows.windows(2).all(|w| key(&w[0]) <= key(&w[1])),
+                "epoch not in canonical order"
+            );
+        }
     }
 
     #[test]

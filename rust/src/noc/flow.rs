@@ -1,0 +1,710 @@
+//! Flow-level epoch engine — the top tier of the NoC/NoP simulator
+//! hierarchy (see `ARCHITECTURE.md`, "Three-tier interconnect engine").
+//!
+//! [`FlowSim`] schedules whole flows (count × stride packet trains)
+//! against per-link occupancy instead of expanding each flow packet by
+//! packet the way [`PacketSim`](super::PacketSim) does:
+//!
+//! * **Uncontended flows** (no link shared with any other flow) are
+//!   answered in closed form — O(route length) per flow, independent of
+//!   the packet count.
+//! * **Contended flow groups** are isolated into link-disjoint
+//!   components (union–find over shared links) and round-simulated with
+//!   an *exact* shift-periodicity certificate: once the component's
+//!   link-occupancy state repeats shifted by one stride, every remaining
+//!   round is a time-translate of the last one and the tail is summed in
+//!   closed form. Subcritical Algorithm-2 components certify within a
+//!   handful of rounds — far before `PacketSim`'s fixed warm-up.
+//! * **Oversaturated components** (queues grow without bound, so the
+//!   shifted state never repeats) fall back to the same
+//!   empirically-validated linear-growth extrapolation `PacketSim` uses,
+//!   restricted to the component.
+//! * **Irregular traces** (mixed strides, late starts — nothing
+//!   Algorithm 2 emits) fall back to `PacketSim`'s k-way-merge
+//!   per-packet scheduler wholesale.
+//!
+//! Within each component, rounds replay `PacketSim`'s list-scheduling
+//! `send` arithmetic in the same `(start, flow index)` order, and
+//! components never share links, so the engine reproduces `PacketSim`
+//! bit-for-bit on uncontended and steady-state traces (asserted by the
+//! property tests in `tests/proptests.rs`).
+//!
+//! The engine owns a per-instance **simulation arena**: the busy-until
+//! vector, X–Y routes memoized by `(src, dst)`, union–find scratch and
+//! certificate buffers are reused across every epoch of a sweep point,
+//! so steady-state epoch evaluation allocates nothing.
+
+use super::mesh::Mesh;
+use super::sim::{
+    steady_tail, uniform_stride, warmup_rounds, EpochCache, EpochKey, EpochResult, PacketSim,
+    ENGINE_FLOW,
+};
+use crate::mapping::Flow;
+use std::collections::HashMap;
+
+/// Reusable per-engine simulation state (see module docs). All buffers
+/// grow to the high-water mark of the epochs they served and are reused
+/// verbatim afterwards.
+#[derive(Debug, Default)]
+struct Arena {
+    /// Memoized X–Y routes: `(src, dst)` → index into `route_spans`.
+    route_ids: HashMap<(u32, u32), u32>,
+    /// Flattened storage for all interned routes.
+    route_pool: Vec<u32>,
+    /// `(offset, len)` of each interned route inside `route_pool`.
+    route_spans: Vec<(u32, u32)>,
+    /// Scratch for `Mesh::route`.
+    route_buf: Vec<u32>,
+    /// Per-link busy-until time; sparsely reset after every run.
+    busy: Vec<u64>,
+    /// Links dirtied by the current run (drives the sparse reset).
+    touched: Vec<u32>,
+    /// Per-link generation stamp for the union–find link walk.
+    link_stamp: Vec<u32>,
+    /// Last flow index seen on each link in the current generation.
+    link_last: Vec<u32>,
+    /// Current generation.
+    stamp: u32,
+    /// Per-flow interned route id for the current run.
+    flow_route: Vec<u32>,
+    /// Union–find parents over flow indices.
+    uf: Vec<u32>,
+    /// `(component root, start, flow index)` — sorted so components are
+    /// contiguous and ordered by `(start, index)` within each run.
+    grouped: Vec<(u32, u64, u32)>,
+    /// Links of the component currently being certified (active flows).
+    state_links: Vec<u32>,
+    /// Busy-until snapshot of `state_links` after the previous round.
+    state_prev: Vec<u64>,
+}
+
+/// Immutable view of the interned routes, split off the arena so route
+/// lookups can coexist with mutable borrows of the link state.
+struct RouteTable<'a> {
+    pool: &'a [u32],
+    spans: &'a [(u32, u32)],
+    flow_route: &'a [u32],
+}
+
+impl RouteTable<'_> {
+    fn route(&self, fi: u32) -> &[u32] {
+        let (off, len) = self.spans[self.flow_route[fi as usize] as usize];
+        &self.pool[off as usize..off as usize + len as usize]
+    }
+}
+
+fn find(uf: &mut [u32], mut x: u32) -> u32 {
+    while uf[x as usize] != x {
+        let parent = uf[x as usize];
+        uf[x as usize] = uf[parent as usize];
+        x = uf[x as usize];
+    }
+    x
+}
+
+fn union(uf: &mut [u32], a: u32, b: u32) {
+    let (ra, rb) = (find(uf, a), find(uf, b));
+    if ra != rb {
+        uf[ra as usize] = rb;
+    }
+}
+
+/// Flow-level list-scheduling engine (see module docs). Results match
+/// [`PacketSim`](super::PacketSim) exactly on Algorithm-2 (uniform)
+/// traces; irregular traces delegate to it outright.
+pub struct FlowSim<'m> {
+    mesh: &'m Mesh,
+    /// Router pipeline cycles per hop (head flit).
+    pub router_delay: u64,
+    /// Flits per packet (Algorithm-2 packets are one bus-width flit).
+    pub flits_per_packet: u64,
+    /// Gates the tier-2 linear-growth fallback for oversaturated
+    /// components (the shift-periodicity certificate is exact and always
+    /// on). Disable to force certificate-or-full round simulation — the
+    /// brute-force escape hatch for detecting or bisecting a suspected
+    /// extrapolation divergence, mirroring [`PacketSim::extrapolate`].
+    pub extrapolate: bool,
+    arena: Arena,
+}
+
+impl<'m> FlowSim<'m> {
+    /// Flow-level simulator over `mesh` with the paper's defaults:
+    /// 2-cycle routers, single-flit packets, linear-growth fallback
+    /// enabled.
+    pub fn new(mesh: &'m Mesh) -> Self {
+        FlowSim {
+            mesh,
+            router_delay: 2,
+            flits_per_packet: 1,
+            extrapolate: true,
+            arena: Arena::default(),
+        }
+    }
+
+    /// Intern the X–Y route for `(src, dst)`, memoized across all epochs
+    /// this engine simulates.
+    fn intern_route(&mut self, src: u32, dst: u32) -> u32 {
+        if let Some(&id) = self.arena.route_ids.get(&(src, dst)) {
+            return id;
+        }
+        let mut buf = std::mem::take(&mut self.arena.route_buf);
+        self.mesh.route(src, dst, &mut buf);
+        let off = self.arena.route_pool.len() as u32;
+        let len = buf.len() as u32;
+        self.arena.route_pool.extend_from_slice(&buf);
+        self.arena.route_buf = buf;
+        let id = self.arena.route_spans.len() as u32;
+        self.arena.route_spans.push((off, len));
+        self.arena.route_ids.insert((src, dst), id);
+        id
+    }
+
+    /// Simulate one epoch of flows (timestamps restart at 0).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use siam::mapping::Flow;
+    /// use siam::noc::{FlowSim, Mesh, PacketSim};
+    ///
+    /// let mesh = Mesh::new(16);
+    /// let epoch = [
+    ///     Flow { src: 0, dst: 2, count: 400, start: 0, stride: 3 },
+    ///     Flow { src: 1, dst: 2, count: 400, start: 1, stride: 3 },
+    /// ];
+    /// let mut flow_level = FlowSim::new(&mesh);
+    /// // identical to the per-packet engine, at a fraction of the cost
+    /// assert_eq!(flow_level.run(&epoch), PacketSim::new(&mesh).run(&epoch));
+    /// ```
+    pub fn run(&mut self, flows: &[Flow]) -> EpochResult {
+        let mut res = EpochResult::default();
+        if flows.is_empty() {
+            return res;
+        }
+
+        // Single-flow epochs (the dominant shape of small-CNN traces,
+        // where most layers occupy one tile) take the closed form
+        // directly — it is exact for any (start, stride), so no
+        // uniformity check is needed and nothing touches the link state.
+        if flows.len() == 1 {
+            let f = &flows[0];
+            if f.count > 0 {
+                let id = self.intern_route(f.src, f.dst);
+                let hops = self.arena.route_spans[id as usize].1 as u64;
+                singleton_result(f, hops, self.router_delay, self.flits_per_packet, &mut res);
+            }
+            return res;
+        }
+
+        // Algorithm-2 epochs share one stride with all starts inside the
+        // first round; anything else is irregular — delegate to the
+        // per-packet k-way-merge scheduler (bottom of the fallback chain).
+        let Some(stride) = uniform_stride(flows) else {
+            let mut psim = PacketSim::new(self.mesh);
+            psim.router_delay = self.router_delay;
+            psim.flits_per_packet = self.flits_per_packet;
+            psim.extrapolate = self.extrapolate;
+            return psim.run(flows);
+        };
+
+        let n = flows.len();
+
+        // ---- intern routes (memoized across epochs)
+        self.arena.flow_route.clear();
+        for f in flows {
+            let id = self.intern_route(f.src, f.dst);
+            self.arena.flow_route.push(id);
+        }
+
+        // ---- size the per-link state lazily
+        let nl = self.mesh.num_links();
+        if self.arena.busy.len() < nl {
+            self.arena.busy.resize(nl, 0);
+            self.arena.link_stamp.resize(nl, 0);
+            self.arena.link_last.resize(nl, 0);
+        }
+
+        // ---- union flows sharing any link into contention components
+        self.arena.uf.clear();
+        self.arena.uf.extend(0..n as u32);
+        self.arena.stamp = self.arena.stamp.wrapping_add(1);
+        if self.arena.stamp == 0 {
+            self.arena.link_stamp.fill(0);
+            self.arena.stamp = 1;
+        }
+        let stamp = self.arena.stamp;
+        self.arena.touched.clear();
+        for fi in 0..n as u32 {
+            let (off, len) = self.arena.route_spans[self.arena.flow_route[fi as usize] as usize];
+            for &link in &self.arena.route_pool[off as usize..(off + len) as usize] {
+                let l = link as usize;
+                if self.arena.link_stamp[l] == stamp {
+                    let other = self.arena.link_last[l];
+                    union(&mut self.arena.uf, fi, other);
+                } else {
+                    self.arena.link_stamp[l] = stamp;
+                    self.arena.touched.push(link);
+                }
+                self.arena.link_last[l] = fi;
+            }
+        }
+
+        // ---- group flows by component, ordered by (start, index) within
+        // each — PacketSim's injection-round order.
+        self.arena.grouped.clear();
+        for fi in 0..n as u32 {
+            let root = find(&mut self.arena.uf, fi);
+            self.arena.grouped.push((root, flows[fi as usize].start, fi));
+        }
+        self.arena.grouped.sort_unstable();
+
+        let d = self.router_delay;
+        let fpp = self.flits_per_packet;
+        let extrapolate = self.extrapolate;
+        let warmup = warmup_rounds(self.mesh);
+
+        let Arena {
+            route_pool,
+            route_spans,
+            flow_route,
+            busy,
+            touched,
+            grouped,
+            state_links,
+            state_prev,
+            ..
+        } = &mut self.arena;
+        let routes = RouteTable {
+            pool: route_pool.as_slice(),
+            spans: route_spans.as_slice(),
+            flow_route: flow_route.as_slice(),
+        };
+
+        let mut i = 0usize;
+        while i < grouped.len() {
+            let root = grouped[i].0;
+            let mut j = i + 1;
+            while j < grouped.len() && grouped[j].0 == root {
+                j += 1;
+            }
+            if j - i == 1 {
+                let fi = grouped[i].2;
+                let hops = routes.route(fi).len() as u64;
+                singleton_result(&flows[fi as usize], hops, d, fpp, &mut res);
+            } else {
+                run_component(
+                    flows,
+                    &grouped[i..j],
+                    &routes,
+                    stride,
+                    d,
+                    fpp,
+                    warmup,
+                    extrapolate,
+                    busy,
+                    state_links,
+                    state_prev,
+                    &mut res,
+                );
+            }
+            i = j;
+        }
+
+        // sparse reset: only links this run dirtied
+        for &l in touched.iter() {
+            busy[l as usize] = 0;
+        }
+
+        res
+    }
+
+    /// [`run`](FlowSim::run) through an [`EpochCache`]: identical epochs
+    /// (same mesh dimensions, engine parameters and flow trace) are
+    /// simulated once and replayed thereafter. Results are bit-identical
+    /// to the uncached path.
+    pub fn run_cached(&mut self, flows: &[Flow], cache: &EpochCache) -> EpochResult {
+        let key = EpochKey::fingerprint(
+            ENGINE_FLOW,
+            self.mesh,
+            self.router_delay,
+            self.flits_per_packet,
+            self.extrapolate,
+            flows,
+        );
+        cache.get_or_compute(key, || self.run(flows))
+    }
+}
+
+/// Closed form for a flow whose links nobody else uses. Exact: with a
+/// private route the list schedule degenerates to per-link arithmetic —
+/// packets pipeline freely when `stride >= flits_per_packet` and queue
+/// behind the first link with constant extra delay `F - stride` per
+/// packet otherwise.
+fn singleton_result(f: &Flow, hops: u64, d: u64, fpp: u64, res: &mut EpochResult) {
+    let n = f.count;
+    let (completion, latency) = if hops == 0 {
+        // src == dst after self-loop filtering: deliver after serialization
+        (f.start + (n - 1) * f.stride + fpp, n * fpp)
+    } else {
+        let gap = f.stride.max(fpp);
+        let queueing = fpp.saturating_sub(f.stride);
+        (
+            f.start + (n - 1) * gap + hops * d + fpp,
+            n * (hops * d + fpp) + queueing * (n * (n - 1) / 2),
+        )
+    };
+    res.packets += n;
+    res.flit_hops += n * hops * fpp;
+    res.total_latency_cycles += latency;
+    res.completion_cycles = res.completion_cycles.max(completion);
+}
+
+/// Links written by the flows of `members` still active at `round`,
+/// sorted and deduplicated — the certificate's state vector.
+fn rebuild_state_links(
+    flows: &[Flow],
+    members: &[(u32, u64, u32)],
+    routes: &RouteTable<'_>,
+    round: u64,
+    state_links: &mut Vec<u32>,
+) {
+    state_links.clear();
+    for m in members {
+        if flows[m.2 as usize].count > round {
+            state_links.extend_from_slice(routes.route(m.2));
+        }
+    }
+    state_links.sort_unstable();
+    state_links.dedup();
+}
+
+/// Round-simulate one contention component (flows sharing links), with
+/// the shift-periodicity certificate (exact) and the linear-growth
+/// fallback (PacketSim's validated heuristic) for oversaturated links.
+#[allow(clippy::too_many_arguments)]
+fn run_component(
+    flows: &[Flow],
+    members: &[(u32, u64, u32)],
+    routes: &RouteTable<'_>,
+    stride: u64,
+    d: u64,
+    fpp: u64,
+    warmup: u64,
+    extrapolate: bool,
+    busy: &mut [u64],
+    state_links: &mut Vec<u32>,
+    state_prev: &mut Vec<u64>,
+    res: &mut EpochResult,
+) {
+    let max_count = members
+        .iter()
+        .map(|m| flows[m.2 as usize].count)
+        .max()
+        .unwrap();
+    let equal_counts = members
+        .iter()
+        .all(|m| flows[m.2 as usize].count == max_count);
+
+    // `boundary`: first round at which some flow exhausts — the active
+    // set (and hence the certificate's state vector) is constant below it.
+    let mut boundary = members
+        .iter()
+        .map(|m| flows[m.2 as usize].count)
+        .min()
+        .unwrap();
+    rebuild_state_links(flows, members, routes, 0, state_links);
+    state_prev.clear();
+    let mut have_prev = false;
+
+    let mut comp_completion = 0u64;
+    let mut prev = (0u64, 0u64); // (completion, latency) after prev round
+    let mut prev_delta = (u64::MAX, u64::MAX);
+    let mut same_delta_rounds = 0u32;
+    let mut round = 0u64;
+    while round < max_count {
+        if round == boundary {
+            // a flow exhausted: shrink the state vector to the surviving
+            // flows' links and re-arm the certificate
+            rebuild_state_links(flows, members, routes, round, state_links);
+            boundary = members
+                .iter()
+                .map(|m| flows[m.2 as usize].count)
+                .filter(|&c| c > round)
+                .min()
+                .unwrap_or(max_count);
+            have_prev = false;
+        }
+
+        // ---- one injection round, PacketSim's send arithmetic verbatim
+        let mut round_lat = 0u64;
+        let mut round_max = 0u64;
+        let mut active_cnt = 0u64;
+        let mut active_hops = 0u64;
+        for m in members {
+            let f = &flows[m.2 as usize];
+            if round >= f.count {
+                continue;
+            }
+            let inject = f.start + round * stride;
+            let r = routes.route(m.2);
+            let mut head = inject;
+            for &l in r {
+                let start = (head + d).max(busy[l as usize]);
+                busy[l as usize] = start + fpp;
+                head = start;
+            }
+            let arrival = head + fpp;
+            res.packets += 1;
+            res.flit_hops += r.len() as u64 * fpp;
+            round_lat += arrival - inject;
+            round_max = round_max.max(arrival);
+            active_cnt += 1;
+            active_hops += r.len() as u64;
+        }
+        res.total_latency_cycles += round_lat;
+        comp_completion = comp_completion.max(round_max);
+
+        // ---- tier 1: exact shift-periodicity certificate. If every
+        // active link's busy-until advanced by exactly `stride` since the
+        // previous round, round r+1 is a time-translate of round r (same
+        // state up to the shift, same injections up to the shift), so the
+        // whole window up to the next exhaustion is summed in closed form
+        // and the link state jumps forward exactly.
+        if have_prev && boundary > round + 1 {
+            let periodic = state_links
+                .iter()
+                .zip(state_prev.iter())
+                .all(|(&l, &pb)| busy[l as usize] == pb + stride);
+            if periodic {
+                let k = boundary - 1 - round;
+                res.packets += active_cnt * k;
+                res.flit_hops += active_hops * fpp * k;
+                res.total_latency_cycles += round_lat * k;
+                comp_completion = comp_completion.max(round_max + stride * k);
+                for &l in state_links.iter() {
+                    busy[l as usize] += stride * k;
+                }
+                round = boundary; // jump past the certified window
+                have_prev = false;
+                prev = (comp_completion, round_lat);
+                prev_delta = (u64::MAX, u64::MAX);
+                same_delta_rounds = 0;
+                continue;
+            }
+        }
+
+        // ---- tier 2: linear-growth fallback for oversaturated links
+        // (queues grow every round, so the shifted state never repeats).
+        // PacketSim's §Perf extrapolation arithmetic, restricted to this
+        // component, armed one round later (three equal consecutive
+        // (completion, latency) deltas instead of two) for extra margin
+        // against pre-asymptotic coincidences.
+        let delta = (comp_completion - prev.0, round_lat.wrapping_sub(prev.1));
+        if delta == prev_delta {
+            same_delta_rounds += 1;
+        } else {
+            same_delta_rounds = 0;
+        }
+        let armed = extrapolate && equal_counts && round > warmup;
+        if armed && same_delta_rounds >= 2 && round_lat >= prev.1 {
+            let remaining = max_count - round - 1;
+            if remaining > 0 {
+                let tail = steady_tail(
+                    remaining,
+                    active_cnt,
+                    active_hops * fpp,
+                    round_lat,
+                    round_lat - prev.1, // == delta.1
+                    delta.0,
+                );
+                res.packets += tail.packets;
+                res.flit_hops += tail.flit_hops;
+                comp_completion += tail.completion;
+                res.total_latency_cycles += tail.latency;
+                break;
+            }
+        }
+
+        state_prev.clear();
+        state_prev.extend(state_links.iter().map(|&l| busy[l as usize]));
+        have_prev = true;
+        prev_delta = delta;
+        prev = (comp_completion, round_lat);
+        round += 1;
+    }
+
+    res.completion_cycles = res.completion_cycles.max(comp_completion);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flow(src: u32, dst: u32, count: u64, start: u64, stride: u64) -> Flow {
+        Flow {
+            src,
+            dst,
+            count,
+            start,
+            stride,
+        }
+    }
+
+    fn brute(mesh: &Mesh) -> PacketSim<'_> {
+        let mut p = PacketSim::new(mesh);
+        p.extrapolate = false;
+        p
+    }
+
+    #[test]
+    fn empty_epoch_is_zero() {
+        let m = Mesh::new(4);
+        assert_eq!(FlowSim::new(&m).run(&[]), EpochResult::default());
+    }
+
+    #[test]
+    fn singleton_closed_form_matches_brute_force() {
+        let m = Mesh::new(16);
+        for (count, start, stride) in [(1, 0, 1), (7, 2, 3), (500, 0, 1), (1000, 4, 5)] {
+            let flows = [flow(0, 10, count, start, stride)];
+            let got = FlowSim::new(&m).run(&flows);
+            let want = brute(&m).run(&flows);
+            assert_eq!(got, want, "count={count} start={start} stride={stride}");
+        }
+    }
+
+    #[test]
+    fn disjoint_flows_use_closed_forms() {
+        // row 0 and row 3 of a 4x4 snake mesh never share links
+        let m = Mesh::new(16);
+        let flows = [flow(0, 3, 4000, 0, 2), flow(12, 15, 4000, 1, 2)];
+        let got = FlowSim::new(&m).run(&flows);
+        let want = brute(&m).run(&flows);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn contended_component_matches_brute_force() {
+        let m = Mesh::new(16);
+        let cases: Vec<Vec<Flow>> = vec![
+            vec![flow(0, 10, 5000, 0, 3), flow(3, 10, 5000, 1, 3), flow(12, 5, 5000, 2, 3)],
+            vec![flow(0, 2, 4000, 0, 2), flow(1, 2, 4000, 1, 2)],
+            (0..8).map(|i| flow(i, 15, 1500, i as u64, 9)).collect(),
+        ];
+        for (ci, flows) in cases.iter().enumerate() {
+            let got = FlowSim::new(&m).run(flows);
+            let want = brute(&m).run(flows);
+            assert_eq!(got, want, "case {ci}");
+        }
+    }
+
+    #[test]
+    fn unequal_counts_match_brute_force() {
+        // flows exhaust at different rounds: the certificate must re-arm
+        // at every exhaustion boundary and still be exact
+        let m = Mesh::new(16);
+        let flows = [
+            flow(0, 10, 900, 0, 4),
+            flow(3, 10, 350, 1, 4),
+            flow(12, 10, 120, 2, 4),
+            flow(5, 6, 40, 3, 4),
+        ];
+        let got = FlowSim::new(&m).run(&flows);
+        let want = brute(&m).run(&flows);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn single_flow_closed_form_handles_irregular_parameters() {
+        // the closed form is exact for any (start, stride), including
+        // starts past the first round — no uniformity requirement
+        let m = Mesh::new(16);
+        for (count, start, stride) in [(40, 9, 2), (1, 17, 1), (300, 5, 1), (60, 3, 6)] {
+            let flows = [flow(2, 13, count, start, stride)];
+            let got = FlowSim::new(&m).run(&flows);
+            let want = brute(&m).run(&flows);
+            assert_eq!(got, want, "count={count} start={start} stride={stride}");
+        }
+    }
+
+    #[test]
+    fn irregular_trace_delegates_to_packet_sim() {
+        // mixed strides: not an Algorithm-2 shape
+        let m = Mesh::new(16);
+        let flows = [flow(0, 10, 50, 0, 2), flow(3, 10, 70, 5, 3)];
+        let got = FlowSim::new(&m).run(&flows);
+        let want = PacketSim::new(&m).run(&flows);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn arena_reuse_is_stateless_across_epochs() {
+        // the same engine must give identical answers before and after
+        // simulating unrelated epochs (busy-until state fully reset)
+        let m = Mesh::new(16);
+        let a = [flow(0, 10, 300, 0, 2), flow(3, 10, 300, 1, 2)];
+        let b = [flow(5, 6, 80, 0, 1)];
+        let mut sim = FlowSim::new(&m);
+        let first = sim.run(&a);
+        sim.run(&b);
+        sim.run(&a);
+        let again = sim.run(&a);
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn multi_flit_packets_match_brute_force() {
+        let m = Mesh::new(9);
+        let mut fast = FlowSim::new(&m);
+        fast.flits_per_packet = 4;
+        let mut slow = brute(&m);
+        slow.flits_per_packet = 4;
+        // stride < flits_per_packet: self-saturating singleton
+        let flows = [flow(0, 8, 200, 0, 2)];
+        assert_eq!(fast.run(&flows), slow.run(&flows));
+        // and a contended pair
+        let flows = [flow(0, 2, 200, 0, 2), flow(1, 2, 200, 1, 2)];
+        assert_eq!(fast.run(&flows), slow.run(&flows));
+    }
+
+    #[test]
+    fn tier2_toggle_forces_full_simulation() {
+        // extrapolate=false disables the tier-2 heuristic (the escape
+        // hatch for bisecting a suspected divergence); on a saturated
+        // same-source component both modes must still equal brute force
+        let m = Mesh::new(16);
+        let flows: Vec<Flow> = (1..6).map(|t| flow(0, t, 300, 0, 2)).collect();
+        let want = brute(&m).run(&flows);
+        assert_eq!(FlowSim::new(&m).run(&flows), want);
+        let mut exact = FlowSim::new(&m);
+        exact.extrapolate = false;
+        assert_eq!(exact.run(&flows), want);
+    }
+
+    #[test]
+    fn cached_runs_replay_and_count() {
+        let m = Mesh::new(16);
+        let cache = EpochCache::new();
+        let flows = vec![flow(0, 10, 50, 0, 2), flow(3, 10, 50, 1, 2)];
+        let mut sim = FlowSim::new(&m);
+        let a = sim.run_cached(&flows, &cache);
+        let b = sim.run_cached(&flows, &cache);
+        assert_eq!(a, b);
+        assert_eq!(a, FlowSim::new(&m).run(&flows));
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn flow_and_packet_cache_entries_never_alias() {
+        // same trace, same mesh — but the engines key separately, so a
+        // FlowSim result can never be replayed as a PacketSim result
+        let m = Mesh::new(16);
+        let cache = EpochCache::new();
+        let flows = vec![flow(0, 10, 50, 0, 2)];
+        FlowSim::new(&m).run_cached(&flows, &cache);
+        PacketSim::new(&m).run_cached(&flows, &cache);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 0);
+    }
+}

@@ -1,13 +1,21 @@
-//! Intra-chiplet NoC engine (Section 4.3.2): a customized cycle-accurate
-//! network simulator in the spirit of BookSim, driven by Algorithm-2
-//! traces, plus router/link power-area models and an analytical
-//! H-tree/P2P alternative.
+//! Intra-chiplet NoC engine (Section 4.3.2): a customized network
+//! simulator in the spirit of BookSim, driven by Algorithm-2 traces,
+//! plus router/link power-area models and an analytical H-tree/P2P
+//! alternative.
+//!
+//! Mesh epochs run through a three-tier engine hierarchy (see
+//! `ARCHITECTURE.md`): the flow-level [`FlowSim`] serves production
+//! sweeps, falling back internally to the per-packet [`PacketSim`] for
+//! irregular traces, with the cycle-accurate [`FlitSim`] as the golden
+//! reference on small traces.
 
+pub mod flow;
 pub mod htree;
 pub mod mesh;
 pub mod power;
 pub mod sim;
 
+pub use flow::FlowSim;
 pub use mesh::Mesh;
 pub use sim::{EpochCache, EpochResult, FlitSim, PacketSim};
 
@@ -63,13 +71,16 @@ pub fn evaluate_cached(
 
     let tile_pitch_mm = 0.7; // ~sqrt of the 0.5 mm² calibrated tile
     let htree = htree::HTreeModel::new(tiles.max(2), cfg.chiplet.noc_width, tile_pitch_mm, &tech);
-    let psim = PacketSim::new(&mesh);
+    // flow-level engine (top tier): its arena — busy-until vector,
+    // memoized X–Y routes, certificate buffers — is reused across every
+    // epoch of this evaluation
+    let mut fsim = FlowSim::new(&mesh);
 
     for ep in &traffic.noc_epochs {
         let r = match cfg.chiplet.noc_topology {
             NocTopology::Mesh => match cache {
-                Some(c) => psim.run_cached(&ep.flows, c),
-                None => psim.run(&ep.flows),
+                Some(c) => fsim.run_cached(&ep.flows, c),
+                None => fsim.run(&ep.flows),
             },
             NocTopology::Tree | NocTopology::HTree => htree.run(&ep.flows),
         };

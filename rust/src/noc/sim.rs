@@ -1,29 +1,34 @@
-//! Trace-driven wormhole network simulation over a mesh.
+//! Trace-driven wormhole network simulation over a mesh — the packet-
+//! and flit-level tiers of the engine hierarchy (the flow-level tier
+//! lives in [`super::flow`]):
 //!
-//! Two engines, cross-validated in tests:
-//!
-//! * [`PacketSim`] — the production engine: per-link busy-until list
-//!   scheduling of single-flit packets in global injection order. For
-//!   credit-less single-flit wormhole with X–Y routing this reproduces
-//!   the flit-level schedule exactly in the common case and within a few
-//!   percent under heavy contention, at orders-of-magnitude lower cost.
+//! * [`PacketSim`] — per-link busy-until list scheduling of single-flit
+//!   packets in global injection order. For credit-less single-flit
+//!   wormhole with X–Y routing this reproduces the flit-level schedule
+//!   exactly in the common case and within a few percent under heavy
+//!   contention, at orders-of-magnitude lower cost. Serves as the
+//!   fallback scheduler for traces the flow-level engine cannot handle
+//!   in closed form.
 //! * [`FlitSim`] — a faithful cycle-by-cycle router model (5-port,
 //!   input-buffered, credit flow control, round-robin arbitration) used
 //!   as the golden reference on small traces.
 //!
 //! For design-space sweeps, [`EpochCache`] memoizes epoch results keyed
-//! by `(mesh dims, simulator parameters, flow trace)`: neighbouring
-//! sweep points share most of their Algorithm-2 traces (the NoC traffic
-//! of a layer does not depend on the chiplet count, and the NoP traffic
-//! repeats whenever the chiplet allocation coincides), so identical
-//! epochs are simulated once and replayed from the cache thereafter.
+//! by a 128-bit fingerprint of `(engine, mesh dims, simulator
+//! parameters, flow trace)`: neighbouring sweep points share most of
+//! their Algorithm-2 traces (the NoC traffic of a layer does not depend
+//! on the chiplet count, and the NoP traffic repeats whenever the
+//! chiplet allocation coincides), so identical epochs are simulated
+//! once and replayed from the cache thereafter. The cache is
+//! lock-striped: keys spread over [`SHARD_COUNT`] independently locked
+//! shards, so sweep workers rarely contend on the same mutex.
 
 use super::mesh::Mesh;
 use crate::mapping::Flow;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Result of simulating one epoch (one Algorithm-2 trace).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -58,36 +63,173 @@ impl EpochResult {
     }
 }
 
-/// Cache key: the complete input of one [`PacketSim::run`] call. The
-/// snake-order coordinate embedding is a pure function of the mesh
-/// dimensions and node count, so `(width, height, nodes)` plus the
-/// simulator parameters and the flow trace pin the result exactly.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-struct EpochKey {
-    width: u16,
-    height: u16,
-    nodes: u32,
-    router_delay: u64,
-    flits_per_packet: u64,
-    extrapolate: bool,
-    flows: Box<[Flow]>,
+/// Shared-stride (Algorithm-2) trace test: `Some(stride)` when every
+/// flow has the same stride, starts inside the first round, and a
+/// positive count. This is the uniform-trace contract both
+/// list-scheduling engines key their fast paths on — one definition,
+/// used by `PacketSim` and `FlowSim`, so the engines' bit-exactness
+/// guarantee cannot drift through divergent copies.
+pub(crate) fn uniform_stride(flows: &[Flow]) -> Option<u64> {
+    let stride = flows.first()?.stride;
+    flows
+        .iter()
+        .all(|f| f.stride == stride && f.start < stride && f.count > 0)
+        .then_some(stride)
 }
 
-/// Soft bound on retained epochs; past it, new results are returned but
-/// not stored (protects pathological sweeps from unbounded growth).
-const EPOCH_CACHE_CAP: usize = 1 << 16;
+/// Warm-up rounds before the linear-growth extrapolation may arm
+/// (§Perf): sized to exceed any delayed-onset contention window (a
+/// growing queue overtaking a slower timing path, bounded by ~mesh
+/// diameter × per-hop delay rounds). Shared by both engines.
+pub(crate) fn warmup_rounds(mesh: &Mesh) -> u64 {
+    16 + 2 * (mesh.width + mesh.height) as u64
+}
+
+/// Closed-form tail of a linear-growth steady state, shared by both
+/// engines' extrapolations: aggregate stats for `remaining` further
+/// rounds of `per_round_pkts` packets / `per_round_hops` flit-hops
+/// whose completion advances by a constant `completion_delta` and whose
+/// per-round latency starts at `round_lat` and grows by `lat_growth`
+/// each round (arithmetic series). One definition so the series math
+/// cannot drift between the engines.
+pub(crate) struct SteadyTail {
+    pub packets: u64,
+    pub flit_hops: u64,
+    pub latency: u64,
+    pub completion: u64,
+}
+
+pub(crate) fn steady_tail(
+    remaining: u64,
+    per_round_pkts: u64,
+    per_round_hops: u64,
+    round_lat: u64,
+    lat_growth: u64,
+    completion_delta: u64,
+) -> SteadyTail {
+    SteadyTail {
+        packets: per_round_pkts * remaining,
+        flit_hops: per_round_hops * remaining,
+        latency: remaining * round_lat + lat_growth * remaining * (remaining + 1) / 2,
+        completion: completion_delta * remaining,
+    }
+}
+
+/// Engine discriminant folded into [`EpochKey`] fingerprints: the
+/// per-packet scheduler. Distinct engines never share cache entries.
+pub(crate) const ENGINE_PACKET: u8 = 0;
+/// Engine discriminant for the flow-level engine ([`super::FlowSim`]).
+pub(crate) const ENGINE_FLOW: u8 = 1;
+
+/// splitmix64 finalizer: full-avalanche 64-bit mixer.
+#[inline]
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// Cache key: a 128-bit fingerprint over the complete input of one
+/// epoch simulation — engine discriminant, mesh dimensions and node
+/// count (the snake-order coordinate embedding is a pure function of
+/// those), simulator parameters, and every field of every flow in trace
+/// order.
+///
+/// Fingerprinting replaces the seed design's `Box<[Flow]>` key: lookups
+/// hash 16 bytes instead of re-hashing the whole trace, misses no
+/// longer clone the trace into the table, and collision-checking an
+/// entry compares two words. The cost is a theoretical collision — two
+/// lanes of independently seeded splitmix64 mixing put the probability
+/// for a sweep retaining `N` epochs at ~`N²/2^129`, far below any other
+/// source of error in the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct EpochKey {
+    lo: u64,
+    hi: u64,
+}
+
+impl EpochKey {
+    /// Fingerprint one epoch-simulation input.
+    pub(crate) fn fingerprint(
+        engine: u8,
+        mesh: &Mesh,
+        router_delay: u64,
+        flits_per_packet: u64,
+        extrapolate: bool,
+        flows: &[Flow],
+    ) -> EpochKey {
+        let mut lo = 0x9E37_79B9_7F4A_7C15u64;
+        let mut hi = 0xC2B2_AE3D_27D4_EB4Fu64;
+        let mut feed = |v: u64| {
+            lo = mix(lo ^ v);
+            hi = mix(hi.rotate_left(23) ^ v.wrapping_mul(0xFF51_AFD7_ED55_8CCD));
+        };
+        feed(engine as u64);
+        feed(mesh.width as u64);
+        feed(mesh.height as u64);
+        feed(mesh.nodes() as u64);
+        feed(router_delay);
+        feed(flits_per_packet);
+        feed(extrapolate as u64);
+        feed(flows.len() as u64);
+        for f in flows {
+            feed(((f.src as u64) << 32) | f.dst as u64);
+            feed(f.count);
+            feed(f.start);
+            feed(f.stride);
+        }
+        EpochKey { lo, hi }
+    }
+}
+
+/// Lock shards in [`EpochCache`]. A power of two so shard selection is
+/// a mask on the fingerprint's low bits.
+pub const SHARD_COUNT: usize = 16;
+
+/// Soft bound on retained epochs per shard; past it, new results are
+/// returned but not stored (protects pathological sweeps from unbounded
+/// growth).
+const SHARD_CAP: usize = (1 << 16) / SHARD_COUNT;
+
+/// Poison-tolerant lock: a sweep worker that panics while holding a
+/// shard must not wedge every other worker — the map holds plain data
+/// whose invariants a mid-operation panic cannot break, so the poison
+/// flag is safely ignored.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One lock stripe of the cache, with its own hit/miss counters.
+#[derive(Debug, Default)]
+struct Shard {
+    map: Mutex<HashMap<EpochKey, EpochResult>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
 
 /// Thread-safe memo table for epoch results, shared across the points of
 /// a design-space sweep (see the crate's `ARCHITECTURE.md`).
 ///
-/// Identical `(mesh dims, simulator parameters, flow trace)` inputs hit
-/// the cache and skip re-simulation; distinct inputs never alias, so a
-/// cached sweep is numerically identical to an uncached one.
-#[derive(Debug, Default)]
+/// Identical `(engine, mesh dims, simulator parameters, flow trace)`
+/// inputs hit the cache and skip re-simulation; distinct inputs never
+/// alias (up to the documented 128-bit fingerprint collision bound), so
+/// a cached sweep is numerically identical to an uncached one. Keys
+/// spread over [`SHARD_COUNT`] independently locked shards, so parallel
+/// sweep workers contend only when they race for the same stripe.
+#[derive(Debug)]
 pub struct EpochCache {
-    map: Mutex<HashMap<EpochKey, EpochResult>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    shards: [Shard; SHARD_COUNT],
+}
+
+impl Default for EpochCache {
+    fn default() -> EpochCache {
+        EpochCache {
+            shards: std::array::from_fn(|_| Shard::default()),
+        }
+    }
 }
 
 impl EpochCache {
@@ -96,24 +238,81 @@ impl EpochCache {
         EpochCache::default()
     }
 
-    /// Lookups answered from the cache so far.
+    /// Lookups answered from the cache so far (sum over shards).
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.shards.iter().map(|s| s.hits.load(Ordering::Relaxed)).sum()
     }
 
-    /// Lookups that had to simulate.
+    /// Lookups that had to simulate (sum over shards).
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.shards.iter().map(|s| s.misses.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-shard `(hits, misses)` counters, in shard order — exposes
+    /// striping balance to benchmarks and diagnostics.
+    pub fn shard_stats(&self) -> Vec<(u64, u64)> {
+        self.shards
+            .iter()
+            .map(|s| {
+                (
+                    s.hits.load(Ordering::Relaxed),
+                    s.misses.load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+
+    /// Fraction of lookups answered from the cache (0 when never used).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits(), self.misses());
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
     }
 
     /// Number of distinct epochs currently retained.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.shards.iter().map(|s| lock(&s.map).len()).sum()
     }
 
     /// True when no epoch has been stored yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Replay `key` from its shard, or compute, store and return it. No
+    /// lock is held while `compute` runs, so a slow simulation never
+    /// blocks other workers' lookups (at worst two racing workers both
+    /// simulate the same epoch — identical results, last insert wins).
+    pub(crate) fn get_or_compute(
+        &self,
+        key: EpochKey,
+        compute: impl FnOnce() -> EpochResult,
+    ) -> EpochResult {
+        let shard = &self.shards[key.lo as usize & (SHARD_COUNT - 1)];
+        if let Some(r) = lock(&shard.map).get(&key) {
+            shard.hits.fetch_add(1, Ordering::Relaxed);
+            return *r;
+        }
+        shard.misses.fetch_add(1, Ordering::Relaxed);
+        let r = compute();
+        let mut map = lock(&shard.map);
+        if map.len() < SHARD_CAP {
+            map.insert(key, r);
+        }
+        r
+    }
+
+    /// Poison one shard's mutex (a worker panics mid-lock), for the
+    /// poison-tolerance regression test.
+    #[cfg(test)]
+    fn poison_one_shard(&self) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = self.shards[0].map.lock().unwrap();
+            panic!("poisoning shard 0");
+        }));
     }
 }
 
@@ -177,20 +376,18 @@ impl<'m> PacketSim<'m> {
         // §Perf fast path: Algorithm-2 epochs have one shared stride and
         // all starts < stride, so injection rounds never interleave —
         // iterate rounds in order with no priority queue at all.
-        let stride = flows[0].stride;
-        let uniform = flows
-            .iter()
-            .all(|f| f.stride == stride && f.start < stride && f.count > 0);
-        if uniform {
+        if let Some(stride) = uniform_stride(flows) {
             let mut order: Vec<u32> = (0..flows.len() as u32).collect();
-            order.sort_unstable_by_key(|&i| flows[i as usize].start);
+            // (start, index): deterministic total order so tied starts
+            // schedule identically here and in the flow-level engine
+            order.sort_unstable_by_key(|&i| (flows[i as usize].start, i));
             let max_count = flows.iter().map(|f| f.count).max().unwrap();
             let equal_counts = flows.iter().all(|f| f.count == max_count);
             // steady-state detection (§Perf): once two consecutive rounds
             // produce identical completion/latency deltas, the max-plus
             // schedule has become periodic with period 1 and the remaining
             // rounds extrapolate exactly.
-            let warmup = 16 + 2 * (self.mesh.width + self.mesh.height) as u64;
+            let warmup = warmup_rounds(self.mesh);
             let mut prev = (0u64, 0u64); // (completion, latency) after round
             let mut prev_delta = (u64::MAX, u64::MAX);
             let mut round = 0u64;
@@ -210,7 +407,8 @@ impl<'m> PacketSim<'m> {
                     res.completion_cycles - prev.0,
                     round_lat.wrapping_sub(prev.1),
                 );
-                if self.extrapolate && equal_counts && round > warmup && delta == prev_delta && round_lat >= prev.1 {
+                let steady = delta == prev_delta && round_lat >= prev.1;
+                if self.extrapolate && equal_counts && round > warmup && steady {
                     let remaining = max_count - round - 1;
                     if remaining > 0 {
                         // per-round packet stats are constant in steady state
@@ -220,13 +418,19 @@ impl<'m> PacketSim<'m> {
                             .map(|&fi| routes[fi as usize].len() as u64)
                             .sum::<u64>()
                             * self.flits_per_packet;
-                        res.packets += per_round_pkts * remaining;
-                        res.flit_hops += per_round_hops * remaining;
-                        res.completion_cycles += delta.0 * remaining;
                         // latency per round grows by a constant increment
-                        let lat_growth = round_lat - prev.1; // == delta.1
-                        res.total_latency_cycles += remaining * round_lat
-                            + lat_growth * remaining * (remaining + 1) / 2;
+                        let tail = steady_tail(
+                            remaining,
+                            per_round_pkts,
+                            per_round_hops,
+                            round_lat,
+                            round_lat - prev.1, // == delta.1
+                            delta.0,
+                        );
+                        res.packets += tail.packets;
+                        res.flit_hops += tail.flit_hops;
+                        res.completion_cycles += tail.completion;
+                        res.total_latency_cycles += tail.latency;
                         return res;
                     }
                 }
@@ -259,26 +463,15 @@ impl<'m> PacketSim<'m> {
     /// trace) are simulated once and replayed thereafter. Results are
     /// bit-identical to the uncached path.
     pub fn run_cached(&self, flows: &[Flow], cache: &EpochCache) -> EpochResult {
-        let key = EpochKey {
-            width: self.mesh.width as u16,
-            height: self.mesh.height as u16,
-            nodes: self.mesh.nodes() as u32,
-            router_delay: self.router_delay,
-            flits_per_packet: self.flits_per_packet,
-            extrapolate: self.extrapolate,
-            flows: flows.into(),
-        };
-        if let Some(r) = cache.map.lock().unwrap().get(&key) {
-            cache.hits.fetch_add(1, Ordering::Relaxed);
-            return *r;
-        }
-        cache.misses.fetch_add(1, Ordering::Relaxed);
-        let r = self.run(flows);
-        let mut map = cache.map.lock().unwrap();
-        if map.len() < EPOCH_CACHE_CAP {
-            map.insert(key, r);
-        }
-        r
+        let key = EpochKey::fingerprint(
+            ENGINE_PACKET,
+            self.mesh,
+            self.router_delay,
+            self.flits_per_packet,
+            self.extrapolate,
+            flows,
+        );
+        cache.get_or_compute(key, || self.run(flows))
     }
 
     /// Schedule one packet along its route (wormhole list scheduling).
@@ -586,5 +779,66 @@ mod tests {
         let other = vec![flow(0, 5, 11, 0, 1)];
         PacketSim::new(&m1).run_cached(&other, &cache);
         assert_eq!(cache.misses(), 3, "different traces must not alias");
+    }
+
+    #[test]
+    fn cache_survives_a_poisoned_shard() {
+        // a panicking sweep worker must not wedge every other thread:
+        // lookups, inserts and counters keep working after a poison
+        let m = Mesh::new(16);
+        let sim = PacketSim::new(&m);
+        let cache = EpochCache::new();
+        let flows = vec![flow(0, 10, 50, 0, 2)];
+        let a = sim.run_cached(&flows, &cache);
+        cache.poison_one_shard();
+        let b = sim.run_cached(&flows, &cache);
+        assert_eq!(a, b);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn shard_counters_sum_to_totals() {
+        let m = Mesh::new(16);
+        let sim = PacketSim::new(&m);
+        let cache = EpochCache::new();
+        for c in 1..40u64 {
+            let flows = vec![flow(0, 10, c, 0, 2)];
+            sim.run_cached(&flows, &cache); // miss
+            sim.run_cached(&flows, &cache); // hit
+        }
+        let stats = cache.shard_stats();
+        assert_eq!(stats.len(), SHARD_COUNT);
+        assert_eq!(stats.iter().map(|s| s.0).sum::<u64>(), cache.hits());
+        assert_eq!(stats.iter().map(|s| s.1).sum::<u64>(), cache.misses());
+        assert_eq!(cache.hits(), 39);
+        assert_eq!(cache.misses(), 39);
+        // 39 distinct fingerprints should not all land in one stripe
+        assert!(
+            stats.iter().filter(|s| s.1 > 0).count() > 1,
+            "fingerprints failed to spread across shards: {stats:?}"
+        );
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_every_field() {
+        let m = Mesh::new(16);
+        let base = EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 1, true, &[flow(0, 1, 5, 0, 2)]);
+        let variants = [
+            EpochKey::fingerprint(ENGINE_FLOW, &m, 2, 1, true, &[flow(0, 1, 5, 0, 2)]),
+            EpochKey::fingerprint(ENGINE_PACKET, &m, 3, 1, true, &[flow(0, 1, 5, 0, 2)]),
+            EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 2, true, &[flow(0, 1, 5, 0, 2)]),
+            EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 1, false, &[flow(0, 1, 5, 0, 2)]),
+            EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 1, true, &[flow(1, 0, 5, 0, 2)]),
+            EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 1, true, &[flow(0, 1, 6, 0, 2)]),
+            EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 1, true, &[flow(0, 1, 5, 1, 2)]),
+            EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 1, true, &[flow(0, 1, 5, 0, 3)]),
+            EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 1, true, &[]),
+        ];
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(base, *v, "variant {i} collided with base");
+        }
     }
 }

@@ -1,7 +1,8 @@
 //! NoP engine (Section 4.4): chiplet-to-chiplet communication over the
 //! passive interposer — trace generation reuses Algorithm 2 (done by the
-//! mapping engine), latency comes from the same cycle-accurate mesh
-//! simulator as the NoC (customized BookSim analogue), and area/power
+//! mapping engine), latency comes from the same three-tier mesh engine
+//! hierarchy as the NoC (flow-level [`FlowSim`] over the interposer
+//! mesh, per-packet and flit-level tiers beneath it), and area/power
 //! come from the PTM wire model + measured TX/RX driver figures
 //! (Algorithm 3).
 
@@ -14,7 +15,7 @@ pub use wire::WireModel;
 use crate::config::SiamConfig;
 use crate::mapping::{Placement, Traffic};
 use crate::metrics::Metrics;
-use crate::noc::{EpochCache, Mesh, PacketSim};
+use crate::noc::{EpochCache, FlowSim, Mesh};
 
 /// Aggregated NoP evaluation.
 #[derive(Debug, Clone, Default)]
@@ -57,7 +58,9 @@ pub fn evaluate_cached(
     let wire = WireModel::new(&cfg.system.nop);
     let drv = DriverModel::new(&cfg.system.nop);
     let mesh = Mesh::from_placement(placement);
-    let psim = PacketSim::new(&mesh);
+    // flow-level engine (top tier of the NoC/NoP hierarchy); one arena
+    // reused across all interposer epochs of this evaluation
+    let mut fsim = FlowSim::new(&mesh);
 
     // Layer-parallel / cross-layer-serial composition as for the NoC —
     // but the interposer is one shared network, so all epochs of one
@@ -67,8 +70,8 @@ pub fn evaluate_cached(
     let mut flit_hops = 0u64;
     for ep in &traffic.nop_epochs {
         let r = match cache {
-            Some(c) => psim.run_cached(&ep.flows, c),
-            None => psim.run(&ep.flows),
+            Some(c) => fsim.run_cached(&ep.flows, c),
+            None => fsim.run(&ep.flows),
         };
         *per_layer.entry(ep.layer).or_default() += r.completion_cycles;
         packets += r.packets;

@@ -5,7 +5,7 @@
 use siam::config::SiamConfig;
 use siam::dnn::build_model;
 use siam::mapping::{build_traffic, map_dnn, Flow, Placement};
-use siam::noc::{FlitSim, Mesh, PacketSim};
+use siam::noc::{FlitSim, FlowSim, Mesh, PacketSim};
 use siam::util::{check_property, Rng};
 
 const MODELS: &[(&str, &str)] = &[
@@ -182,6 +182,116 @@ fn packet_sim_tracks_flit_sim_on_random_small_traces() {
         assert!(
             rel < 0.5,
             "packet {} vs flit {} (rel {rel:.2})",
+            p.completion_cycles,
+            f.completion_cycles
+        );
+    });
+}
+
+/// Random Algorithm-2-shaped epoch: one shared stride, all starts inside
+/// the first round, positive counts — the uniform-trace contract of the
+/// flow-level engine.
+fn random_uniform_trace(rng: &mut Rng, nodes: usize, max_flows: u64, max_count: u64) -> Vec<Flow> {
+    let stride = rng.range(1, 8);
+    let mut flows = Vec::new();
+    for _ in 0..rng.range(1, max_flows) {
+        let src = rng.below(nodes as u64) as u32;
+        let dst = rng.below(nodes as u64) as u32;
+        if src == dst {
+            continue;
+        }
+        flows.push(Flow {
+            src,
+            dst,
+            count: rng.range(1, max_count),
+            start: rng.below(stride),
+            stride,
+        });
+    }
+    flows
+}
+
+#[test]
+fn flow_sim_is_exactly_packet_sim_on_uniform_traces() {
+    // Tentpole regression: on Algorithm-2 (uniform) epochs the flow-level
+    // engine must reproduce the brute-force per-packet schedule
+    // bit-for-bit — closed forms, certificates and fallbacks included.
+    check_property("flow_vs_packet_exact", 60, 0xF10775, |rng| {
+        let nodes = rng.range(4, 16) as usize;
+        let mesh = Mesh::new(nodes);
+        let flows = random_uniform_trace(rng, nodes, 64, 150);
+        let got = FlowSim::new(&mesh).run(&flows);
+        let mut brute = PacketSim::new(&mesh);
+        brute.extrapolate = false;
+        let want = brute.run(&flows);
+        assert_eq!(got, want, "flow-level diverged on {} flows", flows.len());
+    });
+}
+
+#[test]
+fn flow_sim_arena_reuse_is_exact_across_epochs() {
+    // one engine instance over many epochs (the sweep usage pattern)
+    // must match fresh per-epoch engines exactly
+    check_property("flow_arena_reuse", 10, 0xA3E4A, |rng| {
+        let nodes = rng.range(4, 16) as usize;
+        let mesh = Mesh::new(nodes);
+        let mut shared = FlowSim::new(&mesh);
+        for _ in 0..8 {
+            let flows = random_uniform_trace(rng, nodes, 32, 80);
+            let warm = shared.run(&flows);
+            let cold = FlowSim::new(&mesh).run(&flows);
+            assert_eq!(warm, cold, "arena state leaked between epochs");
+        }
+    });
+}
+
+#[test]
+fn flow_sim_matches_packet_sim_on_irregular_traces() {
+    // mixed strides / late starts: the engine must delegate wholesale to
+    // the per-packet scheduler and therefore agree with it exactly
+    check_property("flow_vs_packet_irregular", 20, 0x1DE9A1, |rng| {
+        let nodes = rng.range(4, 16) as usize;
+        let mesh = Mesh::new(nodes);
+        let mut flows = Vec::new();
+        for _ in 0..rng.range(1, 16) {
+            let src = rng.below(nodes as u64) as u32;
+            let dst = rng.below(nodes as u64) as u32;
+            if src == dst {
+                continue;
+            }
+            flows.push(Flow {
+                src,
+                dst,
+                count: rng.range(1, 60),
+                start: rng.below(16),
+                stride: rng.range(1, 6),
+            });
+        }
+        let got = FlowSim::new(&mesh).run(&flows);
+        let want = PacketSim::new(&mesh).run(&flows);
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn flow_sim_tracks_flit_sim_on_random_small_traces() {
+    // under contention the list-scheduling tiers approximate the golden
+    // flit-level model within the documented tolerance
+    check_property("flow_vs_flit", 12, 0xF117, |rng| {
+        let nodes = 9 + rng.below(8) as usize;
+        let mesh = Mesh::new(nodes);
+        let flows = random_uniform_trace(rng, nodes, 6, 40);
+        if flows.is_empty() {
+            return;
+        }
+        let p = FlowSim::new(&mesh).run(&flows);
+        let f = FlitSim::new(&mesh, 16).run(&flows);
+        assert_eq!(p.packets, f.packets, "packet conservation differs");
+        let rel = (p.completion_cycles as f64 - f.completion_cycles as f64).abs()
+            / f.completion_cycles.max(1) as f64;
+        assert!(
+            rel < 0.5,
+            "flow {} vs flit {} (rel {rel:.2})",
             p.completion_cycles,
             f.completion_cycles
         );
