@@ -1,0 +1,183 @@
+//! Serving saturation bench: stream Poisson traffic through the
+//! layer-pipelined chiplet system at rising offered load and record the
+//! throughput plateau, tail latencies and closed-loop scaling.
+//!
+//! Three sections, each gated on a calibration invariant before any
+//! number is written:
+//!
+//! * **Closed loop, concurrency 1** — delivered throughput must equal
+//!   the single-inference latency reciprocal within 1 % (the pipeline
+//!   degenerates to sequential inference).
+//! * **Open-loop saturation sweep** — offered load from 0.25× to 2× of
+//!   the analytic bottleneck-stage rate; delivered throughput must
+//!   plateau at that rate (asserted within 5 % at 2× overload).
+//! * **Closed-loop concurrency ladder** — throughput approaching the
+//!   same ceiling from below as the pipeline fills.
+//!
+//! Every number is written to `BENCH_serve.json` at the repository root
+//! (schema `siam-bench-serve/v1`; see README, "Reading
+//! BENCH_serve.json"). Pass `--quick` for the CI smoke variant.
+
+use siam::config::SiamConfig;
+use siam::coordinator::{simulate, SweepContext};
+use siam::serve;
+use siam::util::json::Json;
+use siam::util::table::Table;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let requests: usize = if quick { 400 } else { 4000 };
+    let base = SiamConfig::paper_default().with_serve_requests(requests);
+    // one shared context: every serving run below replays the same
+    // cached stage outputs instead of re-simulating the design point
+    let ctx = SweepContext::new(&base)?;
+    let mut bench = Json::obj();
+    bench
+        .set("schema", "siam-bench-serve/v1")
+        .set("quick", quick)
+        .set("model", base.dnn.model.as_str())
+        .set("dataset", base.dnn.dataset.as_str())
+        .set("requests", requests);
+
+    // ---- closed loop, concurrency 1: the calibration gate ------------
+    println!("== Closed loop, concurrency 1: serving vs single-shot ==\n");
+    let single = simulate(&base)?;
+    let t0 = Instant::now();
+    let c1 = serve::evaluate(&base.clone().with_serve_closed(1), &ctx)?;
+    let c1_wall = t0.elapsed().as_secs_f64();
+    let want_qps = 1.0e9 / single.total.latency_ns;
+    let rel_err = (c1.throughput_qps - want_qps).abs() / want_qps;
+    println!(
+        "single-shot latency {:.3} ms => {:.2} inf/s; closed-1 delivered {:.2} inf/s (rel err {:.2e})",
+        single.total.latency_ns / 1e6,
+        want_qps,
+        c1.throughput_qps,
+        rel_err
+    );
+    assert!(
+        rel_err < 0.01,
+        "closed-loop concurrency 1 diverged from single-shot reciprocal: {rel_err}"
+    );
+    let mut co = Json::obj();
+    co.set("concurrency_1_qps", c1.throughput_qps)
+        .set("single_shot_qps", want_qps)
+        .set("single_shot_ms", single.total.latency_ns / 1e6)
+        .set("rel_err", rel_err)
+        .set("sim_s", c1_wall);
+    bench.set("closed_loop_calibration", co);
+
+    println!(
+        "\npipeline: {} stages, bottleneck stage {} at {:.3} ms => ceiling {:.2} inf/s\n",
+        c1.num_stages,
+        c1.bottleneck_stage,
+        c1.bottleneck_service_ns / 1e6,
+        c1.bottleneck_qps
+    );
+    bench
+        .set("num_stages", c1.num_stages)
+        .set("bottleneck_stage", c1.bottleneck_stage)
+        .set("bottleneck_qps", c1.bottleneck_qps);
+
+    // ---- open-loop saturation sweep ----------------------------------
+    println!("== Open-loop saturation sweep (offered / bottleneck) ==\n");
+    let fractions: &[f64] = if quick {
+        &[0.5, 1.0, 2.0]
+    } else {
+        &[0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0]
+    };
+    let cap = c1.bottleneck_qps;
+    let mut t = Table::new(&[
+        "offered/cap",
+        "offered inf/s",
+        "delivered inf/s",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "shed %",
+        "mean util %",
+    ]);
+    let mut sat = Vec::new();
+    let mut last_delivered = 0.0;
+    for &f in fractions {
+        let rep = serve::evaluate(&base.clone().with_serve_open(f * cap), &ctx)?;
+        t.row(&[
+            format!("{f:.2}x"),
+            format!("{:.1}", rep.offered_qps),
+            format!("{:.1}", rep.throughput_qps),
+            format!("{:.3}", rep.p50_ms),
+            format!("{:.3}", rep.p95_ms),
+            format!("{:.3}", rep.p99_ms),
+            format!("{:.1}", 100.0 * rep.drop_rate()),
+            format!("{:.1}", 100.0 * rep.mean_utilization),
+        ]);
+        let mut o = Json::obj();
+        o.set("offered_fraction", f)
+            .set("offered_qps", rep.offered_qps)
+            .set("delivered_qps", rep.throughput_qps)
+            .set("p50_ms", rep.p50_ms)
+            .set("p95_ms", rep.p95_ms)
+            .set("p99_ms", rep.p99_ms)
+            .set("dropped", rep.dropped)
+            .set("drop_rate", rep.drop_rate())
+            .set("mean_utilization", rep.mean_utilization);
+        sat.push(o);
+        last_delivered = rep.throughput_qps;
+    }
+    t.print();
+    // plateau gate: at 2x overload the delivered throughput sits at the
+    // analytically computed bottleneck-stage service rate
+    let plateau_rel_err = (last_delivered - cap).abs() / cap;
+    assert!(
+        plateau_rel_err < 0.05,
+        "saturated throughput {last_delivered} diverged from bottleneck rate {cap}: {plateau_rel_err}"
+    );
+    println!(
+        "\nplateau verified: delivered at 2.0x = {last_delivered:.1} inf/s vs analytic ceiling {cap:.1} inf/s (rel err {plateau_rel_err:.2e})\n"
+    );
+    bench.set("saturation", sat);
+    let mut po = Json::obj();
+    po.set("delivered_qps", last_delivered)
+        .set("bottleneck_qps", cap)
+        .set("rel_err", plateau_rel_err);
+    bench.set("plateau", po);
+
+    // ---- closed-loop concurrency ladder ------------------------------
+    println!("== Closed-loop concurrency ladder ==\n");
+    let concs: &[usize] = if quick { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
+    let mut t = Table::new(&[
+        "concurrency",
+        "delivered inf/s",
+        "of ceiling %",
+        "p99 ms",
+        "mean util %",
+        "uJ/inf under load",
+    ]);
+    let mut ladder = Vec::new();
+    for &c in concs {
+        let rep = serve::evaluate(&base.clone().with_serve_closed(c), &ctx)?;
+        t.row(&[
+            c.to_string(),
+            format!("{:.1}", rep.throughput_qps),
+            format!("{:.1}", 100.0 * rep.throughput_qps / cap),
+            format!("{:.3}", rep.p99_ms),
+            format!("{:.1}", 100.0 * rep.mean_utilization),
+            format!("{:.2}", rep.energy_per_inference_pj / 1e6),
+        ]);
+        let mut o = Json::obj();
+        o.set("concurrency", c)
+            .set("delivered_qps", rep.throughput_qps)
+            .set("p99_ms", rep.p99_ms)
+            .set("mean_utilization", rep.mean_utilization)
+            .set("energy_per_inference_pj", rep.energy_per_inference_pj);
+        ladder.push(o);
+    }
+    t.print();
+    bench.set("concurrency_ladder", ladder);
+
+    // ---- machine-readable trajectory file ----------------------------
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(path, bench.to_string_pretty() + "\n")?;
+    println!("\nwrote {path}");
+    Ok(())
+}

@@ -102,6 +102,29 @@ impl SiamConfig {
         self.system.nop.gbps_per_lane *= factor;
         self
     }
+
+    /// Builder-style override: open-loop serving at `rate_qps`
+    /// inferences/s (0 = auto: 80 % of the bottleneck-stage rate).
+    pub fn with_serve_open(mut self, rate_qps: f64) -> Self {
+        self.serve.mode = ServeMode::Open;
+        self.serve.rate_qps = rate_qps;
+        self
+    }
+
+    /// Builder-style override: closed-loop serving with `concurrency`
+    /// outstanding requests.
+    pub fn with_serve_closed(mut self, concurrency: usize) -> Self {
+        self.serve.mode = ServeMode::Closed;
+        self.serve.concurrency = concurrency;
+        self
+    }
+
+    /// Builder-style override: number of requests the serving simulator
+    /// streams through the pipeline.
+    pub fn with_serve_requests(mut self, requests: usize) -> Self {
+        self.serve.requests = requests;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -116,6 +139,20 @@ mod tests {
         assert_eq!(back.chiplet.xbar_rows, cfg.chiplet.xbar_rows);
         assert_eq!(back.dnn.model, cfg.dnn.model);
         assert_eq!(back.system.nop.ebit_pj, cfg.system.nop.ebit_pj);
+        assert_eq!(back.serve.mode, cfg.serve.mode);
+        assert_eq!(back.serve.requests, cfg.serve.requests);
+    }
+
+    #[test]
+    fn serve_workload_mix_roundtrips() {
+        let mut cfg = SiamConfig::paper_default().with_serve_open(2000.0);
+        cfg.serve.workloads = vec!["resnet110".into(), "vgg19:cifar100".into()];
+        let text = cfg.to_toml_string().unwrap();
+        let back = SiamConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.serve.workloads, cfg.serve.workloads);
+        assert_eq!(back.serve.rate_qps, 2000.0);
+        // and the re-serialization is byte-identical (bit-exact round trip)
+        assert_eq!(back.to_toml_string().unwrap(), text);
     }
 
     #[test]

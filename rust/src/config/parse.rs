@@ -3,8 +3,10 @@
 //! The offline build environment vendors no TOML crate, so we parse the
 //! subset the `configs/` presets need: `[section]` / `[section.sub]`
 //! headers, `key = value` pairs with string / bool / integer / float /
-//! numeric-array values, and `#` comments. Unknown keys are an error —
-//! catching config typos is part of the validation story.
+//! numeric-array / string-array values, and `#` comments (full-line or
+//! trailing after a value; `#` inside a quoted string is literal).
+//! Unknown keys are an error reported with their line number — catching
+//! config typos is part of the validation story.
 
 use super::types::*;
 use std::collections::BTreeMap;
@@ -22,6 +24,8 @@ pub enum Value {
     Float(f64),
     /// Numeric array (`[0.1, 0.2]`).
     Array(Vec<f64>),
+    /// String array (`["a", "b"]`) — e.g. the `[serve]` workload mix.
+    StrArray(Vec<String>),
 }
 
 impl Value {
@@ -37,6 +41,25 @@ impl Value {
             return Ok(Value::Bool(false));
         }
         if let Some(inner) = raw.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            // string array when the first element is quoted (elements
+            // may not contain commas — model names never do)
+            if inner.trim_start().starts_with('"') {
+                let mut out = Vec::new();
+                for part in inner.split(',') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        continue;
+                    }
+                    let s = part
+                        .strip_prefix('"')
+                        .and_then(|r| r.strip_suffix('"'))
+                        .ok_or_else(|| {
+                            format!("line {line}: bad string-array element '{part}'")
+                        })?;
+                    out.push(s.to_string());
+                }
+                return Ok(Value::StrArray(out));
+            }
             let mut out = Vec::new();
             for part in inner.split(',') {
                 let part = part.trim();
@@ -75,18 +98,29 @@ impl Value {
     }
 }
 
-/// Parse `text` into flattened `section.key -> Value` pairs.
-pub fn parse_flat(text: &str) -> Result<BTreeMap<String, Value>, String> {
+/// Cut a line at the first `#` that sits outside a double-quoted
+/// string, so trailing comments after values are stripped while string
+/// values may contain literal `#` characters.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse `text` into flattened `section.key -> (Value, line number)`
+/// pairs; line numbers survive into unknown-key / bad-value errors.
+pub fn parse_flat(text: &str) -> Result<BTreeMap<String, (Value, usize)>, String> {
     let mut out = BTreeMap::new();
     let mut section = String::new();
     for (i, line) in text.lines().enumerate() {
         let n = i + 1;
-        let line = match line.find('#') {
-            // naive comment strip is fine: our strings never contain '#'
-            Some(pos) => &line[..pos],
-            None => line,
-        }
-        .trim();
+        let line = strip_comment(line).trim();
         if line.is_empty() {
             continue;
         }
@@ -102,15 +136,16 @@ pub fn parse_flat(text: &str) -> Result<BTreeMap<String, Value>, String> {
         } else {
             format!("{section}.{}", k.trim())
         };
-        out.insert(key, Value::parse(v, n)?);
+        out.insert(key, (Value::parse(v, n)?, n));
     }
     Ok(out)
 }
 
 macro_rules! take {
     ($map:expr, $key:expr, $slot:expr, $conv:expr) => {
-        if let Some(v) = $map.remove($key) {
-            $slot = $conv(&v).ok_or_else(|| format!("bad value for {}", $key))?;
+        if let Some((v, line)) = $map.remove($key) {
+            $slot = $conv(&v)
+                .ok_or_else(|| format!("line {}: bad value for {}", line, $key))?;
         }
     };
 }
@@ -172,6 +207,21 @@ fn dram_kind(v: &Value) -> Option<DramKind> {
     }
 }
 
+fn serve_mode(v: &Value) -> Option<ServeMode> {
+    match v {
+        Value::Str(s) if s == "open" => Some(ServeMode::Open),
+        Value::Str(s) if s == "closed" => Some(ServeMode::Closed),
+        _ => None,
+    }
+}
+
+fn u64v(v: &Value) -> Option<u64> {
+    match v {
+        Value::Int(i) if *i >= 0 => Some(*i as u64),
+        _ => None,
+    }
+}
+
 fn string(v: &Value) -> Option<String> {
     match v {
         Value::Str(s) => Some(s.clone()),
@@ -201,10 +251,10 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
         u8v
     );
     take!(m, "dnn.batch", cfg.dnn.batch, Value::as_usize);
-    if let Some(v) = m.remove("dnn.sparsity") {
+    if let Some((v, line)) = m.remove("dnn.sparsity") {
         match v {
             Value::Array(a) => cfg.dnn.sparsity = Some(a),
-            _ => return Err("dnn.sparsity must be an array".into()),
+            _ => return Err(format!("line {line}: dnn.sparsity must be an array")),
         }
     }
 
@@ -255,9 +305,10 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
 
     take!(m, "system.chip_mode", cfg.system.chip_mode, chip_mode);
     take!(m, "system.structure", cfg.system.structure, structure);
-    if let Some(v) = m.remove("system.total_chiplets") {
-        cfg.system.total_chiplets =
-            Some(v.as_usize().ok_or("bad value for system.total_chiplets")?);
+    if let Some((v, line)) = m.remove("system.total_chiplets") {
+        cfg.system.total_chiplets = Some(v.as_usize().ok_or(format!(
+            "line {line}: bad value for system.total_chiplets"
+        ))?);
     }
     take!(
         m,
@@ -349,8 +400,28 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
         Value::as_f64
     );
 
-    if let Some(k) = m.keys().next() {
-        return Err(format!("unknown config key '{k}'"));
+    take!(m, "serve.mode", cfg.serve.mode, serve_mode);
+    take!(m, "serve.rate_qps", cfg.serve.rate_qps, Value::as_f64);
+    take!(m, "serve.concurrency", cfg.serve.concurrency, Value::as_usize);
+    take!(m, "serve.requests", cfg.serve.requests, Value::as_usize);
+    take!(m, "serve.queue_depth", cfg.serve.queue_depth, Value::as_usize);
+    take!(m, "serve.seed", cfg.serve.seed, u64v);
+    take!(m, "serve.qos_p99_ms", cfg.serve.qos_p99_ms, Value::as_f64);
+    if let Some((v, line)) = m.remove("serve.workloads") {
+        match v {
+            Value::StrArray(a) => cfg.serve.workloads = a,
+            // `[]` parses as an empty numeric array
+            Value::Array(a) if a.is_empty() => cfg.serve.workloads = Vec::new(),
+            _ => {
+                return Err(format!(
+                    "line {line}: serve.workloads must be a string array"
+                ))
+            }
+        }
+    }
+
+    if let Some((k, (_, line))) = m.iter().next() {
+        return Err(format!("line {line}: unknown config key '{k}'"));
     }
     Ok(cfg)
 }
@@ -456,6 +527,23 @@ pub fn write(cfg: &SiamConfig) -> String {
     writeln!(s, "kind = \"{dram}\"").unwrap();
     writeln!(s, "bus_bits = {}", cfg.dram.bus_bits).unwrap();
     writeln!(s, "subset_fraction = {}", cfg.dram.subset_fraction).unwrap();
+    writeln!(s, "\n[serve]").unwrap();
+    let mode = match cfg.serve.mode {
+        ServeMode::Open => "open",
+        ServeMode::Closed => "closed",
+    };
+    writeln!(s, "mode = \"{mode}\"").unwrap();
+    writeln!(s, "rate_qps = {}", cfg.serve.rate_qps).unwrap();
+    writeln!(s, "concurrency = {}", cfg.serve.concurrency).unwrap();
+    writeln!(s, "requests = {}", cfg.serve.requests).unwrap();
+    writeln!(s, "queue_depth = {}", cfg.serve.queue_depth).unwrap();
+    writeln!(s, "seed = {}", cfg.serve.seed).unwrap();
+    if !cfg.serve.workloads.is_empty() {
+        let parts: Vec<String> =
+            cfg.serve.workloads.iter().map(|w| format!("\"{w}\"")).collect();
+        writeln!(s, "workloads = [{}]", parts.join(", ")).unwrap();
+    }
+    writeln!(s, "qos_p99_ms = {}", cfg.serve.qos_p99_ms).unwrap();
     s
 }
 
@@ -469,15 +557,43 @@ mod tests {
             "# comment\n[dnn]\nmodel = \"vgg16\"\nbatch = 4\n[system.nop]\nebit_pj = 0.54\n",
         )
         .unwrap();
-        assert_eq!(m["dnn.model"], Value::Str("vgg16".into()));
-        assert_eq!(m["dnn.batch"], Value::Int(4));
-        assert_eq!(m["system.nop.ebit_pj"], Value::Float(0.54));
+        assert_eq!(m["dnn.model"].0, Value::Str("vgg16".into()));
+        assert_eq!(m["dnn.batch"].0, Value::Int(4));
+        assert_eq!(m["dnn.batch"].1, 4, "line numbers recorded");
+        assert_eq!(m["system.nop.ebit_pj"].0, Value::Float(0.54));
     }
 
     #[test]
     fn arrays_parse() {
         let m = parse_flat("[dnn]\nsparsity = [0.1, 0.2, 0.3]\n").unwrap();
-        assert_eq!(m["dnn.sparsity"], Value::Array(vec![0.1, 0.2, 0.3]));
+        assert_eq!(m["dnn.sparsity"].0, Value::Array(vec![0.1, 0.2, 0.3]));
+    }
+
+    #[test]
+    fn string_arrays_parse() {
+        let m = parse_flat("[serve]\nworkloads = [\"resnet110\", \"vgg19:cifar100\"]\n").unwrap();
+        assert_eq!(
+            m["serve.workloads"].0,
+            Value::StrArray(vec!["resnet110".into(), "vgg19:cifar100".into()])
+        );
+        let cfg = apply(
+            SiamConfig::default(),
+            "[serve]\nworkloads = [\"resnet110\", \"lenet5\"]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.workloads, vec!["resnet110", "lenet5"]);
+    }
+
+    #[test]
+    fn trailing_comments_stripped_quotes_respected() {
+        let m = parse_flat("[dnn]\nbatch = 4 # trailing comment\nmodel = \"res#net\"\n").unwrap();
+        assert_eq!(m["dnn.batch"].0, Value::Int(4));
+        assert_eq!(m["dnn.model"].0, Value::Str("res#net".into()));
+        let m = parse_flat("[serve]\nworkloads = [\"a\", \"b\"] # mix\n").unwrap();
+        assert_eq!(
+            m["serve.workloads"].0,
+            Value::StrArray(vec!["a".into(), "b".into()])
+        );
     }
 
     #[test]
@@ -485,6 +601,7 @@ mod tests {
         let cfg = SiamConfig::default();
         let err = apply(cfg, "[dnn]\nmodle = \"oops\"\n").unwrap_err();
         assert!(err.contains("unknown config key"), "{err}");
+        assert!(err.contains("line 2"), "line number kept: {err}");
     }
 
     #[test]
@@ -503,5 +620,21 @@ mod tests {
         assert_eq!(cfg.chiplet.tiles_per_chiplet, 36);
         assert_eq!(cfg.system.structure, ChipletStructure::Homogeneous);
         assert_eq!(cfg.system.total_chiplets, Some(64));
+    }
+
+    #[test]
+    fn serve_section_applies() {
+        let cfg = apply(
+            SiamConfig::default(),
+            "[serve]\nmode = \"closed\"\nrate_qps = 1500.5\nconcurrency = 8\nrequests = 256\nqueue_depth = 2\nseed = 7\nqos_p99_ms = 2.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.mode, ServeMode::Closed);
+        assert_eq!(cfg.serve.rate_qps, 1500.5);
+        assert_eq!(cfg.serve.concurrency, 8);
+        assert_eq!(cfg.serve.requests, 256);
+        assert_eq!(cfg.serve.queue_depth, 2);
+        assert_eq!(cfg.serve.seed, 7);
+        assert_eq!(cfg.serve.qos_p99_ms, 2.5);
     }
 }

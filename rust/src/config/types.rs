@@ -288,6 +288,59 @@ impl Default for SystemConfig {
     }
 }
 
+/// Traffic generator of the inference-serving simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ServeMode {
+    /// Open loop: Poisson arrivals at a fixed offered rate; requests
+    /// that find the ingress queue full are shed (counted as dropped).
+    Open,
+    /// Closed loop: a fixed number of concurrent clients, each issuing
+    /// its next request the instant the previous one completes.
+    Closed,
+}
+
+/// Inference-serving simulator block (`[serve]`): the streaming-traffic
+/// scenario evaluated by `siam serve` and the QoS sweep mode.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Traffic generator: open loop (Poisson) or closed loop (fixed
+    /// concurrency).
+    pub mode: ServeMode,
+    /// Open-loop offered rate, inferences/s. `0.0` = auto (80 % of the
+    /// analytic bottleneck-stage service rate).
+    pub rate_qps: f64,
+    /// Closed-loop concurrent clients.
+    pub concurrency: usize,
+    /// Requests to stream through the pipeline.
+    pub requests: usize,
+    /// Bounded per-stage queue depth (back-pressure blocks the upstream
+    /// stage when a queue is full).
+    pub queue_depth: usize,
+    /// Seed of the splitmix64 arrival-time RNG (open loop).
+    pub seed: u64,
+    /// Workload mix: model names served in turn by `siam serve`
+    /// (`"model"` or `"model:dataset"`). Empty = the `[dnn]` model.
+    pub workloads: Vec<String>,
+    /// QoS target for p99 latency, ms (the `SweepBuilder` QoS mode
+    /// ranks design points by p99 under the target offered rate).
+    pub qos_p99_ms: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            mode: ServeMode::Open,
+            rate_qps: 0.0,
+            concurrency: 4,
+            requests: 1024,
+            queue_depth: 4,
+            seed: 42,
+            workloads: Vec::new(),
+            qos_p99_ms: 10.0,
+        }
+    }
+}
+
 /// Complete SIAM configuration (all Table-2 blocks).
 #[derive(Debug, Clone, Default)]
 pub struct SiamConfig {
@@ -301,4 +354,6 @@ pub struct SiamConfig {
     pub system: SystemConfig,
     /// DRAM engine block.
     pub dram: DramConfig,
+    /// Inference-serving simulator block.
+    pub serve: ServeConfig,
 }

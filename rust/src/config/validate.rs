@@ -127,6 +127,27 @@ impl SiamConfig {
         if self.dram.bus_bits == 0 || self.dram.bus_bits % 8 != 0 {
             return err("DRAM bus width must be a positive multiple of 8".into());
         }
+        if !(self.serve.rate_qps >= 0.0 && self.serve.rate_qps.is_finite()) {
+            return err(format!(
+                "serve rate {} must be finite and >= 0 (0 = auto)",
+                self.serve.rate_qps
+            ));
+        }
+        if self.serve.requests == 0 {
+            return err("serve requests must be >= 1".into());
+        }
+        if self.serve.concurrency == 0 {
+            return err("serve concurrency must be >= 1".into());
+        }
+        if self.serve.queue_depth == 0 {
+            return err("serve queue depth must be >= 1 (back-pressure needs a slot)".into());
+        }
+        if self.serve.qos_p99_ms <= 0.0 {
+            return err("serve QoS p99 target must be positive".into());
+        }
+        if self.serve.workloads.iter().any(|w| w.is_empty()) {
+            return err("serve workload names must be non-empty".into());
+        }
         Ok(())
     }
 }
@@ -181,5 +202,22 @@ mod tests {
         cfg.chiplet.adc_bits = 0;
         let e = cfg.validate().unwrap_err();
         assert!(e.to_string().contains("ADC"));
+    }
+
+    #[test]
+    fn serve_block_checked() {
+        let mut cfg = SiamConfig::default();
+        cfg.serve.rate_qps = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.serve.rate_qps = 0.0; // auto is allowed
+        assert!(cfg.validate().is_ok());
+        cfg.serve.queue_depth = 0;
+        assert!(cfg.validate().is_err());
+        cfg.serve.queue_depth = 4;
+        cfg.serve.requests = 0;
+        assert!(cfg.validate().is_err());
+        cfg.serve.requests = 16;
+        cfg.serve.workloads = vec!["resnet110".into(), "".into()];
+        assert!(cfg.validate().is_err());
     }
 }

@@ -19,8 +19,8 @@
 //! `benches/table3_simtime.rs`).
 
 use super::pipeline::{run_point, SweepContext};
-use super::SimReport;
-use crate::config::{ChipletStructure, SiamConfig};
+use super::{ServeReport, SimReport};
+use crate::config::{ChipletStructure, ServeMode, SiamConfig};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -34,6 +34,9 @@ pub struct SweepPoint {
     pub total_chiplets: Option<usize>,
     /// The full simulation report of the point.
     pub report: SimReport,
+    /// Serving run under the QoS target load (populated only by
+    /// [`SweepBuilder::qos`] sweeps).
+    pub serve: Option<ServeReport>,
 }
 
 impl SweepPoint {
@@ -60,11 +63,19 @@ pub enum FigureOfMerit {
     Area,
     /// Energy efficiency (ranked higher-is-better internally).
     InferencesPerJoule,
+    /// QoS mode: p99 latency under the target offered load (set through
+    /// [`SweepBuilder::qos`]), in three tiers — points meeting the
+    /// `[serve] qos_p99_ms` target rank first, then points missing it,
+    /// then points shedding load. Score through
+    /// [`FigureOfMerit::score_point`].
+    QosP99,
 }
 
 impl FigureOfMerit {
     /// Scalar score of a report under this figure of merit; lower is
-    /// better for every variant.
+    /// better for every variant. [`FigureOfMerit::QosP99`] needs the
+    /// serving run attached to the sweep point — use
+    /// [`FigureOfMerit::score_point`]; on a bare report it ranks last.
     pub fn score(&self, report: &SimReport) -> f64 {
         match self {
             FigureOfMerit::Edap => report.total.edap(),
@@ -73,6 +84,22 @@ impl FigureOfMerit {
             FigureOfMerit::Latency => report.total.latency_ns,
             FigureOfMerit::Area => report.total.area_um2,
             FigureOfMerit::InferencesPerJoule => -report.inferences_per_joule(),
+            FigureOfMerit::QosP99 => f64::INFINITY,
+        }
+    }
+
+    /// Scalar score of a full sweep point; lower is better. For
+    /// [`FigureOfMerit::QosP99`] this is the serving run's
+    /// [`ServeReport::qos_score_ms`] (p99 ms plus a shedding penalty);
+    /// every other variant delegates to [`FigureOfMerit::score`].
+    pub fn score_point(&self, point: &SweepPoint) -> f64 {
+        match self {
+            FigureOfMerit::QosP99 => point
+                .serve
+                .as_ref()
+                .map(|s| s.qos_score_ms())
+                .unwrap_or(f64::INFINITY),
+            _ => self.score(&point.report),
         }
     }
 }
@@ -124,7 +151,7 @@ impl SweepResult {
     /// order (stable sort), so rankings are deterministic.
     pub fn ranked(&self) -> Vec<&SweepPoint> {
         let mut v: Vec<&SweepPoint> = self.points.iter().collect();
-        v.sort_by(|a, b| self.fom.score(&a.report).total_cmp(&self.fom.score(&b.report)));
+        v.sort_by(|a, b| self.fom.score_point(a).total_cmp(&self.fom.score_point(b)));
         v
     }
 
@@ -172,6 +199,7 @@ pub struct SweepBuilder {
     fom: FigureOfMerit,
     threads: Option<usize>,
     budget: Option<usize>,
+    qos_qps: Option<f64>,
 }
 
 impl SweepBuilder {
@@ -186,6 +214,7 @@ impl SweepBuilder {
             fom: FigureOfMerit::default(),
             threads: None,
             budget: None,
+            qos_qps: None,
         }
     }
 
@@ -228,6 +257,23 @@ impl SweepBuilder {
         self
     }
 
+    /// QoS mode: additionally run the serving simulator on every
+    /// surviving point at `target_qps` offered open-loop load (the
+    /// `[serve]` block supplies requests / queue depth / seed and the
+    /// `qos_p99_ms` latency target) and rank points by p99-under-load
+    /// instead of single-shot EDAP — points meeting the target first,
+    /// then misses, then shedders. Each point is evaluated once through
+    /// the serving stage-graph builder, which yields the single-shot
+    /// report alongside the stage service times, so QoS ranking adds
+    /// only the event loop per point. `target_qps` must be positive and
+    /// finite — [`SweepBuilder::run`] rejects the per-point auto-rate
+    /// (0), which would measure every point at a different load.
+    pub fn qos(mut self, target_qps: f64) -> SweepBuilder {
+        self.qos_qps = Some(target_qps);
+        self.fom = FigureOfMerit::QosP99;
+        self
+    }
+
     /// The grid in deterministic order: tiles-major, counts-minor,
     /// truncated to the budget.
     fn grid(&self) -> Vec<(usize, Option<usize>)> {
@@ -249,6 +295,16 @@ impl SweepBuilder {
     /// skipped (Algorithm 1's error path); any other failure aborts the
     /// sweep with the first error in grid order.
     pub fn run(&self) -> Result<SweepResult> {
+        if let Some(q) = self.qos_qps {
+            // auto-rate (0) would measure every point at a different
+            // load, making the p99 ranking incomparable across points
+            if !(q > 0.0 && q.is_finite()) {
+                anyhow::bail!(
+                    "QoS sweeps need a positive finite target_qps, got {q} \
+                     (rate 0 = per-point auto-rate, which is not a common target)"
+                );
+            }
+        }
         let grid = self.grid();
         let ctx = SweepContext::new(&self.base)?;
         let threads = self
@@ -259,7 +315,7 @@ impl SweepBuilder {
         if threads <= 1 {
             let mut points = Vec::with_capacity(grid.len());
             for &(tiles, count) in &grid {
-                if let Some(p) = eval_point(&self.base, &ctx, tiles, count)? {
+                if let Some(p) = eval_point(&self.base, &ctx, tiles, count, self.qos_qps)? {
                     points.push(p);
                 }
             }
@@ -285,7 +341,7 @@ impl SweepBuilder {
                         break;
                     }
                     let (tiles, count) = grid[i];
-                    let r = eval_point(&self.base, &ctx, tiles, count);
+                    let r = eval_point(&self.base, &ctx, tiles, count, self.qos_qps);
                     *slots[i].lock().unwrap() = Some(r);
                 });
             }
@@ -326,12 +382,17 @@ fn default_threads() -> usize {
 }
 
 /// Evaluate one grid point; `Ok(None)` means the point is skipped
-/// because the homogeneous architecture cannot fit the DNN.
+/// because the homogeneous architecture cannot fit the DNN. With a QoS
+/// target the point is evaluated once through the serving stage-graph
+/// builder — which yields both the single-shot report and the stage
+/// service times (replaying epochs through the shared cache) — and the
+/// serving run is attached.
 fn eval_point(
     base: &SiamConfig,
     ctx: &SweepContext,
     tiles: usize,
     count: Option<usize>,
+    qos_qps: Option<f64>,
 ) -> Result<Option<SweepPoint>> {
     let cfg = match count {
         Some(c) => base.clone().with_tiles_per_chiplet(tiles).with_total_chiplets(c),
@@ -340,11 +401,24 @@ fn eval_point(
             .with_tiles_per_chiplet(tiles)
             .with_chiplet_structure(ChipletStructure::Custom),
     };
-    match run_point(&cfg, ctx, false) {
-        Ok(report) => Ok(Some(SweepPoint {
+    let outcome = match qos_qps {
+        None => run_point(&cfg, ctx, false).map(|report| (report, None)),
+        Some(qps) => {
+            let mut scfg = cfg;
+            scfg.serve.mode = ServeMode::Open;
+            scfg.serve.rate_qps = qps;
+            crate::serve::StageGraph::build(&scfg, ctx).map(|graph| {
+                let serve = crate::serve::run_graph(&graph, &scfg.serve);
+                (graph.single_shot, Some(serve))
+            })
+        }
+    };
+    match outcome {
+        Ok((report, serve)) => Ok(Some(SweepPoint {
             tiles_per_chiplet: tiles,
             total_chiplets: count,
             report,
+            serve,
         })),
         // homogeneous architecture too small: skip the point
         // (Algorithm 1's error path)
@@ -492,6 +566,64 @@ mod tests {
             capped.points[0].tiles_per_chiplet,
             full.points[0].tiles_per_chiplet
         );
+    }
+
+    #[test]
+    fn qos_sweep_attaches_serving_runs_and_ranks_by_p99() {
+        let mut base = SiamConfig::paper_default();
+        base.serve.requests = 96;
+        // well below any point's bottleneck rate: nothing sheds
+        let res = SweepBuilder::new(&base)
+            .tiles(&[9, 16])
+            .chiplet_counts(&[None])
+            .qos(1000.0)
+            .run()
+            .unwrap();
+        assert_eq!(res.len(), 2);
+        for p in &res.points {
+            let s = p.serve.as_ref().expect("QoS sweep attaches serving runs");
+            assert_eq!(s.mode, "open");
+            assert_eq!(s.offered_qps, 1000.0);
+            assert!(s.p99_ms > 0.0);
+            // the [serve] qos_p99_ms target rides along into the ranking
+            assert_eq!(s.qos_p99_target_ms, base.serve.qos_p99_ms);
+        }
+        let ranked = res.ranked();
+        let fom = FigureOfMerit::QosP99;
+        for w in ranked.windows(2) {
+            assert!(fom.score_point(w[0]) <= fom.score_point(w[1]));
+        }
+        // EDAP sweeps leave the serving slot empty
+        let plain = SweepBuilder::new(&base).tiles(&[9]).run().unwrap();
+        assert!(plain.points[0].serve.is_none());
+        // a per-point auto-rate target is rejected up front
+        let err = SweepBuilder::new(&base).tiles(&[9]).qos(0.0).run();
+        assert!(err.is_err(), "qos(0.0) must be rejected");
+    }
+
+    #[test]
+    fn qos_sweep_parallel_matches_serial_bitwise() {
+        // the serve engine is deterministic and every stage cache is
+        // keyed by its full input set, so QoS sweeps are bit-identical
+        // across thread counts
+        let mut base = SiamConfig::paper_default();
+        base.serve.requests = 96;
+        let builder = SweepBuilder::new(&base)
+            .tiles(&[9, 16])
+            .chiplet_counts(&[None])
+            .qos(1000.0);
+        let serial = builder.clone().serial().run().unwrap();
+        let parallel = builder.run().unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.points.iter().zip(&parallel.points) {
+            let (a, b) = (s.serve.as_ref().unwrap(), p.serve.as_ref().unwrap());
+            assert_eq!(a.p50_ms.to_bits(), b.p50_ms.to_bits());
+            assert_eq!(a.p95_ms.to_bits(), b.p95_ms.to_bits());
+            assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits());
+            assert_eq!(a.throughput_qps.to_bits(), b.throughput_qps.to_bits());
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.dropped, b.dropped);
+        }
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Simulation report: the hardware performance metrics SIAM emits
+//! Simulation reports: the hardware performance metrics SIAM emits
 //! (area, energy, latency, energy-efficiency, power, leakage, IMC
-//! utilization) plus per-engine breakdowns, with text and JSON renderers.
+//! utilization) plus per-engine breakdowns, with text and JSON
+//! renderers — [`SimReport`] for one single-shot evaluation and
+//! [`ServeReport`] for one serving (streaming-traffic) run.
 
 use crate::circuit::CircuitReport;
 use crate::config::SiamConfig;
@@ -210,6 +212,184 @@ impl SimReport {
             .set("requests", self.dram.requests)
             .set("row_hit_rate", self.dram.row_hit_rate);
         o.set("dram", d);
+        o
+    }
+}
+
+/// Complete output of one serving run: throughput, tail latency,
+/// utilization and energy-per-inference under streaming traffic
+/// (produced by [`crate::serve`]).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Served model (zoo name).
+    pub model: String,
+    /// Dataset variant.
+    pub dataset: String,
+    /// Traffic generator: `"open"` or `"closed"`.
+    pub mode: String,
+    /// Open-loop offered rate, inferences/s (0 for closed loop).
+    pub offered_qps: f64,
+    /// Closed-loop concurrent clients (0 for open loop).
+    pub concurrency: usize,
+    /// Pipeline stages (ingress + weight layers).
+    pub num_stages: usize,
+    /// Chiplets the architecture contains.
+    pub num_chiplets: usize,
+    /// Index of the bottleneck (slowest) stage.
+    pub bottleneck_stage: usize,
+    /// Service time of the bottleneck stage, ns.
+    pub bottleneck_service_ns: f64,
+    /// Analytic throughput ceiling (bottleneck service rate), inf/s.
+    pub bottleneck_qps: f64,
+    /// Empty-pipeline traversal time (Σ stage services), ns.
+    pub single_pass_ns: f64,
+    /// Single-shot inference latency of the same point, ns.
+    pub single_shot_latency_ns: f64,
+    /// Single-shot inference energy of the same point, pJ.
+    pub single_shot_energy_pj: f64,
+    /// Requests offered.
+    pub requests: usize,
+    /// Requests that completed the pipeline.
+    pub completed: usize,
+    /// Open-loop requests shed at the ingress queue.
+    pub dropped: usize,
+    /// Steady-state delivered throughput, inferences/s.
+    pub throughput_qps: f64,
+    /// Median request latency, ms.
+    pub p50_ms: f64,
+    /// 95th-percentile request latency, ms.
+    pub p95_ms: f64,
+    /// 99th-percentile request latency, ms.
+    pub p99_ms: f64,
+    /// Mean request latency, ms.
+    pub mean_ms: f64,
+    /// Crossbar-weighted busy fraction per chiplet over the serving
+    /// window.
+    pub chiplet_utilization: Vec<f64>,
+    /// Mean of `chiplet_utilization`.
+    pub mean_utilization: f64,
+    /// Max of `chiplet_utilization`.
+    pub peak_utilization: f64,
+    /// Energy per completed inference under load, pJ (dynamic + ingress
+    /// DRAM fetch + leakage amortized over the serving window).
+    pub energy_per_inference_pj: f64,
+    /// The `[serve] qos_p99_ms` target this run is judged against, ms.
+    pub qos_p99_target_ms: f64,
+    /// One-time weight load at deployment (not a per-request cost).
+    pub weight_load: DramReport,
+    /// Wall-clock of the serving simulation, seconds.
+    pub wall_seconds: f64,
+}
+
+impl ServeReport {
+    /// Fraction of offered requests shed at the ingress.
+    pub fn drop_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.requests as f64
+        }
+    }
+
+    /// Does the run meet its configured p99 target (and shed nothing)?
+    pub fn meets_qos(&self) -> bool {
+        self.dropped == 0 && self.p99_ms <= self.qos_p99_target_ms
+    }
+
+    /// QoS ranking score, lower is better, in three strict
+    /// deterministic tiers: runs that meet the configured p99 target,
+    /// then runs that miss it, then runs that shed load. The tier
+    /// offset (1e12 ms) dominates any achievable p99 or shed term, so
+    /// a shedding run can never outrank a non-shedding one; within a
+    /// tier, lower shed fraction then lower p99 wins.
+    pub fn qos_score_ms(&self) -> f64 {
+        let tier = if self.dropped > 0 {
+            2.0
+        } else if self.p99_ms > self.qos_p99_target_ms {
+            1.0
+        } else {
+            0.0
+        };
+        tier * 1.0e12 + 1.0e9 * self.drop_rate() + self.p99_ms
+    }
+
+    /// One-paragraph human-readable summary of the serving run.
+    pub fn summary(&self) -> String {
+        let load = match self.mode.as_str() {
+            "open" => format!("{:.0} qps offered", self.offered_qps),
+            _ => format!("concurrency {}", self.concurrency),
+        };
+        format!(
+            "{model} on {ds} serving ({mode}, {load}): {done}/{req} done, \
+             {drop:.1}% shed\n\
+             throughput {tp:.1} inf/s (bottleneck {cap:.1} inf/s, stage {bs}) | \
+             p50 {p50:.3} ms, p95 {p95:.3} ms, p99 {p99:.3} ms\n\
+             chiplet util mean {um:.1}% / peak {up:.1}% | \
+             {epi:.1} µJ/inf under load (single-shot {essj:.1} µJ) | \
+             QoS {qos} (p99 target {qtgt:.3} ms) | sim {wall:.2}s",
+            model = self.model,
+            ds = self.dataset,
+            mode = self.mode,
+            load = load,
+            done = self.completed,
+            req = self.requests,
+            drop = 100.0 * self.drop_rate(),
+            tp = self.throughput_qps,
+            cap = self.bottleneck_qps,
+            bs = self.bottleneck_stage,
+            p50 = self.p50_ms,
+            p95 = self.p95_ms,
+            p99 = self.p99_ms,
+            um = 100.0 * self.mean_utilization,
+            up = 100.0 * self.peak_utilization,
+            epi = self.energy_per_inference_pj / 1.0e6,
+            essj = self.single_shot_energy_pj / 1.0e6,
+            qos = if self.meets_qos() { "met" } else { "MISSED" },
+            qtgt = self.qos_p99_target_ms,
+            wall = self.wall_seconds,
+        )
+    }
+
+    /// Machine-readable report (stable keys; parsed back in tests).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", self.model.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("mode", self.mode.as_str())
+            .set("offered_qps", self.offered_qps)
+            .set("concurrency", self.concurrency)
+            .set("num_stages", self.num_stages)
+            .set("num_chiplets", self.num_chiplets)
+            .set("bottleneck_stage", self.bottleneck_stage)
+            .set("bottleneck_service_ns", self.bottleneck_service_ns)
+            .set("bottleneck_qps", self.bottleneck_qps)
+            .set("single_pass_ns", self.single_pass_ns)
+            .set("single_shot_latency_ns", self.single_shot_latency_ns)
+            .set("single_shot_energy_pj", self.single_shot_energy_pj)
+            .set("requests", self.requests)
+            .set("completed", self.completed)
+            .set("dropped", self.dropped)
+            .set("drop_rate", self.drop_rate())
+            .set("throughput_qps", self.throughput_qps)
+            .set("p50_ms", self.p50_ms)
+            .set("p95_ms", self.p95_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("mean_ms", self.mean_ms)
+            .set(
+                "chiplet_utilization",
+                Json::Arr(self.chiplet_utilization.iter().map(|&u| Json::Num(u)).collect()),
+            )
+            .set("mean_utilization", self.mean_utilization)
+            .set("peak_utilization", self.peak_utilization)
+            .set("energy_per_inference_pj", self.energy_per_inference_pj)
+            .set("qos_p99_target_ms", self.qos_p99_target_ms)
+            .set("meets_qos", self.meets_qos())
+            .set("wall_seconds", self.wall_seconds);
+        let mut w = Json::obj();
+        w.set("latency_ns", self.weight_load.latency_ns)
+            .set("energy_pj", self.weight_load.energy_pj)
+            .set("requests", self.weight_load.requests);
+        o.set("weight_load", w);
         o
     }
 }

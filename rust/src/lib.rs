@@ -19,6 +19,9 @@
 //! * [`cost`] — Appendix-A fabrication cost / yield model.
 //! * [`runtime`] — PJRT executor for the AOT-compiled Pallas crossbar
 //!   kernels (functional inference mode; Python never serves).
+//! * [`serve`] — discrete-event inference-serving simulator: streaming
+//!   traffic through the layer-pipelined chiplet system (throughput,
+//!   tail latency, utilization and energy under load).
 //! * [`coordinator`] — orchestration, design-space exploration, reports.
 //!
 //! Quickstart:
@@ -57,6 +60,7 @@ pub mod metrics;
 pub mod noc;
 pub mod nop;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use config::SiamConfig;

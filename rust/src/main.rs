@@ -5,6 +5,10 @@
 //!                [--chiplets N] [--monolithic] [--json PATH]
 //! siam sweep     [--config F] [--model M --dataset D]
 //!                [--tiles 4,9,16,25,36] [--counts 16,36,64,100]
+//!                [--json PATH]
+//! siam serve     [--config F] [--mode open|closed] [--rate QPS]
+//!                [--concurrency N] [--requests N] [--queue N]
+//!                [--seed S] [--quick] [--json PATH]
 //! siam functional [--artifacts DIR] [--adc 8] [--seed 42]
 //! siam models
 //! siam config    (print the paper-default TOML)
@@ -13,8 +17,9 @@
 //! Argument parsing is in-tree (the offline build vendors no clap).
 
 use anyhow::{bail, Context, Result};
-use siam::config::{ChipMode, SiamConfig};
-use siam::coordinator::{self, simulate};
+use siam::config::{ChipMode, ServeMode, SiamConfig};
+use siam::coordinator::{self, simulate, SweepBuilder};
+use siam::util::json::Json;
 use siam::util::table::{eng, Table};
 use std::collections::HashMap;
 
@@ -25,7 +30,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
             // boolean flags take no value
-            if matches!(name, "monolithic" | "help") {
+            if matches!(name, "monolithic" | "help" | "quick") {
                 flags.insert(name.to_string(), "true".into());
                 i += 1;
             } else {
@@ -85,13 +90,18 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
-    let cfg = build_config(flags)?;
+    // `--tiles` is the sweep-axis list here, not the scalar
+    // tiles-per-chiplet override build_config parses for `simulate`
+    let mut base_flags = flags.clone();
+    base_flags.remove("tiles");
+    let cfg = build_config(&base_flags)?;
     let tiles = parse_list(flags.get("tiles").map(String::as_str).unwrap_or("4,9,16,25,36"))?;
     let counts: Vec<Option<usize>> = match flags.get("counts") {
         Some(c) => parse_list(c)?.into_iter().map(Some).chain([None]).collect(),
         None => vec![None],
     };
-    let pts = coordinator::sweep(&cfg, &tiles, &counts)?;
+    let res = SweepBuilder::new(&cfg).tiles(&tiles).chiplet_counts(&counts).run()?;
+    let pts = &res.points;
     let mut t = Table::new(&[
         "tiles/chiplet",
         "chiplets",
@@ -100,7 +110,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         "latency ms",
         "EDAP",
     ]);
-    for p in &pts {
+    for p in pts {
         t.row(&[
             p.tiles_per_chiplet.to_string(),
             p.total_chiplets
@@ -113,11 +123,145 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         ]);
     }
     t.print();
-    if let Some(best) = coordinator::dse::best_by_edap(&pts) {
+    if let Some(best) = coordinator::dse::best_by_edap(pts) {
         println!(
             "\nEDAP-optimal: {} tiles/chiplet, {} chiplets",
             best.tiles_per_chiplet, best.report.num_chiplets
         );
+    }
+    if let Some(path) = flags.get("json") {
+        std::fs::write(path, sweep_json(&cfg, &res).to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Machine-readable sweep result: the table's fields per point plus the
+/// shared-stage cache counters (`SweepResult::stats`).
+fn sweep_json(cfg: &SiamConfig, res: &coordinator::SweepResult) -> Json {
+    let mut points = Vec::with_capacity(res.points.len());
+    for p in &res.points {
+        let mut o = Json::obj();
+        o.set("tiles_per_chiplet", p.tiles_per_chiplet)
+            .set(
+                "total_chiplets",
+                p.total_chiplets.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set("num_chiplets", p.report.num_chiplets)
+            .set("area_mm2", p.report.total.area_mm2())
+            .set("energy_uj", p.report.total.energy_uj())
+            .set("latency_ms", p.report.total.latency_ms())
+            .set("edap", p.report.total.edap());
+        points.push(o);
+    }
+    let mut stats = Json::obj();
+    stats
+        .set("epoch_hits", res.stats.epoch_hits)
+        .set("epoch_misses", res.stats.epoch_misses)
+        .set("epoch_hit_rate", res.stats.epoch_hit_rate())
+        .set("epochs_cached", res.stats.epochs_cached);
+    let mut out = Json::obj();
+    out.set("schema", "siam-sweep/v1")
+        .set("model", cfg.dnn.model.as_str())
+        .set("dataset", cfg.dnn.dataset.as_str())
+        .set("points", points)
+        .set("stats", stats);
+    if let Some(best) = coordinator::dse::best_by_edap(&res.points) {
+        let mut b = Json::obj();
+        b.set("tiles_per_chiplet", best.tiles_per_chiplet)
+            .set("num_chiplets", best.report.num_chiplets)
+            .set("edap", best.report.total.edap());
+        out.set("best_by_edap", b);
+    }
+    out
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let mut cfg = build_config(flags)?;
+    if let Some(m) = flags.get("mode") {
+        cfg.serve.mode = match m.as_str() {
+            "open" => ServeMode::Open,
+            "closed" => ServeMode::Closed,
+            other => bail!("--mode must be open|closed, got '{other}'"),
+        };
+    }
+    if let Some(r) = flags.get("rate") {
+        cfg.serve.rate_qps = r.parse().context("--rate")?;
+    }
+    if let Some(c) = flags.get("concurrency") {
+        cfg.serve.concurrency = c.parse().context("--concurrency")?;
+    }
+    if let Some(n) = flags.get("requests") {
+        cfg.serve.requests = n.parse().context("--requests")?;
+    }
+    if let Some(q) = flags.get("queue") {
+        cfg.serve.queue_depth = q.parse().context("--queue")?;
+    }
+    if let Some(s) = flags.get("seed") {
+        cfg.serve.seed = s.parse().context("--seed")?;
+    }
+    if flags.contains_key("quick") {
+        cfg.serve.requests = cfg.serve.requests.min(200);
+    }
+    cfg.validate()?;
+
+    // workload mix: "model" or "model:dataset" entries; empty = [dnn]
+    let workloads: Vec<(String, String)> = if cfg.serve.workloads.is_empty() {
+        vec![(cfg.dnn.model.clone(), cfg.dnn.dataset.clone())]
+    } else {
+        cfg.serve
+            .workloads
+            .iter()
+            .map(|w| match w.split_once(':') {
+                Some((m, d)) => (m.to_string(), d.to_string()),
+                None => (w.clone(), cfg.dnn.dataset.clone()),
+            })
+            .collect()
+    };
+
+    let mut t = Table::new(&[
+        "workload",
+        "mode",
+        "offered",
+        "delivered inf/s",
+        "ceiling inf/s",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "shed %",
+        "util %",
+    ]);
+    let mut reports = Vec::new();
+    for (model, dataset) in &workloads {
+        let wcfg = cfg.clone().with_model(model, dataset);
+        let rep = siam::serve::serve(&wcfg)?;
+        t.row(&[
+            format!("{model}/{dataset}"),
+            rep.mode.clone(),
+            match rep.mode.as_str() {
+                "open" => format!("{:.0} qps", rep.offered_qps),
+                _ => format!("conc {}", rep.concurrency),
+            },
+            format!("{:.1}", rep.throughput_qps),
+            format!("{:.1}", rep.bottleneck_qps),
+            format!("{:.3}", rep.p50_ms),
+            format!("{:.3}", rep.p95_ms),
+            format!("{:.3}", rep.p99_ms),
+            format!("{:.1}", 100.0 * rep.drop_rate()),
+            format!("{:.1}", 100.0 * rep.mean_utilization),
+        ]);
+        println!("{}\n", rep.summary());
+        reports.push(rep);
+    }
+    t.print();
+    if let Some(path) = flags.get("json") {
+        let mut out = Json::obj();
+        out.set("schema", "siam-serve/v1").set(
+            "reports",
+            Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+        );
+        std::fs::write(path, out.to_string_pretty())?;
+        println!("\nwrote {path}");
     }
     Ok(())
 }
@@ -164,10 +308,14 @@ fn cmd_models() -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: siam <simulate|sweep|functional|models|config> [flags]
+const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config> [flags]
   simulate   --model resnet110 --dataset cifar10 [--tiles 16] [--chiplets 36]
              [--monolithic] [--config file.toml] [--json out.json]
   sweep      --model resnet110 --dataset cifar10 [--tiles 4,9,16] [--counts 36,64]
+             [--json out.json]
+  serve      [--mode open|closed] [--rate 2000] [--concurrency 4]
+             [--requests 1024] [--queue 4] [--seed 42] [--quick]
+             [--config file.toml] [--json out.json]
   functional [--artifacts artifacts] [--adc 4|8] [--seed 42]
   models     list the model zoo
   config     print the paper-default configuration TOML";
@@ -182,6 +330,7 @@ fn main() -> Result<()> {
     match pos[0].as_str() {
         "simulate" => cmd_simulate(&flags),
         "sweep" => cmd_sweep(&flags),
+        "serve" => cmd_serve(&flags),
         "functional" => cmd_functional(&flags),
         "models" => cmd_models(),
         "config" => {

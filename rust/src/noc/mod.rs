@@ -36,6 +36,11 @@ pub struct NocReport {
     pub flit_hops: u64,
     /// Mean packet latency across all epochs, cycles.
     pub avg_packet_latency_cycles: f64,
+    /// Per-weight-layer serialized cycles as `(layer position, cycles)`
+    /// in layer order (chiplets of one layer max-combined; layers with
+    /// no NoC traffic are absent). Sums to `cycles`; the serving
+    /// simulator turns these into per-stage service times.
+    pub per_layer_cycles: Vec<(usize, u64)>,
 }
 
 /// Evaluate all NoC epochs of a traffic picture.
@@ -95,6 +100,7 @@ pub fn evaluate_cached(
         *e = (*e).max(cyc);
     }
     let cycles: u64 = per_layer.values().sum();
+    let per_layer_cycles: Vec<(usize, u64)> = per_layer.into_iter().collect();
 
     // ---- power & area
     let router = power::router(
@@ -136,6 +142,7 @@ pub fn evaluate_cached(
         } else {
             lat_sum as f64 / packets as f64
         },
+        per_layer_cycles,
     }
 }
 
@@ -162,6 +169,15 @@ mod tests {
         assert!(rep.packets > 0);
         assert!(rep.metrics.energy_pj > 0.0);
         assert!(rep.metrics.area_um2 > 0.0);
+    }
+
+    #[test]
+    fn per_layer_cycles_sum_to_total() {
+        let cfg = SiamConfig::paper_default();
+        let rep = report("resnet110", &cfg);
+        let sum: u64 = rep.per_layer_cycles.iter().map(|&(_, c)| c).sum();
+        assert_eq!(sum, rep.cycles);
+        assert!(rep.per_layer_cycles.windows(2).all(|w| w[0].0 < w[1].0));
     }
 
     #[test]

@@ -36,6 +36,12 @@ pub struct NopReport {
     pub die_area_um2: f64,
     /// Passive interposer wiring tracks (not yielded silicon), µm².
     pub interposer_area_um2: f64,
+    /// Per-weight-layer serialized cycles as `(layer position, cycles)`
+    /// in layer order (epochs of one layer summed — the interposer is a
+    /// single shared network; layers with no NoP traffic are absent).
+    /// Sums to `cycles`; the serving simulator turns these into
+    /// per-stage service times.
+    pub per_layer_cycles: Vec<(usize, u64)>,
 }
 
 /// Evaluate the NoP for a mapped DNN: cycle-accurate latency over the
@@ -78,6 +84,7 @@ pub fn evaluate_cached(
         flit_hops += r.flit_hops;
     }
     let cycles: u64 = per_layer.values().sum();
+    let per_layer_cycles: Vec<(usize, u64)> = per_layer.into_iter().collect();
 
     // ---- energy: Algorithm 3 (bits × E_bit) for every link traversal;
     // each hop re-drives the wire through a TX/RX pair.
@@ -115,6 +122,7 @@ pub fn evaluate_cached(
         bits,
         die_area_um2: die_area,
         interposer_area_um2: interposer_area,
+        per_layer_cycles,
     }
 }
 
@@ -141,6 +149,8 @@ mod tests {
         assert!(rep.bits > 0.0);
         assert!(rep.metrics.area_um2 > 0.0);
         assert!((rep.eff_freq_mhz - 250.0).abs() < 1e-9);
+        let sum: u64 = rep.per_layer_cycles.iter().map(|&(_, c)| c).sum();
+        assert_eq!(sum, rep.cycles, "per-layer cycles partition the total");
     }
 
     #[test]

@@ -1,0 +1,434 @@
+//! The deterministic discrete-event engine: a tandem of service stages
+//! with bounded queues and blocking-after-service back-pressure.
+//!
+//! The engine is deliberately decoupled from the hardware model — it
+//! consumes only a vector of per-stage service times (ns) — so its
+//! invariants (conservation, determinism, back-pressure) are testable on
+//! synthetic stage graphs without running the SIAM pipeline.
+//!
+//! Semantics:
+//!
+//! * Each stage serves one request at a time, in FIFO order, with a
+//!   deterministic service time.
+//! * Each stage owns a bounded input queue of `queue_depth` slots. A
+//!   stage that finishes a request while the downstream queue is full
+//!   **blocks**: it holds the finished request and cannot start another
+//!   until space frees (blocking-after-service, the standard production
+//!   back-pressure model).
+//! * Open-loop arrivals that find the ingress queue full are shed and
+//!   counted as `dropped` (admission control keeps the system stable
+//!   past saturation). Closed-loop clients never shed — a client whose
+//!   request cannot be admitted waits for an ingress slot.
+//!
+//! Events are processed in `(time, sequence)` order from a binary heap;
+//! all state updates are pure f64/integer arithmetic in a fixed order,
+//! so a given `(stage graph, workload)` input always produces
+//! bit-identical statistics, on any machine and independent of any
+//! thread pool the caller runs engines on.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Engine tuning knobs (from the `[serve]` config block).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineParams {
+    /// Bounded per-stage queue depth.
+    pub queue_depth: usize,
+}
+
+/// The request stream fed to the engine.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Open loop: pre-generated arrival timestamps, ns (ascending).
+    Open {
+        /// Arrival time of each request, ns.
+        arrivals: Vec<f64>,
+    },
+    /// Closed loop: `concurrency` clients keep exactly that many
+    /// requests outstanding until `requests` have been issued.
+    Closed {
+        /// Outstanding requests held by the client pool.
+        concurrency: usize,
+        /// Total requests to issue.
+        requests: usize,
+    },
+}
+
+/// Raw outcome of one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Requests offered (open: all arrivals; closed: the request budget).
+    pub offered: usize,
+    /// Requests that completed the full pipeline.
+    pub completed: usize,
+    /// Open-loop requests shed at the ingress queue.
+    pub dropped: usize,
+    /// Sojourn time (arrival → completion) per completed request, ns,
+    /// in completion order.
+    pub latencies_ns: Vec<f64>,
+    /// Completion timestamp per completed request, ns, ascending.
+    pub completion_times_ns: Vec<f64>,
+    /// First request arrival, ns.
+    pub first_arrival_ns: f64,
+    /// Last completion, ns.
+    pub last_completion_ns: f64,
+    /// Accumulated busy time per stage, ns (blocked time excluded —
+    /// blocking is starvation, not work).
+    pub stage_busy_ns: Vec<f64>,
+}
+
+impl RunStats {
+    /// Wall-clock window the run covered, ns.
+    pub fn window_ns(&self) -> f64 {
+        (self.last_completion_ns - self.first_arrival_ns).max(0.0)
+    }
+
+    /// Steady-state delivered throughput, inferences/s: completions per
+    /// unit time over the post-warm-up completion window (the first 20 %
+    /// of completions are treated as pipeline fill and excluded, which
+    /// removes the fill/drain bias from short runs).
+    pub fn steady_throughput_qps(&self) -> f64 {
+        let n = self.completion_times_ns.len();
+        if n < 2 {
+            return if self.window_ns() > 0.0 {
+                self.completed as f64 / self.window_ns() * 1.0e9
+            } else {
+                0.0
+            };
+        }
+        let k = n / 5;
+        let span = self.completion_times_ns[n - 1] - self.completion_times_ns[k];
+        if span <= 0.0 {
+            self.completed as f64 / self.window_ns().max(1e-9) * 1.0e9
+        } else {
+            (n - 1 - k) as f64 / span * 1.0e9
+        }
+    }
+}
+
+/// One pending event. Ordering is `(time, sequence)` — the sequence
+/// number breaks simultaneous-event ties deterministically in push
+/// order.
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: Kind,
+}
+
+enum Kind {
+    /// Open-loop request `id` reaches the ingress.
+    Arrive(u32),
+    /// The stage finishes its in-service request.
+    Finish(u32),
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, o: &Self) -> bool {
+        self.t.total_cmp(&o.t) == std::cmp::Ordering::Equal && self.seq == o.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&o.t).then(self.seq.cmp(&o.seq))
+    }
+}
+
+struct Stage {
+    queue: VecDeque<u32>,
+    serving: Option<u32>,
+    blocked: Option<u32>,
+    service_ns: f64,
+    busy_ns: f64,
+}
+
+struct Sim {
+    stages: Vec<Stage>,
+    cap: usize,
+    heap: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+    /// Arrival time of every request ever created (indexed by id).
+    arrival_ns: Vec<f64>,
+    /// Closed-loop requests issued but waiting for an ingress slot.
+    pending: VecDeque<u32>,
+    /// Closed loop: requests still to issue (0 for open loop).
+    to_issue: usize,
+    stats: RunStats,
+}
+
+impl Sim {
+    fn push_event(&mut self, t: f64, kind: Kind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Ev { t, seq, kind }));
+    }
+
+    fn new_request(&mut self, t: f64) -> u32 {
+        let id = self.arrival_ns.len() as u32;
+        self.arrival_ns.push(t);
+        id
+    }
+
+    /// Stage `j` starts its next queued request if it is idle; popping
+    /// the queue frees a slot, which back-fills from the blocked
+    /// upstream stage (or, at the ingress, from waiting closed-loop
+    /// clients), cascading as far up as space propagates.
+    fn pull(&mut self, j: usize, t: f64) {
+        if self.stages[j].serving.is_some() || self.stages[j].blocked.is_some() {
+            return;
+        }
+        let Some(r) = self.stages[j].queue.pop_front() else {
+            return;
+        };
+        self.stages[j].serving = Some(r);
+        let s = self.stages[j].service_ns;
+        self.stages[j].busy_ns += s;
+        self.push_event(t + s, Kind::Finish(j as u32));
+        self.backfill(j, t);
+    }
+
+    /// A slot just freed in stage `j`'s queue: refill it from upstream.
+    fn backfill(&mut self, j: usize, t: f64) {
+        if j == 0 {
+            if let Some(r) = self.pending.pop_front() {
+                debug_assert!(self.stages[0].queue.len() < self.cap);
+                self.stages[0].queue.push_back(r);
+                self.pull(0, t);
+            }
+            return;
+        }
+        let up = j - 1;
+        if let Some(r) = self.stages[up].blocked.take() {
+            debug_assert!(self.stages[j].queue.len() < self.cap);
+            self.stages[j].queue.push_back(r);
+            self.pull(up, t);
+        }
+    }
+
+    fn finish(&mut self, j: usize, t: f64) {
+        let r = self.stages[j].serving.take().expect("finish on idle stage");
+        if j + 1 == self.stages.len() {
+            self.complete(r, t);
+        } else if self.stages[j + 1].queue.len() < self.cap {
+            self.stages[j + 1].queue.push_back(r);
+            self.pull(j + 1, t);
+        } else {
+            // downstream full: hold the finished request, stall
+            self.stages[j].blocked = Some(r);
+            return;
+        }
+        self.pull(j, t);
+    }
+
+    fn complete(&mut self, r: u32, t: f64) {
+        self.stats.completed += 1;
+        self.stats.latencies_ns.push(t - self.arrival_ns[r as usize]);
+        self.stats.completion_times_ns.push(t);
+        self.stats.last_completion_ns = t;
+        if self.to_issue > 0 {
+            self.to_issue -= 1;
+            let next = self.new_request(t);
+            self.admit_or_wait(next, t);
+        }
+    }
+
+    /// Closed-loop admission: queue at the ingress if a slot is free,
+    /// otherwise wait (latency accrues from issue time).
+    fn admit_or_wait(&mut self, r: u32, t: f64) {
+        if self.stages[0].queue.len() < self.cap {
+            self.stages[0].queue.push_back(r);
+            self.pull(0, t);
+        } else {
+            self.pending.push_back(r);
+        }
+    }
+
+    /// Open-loop admission: shed when the ingress queue is full.
+    fn arrive(&mut self, r: u32, t: f64) {
+        if self.stages[0].queue.len() < self.cap {
+            self.stages[0].queue.push_back(r);
+            self.pull(0, t);
+        } else {
+            self.stats.dropped += 1;
+        }
+    }
+}
+
+/// Run the pipeline of `service_ns` stages against a workload and
+/// return the raw statistics. Deterministic: identical inputs produce
+/// bit-identical outputs.
+pub fn run(service_ns: &[f64], params: EngineParams, workload: Workload) -> RunStats {
+    assert!(!service_ns.is_empty(), "pipeline needs at least one stage");
+    assert!(params.queue_depth > 0, "queues need at least one slot");
+    let mut sim = Sim {
+        stages: service_ns
+            .iter()
+            .map(|&s| Stage {
+                queue: VecDeque::new(),
+                serving: None,
+                blocked: None,
+                service_ns: s,
+                busy_ns: 0.0,
+            })
+            .collect(),
+        cap: params.queue_depth,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        arrival_ns: Vec::new(),
+        pending: VecDeque::new(),
+        to_issue: 0,
+        stats: RunStats::default(),
+    };
+
+    match workload {
+        Workload::Open { arrivals } => {
+            sim.stats.offered = arrivals.len();
+            sim.stats.first_arrival_ns = arrivals.first().copied().unwrap_or(0.0);
+            for &t in &arrivals {
+                let id = sim.new_request(t);
+                sim.push_event(t, Kind::Arrive(id));
+            }
+        }
+        Workload::Closed { concurrency, requests } => {
+            assert!(concurrency > 0, "closed loop needs at least one client");
+            sim.stats.offered = requests;
+            sim.stats.first_arrival_ns = 0.0;
+            let initial = concurrency.min(requests);
+            sim.to_issue = requests - initial;
+            for _ in 0..initial {
+                let id = sim.new_request(0.0);
+                sim.admit_or_wait(id, 0.0);
+            }
+        }
+    }
+
+    while let Some(Reverse(ev)) = sim.heap.pop() {
+        match ev.kind {
+            Kind::Arrive(r) => sim.arrive(r, ev.t),
+            Kind::Finish(j) => sim.finish(j as usize, ev.t),
+        }
+    }
+
+    sim.stats.stage_busy_ns = sim.stages.iter().map(|s| s.busy_ns).collect();
+    sim.stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn open(rate_gap_ns: f64, n: usize) -> Workload {
+        Workload::Open {
+            arrivals: (1..=n).map(|i| i as f64 * rate_gap_ns).collect(),
+        }
+    }
+
+    #[test]
+    fn single_request_latency_is_service_sum() {
+        let stages = [10.0, 20.0, 5.0];
+        let stats = run(
+            &stages,
+            EngineParams { queue_depth: 4 },
+            Workload::Closed { concurrency: 1, requests: 1 },
+        );
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.latencies_ns[0], 35.0);
+    }
+
+    #[test]
+    fn closed_loop_concurrency_one_paces_at_service_sum() {
+        let stages = [10.0, 20.0, 5.0];
+        let stats = run(
+            &stages,
+            EngineParams { queue_depth: 4 },
+            Workload::Closed { concurrency: 1, requests: 50 },
+        );
+        assert_eq!(stats.completed, 50);
+        // every sojourn is exactly the pipeline traversal
+        assert!(stats.latencies_ns.iter().all(|&l| l == 35.0));
+        let qps = stats.steady_throughput_qps();
+        assert!((qps - 1.0e9 / 35.0).abs() / (1.0e9 / 35.0) < 1e-9, "{qps}");
+    }
+
+    #[test]
+    fn saturated_pipeline_paces_at_bottleneck() {
+        // bottleneck 20 ns => steady completions every 20 ns
+        let stages = [10.0, 20.0, 5.0];
+        let stats = run(
+            &stages,
+            EngineParams { queue_depth: 2 },
+            Workload::Closed { concurrency: 8, requests: 200 },
+        );
+        assert_eq!(stats.completed, 200);
+        let gaps: Vec<f64> = stats.completion_times_ns.windows(2).map(|w| w[1] - w[0]).collect();
+        // after fill, every inter-completion gap equals the bottleneck
+        assert!(gaps[gaps.len() / 2..].iter().all(|&g| (g - 20.0).abs() < 1e-9));
+        let qps = stats.steady_throughput_qps();
+        assert!((qps - 5.0e7).abs() / 5.0e7 < 1e-9, "{qps}");
+    }
+
+    #[test]
+    fn open_loop_sheds_when_saturated() {
+        // offered every 5 ns, bottleneck 20 ns, tiny queues => drops
+        let stats = run(&[10.0, 20.0], EngineParams { queue_depth: 1 }, open(5.0, 400));
+        assert!(stats.dropped > 0, "saturated ingress must shed");
+        assert_eq!(stats.completed + stats.dropped, 400, "conservation");
+        // delivered still paces at the bottleneck
+        let qps = stats.steady_throughput_qps();
+        assert!((qps - 5.0e7).abs() / 5.0e7 < 1e-6, "{qps}");
+    }
+
+    #[test]
+    fn open_loop_below_saturation_delivers_offered_rate() {
+        // offered every 50 ns >> bottleneck 20 ns: no queueing, no drops
+        let stats = run(&[10.0, 20.0], EngineParams { queue_depth: 4 }, open(50.0, 200));
+        assert_eq!(stats.dropped, 0);
+        assert_eq!(stats.completed, 200);
+        assert!(stats.latencies_ns.iter().all(|&l| l == 30.0));
+    }
+
+    #[test]
+    fn back_pressure_bounds_buffered_requests() {
+        // deep pipeline behind a slow tail stage: with queue depth Q the
+        // requests resident in the system are bounded by stages*(Q+2)
+        let stages = [1.0, 1.0, 1.0, 50.0];
+        let q = 2;
+        let stats = run(&stages, EngineParams { queue_depth: q }, open(1.0, 500));
+        assert_eq!(stats.completed + stats.dropped, 500);
+        // the tail stage admits one per 50 ns: most of the flood is shed
+        assert!(stats.dropped > 300, "dropped {}", stats.dropped);
+        // all completed latencies bounded by residency * bottleneck
+        let bound = (stages.len() * (q + 2)) as f64 * 50.0;
+        assert!(stats.latencies_ns.iter().all(|&l| l <= bound));
+    }
+
+    #[test]
+    fn engine_is_bit_deterministic() {
+        let stages = [3.0, 7.5, 2.25, 11.0];
+        let w = || open(4.0, 300);
+        let a = run(&stages, EngineParams { queue_depth: 2 }, w());
+        let b = run(&stages, EngineParams { queue_depth: 2 }, w());
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.latencies_ns), bits(&b.latencies_ns));
+        assert_eq!(bits(&a.stage_busy_ns), bits(&b.stage_busy_ns));
+    }
+
+    #[test]
+    fn busy_time_counts_work_not_blocking() {
+        // stage 0 is fast but blocked most of the time by stage 1
+        let stats = run(
+            &[1.0, 10.0],
+            EngineParams { queue_depth: 1 },
+            Workload::Closed { concurrency: 4, requests: 100 },
+        );
+        assert_eq!(stats.stage_busy_ns[0], 100.0); // 100 × 1 ns of real work
+        assert_eq!(stats.stage_busy_ns[1], 1000.0);
+    }
+}

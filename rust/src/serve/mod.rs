@@ -1,0 +1,338 @@
+//! Inference-serving simulator: a deterministic discrete-event engine
+//! that streams a workload of inference requests through the chiplet
+//! system (the ROADMAP's "serve heavy traffic" scenario, which
+//! single-shot latency cannot represent).
+//!
+//! Weight-stationary IMC pins each layer to its chiplet partition, so
+//! successive requests pipeline across layer stages. [`stage`] turns a
+//! mapped design point into that pipeline (per-stage service times from
+//! the circuit / NoC / NoP / DRAM engines, through the shared sweep
+//! caches); [`engine`] runs requests through it with bounded per-stage
+//! queues and blocking back-pressure; [`traffic`] generates open-loop
+//! Poisson arrivals from a seeded splitmix64 stream (closed-loop
+//! traffic is self-clocked). The result is a
+//! [`ServeReport`](crate::coordinator::ServeReport): throughput,
+//! p50/p95/p99 latency, per-chiplet utilization and energy-per-inference
+//! under load.
+//!
+//! Calibration invariants (asserted by tests and the `serve_saturation`
+//! bench):
+//!
+//! * closed-loop concurrency 1 throughput = 1 / single-inference
+//!   latency (within the ingress-fetch share, « 1 %);
+//! * open-loop throughput plateaus at the analytic bottleneck-stage
+//!   service rate once offered load exceeds it;
+//! * fixed seed ⇒ bit-identical percentiles, on any machine and under
+//!   any sweep thread count.
+
+pub mod engine;
+pub mod stage;
+pub mod traffic;
+
+pub use engine::{run, EngineParams, RunStats, Workload};
+pub use stage::{StageGraph, StageSpec};
+pub use traffic::{poisson_arrivals, SplitMix64};
+
+use crate::config::{ServeConfig, ServeMode, SiamConfig};
+use crate::coordinator::{ServeReport, SweepContext};
+use anyhow::Result;
+
+/// Nearest-rank percentile of an **ascending-sorted** latency slice.
+/// Returns 0 for an empty slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Run the serving simulator for one configuration, building a fresh
+/// [`SweepContext`]. Sweeping many points this way wastes the shared
+/// caches — use [`evaluate`] against a shared context instead.
+pub fn serve(cfg: &SiamConfig) -> Result<ServeReport> {
+    let ctx = SweepContext::new(cfg)?;
+    evaluate(cfg, &ctx)
+}
+
+/// Run the serving simulator for one configuration against a shared
+/// sweep context: the stage service times come out of the context's
+/// layer-cost / epoch / DRAM caches, so a point the sweep already
+/// simulated costs only the event loop.
+pub fn evaluate(cfg: &SiamConfig, ctx: &SweepContext) -> Result<ServeReport> {
+    let graph = StageGraph::build(cfg, ctx)?;
+    Ok(run_graph(&graph, &cfg.serve))
+}
+
+/// Run the serving engine on a prebuilt [`StageGraph`] — the QoS sweep
+/// builds each point's graph once (it carries the single-shot report
+/// too) and calls this, so QoS ranking adds only the event loop.
+pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
+    let t0 = std::time::Instant::now();
+    let services: Vec<f64> = graph.stages.iter().map(|s| s.service_ns).collect();
+    let (workload, mode, offered_qps, concurrency) = match sc.mode {
+        ServeMode::Open => {
+            let rate = if sc.rate_qps > 0.0 {
+                sc.rate_qps
+            } else {
+                // auto: 80 % of the analytic ceiling — loaded but stable
+                0.8 * graph.bottleneck_qps()
+            };
+            (
+                Workload::Open {
+                    arrivals: poisson_arrivals(rate, sc.requests, sc.seed),
+                },
+                "open",
+                rate,
+                0,
+            )
+        }
+        ServeMode::Closed => (
+            Workload::Closed { concurrency: sc.concurrency, requests: sc.requests },
+            "closed",
+            0.0,
+            sc.concurrency,
+        ),
+    };
+
+    let stats = run(&services, EngineParams { queue_depth: sc.queue_depth }, workload);
+
+    let mut sorted = stats.latencies_ns.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let mean_ns = if sorted.is_empty() {
+        0.0
+    } else {
+        sorted.iter().sum::<f64>() / sorted.len() as f64
+    };
+
+    // crossbar-weighted per-chiplet busy fraction over the window
+    let window_ns = stats.window_ns().max(1e-9);
+    let cap = graph.chiplet_capacity_xbars.max(1) as f64;
+    let mut util = vec![0.0f64; graph.num_chiplets];
+    for (spec, &busy) in graph.stages.iter().zip(&stats.stage_busy_ns) {
+        for &(c, xbars) in &spec.shares {
+            util[c] += busy * xbars as f64 / (cap * window_ns);
+        }
+    }
+    let mean_utilization = if util.is_empty() {
+        0.0
+    } else {
+        util.iter().sum::<f64>() / util.len() as f64
+    };
+    let peak_utilization = util.iter().copied().fold(0.0f64, f64::max);
+
+    let completed = stats.completed;
+    let leak_share_pj = if completed > 0 {
+        graph.leakage_uw * stats.window_ns() / completed as f64 / 1.0e3
+    } else {
+        0.0
+    };
+    let (bottleneck_stage, bottleneck_service_ns) = graph.bottleneck();
+
+    ServeReport {
+        model: graph.single_shot.model.clone(),
+        dataset: graph.single_shot.dataset.clone(),
+        mode: mode.into(),
+        offered_qps,
+        concurrency,
+        num_stages: graph.stages.len(),
+        num_chiplets: graph.num_chiplets,
+        bottleneck_stage,
+        bottleneck_service_ns,
+        bottleneck_qps: graph.bottleneck_qps(),
+        single_pass_ns: graph.single_pass_ns(),
+        single_shot_latency_ns: graph.single_shot.total.latency_ns,
+        single_shot_energy_pj: graph.single_shot.total.energy_pj,
+        requests: stats.offered,
+        completed,
+        dropped: stats.dropped,
+        throughput_qps: stats.steady_throughput_qps(),
+        p50_ms: percentile(&sorted, 50.0) / 1.0e6,
+        p95_ms: percentile(&sorted, 95.0) / 1.0e6,
+        p99_ms: percentile(&sorted, 99.0) / 1.0e6,
+        mean_ms: mean_ns / 1.0e6,
+        chiplet_utilization: util,
+        mean_utilization,
+        peak_utilization,
+        energy_per_inference_pj: graph.dynamic_energy_pj + leak_share_pj,
+        qos_p99_target_ms: sc.qos_p99_ms,
+        weight_load: graph.weight_load,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::simulate;
+
+    fn quick(cfg: SiamConfig) -> SiamConfig {
+        cfg.with_serve_requests(256)
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 95.0), 95.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+    }
+
+    #[test]
+    fn closed_loop_concurrency_one_matches_single_shot() {
+        // the acceptance calibration: at concurrency 1 the pipeline
+        // degenerates to sequential inference, so delivered throughput
+        // is the single-inference latency reciprocal (within the tiny
+        // ingress-fetch share)
+        let cfg = quick(SiamConfig::paper_default().with_serve_closed(1));
+        let rep = serve(&cfg).unwrap();
+        let single = simulate(&cfg).unwrap();
+        let want = 1.0e9 / single.total.latency_ns;
+        let rel = (rep.throughput_qps - want).abs() / want;
+        assert!(rel < 0.01, "closed-1 qps {} vs 1/latency {want} (rel {rel})", rep.throughput_qps);
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.completed, 256);
+        // no queueing at concurrency 1: the tail is flat (p50 and p99
+        // agree to float accumulation noise)
+        assert!((rep.p99_ms - rep.p50_ms).abs() / rep.p50_ms < 1e-9);
+    }
+
+    #[test]
+    fn pipelining_beats_sequential_throughput() {
+        // deeper concurrency fills the layer pipeline: throughput rises
+        // toward the bottleneck ceiling while staying below it
+        let base = quick(SiamConfig::paper_default());
+        let c1 = serve(&base.clone().with_serve_closed(1)).unwrap();
+        let c8 = serve(&base.clone().with_serve_closed(8)).unwrap();
+        assert!(
+            c8.throughput_qps > 2.0 * c1.throughput_qps,
+            "pipelining {} vs sequential {}",
+            c8.throughput_qps,
+            c1.throughput_qps
+        );
+        assert!(c8.throughput_qps <= c8.bottleneck_qps * (1.0 + 1e-9));
+        assert!(c8.mean_utilization > c1.mean_utilization);
+    }
+
+    #[test]
+    fn open_loop_saturation_plateaus_at_bottleneck() {
+        let base = quick(SiamConfig::paper_default());
+        let probe = serve(&base.clone().with_serve_closed(1)).unwrap();
+        let cap = probe.bottleneck_qps;
+        let over = serve(&base.clone().with_serve_open(2.0 * cap)).unwrap();
+        let rel = (over.throughput_qps - cap).abs() / cap;
+        assert!(rel < 0.05, "delivered {} vs ceiling {cap} (rel {rel})", over.throughput_qps);
+        assert!(over.dropped > 0, "2x overload must shed");
+        // below saturation: delivered tracks offered (the post-warm-up
+        // window of a finite Poisson sample is noisy — allow 25 %),
+        // nothing is shed, and the ceiling is respected
+        let under = serve(&base.with_serve_open(0.4 * cap)).unwrap();
+        assert_eq!(under.dropped, 0);
+        assert!(under.throughput_qps < cap);
+        let rel = (under.throughput_qps - under.offered_qps).abs() / under.offered_qps;
+        assert!(rel < 0.25, "delivered {} vs offered {}", under.throughput_qps, under.offered_qps);
+    }
+
+    #[test]
+    fn seed_determinism_bitwise() {
+        let cfg = quick(SiamConfig::paper_default().with_serve_open(0.0));
+        let a = serve(&cfg).unwrap();
+        let b = serve(&cfg).unwrap();
+        assert_eq!(a.p50_ms.to_bits(), b.p50_ms.to_bits());
+        assert_eq!(a.p95_ms.to_bits(), b.p95_ms.to_bits());
+        assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits());
+        assert_eq!(a.throughput_qps.to_bits(), b.throughput_qps.to_bits());
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+    }
+
+    #[test]
+    fn report_json_renders_and_parses() {
+        let cfg = quick(SiamConfig::paper_default().with_model("lenet5", "cifar10"));
+        let rep = serve(&cfg).unwrap();
+        let s = rep.summary();
+        assert!(s.contains("lenet5"));
+        assert!(s.contains("p99"));
+        let j = rep.to_json().to_string_pretty();
+        let back = crate::util::json::parse(&j).expect("serve JSON parses");
+        assert_eq!(back.get("mode").and_then(|v| v.as_str()), Some("open"));
+        assert!(back.get("p99_ms").and_then(|v| v.as_f64()).is_some());
+    }
+
+    #[test]
+    fn qos_scoring_tiers() {
+        let cfg = quick(SiamConfig::paper_default().with_model("lenet5", "cifar10"));
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.qos_p99_target_ms, cfg.serve.qos_p99_ms);
+        let mut meets = rep.clone();
+        meets.qos_p99_target_ms = meets.p99_ms + 1.0;
+        meets.dropped = 0;
+        let mut miss = rep.clone();
+        miss.qos_p99_target_ms = miss.p99_ms / 2.0;
+        miss.dropped = 0;
+        let mut shed = miss.clone();
+        shed.dropped = shed.requests / 2;
+        assert!(meets.meets_qos());
+        assert!(!miss.meets_qos() && !shed.meets_qos());
+        // tiered ranking: met target < missed target < shedding
+        assert!(meets.qos_score_ms() < miss.qos_score_ms());
+        assert!(miss.qos_score_ms() < shed.qos_score_ms());
+        // the tiers are strict: even a single shed request with a fast
+        // tail ranks after a clean run that merely misses the target
+        let mut shed_tiny = meets.clone();
+        shed_tiny.dropped = 1;
+        assert!(!shed_tiny.meets_qos());
+        assert!(shed_tiny.qos_score_ms() > miss.qos_score_ms());
+    }
+
+    #[test]
+    fn utilization_is_sane() {
+        let cfg = quick(SiamConfig::paper_default().with_serve_closed(8));
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.chiplet_utilization.len(), rep.num_chiplets);
+        assert!(rep.peak_utilization > 0.0);
+        assert!(
+            rep.chiplet_utilization.iter().all(|&u| (0.0..=1.0 + 1e-9).contains(&u)),
+            "utilization out of range: {:?}",
+            rep.chiplet_utilization
+        );
+    }
+
+    #[test]
+    fn monolithic_serving_reports_real_utilization() {
+        // monolithic mapping advertises unbounded chiplet capacity; the
+        // stage graph must fall back to the mapped crossbars so the
+        // single die does not report ~0% utilization
+        let cfg = quick(
+            SiamConfig::paper_default()
+                .with_chip_mode(crate::config::ChipMode::Monolithic)
+                .with_serve_closed(8),
+        );
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.num_chiplets, 1);
+        assert!(
+            rep.peak_utilization > 0.01,
+            "monolithic utilization collapsed: {}",
+            rep.peak_utilization
+        );
+        assert!(rep.peak_utilization <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn load_amortizes_leakage_energy() {
+        // under pipelined load the leakage window per inference shrinks,
+        // so energy/inference under load undercuts the single-shot figure
+        let cfg = quick(SiamConfig::paper_default().with_serve_closed(8));
+        let rep = serve(&cfg).unwrap();
+        assert!(rep.energy_per_inference_pj > 0.0);
+        assert!(
+            rep.energy_per_inference_pj < 2.0 * rep.single_shot_energy_pj,
+            "loaded {} vs single-shot {}",
+            rep.energy_per_inference_pj,
+            rep.single_shot_energy_pj
+        );
+    }
+}

@@ -1,0 +1,241 @@
+//! Stage-graph construction: turn one mapped design point into a linear
+//! pipeline of service stages for the discrete-event engine.
+//!
+//! Weight-stationary IMC pins every layer's weights to its chiplet
+//! partition, so consecutive inference requests pipeline across layer
+//! stages (the steady-state regime of a serving deployment). Each weight
+//! layer becomes one stage whose deterministic service time is exactly
+//! its share of the single-shot latency:
+//!
+//! * the layer's bit-serial compute latency (circuit engine),
+//! * its intra-chiplet NoC epochs (max across the chiplets the layer
+//!   spans — they communicate in parallel),
+//! * its inter-chiplet NoP transfers (summed — the interposer is one
+//!   shared network).
+//!
+//! An ingress stage models the per-request input fetch from the DRAM
+//! chiplet. The stage service times therefore partition `ingress +
+//! single-shot latency` exactly, which pins the closed-loop
+//! concurrency-1 throughput to the single-inference reciprocal — the
+//! calibration the acceptance tests assert.
+
+use crate::config::SiamConfig;
+use crate::coordinator::pipeline::{
+    stage_circuit, stage_dnn, stage_dram, stage_mapping, stage_noc, stage_nop,
+};
+use crate::coordinator::{SimReport, SweepContext};
+use crate::dram::DramReport;
+use anyhow::Result;
+
+/// One service stage of the serving pipeline.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// Weight-layer position this stage executes (`None` = DRAM ingress).
+    pub layer: Option<usize>,
+    /// Human-readable stage name (layer name or `ingress(dram)`).
+    pub name: String,
+    /// Deterministic service time per request, ns.
+    pub service_ns: f64,
+    /// `(chiplet, crossbars)` shares hosting the stage (empty for
+    /// ingress); drives the per-chiplet utilization accounting.
+    pub shares: Vec<(usize, usize)>,
+}
+
+/// The serving pipeline of one design point plus everything the report
+/// needs: per-request energy, leakage power, and the single-shot
+/// reference report.
+#[derive(Debug, Clone)]
+pub struct StageGraph {
+    /// Pipeline stages in execution order (ingress first).
+    pub stages: Vec<StageSpec>,
+    /// Chiplets the architecture contains.
+    pub num_chiplets: usize,
+    /// Crossbar capacity per chiplet (utilization denominator).
+    pub chiplet_capacity_xbars: usize,
+    /// Dynamic energy per request, pJ (compute + NoC + NoP + ingress
+    /// DRAM fetch; leakage excluded — it accrues over wall-clock time).
+    pub dynamic_energy_pj: f64,
+    /// All-on leakage power of the system, µW (amortized over the
+    /// serving window by the report).
+    pub leakage_uw: f64,
+    /// Per-request input fetch from the DRAM chiplet.
+    pub ingress: DramReport,
+    /// One-time weight load at deployment (reported separately; not a
+    /// per-request cost).
+    pub weight_load: DramReport,
+    /// The single-shot (batch-1, unloaded) report of the same point.
+    pub single_shot: SimReport,
+}
+
+impl StageGraph {
+    /// Build the stage graph for `cfg` against a sweep context. All
+    /// heavy stage outputs flow through the context's shared caches
+    /// (layer costs, NoC/NoP epochs, DRAM), so building a graph for a
+    /// point the sweep already simulated re-simulates nothing.
+    pub fn build(cfg: &SiamConfig, ctx: &SweepContext) -> Result<StageGraph> {
+        cfg.validate()?;
+        let dnn = stage_dnn(cfg, ctx)?;
+        let stats = dnn.stats();
+        let (map, placement, traffic) = stage_mapping(cfg, &dnn)?;
+        let circuit = stage_circuit(cfg, ctx, &dnn, &map, &traffic);
+        let noc = stage_noc(cfg, ctx, &traffic, map.num_chiplets);
+        let nop = stage_nop(cfg, ctx, &traffic, &placement);
+        let weight_load = stage_dram(cfg, ctx, &stats);
+
+        // per-request input fetch: the ingress activations stream in
+        // from the DRAM chiplet through the same timing model
+        let input_bits = dnn.input.elems() as u64
+            * cfg.dnn.activation_precision as u64
+            * cfg.dnn.batch as u64;
+        let ingress = crate::dram::estimate_with(input_bits.div_ceil(8) as usize, &cfg.dram);
+
+        let clk_noc_ns = cfg.clock_period_ns();
+        let clk_nop_ns = 1.0e3 / nop.eff_freq_mhz;
+        let noc_ns = |layer: usize| -> f64 {
+            noc.per_layer_cycles
+                .iter()
+                .find(|&&(l, _)| l == layer)
+                .map_or(0.0, |&(_, c)| c as f64 * clk_noc_ns)
+        };
+        let nop_ns = |layer: usize| -> f64 {
+            nop.per_layer_cycles
+                .iter()
+                .find(|&&(l, _)| l == layer)
+                .map_or(0.0, |&(_, c)| c as f64 * clk_nop_ns)
+        };
+
+        let mut stages = Vec::with_capacity(map.per_layer.len() + 1);
+        stages.push(StageSpec {
+            layer: None,
+            name: "ingress(dram)".into(),
+            service_ns: ingress.latency_ns,
+            shares: Vec::new(),
+        });
+        let mut layer_latency_sum = 0.0;
+        for (li, lm) in map.per_layer.iter().enumerate() {
+            let lc = circuit.per_layer[li];
+            layer_latency_sum += lc.latency_ns;
+            stages.push(StageSpec {
+                layer: Some(li),
+                name: dnn.layers[lm.layer_idx].name.clone(),
+                service_ns: lc.latency_ns + noc_ns(li) + nop_ns(li),
+                shares: lm.chiplets.iter().map(|s| (s.chiplet, s.xbars)).collect(),
+            });
+        }
+        // the circuit engine's non-layer latency (pool/act units, global
+        // accumulator) runs after the last weight layer: charge it there
+        // so the stage times partition the single-shot latency exactly
+        let residual_ns = (circuit.latency_ns - layer_latency_sum).max(0.0);
+        if let Some(last) = stages.last_mut() {
+            last.service_ns += residual_ns;
+        }
+
+        let dynamic_energy_pj = (circuit.energy_pj - circuit.leakage_energy_pj)
+            + noc.metrics.energy_pj
+            + nop.metrics.energy_pj
+            + ingress.energy_pj;
+        let num_chiplets = map.num_chiplets;
+        // monolithic mode reports an unbounded chiplet capacity
+        // (usize::MAX); the die physically contains exactly the mapped
+        // crossbars, so that is the utilization denominator
+        let chiplet_capacity_xbars = if map.chiplet_capacity == usize::MAX {
+            map.total_xbars().max(1)
+        } else {
+            map.chiplet_capacity
+        };
+        let single_shot =
+            SimReport::assemble(cfg, &dnn, &map, &traffic, circuit, noc, nop, weight_load, 0.0);
+
+        Ok(StageGraph {
+            stages,
+            num_chiplets,
+            chiplet_capacity_xbars,
+            dynamic_energy_pj,
+            leakage_uw: single_shot.total.leakage_uw,
+            ingress,
+            weight_load,
+            single_shot,
+        })
+    }
+
+    /// Sum of all stage service times: the time one request takes to
+    /// traverse the empty pipeline, ns.
+    pub fn single_pass_ns(&self) -> f64 {
+        self.stages.iter().map(|s| s.service_ns).sum()
+    }
+
+    /// `(index, service_ns)` of the slowest stage — the pipeline's
+    /// bottleneck, whose service rate caps the deliverable throughput.
+    pub fn bottleneck(&self) -> (usize, f64) {
+        self.stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, s.service_ns))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("stage graph is never empty")
+    }
+
+    /// Analytic throughput ceiling: the bottleneck stage's service
+    /// rate, inferences/s.
+    pub fn bottleneck_qps(&self) -> f64 {
+        1.0e9 / self.bottleneck().1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SiamConfig;
+
+    #[test]
+    fn stage_times_partition_single_shot_latency() {
+        let cfg = SiamConfig::paper_default();
+        let ctx = SweepContext::new(&cfg).unwrap();
+        let g = StageGraph::build(&cfg, &ctx).unwrap();
+        // one ingress stage + one stage per mapped weight layer
+        assert!(g.stages.len() > 100, "resnet110 has >100 weight layers");
+        assert_eq!(g.stages[0].layer, None);
+        assert!(g.stages[1..].iter().all(|s| s.layer.is_some()));
+        // Σ stage services == ingress + single-shot latency (exactly up
+        // to float assembly order)
+        let want = g.ingress.latency_ns + g.single_shot.total.latency_ns;
+        let got = g.single_pass_ns();
+        assert!(
+            (got - want).abs() / want < 1e-9,
+            "stage sum {got} vs single-shot {want}"
+        );
+        // the ingress input fetch is tiny next to an inference
+        assert!(g.ingress.latency_ns < 0.01 * g.single_shot.total.latency_ns);
+        let (_, b) = g.bottleneck();
+        assert!(b > 0.0 && b <= got);
+    }
+
+    #[test]
+    fn shares_stay_within_chiplet_capacity() {
+        let cfg = SiamConfig::paper_default();
+        let ctx = SweepContext::new(&cfg).unwrap();
+        let g = StageGraph::build(&cfg, &ctx).unwrap();
+        let mut used = vec![0usize; g.num_chiplets];
+        for s in &g.stages {
+            for &(c, x) in &s.shares {
+                used[c] += x;
+            }
+        }
+        assert!(used.iter().all(|&u| u <= g.chiplet_capacity_xbars));
+    }
+
+    #[test]
+    fn graph_reuses_sweep_context_caches() {
+        let cfg = SiamConfig::paper_default();
+        let ctx = SweepContext::new(&cfg).unwrap();
+        let a = StageGraph::build(&cfg, &ctx).unwrap();
+        let misses = ctx.epoch_cache().misses();
+        let b = StageGraph::build(&cfg, &ctx).unwrap();
+        // the second build answers every epoch from the shared cache
+        assert_eq!(ctx.epoch_cache().misses(), misses, "no new epoch simulations");
+        let bits = |g: &StageGraph| {
+            g.stages.iter().map(|s| s.service_ns.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&a), bits(&b), "cached rebuild is bit-identical");
+    }
+}

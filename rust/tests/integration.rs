@@ -113,6 +113,47 @@ fn presets_in_configs_dir_are_valid() {
     }
 }
 
+/// Serialize → parse → serialize must be a fixed point: the second
+/// serialization is byte-identical to the first, so every field —
+/// floats included — survives the TOML subset bit-exactly.
+fn assert_toml_fixed_point(cfg: &SiamConfig, label: &str) {
+    let once = cfg.to_toml_string().unwrap();
+    let back = SiamConfig::from_toml_str(&once)
+        .unwrap_or_else(|e| panic!("{label}: serialized config does not re-parse: {e}"));
+    let twice = back.to_toml_string().unwrap();
+    assert_eq!(once, twice, "{label}: TOML round trip is not bit-identical");
+}
+
+#[test]
+fn every_preset_and_default_round_trips_bit_identically() {
+    assert_toml_fixed_point(&SiamConfig::paper_default(), "paper_default");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(concat!(env!("CARGO_MANIFEST_DIR"), "/configs")).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) == Some("toml") {
+            let cfg = SiamConfig::from_toml_file(&path).unwrap();
+            assert_toml_fixed_point(&cfg, path.to_str().unwrap());
+            seen += 1;
+        }
+    }
+    assert!(seen >= 4, "expected the checked-in presets, found {seen}");
+}
+
+#[test]
+fn serve_cli_smoke_shape() {
+    // the `siam serve --quick` CI smoke, exercised at the library level:
+    // paper-default config, capped request count, JSON renders
+    let cfg = SiamConfig::paper_default().with_serve_requests(200);
+    let rep = siam::serve::serve(&cfg).unwrap();
+    assert_eq!(rep.model, "resnet110");
+    assert!(rep.completed > 0);
+    assert!(rep.throughput_qps > 0.0);
+    assert!(rep.p50_ms <= rep.p95_ms && rep.p95_ms <= rep.p99_ms);
+    assert!(rep.bottleneck_qps >= rep.throughput_qps * (1.0 - 1e-9));
+    let j = rep.to_json().to_string_pretty();
+    siam::util::json::parse(&j).expect("serve JSON parses");
+}
+
 #[test]
 fn chiplet_beats_monolithic_on_cost_not_performance() {
     // chiplet architectures pay interconnect overhead but win fab cost

@@ -299,6 +299,59 @@ fn flow_sim_tracks_flit_sim_on_random_small_traces() {
 }
 
 #[test]
+fn serve_engine_is_seed_deterministic() {
+    // same seed => bit-identical percentiles and throughput, for random
+    // serving configurations over random synthetic stage pipelines
+    use siam::serve::{poisson_arrivals, run, EngineParams, Workload};
+    check_property("serve_seed_deterministic", 30, 0x5E4E, |rng| {
+        let stages: Vec<f64> = (0..rng.range(1, 40))
+            .map(|_| 1.0 + rng.f64() * 500.0)
+            .collect();
+        let depth = rng.range(1, 6) as usize;
+        let seed = rng.next_u64();
+        let n = rng.range(10, 300) as usize;
+        let bottleneck = stages.iter().cloned().fold(0.0f64, f64::max);
+        let rate = (0.2 + 1.6 * rng.f64()) * 1.0e9 / bottleneck; // 0.2x..1.8x
+        let once = || {
+            let w = Workload::Open {
+                arrivals: poisson_arrivals(rate, n, seed),
+            };
+            run(&stages, EngineParams { queue_depth: depth }, w)
+        };
+        let (a, b) = (once(), once());
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.latencies_ns), bits(&b.latencies_ns));
+        assert_eq!(
+            a.steady_throughput_qps().to_bits(),
+            b.steady_throughput_qps().to_bits()
+        );
+        // conservation and sanity under any load
+        assert_eq!(a.completed + a.dropped, n);
+        let single_pass: f64 = stages.iter().sum();
+        assert!(a.latencies_ns.iter().all(|&l| l >= single_pass - 1e-6));
+    });
+}
+
+#[test]
+fn serve_full_pipeline_percentiles_reproduce() {
+    // end to end (mapping -> engines -> stage graph -> event loop): the
+    // same seed yields bit-identical percentiles across fresh contexts
+    let mut cfg = SiamConfig::paper_default().with_model("lenet5", "cifar10");
+    cfg.serve.requests = 200;
+    for seed in [1u64, 0xDEAD_BEEF] {
+        cfg.serve.seed = seed;
+        let a = siam::serve::serve(&cfg).unwrap();
+        let b = siam::serve::serve(&cfg).unwrap();
+        assert_eq!(a.p50_ms.to_bits(), b.p50_ms.to_bits());
+        assert_eq!(a.p95_ms.to_bits(), b.p95_ms.to_bits());
+        assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits());
+        assert_eq!(a.throughput_qps.to_bits(), b.throughput_qps.to_bits());
+    }
+}
+
+#[test]
 fn dram_subset_estimator_bounded_error() {
     check_property("dram_subset_error", 20, 0x5EED, |rng| {
         let bytes = (rng.range(64, 4096) * 64) as usize;
