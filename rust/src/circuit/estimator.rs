@@ -208,11 +208,16 @@ impl<'a> CircuitEstimator<'a> {
 
     /// Compute cost of one weight layer (Eq.-1 geometry, bit-serial
     /// read-out, ADC, shift-add, intra-chiplet accumulation, buffers).
-    pub fn layer_cost(
-        &self,
-        layer: &crate::dnn::Layer,
-        lm: &crate::mapping::LayerMapping,
-    ) -> LayerCircuit {
+    ///
+    /// `wpos` is the layer's position in the weight-layer sequence
+    /// (`dnn.weight_layers()` order), used to look up its sparsity; the
+    /// Eq.-1 row-crossbar count is derived internally from this
+    /// estimator's crossbar geometry, so the cost is well-defined per
+    /// `(layer, circuit configuration)` pair independent of how the
+    /// layer is partitioned across chiplets — that independence is what
+    /// lets [`LayerCostCache`] share one vector per circuit
+    /// configuration (and per chiplet class) across all sweep points.
+    pub fn layer_cost(&self, layer: &crate::dnn::Layer, wpos: usize) -> LayerCircuit {
         let ch = &self.cfg.chiplet;
         let dev = &self.cfg.device;
         let act_bits = self.cfg.dnn.activation_precision as f64;
@@ -253,7 +258,24 @@ impl<'a> CircuitEstimator<'a> {
             * (cols_used / ch.xbar_cols as f64).max(1.0)
             * (rows_used / ch.xbar_rows as f64).max(1.0);
         // digital accumulation across row-crossbars (N_r-1 adds per col)
-        let row_xbars = lm.rows as f64;
+        let sparsity = self
+            .cfg
+            .dnn
+            .sparsity
+            .as_ref()
+            .and_then(|v| v.get(wpos))
+            .copied()
+            .unwrap_or(0.0);
+        let (n_r, _, _) = crate::mapping::eq1_rows_cols(
+            layer.weight_rows(),
+            layer.weight_cols(),
+            self.cfg.dnn.weight_precision,
+            dev.bits_per_cell,
+            ch.xbar_rows,
+            ch.xbar_cols,
+            sparsity,
+        );
+        let row_xbars = n_r as f64;
         let acc_adds = vectors * layer.weight_cols() as f64 * (row_xbars - 1.0).max(0.0);
         // buffers: read each input vector act_bits-wide per row, write out
         let buf_bits = vectors * (rows_used * act_bits + layer.weight_cols() as f64 * act_bits);
@@ -275,19 +297,19 @@ impl<'a> CircuitEstimator<'a> {
         self.cfg.clock_period_ns()
     }
 
-    /// The per-layer cost vector for a mapped DNN, through the cache
-    /// when one is supplied.
-    fn layer_costs(
-        &self,
-        dnn: &Dnn,
-        map: &MappingResult,
-        cache: Option<&LayerCostCache>,
-    ) -> Arc<Vec<LayerCircuit>> {
+    /// The per-weight-layer cost vector of the whole model under *this*
+    /// estimator's circuit configuration, through the cache when one is
+    /// supplied. Heterogeneous estimation calls this once per chiplet
+    /// class (on the class's effective configuration), and the cache key
+    /// covers every class-varying circuit field, so per-class vectors
+    /// stay cached across all points of a sweep.
+    fn layer_costs(&self, dnn: &Dnn, cache: Option<&LayerCostCache>) -> Arc<Vec<LayerCircuit>> {
         let compute = || {
             Arc::new(
-                map.per_layer
+                dnn.weight_layers()
                     .iter()
-                    .map(|lm| self.layer_cost(&dnn.layers[lm.layer_idx], lm))
+                    .enumerate()
+                    .map(|(wpos, &idx)| self.layer_cost(&dnn.layers[idx], wpos))
                     .collect::<Vec<_>>(),
             )
         };
@@ -317,12 +339,15 @@ impl<'a> CircuitEstimator<'a> {
         traffic: &Traffic,
         cache: Option<&LayerCostCache>,
     ) -> CircuitReport {
+        let monolithic = self.cfg.system.chip_mode == ChipMode::Monolithic;
+        if !monolithic && self.cfg.has_hetero_classes() {
+            return self.estimate_hetero(dnn, map, traffic, cache);
+        }
         let mut rep = CircuitReport::default();
         let ch = &self.cfg.chiplet;
         let tech = &self.tech;
 
         // ---- areas
-        let monolithic = self.cfg.system.chip_mode == ChipMode::Monolithic;
         rep.chiplets_area_um2 = if monolithic {
             // one big chip with exactly the used tiles + one set of units
             map.total_tiles(ch.xbars_per_tile) as f64 * self.tile_area()
@@ -332,14 +357,9 @@ impl<'a> CircuitEstimator<'a> {
         } else {
             map.num_chiplets as f64 * self.chiplet_area()
         };
-        let gbuf_bits = self.cfg.system.global_buffer_kb as f64 * 1024.0 * 8.0;
-        let buf = comp::buffer_bit(ch.buffer_type, tech);
-        let gacc = comp::accumulator(tech);
-        rep.global_area_um2 =
-            gbuf_bits * buf.area_um2 + self.cfg.system.accumulator_size as f64 * gacc.area_um2;
 
         // ---- per weight-layer compute (vector shared via the cache)
-        let costs = self.layer_costs(dnn, map, cache);
+        let costs = self.layer_costs(dnn, cache);
         let mut e_imc = 0.0;
         let total_xbars = map.total_xbars().max(1) as f64;
         let mut active_share_time_ns = 0.0; // Σ share × layer latency
@@ -354,6 +374,101 @@ impl<'a> CircuitEstimator<'a> {
             energy_pj: e_imc,
             ..Metrics::ZERO
         });
+
+        let adc = comp::flash_adc(ch.adc_bits, tech);
+        let adc_leakage_uw = map.total_xbars() as f64 * self.adcs_per_xbar() * adc.leakage_uw;
+        self.estimate_tail(&mut rep, dnn, traffic, active_share_time_ns, adc_leakage_uw);
+        rep
+    }
+
+    /// Heterogeneous-class estimation: per-layer compute costs come from
+    /// the owning class's effective configuration (one cached vector per
+    /// class), chiplet areas sum per class, and ADC leakage follows each
+    /// class's ADC count over its mapped crossbars. Shared units
+    /// (pooling/activation, global accumulator + buffer) stay on the
+    /// base configuration.
+    fn estimate_hetero(
+        &self,
+        dnn: &Dnn,
+        map: &MappingResult,
+        traffic: &Traffic,
+        cache: Option<&LayerCostCache>,
+    ) -> CircuitReport {
+        let classes = self.cfg.resolved_chiplet_classes();
+        let effs: Vec<crate::config::SiamConfig> =
+            classes.iter().map(|c| self.cfg.class_effective(c)).collect();
+        let ests: Vec<CircuitEstimator> = effs.iter().map(CircuitEstimator::new).collect();
+        let costs: Vec<Arc<Vec<LayerCircuit>>> =
+            ests.iter().map(|e| e.layer_costs(dnn, cache)).collect();
+        let mut counts = vec![0usize; classes.len()];
+        for &k in &map.chiplet_class {
+            counts[k] += 1;
+        }
+
+        let mut rep = CircuitReport::default();
+
+        // ---- areas: Σ per class (chiplet area from the class's
+        // effective configuration)
+        rep.chiplets_area_um2 = counts
+            .iter()
+            .zip(&ests)
+            .map(|(&n, e)| n as f64 * e.chiplet_area())
+            .sum();
+
+        // ---- per weight-layer compute from the owning class. The
+        // active-fabric share weights latency by crossbar count — a
+        // crossbar-unit approximation across classes of unequal
+        // crossbar sizes (exact for single-kind systems, which never
+        // reach this path).
+        let total_xbars = map.total_xbars().max(1) as f64;
+        let mut e_imc = 0.0;
+        let mut active_share_time_ns = 0.0;
+        let mut xbars_of_class = vec![0usize; classes.len()];
+        for (li, lm) in map.per_layer.iter().enumerate() {
+            let lc = costs[lm.class][li];
+            e_imc += lc.energy_pj;
+            rep.latency_ns += lc.latency_ns;
+            rep.energy_pj += lc.energy_pj;
+            active_share_time_ns += lc.latency_ns * lm.xbars as f64 / total_xbars;
+            xbars_of_class[lm.class] += lm.xbars;
+            rep.per_layer.push(lc);
+        }
+        rep.energy_breakdown.push("imc_compute", Metrics {
+            energy_pj: e_imc,
+            ..Metrics::ZERO
+        });
+
+        let adc_leakage_uw: f64 = ests
+            .iter()
+            .enumerate()
+            .map(|(k, e)| {
+                let adc = comp::flash_adc(effs[k].chiplet.adc_bits, &e.tech);
+                xbars_of_class[k] as f64 * e.adcs_per_xbar() * adc.leakage_uw
+            })
+            .sum();
+        self.estimate_tail(&mut rep, dnn, traffic, active_share_time_ns, adc_leakage_uw);
+        rep
+    }
+
+    /// The configuration-shared back half of an estimation: global
+    /// accumulator/buffer area, pooling/activation and global-reduction
+    /// energy, and the power-gated leakage accounting. Identical
+    /// operation order for the classic and heterogeneous paths.
+    fn estimate_tail(
+        &self,
+        rep: &mut CircuitReport,
+        dnn: &Dnn,
+        traffic: &Traffic,
+        active_share_time_ns: f64,
+        adc_leakage_uw: f64,
+    ) {
+        let ch = &self.cfg.chiplet;
+        let tech = &self.tech;
+        let gbuf_bits = self.cfg.system.global_buffer_kb as f64 * 1024.0 * 8.0;
+        let buf = comp::buffer_bit(ch.buffer_type, tech);
+        let gacc = comp::accumulator(tech);
+        rep.global_area_um2 =
+            gbuf_bits * buf.area_um2 + self.cfg.system.accumulator_size as f64 * gacc.area_um2;
 
         // ---- pooling / activation units over the non-weight layers
         let (mut pool_elems, mut act_elems) = (0.0, 0.0);
@@ -395,9 +510,7 @@ impl<'a> CircuitEstimator<'a> {
         });
 
         // ---- leakage (area-proportional densities)
-        let adc = comp::flash_adc(ch.adc_bits, tech);
-        let adcs_total = map.total_xbars() as f64 * self.adcs_per_xbar();
-        rep.leakage_uw = adcs_total * adc.leakage_uw
+        rep.leakage_uw = adc_leakage_uw
             + rep.chiplets_area_um2 * 2.0e-3  // ~2 mW/mm² logic+SRAM density
             + rep.global_area_um2 * 2.0e-3;
         // power-gated fabric: only the running layer's share leaks
@@ -408,8 +521,6 @@ impl<'a> CircuitEstimator<'a> {
             energy_pj: rep.leakage_energy_pj,
             ..Metrics::ZERO
         });
-
-        rep
     }
 }
 

@@ -52,6 +52,75 @@ impl SiamConfig {
         self.chiplet.tiles_per_chiplet * self.chiplet.xbars_per_tile
     }
 
+    /// The chiplet classes this configuration describes, always
+    /// non-empty: the configured `[[system.chiplet_class]]` array, or —
+    /// when none is configured — one synthetic class inheriting the base
+    /// `[device]`/`[chiplet]`/`[system.nop]` blocks, with `count` taken
+    /// from the legacy `structure`/`total_chiplets` pair. Engines that
+    /// need per-chiplet parameters read this instead of branching on
+    /// the legacy fields.
+    pub fn resolved_chiplet_classes(&self) -> Vec<ChipletClassConfig> {
+        if !self.system.chiplet_classes.is_empty() {
+            return self.system.chiplet_classes.clone();
+        }
+        let mut base = ChipletClassConfig::from_base(self, "base");
+        if self.system.structure == ChipletStructure::Homogeneous {
+            base.count = self.system.total_chiplets;
+        }
+        vec![base]
+    }
+
+    /// True when the configuration is *genuinely* heterogeneous: at
+    /// least one `[[system.chiplet_class]]` whose device / geometry /
+    /// driver fields differ from the base blocks (a single class that
+    /// merely restates the base config is the degenerate identity and
+    /// runs through the classic engine paths bit-for-bit).
+    pub fn has_hetero_classes(&self) -> bool {
+        self.degenerate_class_mode().is_none() && !self.system.chiplet_classes.is_empty()
+    }
+
+    /// Detect the degenerate single-class case: exactly one configured
+    /// class whose every field (name aside) equals the base-derived
+    /// class. Returns `Some(count)` — the class's chiplet budget — so
+    /// callers can fall back to the classic custom (`None`) or
+    /// homogeneous (`Some(n)`) paths, which the degenerate class must
+    /// reproduce bit-for-bit. Returns `None` for zero or several
+    /// classes, or a single class that differs from the base.
+    pub fn degenerate_class_mode(&self) -> Option<Option<usize>> {
+        match self.system.chiplet_classes.as_slice() {
+            [only] => {
+                let mut base = ChipletClassConfig::from_base(self, &only.name);
+                base.count = only.count;
+                (*only == base).then_some(only.count)
+            }
+            _ => None,
+        }
+    }
+
+    /// The effective single-kind configuration of one chiplet class:
+    /// the base config with the class's device, crossbar geometry, ADC
+    /// and NoP driver fields substituted (and the class list cleared).
+    /// Per-class engine models — circuit costs, NoC meshes, driver
+    /// macros — are built from this.
+    pub fn class_effective(&self, class: &ChipletClassConfig) -> SiamConfig {
+        let mut cfg = self.clone();
+        cfg.device.cell = class.cell;
+        cfg.device.bits_per_cell = class.bits_per_cell;
+        cfg.chiplet.xbar_rows = class.xbar_rows;
+        cfg.chiplet.xbar_cols = class.xbar_cols;
+        cfg.chiplet.tiles_per_chiplet = class.tiles_per_chiplet;
+        cfg.chiplet.xbars_per_tile = class.xbars_per_tile;
+        cfg.chiplet.adc_bits = class.adc_bits;
+        cfg.chiplet.cols_per_adc = class.cols_per_adc;
+        cfg.chiplet.frequency_mhz = class.frequency_mhz;
+        cfg.system.nop.ebit_pj = class.nop_ebit_pj;
+        cfg.system.nop.txrx_area_um2 = class.nop_txrx_area_um2;
+        cfg.system.chiplet_classes = Vec::new();
+        cfg.system.structure = ChipletStructure::Custom;
+        cfg.system.total_chiplets = None;
+        cfg
+    }
+
     /// Clock period of the intra-chiplet logic, ns.
     pub fn clock_period_ns(&self) -> f64 {
         1.0e3 / self.chiplet.frequency_mhz
@@ -88,6 +157,22 @@ impl SiamConfig {
     /// Builder-style override: monolithic vs chiplet integration.
     pub fn with_chip_mode(mut self, mode: ChipMode) -> Self {
         self.system.chip_mode = mode;
+        self
+    }
+
+    /// Builder-style override: install heterogeneous chiplet classes
+    /// (clears the legacy `structure`/`total_chiplets` pair, which
+    /// classes supersede).
+    pub fn with_chiplet_classes(mut self, classes: Vec<ChipletClassConfig>) -> Self {
+        self.system.chiplet_classes = classes;
+        self.system.structure = ChipletStructure::Custom;
+        self.system.total_chiplets = None;
+        self
+    }
+
+    /// Builder-style override: set the chiplet placement policy.
+    pub fn with_placement(mut self, placement: PlacementPolicy) -> Self {
+        self.system.placement = placement;
         self
     }
 
@@ -196,5 +281,112 @@ mod tests {
         let mut cfg = SiamConfig::paper_default();
         cfg.chiplet.xbar_rows = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    fn big_little() -> SiamConfig {
+        let base = SiamConfig::paper_default();
+        let big = ChipletClassConfig::from_base(&base, "big");
+        let mut little = ChipletClassConfig::from_base(&base, "little");
+        little.cell = MemCell::Sram;
+        little.xbar_rows = 64;
+        little.xbar_cols = 64;
+        little.tiles_per_chiplet = 8;
+        little.xbars_per_tile = 8;
+        little.adc_bits = 3;
+        little.nop_ebit_pj = 0.3;
+        base.with_chiplet_classes(vec![big, little])
+    }
+
+    #[test]
+    fn classes_roundtrip_through_toml() {
+        let mut cfg = big_little();
+        cfg.system.placement = PlacementPolicy::Dataflow;
+        cfg.system.chiplet_classes[0].count = Some(4);
+        assert!(cfg.validate().is_ok());
+        let text = cfg.to_toml_string().unwrap();
+        let back = SiamConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.system.chiplet_classes, cfg.system.chiplet_classes);
+        assert_eq!(back.system.placement, PlacementPolicy::Dataflow);
+        // bit-exact fixed point
+        assert_eq!(back.to_toml_string().unwrap(), text);
+    }
+
+    #[test]
+    fn degenerate_single_class_detected() {
+        let base = SiamConfig::paper_default();
+        // no classes: not degenerate-class mode, not hetero
+        assert_eq!(base.degenerate_class_mode(), None);
+        assert!(!base.has_hetero_classes());
+        // one base-identical class: degenerate custom
+        let one = base
+            .clone()
+            .with_chiplet_classes(vec![ChipletClassConfig::from_base(&base, "only")]);
+        assert_eq!(one.degenerate_class_mode(), Some(None));
+        assert!(!one.has_hetero_classes());
+        // with a budget: degenerate homogeneous
+        let mut bounded = one.clone();
+        bounded.system.chiplet_classes[0].count = Some(36);
+        assert_eq!(bounded.degenerate_class_mode(), Some(Some(36)));
+        assert!(!bounded.has_hetero_classes());
+        // a field deviation makes it genuinely heterogeneous
+        let mut hetero = one.clone();
+        hetero.system.chiplet_classes[0].xbar_rows = 64;
+        assert_eq!(hetero.degenerate_class_mode(), None);
+        assert!(hetero.has_hetero_classes());
+        assert!(big_little().has_hetero_classes());
+    }
+
+    #[test]
+    fn resolved_classes_cover_legacy_modes() {
+        let custom = SiamConfig::paper_default();
+        let r = custom.resolved_chiplet_classes();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].count, None);
+        assert_eq!(r[0].xbar_rows, custom.chiplet.xbar_rows);
+        let homog = SiamConfig::paper_default().with_total_chiplets(36);
+        assert_eq!(homog.resolved_chiplet_classes()[0].count, Some(36));
+        let classes = big_little().resolved_chiplet_classes();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[1].name, "little");
+    }
+
+    #[test]
+    fn class_effective_substitutes_fields() {
+        let cfg = big_little();
+        let eff = cfg.class_effective(&cfg.system.chiplet_classes[1]);
+        assert_eq!(eff.device.cell, MemCell::Sram);
+        assert_eq!(eff.chiplet.xbar_rows, 64);
+        assert_eq!(eff.chiplet.adc_bits, 3);
+        assert_eq!(eff.system.nop.ebit_pj, 0.3);
+        assert!(eff.system.chiplet_classes.is_empty());
+        assert!(eff.validate().is_ok());
+        // untouched blocks ride along
+        assert_eq!(eff.dnn.model, cfg.dnn.model);
+        assert_eq!(eff.system.nop.channel_width, cfg.system.nop.channel_width);
+    }
+
+    #[test]
+    fn class_validation_rejects_conflicts() {
+        // classes + total_chiplets conflict
+        let mut cfg = big_little();
+        cfg.system.total_chiplets = Some(16);
+        assert!(cfg.validate().is_err());
+        // monolithic + classes conflict
+        let mut cfg = big_little();
+        cfg.system.chip_mode = ChipMode::Monolithic;
+        assert!(cfg.validate().is_err());
+        // duplicate names
+        let mut cfg = big_little();
+        cfg.system.chiplet_classes[1].name = "big".into();
+        assert!(cfg.validate().is_err());
+        // mux must divide class columns
+        let mut cfg = big_little();
+        cfg.system.chiplet_classes[1].cols_per_adc = 48;
+        assert!(cfg.validate().is_err());
+        // zero-budget class
+        let mut cfg = big_little();
+        cfg.system.chiplet_classes[0].count = Some(0);
+        assert!(cfg.validate().is_err());
+        assert!(big_little().validate().is_ok());
     }
 }

@@ -115,13 +115,30 @@ fn strip_comment(line: &str) -> &str {
 
 /// Parse `text` into flattened `section.key -> (Value, line number)`
 /// pairs; line numbers survive into unknown-key / bad-value errors.
+///
+/// Array-of-tables headers (`[[system.chiplet_class]]`) flatten to
+/// zero-padded indexed sections (`system.chiplet_class.0000.<key>`),
+/// so repeated blocks keep both their identity and their file order
+/// under the map's lexicographic iteration.
 pub fn parse_flat(text: &str) -> Result<BTreeMap<String, (Value, usize)>, String> {
     let mut out = BTreeMap::new();
     let mut section = String::new();
+    let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
     for (i, line) in text.lines().enumerate() {
         let n = i + 1;
         let line = strip_comment(line).trim();
         if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
+            let name = h.trim().to_string();
+            let idx = array_counts.entry(name.clone()).or_insert(0);
+            section = format!("{name}.{idx:04}");
+            *idx += 1;
+            // a marker entry so a block with no keys of its own (legal:
+            // every field inherits the base blocks) is still seen by
+            // the consumer instead of silently vanishing
+            out.insert(format!("{section}.__block__"), (Value::Bool(true), n));
             continue;
         }
         if let Some(h) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
@@ -195,6 +212,14 @@ fn structure(v: &Value) -> Option<ChipletStructure> {
     match v {
         Value::Str(s) if s == "homogeneous" => Some(ChipletStructure::Homogeneous),
         Value::Str(s) if s == "custom" => Some(ChipletStructure::Custom),
+        _ => None,
+    }
+}
+
+fn placement(v: &Value) -> Option<PlacementPolicy> {
+    match v {
+        Value::Str(s) if s == "rowmajor" => Some(PlacementPolicy::RowMajor),
+        Value::Str(s) if s == "dataflow" => Some(PlacementPolicy::Dataflow),
         _ => None,
     }
 }
@@ -310,6 +335,7 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
             "line {line}: bad value for system.total_chiplets"
         ))?);
     }
+    take!(m, "system.placement", cfg.system.placement, placement);
     take!(
         m,
         "system.accumulator_size",
@@ -420,6 +446,43 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
         }
     }
 
+    // ---- [[system.chiplet_class]] blocks: fields omitted in a block
+    // inherit the base [device]/[chiplet]/[system.nop] values parsed
+    // above, so a bare block is the degenerate identity class.
+    const CLASS_PREFIX: &str = "system.chiplet_class.";
+    let mut class_ids: Vec<String> = m
+        .keys()
+        .filter_map(|k| k.strip_prefix(CLASS_PREFIX))
+        .filter_map(|rest| rest.split_once('.').map(|(idx, _)| idx.to_string()))
+        .collect();
+    class_ids.sort();
+    class_ids.dedup();
+    for idx in class_ids {
+        let mut class =
+            ChipletClassConfig::from_base(&cfg, &format!("class{}", cfg.system.chiplet_classes.len()));
+        let p = |field: &str| format!("{CLASS_PREFIX}{idx}.{field}");
+        m.remove(&p("__block__"));
+        take!(m, &p("name"), class.name, string);
+        if let Some((v, line)) = m.remove(&p("count")) {
+            class.count = Some(v.as_usize().ok_or(format!(
+                "line {line}: bad value for {}",
+                p("count")
+            ))?);
+        }
+        take!(m, &p("cell"), class.cell, mem_cell);
+        take!(m, &p("bits_per_cell"), class.bits_per_cell, u8v);
+        take!(m, &p("xbar_rows"), class.xbar_rows, Value::as_usize);
+        take!(m, &p("xbar_cols"), class.xbar_cols, Value::as_usize);
+        take!(m, &p("tiles_per_chiplet"), class.tiles_per_chiplet, Value::as_usize);
+        take!(m, &p("xbars_per_tile"), class.xbars_per_tile, Value::as_usize);
+        take!(m, &p("adc_bits"), class.adc_bits, u8v);
+        take!(m, &p("cols_per_adc"), class.cols_per_adc, Value::as_usize);
+        take!(m, &p("frequency_mhz"), class.frequency_mhz, Value::as_f64);
+        take!(m, &p("nop_ebit_pj"), class.nop_ebit_pj, Value::as_f64);
+        take!(m, &p("nop_txrx_area_um2"), class.nop_txrx_area_um2, Value::as_f64);
+        cfg.system.chiplet_classes.push(class);
+    }
+
     if let Some((k, (_, line))) = m.iter().next() {
         return Err(format!("line {line}: unknown config key '{k}'"));
     }
@@ -508,6 +571,11 @@ pub fn write(cfg: &SiamConfig) -> String {
     if let Some(c) = cfg.system.total_chiplets {
         writeln!(s, "total_chiplets = {c}").unwrap();
     }
+    let placement = match cfg.system.placement {
+        PlacementPolicy::RowMajor => "rowmajor",
+        PlacementPolicy::Dataflow => "dataflow",
+    };
+    writeln!(s, "placement = \"{placement}\"").unwrap();
     writeln!(s, "accumulator_size = {}", cfg.system.accumulator_size).unwrap();
     writeln!(s, "global_buffer_kb = {}", cfg.system.global_buffer_kb).unwrap();
     writeln!(s, "\n[system.nop]").unwrap();
@@ -523,6 +591,28 @@ pub fn write(cfg: &SiamConfig) -> String {
     writeln!(s, "wire_r_ohm_per_mm = {}", cfg.system.nop.wire_r_ohm_per_mm).unwrap();
     writeln!(s, "wire_c_ff_per_mm = {}", cfg.system.nop.wire_c_ff_per_mm).unwrap();
     writeln!(s, "router_ports = {}", cfg.system.nop.router_ports).unwrap();
+    for class in &cfg.system.chiplet_classes {
+        let cell = match class.cell {
+            MemCell::Rram => "rram",
+            MemCell::Sram => "sram",
+        };
+        writeln!(s, "\n[[system.chiplet_class]]").unwrap();
+        writeln!(s, "name = \"{}\"", class.name).unwrap();
+        if let Some(c) = class.count {
+            writeln!(s, "count = {c}").unwrap();
+        }
+        writeln!(s, "cell = \"{cell}\"").unwrap();
+        writeln!(s, "bits_per_cell = {}", class.bits_per_cell).unwrap();
+        writeln!(s, "xbar_rows = {}", class.xbar_rows).unwrap();
+        writeln!(s, "xbar_cols = {}", class.xbar_cols).unwrap();
+        writeln!(s, "tiles_per_chiplet = {}", class.tiles_per_chiplet).unwrap();
+        writeln!(s, "xbars_per_tile = {}", class.xbars_per_tile).unwrap();
+        writeln!(s, "adc_bits = {}", class.adc_bits).unwrap();
+        writeln!(s, "cols_per_adc = {}", class.cols_per_adc).unwrap();
+        writeln!(s, "frequency_mhz = {}", class.frequency_mhz).unwrap();
+        writeln!(s, "nop_ebit_pj = {}", class.nop_ebit_pj).unwrap();
+        writeln!(s, "nop_txrx_area_um2 = {}", class.nop_txrx_area_um2).unwrap();
+    }
     writeln!(s, "\n[dram]").unwrap();
     writeln!(s, "kind = \"{dram}\"").unwrap();
     writeln!(s, "bus_bits = {}", cfg.dram.bus_bits).unwrap();
@@ -594,6 +684,59 @@ mod tests {
             m["serve.workloads"].0,
             Value::StrArray(vec!["a".into(), "b".into()])
         );
+    }
+
+    #[test]
+    fn array_of_tables_parses_in_order() {
+        let cfg = apply(
+            SiamConfig::default(),
+            "[chiplet]\nxbar_rows = 256\nxbar_cols = 256\n\
+             [[system.chiplet_class]]\nname = \"big\"\n\
+             [[system.chiplet_class]]\nname = \"little\"\nxbar_rows = 64\nxbar_cols = 64\ncount = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.system.chiplet_classes.len(), 2);
+        let (big, little) = (&cfg.system.chiplet_classes[0], &cfg.system.chiplet_classes[1]);
+        assert_eq!(big.name, "big");
+        // omitted fields inherit the (file-overridden) base blocks
+        assert_eq!(big.xbar_rows, 256);
+        assert_eq!(big.count, None);
+        assert_eq!(little.name, "little");
+        assert_eq!(little.xbar_rows, 64);
+        assert_eq!(little.count, Some(8));
+        assert_eq!(little.tiles_per_chiplet, cfg.chiplet.tiles_per_chiplet);
+    }
+
+    #[test]
+    fn bare_class_block_still_counts() {
+        // a block with zero keys is legal (every field inherits the
+        // base blocks) and must not vanish
+        let cfg = apply(
+            SiamConfig::default(),
+            "[[system.chiplet_class]]\n[[system.chiplet_class]]\nname = \"little\"\nxbar_rows = 64\nxbar_cols = 64\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.system.chiplet_classes.len(), 2);
+        assert_eq!(cfg.system.chiplet_classes[0].xbar_rows, cfg.chiplet.xbar_rows);
+        assert_eq!(cfg.system.chiplet_classes[0].name, "class0");
+        assert_eq!(cfg.system.chiplet_classes[1].name, "little");
+    }
+
+    #[test]
+    fn placement_key_parses() {
+        let cfg = apply(SiamConfig::default(), "[system]\nplacement = \"dataflow\"\n").unwrap();
+        assert_eq!(cfg.system.placement, PlacementPolicy::Dataflow);
+        assert!(apply(SiamConfig::default(), "[system]\nplacement = \"zigzag\"\n").is_err());
+    }
+
+    #[test]
+    fn unknown_class_key_rejected() {
+        let err = apply(
+            SiamConfig::default(),
+            "[[system.chiplet_class]]\nname = \"big\"\nxbarrows = 64\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
     }
 
     #[test]

@@ -257,16 +257,124 @@ impl Default for DramConfig {
     }
 }
 
+/// Chiplet placement policy on the interposer mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PlacementPolicy {
+    /// Row-major snake order (the paper's sequential-chain embedding;
+    /// bit-identical to every pre-heterogeneity release).
+    #[default]
+    RowMajor,
+    /// Dataflow-aware: order chiplets to minimize the weighted NoP
+    /// hop-distance of the inter-layer traffic (greedy construction +
+    /// pairwise-swap refinement; see `mapping::Placement::dataflow`).
+    Dataflow,
+}
+
+/// One heterogeneous chiplet class (`[[system.chiplet_class]]` in TOML).
+///
+/// A class bundles the device technology, crossbar geometry and NoP
+/// driver figures of one *kind* of chiplet; the class-aware packer
+/// (`mapping::map_dnn`) assigns every weight layer to the cheapest class
+/// that fits. Fields omitted in TOML inherit the base `[device]` /
+/// `[chiplet]` / `[system.nop]` values, so a bare
+/// `[[system.chiplet_class]]` block reproduces the homogeneous system.
+///
+/// The monolithic / homogeneous / custom structures are degenerate
+/// single-class cases: one class identical to the base config with
+/// `count` unset behaves exactly like `structure = "custom"`, and with
+/// `count` set like `structure = "homogeneous"` (asserted bit-for-bit
+/// by regression tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipletClassConfig {
+    /// Class name used in reports (e.g. `"big"`, `"little"`).
+    pub name: String,
+    /// Chiplets of this class the package provides; `None` = build as
+    /// many as the packer needs (the custom-structure rule per class).
+    pub count: Option<usize>,
+    /// IMC memory-cell technology of this class.
+    pub cell: MemCell,
+    /// Levels per cell as bits (1 => binary cell).
+    pub bits_per_cell: u8,
+    /// Crossbar rows of this class.
+    pub xbar_rows: usize,
+    /// Crossbar columns of this class.
+    pub xbar_cols: usize,
+    /// IMC tiles per chiplet of this class.
+    pub tiles_per_chiplet: usize,
+    /// Crossbar arrays per tile of this class.
+    pub xbars_per_tile: usize,
+    /// Flash-ADC resolution of this class, bits (smaller crossbars need
+    /// fewer bits to capture the bitline range).
+    pub adc_bits: u8,
+    /// Columns sharing one ADC in this class (must divide `xbar_cols`).
+    pub cols_per_adc: usize,
+    /// Chiplet logic & NoC clock of this class, MHz.
+    pub frequency_mhz: f64,
+    /// NoP TX/RX driver energy of this class, pJ/bit (per-class GRS
+    /// macro; hops sourced at a chiplet of this class pay this rate).
+    pub nop_ebit_pj: f64,
+    /// NoP TX/RX macro area per channel of this class, µm².
+    pub nop_txrx_area_um2: f64,
+}
+
+impl ChipletClassConfig {
+    /// A class inheriting every field from the base `[device]` /
+    /// `[chiplet]` / `[system.nop]` blocks of `cfg` (the degenerate
+    /// single-class identity).
+    pub fn from_base(cfg: &SiamConfig, name: &str) -> ChipletClassConfig {
+        ChipletClassConfig {
+            name: name.to_string(),
+            count: None,
+            cell: cfg.device.cell,
+            bits_per_cell: cfg.device.bits_per_cell,
+            xbar_rows: cfg.chiplet.xbar_rows,
+            xbar_cols: cfg.chiplet.xbar_cols,
+            tiles_per_chiplet: cfg.chiplet.tiles_per_chiplet,
+            xbars_per_tile: cfg.chiplet.xbars_per_tile,
+            adc_bits: cfg.chiplet.adc_bits,
+            cols_per_adc: cfg.chiplet.cols_per_adc,
+            frequency_mhz: cfg.chiplet.frequency_mhz,
+            nop_ebit_pj: cfg.system.nop.ebit_pj,
+            nop_txrx_area_um2: cfg.system.nop.txrx_area_um2,
+        }
+    }
+
+    /// Crossbars one chiplet of this class holds.
+    pub fn capacity_xbars(&self) -> usize {
+        self.tiles_per_chiplet * self.xbars_per_tile
+    }
+
+    /// Clock period of this class's chiplet logic, ns.
+    pub fn clock_period_ns(&self) -> f64 {
+        1.0e3 / self.frequency_mhz
+    }
+
+    /// The base NoP block with this class's driver figures substituted
+    /// (wire/protocol parameters stay package-wide).
+    pub fn nop_effective(&self, base: &NopConfig) -> NopConfig {
+        let mut nop = base.clone();
+        nop.ebit_pj = self.nop_ebit_pj;
+        nop.txrx_area_um2 = self.nop_txrx_area_um2;
+        nop
+    }
+}
+
 /// Inter-chiplet architecture block of Table 2.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
     /// Monolithic die or chiplet system.
     pub chip_mode: ChipMode,
-    /// Chiplet allocation policy (custom vs homogeneous).
+    /// Chiplet allocation policy (custom vs homogeneous). Superseded by
+    /// `chiplet_classes` when any class is configured.
     pub structure: ChipletStructure,
     /// Homogeneous mode: fixed chiplet count (must be a perfect square for
     /// the mesh placement). Ignored by custom mode.
     pub total_chiplets: Option<usize>,
+    /// Heterogeneous chiplet classes (`[[system.chiplet_class]]`).
+    /// Empty = the classic single-kind system described by `structure`.
+    pub chiplet_classes: Vec<ChipletClassConfig>,
+    /// Chiplet placement policy on the interposer mesh.
+    pub placement: PlacementPolicy,
     /// Global accumulator width, elements accumulated per cycle.
     pub accumulator_size: usize,
     /// Global buffer capacity, kB.
@@ -281,6 +389,8 @@ impl Default for SystemConfig {
             chip_mode: ChipMode::Chiplet,
             structure: ChipletStructure::Custom,
             total_chiplets: None,
+            chiplet_classes: Vec::new(),
+            placement: PlacementPolicy::default(),
             accumulator_size: 64,
             global_buffer_kb: 256,
             nop: NopConfig::default(),

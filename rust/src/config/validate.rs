@@ -103,6 +103,73 @@ impl SiamConfig {
                 return err("total_chiplets must be >= 1".into());
             }
         }
+        if !self.system.chiplet_classes.is_empty() {
+            if self.system.chip_mode == ChipMode::Monolithic {
+                return err("monolithic chip mode cannot use chiplet classes".into());
+            }
+            if self.system.structure == ChipletStructure::Homogeneous
+                || self.system.total_chiplets.is_some()
+            {
+                return err(
+                    "chiplet classes supersede structure/total_chiplets; \
+                     remove those keys (per-class budgets go in count)"
+                        .into(),
+                );
+            }
+            let mut names = std::collections::BTreeSet::new();
+            for class in &self.system.chiplet_classes {
+                let c = &class.name;
+                if c.is_empty() {
+                    return err("chiplet class names must be non-empty".into());
+                }
+                if !names.insert(c) {
+                    return err(format!("duplicate chiplet class name '{c}'"));
+                }
+                if class.count == Some(0) {
+                    return err(format!("chiplet class '{c}' count must be >= 1"));
+                }
+                if class.xbar_rows == 0 || class.xbar_cols == 0 {
+                    return err(format!("chiplet class '{c}' crossbar dims must be non-zero"));
+                }
+                if !class.xbar_rows.is_power_of_two() || !class.xbar_cols.is_power_of_two() {
+                    return err(format!(
+                        "chiplet class '{c}' crossbar dims must be powers of two, got {}x{}",
+                        class.xbar_rows, class.xbar_cols
+                    ));
+                }
+                if class.tiles_per_chiplet == 0 || class.xbars_per_tile == 0 {
+                    return err(format!(
+                        "chiplet class '{c}' must contain at least one tile and one crossbar"
+                    ));
+                }
+                if class.adc_bits == 0 || class.adc_bits > 12 {
+                    return err(format!(
+                        "chiplet class '{c}' ADC resolution {} out of supported range 1..=12",
+                        class.adc_bits
+                    ));
+                }
+                if class.cols_per_adc == 0 || class.xbar_cols % class.cols_per_adc != 0 {
+                    return err(format!(
+                        "chiplet class '{c}' cols_per_adc {} must divide crossbar columns {}",
+                        class.cols_per_adc, class.xbar_cols
+                    ));
+                }
+                if class.bits_per_cell == 0 || class.bits_per_cell > 4 {
+                    return err(format!(
+                        "chiplet class '{c}' bits per cell {} out of supported range 1..=4",
+                        class.bits_per_cell
+                    ));
+                }
+                if class.frequency_mhz <= 0.0 {
+                    return err(format!("chiplet class '{c}' frequency must be positive"));
+                }
+                if class.nop_ebit_pj <= 0.0 || class.nop_txrx_area_um2 <= 0.0 {
+                    return err(format!(
+                        "chiplet class '{c}' NoP driver figures must be positive"
+                    ));
+                }
+            }
+        }
         if self.system.accumulator_size == 0 {
             return err("accumulator size must be >= 1".into());
         }

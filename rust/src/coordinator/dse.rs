@@ -32,6 +32,15 @@ pub struct SweepPoint {
     pub tiles_per_chiplet: usize,
     /// None = custom structure (exactly-fitting chiplet count).
     pub total_chiplets: Option<usize>,
+    /// Per-class chiplet budgets applied at this point (the
+    /// [`SweepBuilder::class_splits`] axis; entries parallel the base
+    /// config's class list, `None` = as many as needed). `None` when
+    /// the axis is unused.
+    pub class_split: Option<Vec<Option<usize>>>,
+    /// Per-class square crossbar sizes applied at this point (the
+    /// [`SweepBuilder::class_xbars`] axis). `None` when the axis is
+    /// unused.
+    pub class_xbars: Option<Vec<usize>>,
     /// The full simulation report of the point.
     pub report: SimReport,
     /// Serving run under the QoS target load (populated only by
@@ -196,10 +205,21 @@ pub struct SweepBuilder {
     base: SiamConfig,
     tiles: Vec<usize>,
     counts: Vec<Option<usize>>,
+    class_splits: Vec<Vec<Option<usize>>>,
+    class_xbars: Vec<Vec<usize>>,
     fom: FigureOfMerit,
     threads: Option<usize>,
     budget: Option<usize>,
     qos_qps: Option<f64>,
+}
+
+/// One coordinate of the sweep grid.
+#[derive(Debug, Clone)]
+struct GridPoint {
+    tiles: usize,
+    count: Option<usize>,
+    split: Option<Vec<Option<usize>>>,
+    xbars: Option<Vec<usize>>,
 }
 
 impl SweepBuilder {
@@ -211,6 +231,8 @@ impl SweepBuilder {
             base: base.clone(),
             tiles: vec![4, 9, 16, 25, 36],
             counts: vec![None],
+            class_splits: Vec::new(),
+            class_xbars: Vec::new(),
             fom: FigureOfMerit::default(),
             threads: None,
             budget: None,
@@ -228,6 +250,25 @@ impl SweepBuilder {
     /// the custom (exactly-fitting) architecture.
     pub fn chiplet_counts(mut self, counts: &[Option<usize>]) -> SweepBuilder {
         self.counts = counts.to_vec();
+        self
+    }
+
+    /// Heterogeneous axis: per-class chiplet budgets. Each entry is one
+    /// grid coordinate — a vector parallel to the base config's
+    /// `[[system.chiplet_class]]` list assigning every class a budget
+    /// (`None` = as many as needed). Requires classes on the base
+    /// config; combine with `chiplet_counts(&[None])`, since the legacy
+    /// total-count axis is superseded by classes.
+    pub fn class_splits(mut self, splits: &[Vec<Option<usize>>]) -> SweepBuilder {
+        self.class_splits = splits.to_vec();
+        self
+    }
+
+    /// Heterogeneous axis: per-class square crossbar sizes. Each entry
+    /// assigns every base class an `n` meaning an `n × n` crossbar.
+    /// Requires classes on the base config.
+    pub fn class_xbars(mut self, xbars: &[Vec<usize>]) -> SweepBuilder {
+        self.class_xbars = xbars.to_vec();
         self
     }
 
@@ -274,14 +315,36 @@ impl SweepBuilder {
         self
     }
 
-    /// The grid in deterministic order: tiles-major, counts-minor,
-    /// truncated to the budget.
-    fn grid(&self) -> Vec<(usize, Option<usize>)> {
-        let mut g: Vec<(usize, Option<usize>)> = self
-            .tiles
-            .iter()
-            .flat_map(|&t| self.counts.iter().map(move |&c| (t, c)))
-            .collect();
+    /// The grid in deterministic order — tiles-major, then counts, then
+    /// class splits, then class crossbar sizes — truncated to the
+    /// budget. Unused class axes contribute a single pass-through
+    /// coordinate.
+    fn grid(&self) -> Vec<GridPoint> {
+        let splits: Vec<Option<Vec<Option<usize>>>> = if self.class_splits.is_empty() {
+            vec![None]
+        } else {
+            self.class_splits.iter().cloned().map(Some).collect()
+        };
+        let xbars: Vec<Option<Vec<usize>>> = if self.class_xbars.is_empty() {
+            vec![None]
+        } else {
+            self.class_xbars.iter().cloned().map(Some).collect()
+        };
+        let mut g = Vec::new();
+        for &t in &self.tiles {
+            for &c in &self.counts {
+                for s in &splits {
+                    for x in &xbars {
+                        g.push(GridPoint {
+                            tiles: t,
+                            count: c,
+                            split: s.clone(),
+                            xbars: x.clone(),
+                        });
+                    }
+                }
+            }
+        }
         if let Some(b) = self.budget {
             g.truncate(b);
         }
@@ -305,6 +368,32 @@ impl SweepBuilder {
                 );
             }
         }
+        let nclass = self.base.system.chiplet_classes.len();
+        if !self.class_splits.is_empty() || !self.class_xbars.is_empty() {
+            if nclass == 0 {
+                anyhow::bail!(
+                    "class_splits/class_xbars need [[system.chiplet_class]] blocks on the base config"
+                );
+            }
+            if self.counts.iter().any(|c| c.is_some()) {
+                anyhow::bail!(
+                    "chiplet classes supersede the total-count axis; \
+                     use chiplet_counts(&[None]) with class_splits"
+                );
+            }
+            if let Some(bad) = self.class_splits.iter().find(|s| s.len() != nclass) {
+                anyhow::bail!(
+                    "class split {bad:?} has {} entries but the base config has {nclass} classes",
+                    bad.len()
+                );
+            }
+            if let Some(bad) = self.class_xbars.iter().find(|x| x.len() != nclass) {
+                anyhow::bail!(
+                    "class crossbar set {bad:?} has {} entries but the base config has {nclass} classes",
+                    bad.len()
+                );
+            }
+        }
         let grid = self.grid();
         let ctx = SweepContext::new(&self.base)?;
         let threads = self
@@ -314,8 +403,8 @@ impl SweepBuilder {
 
         if threads <= 1 {
             let mut points = Vec::with_capacity(grid.len());
-            for &(tiles, count) in &grid {
-                if let Some(p) = eval_point(&self.base, &ctx, tiles, count, self.qos_qps)? {
+            for gp in &grid {
+                if let Some(p) = eval_point(&self.base, &ctx, gp, self.qos_qps)? {
                     points.push(p);
                 }
             }
@@ -340,8 +429,7 @@ impl SweepBuilder {
                     if i >= grid.len() {
                         break;
                     }
-                    let (tiles, count) = grid[i];
-                    let r = eval_point(&self.base, &ctx, tiles, count, self.qos_qps);
+                    let r = eval_point(&self.base, &ctx, &grid[i], self.qos_qps);
                     *slots[i].lock().unwrap() = Some(r);
                 });
             }
@@ -382,25 +470,36 @@ fn default_threads() -> usize {
 }
 
 /// Evaluate one grid point; `Ok(None)` means the point is skipped
-/// because the homogeneous architecture cannot fit the DNN. With a QoS
-/// target the point is evaluated once through the serving stage-graph
-/// builder — which yields both the single-shot report and the stage
-/// service times (replaying epochs through the shared cache) — and the
-/// serving run is attached.
+/// because the architecture cannot fit the DNN (homogeneous overflow or
+/// an infeasible class split). With a QoS target the point is evaluated
+/// once through the serving stage-graph builder — which yields both the
+/// single-shot report and the stage service times (replaying epochs
+/// through the shared cache) — and the serving run is attached.
 fn eval_point(
     base: &SiamConfig,
     ctx: &SweepContext,
-    tiles: usize,
-    count: Option<usize>,
+    gp: &GridPoint,
     qos_qps: Option<f64>,
 ) -> Result<Option<SweepPoint>> {
-    let cfg = match count {
+    let (tiles, count) = (gp.tiles, gp.count);
+    let mut cfg = match count {
         Some(c) => base.clone().with_tiles_per_chiplet(tiles).with_total_chiplets(c),
         None => base
             .clone()
             .with_tiles_per_chiplet(tiles)
             .with_chiplet_structure(ChipletStructure::Custom),
     };
+    if let Some(split) = &gp.split {
+        for (class, budget) in cfg.system.chiplet_classes.iter_mut().zip(split) {
+            class.count = *budget;
+        }
+    }
+    if let Some(xbars) = &gp.xbars {
+        for (class, &n) in cfg.system.chiplet_classes.iter_mut().zip(xbars) {
+            class.xbar_rows = n;
+            class.xbar_cols = n;
+        }
+    }
     let outcome = match qos_qps {
         None => run_point(&cfg, ctx, false).map(|report| (report, None)),
         Some(qps) => {
@@ -417,6 +516,8 @@ fn eval_point(
         Ok((report, serve)) => Ok(Some(SweepPoint {
             tiles_per_chiplet: tiles,
             total_chiplets: count,
+            class_split: gp.split.clone(),
+            class_xbars: gp.xbars.clone(),
             report,
             serve,
         })),
@@ -624,6 +725,67 @@ mod tests {
             assert_eq!(a.completed, b.completed);
             assert_eq!(a.dropped, b.dropped);
         }
+    }
+
+    fn big_little_base() -> SiamConfig {
+        use crate::config::{ChipletClassConfig, MemCell};
+        let base = SiamConfig::paper_default();
+        let big = ChipletClassConfig::from_base(&base, "big");
+        let mut little = ChipletClassConfig::from_base(&base, "little");
+        little.cell = MemCell::Sram;
+        little.xbar_rows = 64;
+        little.xbar_cols = 64;
+        little.adc_bits = 3;
+        little.nop_ebit_pj = 0.3;
+        base.with_chiplet_classes(vec![big, little])
+    }
+
+    #[test]
+    fn class_axis_sweep_parallel_matches_serial_bitwise() {
+        // the new heterogeneous axes must keep the engine's headline
+        // property: bit-identical results at any thread count
+        let builder = SweepBuilder::new(&big_little_base())
+            .tiles(&[16])
+            .chiplet_counts(&[None])
+            .class_splits(&[
+                vec![None, None],
+                vec![None, Some(2)],
+                vec![Some(4), Some(2)],
+            ])
+            .class_xbars(&[vec![128, 64], vec![128, 32]]);
+        let serial = builder.clone().serial().run().unwrap();
+        let parallel = builder.run().unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        assert!(!serial.is_empty(), "class grid must produce points");
+        for (s, p) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!(s.class_split, p.class_split);
+            assert_eq!(s.class_xbars, p.class_xbars);
+            assert_reports_identical(&s.report, &p.report);
+        }
+        // the class coordinates ride into the points
+        assert!(serial.points.iter().all(|p| p.class_split.is_some()
+            && p.class_xbars.is_some()
+            && p.report.chiplets_per_class.len() == 2));
+    }
+
+    #[test]
+    fn class_axes_validated_up_front() {
+        // class axes without classes on the base config
+        let err = SweepBuilder::new(&SiamConfig::paper_default())
+            .class_splits(&[vec![None]])
+            .run();
+        assert!(err.is_err());
+        // length mismatch against the base class list
+        let err = SweepBuilder::new(&big_little_base())
+            .class_splits(&[vec![None]])
+            .run();
+        assert!(err.is_err());
+        // the superseded total-count axis cannot combine with splits
+        let err = SweepBuilder::new(&big_little_base())
+            .chiplet_counts(&[Some(36)])
+            .class_splits(&[vec![None, None]])
+            .run();
+        assert!(err.is_err());
     }
 
     #[test]

@@ -28,11 +28,11 @@
 //! a context is shared across a sweep or built fresh per call.
 
 use crate::circuit::{CircuitEstimator, CircuitReport, LayerCostCache};
-use crate::config::SiamConfig;
+use crate::config::{ChipMode, PlacementPolicy, SiamConfig};
 use crate::coordinator::report::SimReport;
 use crate::dnn::{build_model, Dnn, DnnStats};
 use crate::dram::DramReport;
-use crate::mapping::{build_traffic, map_dnn, MappingResult, Placement, Traffic};
+use crate::mapping::{build_traffic, map_dnn, MappingResult, Placement, Traffic, TrafficMatrix};
 use crate::noc::{EpochCache, NocReport};
 use crate::nop::NopReport;
 use anyhow::{Context, Result};
@@ -132,15 +132,25 @@ pub(crate) fn stage_dnn(cfg: &SiamConfig, ctx: &SweepContext) -> Result<Arc<Dnn>
     }
 }
 
-/// Stage 2 (always per point): partition & mapping (Algorithm 1),
-/// interposer placement, and Algorithm-2 traffic generation.
+/// Stage 2 (always per point): partition & mapping (Algorithm 1 or the
+/// class-aware packer), interposer placement, and Algorithm-2 traffic
+/// generation. With `placement = "dataflow"` the row-major placement
+/// used to generate traffic is then re-embedded against the actual
+/// inter-chiplet flow weights — node ids are stable across embeddings,
+/// so the traffic stays valid and only NoP distances change.
 pub(crate) fn stage_mapping(
     cfg: &SiamConfig,
     dnn: &Dnn,
 ) -> Result<(MappingResult, Placement, Traffic)> {
     let map = map_dnn(dnn, cfg).context("partition & mapping")?;
-    let placement = Placement::new(map.num_chiplets);
+    let mut placement = Placement::new(map.num_chiplets);
     let traffic = build_traffic(dnn, &map, &placement, cfg);
+    if cfg.system.placement == PlacementPolicy::Dataflow
+        && cfg.system.chip_mode == ChipMode::Chiplet
+    {
+        let weights = TrafficMatrix::from_nop_traffic(&traffic, placement.nodes());
+        placement = Placement::dataflow(map.num_chiplets, &weights);
+    }
     Ok((map, placement, traffic))
 }
 
@@ -157,25 +167,28 @@ pub(crate) fn stage_circuit(
 }
 
 /// Stage 3b: intra-chiplet NoC simulation — the flow-level epoch engine
-/// ([`crate::noc::FlowSim`]) through the shared sharded epoch cache.
+/// ([`crate::noc::FlowSim`]) through the shared sharded epoch cache,
+/// class-aware (each chiplet's epochs run on its class's mesh/clock).
 pub(crate) fn stage_noc(
     cfg: &SiamConfig,
     ctx: &SweepContext,
     traffic: &Traffic,
-    num_chiplets: usize,
+    map: &MappingResult,
 ) -> NocReport {
-    crate::noc::evaluate_cached(cfg, traffic, num_chiplets, Some(&ctx.epoch_cache))
+    crate::noc::evaluate_mapped(cfg, traffic, map, Some(&ctx.epoch_cache))
 }
 
 /// Stage 3c: inter-chiplet NoP simulation — the flow-level epoch engine
-/// over the interposer mesh, through the shared sharded epoch cache.
+/// over the interposer mesh, through the shared sharded epoch cache,
+/// with per-class TX/RX driver macros.
 pub(crate) fn stage_nop(
     cfg: &SiamConfig,
     ctx: &SweepContext,
     traffic: &Traffic,
     placement: &Placement,
+    map: &MappingResult,
 ) -> NopReport {
-    crate::nop::evaluate_cached(cfg, traffic, placement, Some(&ctx.epoch_cache))
+    crate::nop::evaluate_mapped(cfg, traffic, placement, map, Some(&ctx.epoch_cache))
 }
 
 /// Stage 3d: DRAM weight-load estimation, memoized on (model bytes,
@@ -217,8 +230,8 @@ pub fn run_point(
     let (circuit, noc, nop, dram) = if concurrent_engines {
         std::thread::scope(|s| {
             let circuit = s.spawn(|| stage_circuit(cfg, ctx, &dnn, &map, &traffic));
-            let noc = s.spawn(|| stage_noc(cfg, ctx, &traffic, map.num_chiplets));
-            let nop = s.spawn(|| stage_nop(cfg, ctx, &traffic, &placement));
+            let noc = s.spawn(|| stage_noc(cfg, ctx, &traffic, &map));
+            let nop = s.spawn(|| stage_nop(cfg, ctx, &traffic, &placement, &map));
             let dram = s.spawn(|| stage_dram(cfg, ctx, &stats));
             (
                 circuit.join().expect("circuit engine"),
@@ -230,8 +243,8 @@ pub fn run_point(
     } else {
         (
             stage_circuit(cfg, ctx, &dnn, &map, &traffic),
-            stage_noc(cfg, ctx, &traffic, map.num_chiplets),
-            stage_nop(cfg, ctx, &traffic, &placement),
+            stage_noc(cfg, ctx, &traffic, &map),
+            stage_nop(cfg, ctx, &traffic, &placement, &map),
             stage_dram(cfg, ctx, &stats),
         )
     };
@@ -313,5 +326,79 @@ pub(crate) mod tests {
         let other = SiamConfig::paper_default().with_model("lenet5", "cifar10");
         let rep = run_point(&other, &ctx, false).unwrap();
         assert_eq!(rep.model, "lenet5");
+    }
+
+    use crate::config::{ChipletClassConfig, MemCell};
+
+    #[test]
+    fn degenerate_single_class_reproduces_reports_bitwise() {
+        // the acceptance regression: a single [[system.chiplet_class]]
+        // restating the base config must reproduce the classic custom
+        // and homogeneous results bit-for-bit, end to end
+        let base = SiamConfig::paper_default();
+        for legacy_cfg in [base.clone(), base.clone().with_total_chiplets(36)] {
+            let ctx = SweepContext::new(&legacy_cfg).unwrap();
+            let legacy = run_point(&legacy_cfg, &ctx, false).unwrap();
+            let mut only = ChipletClassConfig::from_base(&base, "only");
+            only.count = legacy_cfg.system.total_chiplets;
+            let class_cfg = base.clone().with_chiplet_classes(vec![only]);
+            let class_ctx = SweepContext::new(&class_cfg).unwrap();
+            let class = run_point(&class_cfg, &class_ctx, false).unwrap();
+            assert_reports_identical(&legacy, &class);
+        }
+    }
+
+    fn big_little_cfg() -> SiamConfig {
+        let base = SiamConfig::paper_default();
+        let big = ChipletClassConfig::from_base(&base, "big");
+        let mut little = ChipletClassConfig::from_base(&base, "little");
+        little.cell = MemCell::Sram;
+        little.xbar_rows = 64;
+        little.xbar_cols = 64;
+        little.tiles_per_chiplet = 8;
+        little.xbars_per_tile = 8;
+        little.adc_bits = 3;
+        little.nop_ebit_pj = 0.3;
+        little.nop_txrx_area_um2 = 3000.0;
+        base.with_chiplet_classes(vec![big, little])
+    }
+
+    #[test]
+    fn hetero_point_simulates_and_reports_classes() {
+        let cfg = big_little_cfg();
+        let ctx = SweepContext::new(&cfg).unwrap();
+        let rep = run_point(&cfg, &ctx, false).unwrap();
+        assert_eq!(rep.chiplets_per_class.len(), 2);
+        assert!(rep.chiplets_per_class.iter().all(|&(_, c)| c > 0));
+        assert!(rep.total.energy_pj > 0.0 && rep.total.latency_ns > 0.0);
+        assert!(rep.nop.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn dataflow_and_rowmajor_share_context_without_aliasing() {
+        // both placement policies against ONE shared epoch cache: the
+        // mesh embedding tag keeps their NoP epochs from aliasing, so
+        // each must match a fresh-context run of itself bit-for-bit
+        let mut rowmajor_cfg = big_little_cfg();
+        rowmajor_cfg.system.placement = crate::config::PlacementPolicy::RowMajor;
+        let mut dataflow_cfg = big_little_cfg();
+        dataflow_cfg.system.placement = crate::config::PlacementPolicy::Dataflow;
+
+        let shared = SweepContext::new(&rowmajor_cfg).unwrap();
+        let rm_warm = run_point(&rowmajor_cfg, &shared, false).unwrap();
+        let df_warm = run_point(&dataflow_cfg, &shared, false).unwrap();
+
+        let rm_cold = run_point(&rowmajor_cfg, &SweepContext::new(&rowmajor_cfg).unwrap(), false)
+            .unwrap();
+        let df_cold = run_point(&dataflow_cfg, &SweepContext::new(&dataflow_cfg).unwrap(), false)
+            .unwrap();
+        assert_reports_identical(&rm_warm, &rm_cold);
+        assert_reports_identical(&df_warm, &df_cold);
+        // placement moves distances, never silicon: areas agree exactly
+        assert_eq!(
+            df_warm.nop.area_um2.to_bits(),
+            rm_warm.nop.area_um2.to_bits(),
+            "placement must not change NoP area"
+        );
     }
 }

@@ -15,6 +15,22 @@ use crate::nop::NopReport;
 use crate::util::json::Json;
 use crate::util::table::eng;
 
+/// Serialize a `(class name, chiplet count)` split as the JSON array
+/// used by [`SimReport::to_json`], [`ServeReport::to_json`] and the
+/// `siam sweep --json` output.
+pub fn classes_json(classes: &[(String, usize)]) -> Json {
+    Json::Arr(
+        classes
+            .iter()
+            .map(|(name, chiplets)| {
+                let mut e = Json::obj();
+                e.set("name", name.as_str()).set("chiplets", *chiplets);
+                e
+            })
+            .collect(),
+    )
+}
+
 /// Complete output of one SIAM run.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -30,6 +46,9 @@ pub struct SimReport {
     pub num_chiplets: usize,
     /// Chiplets the DNN actually occupies.
     pub num_chiplets_required: usize,
+    /// Heterogeneous class split as `(class name, chiplets)` in class
+    /// order; empty for single-kind systems.
+    pub chiplets_per_class: Vec<(String, usize)>,
     /// IMC tiles the mapping uses.
     pub total_tiles: usize,
     /// Crossbar-level utilization (Fig. 9 metric).
@@ -82,6 +101,29 @@ impl SimReport {
     ) -> SimReport {
         let stats = dnn.stats();
         let c = circuit.total_metrics();
+        let (chiplets_per_class, total_tiles) = if cfg.has_hetero_classes() {
+            let classes = cfg.resolved_chiplet_classes();
+            let mut counts = vec![0usize; classes.len()];
+            for &k in &map.chiplet_class {
+                counts[k] += 1;
+            }
+            // tiles follow the owning class's geometry, per layer
+            let tiles = map
+                .per_layer
+                .iter()
+                .map(|lm| lm.xbars.div_ceil(classes[lm.class].xbars_per_tile))
+                .sum();
+            (
+                classes
+                    .iter()
+                    .zip(counts)
+                    .map(|(cl, n)| (cl.name.clone(), n))
+                    .collect(),
+                tiles,
+            )
+        } else {
+            (Vec::new(), map.total_tiles(cfg.chiplet.xbars_per_tile))
+        };
         // Layer-by-layer dataflow: compute, NoC and NoP phases serialize.
         // Circuit energy already contains the power-gated fabric leakage;
         // the interconnect's own leakage accrues over its active window.
@@ -102,7 +144,8 @@ impl SimReport {
             macs: stats.macs,
             num_chiplets: map.num_chiplets,
             num_chiplets_required: map.num_chiplets_required,
-            total_tiles: map.total_tiles(cfg.chiplet.xbars_per_tile),
+            chiplets_per_class,
+            total_tiles,
             xbar_utilization: map.xbar_utilization(),
             cell_utilization: map.cell_utilization(),
             inter_chiplet_bits: traffic.inter_chiplet_bits,
@@ -142,8 +185,18 @@ impl SimReport {
     /// One-paragraph human-readable summary of the headline metrics.
     pub fn summary(&self) -> String {
         let t = &self.total;
+        let classes = if self.chiplets_per_class.is_empty() {
+            String::new()
+        } else {
+            let parts: Vec<String> = self
+                .chiplets_per_class
+                .iter()
+                .map(|(n, c)| format!("{n}\u{00d7}{c}"))
+                .collect();
+            format!(" [{}]", parts.join(" + "))
+        };
         format!(
-            "{model} on {ds}: {params:.2}M params, {chiplets} chiplets ({req} used), \
+            "{model} on {ds}: {params:.2}M params, {chiplets} chiplets{classes} ({req} used), \
              {tiles} tiles, util {util:.1}%\n\
              area {area} mm² | energy {energy} µJ | latency {lat} ms | \
              power {pw} mW | EDAP {edap:.3e} pJ·ns·mm²\n\
@@ -212,6 +265,9 @@ impl SimReport {
             .set("requests", self.dram.requests)
             .set("row_hit_rate", self.dram.row_hit_rate);
         o.set("dram", d);
+        if !self.chiplets_per_class.is_empty() {
+            o.set("classes", classes_json(&self.chiplets_per_class));
+        }
         o
     }
 }
@@ -235,6 +291,10 @@ pub struct ServeReport {
     pub num_stages: usize,
     /// Chiplets the architecture contains.
     pub num_chiplets: usize,
+    /// Heterogeneous class split as `(class name, chiplets)`; empty for
+    /// single-kind systems. Stage service times already reflect the
+    /// owning class (its circuit costs, mesh and clock).
+    pub classes: Vec<(String, usize)>,
     /// Index of the bottleneck (slowest) stage.
     pub bottleneck_stage: usize,
     /// Service time of the bottleneck stage, ns.
@@ -360,6 +420,7 @@ impl ServeReport {
             .set("concurrency", self.concurrency)
             .set("num_stages", self.num_stages)
             .set("num_chiplets", self.num_chiplets)
+            .set("classes", classes_json(&self.classes))
             .set("bottleneck_stage", self.bottleneck_stage)
             .set("bottleneck_service_ns", self.bottleneck_service_ns)
             .set("bottleneck_qps", self.bottleneck_qps)

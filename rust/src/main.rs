@@ -2,10 +2,10 @@
 //!
 //! ```text
 //! siam simulate  [--config F] [--model M --dataset D] [--tiles N]
-//!                [--chiplets N] [--monolithic] [--json PATH]
+//!                [--chiplets N] [--monolithic] [--placement P] [--json PATH]
 //! siam sweep     [--config F] [--model M --dataset D]
 //!                [--tiles 4,9,16,25,36] [--counts 16,36,64,100]
-//!                [--json PATH]
+//!                [--placement rowmajor|dataflow] [--json PATH]
 //! siam serve     [--config F] [--mode open|closed] [--rate QPS]
 //!                [--concurrency N] [--requests N] [--queue N]
 //!                [--seed S] [--quick] [--json PATH]
@@ -17,7 +17,7 @@
 //! Argument parsing is in-tree (the offline build vendors no clap).
 
 use anyhow::{bail, Context, Result};
-use siam::config::{ChipMode, ServeMode, SiamConfig};
+use siam::config::{ChipMode, PlacementPolicy, ServeMode, SiamConfig};
 use siam::coordinator::{self, simulate, SweepBuilder};
 use siam::util::json::Json;
 use siam::util::table::{eng, Table};
@@ -67,6 +67,13 @@ fn build_config(flags: &HashMap<String, String>) -> Result<SiamConfig> {
     }
     if flags.contains_key("monolithic") {
         cfg.system.chip_mode = ChipMode::Monolithic;
+    }
+    if let Some(p) = flags.get("placement") {
+        cfg.system.placement = match p.as_str() {
+            "rowmajor" => PlacementPolicy::RowMajor,
+            "dataflow" => PlacementPolicy::Dataflow,
+            other => bail!("--placement must be rowmajor|dataflow, got '{other}'"),
+        };
     }
     cfg.validate()?;
     Ok(cfg)
@@ -152,6 +159,26 @@ fn sweep_json(cfg: &SiamConfig, res: &coordinator::SweepResult) -> Json {
             .set("energy_uj", p.report.total.energy_uj())
             .set("latency_ms", p.report.total.latency_ms())
             .set("edap", p.report.total.edap());
+        if !p.report.chiplets_per_class.is_empty() {
+            o.set(
+                "classes",
+                coordinator::report::classes_json(&p.report.chiplets_per_class),
+            );
+        }
+        if let Some(split) = &p.class_split {
+            o.set(
+                "class_split",
+                Json::Arr(
+                    split
+                        .iter()
+                        .map(|c| c.map(Json::from).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            );
+        }
+        if let Some(xb) = &p.class_xbars {
+            o.set("class_xbars", Json::Arr(xb.iter().map(|&x| Json::from(x)).collect()));
+        }
         points.push(o);
     }
     let mut stats = Json::obj();
@@ -310,9 +337,10 @@ fn cmd_models() -> Result<()> {
 
 const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config> [flags]
   simulate   --model resnet110 --dataset cifar10 [--tiles 16] [--chiplets 36]
-             [--monolithic] [--config file.toml] [--json out.json]
+             [--monolithic] [--placement rowmajor|dataflow]
+             [--config file.toml] [--json out.json]
   sweep      --model resnet110 --dataset cifar10 [--tiles 4,9,16] [--counts 36,64]
-             [--json out.json]
+             [--placement rowmajor|dataflow] [--json out.json]
   serve      [--mode open|closed] [--rate 2000] [--concurrency 4]
              [--requests 1024] [--queue 4] [--seed 42] [--quick]
              [--config file.toml] [--json out.json]

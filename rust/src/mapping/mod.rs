@@ -1,17 +1,19 @@
 //! Partition & mapping engine (Section 4.2 of the paper).
 //!
 //! Implements Eq. 1 (layer → crossbar rows/columns), Algorithm 1
-//! (layer-wise partitioning onto chiplets, homogeneous and custom), the
-//! crossbar/cell utilization accounting of Fig. 9, the inter-/intra-
-//! chiplet traffic volumes, and the global accumulator/buffer access
-//! counts that feed the circuit, NoC and NoP engines.
+//! (layer-wise partitioning onto chiplets — homogeneous, custom and
+//! heterogeneous chiplet classes), the crossbar/cell utilization
+//! accounting of Fig. 9, interposer placement (row-major snake or
+//! dataflow-optimized), the inter-/intra-chiplet traffic volumes, and
+//! the global accumulator/buffer access counts that feed the circuit,
+//! NoC and NoP engines.
 
 mod partition;
 mod placement;
 mod traffic;
 
-pub use partition::{map_dnn, ChipletShare, LayerMapping, MappingError, MappingResult};
-pub use placement::Placement;
+pub use partition::{eq1_rows_cols, map_dnn, ChipletShare, LayerMapping, MappingError, MappingResult};
+pub use placement::{weighted_hop_cost, Placement, TrafficMatrix};
 pub use traffic::{build_traffic, canonicalize_flows, Flow, Traffic};
 
 #[cfg(test)]

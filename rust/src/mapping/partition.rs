@@ -1,4 +1,8 @@
-//! Algorithm 1: layer-wise partition of a DNN onto IMC chiplets.
+//! Algorithm 1: layer-wise partition of a DNN onto IMC chiplets —
+//! classic single-kind systems (monolithic / homogeneous / custom) and
+//! heterogeneous chiplet classes (`[[system.chiplet_class]]`), where
+//! each weight layer is assigned to the cheapest class that fits and
+//! first-fit packed within that class.
 
 use crate::config::{ChipMode, ChipletStructure, SiamConfig};
 use crate::dnn::Dnn;
@@ -23,6 +27,10 @@ pub struct LayerMapping {
     pub cols: usize,
     /// N_i^Total = rows × cols.
     pub xbars: usize,
+    /// Chiplet class hosting the layer: index into the resolved class
+    /// list (`SiamConfig::resolved_chiplet_classes`); 0 for single-kind
+    /// systems. All of a layer's chiplets belong to this one class.
+    pub class: usize,
     /// Chiplets hosting the layer and how many crossbars on each
     /// (uniform split per the paper's workload-balance rule).
     pub chiplets: Vec<ChipletShare>,
@@ -52,14 +60,23 @@ pub struct MappingResult {
     /// Per weight-layer mapping, in execution order.
     pub per_layer: Vec<LayerMapping>,
     /// Chiplets the architecture *contains* (= required for custom,
-    /// user-fixed for homogeneous).
+    /// user-fixed for homogeneous, Σ per-class budgets for classes).
     pub num_chiplets: usize,
     /// Chiplets the DNN actually occupies.
     pub num_chiplets_required: usize,
     /// Crossbars used per chiplet (length = num_chiplets).
     pub chiplet_used_xbars: Vec<usize>,
-    /// Crossbars per chiplet (S).
+    /// Largest per-chiplet crossbar capacity in the system (S for
+    /// single-kind systems, `usize::MAX` for monolithic). Heterogeneous
+    /// systems vary per chiplet — see `chiplet_capacities`.
     pub chiplet_capacity: usize,
+    /// Class index of each chiplet (into the resolved class list; all
+    /// zeros for single-kind systems). Chiplets of one class occupy one
+    /// contiguous id block.
+    pub chiplet_class: Vec<usize>,
+    /// Crossbar capacity of each chiplet (its class's S; `usize::MAX`
+    /// for the monolithic pseudo-chiplet).
+    pub chiplet_capacities: Vec<usize>,
 }
 
 impl MappingResult {
@@ -67,12 +84,29 @@ impl MappingResult {
     /// chiplets.
     pub fn xbar_utilization(&self) -> f64 {
         let used: usize = self.chiplet_used_xbars.iter().sum();
-        let cap = self.num_chiplets_required * self.chiplet_capacity;
+        let cap: usize = self
+            .chiplet_used_xbars
+            .iter()
+            .zip(&self.chiplet_capacities)
+            .filter(|&(&u, _)| u > 0)
+            .map(|(_, &c)| c)
+            .sum();
         if cap == 0 {
             0.0
         } else {
             used as f64 / cap as f64
         }
+    }
+
+    /// Chiplets of each class, indexed like the resolved class list
+    /// (`[num_chiplets]` for single-kind systems).
+    pub fn chiplets_per_class(&self) -> Vec<usize> {
+        let nclass = self.chiplet_class.iter().copied().max().unwrap_or(0) + 1;
+        let mut counts = vec![0usize; nclass];
+        for &k in &self.chiplet_class {
+            counts[k] += 1;
+        }
+        counts
     }
 
     /// Cell-level utilization: programmed cells over cells in allocated
@@ -162,6 +196,39 @@ pub fn eq1_rows_cols(
 ///
 /// Monolithic chip mode maps everything onto one "chiplet" with unbounded
 /// capacity (used for the Fig. 1/13 baselines).
+///
+/// With `[[system.chiplet_class]]` blocks configured the class-aware
+/// packer runs instead (see [`map_dnn`]'s class path): each weight layer
+/// goes to the cheapest class that fits (EDAP proxy: compute energy ×
+/// latency × allocated crossbar area, times a chiplet-spanning penalty),
+/// first-fit within its class. A single class identical to the base
+/// config degenerates to the classic custom (`count` unset) or
+/// homogeneous (`count` set) path and reproduces it bit-for-bit.
+///
+/// # Examples
+///
+/// ```
+/// use siam::config::{ChipletClassConfig, SiamConfig};
+/// use siam::dnn::build_model;
+/// use siam::mapping::map_dnn;
+///
+/// let base = SiamConfig::paper_default();
+/// let mut little = ChipletClassConfig::from_base(&base, "little");
+/// little.xbar_rows = 64;
+/// little.xbar_cols = 64;
+/// little.adc_bits = 3;
+/// let big = ChipletClassConfig::from_base(&base, "big");
+/// let cfg = base.with_chiplet_classes(vec![big, little]);
+///
+/// let dnn = build_model("resnet110", "cifar10").unwrap();
+/// let map = map_dnn(&dnn, &cfg).unwrap();
+/// // every chiplet belongs to one of the two classes
+/// assert!(map.chiplet_class.iter().all(|&k| k < 2));
+/// // and every layer lives entirely inside its owning class
+/// for lm in &map.per_layer {
+///     assert!(lm.chiplets.iter().all(|s| map.chiplet_class[s.chiplet] == lm.class));
+/// }
+/// ```
 pub fn map_dnn(dnn: &Dnn, cfg: &SiamConfig) -> Result<MappingResult, MappingError> {
     let widx = dnn.weight_layers();
     if widx.is_empty() {
@@ -169,8 +236,22 @@ pub fn map_dnn(dnn: &Dnn, cfg: &SiamConfig) -> Result<MappingResult, MappingErro
     }
     let s = cfg.chiplet_size_xbars();
     let monolithic = cfg.system.chip_mode == ChipMode::Monolithic;
-    let homogeneous = !monolithic && cfg.system.structure == ChipletStructure::Homogeneous;
-    let fixed_count = cfg.system.total_chiplets.unwrap_or(0);
+    if !monolithic && cfg.has_hetero_classes() {
+        return map_dnn_classes(dnn, cfg, &widx);
+    }
+    // A degenerate single class (field-identical to the base config)
+    // runs the classic paths with the class's budget, reproducing them
+    // bit-for-bit.
+    let (homogeneous, fixed_count) = if monolithic {
+        (false, 0)
+    } else if let Some(count) = cfg.degenerate_class_mode() {
+        (count.is_some(), count.unwrap_or(0))
+    } else {
+        (
+            cfg.system.structure == ChipletStructure::Homogeneous,
+            cfg.system.total_chiplets.unwrap_or(0),
+        )
+    };
 
     // ---- pass 1: Eq. 1 geometry for every weight layer
     let mut geom = Vec::with_capacity(widx.len());
@@ -252,6 +333,7 @@ pub fn map_dnn(dnn: &Dnn, cfg: &SiamConfig) -> Result<MappingResult, MappingErro
                 rows,
                 cols,
                 xbars: total,
+                class: 0,
                 chiplets,
                 cell_utilization: cell_util,
             });
@@ -305,12 +387,299 @@ pub fn map_dnn(dnn: &Dnn, cfg: &SiamConfig) -> Result<MappingResult, MappingErro
     };
     used.resize(num_chiplets, 0);
 
+    let cap = if monolithic { usize::MAX } else { s };
     Ok(MappingResult {
         per_layer,
         num_chiplets,
         num_chiplets_required: required,
         chiplet_used_xbars: used,
-        chiplet_capacity: if monolithic { usize::MAX } else { s },
+        chiplet_capacity: cap,
+        chiplet_class: vec![0; num_chiplets],
+        chiplet_capacities: vec![cap; num_chiplets],
+    })
+}
+
+/// Incremental re-statement of the classic `pack` rules, used by the
+/// class-aware packer: first-fit into the open chiplet, dedicated
+/// uniform-split chiplets for layers that overflow it.
+///
+/// Deliberately a *separate* implementation from `map_dnn`'s `pack`
+/// closure: the legacy closure is the bit-compatibility reference for
+/// every pre-heterogeneity release and stays untouched. `place` must
+/// mirror its rules exactly (and the bounded-class relaxation loop in
+/// [`map_dnn`]'s class path mirrors the homogeneous loop) — the
+/// degenerate-identity regression tests in this file and in
+/// `coordinator::pipeline` pin the two implementations together; edit
+/// either side only in lock-step.
+struct ClassPacker {
+    cap: usize,
+    used: Vec<usize>,
+    open: Option<usize>,
+}
+
+impl ClassPacker {
+    fn new(cap: usize) -> ClassPacker {
+        ClassPacker {
+            cap,
+            used: Vec::new(),
+            open: None,
+        }
+    }
+
+    /// Chiplets this class would have to add to host `xbars` now.
+    fn extra_chiplets(&self, xbars: usize) -> usize {
+        if self.open.is_some_and(|oc| self.used[oc] + xbars <= self.cap) {
+            0
+        } else {
+            xbars.div_ceil(self.cap)
+        }
+    }
+
+    /// Place a layer, returning its `(local chiplet id, crossbars)`
+    /// shares — exactly the classic `pack` behavior.
+    fn place(&mut self, xbars: usize) -> Vec<(usize, usize)> {
+        if let Some(oc) = self.open.filter(|&oc| self.used[oc] + xbars <= self.cap) {
+            self.used[oc] += xbars;
+            if self.used[oc] == self.cap {
+                self.open = None;
+            }
+            vec![(oc, xbars)]
+        } else {
+            let n_chip = xbars.div_ceil(self.cap);
+            let base = xbars / n_chip;
+            let extra = xbars % n_chip;
+            let mut shares = Vec::with_capacity(n_chip);
+            for j in 0..n_chip {
+                let x = base + usize::from(j < extra);
+                let id = self.used.len();
+                self.used.push(x);
+                shares.push((id, x));
+            }
+            let last = shares.last().unwrap().0;
+            self.open = (self.used[last] < self.cap).then_some(last);
+            shares
+        }
+    }
+}
+
+/// The class-aware packer behind [`map_dnn`] for genuinely
+/// heterogeneous systems.
+///
+/// Phase A assigns each weight layer, in execution order, to the
+/// cheapest class that fits — cost is an EDAP proxy (the layer's
+/// compute energy × latency on that class × the crossbar area it would
+/// allocate there, times a spanning penalty for layers that overflow
+/// one chiplet), and a bounded class "fits" while a first-fit
+/// simulation at full capacity (the densest packing) stays within its
+/// budget. Phase B packs each class: unbounded classes replay the
+/// first-fit packing, bounded classes balance their layers across the
+/// fixed budget exactly like the classic homogeneous path (shrunken
+/// effective capacity, relaxed on fragmentation). Chiplets of one class
+/// occupy one contiguous global id block, in class order.
+fn map_dnn_classes(
+    dnn: &Dnn,
+    cfg: &SiamConfig,
+    widx: &[usize],
+) -> Result<MappingResult, MappingError> {
+    use crate::circuit::CircuitEstimator;
+    let classes = cfg.resolved_chiplet_classes();
+    let effs: Vec<SiamConfig> = classes.iter().map(|c| cfg.class_effective(c)).collect();
+    let nclass = classes.len();
+
+    // ---- per-class Eq.-1 geometry + EDAP-proxy cost per weight layer.
+    // Recomputed per map_dnn call (mapping runs per sweep point and has
+    // no cache handle): the cost model is closed-form arithmetic, a few
+    // flops per (layer, class) — the cached path in
+    // `CircuitEstimator::estimate_cached` is what avoids the *per-point*
+    // whole-model vectors downstream.
+    struct Geo {
+        rows: usize,
+        cols: usize,
+        xbars: usize,
+        util: f64,
+        cost: f64,
+    }
+    let mut geo: Vec<Vec<Geo>> = Vec::with_capacity(widx.len());
+    {
+        let ests: Vec<CircuitEstimator> = effs.iter().map(CircuitEstimator::new).collect();
+        let unit_areas: Vec<f64> = ests.iter().map(|e| e.xbar_unit_area()).collect();
+        for (li, &idx) in widx.iter().enumerate() {
+            let layer = &dnn.layers[idx];
+            let sparsity = cfg
+                .dnn
+                .sparsity
+                .as_ref()
+                .and_then(|v| v.get(li))
+                .copied()
+                .unwrap_or(0.0);
+            let mut per_class = Vec::with_capacity(nclass);
+            for (k, class) in classes.iter().enumerate() {
+                let (rows, cols, util) = eq1_rows_cols(
+                    layer.weight_rows(),
+                    layer.weight_cols(),
+                    cfg.dnn.weight_precision,
+                    class.bits_per_cell,
+                    class.xbar_rows,
+                    class.xbar_cols,
+                    sparsity,
+                );
+                let xbars = rows * cols;
+                let lc = ests[k].layer_cost(layer, li);
+                // EDAP proxy × spanning penalty: a layer overflowing one
+                // chiplet of this class splits across div_ceil(xbars, S)
+                // dedicated chiplets, each adding NoP partial-sum
+                // reduction traffic — penalize linearly so big layers
+                // prefer classes big enough to hold them.
+                let span = xbars.div_ceil(class.capacity_xbars()).max(1);
+                let cost =
+                    lc.energy_pj * lc.latency_ns * (xbars as f64 * unit_areas[k]) * span as f64;
+                per_class.push(Geo {
+                    rows,
+                    cols,
+                    xbars,
+                    util,
+                    cost,
+                });
+            }
+            geo.push(per_class);
+        }
+    }
+
+    // ---- phase A: cheapest class that fits, in execution order
+    let mut ff: Vec<ClassPacker> = classes
+        .iter()
+        .map(|c| ClassPacker::new(c.capacity_xbars()))
+        .collect();
+    let mut assigned: Vec<usize> = Vec::with_capacity(widx.len());
+    for per_class in &geo {
+        let mut best: Option<(usize, f64)> = None;
+        for (k, class) in classes.iter().enumerate() {
+            let g = &per_class[k];
+            let fits = match class.count {
+                None => true,
+                Some(budget) => ff[k].used.len() + ff[k].extra_chiplets(g.xbars) <= budget,
+            };
+            if fits && best.is_none_or(|(_, c)| g.cost < c) {
+                best = Some((k, g.cost));
+            }
+        }
+        let Some((k, _)) = best else {
+            // every class is bounded and none can host the layer
+            let available: usize = classes.iter().filter_map(|c| c.count).sum();
+            let required = (0..nclass)
+                .map(|k| ff[k].used.len() + ff[k].extra_chiplets(per_class[k].xbars))
+                .min()
+                .unwrap_or(1)
+                .max(available + 1);
+            return Err(MappingError::ExceedsChiplets {
+                required,
+                available,
+            });
+        };
+        ff[k].place(per_class[k].xbars);
+        assigned.push(k);
+    }
+
+    // ---- phase B: pack each class's layers
+    let mut class_shares: Vec<Vec<Vec<(usize, usize)>>> = vec![Vec::new(); nclass];
+    let mut class_used: Vec<Vec<usize>> = Vec::with_capacity(nclass);
+    for (k, class) in classes.iter().enumerate() {
+        let lys: Vec<usize> = (0..widx.len()).filter(|&li| assigned[li] == k).collect();
+        let s_k = class.capacity_xbars();
+        match class.count {
+            None => {
+                let mut packer = ClassPacker::new(s_k);
+                for &li in &lys {
+                    class_shares[k].push(packer.place(geo[li][k].xbars));
+                }
+                class_used.push(packer.used);
+            }
+            Some(budget) => {
+                if budget == 0 {
+                    return Err(MappingError::ExceedsChiplets {
+                        required: 1,
+                        available: 0,
+                    });
+                }
+                let total: usize = lys.iter().map(|&li| geo[li][k].xbars).sum();
+                let mut cap = total
+                    .div_ceil(budget)
+                    .max(s_k.div_ceil(4))
+                    .max(1)
+                    .min(s_k);
+                let (shares, mut used) = loop {
+                    let mut packer = ClassPacker::new(cap);
+                    let shares: Vec<Vec<(usize, usize)>> = lys
+                        .iter()
+                        .map(|&li| packer.place(geo[li][k].xbars))
+                        .collect();
+                    if packer.used.len() <= budget {
+                        break (shares, packer.used);
+                    }
+                    if cap >= s_k {
+                        return Err(MappingError::ExceedsChiplets {
+                            required: packer.used.len(),
+                            available: budget,
+                        });
+                    }
+                    cap = (cap + cap / 4 + 1).min(s_k);
+                };
+                used.resize(budget, 0);
+                class_shares[k] = shares;
+                class_used.push(used);
+            }
+        }
+    }
+
+    // ---- global chiplet ids: contiguous block per class, class order
+    let mut offsets = Vec::with_capacity(nclass);
+    let mut total_chiplets = 0usize;
+    for used in &class_used {
+        offsets.push(total_chiplets);
+        total_chiplets += used.len();
+    }
+
+    let mut next_in_class = vec![0usize; nclass];
+    let mut per_layer = Vec::with_capacity(widx.len());
+    for (li, &idx) in widx.iter().enumerate() {
+        let k = assigned[li];
+        let g = &geo[li][k];
+        let shares = &class_shares[k][next_in_class[k]];
+        next_in_class[k] += 1;
+        per_layer.push(LayerMapping {
+            layer_idx: idx,
+            rows: g.rows,
+            cols: g.cols,
+            xbars: g.xbars,
+            class: k,
+            chiplets: shares
+                .iter()
+                .map(|&(local, x)| ChipletShare {
+                    chiplet: offsets[k] + local,
+                    xbars: x,
+                })
+                .collect(),
+            cell_utilization: g.util,
+        });
+    }
+
+    let mut chiplet_used = Vec::with_capacity(total_chiplets);
+    let mut chiplet_class = Vec::with_capacity(total_chiplets);
+    let mut chiplet_capacities = Vec::with_capacity(total_chiplets);
+    for (k, used) in class_used.iter().enumerate() {
+        chiplet_used.extend_from_slice(used);
+        chiplet_class.extend(used.iter().map(|_| k));
+        chiplet_capacities.extend(used.iter().map(|_| classes[k].capacity_xbars()));
+    }
+    let required = chiplet_used.iter().filter(|&&u| u > 0).count();
+    Ok(MappingResult {
+        per_layer,
+        num_chiplets: total_chiplets,
+        num_chiplets_required: required,
+        chiplet_used_xbars: chiplet_used,
+        chiplet_capacity: chiplet_capacities.iter().copied().max().unwrap_or(0),
+        chiplet_class,
+        chiplet_capacities,
     })
 }
 
@@ -378,5 +747,156 @@ mod tests {
             "lenet used {} chiplets",
             map.num_chiplets_required
         );
+    }
+
+    use crate::config::{ChipletClassConfig, MemCell};
+
+    fn big_little_cfg() -> SiamConfig {
+        let base = SiamConfig::paper_default();
+        let big = ChipletClassConfig::from_base(&base, "big");
+        let mut little = ChipletClassConfig::from_base(&base, "little");
+        little.cell = MemCell::Sram;
+        little.xbar_rows = 64;
+        little.xbar_cols = 64;
+        little.tiles_per_chiplet = 8;
+        little.xbars_per_tile = 8;
+        little.adc_bits = 3;
+        little.nop_ebit_pj = 0.3;
+        base.with_chiplet_classes(vec![big, little])
+    }
+
+    fn assert_mappings_identical(a: &MappingResult, b: &MappingResult) {
+        assert_eq!(a.num_chiplets, b.num_chiplets);
+        assert_eq!(a.num_chiplets_required, b.num_chiplets_required);
+        assert_eq!(a.chiplet_used_xbars, b.chiplet_used_xbars);
+        assert_eq!(a.chiplet_capacity, b.chiplet_capacity);
+        assert_eq!(a.chiplet_capacities, b.chiplet_capacities);
+        assert_eq!(a.per_layer.len(), b.per_layer.len());
+        for (x, y) in a.per_layer.iter().zip(&b.per_layer) {
+            assert_eq!(x.layer_idx, y.layer_idx);
+            assert_eq!((x.rows, x.cols, x.xbars), (y.rows, y.cols, y.xbars));
+            assert_eq!(x.chiplets, y.chiplets);
+            assert_eq!(
+                x.cell_utilization.to_bits(),
+                y.cell_utilization.to_bits(),
+                "cell utilization drifted"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_single_class_reproduces_custom_bitwise() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let base = SiamConfig::paper_default();
+        let legacy = map_dnn(&dnn, &base).unwrap();
+        let one = base
+            .clone()
+            .with_chiplet_classes(vec![ChipletClassConfig::from_base(&base, "only")]);
+        let class = map_dnn(&dnn, &one).unwrap();
+        assert_mappings_identical(&legacy, &class);
+    }
+
+    #[test]
+    fn degenerate_single_class_reproduces_homogeneous_bitwise() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let base = SiamConfig::paper_default();
+        let legacy = map_dnn(&dnn, &base.clone().with_total_chiplets(36)).unwrap();
+        let mut only = ChipletClassConfig::from_base(&base, "only");
+        only.count = Some(36);
+        let class = map_dnn(&dnn, &base.clone().with_chiplet_classes(vec![only])).unwrap();
+        assert_mappings_identical(&legacy, &class);
+    }
+
+    #[test]
+    fn class_packer_matches_classic_pack_bitwise() {
+        // a single class differing from the base only in a field the
+        // packer ignores (NoP driver energy) forces the class path
+        // while keeping every packing input identical — pinning
+        // ClassPacker / the bounded relaxation loop to the classic
+        // `pack` closure bit-for-bit
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let base = SiamConfig::paper_default();
+        for budget in [None, Some(36)] {
+            let legacy_cfg = match budget {
+                None => base.clone(),
+                Some(n) => base.clone().with_total_chiplets(n),
+            };
+            let legacy = map_dnn(&dnn, &legacy_cfg).unwrap();
+            let mut only = ChipletClassConfig::from_base(&base, "only");
+            only.count = budget;
+            only.nop_ebit_pj = 0.53; // hetero trigger, mapping-invariant
+            let cfg = base.clone().with_chiplet_classes(vec![only]);
+            assert!(cfg.has_hetero_classes(), "tweaked class must not be degenerate");
+            let class = map_dnn(&dnn, &cfg).unwrap();
+            assert_mappings_identical(&legacy, &class);
+        }
+    }
+
+    #[test]
+    fn big_little_splits_across_both_classes() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &big_little_cfg()).unwrap();
+        let counts = map.chiplets_per_class();
+        assert_eq!(counts.len(), 2);
+        assert!(
+            counts.iter().all(|&c| c > 0),
+            "expected a mixed split, got {counts:?}"
+        );
+        // a layer lives entirely inside its owning class
+        for lm in &map.per_layer {
+            assert!(lm
+                .chiplets
+                .iter()
+                .all(|s| map.chiplet_class[s.chiplet] == lm.class));
+        }
+        // per-chiplet capacity respected, class blocks contiguous
+        for (c, (&used, &cap)) in map
+            .chiplet_used_xbars
+            .iter()
+            .zip(&map.chiplet_capacities)
+            .enumerate()
+        {
+            assert!(used <= cap, "chiplet {c} over capacity: {used} > {cap}");
+        }
+        assert!(
+            map.chiplet_class.windows(2).all(|w| w[0] <= w[1]),
+            "class id blocks must be contiguous"
+        );
+        // big-little on ResNet-110: the heavy stage-3 backbone stays on
+        // the big RRAM class, the small early layers go little
+        let big_xbars: usize = map
+            .per_layer
+            .iter()
+            .filter(|lm| lm.class == 0)
+            .map(|lm| lm.xbars)
+            .sum();
+        assert!(big_xbars > 0, "big class unused");
+    }
+
+    #[test]
+    fn bounded_class_budget_respected() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let mut cfg = big_little_cfg();
+        cfg.system.chiplet_classes[1].count = Some(4);
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let counts = map.chiplets_per_class();
+        assert_eq!(counts[1], 4, "bounded class must contribute its budget");
+        // overflow from the bounded little class lands on unbounded big
+        assert!(counts[0] > 0);
+    }
+
+    #[test]
+    fn all_bounded_classes_too_small_error() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let mut cfg = big_little_cfg();
+        cfg.system.chiplet_classes[0].count = Some(1);
+        cfg.system.chiplet_classes[1].count = Some(1);
+        match map_dnn(&dnn, &cfg) {
+            Err(MappingError::ExceedsChiplets { required, available }) => {
+                assert_eq!(available, 2);
+                assert!(required > available);
+            }
+            other => panic!("expected overflow, got {other:?}"),
+        }
     }
 }

@@ -1,15 +1,84 @@
 //! Chiplet placement on the interposer mesh.
 //!
-//! Chiplets are placed row-major on the smallest square mesh that holds
-//! them (the paper places chiplets "to achieve the least Manhattan
-//! distance" for the sequential layer chain — row-major snake order is
-//! the optimal sequential embedding on a mesh). Two special nodes are
-//! appended: the global accumulator/buffer and the DRAM chiplet, attached
-//! at the mesh boundary (Fig. 2 of the paper).
+//! The default embedding places chiplets row-major on the smallest
+//! square mesh that holds them (the paper places chiplets "to achieve
+//! the least Manhattan distance" for the sequential layer chain —
+//! row-major snake order is the optimal sequential embedding on a
+//! mesh). Two special nodes are appended: the global accumulator/buffer
+//! and the DRAM chiplet, attached at the mesh boundary (Fig. 2 of the
+//! paper).
+//!
+//! `placement = "dataflow"` instead *optimizes* the embedding against
+//! the actual inter-chiplet traffic: [`Placement::dataflow`] orders the
+//! nodes to minimize the weighted NoP hop-distance of the inter-layer
+//! flows (greedy construction refined by pairwise swaps), which matters
+//! once heterogeneous chiplet classes break the neat sequential chain.
+//! Both policies occupy the same mesh footprint, so placement changes
+//! only distances — never area.
 
+use super::traffic::Traffic;
 
-/// Row-major snake placement of chiplets + special nodes on the
-/// interposer mesh.
+/// Symmetric inter-node traffic weights driving the dataflow placement:
+/// `w(a, b)` counts the NoP packets exchanged between nodes `a` and `b`
+/// (direction ignored — hop distance is symmetric).
+#[derive(Debug, Clone)]
+pub struct TrafficMatrix {
+    n: usize,
+    w: Vec<u64>,
+}
+
+impl TrafficMatrix {
+    /// An all-zero matrix over `n` nodes.
+    pub fn new(n: usize) -> TrafficMatrix {
+        TrafficMatrix { n, w: vec![0; n * n] }
+    }
+
+    /// Accumulate `packets` between `a` and `b` (self-traffic ignored).
+    pub fn add(&mut self, a: usize, b: usize, packets: u64) {
+        if a != b {
+            self.w[a * self.n + b] += packets;
+            self.w[b * self.n + a] += packets;
+        }
+    }
+
+    /// Packets exchanged between `a` and `b`.
+    pub fn get(&self, a: usize, b: usize) -> u64 {
+        self.w[a * self.n + b]
+    }
+
+    /// Nodes the matrix covers.
+    pub fn nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Total packets touching node `a`.
+    pub fn node_weight(&self, a: usize) -> u128 {
+        self.w[a * self.n..(a + 1) * self.n]
+            .iter()
+            .map(|&x| x as u128)
+            .sum()
+    }
+
+    /// Weights of one mapped DNN's NoP epochs over `nodes` mesh nodes
+    /// (compute chiplets + accumulator + DRAM).
+    pub fn from_nop_traffic(traffic: &Traffic, nodes: usize) -> TrafficMatrix {
+        let mut m = TrafficMatrix::new(nodes);
+        for ep in &traffic.nop_epochs {
+            for f in &ep.flows {
+                m.add(f.src as usize, f.dst as usize, f.count);
+            }
+        }
+        m
+    }
+}
+
+/// Embedding of chiplets + special nodes on the interposer mesh.
+///
+/// The default ([`Placement::new`]) is row-major snake order;
+/// [`Placement::dataflow`] permutes node→slot to minimize weighted NoP
+/// hop-distance. Node ids are stable across policies — only the
+/// coordinates move — so Algorithm-2 traces built against one placement
+/// remain valid under another.
 #[derive(Debug, Clone)]
 pub struct Placement {
     /// Mesh width (columns).
@@ -23,10 +92,26 @@ pub struct Placement {
     pub accumulator_node: usize,
     /// Node id of the DRAM chiplet.
     pub dram_node: usize,
+    /// Optional node→slot permutation (`None` = identity, the row-major
+    /// snake order every pre-dataflow release used).
+    slots: Option<Vec<usize>>,
+}
+
+/// (row, col) of a snake-order slot index on a `width`-wide mesh: odd
+/// rows run right-to-left so consecutive slots are always neighbours.
+fn slot_coord(width: usize, slot: usize) -> (usize, usize) {
+    let r = slot / width;
+    let c = slot % width;
+    if r % 2 == 0 {
+        (r, c)
+    } else {
+        (r, width - 1 - c)
+    }
 }
 
 impl Placement {
-    /// Place `chiplets` compute chiplets plus the two special nodes.
+    /// Place `chiplets` compute chiplets plus the two special nodes in
+    /// row-major snake order.
     pub fn new(chiplets: usize) -> Placement {
         assert!(chiplets > 0);
         // smallest square that holds the compute chiplets
@@ -42,7 +127,53 @@ impl Placement {
             chiplets,
             accumulator_node: chiplets,
             dram_node: chiplets + 1,
+            slots: None,
         }
+    }
+
+    /// Dataflow-aware placement: permute the nodes of the row-major
+    /// footprint to minimize `Σ w(a,b) · hops(a,b)` over `weights`.
+    ///
+    /// Deterministic two-step optimizer: a greedy construction (heaviest
+    /// node first, each into the free slot minimizing its cost against
+    /// the already-placed nodes) refined by pairwise-swap passes until
+    /// no swap improves (each applied swap strictly reduces the cost, so
+    /// refinement is monotone — an invariant the tests assert). Falls
+    /// back to the identity embedding when the optimizer cannot beat it,
+    /// so a dataflow placement never costs more hops than row-major.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use siam::mapping::{weighted_hop_cost, Placement, TrafficMatrix};
+    ///
+    /// let rowmajor = Placement::new(7);
+    /// let mut w = TrafficMatrix::new(rowmajor.nodes());
+    /// w.add(0, 6, 1_000_000); // one dominant chiplet pair
+    /// let optimized = Placement::dataflow(7, &w);
+    /// // the heavy pair lands on neighbouring slots...
+    /// assert_eq!(optimized.hops(0, 6), 1);
+    /// // ...and the objective can only improve over row-major
+    /// assert!(weighted_hop_cost(&optimized, &w) <= weighted_hop_cost(&rowmajor, &w));
+    /// ```
+    pub fn dataflow(chiplets: usize, weights: &TrafficMatrix) -> Placement {
+        let base = Placement::new(chiplets);
+        let n = base.nodes();
+        assert_eq!(weights.nodes(), n, "weight matrix must cover all nodes");
+        let greedy = greedy_slots(&base, weights);
+        let refined = refine_slots(&base, weights, greedy);
+        let mut candidate = base.clone();
+        candidate.slots = Some(refined);
+        if weighted_hop_cost(&candidate, weights) < weighted_hop_cost(&base, weights) {
+            candidate
+        } else {
+            base
+        }
+    }
+
+    /// True when this placement permutes the row-major embedding.
+    pub fn is_permuted(&self) -> bool {
+        self.slots.is_some()
     }
 
     /// Total mesh nodes (compute chiplets + accumulator + DRAM).
@@ -50,16 +181,13 @@ impl Placement {
         self.chiplets + 2
     }
 
-    /// (row, col) of a node id. Row-major snake order: odd rows run
-    /// right-to-left so consecutive ids are always mesh neighbours.
+    /// (row, col) of a node id.
     pub fn coord(&self, node: usize) -> (usize, usize) {
-        let r = node / self.width;
-        let c = node % self.width;
-        if r % 2 == 0 {
-            (r, c)
-        } else {
-            (r, self.width - 1 - c)
-        }
+        let slot = match &self.slots {
+            Some(s) => s[node],
+            None => node,
+        };
+        slot_coord(self.width, slot)
     }
 
     /// Manhattan hop distance between two nodes.
@@ -74,6 +202,101 @@ impl Placement {
         let (w, h) = (self.width, self.height);
         2 * w * h - w - h
     }
+}
+
+/// The dataflow objective: `Σ_{a<b} w(a,b) · hops(a,b)` in exact
+/// integer arithmetic.
+pub fn weighted_hop_cost(p: &Placement, weights: &TrafficMatrix) -> u128 {
+    let n = p.nodes().min(weights.nodes());
+    let mut cost = 0u128;
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let w = weights.get(a, b);
+            if w > 0 {
+                cost += w as u128 * p.hops(a, b) as u128;
+            }
+        }
+    }
+    cost
+}
+
+/// Greedy construction: nodes in descending total-traffic order (ties
+/// by id), each into the free slot minimizing its weighted distance to
+/// the already-placed nodes (ties by slot index).
+fn greedy_slots(base: &Placement, weights: &TrafficMatrix) -> Vec<usize> {
+    let n = base.nodes();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&a| (std::cmp::Reverse(weights.node_weight(a)), a));
+    let mut slot_of: Vec<usize> = vec![usize::MAX; n];
+    let mut free: Vec<bool> = vec![true; n];
+    for &node in &order {
+        let mut best = (u128::MAX, usize::MAX);
+        for (slot, &is_free) in free.iter().enumerate() {
+            if !is_free {
+                continue;
+            }
+            let (r, c) = slot_coord(base.width, slot);
+            let mut cost = 0u128;
+            for other in 0..n {
+                if slot_of[other] == usize::MAX {
+                    continue;
+                }
+                let w = weights.get(node, other);
+                if w > 0 {
+                    let (or, oc) = slot_coord(base.width, slot_of[other]);
+                    cost += w as u128 * (r.abs_diff(or) + c.abs_diff(oc)) as u128;
+                }
+            }
+            if (cost, slot) < best {
+                best = (cost, slot);
+            }
+        }
+        slot_of[node] = best.1;
+        free[best.1] = false;
+    }
+    slot_of
+}
+
+/// Pairwise-swap refinement: repeatedly swap the slots of any node pair
+/// whose swap strictly reduces the objective; stop at a fixed point
+/// (bounded pass count for safety). Monotone by construction.
+fn refine_slots(base: &Placement, weights: &TrafficMatrix, mut slots: Vec<usize>) -> Vec<usize> {
+    let n = base.nodes();
+    let pair_cost = |node: usize, slot: usize, slots: &[usize], skip: usize| -> u128 {
+        let (r, c) = slot_coord(base.width, slot);
+        let mut cost = 0u128;
+        for other in 0..n {
+            if other == node || other == skip {
+                continue;
+            }
+            let w = weights.get(node, other);
+            if w > 0 {
+                let (or, oc) = slot_coord(base.width, slots[other]);
+                cost += w as u128 * (r.abs_diff(or) + c.abs_diff(oc)) as u128;
+            }
+        }
+        cost
+    };
+    for _pass in 0..(2 * n).max(8) {
+        let mut improved = false;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                // cost touching i or j before and after the swap; all
+                // other terms are unchanged. The i<->j term itself is
+                // invariant under the swap (hop distance is symmetric).
+                let before = pair_cost(i, slots[i], &slots, j) + pair_cost(j, slots[j], &slots, i);
+                let after = pair_cost(i, slots[j], &slots, j) + pair_cost(j, slots[i], &slots, i);
+                if after < before {
+                    slots.swap(i, j);
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    slots
 }
 
 #[cfg(test)]
@@ -116,5 +339,123 @@ mod tests {
         let p = Placement::new(16); // 4 wide, >=5 tall
         let expected = 2 * p.width * p.height - p.width - p.height;
         assert_eq!(p.links(), expected);
+    }
+
+    /// Deterministic pseudo-random weights for optimizer tests.
+    fn random_matrix(n: usize, seed: u64) -> TrafficMatrix {
+        let mut m = TrafficMatrix::new(n);
+        let mut x = seed | 1;
+        for a in 0..n {
+            for b in (a + 1)..n {
+                // xorshift64
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                if x % 3 != 0 {
+                    m.add(a, b, x % 1000);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn rowmajor_coords_are_identity_embedding() {
+        // the `slots: None` path must reproduce the pre-dataflow
+        // arithmetic bit-for-bit: row-major snake order over node ids
+        let p = Placement::new(7);
+        for node in 0..p.nodes() {
+            let r = node / p.width;
+            let c = node % p.width;
+            let c = if r % 2 == 0 { c } else { p.width - 1 - c };
+            assert_eq!(p.coord(node), (r, c));
+        }
+        assert!(!p.is_permuted());
+    }
+
+    #[test]
+    fn dataflow_never_costs_more_than_rowmajor() {
+        for seed in [1u64, 7, 42, 1234] {
+            for chiplets in [3usize, 6, 14, 23] {
+                let base = Placement::new(chiplets);
+                let m = random_matrix(base.nodes(), seed);
+                let opt = Placement::dataflow(chiplets, &m);
+                assert!(
+                    weighted_hop_cost(&opt, &m) <= weighted_hop_cost(&base, &m),
+                    "dataflow worse than rowmajor for n={chiplets} seed={seed}"
+                );
+                // same footprint: only distances move, never area
+                assert_eq!((opt.width, opt.height), (base.width, base.height));
+                assert_eq!(opt.links(), base.links());
+            }
+        }
+    }
+
+    #[test]
+    fn swap_refinement_never_increases_cost() {
+        for seed in [3u64, 99] {
+            let base = Placement::new(11);
+            let m = random_matrix(base.nodes(), seed);
+            let greedy = greedy_slots(&base, &m);
+            let mut g = base.clone();
+            g.slots = Some(greedy.clone());
+            let before = weighted_hop_cost(&g, &m);
+            let refined = refine_slots(&base, &m, greedy);
+            let mut r = base.clone();
+            r.slots = Some(refined);
+            assert!(
+                weighted_hop_cost(&r, &m) <= before,
+                "swap pass increased the objective"
+            );
+        }
+    }
+
+    #[test]
+    fn dataflow_is_deterministic() {
+        let base = Placement::new(9);
+        let m = random_matrix(base.nodes(), 5);
+        let a = Placement::dataflow(9, &m);
+        let b = Placement::dataflow(9, &m);
+        for node in 0..a.nodes() {
+            assert_eq!(a.coord(node), b.coord(node));
+        }
+    }
+
+    #[test]
+    fn dataflow_places_heavy_pair_adjacent() {
+        // one dominant pair must end up on neighbouring slots
+        let mut m = TrafficMatrix::new(9); // 7 chiplets + 2 specials
+        m.add(0, 6, 1_000_000);
+        m.add(1, 2, 3);
+        let p = Placement::dataflow(7, &m);
+        assert_eq!(p.hops(0, 6), 1, "heavy pair not adjacent");
+    }
+
+    #[test]
+    fn dataflow_is_a_permutation() {
+        let base = Placement::new(13);
+        let m = random_matrix(base.nodes(), 11);
+        let p = Placement::dataflow(13, &m);
+        let mut seen = vec![false; p.nodes()];
+        for node in 0..p.nodes() {
+            let (r, c) = p.coord(node);
+            // coordinates must map back to distinct in-range slots
+            let slot = r * p.width + if r % 2 == 0 { c } else { p.width - 1 - c };
+            assert!(slot < p.nodes(), "slot {slot} out of the occupied range");
+            assert!(!seen[slot], "slot {slot} assigned twice");
+            seen[slot] = true;
+        }
+    }
+
+    #[test]
+    fn traffic_matrix_symmetry() {
+        let mut m = TrafficMatrix::new(4);
+        m.add(0, 2, 10);
+        m.add(2, 0, 5);
+        m.add(1, 1, 99); // self-traffic ignored
+        assert_eq!(m.get(0, 2), 15);
+        assert_eq!(m.get(2, 0), 15);
+        assert_eq!(m.get(1, 1), 0);
+        assert_eq!(m.node_weight(0), 15);
     }
 }

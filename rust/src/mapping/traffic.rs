@@ -120,20 +120,23 @@ fn alg2_flows(srcs: &[u32], dsts: &[u32], packets_per_pair: u64, epoch: &mut Epo
 }
 
 /// Tile ranges occupied by each weight layer on each chiplet.
-/// `tile_ranges[layer][k] = (chiplet, first_tile, n_tiles)`.
+/// `tile_ranges[layer][k] = (chiplet, first_tile, n_tiles)`. Tile
+/// geometry is per chiplet (`xbars_per_tile[c]`, `tiles_per_chiplet[c]`)
+/// so heterogeneous classes lay out correctly; single-kind systems pass
+/// uniform vectors and reproduce the classic layout.
 fn assign_tiles(
     map: &MappingResult,
-    xbars_per_tile: usize,
-    tiles_per_chiplet: usize,
+    xbars_per_tile: &[usize],
+    tiles_per_chiplet: &[usize],
 ) -> Vec<Vec<(usize, usize, usize)>> {
     let mut cursor = vec![0usize; map.num_chiplets];
     let mut out = Vec::with_capacity(map.per_layer.len());
     for lm in &map.per_layer {
         let mut spans = Vec::with_capacity(lm.chiplets.len());
         for share in &lm.chiplets {
-            let tiles = share.xbars.div_ceil(xbars_per_tile).max(1);
-            let tiles = tiles.min(tiles_per_chiplet);
-            let first = cursor[share.chiplet] % tiles_per_chiplet;
+            let tiles = share.xbars.div_ceil(xbars_per_tile[share.chiplet]).max(1);
+            let tiles = tiles.min(tiles_per_chiplet[share.chiplet]);
+            let first = cursor[share.chiplet] % tiles_per_chiplet[share.chiplet];
             cursor[share.chiplet] += tiles;
             spans.push((share.chiplet, first, tiles));
         }
@@ -158,13 +161,30 @@ pub fn build_traffic(
     let q = cfg.dnn.activation_precision as u64;
     let w_noc = cfg.chiplet.noc_width as u64;
     let w_nop = cfg.system.nop.bits_per_cycle();
-    // partial sums carry accumulated precision (weight + act + log2 rows)
-    let q_partial =
-        (cfg.dnn.weight_precision as u64 + q + (cfg.chiplet.xbar_rows as f64).log2() as u64)
-            .min(32);
-    let tiles_pc = cfg.chiplet.tiles_per_chiplet;
+    // per-chiplet tile geometry: the owning class's figures (uniform —
+    // and equal to the base [chiplet] block — for single-kind systems)
+    let classes = cfg.resolved_chiplet_classes();
+    // partial sums carry accumulated precision (weight + act + log2 of
+    // the *owning class's* crossbar rows — smaller crossbars accumulate
+    // a narrower row sum); single-kind systems reduce to the base value
+    let q_partial_of: Vec<u64> = classes
+        .iter()
+        .map(|c| {
+            (cfg.dnn.weight_precision as u64 + q + (c.xbar_rows as f64).log2() as u64).min(32)
+        })
+        .collect();
+    let tiles_of: Vec<usize> = map
+        .chiplet_class
+        .iter()
+        .map(|&k| classes[k].tiles_per_chiplet)
+        .collect();
+    let xbars_pt_of: Vec<usize> = map
+        .chiplet_class
+        .iter()
+        .map(|&k| classes[k].xbars_per_tile)
+        .collect();
     let widx = dnn.weight_layers();
-    let tiles = assign_tiles(map, cfg.chiplet.xbars_per_tile, tiles_pc);
+    let tiles = assign_tiles(map, &xbars_pt_of, &tiles_of);
 
     let mut t = Traffic::default();
 
@@ -189,6 +209,7 @@ pub fn build_traffic(
 
         // ---- partial-sum reduction over the NoP (layer spans chiplets)
         if lm.spans_chiplets() {
+            let q_partial = q_partial_of[lm.class];
             let n = lm.chiplets.len() as u64;
             let out_elems = layer.ofm.elems() as u64;
             t.accumulator_adds += (n - 1) * out_elems;
@@ -249,12 +270,12 @@ pub fn build_traffic(
             for (k, share) in lm.chiplets.iter().enumerate() {
                 let (c, first, n_t) = tiles[li][k];
                 debug_assert_eq!(c, share.chiplet);
-                let srcs = tile_ids(first, n_t, tiles_pc);
+                let srcs = tile_ids(first, n_t, tiles_of[c]);
                 // destination tiles: next layer's tiles if co-resident,
                 // else the NoP port tile.
                 let co = tiles[nj].iter().find(|(cc, _, _)| *cc == c);
                 let dsts = match co {
-                    Some(&(_, f2, n2)) if !crosses => tile_ids(f2, n2, tiles_pc),
+                    Some(&(_, f2, n2)) if !crosses => tile_ids(f2, n2, tiles_of[c]),
                     _ => vec![NOP_PORT_TILE],
                 };
                 let mut epoch = Epoch::new();
@@ -272,7 +293,7 @@ pub fn build_traffic(
             // incoming side: NoP port -> next layer's tiles
             if crosses {
                 for &(c, f2, n2) in &tiles[nj] {
-                    let dsts = tile_ids(f2, n2, tiles_pc);
+                    let dsts = tile_ids(f2, n2, tiles_of[c]);
                     let mut epoch = Epoch::new();
                     alg2_flows(&[NOP_PORT_TILE], &dsts, np_noc, &mut epoch);
                     canonicalize_flows(&mut epoch);

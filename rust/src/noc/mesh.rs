@@ -24,6 +24,24 @@ pub struct Mesh {
     /// Rows.
     pub height: usize,
     coords: Vec<(u16, u16)>, // (row, col) per node id
+    embedding: u64,          // order-sensitive digest of `coords`
+}
+
+/// splitmix64-style fold of the coordinate sequence: two meshes with
+/// equal dims but different node→coordinate embeddings (e.g. a
+/// dataflow-permuted placement) must never share an epoch-cache
+/// fingerprint.
+fn embed_tag(coords: &[(u16, u16)]) -> u64 {
+    let mut x = 0x6A09_E667_F3BC_C909u64;
+    for &(r, c) in coords {
+        x ^= ((r as u64) << 16) | c as u64;
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+    }
+    x
 }
 
 impl Mesh {
@@ -33,7 +51,7 @@ impl Mesh {
         assert!(n > 0);
         let width = (n as f64).sqrt().ceil() as usize;
         let height = n.div_ceil(width);
-        let coords = (0..n)
+        let coords: Vec<(u16, u16)> = (0..n)
             .map(|i| {
                 let r = i / width;
                 let c = i % width;
@@ -41,32 +59,43 @@ impl Mesh {
                 (r as u16, c as u16)
             })
             .collect();
+        let embedding = embed_tag(&coords);
         Mesh {
             width,
             height,
             coords,
+            embedding,
         }
     }
 
     /// Mesh over a chiplet placement (compute chiplets + accumulator +
-    /// DRAM nodes).
+    /// DRAM nodes), honoring a dataflow-permuted embedding if present.
     pub fn from_placement(p: &Placement) -> Mesh {
-        let coords = (0..p.nodes())
+        let coords: Vec<(u16, u16)> = (0..p.nodes())
             .map(|i| {
                 let (r, c) = p.coord(i);
                 (r as u16, c as u16)
             })
             .collect();
+        let embedding = embed_tag(&coords);
         Mesh {
             width: p.width,
             height: p.height,
             coords,
+            embedding,
         }
     }
 
     /// Number of nodes embedded in the mesh.
     pub fn nodes(&self) -> usize {
         self.coords.len()
+    }
+
+    /// Order-sensitive digest of the node→coordinate embedding, folded
+    /// into epoch-cache fingerprints so permuted placements of equal
+    /// dimensions never alias.
+    pub fn embedding_tag(&self) -> u64 {
+        self.embedding
     }
 
     /// (row, col) of a node id.
@@ -143,6 +172,26 @@ mod tests {
         let (r8, c8) = m.coord(8);
         m.route(0, 8, &mut buf);
         assert_eq!(buf.len() as u16, r8 + c8);
+    }
+
+    #[test]
+    fn embedding_tag_distinguishes_permutations() {
+        use crate::mapping::{Placement, TrafficMatrix};
+        // a permuted (dataflow) placement has the same dims/node count
+        // as row-major but a different embedding — the tag must differ,
+        // or the epoch cache would alias their simulations
+        let rowmajor = Placement::new(7);
+        let mut w = TrafficMatrix::new(rowmajor.nodes());
+        w.add(0, 6, 1_000_000); // force a non-identity optimum
+        let dataflow = Placement::dataflow(7, &w);
+        assert!(dataflow.is_permuted(), "optimizer should beat row-major here");
+        let a = Mesh::from_placement(&rowmajor);
+        let b = Mesh::from_placement(&dataflow);
+        assert_eq!((a.width, a.height, a.nodes()), (b.width, b.height, b.nodes()));
+        assert_ne!(a.embedding_tag(), b.embedding_tag());
+        // and the snake-order constructor agrees with the identity
+        // placement embedding
+        assert_eq!(Mesh::new(9).embedding_tag(), Mesh::new(9).embedding_tag());
     }
 
     #[test]

@@ -19,8 +19,8 @@ pub use flow::FlowSim;
 pub use mesh::Mesh;
 pub use sim::{EpochCache, EpochResult, FlitSim, PacketSim};
 
-use crate::config::{NocTopology, SiamConfig};
-use crate::mapping::Traffic;
+use crate::config::{ChipMode, NocTopology, SiamConfig};
+use crate::mapping::{MappingResult, Traffic};
 use crate::metrics::Metrics;
 
 /// Aggregated NoC evaluation for a mapped DNN.
@@ -38,9 +38,17 @@ pub struct NocReport {
     pub avg_packet_latency_cycles: f64,
     /// Per-weight-layer serialized cycles as `(layer position, cycles)`
     /// in layer order (chiplets of one layer max-combined; layers with
-    /// no NoC traffic are absent). Sums to `cycles`; the serving
-    /// simulator turns these into per-stage service times.
+    /// no NoC traffic are absent). Sums to `cycles` on single-kind
+    /// systems; under heterogeneous classes the chiplets of one layer
+    /// may clock differently, so the wall-clock figures live in
+    /// `per_layer_ns` and this stays a raw-cycle diagnostic.
     pub per_layer_cycles: Vec<(usize, u64)>,
+    /// Per-weight-layer serialized wall-clock time as `(layer position,
+    /// ns)`, max-combined across the layer's chiplets in each chiplet's
+    /// own clock domain. Sums to `metrics.latency_ns` under
+    /// heterogeneous classes; the serving simulator turns these into
+    /// per-stage service times.
+    pub per_layer_ns: Vec<(usize, f64)>,
 }
 
 /// Evaluate all NoC epochs of a traffic picture.
@@ -127,6 +135,10 @@ pub fn evaluate_cached(
     };
 
     let clk_ns = 1.0e3 / cfg.chiplet.frequency_mhz;
+    let per_layer_ns: Vec<(usize, f64)> = per_layer_cycles
+        .iter()
+        .map(|&(l, c)| (l, c as f64 * clk_ns))
+        .collect();
     NocReport {
         metrics: Metrics {
             area_um2: area,
@@ -143,6 +155,129 @@ pub fn evaluate_cached(
             lat_sum as f64 / packets as f64
         },
         per_layer_cycles,
+        per_layer_ns,
+    }
+}
+
+/// Class-aware NoC evaluation: like [`evaluate_cached`], but each
+/// chiplet's epochs run on its own class's mesh (tile count) and clock.
+/// Single-kind systems — including the degenerate single-class identity
+/// — take the classic path and are bit-identical to
+/// [`evaluate_cached`]; genuinely heterogeneous systems max-combine a
+/// layer's chiplets in wall-clock ns (clock domains differ per class)
+/// and sum per-class router/link area and leakage.
+pub fn evaluate_mapped(
+    cfg: &SiamConfig,
+    traffic: &Traffic,
+    map: &MappingResult,
+    cache: Option<&EpochCache>,
+) -> NocReport {
+    if !cfg.has_hetero_classes() || cfg.system.chip_mode == ChipMode::Monolithic {
+        return evaluate_cached(cfg, traffic, map.num_chiplets, cache);
+    }
+    let tech = crate::circuit::Tech::from_device(&cfg.device);
+    let classes = cfg.resolved_chiplet_classes();
+    let tile_pitch_mm = 0.7; // ~sqrt of the 0.5 mm² calibrated tile
+    let meshes: Vec<Mesh> = classes
+        .iter()
+        .map(|c| Mesh::new(c.tiles_per_chiplet.max(2)))
+        .collect();
+    let htrees: Vec<htree::HTreeModel> = classes
+        .iter()
+        .map(|c| {
+            htree::HTreeModel::new(
+                c.tiles_per_chiplet.max(2),
+                cfg.chiplet.noc_width,
+                tile_pitch_mm,
+                &tech,
+            )
+        })
+        .collect();
+    let mut sims: Vec<FlowSim> = meshes.iter().map(FlowSim::new).collect();
+    let router = power::router(
+        cfg.chiplet.noc_width,
+        cfg.chiplet.noc_buffer_depth,
+        5,
+        &tech,
+    );
+    let link = power::link(cfg.chiplet.noc_width, tile_pitch_mm, &tech);
+    let mesh_hop_pj = router.flit_energy_pj + link.flit_energy_pj;
+
+    let mut per_key: std::collections::BTreeMap<(usize, usize), u64> = Default::default();
+    let mut packets = 0u64;
+    let mut flit_hops = 0u64;
+    let mut lat_sum = 0u64;
+    let mut energy_pj = 0.0;
+    for ep in &traffic.noc_epochs {
+        let k = map.chiplet_class[ep.chiplet];
+        let (r, hop_pj) = match cfg.chiplet.noc_topology {
+            NocTopology::Mesh => (
+                match cache {
+                    Some(c) => sims[k].run_cached(&ep.flows, c),
+                    None => sims[k].run(&ep.flows),
+                },
+                mesh_hop_pj,
+            ),
+            NocTopology::Tree | NocTopology::HTree => {
+                (htrees[k].run(&ep.flows), htrees[k].flit_level_energy_pj)
+            }
+        };
+        *per_key.entry((ep.layer, ep.chiplet)).or_default() += r.completion_cycles;
+        packets += r.packets;
+        flit_hops += r.flit_hops;
+        lat_sum += r.total_latency_cycles;
+        energy_pj += r.flit_hops as f64 * hop_pj;
+    }
+
+    // per-layer: chiplets of one layer run in parallel; convert each
+    // chiplet's cycles in its own clock domain, then take the max in ns
+    let mut layer_ns: std::collections::BTreeMap<usize, f64> = Default::default();
+    let mut layer_cycles: std::collections::BTreeMap<usize, u64> = Default::default();
+    for ((layer, chiplet), cyc) in per_key {
+        let ns = cyc as f64 * classes[map.chiplet_class[chiplet]].clock_period_ns();
+        let e = layer_ns.entry(layer).or_insert(0.0);
+        *e = (*e).max(ns);
+        let ec = layer_cycles.entry(layer).or_default();
+        *ec = (*ec).max(cyc);
+    }
+    let latency_ns: f64 = layer_ns.values().sum();
+    let cycles: u64 = layer_cycles.values().sum();
+
+    // ---- power & area: per chiplet, by class
+    let (mut area, mut leakage) = (0.0f64, 0.0f64);
+    for &k in &map.chiplet_class {
+        match cfg.chiplet.noc_topology {
+            NocTopology::Mesh => {
+                let m = &meshes[k];
+                let links = (2 * m.width * m.height - m.width - m.height) as f64;
+                let tiles = classes[k].tiles_per_chiplet as f64;
+                area += tiles * router.area_um2 + links * link.area_um2;
+                leakage += tiles * router.leakage_uw;
+            }
+            NocTopology::Tree | NocTopology::HTree => {
+                area += htrees[k].area_um2;
+                leakage += 2.0 * tech.leakage;
+            }
+        }
+    }
+
+    NocReport {
+        metrics: Metrics {
+            area_um2: area,
+            energy_pj,
+            latency_ns,
+            leakage_uw: leakage,
+        },
+        cycles,
+        packets,
+        flit_hops,
+        avg_packet_latency_cycles: if packets == 0 {
+            0.0
+        } else {
+            lat_sum as f64 / packets as f64
+        },
+        per_layer_cycles: layer_cycles.into_iter().collect(),
+        per_layer_ns: layer_ns.into_iter().collect(),
     }
 }
 
@@ -202,6 +337,68 @@ mod tests {
         cfg.chiplet.noc_topology = NocTopology::HTree;
         let htree = report("lenet5", &cfg);
         assert_ne!(mesh.cycles, htree.cycles);
+    }
+
+    #[test]
+    fn per_layer_ns_matches_cycles_on_single_kind() {
+        let cfg = SiamConfig::paper_default();
+        let rep = report("resnet110", &cfg);
+        let clk = cfg.clock_period_ns();
+        assert_eq!(rep.per_layer_ns.len(), rep.per_layer_cycles.len());
+        for (&(l, c), &(ln, ns)) in rep.per_layer_cycles.iter().zip(&rep.per_layer_ns) {
+            assert_eq!(l, ln);
+            assert_eq!(ns.to_bits(), (c as f64 * clk).to_bits());
+        }
+    }
+
+    #[test]
+    fn evaluate_mapped_single_kind_is_bit_identical() {
+        let cfg = SiamConfig::paper_default();
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let a = evaluate(&cfg, &traffic, map.num_chiplets);
+        let b = evaluate_mapped(&cfg, &traffic, &map, None);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.flit_hops, b.flit_hops);
+        assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits());
+        assert_eq!(a.metrics.latency_ns.to_bits(), b.metrics.latency_ns.to_bits());
+        assert_eq!(a.metrics.area_um2.to_bits(), b.metrics.area_um2.to_bits());
+    }
+
+    #[test]
+    fn hetero_classes_clock_and_mesh_per_class() {
+        use crate::config::{ChipletClassConfig, MemCell};
+        let base = SiamConfig::paper_default();
+        let big = ChipletClassConfig::from_base(&base, "big");
+        let mut little = ChipletClassConfig::from_base(&base, "little");
+        little.cell = MemCell::Sram;
+        little.xbar_rows = 64;
+        little.xbar_cols = 64;
+        little.adc_bits = 3;
+        little.frequency_mhz = 500.0; // half-clock little chiplets
+        let cfg = base.with_chiplet_classes(vec![big, little]);
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let rep = evaluate_mapped(&cfg, &traffic, &map, None);
+        assert!(rep.cycles > 0 && rep.packets > 0);
+        assert!(rep.metrics.latency_ns > 0.0 && rep.metrics.area_um2 > 0.0);
+        // per-layer ns partitions the latency exactly
+        let sum: f64 = rep.per_layer_ns.iter().map(|&(_, ns)| ns).sum();
+        assert!((sum - rep.metrics.latency_ns).abs() <= 1e-9 * rep.metrics.latency_ns.max(1.0));
+        // the cache stays transparent on the hetero path too
+        let cache = EpochCache::new();
+        let warm = evaluate_mapped(&cfg, &traffic, &map, Some(&cache));
+        let rewarm = evaluate_mapped(&cfg, &traffic, &map, Some(&cache));
+        for r in [&warm, &rewarm] {
+            assert_eq!(r.cycles, rep.cycles);
+            assert_eq!(r.metrics.latency_ns.to_bits(), rep.metrics.latency_ns.to_bits());
+            assert_eq!(r.metrics.energy_pj.to_bits(), rep.metrics.energy_pj.to_bits());
+        }
+        assert!(cache.hits() > 0, "second hetero evaluation must replay epochs");
     }
 
     #[test]

@@ -133,10 +133,11 @@ fn mix(mut x: u64) -> u64 {
 }
 
 /// Cache key: a 128-bit fingerprint over the complete input of one
-/// epoch simulation — engine discriminant, mesh dimensions and node
-/// count (the snake-order coordinate embedding is a pure function of
-/// those), simulator parameters, and every field of every flow in trace
-/// order.
+/// epoch simulation — engine discriminant, mesh dimensions, node count
+/// and the node→coordinate embedding digest ([`Mesh::embedding_tag`];
+/// dataflow-permuted placements re-embed the same node ids, so
+/// dimensions alone no longer determine coordinates), simulator
+/// parameters, and every field of every flow in trace order.
 ///
 /// Fingerprinting replaces the seed design's `Box<[Flow]>` key: lookups
 /// hash 16 bytes instead of re-hashing the whole trace, misses no
@@ -171,6 +172,7 @@ impl EpochKey {
         feed(mesh.width as u64);
         feed(mesh.height as u64);
         feed(mesh.nodes() as u64);
+        feed(mesh.embedding_tag());
         feed(router_delay);
         feed(flits_per_packet);
         feed(extrapolate as u64);

@@ -12,8 +12,8 @@ pub mod wire;
 pub use driver::{DriverModel, SIGNALING_SURVEY};
 pub use wire::WireModel;
 
-use crate::config::SiamConfig;
-use crate::mapping::{Placement, Traffic};
+use crate::config::{ChipMode, SiamConfig};
+use crate::mapping::{MappingResult, Placement, Traffic};
 use crate::metrics::Metrics;
 use crate::noc::{EpochCache, FlowSim, Mesh};
 
@@ -126,6 +126,108 @@ pub fn evaluate_cached(
     }
 }
 
+/// Class-aware NoP evaluation: like [`evaluate_cached`], but every
+/// chiplet carries its own class's TX/RX driver macro — each link
+/// traversal is re-driven at the *source chiplet's* per-bit energy, and
+/// per-node driver area/leakage follow the class. Timing (packet clock,
+/// channel width, wire model) stays package-wide, so cycle counts match
+/// the classic engine; special nodes (accumulator, DRAM) use the base
+/// `[system.nop]` driver. Single-kind systems — including the
+/// degenerate single-class identity — take the classic path and are
+/// bit-identical to [`evaluate_cached`].
+pub fn evaluate_mapped(
+    cfg: &SiamConfig,
+    traffic: &Traffic,
+    placement: &Placement,
+    map: &MappingResult,
+    cache: Option<&EpochCache>,
+) -> NopReport {
+    if !cfg.has_hetero_classes() || cfg.system.chip_mode == ChipMode::Monolithic {
+        return evaluate_cached(cfg, traffic, placement, cache);
+    }
+    let tech = crate::circuit::Tech::from_device(&cfg.device);
+    let wire = WireModel::new(&cfg.system.nop);
+    let classes = cfg.resolved_chiplet_classes();
+    let drvs: Vec<DriverModel> = classes
+        .iter()
+        .map(|c| DriverModel::new(&c.nop_effective(&cfg.system.nop)))
+        .collect();
+    let base_drv = DriverModel::new(&cfg.system.nop);
+    let drv_of = |node: usize| -> &DriverModel {
+        if node < map.num_chiplets {
+            &drvs[map.chiplet_class[node]]
+        } else {
+            &base_drv
+        }
+    };
+    let mesh = Mesh::from_placement(placement);
+    let mut fsim = FlowSim::new(&mesh);
+
+    let mut per_layer: std::collections::BTreeMap<usize, u64> = Default::default();
+    let mut packets = 0u64;
+    let mut flit_hops = 0u64;
+    for ep in &traffic.nop_epochs {
+        let r = match cache {
+            Some(c) => fsim.run_cached(&ep.flows, c),
+            None => fsim.run(&ep.flows),
+        };
+        *per_layer.entry(ep.layer).or_default() += r.completion_cycles;
+        packets += r.packets;
+        flit_hops += r.flit_hops;
+    }
+    let cycles: u64 = per_layer.values().sum();
+    let per_layer_cycles: Vec<(usize, u64)> = per_layer.into_iter().collect();
+
+    // ---- energy: Algorithm 3 with per-class driver macros — every
+    // link traversal of a flow re-drives the wire at the source
+    // chiplet's E_bit (X–Y routes keep per-flow hop counts analytic:
+    // count × Manhattan distance on the placement).
+    let bits_per_flit = cfg.system.nop.bits_per_cycle() as f64;
+    let bits = flit_hops as f64 * bits_per_flit;
+    let router_e = crate::noc::power::router(
+        cfg.system.nop.channel_width,
+        4,
+        cfg.system.nop.router_ports,
+        &tech,
+    );
+    let mut drv_energy = 0.0;
+    for ep in &traffic.nop_epochs {
+        for f in &ep.flows {
+            let flow_bits = (f.count * mesh.hops(f.src, f.dst) as u64) as f64 * bits_per_flit;
+            drv_energy += flow_bits * drv_of(f.src as usize).ebit_pj;
+        }
+    }
+    let energy_pj = drv_energy + flit_hops as f64 * router_e.flit_energy_pj;
+
+    // ---- area & leakage: per node, with the node's class macro
+    let ports_per_node = 4.0_f64.min(cfg.system.nop.router_ports as f64 - 1.0);
+    let (mut die_area, mut leakage) = (0.0f64, 0.0f64);
+    for node in 0..placement.nodes() {
+        let d = drv_of(node);
+        die_area += ports_per_node * d.area_per_chiplet_um2 + router_e.area_um2;
+        leakage += ports_per_node * d.leakage_uw + router_e.leakage_uw;
+    }
+    let interposer_area = placement.links() as f64 * wire.link_area_um2;
+
+    let clk_ns = 1.0e3 / wire.eff_freq_mhz;
+    NopReport {
+        metrics: Metrics {
+            area_um2: die_area + interposer_area,
+            energy_pj,
+            latency_ns: cycles as f64 * clk_ns,
+            leakage_uw: leakage,
+        },
+        cycles,
+        packets,
+        flit_hops,
+        eff_freq_mhz: wire.eff_freq_mhz,
+        bits,
+        die_area_um2: die_area,
+        interposer_area_um2: interposer_area,
+        per_layer_cycles,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +280,58 @@ mod tests {
             nop.metrics.area_um2,
             noc.metrics.area_um2
         );
+    }
+
+    #[test]
+    fn evaluate_mapped_single_kind_is_bit_identical() {
+        let cfg = SiamConfig::paper_default();
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let a = evaluate(&cfg, &traffic, &pl);
+        let b = evaluate_mapped(&cfg, &traffic, &pl, &map, None);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.flit_hops, b.flit_hops);
+        assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits());
+        assert_eq!(a.metrics.area_um2.to_bits(), b.metrics.area_um2.to_bits());
+        assert_eq!(a.metrics.leakage_uw.to_bits(), b.metrics.leakage_uw.to_bits());
+    }
+
+    #[test]
+    fn cheaper_class_driver_cuts_hetero_energy() {
+        use crate::config::{ChipletClassConfig, MemCell};
+        let base = SiamConfig::paper_default();
+        let mk = |ebit: f64| {
+            let big = ChipletClassConfig::from_base(&base, "big");
+            let mut little = ChipletClassConfig::from_base(&base, "little");
+            little.count = Some(2);
+            little.cell = MemCell::Sram;
+            little.xbar_rows = 64;
+            little.xbar_cols = 64;
+            little.adc_bits = 3;
+            little.nop_ebit_pj = ebit;
+            base.clone().with_chiplet_classes(vec![big, little])
+        };
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        // identical classes except the little driver E_bit: identical
+        // mapping/traffic, so energy must drop strictly and timing must
+        // not move
+        let (cheap_cfg, dear_cfg) = (mk(0.2), mk(0.54));
+        let map = map_dnn(&dnn, &cheap_cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cheap_cfg);
+        let cheap = evaluate_mapped(&cheap_cfg, &traffic, &pl, &map, None);
+        let dear = evaluate_mapped(&dear_cfg, &traffic, &pl, &map, None);
+        assert_eq!(cheap.cycles, dear.cycles, "E_bit must not change timing");
+        assert!(
+            cheap.metrics.energy_pj < dear.metrics.energy_pj,
+            "cheaper little driver must cut NoP energy: {} vs {}",
+            cheap.metrics.energy_pj,
+            dear.metrics.energy_pj
+        );
+        // both classes host chiplets, so some traffic pays each rate
+        assert!(map.chiplets_per_class().iter().all(|&c| c > 0));
     }
 
     #[test]

@@ -106,11 +106,12 @@ pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
     };
 
     // crossbar-weighted per-chiplet busy fraction over the window
+    // (per-chiplet capacity denominators — classes differ in size)
     let window_ns = stats.window_ns().max(1e-9);
-    let cap = graph.chiplet_capacity_xbars.max(1) as f64;
     let mut util = vec![0.0f64; graph.num_chiplets];
     for (spec, &busy) in graph.stages.iter().zip(&stats.stage_busy_ns) {
         for &(c, xbars) in &spec.shares {
+            let cap = graph.chiplet_capacities_xbars[c].max(1) as f64;
             util[c] += busy * xbars as f64 / (cap * window_ns);
         }
     }
@@ -137,6 +138,7 @@ pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
         concurrency,
         num_stages: graph.stages.len(),
         num_chiplets: graph.num_chiplets,
+        classes: graph.single_shot.chiplets_per_class.clone(),
         bottleneck_stage,
         bottleneck_service_ns,
         bottleneck_qps: graph.bottleneck_qps(),

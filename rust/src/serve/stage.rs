@@ -50,8 +50,9 @@ pub struct StageGraph {
     pub stages: Vec<StageSpec>,
     /// Chiplets the architecture contains.
     pub num_chiplets: usize,
-    /// Crossbar capacity per chiplet (utilization denominator).
-    pub chiplet_capacity_xbars: usize,
+    /// Crossbar capacity of each chiplet (per-chiplet utilization
+    /// denominators; heterogeneous classes make these differ).
+    pub chiplet_capacities_xbars: Vec<usize>,
     /// Dynamic energy per request, pJ (compute + NoC + NoP + ingress
     /// DRAM fetch; leakage excluded — it accrues over wall-clock time).
     pub dynamic_energy_pj: f64,
@@ -78,8 +79,8 @@ impl StageGraph {
         let stats = dnn.stats();
         let (map, placement, traffic) = stage_mapping(cfg, &dnn)?;
         let circuit = stage_circuit(cfg, ctx, &dnn, &map, &traffic);
-        let noc = stage_noc(cfg, ctx, &traffic, map.num_chiplets);
-        let nop = stage_nop(cfg, ctx, &traffic, &placement);
+        let noc = stage_noc(cfg, ctx, &traffic, &map);
+        let nop = stage_nop(cfg, ctx, &traffic, &placement, &map);
         let weight_load = stage_dram(cfg, ctx, &stats);
 
         // per-request input fetch: the ingress activations stream in
@@ -89,13 +90,15 @@ impl StageGraph {
             * cfg.dnn.batch as u64;
         let ingress = crate::dram::estimate_with(input_bits.div_ceil(8) as usize, &cfg.dram);
 
-        let clk_noc_ns = cfg.clock_period_ns();
+        // NoC wall-clock comes from the report's per-layer ns (each
+        // chiplet's cycles already converted in its own class's clock
+        // domain); the interposer runs one package-wide clock.
         let clk_nop_ns = 1.0e3 / nop.eff_freq_mhz;
         let noc_ns = |layer: usize| -> f64 {
-            noc.per_layer_cycles
+            noc.per_layer_ns
                 .iter()
                 .find(|&&(l, _)| l == layer)
-                .map_or(0.0, |&(_, c)| c as f64 * clk_noc_ns)
+                .map_or(0.0, |&(_, ns)| ns)
         };
         let nop_ns = |layer: usize| -> f64 {
             nop.per_layer_cycles
@@ -138,18 +141,18 @@ impl StageGraph {
         // monolithic mode reports an unbounded chiplet capacity
         // (usize::MAX); the die physically contains exactly the mapped
         // crossbars, so that is the utilization denominator
-        let chiplet_capacity_xbars = if map.chiplet_capacity == usize::MAX {
-            map.total_xbars().max(1)
-        } else {
-            map.chiplet_capacity
-        };
+        let chiplet_capacities_xbars: Vec<usize> = map
+            .chiplet_capacities
+            .iter()
+            .map(|&cap| if cap == usize::MAX { map.total_xbars().max(1) } else { cap })
+            .collect();
         let single_shot =
             SimReport::assemble(cfg, &dnn, &map, &traffic, circuit, noc, nop, weight_load, 0.0);
 
         Ok(StageGraph {
             stages,
             num_chiplets,
-            chiplet_capacity_xbars,
+            chiplet_capacities_xbars,
             dynamic_energy_pj,
             leakage_uw: single_shot.total.leakage_uw,
             ingress,
@@ -221,7 +224,11 @@ mod tests {
                 used[c] += x;
             }
         }
-        assert!(used.iter().all(|&u| u <= g.chiplet_capacity_xbars));
+        assert_eq!(g.chiplet_capacities_xbars.len(), g.num_chiplets);
+        assert!(used
+            .iter()
+            .zip(&g.chiplet_capacities_xbars)
+            .all(|(&u, &cap)| u <= cap));
     }
 
     #[test]

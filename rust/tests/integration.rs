@@ -197,6 +197,35 @@ fn sparsity_reduces_crossbars() {
 }
 
 #[test]
+fn hetero_biglittle_preset_reduces_nop_energy_vs_homogeneous() {
+    // the heterogeneity acceptance gate, at the library level: the
+    // checked-in big-little preset (class-aware packing + dataflow
+    // placement) must strictly cut NoP energy against the homogeneous
+    // 36-chiplet system on ResNet-110
+    let preset = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/hetero_biglittle.toml");
+    let hetero_cfg = SiamConfig::from_toml_file(preset).unwrap();
+    assert!(hetero_cfg.has_hetero_classes(), "preset must be genuinely heterogeneous");
+    let hetero = simulate(&hetero_cfg).unwrap();
+    assert_eq!(hetero.chiplets_per_class.len(), 2);
+    assert!(
+        hetero.chiplets_per_class.iter().all(|&(_, c)| c > 0),
+        "expected a mixed big-little split, got {:?}",
+        hetero.chiplets_per_class
+    );
+    let homog = simulate(&SiamConfig::paper_default().with_total_chiplets(36)).unwrap();
+    assert!(
+        hetero.nop.energy_pj < homog.nop.energy_pj,
+        "big-little NoP energy {} must undercut homogeneous {}",
+        hetero.nop.energy_pj,
+        homog.nop.energy_pj
+    );
+    // reports carry the split into JSON
+    let j = hetero.to_json().to_string_pretty();
+    let parsed = siam::util::json::parse(&j).expect("hetero report JSON parses");
+    assert!(parsed.get("classes").is_some(), "JSON must list the class split");
+}
+
+#[test]
 fn homogeneous_architecture_variants_rank_sanely() {
     // Fig. 12a at 16 t/c: more homogeneous chiplets => more area & EDAP
     let e36 = simulate(&SiamConfig::paper_default().with_total_chiplets(36)).unwrap();
