@@ -1,0 +1,133 @@
+//! Custom-network frontend walkthrough: author a small hybrid
+//! CNN/transformer in the network-file format, run it end to end
+//! (single-shot simulation, serving, and a design-space sweep), and
+//! show that the checked-in ViT zoo file is bit-identical to its
+//! builtin builder.
+//!
+//! Run with: `cargo run --release --example custom_network`
+//! Authoring guide: `docs/MODELS.md`.
+
+use siam::config::SiamConfig;
+use siam::coordinator::{simulate, SweepBuilder};
+use siam::dnn::{build_model, load_model_file, parse_model_str};
+
+/// A 16-token hybrid network: convolutional patch stem, one pre-norm
+/// attention block, global pool, classifier — the worked example from
+/// docs/MODELS.md.
+const NETWORK: &str = r#"
+[model]
+name = "hybrid_demo"
+dataset = "cifar10"
+input = [32, 32, 3]
+
+[[layer]]
+type = "conv"           # 8x8/8 patch stem -> 4x4x64 (16 tokens)
+name = "patch"
+k = 8
+stride = 8
+out_channels = 64
+
+[[layer]]
+type = "layernorm"
+
+[[layer]]
+type = "attention"
+heads = 4
+
+[[layer]]
+type = "residual"
+from = "patch"
+
+[[layer]]
+type = "conv"           # per-token MLP expansion
+name = "mlp_up"
+k = 1
+out_channels = 256
+
+[[layer]]
+type = "gelu"
+
+[[layer]]
+type = "conv"
+name = "mlp_down"
+k = 1
+out_channels = 64
+
+[[layer]]
+type = "gap"
+
+[[layer]]
+type = "fc"
+out_features = 10
+"#;
+
+fn main() -> anyhow::Result<()> {
+    // ---- author + load the file model
+    let dir = std::env::temp_dir().join("siam_custom_network_example");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("hybrid_demo.toml");
+    std::fs::write(&path, NETWORK)?;
+
+    let dnn = parse_model_str(NETWORK).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let s = dnn.stats();
+    println!(
+        "== {}: {} layers, {:.2}K params, {:.2}M MACs ({:.1}% digital) ==\n",
+        dnn.name,
+        s.total_layers,
+        s.params as f64 / 1e3,
+        s.macs as f64 / 1e6,
+        100.0 * s.digital_macs as f64 / s.macs as f64,
+    );
+
+    // ---- single-shot simulation through `model = "file:..."`
+    let mut cfg = SiamConfig::paper_default();
+    cfg.dnn.model = format!("file:{}", path.display());
+    cfg.serve.requests = 256;
+    cfg.validate()?;
+    let rep = simulate(&cfg)?;
+    println!("{}\n", rep.summary());
+    println!("model source: {}\n", rep.model_source);
+
+    // ---- serving under load
+    let srep = siam::serve::serve(&cfg)?;
+    println!("{}\n", srep.summary());
+
+    // ---- a small sweep, serial vs parallel rankings cross-checked
+    let tiles = [4, 9, 16];
+    let serial = SweepBuilder::new(&cfg).tiles(&tiles).serial().run()?;
+    let parallel = SweepBuilder::new(&cfg).tiles(&tiles).run()?;
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.points.iter().zip(&parallel.points) {
+        assert_eq!(
+            a.report.total.edap().to_bits(),
+            b.report.total.edap().to_bits(),
+            "serial and parallel sweeps must agree bit-for-bit"
+        );
+    }
+    println!("sweep over tiles/chiplet {tiles:?} (serial == parallel, bitwise):");
+    for p in &serial.points {
+        println!(
+            "  {:>2} tiles/chiplet: {} chiplets, EDAP {:.3e}",
+            p.tiles_per_chiplet,
+            p.report.num_chiplets,
+            p.report.total.edap()
+        );
+    }
+
+    // ---- self-hosting: the checked-in ViT file == the builtin builder
+    // (CARGO_MANIFEST_DIR is the rust/ package root)
+    let vit =
+        load_model_file(concat!(env!("CARGO_MANIFEST_DIR"), "/configs/models/vit_tiny.toml"))?;
+    let builtin = build_model("vit_tiny", "imagenet")?;
+    assert!(
+        vit.same_graph(&builtin),
+        "checked-in vit_tiny.toml must match the builtin builder"
+    );
+    println!(
+        "\nself-hosting check: configs/models/vit_tiny.toml == builtin vit_tiny \
+         ({} layers, {:.2}M params)",
+        vit.layers.len(),
+        vit.stats().params as f64 / 1e6
+    );
+    Ok(())
+}

@@ -48,6 +48,9 @@ struct LayerCostKey {
     read_out: ReadOut,
     buffer_type: BufferType,
     frequency_bits: u64,
+    // digital dynamic-matmul work (attention scores) runs on the
+    // accumulator lanes, so their width is circuit-relevant
+    accumulator_size: usize,
 }
 
 impl LayerCostKey {
@@ -76,6 +79,7 @@ impl LayerCostKey {
             read_out: cfg.chiplet.read_out,
             buffer_type: cfg.chiplet.buffer_type,
             frequency_bits: cfg.chiplet.frequency_mhz.to_bits(),
+            accumulator_size: cfg.system.accumulator_size,
         }
     }
 }
@@ -238,7 +242,7 @@ impl<'a> CircuitEstimator<'a> {
         };
         let cycles_per_vec = act_bits * ch.cols_per_adc as f64 * seq_factor;
         let pipeline_depth = 20.0;
-        let latency_ns = (vectors * cycles_per_vec + pipeline_depth) * self.clk_ns();
+        let mut latency_ns = (vectors * cycles_per_vec + pipeline_depth) * self.clk_ns();
 
         // --- energy
         let arr = comp::xbar_array(dev, ch, &self.tech);
@@ -280,11 +284,23 @@ impl<'a> CircuitEstimator<'a> {
         // buffers: read each input vector act_bits-wide per row, write out
         let buf_bits = vectors * (rows_used * act_bits + layer.weight_cols() as f64 * act_bits);
 
-        let energy_pj = conversions * (adc.energy_per_op_pj + mux.energy_per_op_pj)
+        let mut energy_pj = conversions * (adc.energy_per_op_pj + mux.energy_per_op_pj)
             + xbar_cycles * arr.energy_per_op_pj
             + conversions * sa.energy_per_op_pj
             + acc_adds * acc.energy_per_op_pj
             + buf_bits * buf.energy_per_op_pj;
+
+        // Dynamic activation×activation work of the layer (attention
+        // score/value matmuls): both operands are runtime values, so it
+        // cannot live on weight-stationary crossbars — it runs on the
+        // digital accumulator/SIMD lanes (`system.accumulator_size` MACs
+        // per cycle; one multiply + one add per MAC). Zero for every
+        // weight-stationary kind, leaving CNN costs bit-identical.
+        let dmacs = layer.digital_macs() as f64 * self.cfg.dnn.batch as f64;
+        if dmacs > 0.0 {
+            energy_pj += 2.0 * dmacs * acc.energy_per_op_pj;
+            latency_ns += dmacs / self.cfg.system.accumulator_size as f64 * self.clk_ns();
+        }
 
         LayerCircuit {
             energy_pj,
@@ -470,15 +486,27 @@ impl<'a> CircuitEstimator<'a> {
         rep.global_area_um2 =
             gbuf_bits * buf.area_um2 + self.cfg.system.accumulator_size as f64 * gacc.area_um2;
 
-        // ---- pooling / activation units over the non-weight layers
+        // ---- pooling / activation units over the non-weight layers,
+        // plus the digital transformer ops that fall outside the
+        // weight-layer cost rows: standalone dynamic matmuls,
+        // LayerNorm's normalize+scale passes, and embedding-table reads
+        // (attention's own score matmuls are charged in `layer_cost`).
         let (mut pool_elems, mut act_elems) = (0.0, 0.0);
+        let (mut xf_macs, mut xf_elems) = (0.0, 0.0);
         for l in &dnn.layers {
             match l.kind {
                 LayerKind::MaxPool { .. } | LayerKind::AvgPool { .. } | LayerKind::GlobalAvgPool => {
                     pool_elems += l.ifm.elems() as f64
                 }
-                LayerKind::Relu | LayerKind::Sigmoid => act_elems += l.ofm.elems() as f64,
+                LayerKind::Relu | LayerKind::Sigmoid | LayerKind::Gelu => {
+                    act_elems += l.ofm.elems() as f64
+                }
                 LayerKind::ResidualAdd { .. } => act_elems += l.ofm.elems() as f64,
+                LayerKind::Matmul { .. } => xf_macs += l.digital_macs() as f64,
+                // mean/variance reduction pass + scale-shift pass
+                LayerKind::LayerNorm => xf_elems += 2.0 * l.ofm.elems() as f64,
+                // one table read (+ add) per output element
+                LayerKind::Embedding { .. } => xf_elems += l.ofm.elems() as f64,
                 _ => {}
             }
         }
@@ -494,6 +522,20 @@ impl<'a> CircuitEstimator<'a> {
             energy_pj: e_pool + e_act,
             ..Metrics::ZERO
         });
+        if xf_macs > 0.0 || xf_elems > 0.0 {
+            // digital matmul MACs (multiply + add) and element ops run
+            // on the accumulator lanes, `accumulator_size` per cycle
+            let acc_unit = comp::accumulator(tech);
+            let e_xf = (2.0 * xf_macs + xf_elems) * batch * acc_unit.energy_per_op_pj;
+            rep.energy_pj += e_xf;
+            rep.latency_ns += (xf_macs + xf_elems) * batch
+                / self.cfg.system.accumulator_size as f64
+                * self.clk_ns();
+            rep.energy_breakdown.push("digital_xformer", Metrics {
+                energy_pj: e_xf,
+                ..Metrics::ZERO
+            });
+        }
 
         // ---- global accumulator + buffer (paper: gated off when unused)
         let gacc_e = traffic.accumulator_adds as f64 * gacc.energy_per_op_pj;
@@ -628,6 +670,65 @@ mod tests {
         let traffic = build_traffic(&dnn, &map, &pl, &cfg_adc);
         CircuitEstimator::new(&cfg_adc).estimate_cached(&dnn, &map, &traffic, Some(&cache));
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn attention_layer_cost_includes_digital_scores() {
+        // an attention block must cost strictly more than an fc layer of
+        // the same crossbar geometry: the score matmuls are extra
+        use crate::dnn::{Layer, LayerKind, TensorShape};
+        let cfg = SiamConfig::paper_default();
+        let est = CircuitEstimator::new(&cfg);
+        let ifm = TensorShape::new(14, 14, 192);
+        let attn = Layer {
+            name: "attn".into(),
+            kind: LayerKind::Attention { heads: 3, dim: 192 },
+            ifm,
+            ofm: ifm,
+        };
+        let a = est.layer_cost(&attn, 0);
+        assert!(a.energy_pj > 0.0 && a.latency_ns > 0.0);
+        // strip the digital part by comparing against a no-score proxy:
+        // a conv1x1 with the same unrolled matrix and token count
+        let proxy = Layer {
+            name: "proxy".into(),
+            kind: LayerKind::Conv { kh: 1, kw: 1, stride: 1, padding: 0, out_ch: 4 * 192 },
+            ifm,
+            ofm: TensorShape::new(14, 14, 4 * 192),
+        };
+        let p = est.layer_cost(&proxy, 0);
+        assert!(a.energy_pj > p.energy_pj, "scores add energy");
+        assert!(a.latency_ns > p.latency_ns, "scores add latency");
+    }
+
+    #[test]
+    fn vit_estimates_with_digital_breakdown() {
+        let cfg = SiamConfig::paper_default().with_model("vit_tiny", "imagenet");
+        let rep = run("vit_tiny", "imagenet", &cfg);
+        assert!(rep.energy_pj > 0.0 && rep.latency_ns > 0.0);
+        let digital = rep
+            .energy_breakdown
+            .components
+            .iter()
+            .find(|(n, _)| n == "digital_xformer")
+            .map(|(_, m)| m.energy_pj)
+            .expect("transformers report a digital component");
+        assert!(digital > 0.0);
+        // the breakdown still sums to the total
+        let sum: f64 = rep
+            .energy_breakdown
+            .components
+            .iter()
+            .map(|(_, m)| m.energy_pj)
+            .sum();
+        assert!((sum - rep.energy_pj).abs() / rep.energy_pj < 1e-9);
+        // CNNs do not grow the new component
+        let cnn = run("resnet110", "cifar10", &SiamConfig::paper_default());
+        assert!(cnn
+            .energy_breakdown
+            .components
+            .iter()
+            .all(|(n, _)| n != "digital_xformer"));
     }
 
     #[test]

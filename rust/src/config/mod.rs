@@ -10,6 +10,7 @@ mod parse;
 mod types;
 mod validate;
 
+pub(crate) use parse::parse_flat;
 pub use parse::Value;
 pub use types::*;
 pub use validate::ValidationError;

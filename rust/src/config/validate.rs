@@ -73,6 +73,20 @@ impl SiamConfig {
         if self.dnn.batch == 0 {
             return err("batch must be >= 1".into());
         }
+        // model references resolve now, not mid-run: zoo names against
+        // the registry, `file:` models against the filesystem
+        if let Err(e) = crate::dnn::check_model_name(&self.dnn.model, &self.dnn.dataset) {
+            return err(format!("dnn.model: {e}"));
+        }
+        for w in &self.serve.workloads {
+            if w.is_empty() {
+                continue; // reported below with the dedicated message
+            }
+            let (model, dataset) = crate::dnn::split_workload(w, &self.dnn.dataset);
+            if let Err(e) = crate::dnn::check_model_name(model, dataset) {
+                return err(format!("serve.workloads entry '{w}': {e}"));
+            }
+        }
         if let Some(sp) = &self.dnn.sparsity {
             if sp.iter().any(|&s| !(0.0..1.0).contains(&s)) {
                 return err("sparsity values must lie in [0, 1)".into());
@@ -269,6 +283,30 @@ mod tests {
         cfg.chiplet.adc_bits = 0;
         let e = cfg.validate().unwrap_err();
         assert!(e.to_string().contains("ADC"));
+    }
+
+    #[test]
+    fn model_names_resolve_at_validate_time() {
+        // a typo'd model fails validation, not mid-run
+        let mut cfg = SiamConfig::default();
+        cfg.dnn.model = "resent110".into();
+        let e = cfg.validate().unwrap_err().to_string();
+        assert!(e.contains("dnn.model"), "{e}");
+        // a missing file: model fails validation with the path
+        let mut cfg = SiamConfig::default();
+        cfg.dnn.model = "file:/definitely/not/here.toml".into();
+        let e = cfg.validate().unwrap_err().to_string();
+        assert!(e.contains("does not exist"), "{e}");
+        // workload mixes resolve too (model and model:dataset forms)
+        let mut cfg = SiamConfig::default();
+        cfg.serve.workloads = vec!["vgg19:cifar100".into(), "alexnet".into()];
+        let e = cfg.validate().unwrap_err().to_string();
+        assert!(e.contains("alexnet"), "{e}");
+        cfg.serve.workloads = vec!["vgg19:cifar100".into(), "lenet5".into()];
+        assert!(cfg.validate().is_ok());
+        // bad dataset half of a workload entry
+        cfg.serve.workloads = vec!["vgg19:svhn".into()];
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

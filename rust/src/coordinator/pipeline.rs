@@ -30,7 +30,7 @@
 use crate::circuit::{CircuitEstimator, CircuitReport, LayerCostCache};
 use crate::config::{ChipMode, PlacementPolicy, SiamConfig};
 use crate::coordinator::report::SimReport;
-use crate::dnn::{build_model, Dnn, DnnStats};
+use crate::dnn::{resolve_model, Dnn, DnnStats};
 use crate::dram::DramReport;
 use crate::mapping::{build_traffic, map_dnn, MappingResult, Placement, Traffic, TrafficMatrix};
 use crate::noc::{EpochCache, NocReport};
@@ -80,10 +80,11 @@ impl DramKey {
 }
 
 impl SweepContext {
-    /// Build the context for `base`: constructs the DNN graph once and
+    /// Build the context for `base`: constructs the DNN graph once
+    /// (resolving `file:` models through the network-file frontend) and
     /// initializes the shared (empty) stage caches.
     pub fn new(base: &SiamConfig) -> Result<SweepContext> {
-        let dnn = Arc::new(build_model(&base.dnn.model, &base.dnn.dataset)?);
+        let dnn = Arc::new(resolve_model(&base.dnn.model, &base.dnn.dataset)?);
         let stats = dnn.stats();
         Ok(SweepContext {
             dnn,
@@ -123,12 +124,13 @@ impl SweepContext {
 
 /// Stage 1: the DNN layer graph — reused from the context when the
 /// model/dataset match, rebuilt otherwise (correctness guard for callers
-/// that mutate the workload between points).
+/// that mutate the workload between points). `file:` models resolve
+/// through the network-file frontend.
 pub(crate) fn stage_dnn(cfg: &SiamConfig, ctx: &SweepContext) -> Result<Arc<Dnn>> {
     if ctx.matches_model(cfg) {
         Ok(ctx.dnn.clone())
     } else {
-        Ok(Arc::new(build_model(&cfg.dnn.model, &cfg.dnn.dataset)?))
+        Ok(Arc::new(resolve_model(&cfg.dnn.model, &cfg.dnn.dataset)?))
     }
 }
 

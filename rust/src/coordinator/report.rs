@@ -34,10 +34,14 @@ pub fn classes_json(classes: &[(String, usize)]) -> Json {
 /// Complete output of one SIAM run.
 #[derive(Debug, Clone)]
 pub struct SimReport {
-    /// Simulated model (zoo name).
+    /// Simulated model (zoo name or the file's `[model] name`).
     pub model: String,
     /// Dataset variant.
     pub dataset: String,
+    /// Model provenance: `"builtin"`, or `"file:<path>#<fingerprint>"`
+    /// for network-file workloads — sweep artifacts carry this so a
+    /// result can be traced to the exact file content that produced it.
+    pub model_source: String,
     /// Model parameters.
     pub params: usize,
     /// MACs per inference.
@@ -139,7 +143,11 @@ impl SimReport {
 
         SimReport {
             model: dnn.name.clone(),
-            dataset: cfg.dnn.dataset.clone(),
+            // the graph's dataset is authoritative for both sources:
+            // `build_model` stamps the resolved name onto builtins and
+            // file models declare their own
+            dataset: dnn.dataset.clone(),
+            model_source: dnn.source.describe(),
             params: stats.params,
             macs: stats.macs,
             num_chiplets: map.num_chiplets,
@@ -239,6 +247,7 @@ impl SimReport {
         let mut o = Json::obj();
         o.set("model", self.model.as_str())
             .set("dataset", self.dataset.as_str())
+            .set("model_source", self.model_source.as_str())
             .set("params", self.params)
             .set("macs", self.macs)
             .set("num_chiplets", self.num_chiplets)
@@ -277,10 +286,12 @@ impl SimReport {
 /// (produced by [`crate::serve`]).
 #[derive(Debug, Clone)]
 pub struct ServeReport {
-    /// Served model (zoo name).
+    /// Served model (zoo name or the file's `[model] name`).
     pub model: String,
     /// Dataset variant.
     pub dataset: String,
+    /// Model provenance (`"builtin"` or `"file:<path>#<fingerprint>"`).
+    pub model_source: String,
     /// Traffic generator: `"open"` or `"closed"`.
     pub mode: String,
     /// Open-loop offered rate, inferences/s (0 for closed loop).
@@ -415,6 +426,7 @@ impl ServeReport {
         let mut o = Json::obj();
         o.set("model", self.model.as_str())
             .set("dataset", self.dataset.as_str())
+            .set("model_source", self.model_source.as_str())
             .set("mode", self.mode.as_str())
             .set("offered_qps", self.offered_qps)
             .set("concurrency", self.concurrency)

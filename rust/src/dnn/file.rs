@@ -1,0 +1,728 @@
+//! File-based network descriptions: author any supported topology as a
+//! TOML file and run it through the full pipeline with
+//! `[dnn] model = "file:path/to/net.toml"`.
+//!
+//! The format is parsed by the same in-tree TOML-subset parser as the
+//! configuration files, so errors carry line numbers. A model file is a
+//! `[model]` header plus one `[[layer]]` block per layer:
+//!
+//! ```toml
+//! [model]
+//! name = "tiny_vit"
+//! dataset = "cifar10"
+//! input = [32, 32, 3]        # h, w, c
+//!
+//! [[layer]]
+//! type = "conv"              # patch embedding
+//! k = 8
+//! stride = 8
+//! out_channels = 64
+//!
+//! [[layer]]
+//! type = "attention"
+//! heads = 4
+//!
+//! [[layer]]
+//! type = "gap"
+//!
+//! [[layer]]
+//! type = "fc"
+//! out_features = 10
+//! ```
+//!
+//! Shape inference runs over the existing [`LayerKind`] rules exactly as
+//! the built-in zoo builders use them, and the finished graph passes the
+//! same `Dnn::check` consistency pass. [`to_model_toml`] serializes any
+//! chain-with-skips graph (every zoo builtin included) back to the
+//! format, and the round trip reproduces the graph layer-for-layer —
+//! the self-hosting property the `configs/models/` zoo files and their
+//! bit-identity tests rely on.
+//!
+//! Layer reference: see `docs/MODELS.md` for the full authoring guide
+//! (every `type`, its keys, defaults and shape rule).
+
+use super::graph::{Dnn, ModelSource};
+use super::layer::{infer_ofm, Layer, LayerKind, TensorShape};
+use crate::config::{parse_flat, Value};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Load and validate a network-description file.
+///
+/// The returned graph carries a [`ModelSource::File`] provenance tag
+/// with an FNV-1a fingerprint of the file content, which reports and
+/// sweep artifacts surface so results stay reproducible.
+///
+/// # Examples
+///
+/// ```
+/// let text = r#"
+/// [model]
+/// name = "mini"
+/// input = [8, 8, 3]
+///
+/// [[layer]]
+/// type = "conv"
+/// k = 3
+/// padding = 1
+/// out_channels = 8
+///
+/// [[layer]]
+/// type = "relu"
+///
+/// [[layer]]
+/// type = "fc"
+/// out_features = 10
+/// "#;
+/// let dir = std::env::temp_dir().join("siam_doctest_models");
+/// std::fs::create_dir_all(&dir).unwrap();
+/// let path = dir.join("mini.toml");
+/// std::fs::write(&path, text).unwrap();
+/// let dnn = siam::dnn::load_model_file(&path).unwrap();
+/// assert_eq!(dnn.name, "mini");
+/// assert_eq!(dnn.layers.len(), 3);
+/// assert_eq!(dnn.weight_layers(), vec![0, 2]);
+/// ```
+pub fn load_model_file(path: impl AsRef<Path>) -> Result<Dnn> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading model file {path:?}"))?;
+    let mut dnn = parse_model_str(&text)
+        .map_err(|e| anyhow::anyhow!("model file {}: {e}", path.display()))?;
+    dnn.source = ModelSource::File {
+        path: path.display().to_string(),
+        fingerprint: content_fingerprint(&text),
+    };
+    Ok(dnn)
+}
+
+/// FNV-1a fold of the file content — the fingerprint reports carry.
+fn content_fingerprint(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn as_str(v: &Value) -> Option<String> {
+    match v {
+        Value::Str(s) => Some(s.clone()),
+        _ => None,
+    }
+}
+
+fn as_count(v: &Value) -> Option<usize> {
+    match v {
+        Value::Int(i) if *i >= 0 => Some(*i as usize),
+        _ => None,
+    }
+}
+
+/// Parse a network description from TOML text (line-numbered errors).
+/// The graph's `source` is left as `Builtin`; [`load_model_file`] stamps
+/// the file provenance.
+pub fn parse_model_str(text: &str) -> Result<Dnn, String> {
+    let mut m = parse_flat(text)?;
+
+    // ---- [model] header
+    let Some((name_v, name_line)) = m.remove("model.name") else {
+        return Err("missing required key model.name".into());
+    };
+    let name =
+        as_str(&name_v).ok_or_else(|| format!("line {name_line}: model.name must be a string"))?;
+    let dataset = match m.remove("model.dataset") {
+        Some((v, line)) => {
+            as_str(&v).ok_or_else(|| format!("line {line}: model.dataset must be a string"))?
+        }
+        None => "custom".into(),
+    };
+    let Some((input_v, input_line)) = m.remove("model.input") else {
+        return Err("missing required key model.input (= [h, w, c])".into());
+    };
+    let input = match &input_v {
+        Value::Array(a) if a.len() == 3 => {
+            let dim = |x: f64| -> Result<usize, String> {
+                if x.fract() == 0.0 && (1.0..=1e9).contains(&x) {
+                    Ok(x as usize)
+                } else {
+                    Err(format!(
+                        "line {input_line}: model.input entries must be positive integers"
+                    ))
+                }
+            };
+            TensorShape::new(dim(a[0])?, dim(a[1])?, dim(a[2])?)
+        }
+        _ => {
+            return Err(format!(
+                "line {input_line}: model.input must be a 3-element array [h, w, c]"
+            ))
+        }
+    };
+
+    // ---- [[layer]] blocks, in file order (indices are zero-padded by
+    // the flattening parser, so lexicographic id order is file order)
+    const PREFIX: &str = "layer.";
+    let mut ids: Vec<String> = m
+        .keys()
+        .filter_map(|k| k.strip_prefix(PREFIX))
+        .filter_map(|rest| rest.split_once('.').map(|(idx, _)| idx.to_string()))
+        .collect();
+    ids.sort();
+    ids.dedup();
+    if ids.is_empty() {
+        return Err("model file declares no [[layer]] blocks".into());
+    }
+
+    let mut layers: Vec<Layer> = Vec::with_capacity(ids.len());
+    let mut cur = input;
+    for (i, idx) in ids.iter().enumerate() {
+        let p = |field: &str| format!("{PREFIX}{idx}.{field}");
+        let block_line = m
+            .remove(&p("__block__"))
+            .map(|(_, line)| line)
+            .unwrap_or(0);
+        let at = |line: usize| if line > 0 { line } else { block_line };
+
+        // a string key with a default
+        macro_rules! str_key {
+            ($field:expr, $default:expr) => {
+                match m.remove(&p($field)) {
+                    Some((v, line)) => as_str(&v).ok_or_else(|| {
+                        format!("line {}: layer {i} key '{}' must be a string", at(line), $field)
+                    })?,
+                    None => $default,
+                }
+            };
+        }
+        // a non-negative integer key with a default
+        macro_rules! int_key {
+            ($field:expr, $default:expr) => {
+                match m.remove(&p($field)) {
+                    Some((v, line)) => as_count(&v).ok_or_else(|| {
+                        format!(
+                            "line {}: layer {i} key '{}' must be a non-negative integer",
+                            at(line),
+                            $field
+                        )
+                    })?,
+                    None => $default,
+                }
+            };
+        }
+        // an optional key that must be >= 1 when present
+        macro_rules! pos_key {
+            ($field:expr, $default:expr) => {{
+                match m.remove(&p($field)) {
+                    Some((v, line)) => match as_count(&v) {
+                        Some(0) | None => {
+                            return Err(format!(
+                                "line {}: layer {i} key '{}' must be an integer >= 1",
+                                at(line),
+                                $field
+                            ))
+                        }
+                        Some(v) => v,
+                    },
+                    None => $default,
+                }
+            }};
+        }
+        // a required positive integer key
+        macro_rules! req_key {
+            ($field:expr) => {{
+                match m.remove(&p($field)) {
+                    Some((v, line)) => match as_count(&v) {
+                        Some(0) | None => {
+                            return Err(format!(
+                                "line {}: layer {i} key '{}' must be an integer >= 1",
+                                at(line),
+                                $field
+                            ))
+                        }
+                        Some(v) => v,
+                    },
+                    None => {
+                        return Err(format!(
+                            "line {block_line}: layer {i} is missing required key '{}'",
+                            $field
+                        ))
+                    }
+                }
+            }};
+        }
+
+        let ty = match m.remove(&p("type")) {
+            Some((v, line)) => as_str(&v)
+                .ok_or_else(|| format!("line {}: layer {i} 'type' must be a string", at(line)))?,
+            None => return Err(format!("line {block_line}: layer {i} is missing 'type'")),
+        };
+
+        // branch restart: read an earlier layer's output shape (or the
+        // network input) instead of the previous layer's — how
+        // projection shortcuts are expressed in a chain format
+        if let Some((v, line)) = m.remove(&p("from_shape_of")) {
+            cur = match &v {
+                Value::Str(s) if s == "input" => input,
+                _ => {
+                    let j = resolve_ref(&v, &layers)
+                        .map_err(|e| format!("line {line}: layer {i} from_shape_of {e}"))?;
+                    layers[j].ofm
+                }
+            };
+        }
+
+        // skip-edge reference for residual/concat
+        macro_rules! from_ref {
+            () => {
+                match m.remove(&p("from")) {
+                    Some((v, line)) => resolve_ref(&v, &layers)
+                        .map_err(|e| format!("line {line}: layer {i} from {e}"))?,
+                    None => {
+                        return Err(format!(
+                            "line {block_line}: layer {i} ('{ty}') is missing required key 'from'"
+                        ))
+                    }
+                }
+            };
+        }
+
+        let kind = match ty.as_str() {
+            "conv" => {
+                let (kh, kw) = match int_key!("k", 0) {
+                    0 => (req_key!("kh"), req_key!("kw")),
+                    k => (k, k),
+                };
+                let stride = pos_key!("stride", 1);
+                let padding = int_key!("padding", 0);
+                let out_ch = req_key!("out_channels");
+                if cur.h + 2 * padding < kh || cur.w + 2 * padding < kw {
+                    return Err(format!(
+                        "line {block_line}: layer {i} conv kernel {kh}x{kw} exceeds padded \
+                         input {}x{}",
+                        cur.h + 2 * padding,
+                        cur.w + 2 * padding
+                    ));
+                }
+                LayerKind::Conv { kh, kw, stride, padding, out_ch }
+            }
+            "fc" => LayerKind::Fc { out_features: req_key!("out_features") },
+            "maxpool" | "avgpool" => {
+                let k = req_key!("k");
+                let stride = pos_key!("stride", k);
+                let padding = int_key!("padding", 0);
+                if cur.h + 2 * padding < k || cur.w + 2 * padding < k {
+                    return Err(format!(
+                        "line {block_line}: layer {i} pool window {k} exceeds padded input \
+                         {}x{}",
+                        cur.h + 2 * padding,
+                        cur.w + 2 * padding
+                    ));
+                }
+                if ty == "maxpool" {
+                    LayerKind::MaxPool { k, stride, padding }
+                } else {
+                    LayerKind::AvgPool { k, stride, padding }
+                }
+            }
+            "gap" => LayerKind::GlobalAvgPool,
+            "relu" => LayerKind::Relu,
+            "sigmoid" => LayerKind::Sigmoid,
+            "gelu" => LayerKind::Gelu,
+            "layernorm" => LayerKind::LayerNorm,
+            "attention" => {
+                let heads = req_key!("heads");
+                let dim = int_key!("dim", cur.c);
+                if dim != cur.c {
+                    return Err(format!(
+                        "line {block_line}: layer {i} attention dim {dim} != input channels {}",
+                        cur.c
+                    ));
+                }
+                if dim % heads != 0 {
+                    return Err(format!(
+                        "line {block_line}: layer {i} attention heads {heads} must divide \
+                         dim {dim}"
+                    ));
+                }
+                LayerKind::Attention { heads, dim }
+            }
+            "matmul" => LayerKind::Matmul { out_features: req_key!("out_features") },
+            "embedding" => LayerKind::Embedding { vocab: req_key!("vocab"), dim: req_key!("dim") },
+            "residual" => LayerKind::ResidualAdd { from: from_ref!() },
+            "concat" => LayerKind::Concat { from: from_ref!() },
+            other => {
+                return Err(format!(
+                    "line {block_line}: layer {i} has unknown type '{other}' \
+                     (conv|fc|maxpool|avgpool|gap|relu|sigmoid|gelu|layernorm|attention|\
+                     matmul|embedding|residual|concat)"
+                ))
+            }
+        };
+        let lname = str_key!("name", format!("{ty}{i}"));
+        if lname == "input" {
+            return Err(format!(
+                "line {block_line}: layer {i} may not be named 'input' — the name is \
+                 reserved for `from_shape_of = \"input\"` (the network input)"
+            ));
+        }
+
+        let ifm = cur;
+        let mut ofm = infer_ofm(&kind, ifm);
+        if let LayerKind::Concat { from } = kind {
+            ofm.c = ifm.c + layers[from].ofm.c;
+        }
+        layers.push(Layer { name: lname, kind, ifm, ofm });
+        cur = ofm;
+    }
+
+    // any key not consumed above is a typo — report it with its line
+    if let Some((k, (_, line))) = m.iter().next() {
+        return Err(format!("line {line}: unknown key '{k}' in model file"));
+    }
+
+    let dnn = Dnn { name, dataset, input, layers, source: ModelSource::Builtin };
+    dnn.check().map_err(|e| format!("inconsistent network: {e}"))?;
+    Ok(dnn)
+}
+
+/// Resolve a layer reference: an integer index or the name of an
+/// earlier layer (the last layer with that name wins, matching how
+/// builders shadow names).
+fn resolve_ref(v: &Value, layers: &[Layer]) -> Result<usize, String> {
+    match v {
+        Value::Int(i) if *i >= 0 && (*i as usize) < layers.len() => Ok(*i as usize),
+        Value::Int(i) => Err(format!(
+            "index {i} out of range (must reference one of the {} earlier layers)",
+            layers.len()
+        )),
+        Value::Str(s) => layers
+            .iter()
+            .rposition(|l| l.name == *s)
+            .ok_or_else(|| format!("references '{s}', which names no earlier layer")),
+        _ => Err("must be an integer index or an earlier layer's name".into()),
+    }
+}
+
+/// Serialize a graph to the network-file format. Works for every graph
+/// whose branches are expressible as `from_shape_of` restarts — all zoo
+/// builtins included; errors if a layer's input shape matches neither
+/// the running chain, the network input, nor any earlier layer's
+/// output, or if a name contains a character the quote-verbatim TOML
+/// subset cannot carry (`"` or a newline).
+///
+/// # Examples
+///
+/// The export/parse round trip reproduces any builtin layer-for-layer:
+///
+/// ```
+/// let dnn = siam::dnn::build_model("vit_tiny", "imagenet").unwrap();
+/// let text = siam::dnn::to_model_toml(&dnn).unwrap();
+/// let back = siam::dnn::parse_model_str(&text).unwrap();
+/// assert!(dnn.same_graph(&back));
+/// ```
+pub fn to_model_toml(dnn: &Dnn) -> Result<String, String> {
+    use std::fmt::Write;
+    // the TOML subset carries strings verbatim between double quotes
+    // (no escapes), so names containing a quote or a newline have no
+    // serialization — refuse rather than emit text that cannot re-parse
+    let quotable = |what: &str, s: &str| -> Result<(), String> {
+        if s.contains('"') || s.contains('\n') {
+            Err(format!("{what} {s:?} contains a quote or newline and cannot serialize"))
+        } else {
+            Ok(())
+        }
+    };
+    quotable("model name", &dnn.name)?;
+    quotable("dataset", &dnn.dataset)?;
+    for l in &dnn.layers {
+        quotable("layer name", &l.name)?;
+        if l.name == "input" {
+            return Err(
+                "layer name 'input' is reserved by the file format (from_shape_of)".into(),
+            );
+        }
+    }
+    let mut s = String::new();
+    writeln!(s, "[model]").unwrap();
+    writeln!(s, "name = \"{}\"", dnn.name).unwrap();
+    writeln!(s, "dataset = \"{}\"", dnn.dataset).unwrap();
+    writeln!(s, "input = [{}, {}, {}]", dnn.input.h, dnn.input.w, dnn.input.c).unwrap();
+    let mut cur = dnn.input;
+    for (i, l) in dnn.layers.iter().enumerate() {
+        writeln!(s, "\n[[layer]]").unwrap();
+        let ty = match l.kind {
+            LayerKind::Conv { .. } => "conv",
+            LayerKind::Fc { .. } => "fc",
+            LayerKind::MaxPool { .. } => "maxpool",
+            LayerKind::AvgPool { .. } => "avgpool",
+            LayerKind::GlobalAvgPool => "gap",
+            LayerKind::Relu => "relu",
+            LayerKind::Sigmoid => "sigmoid",
+            LayerKind::Gelu => "gelu",
+            LayerKind::LayerNorm => "layernorm",
+            LayerKind::Attention { .. } => "attention",
+            LayerKind::Matmul { .. } => "matmul",
+            LayerKind::Embedding { .. } => "embedding",
+            LayerKind::ResidualAdd { .. } => "residual",
+            LayerKind::Concat { .. } => "concat",
+        };
+        writeln!(s, "type = \"{ty}\"").unwrap();
+        writeln!(s, "name = \"{}\"", l.name).unwrap();
+        if l.ifm != cur {
+            if l.ifm == dnn.input {
+                writeln!(s, "from_shape_of = \"input\"").unwrap();
+            } else {
+                let j = dnn.layers[..i]
+                    .iter()
+                    .rposition(|e| e.ofm == l.ifm)
+                    .ok_or_else(|| {
+                        format!(
+                            "layer {i} ({}) input {:?} matches no earlier output",
+                            l.name, l.ifm
+                        )
+                    })?;
+                writeln!(s, "from_shape_of = {j}").unwrap();
+            }
+        }
+        match l.kind {
+            LayerKind::Conv { kh, kw, stride, padding, out_ch } => {
+                if kh == kw {
+                    writeln!(s, "k = {kh}").unwrap();
+                } else {
+                    writeln!(s, "kh = {kh}").unwrap();
+                    writeln!(s, "kw = {kw}").unwrap();
+                }
+                writeln!(s, "stride = {stride}").unwrap();
+                writeln!(s, "padding = {padding}").unwrap();
+                writeln!(s, "out_channels = {out_ch}").unwrap();
+            }
+            LayerKind::Fc { out_features } | LayerKind::Matmul { out_features } => {
+                writeln!(s, "out_features = {out_features}").unwrap();
+            }
+            LayerKind::MaxPool { k, stride, padding }
+            | LayerKind::AvgPool { k, stride, padding } => {
+                writeln!(s, "k = {k}").unwrap();
+                writeln!(s, "stride = {stride}").unwrap();
+                writeln!(s, "padding = {padding}").unwrap();
+            }
+            LayerKind::Attention { heads, .. } => writeln!(s, "heads = {heads}").unwrap(),
+            LayerKind::Embedding { vocab, dim } => {
+                writeln!(s, "vocab = {vocab}").unwrap();
+                writeln!(s, "dim = {dim}").unwrap();
+            }
+            LayerKind::ResidualAdd { from } | LayerKind::Concat { from } => {
+                writeln!(s, "from = {from}").unwrap();
+            }
+            _ => {}
+        }
+        cur = l.ofm;
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::build_model;
+
+    const MINI: &str = r#"
+# a hand-written hybrid network
+[model]
+name = "mini_hybrid"
+dataset = "cifar10"
+input = [32, 32, 3]
+
+[[layer]]
+type = "conv"
+name = "patch"
+k = 8
+stride = 8
+out_channels = 32          # -> 4x4x32, a 16-token sequence
+
+[[layer]]
+type = "layernorm"
+
+[[layer]]
+type = "attention"
+heads = 4
+
+[[layer]]
+type = "residual"
+from = "patch"
+
+[[layer]]
+type = "conv"
+name = "mlp"
+k = 1
+out_channels = 64
+
+[[layer]]
+type = "gelu"
+
+[[layer]]
+type = "gap"
+
+[[layer]]
+type = "fc"
+out_features = 10
+"#;
+
+    #[test]
+    fn parses_shapes_and_defaults() {
+        let dnn = parse_model_str(MINI).unwrap();
+        assert_eq!(dnn.name, "mini_hybrid");
+        assert_eq!(dnn.dataset, "cifar10");
+        assert_eq!(dnn.layers.len(), 8);
+        assert_eq!(dnn.layers[0].ofm, TensorShape::new(4, 4, 32));
+        // default names carry the type + ordinal
+        assert_eq!(dnn.layers[1].name, "layernorm1");
+        // attention picked up dim from the running channel count
+        assert_eq!(dnn.layers[2].kind, LayerKind::Attention { heads: 4, dim: 32 });
+        // residual resolved by name
+        assert_eq!(dnn.layers[3].kind, LayerKind::ResidualAdd { from: 0 });
+        assert_eq!(dnn.layers[7].ofm, TensorShape::new(1, 1, 10));
+        assert!(dnn.check().is_ok());
+        assert!(dnn.stats().params > 0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        // unknown key inside a layer block
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [8, 8, 3]\n[[layer]]\ntype = \"conv\"\nk = 3\nout_chans = 4\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("line 7"), "{err}");
+        // missing required key names the block's header line
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [8, 8, 3]\n[[layer]]\ntype = \"conv\"\nk = 3\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("out_channels"), "{err}");
+        assert!(err.contains("line 4"), "{err}");
+        // unknown type
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [8, 8, 3]\n[[layer]]\ntype = \"blur\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown type 'blur'"), "{err}");
+        // bad skip reference
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [8, 8, 3]\n[[layer]]\ntype = \"residual\"\nfrom = \"nope\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("'nope'"), "{err}");
+        // attention heads must divide channels
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [4, 4, 10]\n[[layer]]\ntype = \"attention\"\nheads = 3\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("must divide"), "{err}");
+        // oversized kernel caught before shape inference underflows
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [4, 4, 3]\n[[layer]]\ntype = \"conv\"\nk = 7\nout_channels = 4\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+        // missing header keys
+        let err = parse_model_str("[[layer]]\ntype = \"relu\"\n").unwrap_err();
+        assert!(err.contains("model.name"), "{err}");
+    }
+
+    #[test]
+    fn zero_values_rejected_with_their_own_line() {
+        // an explicit stride = 0 is an error, not a silent clamp, and
+        // the message points at the key's line, not the block header
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [8, 8, 3]\n[[layer]]\ntype = \"conv\"\nk = 3\nout_channels = 4\nstride = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("stride"), "{err}");
+        assert!(err.contains("line 8"), "{err}");
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [8, 8, 3]\n[[layer]]\ntype = \"conv\"\nk = 3\nout_channels = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("line 7"), "{err}");
+    }
+
+    #[test]
+    fn unserializable_names_refused() {
+        let mut dnn = parse_model_str(MINI).unwrap();
+        dnn.layers[0].name = "pa\"tch".into();
+        let err = to_model_toml(&dnn).unwrap_err();
+        assert!(err.contains("quote"), "{err}");
+        // "input" is reserved for from_shape_of, both ways
+        let mut dnn = parse_model_str(MINI).unwrap();
+        dnn.layers[0].name = "input".into();
+        assert!(to_model_toml(&dnn).unwrap_err().contains("reserved"));
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [8, 8, 3]\n[[layer]]\ntype = \"relu\"\nname = \"input\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("reserved"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_residual_in_file_rejected() {
+        // a pool between a layer and its residual source changes the
+        // shape — the frontend reports it instead of simulating garbage
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [16, 16, 8]\n\
+             [[layer]]\ntype = \"conv\"\nname = \"c\"\nk = 3\npadding = 1\nout_channels = 8\n\
+             [[layer]]\ntype = \"maxpool\"\nk = 2\n\
+             [[layer]]\ntype = \"residual\"\nfrom = \"c\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("incompatible"), "{err}");
+    }
+
+    #[test]
+    fn round_trips_itself() {
+        let a = parse_model_str(MINI).unwrap();
+        let text = to_model_toml(&a).unwrap();
+        let b = parse_model_str(&text).unwrap();
+        assert!(a.same_graph(&b), "round trip changed the graph");
+    }
+
+    #[test]
+    fn round_trips_every_zoo_builtin() {
+        // self-hosting: any builtin exports to the file format and
+        // parses back layer-for-layer (projection shortcuts ride on
+        // from_shape_of restarts)
+        for name in crate::dnn::zoo_names() {
+            let ds = crate::dnn::default_dataset(name);
+            let a = build_model(name, ds).unwrap();
+            let text = to_model_toml(&a)
+                .unwrap_or_else(|e| panic!("{name} does not serialize: {e}"));
+            let b = parse_model_str(&text)
+                .unwrap_or_else(|e| panic!("{name} round trip failed: {e}"));
+            assert!(a.same_graph(&b), "{name} round trip changed the graph");
+        }
+    }
+
+    #[test]
+    fn load_model_file_stamps_provenance() {
+        let dir = std::env::temp_dir().join("siam_file_model_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mini_hybrid.toml");
+        std::fs::write(&path, MINI).unwrap();
+        let dnn = load_model_file(&path).unwrap();
+        match &dnn.source {
+            ModelSource::File { path: p, fingerprint } => {
+                assert!(p.ends_with("mini_hybrid.toml"));
+                assert_eq!(*fingerprint, super::content_fingerprint(MINI));
+                assert!(dnn.source.describe().starts_with("file:"));
+            }
+            other => panic!("expected file provenance, got {other:?}"),
+        }
+        assert!(load_model_file(dir.join("missing.toml")).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        assert_ne!(content_fingerprint("a"), content_fingerprint("b"));
+        assert_eq!(content_fingerprint(MINI), content_fingerprint(MINI));
+    }
+}

@@ -4,6 +4,36 @@
 use super::layer::{infer_ofm, Layer, LayerKind, TensorShape};
 use super::stats::DnnStats;
 
+/// Where a [`Dnn`] graph came from: a built-in zoo builder or a
+/// user-authored network file (see [`crate::dnn::load_model_file`]).
+/// Reports and sweep artifacts carry this so results stay reproducible —
+/// a file model is identified by its path *and* a fingerprint of its
+/// content at load time.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum ModelSource {
+    /// A zoo builder (`build_model` registry entry).
+    #[default]
+    Builtin,
+    /// A `file:` model description.
+    File {
+        /// Path the file was loaded from.
+        path: String,
+        /// FNV-1a fingerprint of the file content at load time.
+        fingerprint: u64,
+    },
+}
+
+impl ModelSource {
+    /// Stable one-token description for reports and JSON artifacts:
+    /// `"builtin"`, or `"file:<path>#<fingerprint as 16 hex digits>"`.
+    pub fn describe(&self) -> String {
+        match self {
+            ModelSource::Builtin => "builtin".into(),
+            ModelSource::File { path, fingerprint } => format!("file:{path}#{fingerprint:016x}"),
+        }
+    }
+}
+
 /// A DNN workload: layers in topological (execution) order. Branches are
 /// encoded as `ResidualAdd { from }` / `Concat { from }` layers referring
 /// back to earlier layer indices, which is sufficient for the chain-with-
@@ -11,7 +41,7 @@ use super::stats::DnnStats;
 /// engine's sequential-packing semantics identical to the paper's.
 #[derive(Debug, Clone)]
 pub struct Dnn {
-    /// Model name (zoo key).
+    /// Model name (zoo key or the file's `[model] name`).
     pub name: String,
     /// Dataset variant the shapes were built for.
     pub dataset: String,
@@ -19,12 +49,34 @@ pub struct Dnn {
     pub input: TensorShape,
     /// Layers in execution order.
     pub layers: Vec<Layer>,
+    /// Provenance of the graph (builtin builder vs network file).
+    pub source: ModelSource,
 }
 
 impl Dnn {
     /// Aggregate parameter/MAC/buffer statistics.
     pub fn stats(&self) -> DnnStats {
         DnnStats::of(self)
+    }
+
+    /// Structural equality — same name, dataset, input and
+    /// layer-for-layer identical (name, kind, shapes) — ignoring the
+    /// provenance tag. Two graphs that are `same_graph` produce
+    /// bit-identical results through the whole pipeline under one
+    /// configuration; this is what the builtin-vs-file bit-identity
+    /// tests assert on.
+    pub fn same_graph(&self, other: &Dnn) -> bool {
+        self.name == other.name
+            && self.dataset == other.dataset
+            && self.input == other.input
+            && self.layers.len() == other.layers.len()
+            && self
+                .layers
+                .iter()
+                .zip(&other.layers)
+                .all(|(a, b)| {
+                    a.name == b.name && a.kind == b.kind && a.ifm == b.ifm && a.ofm == b.ofm
+                })
     }
 
     /// Indices of weight-bearing layers (the ones mapped to crossbars).
@@ -61,6 +113,50 @@ impl Dnn {
                     if from >= i {
                         return Err(format!(
                             "layer {i} ({}) skip-edge from {from} is not earlier",
+                            l.name
+                        ));
+                    }
+                    let src = self.layers[from].ofm;
+                    let shape_ok = match l.kind {
+                        // elementwise add needs the full shape to agree
+                        LayerKind::ResidualAdd { .. } => src == l.ifm,
+                        // channel concat needs matching spatial dims
+                        _ => src.h == l.ifm.h && src.w == l.ifm.w,
+                    };
+                    if !shape_ok {
+                        return Err(format!(
+                            "layer {i} ({}) skip-edge source {from} has shape {src:?}, \
+                             incompatible with input {:?}",
+                            l.name, l.ifm
+                        ));
+                    }
+                }
+                LayerKind::Attention { heads, dim } => {
+                    if dim != l.ifm.c {
+                        return Err(format!(
+                            "layer {i} ({}) attention dim {dim} != input channels {}",
+                            l.name, l.ifm.c
+                        ));
+                    }
+                    if heads == 0 || dim % heads != 0 {
+                        return Err(format!(
+                            "layer {i} ({}) attention heads {heads} must divide dim {dim}",
+                            l.name
+                        ));
+                    }
+                }
+                LayerKind::Matmul { out_features } => {
+                    if out_features == 0 {
+                        return Err(format!(
+                            "layer {i} ({}) matmul out_features must be >= 1",
+                            l.name
+                        ));
+                    }
+                }
+                LayerKind::Embedding { vocab, dim } => {
+                    if vocab == 0 || dim == 0 {
+                        return Err(format!(
+                            "layer {i} ({}) embedding vocab and dim must be >= 1",
                             l.name
                         ));
                     }
@@ -179,6 +275,33 @@ impl DnnBuilder {
         self.push(name, LayerKind::Fc { out_features })
     }
 
+    /// Append a multi-head self-attention block over the current
+    /// sequence (`dim` = current channel count).
+    pub fn attention(&mut self, name: impl Into<String>, heads: usize) -> usize {
+        let dim = self.cur.c;
+        self.push(name, LayerKind::Attention { heads, dim })
+    }
+
+    /// Append a layer normalization.
+    pub fn layer_norm(&mut self, name: impl Into<String>) -> usize {
+        self.push(name, LayerKind::LayerNorm)
+    }
+
+    /// Append a GELU activation.
+    pub fn gelu(&mut self, name: impl Into<String>) -> usize {
+        self.push(name, LayerKind::Gelu)
+    }
+
+    /// Append a dynamic activation×activation matmul.
+    pub fn matmul(&mut self, name: impl Into<String>, out_features: usize) -> usize {
+        self.push(name, LayerKind::Matmul { out_features })
+    }
+
+    /// Append an embedding lookup / positional-embedding add.
+    pub fn embedding(&mut self, name: impl Into<String>, vocab: usize, dim: usize) -> usize {
+        self.push(name, LayerKind::Embedding { vocab, dim })
+    }
+
     /// Append a residual add reading layer `from`.
     pub fn residual_add(&mut self, name: impl Into<String>, from: usize) -> usize {
         self.push(name, LayerKind::ResidualAdd { from })
@@ -202,6 +325,7 @@ impl DnnBuilder {
             dataset: self.dataset,
             input: self.input,
             layers: self.layers,
+            source: ModelSource::Builtin,
         };
         if let Err(e) = dnn.check() {
             panic!("DnnBuilder produced an inconsistent graph: {e}");
@@ -246,6 +370,78 @@ mod tests {
         b.fc("f", 10);
         let dnn = b.build();
         assert_eq!(dnn.weight_layers(), vec![0, 2]);
+    }
+
+    #[test]
+    fn transformer_block_chains_shapes() {
+        // one pre-norm encoder block on a 2x2 patch grid
+        let mut b = DnnBuilder::new("xf", "custom", (2, 2, 16));
+        let block_in = b.embedding("pos", 4, 16);
+        b.layer_norm("ln1");
+        b.attention("attn", 4);
+        let a = b.residual_add("add1", block_in);
+        b.layer_norm("ln2");
+        b.conv("mlp_fc1", 1, 1, 0, 64);
+        b.gelu("gelu");
+        b.conv("mlp_fc2", 1, 1, 0, 16);
+        b.residual_add("add2", a);
+        let dnn = b.build();
+        assert!(dnn.check().is_ok());
+        assert_eq!(dnn.layers.last().unwrap().ofm, TensorShape::new(2, 2, 16));
+        // attention + the two 1x1 MLP convs own crossbars
+        assert_eq!(dnn.weight_layers().len(), 3);
+        assert_eq!(dnn.source, super::ModelSource::Builtin);
+    }
+
+    #[test]
+    fn attention_dim_mismatch_rejected() {
+        let mut b = DnnBuilder::new("bad", "custom", (2, 2, 16));
+        b.layers.push(Layer {
+            name: "attn".into(),
+            kind: LayerKind::Attention { heads: 2, dim: 32 },
+            ifm: b.cur,
+            ofm: b.cur,
+        });
+        let dnn = Dnn {
+            name: "bad".into(),
+            dataset: "custom".into(),
+            input: TensorShape::new(2, 2, 16),
+            layers: b.layers,
+            source: super::ModelSource::Builtin,
+        };
+        let err = dnn.check().unwrap_err();
+        assert!(err.contains("attention dim"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_skip_edge_shapes_rejected() {
+        // an elementwise add whose source shape differs from its input
+        // is inconsistent even when the index is legal
+        let mut b = DnnBuilder::new("bad", "custom", (16, 16, 8));
+        b.conv("c", 3, 1, 1, 8); // (16,16,8)
+        b.maxpool("p", 2, 2); // (8,8,8)
+        b.layers.push(Layer {
+            name: "res".into(),
+            kind: LayerKind::ResidualAdd { from: 0 },
+            ifm: b.cur,
+            ofm: b.cur,
+        });
+        let dnn = Dnn {
+            name: "bad".into(),
+            dataset: "custom".into(),
+            input: TensorShape::new(16, 16, 8),
+            layers: b.layers,
+            source: super::ModelSource::Builtin,
+        };
+        let err = dnn.check().unwrap_err();
+        assert!(err.contains("incompatible"), "{err}");
+    }
+
+    #[test]
+    fn model_source_describes() {
+        assert_eq!(super::ModelSource::Builtin.describe(), "builtin");
+        let f = super::ModelSource::File { path: "m.toml".into(), fingerprint: 0xabc };
+        assert_eq!(f.describe(), "file:m.toml#0000000000000abc");
     }
 
     #[test]

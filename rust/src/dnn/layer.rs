@@ -24,9 +24,17 @@ impl TensorShape {
     }
 }
 
-/// Layer operator. Only `Conv` and `Fc` carry weights and map onto IMC
-/// crossbars; the rest contribute activations traffic and digital-unit
-/// work (pooling / activation / elementwise add / concat).
+/// Layer operator. `Conv`, `Fc` and the projection half of `Attention`
+/// carry weights and map onto IMC crossbars; the rest contribute
+/// activations traffic and digital-unit work (pooling / activation /
+/// elementwise add / concat / normalization / dynamic matmuls).
+///
+/// Transformer workloads are expressed over the same `(h, w, c)` tensor
+/// shapes as CNNs: a sequence of `L` tokens with hidden size `D` is any
+/// shape with `h·w = L` and `c = D` (e.g. the `14×14×192` patch grid a
+/// ViT patch-embedding convolution produces, or `1×128×768` for a BERT
+/// encoder). Per-token linears (the transformer MLP) are 1×1
+/// convolutions, which unroll to exactly the same crossbar geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayerKind {
     /// 2-D convolution.
@@ -82,6 +90,45 @@ pub enum LayerKind {
         /// Index of the skip-edge source layer.
         from: usize,
     },
+    /// Multi-head self-attention over the `ifm.h · ifm.w` token
+    /// sequence. The Q/K/V/O projections unroll to one `dim × 4·dim`
+    /// weight matrix mapped onto crossbars exactly like [`LayerKind::Fc`]
+    /// (one input vector per token); the `Q·Kᵀ` score and `softmax(S)·V`
+    /// matmuls are dynamic activation×activation products executed on
+    /// the digital side (see [`Layer::digital_macs`]). Requires
+    /// `ifm.c == dim` and `heads | dim` (checked by `Dnn::check`).
+    Attention {
+        /// Number of attention heads (must divide `dim`).
+        heads: usize,
+        /// Model (hidden) dimension; must equal the input channel count.
+        dim: usize,
+    },
+    /// Dynamic activation×activation matrix multiply: the `(L × c)`
+    /// token matrix times a runtime `(c × out_features)` operand.
+    /// Carries no weights — all `ifm.elems() × out_features` MACs run
+    /// on the digital side (standalone score/value products outside an
+    /// [`LayerKind::Attention`] block).
+    Matmul {
+        /// Columns of the dynamic right-hand operand.
+        out_features: usize,
+    },
+    /// Layer normalization over the channel axis (learnable per-channel
+    /// scale and shift; 2·c parameters, digital-unit work).
+    LayerNorm,
+    /// Gaussian-error linear unit activation (LUT-based digital unit,
+    /// like [`LayerKind::Sigmoid`]).
+    Gelu,
+    /// Embedding-table lookup / positional-embedding add: a learnable
+    /// `vocab × dim` table read per token. With `ifm.c == dim` it is a
+    /// positional add (shape-preserving); otherwise a token lookup that
+    /// rewrites the channel count to `dim`. The table lives in the
+    /// global buffer / DRAM, not on crossbars.
+    Embedding {
+        /// Table rows (vocabulary size or sequence positions).
+        vocab: usize,
+        /// Embedding width; becomes the output channel count.
+        dim: usize,
+    },
 }
 
 /// One node of the DNN graph with inferred input/output shapes.
@@ -99,55 +146,96 @@ pub struct Layer {
 }
 
 impl Layer {
+    /// Sequence length when the layer is read as a token sequence
+    /// (`ifm.h · ifm.w`).
+    pub fn seq_len(&self) -> usize {
+        self.ifm.h * self.ifm.w
+    }
+
     /// Weight parameters (zero for non-weight layers). Biases included.
+    /// `LayerNorm` (scale+shift) and `Embedding` (the lookup table)
+    /// carry parameters without owning crossbars.
     pub fn params(&self) -> usize {
         match self.kind {
             LayerKind::Conv { kh, kw, out_ch, .. } => kh * kw * self.ifm.c * out_ch + out_ch,
             LayerKind::Fc { out_features } => self.ifm.elems() * out_features + out_features,
+            LayerKind::Attention { dim, .. } => 4 * dim * dim + 4 * dim,
+            LayerKind::LayerNorm => 2 * self.ifm.c,
+            LayerKind::Embedding { vocab, dim } => vocab * dim,
             _ => 0,
         }
     }
 
-    /// Multiply-accumulate operations for one inference.
+    /// Multiply-accumulate operations for one inference (crossbar-mapped
+    /// and digital MACs combined; see [`Layer::digital_macs`] for the
+    /// digital-only share).
     pub fn macs(&self) -> usize {
         match self.kind {
             LayerKind::Conv { kh, kw, .. } => self.ofm.elems() * kh * kw * self.ifm.c,
             LayerKind::Fc { out_features } => self.ifm.elems() * out_features,
+            // Q/K/V/O projections (L·4·D²) + score/value matmuls (2·L²·D)
+            LayerKind::Attention { dim, .. } => {
+                self.seq_len() * 4 * dim * dim + self.digital_macs()
+            }
+            LayerKind::Matmul { .. } => self.digital_macs(),
+            _ => 0,
+        }
+    }
+
+    /// MACs executed on the digital side (accumulator/SIMD lanes)
+    /// because one operand is a runtime activation: the score and value
+    /// matmuls of [`LayerKind::Attention`] (`2·L²·D`) and the whole of
+    /// [`LayerKind::Matmul`]. Zero for every weight-stationary kind.
+    pub fn digital_macs(&self) -> usize {
+        match self.kind {
+            LayerKind::Attention { dim, .. } => {
+                let l = self.seq_len();
+                2 * l * l * dim
+            }
+            LayerKind::Matmul { out_features } => self.ifm.elems() * out_features,
             _ => 0,
         }
     }
 
     /// Does this layer own IMC crossbars?
     pub fn is_weight_layer(&self) -> bool {
-        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+        matches!(
+            self.kind,
+            LayerKind::Conv { .. } | LayerKind::Fc { .. } | LayerKind::Attention { .. }
+        )
     }
 
-    /// Rows of the unrolled weight matrix (Kx·Ky·Nif for conv, K for fc) —
-    /// the numerator of N_r in Eq. 1.
+    /// Rows of the unrolled weight matrix (Kx·Ky·Nif for conv, K for fc,
+    /// D for attention) — the numerator of N_r in Eq. 1.
     pub fn weight_rows(&self) -> usize {
         match self.kind {
             LayerKind::Conv { kh, kw, .. } => kh * kw * self.ifm.c,
             LayerKind::Fc { .. } => self.ifm.elems(),
+            LayerKind::Attention { dim, .. } => dim,
             _ => 0,
         }
     }
 
-    /// Columns of the unrolled weight matrix (Nof) — the numerator of N_c
-    /// in Eq. 1 before the ×N_bits bit-slicing.
+    /// Columns of the unrolled weight matrix (Nof for conv/fc, the fused
+    /// 4·D Q/K/V/O projection block for attention) — the numerator of
+    /// N_c in Eq. 1 before the ×N_bits bit-slicing.
     pub fn weight_cols(&self) -> usize {
         match self.kind {
             LayerKind::Conv { out_ch, .. } => out_ch,
             LayerKind::Fc { out_features } => out_features,
+            LayerKind::Attention { dim, .. } => 4 * dim,
             _ => 0,
         }
     }
 
     /// Number of input vectors pushed through the crossbars per inference
-    /// (spatial positions for conv, 1 for fc).
+    /// (spatial positions for conv, 1 for fc, one per token for
+    /// attention projections).
     pub fn input_vectors(&self) -> usize {
         match self.kind {
             LayerKind::Conv { .. } => self.ofm.h * self.ofm.w,
             LayerKind::Fc { .. } => 1,
+            LayerKind::Attention { .. } => self.seq_len(),
             _ => 0,
         }
     }
@@ -176,8 +264,15 @@ pub fn infer_ofm(kind: &LayerKind, ifm: TensorShape) -> TensorShape {
             )
         }
         LayerKind::GlobalAvgPool => TensorShape::new(1, 1, ifm.c),
-        LayerKind::Relu | LayerKind::Sigmoid | LayerKind::ResidualAdd { .. } => ifm,
+        LayerKind::Relu
+        | LayerKind::Sigmoid
+        | LayerKind::Gelu
+        | LayerKind::LayerNorm
+        | LayerKind::Attention { .. }
+        | LayerKind::ResidualAdd { .. } => ifm,
         LayerKind::Concat { .. } => ifm, // channel count fixed by the builder
+        LayerKind::Matmul { out_features } => TensorShape::new(ifm.h, ifm.w, out_features),
+        LayerKind::Embedding { dim, .. } => TensorShape::new(ifm.h, ifm.w, dim),
     }
 }
 
@@ -226,6 +321,59 @@ mod tests {
         assert_eq!(l.weight_rows(), 27);
         assert_eq!(l.weight_cols(), 16);
         assert_eq!(l.input_vectors(), 1024);
+    }
+
+    #[test]
+    fn attention_geometry_and_macs() {
+        // 196 tokens × 192 channels (a ViT-Tiny block)
+        let ifm = TensorShape::new(14, 14, 192);
+        let kind = LayerKind::Attention { heads: 3, dim: 192 };
+        assert_eq!(infer_ofm(&kind, ifm), ifm);
+        let l = Layer {
+            name: "attn".into(),
+            kind,
+            ifm,
+            ofm: ifm,
+        };
+        assert!(l.is_weight_layer());
+        assert_eq!(l.seq_len(), 196);
+        assert_eq!(l.params(), 4 * 192 * 192 + 4 * 192);
+        assert_eq!(l.weight_rows(), 192);
+        assert_eq!(l.weight_cols(), 4 * 192);
+        assert_eq!(l.input_vectors(), 196);
+        assert_eq!(l.digital_macs(), 2 * 196 * 196 * 192);
+        assert_eq!(l.macs(), 196 * 4 * 192 * 192 + 2 * 196 * 196 * 192);
+    }
+
+    #[test]
+    fn transformer_digital_kinds() {
+        let ifm = TensorShape::new(1, 8, 16);
+        // matmul: dynamic product, no weights, all MACs digital
+        let mm = LayerKind::Matmul { out_features: 4 };
+        assert_eq!(infer_ofm(&mm, ifm), TensorShape::new(1, 8, 4));
+        let l = Layer { name: "mm".into(), kind: mm, ifm, ofm: infer_ofm(&mm, ifm) };
+        assert!(!l.is_weight_layer());
+        assert_eq!(l.params(), 0);
+        assert_eq!(l.digital_macs(), 8 * 16 * 4);
+        assert_eq!(l.macs(), l.digital_macs());
+        // layernorm: shape-preserving, 2c params
+        let ln = Layer {
+            name: "ln".into(),
+            kind: LayerKind::LayerNorm,
+            ifm,
+            ofm: infer_ofm(&LayerKind::LayerNorm, ifm),
+        };
+        assert_eq!(ln.ofm, ifm);
+        assert_eq!(ln.params(), 32);
+        assert!(!ln.is_weight_layer());
+        // gelu: shape-preserving, no params
+        assert_eq!(infer_ofm(&LayerKind::Gelu, ifm), ifm);
+        // embedding: rewrites channels to dim, vocab·dim params
+        let em = LayerKind::Embedding { vocab: 100, dim: 24 };
+        assert_eq!(infer_ofm(&em, ifm), TensorShape::new(1, 8, 24));
+        let l = Layer { name: "em".into(), kind: em, ifm, ofm: infer_ofm(&em, ifm) };
+        assert_eq!(l.params(), 2400);
+        assert!(!l.is_weight_layer());
     }
 
     #[test]

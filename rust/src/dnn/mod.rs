@@ -1,34 +1,88 @@
-//! DNN workload representation: layer graph, shape inference and the
-//! model zoo the paper evaluates (LeNet-5, ResNet-20/56/110, ResNet-50,
-//! VGG-16/19, DenseNet, NiN, DriveNet).
+//! DNN workload representation: layer graph, shape inference, the model
+//! zoo the paper evaluates (LeNet-5, ResNet-20/56/110, ResNet-50,
+//! VGG-16/19, DenseNet, NiN, DriveNet) plus transformer workloads
+//! (ViT-Tiny/Small, a BERT-base-class encoder), and the file-based
+//! network frontend (`model = "file:net.toml"`, see [`file`]).
 //!
 //! The partition & mapping engine consumes only layer *shapes* — kernel
 //! geometry, feature-map sizes, branch structure — so the zoo builds
 //! weight-free graphs. Parameter counts are exposed for the cost and DRAM
 //! engines and are asserted against the paper's reported sizes in tests.
 
+pub mod file;
 pub mod graph;
 pub mod layer;
 pub mod models;
 pub mod stats;
 
-pub use graph::Dnn;
+pub use file::{load_model_file, parse_model_str, to_model_toml};
+pub use graph::{Dnn, ModelSource};
 pub use layer::{Layer, LayerKind, TensorShape};
 pub use stats::DnnStats;
 
 use anyhow::{bail, Result};
 
+/// Resolve a `[dnn] model` value: a `file:` prefix loads a network
+/// description through [`load_model_file`] (the file declares its own
+/// input shape and dataset — `dataset` is ignored); anything else is a
+/// zoo name handed to [`build_model`].
+pub fn resolve_model(model: &str, dataset: &str) -> Result<Dnn> {
+    match model.strip_prefix("file:") {
+        Some(path) => load_model_file(path),
+        None => build_model(model, dataset),
+    }
+}
+
+/// `(input shape, classes)` of a dataset name — the single vocabulary
+/// shared by [`build_model`] and [`check_model_name`], so the two can
+/// never drift. `None` for unknown datasets.
+pub fn dataset_spec(dataset: &str) -> Option<((usize, usize, usize), usize)> {
+    match dataset.to_ascii_lowercase().as_str() {
+        "cifar10" => Some(((32, 32, 3), 10)),
+        "cifar100" => Some(((32, 32, 3), 100)),
+        "imagenet" => Some(((224, 224, 3), 1000)),
+        "drivenet" | "driving" => Some(((66, 200, 3), 10)),
+        // a 128-token id sequence, binary classification (BERT-class
+        // encoders; GLUE-style fine-tuning heads)
+        "seq128" => Some(((1, 128, 1), 2)),
+        _ => None,
+    }
+}
+
+/// The token-id `seq128` input is 1×128×1 — convolutional stems would
+/// underflow on it, so it only pairs with token models. Shared by
+/// [`build_model`] and [`check_model_name`] so the crashing combination
+/// is rejected at validate time, never mid-run.
+fn dataset_supports_model(name: &str, ds: &str) -> Result<(), String> {
+    if ds == "seq128" && name != "bert_base" {
+        return Err(format!(
+            "dataset 'seq128' is a token-id sequence; model '{name}' needs an image \
+             dataset (seq128 pairs with bert_base)"
+        ));
+    }
+    Ok(())
+}
+
 /// Resolve a model-zoo entry by name. Dataset selects the input
-/// resolution / class count variant.
+/// resolution / class count variant; the returned graph carries the
+/// resolved (lowercased) dataset name, not any builder-internal family
+/// tag, so exports and file-model reports stay in the documented
+/// dataset vocabulary.
 pub fn build_model(name: &str, dataset: &str) -> Result<Dnn> {
     let ds = dataset.to_ascii_lowercase();
-    let (input, classes) = match ds.as_str() {
-        "cifar10" => ((32, 32, 3), 10),
-        "cifar100" => ((32, 32, 3), 100),
-        "imagenet" => ((224, 224, 3), 1000),
-        "drivenet" | "driving" => ((66, 200, 3), 10),
-        other => bail!("unknown dataset '{other}' (cifar10|cifar100|imagenet|drivenet)"),
+    let Some((input, classes)) = dataset_spec(&ds) else {
+        bail!("unknown dataset '{ds}' (cifar10|cifar100|imagenet|drivenet|seq128)");
     };
+    let name_lc = name.to_ascii_lowercase();
+    if let Err(e) = dataset_supports_model(&name_lc, &ds) {
+        bail!("{e}");
+    }
+    let mut dnn = build_zoo_entry(&name_lc, input, classes)?;
+    dnn.dataset = ds;
+    Ok(dnn)
+}
+
+fn build_zoo_entry(name: &str, input: (usize, usize, usize), classes: usize) -> Result<Dnn> {
     match name.to_ascii_lowercase().as_str() {
         "lenet5" => Ok(models::lenet::lenet5(input, classes)),
         "nin" => Ok(models::nin::nin(input, classes)),
@@ -41,8 +95,21 @@ pub fn build_model(name: &str, dataset: &str) -> Result<Dnn> {
         "densenet40" => Ok(models::densenet::densenet(40, 12, input, classes)),
         "densenet110" => Ok(models::densenet::densenet(100, 24, input, classes)),
         "drivenet" => Ok(models::drivenet::drivenet(classes)),
+        "vit_tiny" => Ok(models::transformer::vit("vit_tiny", 12, 192, 3, 16, input, classes)),
+        "vit_small" => Ok(models::transformer::vit("vit_small", 12, 384, 6, 16, input, classes)),
+        "bert_base" => Ok(models::transformer::bert_encoder(
+            "bert_base",
+            12,
+            768,
+            12,
+            30522,
+            512,
+            input,
+            classes,
+        )),
         other => bail!(
-            "unknown model '{other}' (lenet5|nin|resnet20|resnet56|resnet110|resnet50|vgg16|vgg19|densenet40|densenet110|drivenet)"
+            "unknown model '{other}' (lenet5|nin|resnet20|resnet56|resnet110|resnet50|vgg16|\
+             vgg19|densenet40|densenet110|drivenet|vit_tiny|vit_small|bert_base)"
         ),
     }
 }
@@ -61,7 +128,65 @@ pub fn zoo_names() -> &'static [&'static str] {
         "densenet40",
         "densenet110",
         "drivenet",
+        "vit_tiny",
+        "vit_small",
+        "bert_base",
     ]
+}
+
+/// The canonical dataset of a zoo entry (the one its published figures
+/// are quoted for) — used by the CLI `models` listing and the tests.
+pub fn default_dataset(name: &str) -> &'static str {
+    match name {
+        "resnet50" | "vgg16" | "vit_tiny" | "vit_small" => "imagenet",
+        "vgg19" => "cifar100",
+        "drivenet" => "drivenet",
+        "bert_base" => "seq128",
+        _ => "cifar10",
+    }
+}
+
+/// Split a `[serve] workloads` entry into `(model, dataset)`. Entries
+/// are `"model"`, `"model:dataset"`, or a whole `"file:path"` reference
+/// — file models carry their own dataset, so the colon after `file` is
+/// part of the reference, not a dataset separator.
+pub fn split_workload<'a>(entry: &'a str, default_dataset: &'a str) -> (&'a str, &'a str) {
+    if entry.starts_with("file:") {
+        return (entry, default_dataset);
+    }
+    match entry.split_once(':') {
+        Some((m, d)) => (m, d),
+        None => (entry, default_dataset),
+    }
+}
+
+/// Check a `[dnn]`/`[serve]` model reference without building it, for
+/// config-validate-time errors: a `file:` path must exist on disk, and
+/// a zoo name must be in the registry with a known dataset. Returns the
+/// actionable message validation surfaces.
+pub fn check_model_name(model: &str, dataset: &str) -> Result<(), String> {
+    if let Some(path) = model.strip_prefix("file:") {
+        if path.is_empty() {
+            return Err("model 'file:' needs a path (file:path/to/net.toml)".into());
+        }
+        if !std::path::Path::new(path).exists() {
+            return Err(format!("model file '{path}' does not exist"));
+        }
+        return Ok(());
+    }
+    let name = model.to_ascii_lowercase();
+    if !zoo_names().contains(&name.as_str()) {
+        return Err(format!(
+            "unknown model '{model}' (zoo: {}; or file:path/to/net.toml)",
+            zoo_names().join("|")
+        ));
+    }
+    if dataset_spec(dataset).is_none() {
+        return Err(format!(
+            "unknown dataset '{dataset}' (cifar10|cifar100|imagenet|drivenet|seq128)"
+        ));
+    }
+    dataset_supports_model(&name, &dataset.to_ascii_lowercase())
 }
 
 #[cfg(test)]
@@ -71,15 +196,11 @@ mod tests {
     #[test]
     fn zoo_builds_all() {
         for name in zoo_names() {
-            let ds = match *name {
-                "resnet50" | "vgg16" => "imagenet",
-                "vgg19" => "cifar100",
-                "drivenet" => "drivenet",
-                _ => "cifar10",
-            };
-            let dnn = build_model(name, ds).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let dnn = build_model(name, default_dataset(name))
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
             assert!(!dnn.layers.is_empty(), "{name} has layers");
             assert!(dnn.stats().params > 0, "{name} has params");
+            assert_eq!(dnn.source, ModelSource::Builtin);
         }
     }
 
@@ -87,6 +208,51 @@ mod tests {
     fn unknown_model_is_an_error() {
         assert!(build_model("alexnet", "cifar10").is_err());
         assert!(build_model("resnet110", "svhn").is_err());
+        assert!(check_model_name("alexnet", "cifar10").is_err());
+        assert!(check_model_name("resnet110", "svhn").is_err());
+        assert!(check_model_name("resnet110", "cifar10").is_ok());
+        assert!(check_model_name("file:", "cifar10").is_err());
+        assert!(check_model_name("file:/nonexistent/net.toml", "cifar10").is_err());
+    }
+
+    #[test]
+    fn seq128_requires_a_token_model() {
+        // conv stems underflow on the 1x128x1 token input — rejected at
+        // validate/build time, never a mid-run panic
+        assert!(build_model("lenet5", "seq128").is_err());
+        assert!(build_model("vit_tiny", "seq128").is_err());
+        assert!(check_model_name("lenet5", "seq128").is_err());
+        assert!(check_model_name("bert_base", "seq128").is_ok());
+        assert!(build_model("bert_base", "seq128").is_ok());
+    }
+
+    #[test]
+    fn build_model_stamps_resolved_dataset() {
+        // builder-internal family tags ("any", "cifar") never leak into
+        // the graph — exports and file-model reports stay in the
+        // documented dataset vocabulary
+        assert_eq!(build_model("vgg16", "imagenet").unwrap().dataset, "imagenet");
+        assert_eq!(build_model("resnet110", "CIFAR10").unwrap().dataset, "cifar10");
+        assert_eq!(build_model("bert_base", "seq128").unwrap().dataset, "seq128");
+        assert_eq!(dataset_spec("cifar100"), Some(((32, 32, 3), 100)));
+        assert_eq!(dataset_spec("svhn"), None);
+    }
+
+    #[test]
+    fn workload_entries_split() {
+        assert_eq!(split_workload("resnet110", "cifar10"), ("resnet110", "cifar10"));
+        assert_eq!(split_workload("vgg19:cifar100", "cifar10"), ("vgg19", "cifar100"));
+        // file references keep their colon — the file declares its dataset
+        assert_eq!(
+            split_workload("file:configs/models/vit_tiny.toml", "cifar10"),
+            ("file:configs/models/vit_tiny.toml", "cifar10")
+        );
+    }
+
+    #[test]
+    fn resolve_model_dispatches() {
+        assert_eq!(resolve_model("lenet5", "cifar10").unwrap().name, "lenet5");
+        assert!(resolve_model("file:/nonexistent/net.toml", "cifar10").is_err());
     }
 
     /// Parameter counts vs the paper (Section 6.1): ResNet-110 1.7M,
@@ -129,5 +295,29 @@ mod tests {
             27.2e6,
             0.20,
         );
+    }
+
+    /// Transformer golden figures (tighter than the paper CNNs: these
+    /// are pinned against the published reference implementations —
+    /// timm ViTs, huggingface BERT-base; the documented omissions are
+    /// < 1 % of parameters).
+    #[test]
+    fn transformer_goldens_match_published() {
+        let close = |got: usize, want: f64, tol: f64, what: &str| {
+            let got = got as f64;
+            assert!(
+                (got - want).abs() / want < tol,
+                "{what}: {got} vs published {want}"
+            );
+        };
+        let vt = build_model("vit_tiny", "imagenet").unwrap().stats();
+        close(vt.params, 5.72e6, 0.02, "vit_tiny params");
+        close(vt.macs, 1.26e9, 0.05, "vit_tiny MACs");
+        let vs = build_model("vit_small", "imagenet").unwrap().stats();
+        close(vs.params, 22.05e6, 0.02, "vit_small params");
+        close(vs.macs, 4.6e9, 0.05, "vit_small MACs");
+        let bb = build_model("bert_base", "seq128").unwrap().stats();
+        close(bb.params, 109.5e6, 0.02, "bert_base params");
+        close(bb.macs, 11.2e9, 0.05, "bert_base MACs");
     }
 }

@@ -1,8 +1,10 @@
-//! Model zoo: builders for every DNN the paper evaluates.
+//! Model zoo: builders for every DNN the paper evaluates, plus the
+//! transformer workloads (ViT image encoders, BERT-class text encoder).
 
 pub mod densenet;
 pub mod drivenet;
 pub mod lenet;
 pub mod nin;
 pub mod resnet;
+pub mod transformer;
 pub mod vgg;

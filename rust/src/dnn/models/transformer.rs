@@ -1,0 +1,139 @@
+//! Transformer builders: ViT image encoders (patch-embedding
+//! convolution + pre-norm encoder blocks) and a BERT-class text encoder
+//! (token/positional embeddings + the same block structure).
+//!
+//! Both express a token sequence of length `L` with hidden size `D` as
+//! an `(h, w, c)` tensor with `h·w = L`, `c = D` (the patch grid for
+//! ViT, `1×L` for BERT), so the entire mapping / circuit / interconnect
+//! stack consumes them unchanged: attention projections and the 1×1-conv
+//! MLP linears map onto crossbars like any conv/fc layer, while the
+//! score matmuls, softmax, GELU and LayerNorm run on the digital side.
+//!
+//! Omitted relative to the reference implementations (documented so the
+//! golden param tests read honestly): the ViT class token (we pool with
+//! a global average instead, as DeiT-style models do), BERT's
+//! token-type embeddings and pooler head. Both are < 1 % of parameters.
+
+use crate::dnn::graph::{Dnn, DnnBuilder};
+
+/// A ViT-style encoder: `patch×patch`/`patch` embedding convolution,
+/// learned positional embeddings, `depth` pre-norm encoder blocks of
+/// width `dim` with `heads` attention heads and a 4× MLP, final
+/// LayerNorm, global average pool and a linear classifier head.
+pub fn vit(
+    name: &str,
+    depth: usize,
+    dim: usize,
+    heads: usize,
+    patch: usize,
+    input: (usize, usize, usize),
+    classes: usize,
+) -> Dnn {
+    let mut b = DnnBuilder::new(name, "imagenet", input);
+    b.conv("patch_embed", patch, patch, 0, dim);
+    let grid = b.shape();
+    b.embedding("pos_embed", grid.h * grid.w, dim);
+    encoder_blocks(&mut b, depth, heads, dim);
+    b.layer_norm("ln_final");
+    b.global_avgpool("gap");
+    b.fc("head", classes);
+    b.build()
+}
+
+/// A BERT-class text encoder: token embedding (`vocab × dim`), learned
+/// positional embeddings over `max_pos` positions, `depth` pre-norm
+/// encoder blocks, final LayerNorm, mean pooling and a classifier head.
+/// The input is a `1 × seq × 1` token-id sequence.
+#[allow(clippy::too_many_arguments)]
+pub fn bert_encoder(
+    name: &str,
+    depth: usize,
+    dim: usize,
+    heads: usize,
+    vocab: usize,
+    max_pos: usize,
+    input: (usize, usize, usize),
+    classes: usize,
+) -> Dnn {
+    let mut b = DnnBuilder::new(name, "seq128", input);
+    b.embedding("tok_embed", vocab, dim);
+    b.embedding("pos_embed", max_pos, dim);
+    encoder_blocks(&mut b, depth, heads, dim);
+    b.layer_norm("ln_final");
+    b.global_avgpool("gap");
+    b.fc("head", classes);
+    b.build()
+}
+
+/// `depth` pre-norm encoder blocks: LN → MHSA → add, LN → 1×1-conv MLP
+/// (4× expansion, GELU) → add.
+fn encoder_blocks(b: &mut DnnBuilder, depth: usize, heads: usize, dim: usize) {
+    for blk in 0..depth {
+        let block_in = b.last_index();
+        b.layer_norm(format!("blk{blk}_ln1"));
+        b.attention(format!("blk{blk}_attn"), heads);
+        let attn_out = b.residual_add(format!("blk{blk}_add1"), block_in);
+        b.layer_norm(format!("blk{blk}_ln2"));
+        b.conv(format!("blk{blk}_mlp_fc1"), 1, 1, 0, 4 * dim);
+        b.gelu(format!("blk{blk}_gelu"));
+        b.conv(format!("blk{blk}_mlp_fc2"), 1, 1, 0, dim);
+        b.residual_add(format!("blk{blk}_add2"), attn_out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(got: usize, want: f64, tol: f64, what: &str) {
+        let got = got as f64;
+        assert!(
+            (got - want).abs() / want < tol,
+            "{what}: {got} vs published {want}"
+        );
+    }
+
+    #[test]
+    fn vit_tiny_matches_published_figures() {
+        // timm vit_tiny_patch16_224: 5.72M params, ~1.26 GMACs
+        let d = vit("vit_tiny", 12, 192, 3, 16, (224, 224, 3), 1000);
+        let s = d.stats();
+        close(s.params, 5.72e6, 0.02, "vit_tiny params");
+        close(s.macs, 1.26e9, 0.05, "vit_tiny macs");
+        assert!(d.check().is_ok());
+        // 1 patch conv + 12 × (attn + 2 mlp convs) + head = 38 weight layers
+        assert_eq!(s.weight_layers, 38);
+        assert!(s.digital_macs > 0 && s.digital_macs < s.macs);
+    }
+
+    #[test]
+    fn vit_small_matches_published_figures() {
+        // timm vit_small_patch16_224: 22.05M params, ~4.6 GMACs
+        let d = vit("vit_small", 12, 384, 6, 16, (224, 224, 3), 1000);
+        let s = d.stats();
+        close(s.params, 22.05e6, 0.02, "vit_small params");
+        close(s.macs, 4.6e9, 0.05, "vit_small macs");
+    }
+
+    #[test]
+    fn bert_base_matches_published_figures() {
+        // huggingface bert-base-uncased encoder: 109.5M params (incl.
+        // 23.8M embeddings); ~11.2 GMACs at sequence length 128
+        let d = bert_encoder("bert_base", 12, 768, 12, 30522, 512, (1, 128, 1), 2);
+        let s = d.stats();
+        close(s.params, 109.5e6, 0.02, "bert_base params");
+        close(s.macs, 11.2e9, 0.05, "bert_base macs");
+        // token lookup rewrites channels: 1×128×1 -> 1×128×768
+        assert_eq!(d.layers[0].ofm.c, 768);
+        assert_eq!(d.layers[0].ofm.w, 128);
+    }
+
+    #[test]
+    fn blocks_are_residual_chains() {
+        let d = vit("vit_tiny", 2, 64, 2, 16, (32, 32, 3), 10);
+        assert!(d.check().is_ok());
+        let s = d.stats();
+        assert_eq!(s.skip_edges, 4, "two adds per block");
+        assert!(s.peak_skip_buffer > 0);
+    }
+}

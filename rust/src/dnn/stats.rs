@@ -11,6 +11,9 @@ pub struct DnnStats {
     pub params: usize,
     /// Total MACs per inference.
     pub macs: usize,
+    /// MACs executed on the digital side (dynamic attention/matmul
+    /// products; a subset of `macs`). Zero for pure CNNs.
+    pub digital_macs: usize,
     /// Total activation elements produced per inference.
     pub activations: usize,
     /// Weight-bearing layers.
@@ -45,6 +48,7 @@ impl DnnStats {
         for (i, l) in dnn.layers.iter().enumerate() {
             s.params += l.params();
             s.macs += l.macs();
+            s.digital_macs += l.digital_macs();
             s.activations += l.ofm.elems();
             if l.is_weight_layer() {
                 s.weight_layers += 1;

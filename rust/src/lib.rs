@@ -9,7 +9,9 @@
 //! paper's four engines plus the substrates they need:
 //!
 //! * [`config`] — the Table-2 user inputs (TOML presets in `configs/`).
-//! * [`dnn`] — layer graph + model zoo (ResNet/VGG/DenseNet/LeNet/...).
+//! * [`dnn`] — layer graph + model zoo (ResNet/VGG/DenseNet/LeNet plus
+//!   ViT/BERT transformers) + the file-based network frontend
+//!   (`model = "file:net.toml"`, `configs/models/`, docs/MODELS.md).
 //! * [`mapping`] — partition & mapping engine (Eq. 1 + Algorithm 1).
 //! * [`circuit`] — NeuroSim-style bottom-up circuit estimator.
 //! * [`noc`] — intra-chiplet network simulator (three-tier engine

@@ -10,9 +10,12 @@
 //!                [--concurrency N] [--requests N] [--queue N]
 //!                [--seed S] [--quick] [--json PATH]
 //! siam functional [--artifacts DIR] [--adc 8] [--seed 42]
-//! siam models
+//! siam models    [--files DIR]
 //! siam config    (print the paper-default TOML)
 //! ```
+//!
+//! `--model` accepts a zoo name or a network-description file
+//! (`--model file:net.toml`, see `docs/MODELS.md`).
 //!
 //! Argument parsing is in-tree (the offline build vendors no clap).
 
@@ -187,10 +190,24 @@ fn sweep_json(cfg: &SiamConfig, res: &coordinator::SweepResult) -> Json {
         .set("epoch_misses", res.stats.epoch_misses)
         .set("epoch_hit_rate", res.stats.epoch_hit_rate())
         .set("epochs_cached", res.stats.epochs_cached);
+    // provenance: builtin vs file path + content fingerprint, so sweep
+    // artifacts can be traced to the exact network that produced them
+    let model_source = res
+        .points
+        .first()
+        .map(|p| p.report.model_source.clone())
+        .unwrap_or_else(|| {
+            if cfg.dnn.model.starts_with("file:") {
+                cfg.dnn.model.clone()
+            } else {
+                "builtin".into()
+            }
+        });
     let mut out = Json::obj();
     out.set("schema", "siam-sweep/v1")
         .set("model", cfg.dnn.model.as_str())
         .set("dataset", cfg.dnn.dataset.as_str())
+        .set("model_source", model_source.as_str())
         .set("points", points)
         .set("stats", stats);
     if let Some(best) = coordinator::dse::best_by_edap(&res.points) {
@@ -232,16 +249,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     cfg.validate()?;
 
-    // workload mix: "model" or "model:dataset" entries; empty = [dnn]
+    // workload mix: "model", "model:dataset" or "file:path" entries;
+    // empty = the [dnn] model
     let workloads: Vec<(String, String)> = if cfg.serve.workloads.is_empty() {
         vec![(cfg.dnn.model.clone(), cfg.dnn.dataset.clone())]
     } else {
         cfg.serve
             .workloads
             .iter()
-            .map(|w| match w.split_once(':') {
-                Some((m, d)) => (m.to_string(), d.to_string()),
-                None => (w.clone(), cfg.dnn.dataset.clone()),
+            .map(|w| {
+                let (m, d) = siam::dnn::split_workload(w, &cfg.dnn.dataset);
+                (m.to_string(), d.to_string())
             })
             .collect()
     };
@@ -312,24 +330,73 @@ fn cmd_functional(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_models() -> Result<()> {
-    let mut t = Table::new(&["model", "dataset", "params (M)", "MACs (G)", "layers"]);
+/// One `models` table row: aggregate stats plus the crossbars the model
+/// maps to at the paper-default geometry (128×128, 8-bit, custom
+/// structure).
+fn model_row(t: &mut Table, source: &str, name: &str, ds: &str, dnn: &siam::dnn::Dnn) {
+    let s = dnn.stats();
+    let xbars = siam::mapping::map_dnn(dnn, &SiamConfig::paper_default())
+        .map(|m| m.total_xbars().to_string())
+        .unwrap_or_else(|_| "-".into());
+    t.row(&[
+        name.to_string(),
+        source.to_string(),
+        ds.to_string(),
+        format!("{:.2}", s.params as f64 / 1e6),
+        format!("{:.2}", s.macs as f64 / 1e9),
+        s.total_layers.to_string(),
+        xbars,
+    ]);
+}
+
+fn cmd_models(flags: &HashMap<String, String>) -> Result<()> {
+    let mut t = Table::new(&[
+        "model",
+        "source",
+        "dataset",
+        "params (M)",
+        "MACs (G)",
+        "layers",
+        "xbars@default",
+    ]);
     for name in siam::dnn::zoo_names() {
-        let ds = match *name {
-            "resnet50" | "vgg16" => "imagenet",
-            "vgg19" => "cifar100",
-            "drivenet" => "drivenet",
-            _ => "cifar10",
-        };
+        let ds = siam::dnn::default_dataset(name);
         let dnn = siam::dnn::build_model(name, ds)?;
-        let s = dnn.stats();
-        t.row(&[
-            name.to_string(),
-            ds.to_string(),
-            format!("{:.2}", s.params as f64 / 1e6),
-            format!("{:.2}", s.macs as f64 / 1e9),
-            s.total_layers.to_string(),
-        ]);
+        model_row(&mut t, "builtin", name, ds, &dnn);
+    }
+    // file models: every .toml under --files DIR (default configs/models).
+    // A missing default directory is fine; an explicitly requested one
+    // must exist. A broken file becomes an error row, not an abort —
+    // the builtin listing stays usable.
+    let explicit = flags.get("files").map(String::as_str);
+    let dir = explicit.unwrap_or("configs/models");
+    match std::fs::read_dir(dir) {
+        Err(e) if explicit.is_some() => bail!("--files {dir}: {e}"),
+        Err(_) => {}
+        Ok(entries) => {
+            let mut paths: Vec<_> = entries
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+                .collect();
+            paths.sort();
+            for path in paths {
+                match siam::dnn::load_model_file(&path) {
+                    Ok(dnn) => {
+                        let (name, ds) = (dnn.name.clone(), dnn.dataset.clone());
+                        model_row(&mut t, &format!("file:{}", path.display()), &name, &ds, &dnn);
+                    }
+                    Err(e) => t.row(&[
+                        path.display().to_string(),
+                        "file".into(),
+                        format!("ERROR: {e}"),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]),
+                }
+            }
+        }
     }
     t.print();
     Ok(())
@@ -345,8 +412,11 @@ const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config>
              [--requests 1024] [--queue 4] [--seed 42] [--quick]
              [--config file.toml] [--json out.json]
   functional [--artifacts artifacts] [--adc 4|8] [--seed 42]
-  models     list the model zoo
-  config     print the paper-default configuration TOML";
+  models     [--files DIR] list builtin + file models (params/MACs/crossbars)
+  config     print the paper-default configuration TOML
+
+  --model also accepts a network-description file: --model file:net.toml
+  (see docs/MODELS.md for the authoring format)";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -360,7 +430,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&flags),
         "serve" => cmd_serve(&flags),
         "functional" => cmd_functional(&flags),
-        "models" => cmd_models(),
+        "models" => cmd_models(&flags),
         "config" => {
             print!("{}", SiamConfig::paper_default().to_toml_string()?);
             Ok(())

@@ -232,6 +232,32 @@ pub fn build_traffic(
             });
         }
 
+        // ---- attention head exchange over the NoP: a spanning
+        // attention layer shards its heads across chiplets, and
+        // assembling the concatenated head outputs for the O projection
+        // is an all-to-all among the layer's chiplets — each ships its
+        // `L·D/n` output slice to every peer. Layers that fit one
+        // chiplet concatenate locally and add nothing.
+        if lm.spans_chiplets() {
+            if let LayerKind::Attention { dim, .. } = layer.kind {
+                let seq = (layer.ifm.h * layer.ifm.w) as u64;
+                let n = src_chiplets.len() as u64;
+                let slice_bits = (seq * dim as u64 * q).div_ceil(n);
+                let np = slice_bits.div_ceil(w_nop);
+                let mut epoch = Epoch::new();
+                alg2_flows(&src_chiplets, &src_chiplets, np, &mut epoch);
+                canonicalize_flows(&mut epoch);
+                if !epoch.is_empty() {
+                    t.inter_chiplet_bits += (n * (n - 1) * slice_bits) as f64;
+                    t.nop_epochs.push(LabeledEpoch {
+                        layer: li,
+                        chiplet: 0,
+                        flows: epoch,
+                    });
+                }
+            }
+        }
+
         // ---- activations to the next weight layer
         if let Some(nj) = next {
             let nm = &map.per_layer[nj];
@@ -307,6 +333,14 @@ pub fn build_traffic(
                     }
                 }
             }
+        }
+    }
+
+    // ---- embedding-table lookups stream from the global buffer (the
+    // table lives off-crossbar): one read per produced element.
+    for l in &dnn.layers {
+        if let LayerKind::Embedding { .. } = l.kind {
+            t.global_buffer_reads += l.ofm.elems() as u64;
         }
     }
 
@@ -407,6 +441,50 @@ mod tests {
             t36.inter_chiplet_bits,
             t4.inter_chiplet_bits
         );
+    }
+
+    #[test]
+    fn spanning_attention_adds_head_exchange_epochs() {
+        // bert_base attention blocks overflow one paper-default chiplet,
+        // so every one of them must contribute an all-to-all exchange
+        // among exactly its own chiplets
+        let cfg = SiamConfig::paper_default().with_model("bert_base", "seq128");
+        let dnn = build_model("bert_base", "seq128").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let t = build_traffic(&dnn, &map, &pl, &cfg);
+        let widx = dnn.weight_layers();
+        let mut exchanges = 0;
+        for (li, lm) in map.per_layer.iter().enumerate() {
+            let is_attn = matches!(
+                dnn.layers[widx[li]].kind,
+                crate::dnn::LayerKind::Attention { .. }
+            );
+            if !(is_attn && lm.spans_chiplets()) {
+                continue;
+            }
+            let members: Vec<u32> = lm.chiplets.iter().map(|s| s.chiplet as u32).collect();
+            // find an all-to-all epoch for this layer: every ordered
+            // pair of the layer's chiplets appears as a flow
+            let found = t.nop_epochs.iter().any(|e| {
+                e.layer == li
+                    && members.iter().all(|&a| {
+                        members
+                            .iter()
+                            .filter(|&&b| b != a)
+                            .all(|&b| e.flows.iter().any(|f| f.src == a && f.dst == b))
+                    })
+            });
+            assert!(found, "attention layer {li} has no head-exchange epoch");
+            exchanges += 1;
+        }
+        assert!(exchanges > 0, "bert_base must shard attention layers");
+        // embedding lookups hit the global buffer
+        assert!(t.global_buffer_reads >= 2 * 128 * 768);
+        // CNNs are untouched: no embedding reads beyond the classic path
+        let cnn_cfg = SiamConfig::paper_default();
+        let (cnn_t, _) = setup("resnet110", "cifar10", &cnn_cfg);
+        assert!(cnn_t.nop_epochs.iter().all(|e| !e.flows.is_empty()));
     }
 
     #[test]

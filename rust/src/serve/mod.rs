@@ -133,6 +133,7 @@ pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
     ServeReport {
         model: graph.single_shot.model.clone(),
         dataset: graph.single_shot.dataset.clone(),
+        model_source: graph.single_shot.model_source.clone(),
         mode: mode.into(),
         offered_qps,
         concurrency,

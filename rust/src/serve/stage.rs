@@ -18,6 +18,15 @@
 //! single-shot latency` exactly, which pins the closed-loop
 //! concurrency-1 throughput to the single-inference reciprocal — the
 //! calibration the acceptance tests assert.
+//!
+//! Transformer workloads pipeline the same way: every weight-bearing
+//! layer — attention blocks included — becomes one stage whose service
+//! time already carries its digital score-matmul cost and, when the
+//! layer's heads shard across chiplets, its NoP head-exchange epoch.
+//! Digital-only layers (LayerNorm, GELU, standalone matmuls, embedding
+//! lookups) have no crossbar partition of their own, so their latency
+//! rides in the residual slot charged to the last stage, exactly like
+//! pooling/activation units do for CNNs.
 
 use crate::config::SiamConfig;
 use crate::coordinator::pipeline::{

@@ -10,12 +10,7 @@ use siam::gpu_baseline::{T4, V100};
 #[test]
 fn every_zoo_model_simulates() {
     for name in siam::dnn::zoo_names() {
-        let ds = match *name {
-            "resnet50" | "vgg16" => "imagenet",
-            "vgg19" => "cifar100",
-            "drivenet" => "drivenet",
-            _ => "cifar10",
-        };
+        let ds = siam::dnn::default_dataset(name);
         let cfg = SiamConfig::paper_default().with_model(name, ds);
         let rep = simulate(&cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
         assert!(rep.total.energy_pj > 0.0, "{name} energy");
@@ -232,4 +227,196 @@ fn homogeneous_architecture_variants_rank_sanely() {
     let e100 = simulate(&SiamConfig::paper_default().with_total_chiplets(100)).unwrap();
     assert!(e100.total.area_um2 > e36.total.area_um2);
     assert!(e100.total.edap() > e36.total.edap());
+}
+
+// ---------------------------------------------------------------------------
+// DNN frontend: file-based network descriptions (the `configs/models/` zoo)
+
+/// Path of a checked-in network file.
+fn model_file(name: &str) -> String {
+    format!("{}/configs/models/{name}.toml", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// The deterministic fields two reports of the same workload must share
+/// bit-for-bit.
+fn assert_sim_reports_bit_identical(
+    a: &siam::coordinator::SimReport,
+    b: &siam::coordinator::SimReport,
+) {
+    assert_eq!(a.model, b.model);
+    assert_eq!(a.params, b.params);
+    assert_eq!(a.macs, b.macs);
+    assert_eq!(a.num_chiplets, b.num_chiplets);
+    assert_eq!(a.total_tiles, b.total_tiles);
+    assert_eq!(a.noc_cycles, b.noc_cycles);
+    assert_eq!(a.nop_cycles, b.nop_cycles);
+    assert_eq!(a.accumulator_adds, b.accumulator_adds);
+    for (x, y) in [
+        (a.total.area_um2, b.total.area_um2),
+        (a.total.energy_pj, b.total.energy_pj),
+        (a.total.latency_ns, b.total.latency_ns),
+        (a.total.leakage_uw, b.total.leakage_uw),
+        (a.circuit.energy_pj, b.circuit.energy_pj),
+        (a.noc.energy_pj, b.noc.energy_pj),
+        (a.nop.energy_pj, b.nop.energy_pj),
+        (a.xbar_utilization, b.xbar_utilization),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+    }
+}
+
+#[test]
+fn checked_in_model_files_match_builtin_exports() {
+    // the zoo files are exactly what `to_model_toml` exports from the
+    // builtin builders — the frontend is self-hosting, byte for byte
+    for (name, ds) in [("vit_tiny", "imagenet"), ("vit_small", "imagenet"), ("bert_base", "seq128")]
+    {
+        let builtin = siam::dnn::build_model(name, ds).unwrap();
+        let exported = siam::dnn::to_model_toml(&builtin)
+            .unwrap_or_else(|e| panic!("{name} does not export: {e}"));
+        let checked_in = std::fs::read_to_string(model_file(name)).unwrap();
+        assert_eq!(exported, checked_in, "{name}: checked-in file drifted from the builder");
+    }
+}
+
+#[test]
+fn builtin_and_file_vit_are_bit_identical_end_to_end() {
+    // the acceptance gate: the same network, once from the builtin
+    // builder and once parsed from its file description, produces
+    // bit-identical reports under one configuration
+    let file_dnn = siam::dnn::load_model_file(model_file("vit_tiny")).unwrap();
+    let builtin = siam::dnn::build_model("vit_tiny", "imagenet").unwrap();
+    assert!(file_dnn.same_graph(&builtin), "file graph differs from builtin");
+
+    let b_cfg = SiamConfig::paper_default().with_model("vit_tiny", "imagenet");
+    let mut f_cfg = SiamConfig::paper_default();
+    f_cfg.dnn.model = format!("file:{}", model_file("vit_tiny"));
+    let b_rep = simulate(&b_cfg).unwrap();
+    let f_rep = simulate(&f_cfg).unwrap();
+    assert_sim_reports_bit_identical(&b_rep, &f_rep);
+    // provenance differs, results do not
+    assert_eq!(b_rep.model_source, "builtin");
+    assert!(f_rep.model_source.starts_with("file:"), "{}", f_rep.model_source);
+    assert!(f_rep.model_source.contains('#'), "fingerprint missing");
+}
+
+#[test]
+fn file_vit_runs_sim_serve_and_sweep_end_to_end() {
+    // a ViT defined purely as a `file:` model drives `siam sim`,
+    // `siam serve` and a SweepBuilder sweep — with the sweep's
+    // serial-vs-parallel rankings bitwise identical
+    let mut cfg = SiamConfig::paper_default();
+    cfg.dnn.model = format!("file:{}", model_file("vit_tiny"));
+    cfg.serve.requests = 64;
+
+    // single-shot
+    let rep = simulate(&cfg).unwrap();
+    assert_eq!(rep.model, "vit_tiny");
+    assert_eq!(rep.dataset, "imagenet");
+    assert!(rep.total.energy_pj > 0.0 && rep.total.latency_ns > 0.0);
+    let j = rep.to_json().to_string_pretty();
+    let parsed = siam::util::json::parse(&j).unwrap();
+    assert!(parsed
+        .get("model_source")
+        .and_then(|v| v.as_str())
+        .is_some_and(|s| s.starts_with("file:")));
+
+    // serving
+    let srep = siam::serve::serve(&cfg).unwrap();
+    assert_eq!(srep.model, "vit_tiny");
+    assert!(srep.completed > 0 && srep.throughput_qps > 0.0);
+    assert!(srep.model_source.starts_with("file:"));
+
+    // sweep: serial and parallel engines agree bit-for-bit
+    let tiles = [9, 16];
+    let serial = siam::coordinator::SweepBuilder::new(&cfg)
+        .tiles(&tiles)
+        .serial()
+        .run()
+        .unwrap();
+    let parallel = siam::coordinator::SweepBuilder::new(&cfg).tiles(&tiles).run().unwrap();
+    assert_eq!(serial.len(), 2);
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.points.iter().zip(&parallel.points) {
+        assert_eq!(s.tiles_per_chiplet, p.tiles_per_chiplet);
+        assert_sim_reports_bit_identical(&s.report, &p.report);
+    }
+    let rank = |r: &siam::coordinator::SweepResult| -> Vec<(usize, u64)> {
+        r.ranked()
+            .iter()
+            .map(|p| (p.tiles_per_chiplet, p.edap().to_bits()))
+            .collect()
+    };
+    assert_eq!(rank(&serial), rank(&parallel));
+}
+
+#[test]
+fn every_checked_in_model_file_loads_and_maps() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/models");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let dnn = siam::dnn::load_model_file(&path)
+            .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        assert!(dnn.stats().params > 0);
+        let map = siam::mapping::map_dnn(&dnn, &SiamConfig::paper_default())
+            .unwrap_or_else(|e| panic!("{path:?} does not map: {e}"));
+        assert!(map.total_xbars() > 0);
+        seen += 1;
+    }
+    assert!(seen >= 3, "expected the transformer zoo files, found {seen}");
+}
+
+#[test]
+fn transformer_serving_mix_with_file_workload() {
+    // a `[serve] workloads` mix naming a builtin transformer and a
+    // file model validates and serves
+    let mut cfg = SiamConfig::paper_default();
+    cfg.serve.requests = 48;
+    cfg.serve.workloads = vec![
+        "vit_tiny:imagenet".into(),
+        format!("file:{}", model_file("vit_tiny")),
+    ];
+    cfg.validate().unwrap();
+    for w in cfg.serve.workloads.clone() {
+        let (m, d) = siam::dnn::split_workload(&w, &cfg.dnn.dataset);
+        let wcfg = cfg.clone().with_model(m, d);
+        let rep = siam::serve::serve(&wcfg).unwrap();
+        assert_eq!(rep.model, "vit_tiny");
+        assert!(rep.completed > 0);
+    }
+}
+
+#[test]
+fn zoo_golden_params_and_crossbars_are_stable() {
+    // exact golden pins for every zoo entry: parameter count and the
+    // Eq.-1 crossbar total at the paper-default geometry (the figures
+    // the docs/MODELS.md reference table quotes). Any builder or
+    // mapping drift shows up here first.
+    let golden: &[(&str, usize, usize)] = &[
+        ("lenet5", 62006, 42),
+        ("nin", 966986, 514),
+        ("resnet20", 271690, 166),
+        ("resnet56", 853642, 502),
+        ("resnet110", 1726570, 1006),
+        ("resnet50", 25530472, 12504),
+        ("vgg16", 138357544, 67576),
+        ("vgg19", 39316644, 19224),
+        ("densenet40", 1002538, 671),
+        ("densenet110", 27022474, 17320),
+        ("drivenet", 252208, 145),
+        ("vit_tiny", 5717032, 3366),
+        ("vit_small", 22049896, 10701),
+        ("bert_base", 108891650, 41478),
+    ];
+    assert_eq!(golden.len(), siam::dnn::zoo_names().len(), "golden table covers the zoo");
+    for &(name, params, xbars) in golden {
+        let dnn = siam::dnn::build_model(name, siam::dnn::default_dataset(name)).unwrap();
+        assert_eq!(dnn.stats().params, params, "{name} params drifted");
+        let map = siam::mapping::map_dnn(&dnn, &SiamConfig::paper_default()).unwrap();
+        assert_eq!(map.total_xbars(), xbars, "{name} mapped crossbars drifted");
+    }
 }
