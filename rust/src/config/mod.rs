@@ -10,7 +10,7 @@ mod parse;
 mod types;
 mod validate;
 
-pub(crate) use parse::parse_flat;
+pub use parse::parse_flat;
 pub use parse::Value;
 pub use types::*;
 pub use validate::ValidationError;
@@ -211,6 +211,32 @@ impl SiamConfig {
         self.serve.requests = requests;
         self
     }
+
+    /// Builder-style override: provision `n` spare chiplets. Spares are
+    /// charged in area / leakage / fabrication cost but carry no weights
+    /// until a failover remap spills work onto them.
+    pub fn with_spare_chiplets(mut self, n: usize) -> Self {
+        self.system.spare_chiplets = n;
+        self
+    }
+
+    /// Builder-style override: deterministically kill the listed
+    /// chiplet ids before mapping (the `[fault] kill_chiplets` list).
+    pub fn with_kill_chiplets(mut self, ids: Vec<usize>) -> Self {
+        self.fault.kill_chiplets = ids;
+        self
+    }
+
+    /// Builder-style override: schedule a mid-run chiplet death for the
+    /// serving failover scenario — `chiplet` dies when open-loop arrival
+    /// number `at_request` reaches the system, and the remapped stage
+    /// graph comes online `remap_latency_us` later.
+    pub fn with_failover(mut self, at_request: usize, chiplet: usize, remap_latency_us: f64) -> Self {
+        self.serve.fail_at_request = Some(at_request);
+        self.serve.fail_chiplet = chiplet;
+        self.serve.remap_latency_us = remap_latency_us;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -239,6 +265,80 @@ mod tests {
         assert_eq!(back.serve.rate_qps, 2000.0);
         // and the re-serialization is byte-identical (bit-exact round trip)
         assert_eq!(back.to_toml_string().unwrap(), text);
+    }
+
+    #[test]
+    fn fault_and_spares_roundtrip_through_toml() {
+        let mut cfg = SiamConfig::paper_default()
+            .with_total_chiplets(25)
+            .with_spare_chiplets(2)
+            .with_kill_chiplets(vec![3, 7]);
+        cfg.fault.xbar_fault_fraction = 0.05;
+        cfg.fault.seed = 99;
+        assert!(cfg.validate().is_ok());
+        let text = cfg.to_toml_string().unwrap();
+        assert!(text.contains("spare_chiplets = 2"), "{text}");
+        assert!(text.contains("[fault]"), "{text}");
+        let back = SiamConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.system.spare_chiplets, 2);
+        assert_eq!(back.fault, cfg.fault);
+        // bit-exact fixed point
+        assert_eq!(back.to_toml_string().unwrap(), text);
+    }
+
+    #[test]
+    fn failover_serve_keys_roundtrip() {
+        let cfg = SiamConfig::paper_default()
+            .with_total_chiplets(25)
+            .with_spare_chiplets(1)
+            .with_serve_open(1000.0)
+            .with_failover(50, 3, 250.0);
+        assert!(cfg.validate().is_ok());
+        let text = cfg.to_toml_string().unwrap();
+        let back = SiamConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.serve.fail_at_request, Some(50));
+        assert_eq!(back.serve.fail_chiplet, 3);
+        assert_eq!(back.serve.remap_latency_us, 250.0);
+        assert_eq!(back.to_toml_string().unwrap(), text);
+    }
+
+    #[test]
+    fn zero_fault_config_writes_no_fault_block() {
+        // the default config must serialize byte-identically to pre-fault
+        // output: no [fault] block, no spare_chiplets, no failover keys
+        let text = SiamConfig::paper_default().to_toml_string().unwrap();
+        assert!(!text.contains("fault"), "{text}");
+        assert!(!text.contains("spare"), "{text}");
+    }
+
+    #[test]
+    fn fault_validation_bounds() {
+        let base = SiamConfig::paper_default().with_total_chiplets(25);
+        let mut cfg = base.clone();
+        cfg.fault.die_yield = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = base.clone();
+        cfg.fault.die_yield = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = base.clone();
+        cfg.fault.xbar_fault_fraction = 1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = base.clone();
+        cfg.fault.kill_chiplets = vec![2, 2];
+        assert!(cfg.validate().is_err());
+        // fault / spares need chiplet mode
+        let mut cfg = base.clone().with_chip_mode(ChipMode::Monolithic);
+        cfg.system.total_chiplets = None;
+        cfg.system.structure = ChipletStructure::Custom;
+        cfg.fault.kill_chiplets = vec![0];
+        assert!(cfg.validate().is_err());
+        // fail_at requires open-loop serving
+        let mut cfg = base.clone().with_serve_closed(4).with_spare_chiplets(1);
+        cfg.serve.fail_at_request = Some(10);
+        assert!(cfg.validate().is_err());
+        // hetero classes are out of scope for faults
+        let hetero = big_little().with_spare_chiplets(1);
+        assert!(hetero.validate().is_err());
     }
 
     #[test]

@@ -32,6 +32,11 @@ impl Value {
     fn parse(raw: &str, line: usize) -> Result<Value, String> {
         let raw = raw.trim();
         if let Some(s) = raw.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+            // `"x"y"` is a string followed by junk, not a string with a
+            // quote in it — the subset has no escapes
+            if s.contains('"') {
+                return Err(format!("line {line}: stray '\"' inside string value"));
+            }
             return Ok(Value::Str(s.to_string()));
         }
         if raw == "true" {
@@ -53,6 +58,7 @@ impl Value {
                     let s = part
                         .strip_prefix('"')
                         .and_then(|r| r.strip_suffix('"'))
+                        .filter(|s| !s.contains('"'))
                         .ok_or_else(|| {
                             format!("line {line}: bad string-array element '{part}'")
                         })?;
@@ -148,12 +154,20 @@ pub fn parse_flat(text: &str) -> Result<BTreeMap<String, (Value, usize)>, String
         let Some((k, v)) = line.split_once('=') else {
             return Err(format!("line {n}: expected 'key = value', got '{line}'"));
         };
+        let k = k.trim();
+        if k.is_empty() {
+            return Err(format!("line {n}: missing key before '='"));
+        }
         let key = if section.is_empty() {
-            k.trim().to_string()
+            k.to_string()
         } else {
-            format!("{section}.{}", k.trim())
+            format!("{section}.{k}")
         };
-        out.insert(key, (Value::parse(v, n)?, n));
+        if out.insert(key.clone(), (Value::parse(v, n)?, n)).is_some() {
+            // TOML forbids redefining a key; silently letting the last
+            // occurrence win hides config typos
+            return Err(format!("line {n}: duplicate key '{key}'"));
+        }
     }
     Ok(out)
 }
@@ -258,6 +272,20 @@ fn u8v(v: &Value) -> Option<u8> {
     v.as_usize().and_then(|u| u8::try_from(u).ok())
 }
 
+/// Numeric array whose every element is a non-negative integer (the
+/// `[fault] kill_chiplets` id list).
+fn usize_array(v: &Value) -> Option<Vec<usize>> {
+    match v {
+        Value::Array(a) => a
+            .iter()
+            .map(|&x| {
+                (x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64).then_some(x as usize)
+            })
+            .collect(),
+        _ => None,
+    }
+}
+
 fn u32v(v: &Value) -> Option<u32> {
     v.as_usize().and_then(|u| u32::try_from(u).ok())
 }
@@ -336,6 +364,12 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
         ))?);
     }
     take!(m, "system.placement", cfg.system.placement, placement);
+    take!(
+        m,
+        "system.spare_chiplets",
+        cfg.system.spare_chiplets,
+        Value::as_usize
+    );
     take!(
         m,
         "system.accumulator_size",
@@ -433,6 +467,18 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
     take!(m, "serve.queue_depth", cfg.serve.queue_depth, Value::as_usize);
     take!(m, "serve.seed", cfg.serve.seed, u64v);
     take!(m, "serve.qos_p99_ms", cfg.serve.qos_p99_ms, Value::as_f64);
+    if let Some((v, line)) = m.remove("serve.fail_at_request") {
+        cfg.serve.fail_at_request = Some(v.as_usize().ok_or(format!(
+            "line {line}: bad value for serve.fail_at_request"
+        ))?);
+    }
+    take!(m, "serve.fail_chiplet", cfg.serve.fail_chiplet, Value::as_usize);
+    take!(
+        m,
+        "serve.remap_latency_us",
+        cfg.serve.remap_latency_us,
+        Value::as_f64
+    );
     if let Some((v, line)) = m.remove("serve.workloads") {
         match v {
             Value::StrArray(a) => cfg.serve.workloads = a,
@@ -445,6 +491,16 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
             }
         }
     }
+
+    take!(m, "fault.kill_chiplets", cfg.fault.kill_chiplets, usize_array);
+    take!(m, "fault.die_yield", cfg.fault.die_yield, Value::as_f64);
+    take!(
+        m,
+        "fault.xbar_fault_fraction",
+        cfg.fault.xbar_fault_fraction,
+        Value::as_f64
+    );
+    take!(m, "fault.seed", cfg.fault.seed, u64v);
 
     // ---- [[system.chiplet_class]] blocks: fields omitted in a block
     // inherit the base [device]/[chiplet]/[system.nop] values parsed
@@ -576,6 +632,9 @@ pub fn write(cfg: &SiamConfig) -> String {
         PlacementPolicy::Dataflow => "dataflow",
     };
     writeln!(s, "placement = \"{placement}\"").unwrap();
+    if cfg.system.spare_chiplets > 0 {
+        writeln!(s, "spare_chiplets = {}", cfg.system.spare_chiplets).unwrap();
+    }
     writeln!(s, "accumulator_size = {}", cfg.system.accumulator_size).unwrap();
     writeln!(s, "global_buffer_kb = {}", cfg.system.global_buffer_kb).unwrap();
     writeln!(s, "\n[system.nop]").unwrap();
@@ -634,6 +693,22 @@ pub fn write(cfg: &SiamConfig) -> String {
         writeln!(s, "workloads = [{}]", parts.join(", ")).unwrap();
     }
     writeln!(s, "qos_p99_ms = {}", cfg.serve.qos_p99_ms).unwrap();
+    if let Some(at) = cfg.serve.fail_at_request {
+        writeln!(s, "fail_at_request = {at}").unwrap();
+        writeln!(s, "fail_chiplet = {}", cfg.serve.fail_chiplet).unwrap();
+        writeln!(s, "remap_latency_us = {}", cfg.serve.remap_latency_us).unwrap();
+    }
+    if !cfg.fault.is_none() {
+        writeln!(s, "\n[fault]").unwrap();
+        if !cfg.fault.kill_chiplets.is_empty() {
+            let parts: Vec<String> =
+                cfg.fault.kill_chiplets.iter().map(|c| format!("{c}")).collect();
+            writeln!(s, "kill_chiplets = [{}]", parts.join(", ")).unwrap();
+        }
+        writeln!(s, "die_yield = {}", cfg.fault.die_yield).unwrap();
+        writeln!(s, "xbar_fault_fraction = {}", cfg.fault.xbar_fault_fraction).unwrap();
+        writeln!(s, "seed = {}", cfg.fault.seed).unwrap();
+    }
     s
 }
 

@@ -359,6 +359,58 @@ impl ChipletClassConfig {
     }
 }
 
+/// Seeded fault-injection block (`[fault]`): which dies and devices are
+/// broken before the run starts.
+///
+/// Faults degrade per-chiplet crossbar capacity: a killed chiplet drops
+/// to zero, a crossbar fault fraction removes a seeded random subset of
+/// every surviving chiplet's crossbars. The mapping pipeline then
+/// repacks the DNN onto the surviving capacity (plus any
+/// `[system] spare_chiplets`) — see `fault` module docs and
+/// docs/RELIABILITY.md. The default block injects nothing and leaves
+/// every report bit-identical to a build without the fault subsystem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Chiplet ids killed outright (known-bad dies). Ids index the
+    /// mapped system including spares; out-of-range ids are a runtime
+    /// error once the chiplet count is known.
+    pub kill_chiplets: Vec<usize>,
+    /// Per-chiplet survival probability for seeded random kills, in
+    /// (0, 1]. `1.0` = no random kills. Set from the Appendix-A model as
+    /// `exp(-D0 · A_chiplet)` (`cost::CostModel::yield_of`) to model
+    /// known-good-die escapes at the paper's defect density.
+    pub die_yield: f64,
+    /// Fraction of each surviving chiplet's crossbars that are faulty,
+    /// in [0, 1). Each crossbar fails independently (seeded draw).
+    pub xbar_fault_fraction: f64,
+    /// Seed of the splitmix64 fault-draw RNG. All draws — random kills
+    /// and crossbar faults — come from this one stream, so a `(config,
+    /// seed)` pair is bit-reproducible.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            kill_chiplets: Vec::new(),
+            die_yield: 1.0,
+            xbar_fault_fraction: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when the block injects nothing (the default): no kill list,
+    /// no random kills, no crossbar faults. The pipeline routes such
+    /// configs through the classic fault-free path bit-for-bit.
+    pub fn is_none(&self) -> bool {
+        self.kill_chiplets.is_empty()
+            && self.die_yield >= 1.0
+            && self.xbar_fault_fraction <= 0.0
+    }
+}
+
 /// Inter-chiplet architecture block of Table 2.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -375,6 +427,12 @@ pub struct SystemConfig {
     pub chiplet_classes: Vec<ChipletClassConfig>,
     /// Chiplet placement policy on the interposer mesh.
     pub placement: PlacementPolicy,
+    /// Spare chiplets provisioned for failover. Spares sit on the
+    /// interposer mesh and are charged in area, leakage and fabrication
+    /// cost, but carry no weights until a fault remap spills work onto
+    /// them (see docs/RELIABILITY.md). `0` = the classic system,
+    /// bit-identical to pre-fault releases.
+    pub spare_chiplets: usize,
     /// Global accumulator width, elements accumulated per cycle.
     pub accumulator_size: usize,
     /// Global buffer capacity, kB.
@@ -391,6 +449,7 @@ impl Default for SystemConfig {
             total_chiplets: None,
             chiplet_classes: Vec::new(),
             placement: PlacementPolicy::default(),
+            spare_chiplets: 0,
             accumulator_size: 64,
             global_buffer_kb: 256,
             nop: NopConfig::default(),
@@ -434,6 +493,16 @@ pub struct ServeConfig {
     /// QoS target for p99 latency, ms (the `SweepBuilder` QoS mode
     /// ranks design points by p99 under the target offered rate).
     pub qos_p99_ms: f64,
+    /// Failover scenario: kill `fail_chiplet` when the open-loop arrival
+    /// with this index reaches the system (`None` = no mid-run failure).
+    /// Requires `mode = "open"` — closed-loop traffic has no external
+    /// clock to anchor the failure to.
+    pub fail_at_request: Option<usize>,
+    /// The chiplet that dies in the failover scenario.
+    pub fail_chiplet: usize,
+    /// Time between the failure and the remapped pipeline taking over,
+    /// µs (failure detection + weight reload onto spare capacity).
+    pub remap_latency_us: f64,
 }
 
 impl Default for ServeConfig {
@@ -447,6 +516,9 @@ impl Default for ServeConfig {
             seed: 42,
             workloads: Vec::new(),
             qos_p99_ms: 10.0,
+            fail_at_request: None,
+            fail_chiplet: 0,
+            remap_latency_us: 100.0,
         }
     }
 }
@@ -466,4 +538,6 @@ pub struct SiamConfig {
     pub dram: DramConfig,
     /// Inference-serving simulator block.
     pub serve: ServeConfig,
+    /// Seeded fault-injection block (defaults inject nothing).
+    pub fault: FaultConfig,
 }

@@ -229,6 +229,51 @@ impl SiamConfig {
         if self.serve.workloads.iter().any(|w| w.is_empty()) {
             return err("serve workload names must be non-empty".into());
         }
+        if !(0.0 < self.fault.die_yield && self.fault.die_yield <= 1.0) {
+            return err(format!(
+                "fault die_yield {} must be in (0, 1]",
+                self.fault.die_yield
+            ));
+        }
+        if !(0.0..1.0).contains(&self.fault.xbar_fault_fraction) {
+            return err(format!(
+                "fault xbar_fault_fraction {} must be in [0, 1)",
+                self.fault.xbar_fault_fraction
+            ));
+        }
+        {
+            let mut seen = std::collections::BTreeSet::new();
+            for &c in &self.fault.kill_chiplets {
+                if !seen.insert(c) {
+                    return err(format!("fault kill_chiplets repeats chiplet {c}"));
+                }
+            }
+        }
+        if (!self.fault.is_none() || self.system.spare_chiplets > 0)
+            && self.system.chip_mode == ChipMode::Monolithic
+        {
+            return err("fault injection and spare chiplets require chiplet mode".into());
+        }
+        if (!self.fault.is_none() || self.system.spare_chiplets > 0)
+            && self.has_hetero_classes()
+        {
+            return err(
+                "fault injection and spare chiplets are not yet supported with \
+                 heterogeneous chiplet classes"
+                    .into(),
+            );
+        }
+        if self.serve.fail_at_request.is_some() {
+            if self.serve.mode != ServeMode::Open {
+                return err("serve fail_at_request requires mode = \"open\"".into());
+            }
+            if !(self.serve.remap_latency_us >= 0.0 && self.serve.remap_latency_us.is_finite()) {
+                return err(format!(
+                    "serve remap_latency_us {} must be finite and >= 0",
+                    self.serve.remap_latency_us
+                ));
+            }
+        }
         Ok(())
     }
 }

@@ -78,6 +78,15 @@ pub enum FigureOfMerit {
     /// then points shedding load. Score through
     /// [`FigureOfMerit::score_point`].
     QosP99,
+    /// Yield-aware fabrication cost: the Appendix-A normalized cost of
+    /// the point's dies (spares included) divided by the probability the
+    /// package survives with its required chiplet count
+    /// ([`crate::cost::CostModel::yield_adjusted_cost`] at the paper's
+    /// default wafer/defect parameters) — the expected fabrication
+    /// spend per working system. Extends the `fig13_fabcost` math with
+    /// the spare-chiplet survival term; pinned to hand-computed values
+    /// by the golden yield tests.
+    YieldCost,
 }
 
 impl FigureOfMerit {
@@ -94,6 +103,12 @@ impl FigureOfMerit {
             FigureOfMerit::Area => report.total.area_um2,
             FigureOfMerit::InferencesPerJoule => -report.inferences_per_joule(),
             FigureOfMerit::QosP99 => f64::INFINITY,
+            FigureOfMerit::YieldCost => {
+                let spares = report.fault.as_ref().map_or(0, |f| f.spare_chiplets);
+                let n = report.num_chiplets.saturating_sub(spares).max(1);
+                let per_die_mm2 = report.silicon_area_mm2 / report.num_chiplets.max(1) as f64;
+                crate::cost::CostModel::default().yield_adjusted_cost(n, spares, per_die_mm2)
+            }
         }
     }
 
@@ -296,6 +311,16 @@ impl SweepBuilder {
     pub fn budget(mut self, budget: usize) -> SweepBuilder {
         self.budget = Some(budget);
         self
+    }
+
+    /// Yield-aware mode: rank points by expected fabrication cost per
+    /// working system — Appendix-A die cost of the point's chiplets
+    /// (spares included) divided by its spare-aware survival
+    /// probability ([`FigureOfMerit::YieldCost`]). Bigger chiplets
+    /// yield worse per die but need fewer dies; spares on the base
+    /// config shift the optimum — this axis finds the break-even.
+    pub fn yield_aware(self) -> SweepBuilder {
+        self.figure_of_merit(FigureOfMerit::YieldCost)
     }
 
     /// QoS mode: additionally run the serving simulator on every
@@ -796,6 +821,7 @@ mod tests {
             FigureOfMerit::Energy,
             FigureOfMerit::Latency,
             FigureOfMerit::InferencesPerJoule,
+            FigureOfMerit::YieldCost,
         ] {
             let res = SweepBuilder::new(&base)
                 .tiles(&[9, 16, 25])
@@ -813,5 +839,49 @@ mod tests {
                 ranked[0].tiles_per_chiplet
             );
         }
+    }
+
+    #[test]
+    fn yield_aware_sweep_scores_match_the_cost_model() {
+        // the YieldCost axis must reproduce the Appendix-A
+        // yield_adjusted_cost math exactly — same CostModel::default()
+        // the fig13_fabcost example uses
+        let base = SiamConfig::paper_default();
+        let res = SweepBuilder::new(&base)
+            .tiles(&[9, 16, 25])
+            .chiplet_counts(&[None])
+            .yield_aware()
+            .run()
+            .unwrap();
+        assert_eq!(res.fom, FigureOfMerit::YieldCost);
+        let m = crate::cost::CostModel::default();
+        for p in &res.points {
+            let r = &p.report;
+            let spares = r.fault.as_ref().map_or(0, |f| f.spare_chiplets);
+            let n = r.num_chiplets.saturating_sub(spares).max(1);
+            let per_die = r.silicon_area_mm2 / r.num_chiplets.max(1) as f64;
+            let want = m.yield_adjusted_cost(n, spares, per_die);
+            let got = FigureOfMerit::YieldCost.score(r);
+            assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want}");
+            assert!(got.is_finite() && got > 0.0);
+        }
+        // spares on the base config shift every point's score upward
+        // (same required dies + extra silicon) while survival rises
+        let spared = base.clone().with_spare_chiplets(2);
+        let res2 = SweepBuilder::new(&spared)
+            .tiles(&[16])
+            .chiplet_counts(&[None])
+            .yield_aware()
+            .run()
+            .unwrap();
+        let r2 = &res2.points[0].report;
+        let f = r2.fault.as_ref().expect("spares attach a fault report");
+        assert_eq!(f.spare_chiplets, 2);
+        assert!(!f.remapped, "no injected faults: spares stay idle");
+        let n2 = r2.num_chiplets - 2;
+        let per_die2 = r2.silicon_area_mm2 / r2.num_chiplets as f64;
+        let s_with = m.system_survival(n2, 2, per_die2);
+        let s_without = m.system_survival(n2, 0, per_die2);
+        assert!(s_with > s_without, "{s_with} vs {s_without}");
     }
 }

@@ -23,7 +23,7 @@ pub use dse::{
     SweepStats,
 };
 pub use pipeline::SweepContext;
-pub use report::{ServeReport, SimReport};
+pub use report::{FailoverReport, ServeReport, SimReport};
 pub use sensitivity::{layer_cycles_vs_nop_speedup, layer_latency_vs_chiplets, LayerPoint};
 
 use crate::config::SiamConfig;

@@ -30,6 +30,7 @@
 use crate::circuit::{CircuitEstimator, CircuitReport, LayerCostCache};
 use crate::config::{ChipMode, PlacementPolicy, SiamConfig};
 use crate::coordinator::report::SimReport;
+use crate::fault::FaultReport;
 use crate::dnn::{resolve_model, Dnn, DnnStats};
 use crate::dram::DramReport;
 use crate::mapping::{build_traffic, map_dnn, MappingResult, Placement, Traffic, TrafficMatrix};
@@ -140,11 +141,23 @@ pub(crate) fn stage_dnn(cfg: &SiamConfig, ctx: &SweepContext) -> Result<Arc<Dnn>
 /// used to generate traffic is then re-embedded against the actual
 /// inter-chiplet flow weights — node ids are stable across embeddings,
 /// so the traffic stays valid and only NoP distances change.
+///
+/// With `[fault]` injection or `[system] spare_chiplets` configured the
+/// fault-aware mapping path runs instead ([`crate::fault`]) and the
+/// returned [`FaultReport`] is `Some`; the fault-free default goes
+/// through the exact pre-fault code path (bit-identity regression-pinned
+/// in `tests/integration.rs`).
 pub(crate) fn stage_mapping(
     cfg: &SiamConfig,
     dnn: &Dnn,
-) -> Result<(MappingResult, Placement, Traffic)> {
-    let map = map_dnn(dnn, cfg).context("partition & mapping")?;
+) -> Result<(MappingResult, Placement, Traffic, Option<FaultReport>)> {
+    let (map, fault) = if cfg.system.spare_chiplets == 0 && cfg.fault.is_none() {
+        (map_dnn(dnn, cfg).context("partition & mapping")?, None)
+    } else {
+        let (m, r) = crate::fault::map_dnn_with_faults(dnn, cfg)
+            .context("partition & mapping under faults")?;
+        (m, Some(r))
+    };
     let mut placement = Placement::new(map.num_chiplets);
     let traffic = build_traffic(dnn, &map, &placement, cfg);
     if cfg.system.placement == PlacementPolicy::Dataflow
@@ -153,7 +166,7 @@ pub(crate) fn stage_mapping(
         let weights = TrafficMatrix::from_nop_traffic(&traffic, placement.nodes());
         placement = Placement::dataflow(map.num_chiplets, &weights);
     }
-    Ok((map, placement, traffic))
+    Ok((map, placement, traffic, fault))
 }
 
 /// Stage 3a: circuit estimation, sharing per-layer compute costs
@@ -227,7 +240,7 @@ pub fn run_point(
         dnn.stats()
     };
 
-    let (map, placement, traffic) = stage_mapping(cfg, &dnn)?;
+    let (map, placement, traffic, fault) = stage_mapping(cfg, &dnn)?;
 
     let (circuit, noc, nop, dram) = if concurrent_engines {
         std::thread::scope(|s| {
@@ -251,7 +264,7 @@ pub fn run_point(
         )
     };
 
-    Ok(SimReport::assemble(
+    let mut report = SimReport::assemble(
         cfg,
         &dnn,
         &map,
@@ -261,7 +274,9 @@ pub fn run_point(
         nop,
         dram,
         t0.elapsed().as_secs_f64(),
-    ))
+    );
+    report.fault = fault;
+    Ok(report)
 }
 
 #[cfg(test)]

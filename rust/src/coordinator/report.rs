@@ -83,6 +83,9 @@ pub struct SimReport {
     /// Yielded silicon (chiplet dies incl. NoP drivers/routers), mm² —
     /// excludes the passive interposer wiring; drives the cost model.
     pub silicon_area_mm2: f64,
+    /// What the fault injection did to this point (`None` on fault-free
+    /// runs — the default; set by [`crate::coordinator::pipeline::run_point`]).
+    pub fault: Option<crate::fault::FaultReport>,
     /// Wall-clock the simulation took, seconds.
     pub wall_seconds: f64,
 }
@@ -167,6 +170,7 @@ impl SimReport {
             noc_cycles: noc.cycles,
             nop_cycles: nop.cycles,
             silicon_area_mm2,
+            fault: None,
             wall_seconds,
         }
     }
@@ -203,13 +207,30 @@ impl SimReport {
                 .collect();
             format!(" [{}]", parts.join(" + "))
         };
+        let fault_line = match &self.fault {
+            Some(f) if f.remapped => format!(
+                "\nfault: {dead} dead chiplet(s) {ids:?}, {fx} faulty xbars, \
+                 {spares} spare(s), remapped onto {surv} surviving xbars (seed {seed})",
+                dead = f.dead_chiplets.len(),
+                ids = f.dead_chiplets,
+                fx = f.faulty_xbars,
+                spares = f.spare_chiplets,
+                surv = f.surviving_capacity_xbars,
+                seed = f.seed,
+            ),
+            Some(f) => format!(
+                "\nfault: clean injection (seed {}), {} spare(s) idle",
+                f.seed, f.spare_chiplets
+            ),
+            None => String::new(),
+        };
         format!(
             "{model} on {ds}: {params:.2}M params, {chiplets} chiplets{classes} ({req} used), \
              {tiles} tiles, util {util:.1}%\n\
              area {area} mm² | energy {energy} µJ | latency {lat} ms | \
              power {pw} mW | EDAP {edap:.3e} pJ·ns·mm²\n\
              eff {eff:.1} inf/J | {ips:.2} inf/s | NoC {nocp:.1}% E, NoP {nopp:.1}% E | \
-             DRAM load {dram_ms:.2} ms / {dram_mj:.2} mJ | sim {wall:.2}s",
+             DRAM load {dram_ms:.2} ms / {dram_mj:.2} mJ | sim {wall:.2}s{fault_line}",
             model = self.model,
             ds = self.dataset,
             params = self.params as f64 / 1e6,
@@ -277,6 +298,79 @@ impl SimReport {
         if !self.chiplets_per_class.is_empty() {
             o.set("classes", classes_json(&self.chiplets_per_class));
         }
+        if let Some(f) = &self.fault {
+            o.set("fault", f.to_json());
+        }
+        o
+    }
+}
+
+/// Outcome of a mid-run chiplet-failure scenario (`[serve]
+/// fail_at_request`): when the failure hit, how long the remap took,
+/// what was shed, and the tail latency before / during / after the
+/// outage window. Carried in [`ServeReport::failover`].
+#[derive(Debug, Clone)]
+pub struct FailoverReport {
+    /// The chiplet that died mid-run.
+    pub fail_chiplet: usize,
+    /// Failure instant (arrival time of request `fail_at_request`), ms.
+    pub fail_time_ms: f64,
+    /// Configured remap latency (`[serve] remap_latency_us`), ms.
+    pub remap_latency_ms: f64,
+    /// Pipeline stages hosted (fully or partly) on the dead chiplet.
+    pub dead_stages: usize,
+    /// Did the system remap onto surviving capacity and complete
+    /// requests afterwards? `false` when the remap failed (no spare
+    /// capacity — see `remap_error`) or nothing completed after it.
+    pub recovered: bool,
+    /// Failure instant → first completion on the remapped pipeline, ms
+    /// (0 when not recovered).
+    pub recovery_ms: f64,
+    /// Requests shed because of the failure: in-flight work lost on
+    /// the dead stages plus arrivals shed at the ingress over the rest
+    /// of the run (pre-failure sheds included; a stable healthy phase
+    /// sheds nothing).
+    pub shed_total: usize,
+    /// In-flight requests lost on the dead stages at the failure
+    /// instant.
+    pub shed_in_flight: usize,
+    /// p99 latency over completions before the failure, ms.
+    pub p99_before_ms: f64,
+    /// p99 latency over completions in the outage window (failure →
+    /// remap done), ms. Requests queued behind the dead stage complete
+    /// after the remap, so this window mostly shows the drained
+    /// downstream tail; 0 when nothing completed in it.
+    pub p99_during_ms: f64,
+    /// p99 latency over completions after the remap, ms (0 when none).
+    pub p99_after_ms: f64,
+    /// Spare chiplets the architecture carried into the scenario.
+    pub spare_chiplets: usize,
+    /// Why the remap failed, when it did (e.g. the surviving capacity
+    /// cannot hold the DNN).
+    pub remap_error: Option<String>,
+}
+
+impl FailoverReport {
+    /// Machine-readable form (nested under `"failover"` in
+    /// [`ServeReport::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("fail_chiplet", self.fail_chiplet)
+            .set("fail_time_ms", self.fail_time_ms)
+            .set("remap_latency_ms", self.remap_latency_ms)
+            .set("dead_stages", self.dead_stages)
+            .set("recovered", self.recovered)
+            .set("recovery_ms", self.recovery_ms)
+            .set("shed_total", self.shed_total)
+            .set("shed_in_flight", self.shed_in_flight)
+            .set("p99_before_ms", self.p99_before_ms)
+            .set("p99_during_ms", self.p99_during_ms)
+            .set("p99_after_ms", self.p99_after_ms)
+            .set("spare_chiplets", self.spare_chiplets);
+        match &self.remap_error {
+            Some(e) => o.set("remap_error", e.as_str()),
+            None => o.set("remap_error", Json::Null),
+        };
         o
     }
 }
@@ -348,6 +442,9 @@ pub struct ServeReport {
     pub qos_p99_target_ms: f64,
     /// One-time weight load at deployment (not a per-request cost).
     pub weight_load: DramReport,
+    /// Mid-run chiplet-failure outcome (`[serve] fail_at_request`
+    /// scenarios only).
+    pub failover: Option<FailoverReport>,
     /// Wall-clock of the serving simulation, seconds.
     pub wall_seconds: f64,
 }
@@ -390,7 +487,7 @@ impl ServeReport {
             "open" => format!("{:.0} qps offered", self.offered_qps),
             _ => format!("concurrency {}", self.concurrency),
         };
-        format!(
+        let mut s = format!(
             "{model} on {ds} serving ({mode}, {load}): {done}/{req} done, \
              {drop:.1}% shed\n\
              throughput {tp:.1} inf/s (bottleneck {cap:.1} inf/s, stage {bs}) | \
@@ -418,7 +515,35 @@ impl ServeReport {
             qos = if self.meets_qos() { "met" } else { "MISSED" },
             qtgt = self.qos_p99_target_ms,
             wall = self.wall_seconds,
-        )
+        );
+        if let Some(f) = &self.failover {
+            let outcome = if f.recovered {
+                format!(
+                    "recovered in {rec:.3} ms (remap {rl:.3} ms), \
+                     p99 before/during/after {b:.3}/{d:.3}/{a:.3} ms",
+                    rec = f.recovery_ms,
+                    rl = f.remap_latency_ms,
+                    b = f.p99_before_ms,
+                    d = f.p99_during_ms,
+                    a = f.p99_after_ms,
+                )
+            } else {
+                format!(
+                    "NOT recovered{}",
+                    f.remap_error.as_deref().map(|e| format!(" ({e})")).unwrap_or_default()
+                )
+            };
+            s.push_str(&format!(
+                "\nfailover: chiplet {c} died at {t:.3} ms ({ds} stage(s), \
+                 {spares} spare(s)): {shed} request(s) shed, {outcome}",
+                c = f.fail_chiplet,
+                t = f.fail_time_ms,
+                ds = f.dead_stages,
+                spares = f.spare_chiplets,
+                shed = f.shed_total,
+            ));
+        }
+        s
     }
 
     /// Machine-readable report (stable keys; parsed back in tests).
@@ -463,6 +588,9 @@ impl ServeReport {
             .set("energy_pj", self.weight_load.energy_pj)
             .set("requests", self.weight_load.requests);
         o.set("weight_load", w);
+        if let Some(f) = &self.failover {
+            o.set("failover", f.to_json());
+        }
         o
     }
 }

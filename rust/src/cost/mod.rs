@@ -60,6 +60,37 @@ impl CostModel {
         let chip = self.chiplet_system_cost(n, chiplet_area_mm2);
         100.0 * (mono - chip) / mono
     }
+
+    /// Probability that a package of `n` required chiplets plus
+    /// `spares` spare chiplets (each an independent die of
+    /// `chiplet_area_mm2`, Poisson yield) still has at least `n` live
+    /// dies: Σ_{k=0..spares} C(n+spares, k) · (1−η)^k · η^(n+spares−k).
+    ///
+    /// With no spares this is the classic known-good-die survival η^n;
+    /// each spare buys one tolerable die loss. Drives the yield-aware
+    /// DSE ranking ([`crate::coordinator::dse::FigureOfMerit::YieldCost`])
+    /// and the expected-cost math in `docs/RELIABILITY.md`.
+    pub fn system_survival(&self, n: usize, spares: usize, chiplet_area_mm2: f64) -> f64 {
+        let y = self.yield_of(chiplet_area_mm2);
+        let total = n + spares;
+        let mut sum = 0.0;
+        let mut binom = 1.0f64; // C(total, 0)
+        for k in 0..=spares {
+            sum += binom * (1.0 - y).powi(k as i32) * y.powi((total - k) as i32);
+            binom *= (total - k) as f64 / (k + 1) as f64;
+        }
+        sum
+    }
+
+    /// Yield-adjusted system cost: the fabrication cost of the `n +
+    /// spares` dies divided by the survival probability — the expected
+    /// number of packages fabricated per working system, in normalized
+    /// cost units. Lower is better; this is the `YieldCost`
+    /// figure of merit's score.
+    pub fn yield_adjusted_cost(&self, n: usize, spares: usize, chiplet_area_mm2: f64) -> f64 {
+        self.chiplet_system_cost(n + spares, chiplet_area_mm2)
+            / self.system_survival(n, spares, chiplet_area_mm2)
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +138,57 @@ mod tests {
         let m = CostModel::default();
         let imp = m.improvement_pct(12.0, 2, 6.0);
         assert!(imp.abs() < 10.0, "improvement {imp}%");
+    }
+
+    #[test]
+    fn survival_reduces_to_kgd_without_spares() {
+        let m = CostModel::default();
+        // no spares: survival = η^n exactly
+        let y = m.yield_of(25.0);
+        for n in [1usize, 4, 16] {
+            let s = m.system_survival(n, 0, 25.0);
+            assert!((s - y.powi(n as i32)).abs() < 1e-15, "n={n}: {s}");
+        }
+    }
+
+    #[test]
+    fn survival_golden_values_at_paper_defect_density() {
+        // Hand-computed at D0 = 0.012/mm², 25 mm² chiplets:
+        //   η = e^(−0.3) = 0.7408182206817179
+        //   survival(4, 0) = η⁴ = e^(−1.2)      = 0.3011942119122021
+        //   survival(4, 1) = η⁵ + 5(1−η)η⁴      = 0.6134504…
+        let m = CostModel::default();
+        let y = m.yield_of(25.0);
+        assert!((y - 0.7408182206817179).abs() < 1e-15);
+        assert!((m.system_survival(4, 0, 25.0) - 0.3011942119122021).abs() < 1e-12);
+        let s1 = m.system_survival(4, 1, 25.0);
+        let expect = (-1.5f64).exp() + 5.0 * (1.0 - (-0.3f64).exp()) * (-1.2f64).exp();
+        assert!((s1 - expect).abs() < 1e-15, "{s1} vs {expect}");
+        assert!((s1 - 0.6134504).abs() < 1e-6, "{s1}");
+    }
+
+    #[test]
+    fn spares_raise_survival_monotonically() {
+        let m = CostModel::default();
+        let mut prev = 0.0;
+        for spares in 0..5 {
+            let s = m.system_survival(16, spares, 25.0);
+            assert!(s > prev, "spares={spares}: {s} <= {prev}");
+            assert!(s < 1.0);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn yield_adjusted_cost_has_an_optimum_spare_count() {
+        // 4 × 25 mm² chiplets at the paper's D0 (η ≈ 0.74): the first
+        // two spares pay for themselves, the fourth overshoots — the
+        // expected cost per working system has an interior optimum
+        let m = CostModel::default();
+        let c: Vec<f64> = (0..5).map(|s| m.yield_adjusted_cost(4, s, 25.0)).collect();
+        assert!(c[1] < c[0], "one spare must pay for itself: {c:?}");
+        assert!(c[2] < c[1], "the second spare still pays: {c:?}");
+        assert!(c[4] > c[2], "four spares must overshoot: {c:?}");
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! Yield-aware fault injection and spare-chiplet failover remap.
+//!
+//! SIAM's fabrication-cost model (Appendix A) already prices known-good-die
+//! yield into the chiplet count/size trade-off; this module extends the
+//! simulator itself to the same regime: dies fail (at manufacturing per
+//! the yield model, or in the field per an explicit kill list), crossbars
+//! degrade, and a package provisioned with `[system] spare_chiplets`
+//! survives by remapping the affected layers onto its remaining capacity.
+//!
+//! The flow has three pieces, all deterministic in the `[fault] seed`:
+//!
+//! 1. **Injection** ([`inject`]) — draw the fault state from one
+//!    splitmix64 stream: explicit kills first, then one survival draw
+//!    per chiplet against `die_yield`, then one draw per crossbar of
+//!    each surviving chiplet against `xbar_fault_fraction`.
+//! 2. **Remap** ([`map_dnn_with_faults`]) — run the classic partition
+//!    (Algorithm 1), extend the architecture with the spare chiplets,
+//!    and — when any capacity was lost — repack every layer first-fit
+//!    onto the surviving per-chiplet capacities (whole-layer placement
+//!    preferred, id-order spill when a layer no longer fits anywhere).
+//!    Zero injected faults leave the extended mapping untouched (the
+//!    identity remap), and the packer errors with
+//!    [`MappingError::InsufficientSurvivingCapacity`] rather than
+//!    silently dropping layers.
+//! 3. **Reporting** ([`FaultReport`]) — what died, what capacity
+//!    survived, and whether a remap ran; attached to
+//!    [`crate::coordinator::SimReport`] and rendered into its JSON.
+//!
+//! Serving-time failover (a chiplet dying mid-run, in-flight requests
+//! shed, the remapped stage graph hot-swapped after a remap latency)
+//! builds on this module from [`crate::serve`].
+
+use crate::config::{FaultConfig, SiamConfig};
+use crate::dnn::Dnn;
+use crate::mapping::{map_dnn, ChipletShare, MappingError, MappingResult};
+use crate::serve::traffic::SplitMix64;
+use crate::util::json::Json;
+
+/// Which chiplets and crossbars the injected faults took out.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultState {
+    /// Dead chiplet ids, ascending (explicit kills ∪ yield losses).
+    pub dead_chiplets: Vec<usize>,
+    /// Faulty crossbars per chiplet (length = chiplet count, spares
+    /// included; dead chiplets report their full capacity as faulty).
+    pub faulty_xbars: Vec<usize>,
+}
+
+impl FaultState {
+    /// Did the injection take out anything at all?
+    pub fn is_clean(&self) -> bool {
+        self.dead_chiplets.is_empty() && self.faulty_xbars.iter().all(|&f| f == 0)
+    }
+
+    /// Crossbars chiplet `c` can still program.
+    pub fn effective_capacity(&self, c: usize, capacity: usize) -> usize {
+        capacity.saturating_sub(self.faulty_xbars[c])
+    }
+}
+
+/// Draw the fault state for an architecture of `capacities.len()`
+/// chiplets (spares included) from `fc`'s seed. Deterministic: one
+/// splitmix64 stream, fixed draw order (survival draws for chiplets
+/// 0..n, then crossbar draws per surviving chiplet in id order).
+///
+/// Errors with [`MappingError::FaultTargetOutOfRange`] when the kill
+/// list names a chiplet the architecture does not have.
+pub fn inject(fc: &FaultConfig, capacities: &[usize]) -> Result<FaultState, MappingError> {
+    let n = capacities.len();
+    let mut dead = vec![false; n];
+    for &c in &fc.kill_chiplets {
+        if c >= n {
+            return Err(MappingError::FaultTargetOutOfRange {
+                chiplet: c,
+                num_chiplets: n,
+            });
+        }
+        dead[c] = true;
+    }
+    let mut rng = SplitMix64::new(fc.seed);
+    if fc.die_yield < 1.0 {
+        // every chiplet gets a draw (kills included) so the stream
+        // position — and therefore the crossbar draws below — does not
+        // depend on the kill list
+        for d in dead.iter_mut() {
+            if rng.f64_open() > fc.die_yield {
+                *d = true;
+            }
+        }
+    }
+    let mut faulty = vec![0usize; n];
+    for c in 0..n {
+        if dead[c] {
+            faulty[c] = capacities[c];
+        } else if fc.xbar_fault_fraction > 0.0 {
+            for _ in 0..capacities[c] {
+                if rng.f64_open() <= fc.xbar_fault_fraction {
+                    faulty[c] += 1;
+                }
+            }
+        }
+    }
+    Ok(FaultState {
+        dead_chiplets: (0..n).filter(|&c| dead[c]).collect(),
+        faulty_xbars: faulty,
+    })
+}
+
+/// Partition & mapping under injected faults with spare chiplets:
+/// the classic [`map_dnn`] extended by `[system] spare_chiplets` empty
+/// chiplets (charged in area/leakage/fabcost, carrying no weights), then
+/// repacked onto the surviving capacity when the injection took
+/// anything out.
+///
+/// The repack visits layers in execution order and chiplets in id
+/// order: a layer goes whole onto the first chiplet with room for it,
+/// or — when no single chiplet fits it — spills across the remaining
+/// capacity id-first. Layer geometry (Eq.-1 rows/cols/crossbars and
+/// cell utilization) is preserved from the baseline mapping; only the
+/// chiplet shares move. With nothing injected the extended baseline is
+/// returned untouched (remap is the identity).
+pub fn map_dnn_with_faults(
+    dnn: &Dnn,
+    cfg: &SiamConfig,
+) -> Result<(MappingResult, FaultReport), MappingError> {
+    let mut map = map_dnn(dnn, cfg)?;
+    let spares = cfg.system.spare_chiplets;
+    let s = cfg.chiplet_size_xbars();
+    map.num_chiplets += spares;
+    map.chiplet_used_xbars.resize(map.num_chiplets, 0);
+    map.chiplet_class.resize(map.num_chiplets, 0);
+    map.chiplet_capacities.resize(map.num_chiplets, s);
+
+    let state = inject(&cfg.fault, &map.chiplet_capacities)?;
+    let lost: usize = state.faulty_xbars.iter().sum();
+    let surviving: usize = map
+        .chiplet_capacities
+        .iter()
+        .enumerate()
+        .map(|(c, &cap)| state.effective_capacity(c, cap))
+        .sum();
+    let report = FaultReport {
+        seed: cfg.fault.seed,
+        dead_chiplets: state.dead_chiplets.clone(),
+        faulty_xbars: lost,
+        spare_chiplets: spares,
+        total_chiplets: map.num_chiplets,
+        lost_capacity_xbars: lost,
+        surviving_capacity_xbars: surviving,
+        remapped: !state.is_clean(),
+    };
+    if state.is_clean() {
+        return Ok((map, report));
+    }
+
+    // ---- repack every layer onto the surviving capacity
+    let mut remaining: Vec<usize> = map
+        .chiplet_capacities
+        .iter()
+        .enumerate()
+        .map(|(c, &cap)| state.effective_capacity(c, cap))
+        .collect();
+    let needed: usize = map.per_layer.iter().map(|lm| lm.xbars).sum();
+    if needed > surviving {
+        return Err(MappingError::InsufficientSurvivingCapacity {
+            needed_xbars: needed,
+            available_xbars: surviving,
+        });
+    }
+    let mut used = vec![0usize; map.num_chiplets];
+    for lm in &mut map.per_layer {
+        let need = lm.xbars;
+        let mut shares = Vec::new();
+        if let Some(c) = (0..remaining.len()).find(|&c| remaining[c] >= need) {
+            remaining[c] -= need;
+            used[c] += need;
+            shares.push(ChipletShare {
+                chiplet: c,
+                xbars: need,
+            });
+        } else {
+            let mut left = need;
+            for (c, rem) in remaining.iter_mut().enumerate() {
+                if *rem == 0 {
+                    continue;
+                }
+                let take = left.min(*rem);
+                *rem -= take;
+                used[c] += take;
+                shares.push(ChipletShare {
+                    chiplet: c,
+                    xbars: take,
+                });
+                left -= take;
+                if left == 0 {
+                    break;
+                }
+            }
+            debug_assert_eq!(left, 0, "surviving-capacity precheck must cover the spill");
+        }
+        lm.chiplets = shares;
+    }
+    map.chiplet_used_xbars = used;
+    map.num_chiplets_required = map.chiplet_used_xbars.iter().filter(|&&u| u > 0).count();
+    Ok((map, report))
+}
+
+/// What the fault injection did to one design point — attached to
+/// [`crate::coordinator::SimReport`] and rendered into its JSON as the
+/// `"fault"` object (absent on fault-free runs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultReport {
+    /// The `[fault] seed` the injection drew from.
+    pub seed: u64,
+    /// Dead chiplet ids, ascending (explicit kills ∪ yield losses).
+    pub dead_chiplets: Vec<usize>,
+    /// Faulty crossbars across the system (dead chiplets' full
+    /// capacity included).
+    pub faulty_xbars: usize,
+    /// Spare chiplets the architecture provisioned.
+    pub spare_chiplets: usize,
+    /// Chiplets the architecture contains, spares included.
+    pub total_chiplets: usize,
+    /// Crossbar capacity the faults removed.
+    pub lost_capacity_xbars: usize,
+    /// Crossbar capacity left across surviving chiplets.
+    pub surviving_capacity_xbars: usize,
+    /// Did the injection force a repack (false = identity remap)?
+    pub remapped: bool,
+}
+
+impl FaultReport {
+    /// Machine-readable fragment (stable keys; validated in CI's
+    /// schema checks).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("seed", self.seed)
+            .set(
+                "dead_chiplets",
+                Json::Arr(self.dead_chiplets.iter().map(|&c| Json::Num(c as f64)).collect()),
+            )
+            .set("faulty_xbars", self.faulty_xbars)
+            .set("spare_chiplets", self.spare_chiplets)
+            .set("total_chiplets", self.total_chiplets)
+            .set("lost_capacity_xbars", self.lost_capacity_xbars)
+            .set("surviving_capacity_xbars", self.surviving_capacity_xbars)
+            .set("remapped", self.remapped);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SiamConfig;
+    use crate::dnn::build_model;
+
+    fn cfg_with(kills: Vec<usize>, spares: usize) -> SiamConfig {
+        SiamConfig::paper_default()
+            .with_total_chiplets(25)
+            .with_spare_chiplets(spares)
+            .with_kill_chiplets(kills)
+    }
+
+    #[test]
+    fn injection_is_bit_deterministic() {
+        let caps = vec![256usize; 30];
+        let mut fc = crate::config::FaultConfig {
+            die_yield: 0.9,
+            xbar_fault_fraction: 0.03,
+            seed: 7,
+            ..Default::default()
+        };
+        let a = inject(&fc, &caps).unwrap();
+        let b = inject(&fc, &caps).unwrap();
+        assert_eq!(a, b);
+        fc.seed = 8;
+        let c = inject(&fc, &caps).unwrap();
+        assert_ne!(a, c, "different seeds must draw different faults");
+    }
+
+    #[test]
+    fn kill_list_out_of_range_errors() {
+        let fc = crate::config::FaultConfig {
+            kill_chiplets: vec![99],
+            ..Default::default()
+        };
+        match inject(&fc, &vec![256; 10]) {
+            Err(MappingError::FaultTargetOutOfRange { chiplet: 99, num_chiplets: 10 }) => {}
+            other => panic!("expected out-of-range error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_position_independent_of_kill_list() {
+        // the same seed must draw the same yield/crossbar faults whether
+        // or not a chiplet was explicitly killed
+        let caps = vec![256usize; 20];
+        let mut fc = crate::config::FaultConfig {
+            die_yield: 0.8,
+            seed: 5,
+            ..Default::default()
+        };
+        let base = inject(&fc, &caps).unwrap();
+        fc.kill_chiplets = vec![3];
+        let killed = inject(&fc, &caps).unwrap();
+        let expect: Vec<usize> = {
+            let mut d = base.dead_chiplets.clone();
+            if !d.contains(&3) {
+                d.push(3);
+                d.sort_unstable();
+            }
+            d
+        };
+        assert_eq!(killed.dead_chiplets, expect);
+    }
+
+    #[test]
+    fn zero_fault_remap_is_identity() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let cfg = cfg_with(vec![], 2);
+        let baseline = map_dnn(&dnn, &cfg).unwrap();
+        let (map, rep) = map_dnn_with_faults(&dnn, &cfg).unwrap();
+        assert!(!rep.remapped);
+        assert_eq!(map.num_chiplets, baseline.num_chiplets + 2);
+        assert_eq!(map.num_chiplets_required, baseline.num_chiplets_required);
+        for (a, b) in map.per_layer.iter().zip(&baseline.per_layer) {
+            assert_eq!(a.chiplets, b.chiplets, "identity remap must not move layers");
+        }
+        // the spares carry nothing
+        assert!(map.chiplet_used_xbars[baseline.num_chiplets..].iter().all(|&u| u == 0));
+    }
+
+    #[test]
+    fn killed_chiplet_spills_onto_spare() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let cfg = cfg_with(vec![3], 1);
+        let (map, rep) = map_dnn_with_faults(&dnn, &cfg).unwrap();
+        assert!(rep.remapped);
+        assert_eq!(rep.dead_chiplets, vec![3]);
+        assert_eq!(map.chiplet_used_xbars[3], 0, "dead chiplet must carry nothing");
+        // full layer coverage on live chiplets
+        for lm in &map.per_layer {
+            let total: usize = lm.chiplets.iter().map(|s| s.xbars).sum();
+            assert_eq!(total, lm.xbars, "layer must keep all its crossbars");
+            assert!(lm.chiplets.iter().all(|s| s.chiplet != 3));
+        }
+        // capacity respected everywhere
+        for (c, (&u, &cap)) in map
+            .chiplet_used_xbars
+            .iter()
+            .zip(&map.chiplet_capacities)
+            .enumerate()
+        {
+            assert!(u <= cap, "chiplet {c} over capacity");
+        }
+    }
+
+    #[test]
+    fn no_spare_total_kill_overflow_errors() {
+        // killing chiplets with no spares on a tightly-packed custom
+        // architecture must error cleanly, not drop layers
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let cfg = SiamConfig::paper_default().with_kill_chiplets(vec![0, 1, 2]);
+        match map_dnn_with_faults(&dnn, &cfg) {
+            Err(MappingError::InsufficientSurvivingCapacity {
+                needed_xbars,
+                available_xbars,
+            }) => assert!(available_xbars < needed_xbars),
+            other => panic!("expected capacity error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn crossbar_faults_degrade_capacity() {
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let mut cfg = cfg_with(vec![], 2);
+        cfg.fault.xbar_fault_fraction = 0.05;
+        let (map, rep) = map_dnn_with_faults(&dnn, &cfg).unwrap();
+        assert!(rep.remapped);
+        assert!(rep.faulty_xbars > 0);
+        for (c, (&u, &cap)) in map
+            .chiplet_used_xbars
+            .iter()
+            .zip(&map.chiplet_capacities)
+            .enumerate()
+        {
+            let eff = cap - map_faulty(&cfg, &map, c);
+            assert!(u <= eff, "chiplet {c} exceeds surviving capacity");
+        }
+    }
+
+    /// Re-derive chiplet `c`'s faulty-crossbar count from the config's
+    /// seed (injection is deterministic, so the test can replay it).
+    fn map_faulty(cfg: &SiamConfig, map: &MappingResult, c: usize) -> usize {
+        inject(&cfg.fault, &map.chiplet_capacities).unwrap().faulty_xbars[c]
+    }
+
+    #[test]
+    fn fault_report_json_has_stable_keys() {
+        let rep = FaultReport {
+            seed: 42,
+            dead_chiplets: vec![3],
+            faulty_xbars: 256,
+            spare_chiplets: 1,
+            total_chiplets: 26,
+            lost_capacity_xbars: 256,
+            surviving_capacity_xbars: 6144,
+            remapped: true,
+        };
+        let s = rep.to_json().to_string_pretty();
+        for key in [
+            "seed",
+            "dead_chiplets",
+            "faulty_xbars",
+            "spare_chiplets",
+            "total_chiplets",
+            "lost_capacity_xbars",
+            "surviving_capacity_xbars",
+            "remapped",
+        ] {
+            assert!(s.contains(&format!("\"{key}\"")), "missing {key} in {s}");
+        }
+    }
+}

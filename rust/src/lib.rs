@@ -19,6 +19,8 @@
 //! * [`nop`] — network-on-package engine (wires, TX/RX drivers, router).
 //! * [`dram`] — Ramulator/VAMPIRE-style DDR3/DDR4 access estimator.
 //! * [`cost`] — Appendix-A fabrication cost / yield model.
+//! * [`fault`] — yield-aware fault injection and spare-chiplet
+//!   failover remap (docs/RELIABILITY.md).
 //! * [`runtime`] — PJRT executor for the AOT-compiled Pallas crossbar
 //!   kernels (functional inference mode; Python never serves).
 //! * [`serve`] — discrete-event inference-serving simulator: streaming
@@ -56,6 +58,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod dnn;
 pub mod dram;
+pub mod fault;
 pub mod gpu_baseline;
 pub mod mapping;
 pub mod metrics;

@@ -2,13 +2,15 @@
 //!
 //! ```text
 //! siam simulate  [--config F] [--model M --dataset D] [--tiles N]
-//!                [--chiplets N] [--monolithic] [--placement P] [--json PATH]
+//!                [--chiplets N] [--monolithic] [--placement P]
+//!                [--spares N] [--kill-chiplet 3,7] [--fault-seed S] [--json PATH]
 //! siam sweep     [--config F] [--model M --dataset D]
 //!                [--tiles 4,9,16,25,36] [--counts 16,36,64,100]
-//!                [--placement rowmajor|dataflow] [--json PATH]
+//!                [--placement rowmajor|dataflow] [--fom edap|...|yield] [--json PATH]
 //! siam serve     [--config F] [--mode open|closed] [--rate QPS]
-//!                [--concurrency N] [--requests N] [--queue N]
-//!                [--seed S] [--quick] [--json PATH]
+//!                [--concurrency N] [--requests N] [--queue N] [--seed S]
+//!                [--fail-at N --fail-chiplet C --remap-latency US --spares N]
+//!                [--quick] [--json PATH]
 //! siam functional [--artifacts DIR] [--adc 8] [--seed 42]
 //! siam models    [--files DIR]
 //! siam config    (print the paper-default TOML)
@@ -78,6 +80,15 @@ fn build_config(flags: &HashMap<String, String>) -> Result<SiamConfig> {
             other => bail!("--placement must be rowmajor|dataflow, got '{other}'"),
         };
     }
+    if let Some(s) = flags.get("spares") {
+        cfg.system.spare_chiplets = s.parse().context("--spares")?;
+    }
+    if let Some(k) = flags.get("kill-chiplet") {
+        cfg.fault.kill_chiplets = parse_list(k).context("--kill-chiplet")?;
+    }
+    if let Some(s) = flags.get("fault-seed") {
+        cfg.fault.seed = s.parse().context("--fault-seed")?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -110,7 +121,21 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         Some(c) => parse_list(c)?.into_iter().map(Some).chain([None]).collect(),
         None => vec![None],
     };
-    let res = SweepBuilder::new(&cfg).tiles(&tiles).chiplet_counts(&counts).run()?;
+    let mut builder = SweepBuilder::new(&cfg).tiles(&tiles).chiplet_counts(&counts);
+    if let Some(fom) = flags.get("fom") {
+        use siam::coordinator::FigureOfMerit;
+        builder = builder.figure_of_merit(match fom.as_str() {
+            "edap" => FigureOfMerit::Edap,
+            "edp" => FigureOfMerit::Edp,
+            "energy" => FigureOfMerit::Energy,
+            "latency" => FigureOfMerit::Latency,
+            "area" => FigureOfMerit::Area,
+            "ipj" => FigureOfMerit::InferencesPerJoule,
+            "yield" => FigureOfMerit::YieldCost,
+            other => bail!("--fom must be edap|edp|energy|latency|area|ipj|yield, got '{other}'"),
+        });
+    }
+    let res = builder.run()?;
     let pts = &res.points;
     let mut t = Table::new(&[
         "tiles/chiplet",
@@ -138,6 +163,14 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             "\nEDAP-optimal: {} tiles/chiplet, {} chiplets",
             best.tiles_per_chiplet, best.report.num_chiplets
         );
+    }
+    if let Some(fom) = flags.get("fom") {
+        if let Some(best) = res.best() {
+            println!(
+                "{fom}-optimal: {} tiles/chiplet, {} chiplets",
+                best.tiles_per_chiplet, best.report.num_chiplets
+            );
+        }
     }
     if let Some(path) = flags.get("json") {
         std::fs::write(path, sweep_json(&cfg, &res).to_string_pretty())?;
@@ -243,6 +276,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(s) = flags.get("seed") {
         cfg.serve.seed = s.parse().context("--seed")?;
+    }
+    // mid-run chiplet-failure scenario (implies open-loop traffic)
+    if let Some(n) = flags.get("fail-at") {
+        cfg.serve.fail_at_request = Some(n.parse().context("--fail-at")?);
+    }
+    if let Some(c) = flags.get("fail-chiplet") {
+        cfg.serve.fail_chiplet = c.parse().context("--fail-chiplet")?;
+    }
+    if let Some(us) = flags.get("remap-latency") {
+        cfg.serve.remap_latency_us = us.parse().context("--remap-latency")?;
     }
     if flags.contains_key("quick") {
         cfg.serve.requests = cfg.serve.requests.min(200);
@@ -405,18 +448,24 @@ fn cmd_models(flags: &HashMap<String, String>) -> Result<()> {
 const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config> [flags]
   simulate   --model resnet110 --dataset cifar10 [--tiles 16] [--chiplets 36]
              [--monolithic] [--placement rowmajor|dataflow]
+             [--spares 2] [--kill-chiplet 3,7] [--fault-seed 42]
              [--config file.toml] [--json out.json]
   sweep      --model resnet110 --dataset cifar10 [--tiles 4,9,16] [--counts 36,64]
-             [--placement rowmajor|dataflow] [--json out.json]
+             [--placement rowmajor|dataflow] [--fom edap|edp|energy|latency|area|ipj|yield]
+             [--json out.json]
   serve      [--mode open|closed] [--rate 2000] [--concurrency 4]
              [--requests 1024] [--queue 4] [--seed 42] [--quick]
+             [--fail-at 64 --fail-chiplet 3 --remap-latency 100 --spares 1]
              [--config file.toml] [--json out.json]
   functional [--artifacts artifacts] [--adc 4|8] [--seed 42]
   models     [--files DIR] list builtin + file models (params/MACs/crossbars)
   config     print the paper-default configuration TOML
 
   --model also accepts a network-description file: --model file:net.toml
-  (see docs/MODELS.md for the authoring format)";
+  --spares reserves idle spare chiplets; --kill-chiplet injects faults
+  (docs/RELIABILITY.md); serve --fail-at kills --fail-chiplet mid-run and
+  hot-swaps the remapped pipeline after --remap-latency microseconds
+  (see docs/MODELS.md for the model-authoring format)";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();

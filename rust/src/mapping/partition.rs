@@ -142,6 +142,22 @@ pub enum MappingError {
     ExceedsChiplets { required: usize, available: usize },
     /// The DNN has no weight layers.
     EmptyDnn,
+    /// Fault remap: the surviving chiplets (after kills, yield losses
+    /// and crossbar faults) cannot host the DNN's crossbars.
+    InsufficientSurvivingCapacity {
+        /// Crossbars the DNN needs.
+        needed_xbars: usize,
+        /// Crossbars left across all surviving chiplets.
+        available_xbars: usize,
+    },
+    /// A `[fault] kill_chiplets` or `[serve] fail_chiplet` id does not
+    /// exist in the architecture (spares included).
+    FaultTargetOutOfRange {
+        /// The offending chiplet id.
+        chiplet: usize,
+        /// Chiplets the architecture contains, spares included.
+        num_chiplets: usize,
+    },
 }
 
 impl std::fmt::Display for MappingError {
@@ -156,6 +172,22 @@ impl std::fmt::Display for MappingError {
                  provides only {available}; increase total_chiplets"
             ),
             MappingError::EmptyDnn => write!(f, "DNN contains no weight layers"),
+            MappingError::InsufficientSurvivingCapacity {
+                needed_xbars,
+                available_xbars,
+            } => write!(
+                f,
+                "DNN needs {needed_xbars} crossbars but only {available_xbars} survive \
+                 the injected faults; add spare_chiplets or reduce the fault load"
+            ),
+            MappingError::FaultTargetOutOfRange {
+                chiplet,
+                num_chiplets,
+            } => write!(
+                f,
+                "fault targets chiplet {chiplet} but the architecture has only \
+                 {num_chiplets} chiplets (spares included)"
+            ),
         }
     }
 }

@@ -36,6 +36,29 @@ pub struct EngineParams {
     pub queue_depth: usize,
 }
 
+/// A mid-run chiplet-failure scenario for [`run_with_failover`].
+///
+/// At `fail_time_ns` the `dead_stages` go down: their in-flight
+/// requests (in service, held blocked, or queued) are shed and counted
+/// in [`RunStats::failover_shed`], and the stages stop serving. Work
+/// keeps flowing *into* a dead stage's bounded queue (back-pressure
+/// eventually jams the pipeline up to the ingress, where open-loop
+/// arrivals shed normally). If `resume` is set, at its timestamp every
+/// stage comes back up with the new per-stage service times — the
+/// remapped (degraded) pipeline — and queued work drains; with `resume
+/// = None` the pipeline stays jammed for the rest of the run (the
+/// no-spare outcome).
+#[derive(Debug, Clone)]
+pub struct FailoverPlan {
+    /// Failure instant, ns.
+    pub fail_time_ns: f64,
+    /// Indices of the stages hosted on the failed chiplet.
+    pub dead_stages: Vec<usize>,
+    /// `(resume_time_ns, service_ns)` of the remapped pipeline (must
+    /// have the same stage count); `None` = remap impossible.
+    pub resume: Option<(f64, Vec<f64>)>,
+}
+
 /// The request stream fed to the engine.
 #[derive(Debug, Clone)]
 pub enum Workload {
@@ -75,6 +98,10 @@ pub struct RunStats {
     /// Accumulated busy time per stage, ns (blocked time excluded —
     /// blocking is starvation, not work).
     pub stage_busy_ns: Vec<f64>,
+    /// Requests shed off dead stages at the failure instant (in
+    /// service, held blocked, or queued there). Always 0 without a
+    /// [`FailoverPlan`].
+    pub failover_shed: usize,
 }
 
 impl RunStats {
@@ -118,8 +145,17 @@ struct Ev {
 enum Kind {
     /// Open-loop request `id` reaches the ingress.
     Arrive(u32),
-    /// The stage finishes its in-service request.
-    Finish(u32),
+    /// Stage `j` finishes its in-service request. The epoch stamps the
+    /// stage's incarnation at scheduling time: a failure bumps the
+    /// stage epoch, so a finish scheduled before the failure arrives
+    /// stale and is ignored (the request it would have finished was
+    /// shed with the chiplet).
+    Finish { j: u32, epoch: u32 },
+    /// The failover plan's failure instant.
+    Fail,
+    /// The failover plan's remap completes: stages come back up with
+    /// the degraded service times.
+    Resume,
 }
 
 impl PartialEq for Ev {
@@ -145,6 +181,11 @@ struct Stage {
     blocked: Option<u32>,
     service_ns: f64,
     busy_ns: f64,
+    /// The chiplet hosting this stage has failed and not yet remapped.
+    down: bool,
+    /// Incarnation counter; bumped when the stage dies so in-flight
+    /// finish events go stale.
+    epoch: u32,
 }
 
 struct Sim {
@@ -179,7 +220,10 @@ impl Sim {
     /// upstream stage (or, at the ingress, from waiting closed-loop
     /// clients), cascading as far up as space propagates.
     fn pull(&mut self, j: usize, t: f64) {
-        if self.stages[j].serving.is_some() || self.stages[j].blocked.is_some() {
+        if self.stages[j].down
+            || self.stages[j].serving.is_some()
+            || self.stages[j].blocked.is_some()
+        {
             return;
         }
         let Some(r) = self.stages[j].queue.pop_front() else {
@@ -187,8 +231,9 @@ impl Sim {
         };
         self.stages[j].serving = Some(r);
         let s = self.stages[j].service_ns;
+        let epoch = self.stages[j].epoch;
         self.stages[j].busy_ns += s;
-        self.push_event(t + s, Kind::Finish(j as u32));
+        self.push_event(t + s, Kind::Finish { j: j as u32, epoch });
         self.backfill(j, t);
     }
 
@@ -210,7 +255,12 @@ impl Sim {
         }
     }
 
-    fn finish(&mut self, j: usize, t: f64) {
+    fn finish(&mut self, j: usize, epoch: u32, t: f64) {
+        if self.stages[j].epoch != epoch {
+            // the chiplet hosting this stage died mid-service: the
+            // request this finish would complete was already shed
+            return;
+        }
         let r = self.stages[j].serving.take().expect("finish on idle stage");
         if j + 1 == self.stages.len() {
             self.complete(r, t);
@@ -257,14 +307,78 @@ impl Sim {
             self.stats.dropped += 1;
         }
     }
+
+    /// The failure instant: dead stages shed their in-flight work and
+    /// stop serving. Their freed queue slots immediately refill from
+    /// the jammed upstream, so work keeps accumulating behind the dead
+    /// stage during the outage (served after a resume, or stuck until
+    /// the end of the run without one).
+    fn fail(&mut self, dead: &[usize], t: f64) {
+        for &j in dead {
+            let st = &mut self.stages[j];
+            st.down = true;
+            st.epoch = st.epoch.wrapping_add(1);
+            let mut shed = st.queue.len();
+            st.queue.clear();
+            if st.serving.take().is_some() {
+                shed += 1;
+            }
+            if st.blocked.take().is_some() {
+                shed += 1;
+            }
+            self.stats.failover_shed += shed;
+            for _ in 0..self.cap {
+                self.backfill(j, t);
+            }
+        }
+    }
+
+    /// Remap complete: every stage comes back up with the degraded
+    /// pipeline's service times and queued work drains.
+    fn resume(&mut self, services: &[f64], t: f64) {
+        for (st, &s) in self.stages.iter_mut().zip(services) {
+            st.down = false;
+            st.service_ns = s;
+        }
+        for j in 0..self.stages.len() {
+            self.pull(j, t);
+            self.backfill(j, t);
+        }
+    }
 }
 
 /// Run the pipeline of `service_ns` stages against a workload and
 /// return the raw statistics. Deterministic: identical inputs produce
 /// bit-identical outputs.
 pub fn run(service_ns: &[f64], params: EngineParams, workload: Workload) -> RunStats {
+    run_with_failover(service_ns, params, workload, None)
+}
+
+/// [`run`], optionally with a mid-run chiplet-failure scenario. With
+/// `plan = None` this is exactly `run` — the zero-fault event sequence
+/// is untouched, bit for bit. Deterministic either way.
+pub fn run_with_failover(
+    service_ns: &[f64],
+    params: EngineParams,
+    workload: Workload,
+    plan: Option<&FailoverPlan>,
+) -> RunStats {
     assert!(!service_ns.is_empty(), "pipeline needs at least one stage");
     assert!(params.queue_depth > 0, "queues need at least one slot");
+    if let Some(p) = plan {
+        assert!(
+            p.dead_stages.iter().all(|&j| j < service_ns.len()),
+            "failover plan targets a stage outside the pipeline"
+        );
+        if let Some((t, s)) = &p.resume {
+            assert!(*t >= p.fail_time_ns, "remap cannot complete before the failure");
+            assert_eq!(
+                s.len(),
+                service_ns.len(),
+                "remapped pipeline must keep the stage count"
+            );
+        }
+    }
     let mut sim = Sim {
         stages: service_ns
             .iter()
@@ -274,6 +388,8 @@ pub fn run(service_ns: &[f64], params: EngineParams, workload: Workload) -> RunS
                 blocked: None,
                 service_ns: s,
                 busy_ns: 0.0,
+                down: false,
+                epoch: 0,
             })
             .collect(),
         cap: params.queue_depth,
@@ -284,6 +400,15 @@ pub fn run(service_ns: &[f64], params: EngineParams, workload: Workload) -> RunS
         to_issue: 0,
         stats: RunStats::default(),
     };
+
+    // failure/resume events first: at an equal timestamp the failure
+    // precedes arrivals and finishes (their sequence numbers are later)
+    if let Some(p) = plan {
+        sim.push_event(p.fail_time_ns, Kind::Fail);
+        if let Some((t, _)) = &p.resume {
+            sim.push_event(*t, Kind::Resume);
+        }
+    }
 
     match workload {
         Workload::Open { arrivals } => {
@@ -310,7 +435,16 @@ pub fn run(service_ns: &[f64], params: EngineParams, workload: Workload) -> RunS
     while let Some(Reverse(ev)) = sim.heap.pop() {
         match ev.kind {
             Kind::Arrive(r) => sim.arrive(r, ev.t),
-            Kind::Finish(j) => sim.finish(j as usize, ev.t),
+            Kind::Finish { j, epoch } => sim.finish(j as usize, epoch, ev.t),
+            Kind::Fail => {
+                let dead = plan.expect("fail event without a plan").dead_stages.clone();
+                sim.fail(&dead, ev.t);
+            }
+            Kind::Resume => {
+                let (_, services) =
+                    plan.and_then(|p| p.resume.as_ref()).expect("resume event without a plan");
+                sim.resume(services, ev.t);
+            }
         }
     }
 
@@ -418,6 +552,98 @@ mod tests {
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&a.latencies_ns), bits(&b.latencies_ns));
         assert_eq!(bits(&a.stage_busy_ns), bits(&b.stage_busy_ns));
+    }
+
+    #[test]
+    fn failover_with_no_plan_is_bitwise_run() {
+        let stages = [3.0, 7.5, 2.25, 11.0];
+        let a = run(&stages, EngineParams { queue_depth: 2 }, open(4.0, 300));
+        let b = run_with_failover(&stages, EngineParams { queue_depth: 2 }, open(4.0, 300), None);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(b.failover_shed, 0);
+        assert_eq!(bits(&a.latencies_ns), bits(&b.latencies_ns));
+        assert_eq!(bits(&a.completion_times_ns), bits(&b.completion_times_ns));
+        assert_eq!(bits(&a.stage_busy_ns), bits(&b.stage_busy_ns));
+    }
+
+    #[test]
+    fn failover_sheds_inflight_then_recovers() {
+        // bottleneck stage 1 dies at t=1000 mid-stream, comes back 500 ns
+        // later: its in-flight work is shed, everything else eventually
+        // completes, and requests are conserved exactly
+        let stages = [10.0, 20.0, 5.0];
+        let plan = FailoverPlan {
+            fail_time_ns: 1000.0,
+            dead_stages: vec![1],
+            resume: Some((1500.0, vec![10.0, 25.0, 5.0])),
+        };
+        let stats = run_with_failover(
+            &stages,
+            EngineParams { queue_depth: 4 },
+            open(25.0, 200),
+            Some(&plan),
+        );
+        assert!(stats.failover_shed > 0, "the dead stage held work at t=1000");
+        assert_eq!(
+            stats.completed + stats.dropped + stats.failover_shed,
+            200,
+            "conservation with shedding"
+        );
+        assert!(stats.completed > 150, "most of the stream survives a 500 ns outage");
+        // the run outlives the outage: completions continue past resume
+        assert!(stats.last_completion_ns > 1500.0);
+        // degraded service time shows up in post-resume pacing
+        let after: Vec<f64> = stats
+            .completion_times_ns
+            .iter()
+            .copied()
+            .filter(|&t| t > 1600.0)
+            .collect();
+        assert!(after.len() > 10, "pipeline drains after the remap");
+        let gaps_ok = after.windows(2).all(|w| w[1] - w[0] >= 25.0 - 1e-9);
+        assert!(gaps_ok, "post-resume completions pace at the degraded bottleneck");
+    }
+
+    #[test]
+    fn failover_without_resume_jams_the_pipeline() {
+        // no spare capacity: the dead stage never comes back, the jam
+        // back-pressures to the ingress and the tail of the stream sheds
+        let stages = [10.0, 20.0, 5.0];
+        let plan = FailoverPlan { fail_time_ns: 1000.0, dead_stages: vec![1], resume: None };
+        let stats = run_with_failover(
+            &stages,
+            EngineParams { queue_depth: 2 },
+            open(25.0, 400),
+            Some(&plan),
+        );
+        let healthy = run(&stages, EngineParams { queue_depth: 2 }, open(25.0, 400));
+        assert_eq!(healthy.dropped, 0, "the healthy run keeps up at 25 ns spacing");
+        assert!(stats.dropped > 300, "jammed ingress sheds the stream: {}", stats.dropped);
+        assert!(stats.completed < 50);
+        // requests stuck in queues at the end are neither completed nor
+        // dropped — strict inequality
+        assert!(stats.completed + stats.dropped + stats.failover_shed < 400);
+        // downstream of the dead stage still drains what it held
+        assert!(stats.last_completion_ns < 1100.0, "{}", stats.last_completion_ns);
+    }
+
+    #[test]
+    fn stale_finish_after_death_is_ignored() {
+        // a single request in service on the dying stage: its finish
+        // event fires after the failure and must not complete it
+        let stages = [1.0, 100.0];
+        let plan = FailoverPlan { fail_time_ns: 50.0, dead_stages: vec![1], resume: None };
+        let stats = run_with_failover(
+            &stages,
+            EngineParams { queue_depth: 2 },
+            Workload::Open { arrivals: vec![10.0] },
+            Some(&plan),
+        );
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.failover_shed, 1);
+        assert_eq!(stats.dropped, 0);
     }
 
     #[test]

@@ -29,12 +29,12 @@ pub mod engine;
 pub mod stage;
 pub mod traffic;
 
-pub use engine::{run, EngineParams, RunStats, Workload};
+pub use engine::{run, run_with_failover, EngineParams, FailoverPlan, RunStats, Workload};
 pub use stage::{StageGraph, StageSpec};
 pub use traffic::{poisson_arrivals, SplitMix64};
 
 use crate::config::{ServeConfig, ServeMode, SiamConfig};
-use crate::coordinator::{ServeReport, SweepContext};
+use crate::coordinator::{FailoverReport, ServeReport, SweepContext};
 use anyhow::Result;
 
 /// Nearest-rank percentile of an **ascending-sorted** latency slice.
@@ -61,6 +61,9 @@ pub fn serve(cfg: &SiamConfig) -> Result<ServeReport> {
 /// simulated costs only the event loop.
 pub fn evaluate(cfg: &SiamConfig, ctx: &SweepContext) -> Result<ServeReport> {
     let graph = StageGraph::build(cfg, ctx)?;
+    if cfg.serve.fail_at_request.is_some() {
+        return run_failover_graph(cfg, &graph, ctx);
+    }
     Ok(run_graph(&graph, &cfg.serve))
 }
 
@@ -72,12 +75,7 @@ pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
     let services: Vec<f64> = graph.stages.iter().map(|s| s.service_ns).collect();
     let (workload, mode, offered_qps, concurrency) = match sc.mode {
         ServeMode::Open => {
-            let rate = if sc.rate_qps > 0.0 {
-                sc.rate_qps
-            } else {
-                // auto: 80 % of the analytic ceiling — loaded but stable
-                0.8 * graph.bottleneck_qps()
-            };
+            let rate = open_rate_qps(graph, sc);
             (
                 Workload::Open {
                     arrivals: poisson_arrivals(rate, sc.requests, sc.seed),
@@ -96,7 +94,32 @@ pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
     };
 
     let stats = run(&services, EngineParams { queue_depth: sc.queue_depth }, workload);
+    assemble_report(graph, sc, stats, mode, offered_qps, concurrency, t0)
+}
 
+/// The open-loop offered rate of a serving run: the configured
+/// `[serve] rate_qps`, or 80 % of the analytic bottleneck ceiling when
+/// auto (0) — loaded but stable.
+fn open_rate_qps(graph: &StageGraph, sc: &ServeConfig) -> f64 {
+    if sc.rate_qps > 0.0 {
+        sc.rate_qps
+    } else {
+        0.8 * graph.bottleneck_qps()
+    }
+}
+
+/// Turn raw engine statistics into a [`ServeReport`] (shared by the
+/// healthy and failover paths — identical float operations in
+/// identical order, so the zero-fault path stays bit-identical).
+fn assemble_report(
+    graph: &StageGraph,
+    sc: &ServeConfig,
+    stats: RunStats,
+    mode: &str,
+    offered_qps: f64,
+    concurrency: usize,
+    t0: std::time::Instant,
+) -> ServeReport {
     let mut sorted = stats.latencies_ns.clone();
     sorted.sort_by(|a, b| a.total_cmp(b));
     let mean_ns = if sorted.is_empty() {
@@ -160,8 +183,112 @@ pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
         energy_per_inference_pj: graph.dynamic_energy_pj + leak_share_pj,
         qos_p99_target_ms: sc.qos_p99_ms,
         weight_load: graph.weight_load,
+        failover: None,
         wall_seconds: t0.elapsed().as_secs_f64(),
     }
+}
+
+/// Run the mid-run chiplet-failure scenario (`[serve]
+/// fail_at_request`): the healthy pipeline streams open-loop traffic,
+/// `fail_chiplet` dies at the configured request's arrival, and — when
+/// the DNN remaps onto the surviving capacity (spares included) — the
+/// degraded pipeline hot-swaps in after `remap_latency_us`. The
+/// returned report carries a [`FailoverReport`] with the shed counts
+/// and the before/during/after tail latency.
+fn run_failover_graph(
+    cfg: &SiamConfig,
+    graph: &StageGraph,
+    ctx: &SweepContext,
+) -> Result<ServeReport> {
+    let t0 = std::time::Instant::now();
+    let sc = &cfg.serve;
+    let fail_at = sc.fail_at_request.expect("caller checked fail_at_request");
+    anyhow::ensure!(
+        fail_at < sc.requests,
+        "serve.fail_at_request = {fail_at} is outside the {} offered requests",
+        sc.requests
+    );
+    anyhow::ensure!(
+        sc.fail_chiplet < graph.num_chiplets,
+        "serve.fail_chiplet = {} but the architecture has {} chiplets (spares included)",
+        sc.fail_chiplet,
+        graph.num_chiplets
+    );
+
+    let rate = open_rate_qps(graph, sc);
+    let arrivals = poisson_arrivals(rate, sc.requests, sc.seed);
+    let fail_time_ns = arrivals[fail_at];
+    let dead_stages: Vec<usize> = graph
+        .stages
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.shares.iter().any(|&(c, _)| c == sc.fail_chiplet))
+        .map(|(j, _)| j)
+        .collect();
+
+    // the remapped pipeline: the same design point with the failed
+    // chiplet added to the kill list, rebuilt through the shared
+    // caches (spare capacity absorbs the dead chiplet's layers — or
+    // the build errors, and the outage never ends)
+    let mut degraded = cfg.clone();
+    degraded.serve.fail_at_request = None;
+    if !degraded.fault.kill_chiplets.contains(&sc.fail_chiplet) {
+        degraded.fault.kill_chiplets.push(sc.fail_chiplet);
+    }
+    let (resume, remap_error) = match StageGraph::build(&degraded, ctx) {
+        Ok(g) => {
+            let services: Vec<f64> = g.stages.iter().map(|s| s.service_ns).collect();
+            (Some((fail_time_ns + sc.remap_latency_us * 1.0e3, services)), None)
+        }
+        Err(e) => (None, Some(format!("{e:#}"))),
+    };
+    let resume_time_ns = resume.as_ref().map(|(t, _)| *t);
+
+    let plan = FailoverPlan { fail_time_ns, dead_stages: dead_stages.clone(), resume };
+    let stats = run_with_failover(
+        &graph.stages.iter().map(|s| s.service_ns).collect::<Vec<_>>(),
+        EngineParams { queue_depth: sc.queue_depth },
+        Workload::Open { arrivals },
+        Some(&plan),
+    );
+
+    // windowed tails: completions before the failure, inside the
+    // outage, and on the remapped pipeline
+    let (mut before, mut during, mut after) = (Vec::new(), Vec::new(), Vec::new());
+    let mut first_after_ns = f64::INFINITY;
+    for (&t, &l) in stats.completion_times_ns.iter().zip(&stats.latencies_ns) {
+        if t < fail_time_ns {
+            before.push(l);
+        } else if resume_time_ns.is_none_or(|rt| t < rt) {
+            during.push(l);
+        } else {
+            first_after_ns = first_after_ns.min(t);
+            after.push(l);
+        }
+    }
+    for w in [&mut before, &mut during, &mut after] {
+        w.sort_by(|a, b| a.total_cmp(b));
+    }
+    let recovered = !after.is_empty();
+    let failover = FailoverReport {
+        fail_chiplet: sc.fail_chiplet,
+        fail_time_ms: fail_time_ns / 1.0e6,
+        remap_latency_ms: sc.remap_latency_us / 1.0e3,
+        dead_stages: dead_stages.len(),
+        recovered,
+        recovery_ms: if recovered { (first_after_ns - fail_time_ns) / 1.0e6 } else { 0.0 },
+        shed_total: stats.failover_shed + stats.dropped,
+        shed_in_flight: stats.failover_shed,
+        p99_before_ms: percentile(&before, 99.0) / 1.0e6,
+        p99_during_ms: percentile(&during, 99.0) / 1.0e6,
+        p99_after_ms: percentile(&after, 99.0) / 1.0e6,
+        spare_chiplets: cfg.system.spare_chiplets,
+        remap_error,
+    };
+
+    let mut report = assemble_report(graph, sc, stats, "open", rate, 0, t0);
+    report.failover = Some(failover);
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -289,6 +416,64 @@ mod tests {
         shed_tiny.dropped = 1;
         assert!(!shed_tiny.meets_qos());
         assert!(shed_tiny.qos_score_ms() > miss.qos_score_ms());
+    }
+
+    #[test]
+    fn failover_spare_vs_no_spare() {
+        // the acceptance scenario: chiplet 3 dies at request 64. With a
+        // spare the system remaps and recovers after the remap latency;
+        // without one the dead chiplet's layers have nowhere to go, the
+        // pipeline jams, and the rest of the stream sheds.
+        let base = quick(SiamConfig::paper_default().with_serve_open(0.0))
+            .with_failover(64, 3, 50.0);
+        let no_spare = serve(&base).unwrap();
+        let spared = serve(&base.clone().with_spare_chiplets(1)).unwrap();
+
+        let fs = spared.failover.as_ref().expect("failover report attached");
+        assert!(fs.recovered, "spare must absorb the dead chiplet: {:?}", fs.remap_error);
+        assert!(fs.remap_error.is_none());
+        assert_eq!(fs.fail_chiplet, 3);
+        assert_eq!(fs.spare_chiplets, 1);
+        assert!(fs.dead_stages > 0, "chiplet 3 hosts early layers");
+        // recovery is measured to the first remapped completion, so it
+        // is at least the configured remap latency
+        assert!(fs.recovery_ms >= fs.remap_latency_ms - 1e-9, "{}", fs.recovery_ms);
+        assert!(fs.p99_before_ms > 0.0 && fs.p99_after_ms > 0.0);
+
+        let fx = no_spare.failover.as_ref().expect("failover report attached");
+        assert!(!fx.recovered, "a fully packed system cannot remap without spares");
+        assert!(fx.remap_error.is_some());
+        // the headline: spares shed strictly less on the same seed
+        assert!(
+            fs.shed_total < fx.shed_total,
+            "spare shed {} vs no-spare shed {}",
+            fs.shed_total,
+            fx.shed_total
+        );
+        assert!(spared.completed > no_spare.completed);
+
+        // the failover block rides into JSON and the summary
+        let j = spared.to_json().to_string_pretty();
+        assert!(j.contains("\"failover\"") && j.contains("\"recovery_ms\""));
+        let back = crate::util::json::parse(&j).expect("failover JSON parses");
+        let f = back.get("failover").expect("failover key");
+        assert_eq!(f.get("recovered"), Some(&crate::util::json::Json::Bool(true)));
+        assert!(spared.summary().contains("failover: chiplet 3"));
+    }
+
+    #[test]
+    fn failover_is_bit_deterministic() {
+        let cfg = quick(SiamConfig::paper_default().with_serve_open(0.0))
+            .with_spare_chiplets(1)
+            .with_failover(64, 3, 50.0);
+        let a = serve(&cfg).unwrap();
+        let b = serve(&cfg).unwrap();
+        assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits());
+        assert_eq!(a.completed, b.completed);
+        let (fa, fb) = (a.failover.as_ref().unwrap(), b.failover.as_ref().unwrap());
+        assert_eq!(fa.shed_total, fb.shed_total);
+        assert_eq!(fa.recovery_ms.to_bits(), fb.recovery_ms.to_bits());
+        assert_eq!(fa.p99_during_ms.to_bits(), fb.p99_during_ms.to_bits());
     }
 
     #[test]

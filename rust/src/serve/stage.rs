@@ -86,7 +86,7 @@ impl StageGraph {
         cfg.validate()?;
         let dnn = stage_dnn(cfg, ctx)?;
         let stats = dnn.stats();
-        let (map, placement, traffic) = stage_mapping(cfg, &dnn)?;
+        let (map, placement, traffic, fault) = stage_mapping(cfg, &dnn)?;
         let circuit = stage_circuit(cfg, ctx, &dnn, &map, &traffic);
         let noc = stage_noc(cfg, ctx, &traffic, &map);
         let nop = stage_nop(cfg, ctx, &traffic, &placement, &map);
@@ -155,8 +155,9 @@ impl StageGraph {
             .iter()
             .map(|&cap| if cap == usize::MAX { map.total_xbars().max(1) } else { cap })
             .collect();
-        let single_shot =
+        let mut single_shot =
             SimReport::assemble(cfg, &dnn, &map, &traffic, circuit, noc, nop, weight_load, 0.0);
+        single_shot.fault = fault;
 
         Ok(StageGraph {
             stages,

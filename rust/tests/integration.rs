@@ -391,6 +391,52 @@ fn transformer_serving_mix_with_file_workload() {
 }
 
 #[test]
+fn zero_fault_reports_are_bit_identical_to_the_classic_path() {
+    // the fault subsystem's do-no-harm pin: with nothing injected and no
+    // spares, the [fault] block (any seed) is invisible — single-shot and
+    // serving reports stay bit-identical to the classic path, and no
+    // fault/failover fragments appear in them
+    let base = SiamConfig::paper_default();
+    let a = simulate(&base).unwrap();
+    assert!(a.fault.is_none(), "clean run must not carry a fault report");
+    let mut seeded = base.clone();
+    seeded.fault.seed = 0xFEED_FACE; // an unused stream must change nothing
+    let b = simulate(&seeded).unwrap();
+    assert_sim_reports_bit_identical(&a, &b);
+
+    let mut scfg = base.clone().with_serve_requests(150);
+    let sa = siam::serve::serve(&scfg).unwrap();
+    assert!(sa.failover.is_none(), "clean serve must not carry a failover report");
+    assert!(!sa.to_json().to_string_pretty().contains("\"failover\""));
+    scfg.fault.seed = 0xFEED_FACE;
+    let sb = siam::serve::serve(&scfg).unwrap();
+    assert_eq!(sa.completed, sb.completed);
+    assert_eq!(sa.p50_ms.to_bits(), sb.p50_ms.to_bits());
+    assert_eq!(sa.p99_ms.to_bits(), sb.p99_ms.to_bits());
+    assert_eq!(sa.throughput_qps.to_bits(), sb.throughput_qps.to_bits());
+}
+
+#[test]
+fn spare_chiplets_are_charged_but_idle_until_faults() {
+    // spares extend the architecture (area, chiplet count) without
+    // touching the workload's mapping or latency while nothing fails
+    let base = SiamConfig::paper_default();
+    let clean = simulate(&base).unwrap();
+    let spared = simulate(&base.clone().with_spare_chiplets(2)).unwrap();
+    let f = spared.fault.as_ref().expect("spared run reports fault state");
+    assert_eq!(f.spare_chiplets, 2);
+    assert!(!f.remapped);
+    assert_eq!(spared.num_chiplets, clean.num_chiplets + 2);
+    assert_eq!(spared.num_chiplets_required, clean.num_chiplets_required);
+    assert!(spared.total.area_um2 > clean.total.area_um2, "spares must be charged in area");
+    // the report JSON carries the fault fragment with its stable keys
+    let j = spared.to_json().to_string_pretty();
+    let parsed = siam::util::json::parse(&j).unwrap();
+    let frag = parsed.get("fault").expect("fault fragment in JSON");
+    assert!(frag.get("spare_chiplets").is_some() && frag.get("remapped").is_some());
+}
+
+#[test]
 fn zoo_golden_params_and_crossbars_are_stable() {
     // exact golden pins for every zoo entry: parameter count and the
     // Eq.-1 crossbar total at the paper-default geometry (the figures

@@ -393,6 +393,128 @@ fn cost_model_monotone_in_area() {
 }
 
 #[test]
+fn fault_injection_invariants_hold_for_random_draws() {
+    use siam::config::FaultConfig;
+    use siam::fault::inject;
+    check_property("fault_injection_invariants", 40, 0xFA017, |rng| {
+        let n = rng.range(2, 40) as usize;
+        let caps: Vec<usize> = (0..n).map(|_| rng.range(16, 512) as usize).collect();
+        let mut kills: Vec<usize> =
+            (0..rng.below(4)).map(|_| rng.below(n as u64) as usize).collect();
+        kills.sort_unstable();
+        kills.dedup();
+        let fc = FaultConfig {
+            kill_chiplets: kills.clone(),
+            die_yield: 0.7 + 0.3 * rng.f64(), // [0.7, 1.0)
+            xbar_fault_fraction: 0.2 * rng.f64(), // [0, 0.2)
+            seed: rng.next_u64(),
+        };
+        let a = inject(&fc, &caps).unwrap();
+        // 1. bit-determinism in the seed
+        assert_eq!(a, inject(&fc, &caps).unwrap(), "same seed must draw the same faults");
+        // 2. dead list sorted, deduped, kill list included
+        assert!(a.dead_chiplets.windows(2).all(|w| w[0] < w[1]), "dead ids not ascending");
+        for k in &kills {
+            assert!(a.dead_chiplets.contains(k), "explicit kill {k} missing");
+        }
+        // 3. per-chiplet faults bounded by capacity; dead lose everything
+        assert_eq!(a.faulty_xbars.len(), n);
+        for (c, (&f, &cap)) in a.faulty_xbars.iter().zip(&caps).enumerate() {
+            assert!(f <= cap, "chiplet {c}: {f} faulty > capacity {cap}");
+            assert_eq!(a.effective_capacity(c, cap), cap - f);
+        }
+        for &d in &a.dead_chiplets {
+            assert_eq!(a.faulty_xbars[d], caps[d], "dead chiplet {d} must lose its capacity");
+        }
+        assert_eq!(
+            a.is_clean(),
+            a.dead_chiplets.is_empty() && a.faulty_xbars.iter().all(|&f| f == 0)
+        );
+    });
+}
+
+#[test]
+fn fault_remap_repacks_every_layer_onto_surviving_capacity() {
+    use siam::fault::{inject, map_dnn_with_faults};
+    use siam::mapping::MappingError;
+    check_property("fault_remap_coverage", 25, 0xDEAD5, |rng| {
+        let (model, ds) = MODELS[rng.below(MODELS.len() as u64) as usize];
+        let dnn = build_model(model, ds).unwrap();
+        let mut cfg = SiamConfig::paper_default();
+        cfg.system.spare_chiplets = rng.range(1, 3) as usize;
+        cfg.fault.seed = rng.next_u64();
+        cfg.fault.xbar_fault_fraction = 0.1 * rng.f64();
+        let total = map_dnn(&dnn, &cfg).unwrap().num_chiplets + cfg.system.spare_chiplets;
+        let mut kills: Vec<usize> =
+            (0..rng.below(3)).map(|_| rng.below(total as u64) as usize).collect();
+        kills.sort_unstable();
+        kills.dedup();
+        cfg.fault.kill_chiplets = kills;
+        match map_dnn_with_faults(&dnn, &cfg) {
+            Ok((map, rep)) => {
+                let state = inject(&cfg.fault, &map.chiplet_capacities).unwrap();
+                // 1. full coverage: every layer keeps all its crossbars,
+                //    none of them on a dead chiplet
+                for lm in &map.per_layer {
+                    let sum: usize = lm.chiplets.iter().map(|s| s.xbars).sum();
+                    assert_eq!(sum, lm.xbars, "layer lost crossbars in the remap");
+                    for s in &lm.chiplets {
+                        assert!(
+                            !state.dead_chiplets.contains(&s.chiplet),
+                            "share on dead chiplet {}",
+                            s.chiplet
+                        );
+                    }
+                }
+                // 2. bookkeeping consistent and within surviving capacity
+                let mut used = vec![0usize; map.num_chiplets];
+                for lm in &map.per_layer {
+                    for s in &lm.chiplets {
+                        used[s.chiplet] += s.xbars;
+                    }
+                }
+                assert_eq!(used, map.chiplet_used_xbars);
+                for (c, &u) in used.iter().enumerate() {
+                    assert!(
+                        u <= state.effective_capacity(c, map.chiplet_capacities[c]),
+                        "chiplet {c} packed beyond its surviving capacity"
+                    );
+                }
+                assert_eq!(rep.remapped, !state.is_clean());
+            }
+            // over-killed configurations must fail loudly, not drop layers
+            Err(MappingError::InsufficientSurvivingCapacity { needed_xbars, available_xbars }) => {
+                assert!(available_xbars < needed_xbars);
+            }
+            Err(e) => panic!("unexpected mapping error: {e:?}"),
+        }
+    });
+}
+
+#[test]
+fn zero_fault_remap_is_the_identity_for_random_configs() {
+    // the bit-identity tentpole pin, generalized: with nothing injected
+    // and no spares, the fault-aware mapper must return exactly the
+    // classic mapping for any valid geometry
+    use siam::fault::map_dnn_with_faults;
+    check_property("zero_fault_identity", 20, 0x1DE47, |rng| {
+        let (model, ds) = MODELS[rng.below(MODELS.len() as u64) as usize];
+        let cfg = random_cfg(rng);
+        let dnn = build_model(model, ds).unwrap();
+        let baseline = map_dnn(&dnn, &cfg).unwrap();
+        let (map, rep) = map_dnn_with_faults(&dnn, &cfg).unwrap();
+        assert!(!rep.remapped);
+        assert!(rep.dead_chiplets.is_empty());
+        assert_eq!(rep.lost_capacity_xbars, 0);
+        assert_eq!(map.num_chiplets, baseline.num_chiplets);
+        assert_eq!(map.chiplet_used_xbars, baseline.chiplet_used_xbars);
+        for (a, b) in map.per_layer.iter().zip(&baseline.per_layer) {
+            assert_eq!(a.chiplets, b.chiplets, "identity remap moved a layer");
+        }
+    });
+}
+
+#[test]
 fn metrics_composition_laws() {
     check_property("metrics_laws", 50, 0xABCD, |rng| {
         let m1 = siam::Metrics::new(rng.f64() * 100.0, rng.f64() * 100.0, rng.f64() * 100.0);

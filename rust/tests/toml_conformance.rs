@@ -1,0 +1,173 @@
+//! toml-test-style conformance suite for the in-tree TOML-subset
+//! parser (`siam::config::parse_flat`).
+//!
+//! Fixtures live in `tests/toml_corpus/{valid,invalid}/*.toml`. Each
+//! fixture carries its expectations as `# expect-...` comment
+//! annotations (comments are inert to the parser, so the annotations
+//! ride inside the input they describe):
+//!
+//! * valid:   `# expect-count: N`, `# expect-key: K`,
+//!   `# expect-line: K = N`, `# expect-int|float|str|bool: K = V`,
+//!   `# expect-len: K = N` (array length), `# expect-config-ok`
+//!   (the full `SiamConfig::from_toml_str` pipeline must accept it too)
+//! * invalid: `# expect-error-line: N` (the error message must cite
+//!   that line), `# expect-error-contains: TEXT` (repeatable)
+//!
+//! Invalid fixtures may fail at any layer: `parse_flat` itself, the
+//! unknown-key / bad-value checks in `apply`, or semantic validation —
+//! the harness feeds survivors of each layer to the next and asserts
+//! *something* rejects them with the annotated message.
+
+use siam::config::{parse_flat, SiamConfig, Value};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn corpus(kind: &str) -> Vec<(String, String)> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("toml_corpus")
+        .join(kind);
+    let mut out: Vec<(String, String)> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {}: {e}", dir.display()))
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+        .map(|p| {
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            let text = std::fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("reading {}: {e}", p.display()));
+            (name, text)
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+/// `# expect-xxx: rest` annotation lines of a fixture.
+fn annotations<'a>(text: &'a str, tag: &str) -> Vec<&'a str> {
+    let prefix = format!("# expect-{tag}:");
+    text.lines()
+        .filter_map(|l| l.trim().strip_prefix(&prefix))
+        .map(str::trim)
+        .collect()
+}
+
+/// Split a `KEY = VALUE` annotation (VALUE may be empty: `KEY =`).
+fn key_value(ann: &str) -> (&str, &str) {
+    ann.split_once(" = ")
+        .map(|(k, v)| (k.trim(), v))
+        .or_else(|| ann.strip_suffix(" =").map(|k| (k.trim(), "")))
+        .unwrap_or_else(|| panic!("malformed 'KEY = VALUE' annotation: '{ann}'"))
+}
+
+fn lookup<'a>(
+    map: &'a BTreeMap<String, (Value, usize)>,
+    key: &str,
+    fixture: &str,
+) -> &'a (Value, usize) {
+    map.get(key).unwrap_or_else(|| {
+        panic!("{fixture}: expected key '{key}', parsed keys: {:?}", map.keys())
+    })
+}
+
+#[test]
+fn corpus_is_populated() {
+    // the suite only means something at toml-test scale
+    assert!(corpus("valid").len() >= 40, "valid corpus shrank");
+    assert!(corpus("invalid").len() >= 25, "invalid corpus shrank");
+}
+
+#[test]
+fn valid_corpus() {
+    for (name, text) in corpus("valid") {
+        let map = parse_flat(&text)
+            .unwrap_or_else(|e| panic!("{name}: valid fixture rejected: {e}"));
+
+        for ann in annotations(&text, "count") {
+            let want: usize = ann.parse().expect("expect-count number");
+            assert_eq!(map.len(), want, "{name}: flat entry count");
+        }
+        for ann in annotations(&text, "key") {
+            lookup(&map, ann, &name);
+        }
+        for ann in annotations(&text, "line") {
+            let (k, v) = key_value(ann);
+            let want: usize = v.parse().expect("expect-line number");
+            assert_eq!(lookup(&map, k, &name).1, want, "{name}: line of '{k}'");
+        }
+        for ann in annotations(&text, "int") {
+            let (k, v) = key_value(ann);
+            let want: i64 = v.parse().expect("expect-int number");
+            match &lookup(&map, k, &name).0 {
+                Value::Int(i) => assert_eq!(*i, want, "{name}: value of '{k}'"),
+                other => panic!("{name}: '{k}' is {other:?}, expected Int"),
+            }
+        }
+        for ann in annotations(&text, "float") {
+            let (k, v) = key_value(ann);
+            let want: f64 = v.parse().expect("expect-float number");
+            match &lookup(&map, k, &name).0 {
+                Value::Float(f) => assert_eq!(*f, want, "{name}: value of '{k}'"),
+                other => panic!("{name}: '{k}' is {other:?}, expected Float"),
+            }
+        }
+        for ann in annotations(&text, "str") {
+            let (k, v) = key_value(ann);
+            match &lookup(&map, k, &name).0 {
+                Value::Str(s) => assert_eq!(s, v, "{name}: value of '{k}'"),
+                other => panic!("{name}: '{k}' is {other:?}, expected Str"),
+            }
+        }
+        for ann in annotations(&text, "bool") {
+            let (k, v) = key_value(ann);
+            let want: bool = v.parse().expect("expect-bool value");
+            match &lookup(&map, k, &name).0 {
+                Value::Bool(b) => assert_eq!(*b, want, "{name}: value of '{k}'"),
+                other => panic!("{name}: '{k}' is {other:?}, expected Bool"),
+            }
+        }
+        for ann in annotations(&text, "len") {
+            let (k, v) = key_value(ann);
+            let want: usize = v.parse().expect("expect-len number");
+            let got = match &lookup(&map, k, &name).0 {
+                Value::Array(a) => a.len(),
+                Value::StrArray(a) => a.len(),
+                other => panic!("{name}: '{k}' is {other:?}, expected an array"),
+            };
+            assert_eq!(got, want, "{name}: length of '{k}'");
+        }
+        if text.lines().any(|l| l.trim() == "# expect-config-ok") {
+            SiamConfig::from_toml_str(&text)
+                .unwrap_or_else(|e| panic!("{name}: full config pipeline rejected: {e:#}"));
+        }
+    }
+}
+
+#[test]
+fn invalid_corpus() {
+    for (name, text) in corpus("invalid") {
+        // the parse layer first; survivors go through the full pipeline
+        // (apply's unknown-key / bad-value checks, then validation)
+        let err = match parse_flat(&text) {
+            Err(e) => e,
+            Ok(_) => match SiamConfig::from_toml_str(&text) {
+                Err(e) => format!("{e:#}"),
+                Ok(_) => panic!("{name}: invalid fixture accepted end to end"),
+            },
+        };
+        for ann in annotations(&text, "error-line") {
+            let n: usize = ann.parse().expect("expect-error-line number");
+            assert!(
+                err.contains(&format!("line {n}:")),
+                "{name}: error must cite line {n}, got: {err}"
+            );
+        }
+        for ann in annotations(&text, "error-contains") {
+            assert!(err.contains(ann), "{name}: error must contain '{ann}', got: {err}");
+        }
+        assert!(
+            !annotations(&text, "error-line").is_empty()
+                || !annotations(&text, "error-contains").is_empty(),
+            "{name}: invalid fixture carries no expectations"
+        );
+    }
+}
