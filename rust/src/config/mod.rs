@@ -237,6 +237,36 @@ impl SiamConfig {
         self.serve.remap_latency_us = remap_latency_us;
         self
     }
+
+    /// Builder-style override: lognormal programming-noise sigma of the
+    /// analog variation model (`[variation] sigma_program`).
+    pub fn with_variation_noise(mut self, sigma: f64) -> Self {
+        self.variation.sigma_program = sigma;
+        self
+    }
+
+    /// Builder-style override: extra write-verify cycles per programmed
+    /// cell — each shrinks the effective programming sigma and charges
+    /// program energy/latency.
+    pub fn with_write_verify(mut self, cycles: u32) -> Self {
+        self.variation.write_verify_cycles = cycles;
+        self
+    }
+
+    /// Builder-style override: conductance drift — power-law exponent
+    /// `nu` evaluated at retention age `time_s` seconds.
+    pub fn with_drift(mut self, nu: f64, time_s: f64) -> Self {
+        self.variation.drift_nu = nu;
+        self.variation.drift_time_s = time_s;
+        self
+    }
+
+    /// Builder-style override: periodic drift-refresh interval for the
+    /// serving simulator, seconds (0 = never refresh).
+    pub fn with_refresh_interval(mut self, seconds: f64) -> Self {
+        self.variation.refresh_interval_s = seconds;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -309,6 +339,39 @@ mod tests {
         let text = SiamConfig::paper_default().to_toml_string().unwrap();
         assert!(!text.contains("fault"), "{text}");
         assert!(!text.contains("spare"), "{text}");
+    }
+
+    #[test]
+    fn variation_roundtrips_through_toml() {
+        let mut cfg = SiamConfig::paper_default()
+            .with_variation_noise(0.05)
+            .with_write_verify(2)
+            .with_drift(0.02, 1.0e4)
+            .with_refresh_interval(3600.0);
+        cfg.variation.stuck_at_on = 0.002;
+        cfg.variation.stuck_at_off = 0.005;
+        cfg.variation.adc_offset_lsb = 0.25;
+        cfg.variation.redundant_cols = 8;
+        cfg.variation.mc_samples = 64;
+        cfg.variation.accuracy_floor = 0.7;
+        cfg.variation.seed = 11;
+        assert!(cfg.validate().is_ok());
+        let text = cfg.to_toml_string().unwrap();
+        assert!(text.contains("[variation]"), "{text}");
+        assert!(text.contains("write_verify_cycles = 2"), "{text}");
+        let back = SiamConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.variation, cfg.variation);
+        // bit-exact fixed point
+        assert_eq!(back.to_toml_string().unwrap(), text);
+    }
+
+    #[test]
+    fn zero_variation_config_writes_no_variation_block() {
+        // the default config must serialize byte-identically to
+        // pre-variation output: no [variation] block at all
+        let text = SiamConfig::paper_default().to_toml_string().unwrap();
+        assert!(!text.contains("variation"), "{text}");
+        assert!(SiamConfig::paper_default().variation.is_none());
     }
 
     #[test]

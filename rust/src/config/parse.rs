@@ -502,6 +502,70 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
     );
     take!(m, "fault.seed", cfg.fault.seed, u64v);
 
+    take!(
+        m,
+        "variation.sigma_program",
+        cfg.variation.sigma_program,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "variation.write_verify_cycles",
+        cfg.variation.write_verify_cycles,
+        u32v
+    );
+    take!(m, "variation.drift_nu", cfg.variation.drift_nu, Value::as_f64);
+    take!(
+        m,
+        "variation.drift_time_s",
+        cfg.variation.drift_time_s,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "variation.drift_t0_s",
+        cfg.variation.drift_t0_s,
+        Value::as_f64
+    );
+    take!(m, "variation.stuck_at_on", cfg.variation.stuck_at_on, Value::as_f64);
+    take!(
+        m,
+        "variation.stuck_at_off",
+        cfg.variation.stuck_at_off,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "variation.adc_offset_lsb",
+        cfg.variation.adc_offset_lsb,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "variation.redundant_cols",
+        cfg.variation.redundant_cols,
+        Value::as_usize
+    );
+    take!(
+        m,
+        "variation.mc_samples",
+        cfg.variation.mc_samples,
+        Value::as_usize
+    );
+    take!(
+        m,
+        "variation.accuracy_floor",
+        cfg.variation.accuracy_floor,
+        Value::as_f64
+    );
+    take!(
+        m,
+        "variation.refresh_interval_s",
+        cfg.variation.refresh_interval_s,
+        Value::as_f64
+    );
+    take!(m, "variation.seed", cfg.variation.seed, u64v);
+
     // ---- [[system.chiplet_class]] blocks: fields omitted in a block
     // inherit the base [device]/[chiplet]/[system.nop] values parsed
     // above, so a bare block is the degenerate identity class.
@@ -708,6 +772,23 @@ pub fn write(cfg: &SiamConfig) -> String {
         writeln!(s, "die_yield = {}", cfg.fault.die_yield).unwrap();
         writeln!(s, "xbar_fault_fraction = {}", cfg.fault.xbar_fault_fraction).unwrap();
         writeln!(s, "seed = {}", cfg.fault.seed).unwrap();
+    }
+    if !cfg.variation.is_none() {
+        let v = &cfg.variation;
+        writeln!(s, "\n[variation]").unwrap();
+        writeln!(s, "sigma_program = {}", v.sigma_program).unwrap();
+        writeln!(s, "write_verify_cycles = {}", v.write_verify_cycles).unwrap();
+        writeln!(s, "drift_nu = {}", v.drift_nu).unwrap();
+        writeln!(s, "drift_time_s = {}", v.drift_time_s).unwrap();
+        writeln!(s, "drift_t0_s = {}", v.drift_t0_s).unwrap();
+        writeln!(s, "stuck_at_on = {}", v.stuck_at_on).unwrap();
+        writeln!(s, "stuck_at_off = {}", v.stuck_at_off).unwrap();
+        writeln!(s, "adc_offset_lsb = {}", v.adc_offset_lsb).unwrap();
+        writeln!(s, "redundant_cols = {}", v.redundant_cols).unwrap();
+        writeln!(s, "mc_samples = {}", v.mc_samples).unwrap();
+        writeln!(s, "accuracy_floor = {}", v.accuracy_floor).unwrap();
+        writeln!(s, "refresh_interval_s = {}", v.refresh_interval_s).unwrap();
+        writeln!(s, "seed = {}", v.seed).unwrap();
     }
     s
 }

@@ -411,6 +411,100 @@ impl FaultConfig {
     }
 }
 
+/// Analog device-variation block (`[variation]`): non-idealities of the
+/// programmed conductances and the read-out chain, plus the mitigation
+/// knobs that trade energy for accuracy.
+///
+/// Where `[fault]` removes digital capacity (dies, crossbars), this
+/// block perturbs the *analog* values that survive: lognormal
+/// programming noise per cell, power-law retention drift
+/// `G(t) = G0·(t/t0)^(-ν)`, stuck-at-Gon/Goff cell fractions and ADC
+/// input offset. The variation engine (`crate::variation`) propagates
+/// them analytically per layer into an accuracy-loss proxy and a
+/// perturbed read energy — never by retraining. Parameter ranges follow
+/// IMAC-Sim (arXiv 2304.09252). The default block is inert and leaves
+/// every report bit-identical to a build without the subsystem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariationConfig {
+    /// Lognormal programming-noise sigma of `ln G` per freshly
+    /// programmed cell, ≥ 0. `0` = ideal programming.
+    pub sigma_program: f64,
+    /// Write-verify iterations per programmed cell. Each cycle shrinks
+    /// the effective programming sigma (×0.7 per cycle) and charges
+    /// program energy/latency — the costed mitigation knob.
+    pub write_verify_cycles: u32,
+    /// Drift exponent ν of the power law `G(t) = G0·(t/t0)^(-ν)`, in
+    /// [0, 1). `0` = no retention drift.
+    pub drift_nu: f64,
+    /// Retention time t at which conductances are read, seconds (> 0).
+    pub drift_time_s: f64,
+    /// Drift reference time t0, seconds (> 0). Drift accrues only for
+    /// `t > t0`.
+    pub drift_t0_s: f64,
+    /// Fraction of cells stuck at G_on, in [0, 1).
+    pub stuck_at_on: f64,
+    /// Fraction of cells stuck at G_off, in [0, 1).
+    pub stuck_at_off: f64,
+    /// ADC input-referred offset, in LSB at the configured `adc_bits`,
+    /// ≥ 0.
+    pub adc_offset_lsb: f64,
+    /// Redundant columns per crossbar for stuck-cell repair. Charged as
+    /// a proportional read-energy overhead; repairs a matching share of
+    /// the stuck-at population.
+    pub redundant_cols: usize,
+    /// Monte-Carlo samples per evaluation, ≥ 1.
+    pub mc_samples: usize,
+    /// Accuracy-proxy floor in [0, 1] for the variation-aware sweep
+    /// mode: design points whose expected proxy falls below it are
+    /// pruned from the ranking.
+    pub accuracy_floor: f64,
+    /// Serving drift-refresh interval, seconds; `0` = never refresh.
+    /// Refresh caps retention aging at the interval and steals stage
+    /// service time for the reprogramming pass.
+    pub refresh_interval_s: f64,
+    /// Seed of the splitmix64 variation-draw RNG — a stream independent
+    /// of the `[fault]` and `[serve]` streams, so a `(config, seed)`
+    /// pair is bit-reproducible.
+    pub seed: u64,
+}
+
+impl Default for VariationConfig {
+    fn default() -> Self {
+        VariationConfig {
+            sigma_program: 0.0,
+            write_verify_cycles: 0,
+            drift_nu: 0.0,
+            drift_time_s: 1.0,
+            drift_t0_s: 1.0,
+            stuck_at_on: 0.0,
+            stuck_at_off: 0.0,
+            adc_offset_lsb: 0.0,
+            redundant_cols: 0,
+            mc_samples: 32,
+            accuracy_floor: 0.9,
+            refresh_interval_s: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+impl VariationConfig {
+    /// True when the block perturbs nothing (the default): no noise
+    /// source and no mitigation knob is active. The pipeline routes
+    /// such configs through the classic variation-free path bit-for-bit
+    /// (sample count, floor and seed alone activate nothing).
+    pub fn is_none(&self) -> bool {
+        self.sigma_program <= 0.0
+            && self.drift_nu <= 0.0
+            && self.stuck_at_on <= 0.0
+            && self.stuck_at_off <= 0.0
+            && self.adc_offset_lsb <= 0.0
+            && self.write_verify_cycles == 0
+            && self.redundant_cols == 0
+            && self.refresh_interval_s <= 0.0
+    }
+}
+
 /// Inter-chiplet architecture block of Table 2.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -540,4 +634,6 @@ pub struct SiamConfig {
     pub serve: ServeConfig,
     /// Seeded fault-injection block (defaults inject nothing).
     pub fault: FaultConfig,
+    /// Analog device-variation block (defaults perturb nothing).
+    pub variation: VariationConfig,
 }

@@ -263,6 +263,77 @@ impl SiamConfig {
                     .into(),
             );
         }
+        let v = &self.variation;
+        if !(v.sigma_program >= 0.0 && v.sigma_program.is_finite()) {
+            return err(format!(
+                "variation sigma_program {} must be finite and >= 0",
+                v.sigma_program
+            ));
+        }
+        if !(0.0..1.0).contains(&v.drift_nu) {
+            return err(format!(
+                "variation drift_nu {} must be in [0, 1) (power-law exponent)",
+                v.drift_nu
+            ));
+        }
+        if !(v.drift_time_s > 0.0 && v.drift_time_s.is_finite()) {
+            return err(format!(
+                "variation drift_time_s {} must be finite and > 0",
+                v.drift_time_s
+            ));
+        }
+        if !(v.drift_t0_s > 0.0 && v.drift_t0_s.is_finite()) {
+            return err(format!(
+                "variation drift_t0_s {} must be finite and > 0",
+                v.drift_t0_s
+            ));
+        }
+        if !(0.0..1.0).contains(&v.stuck_at_on) {
+            return err(format!(
+                "variation stuck_at_on {} must be in [0, 1)",
+                v.stuck_at_on
+            ));
+        }
+        if !(0.0..1.0).contains(&v.stuck_at_off) {
+            return err(format!(
+                "variation stuck_at_off {} must be in [0, 1)",
+                v.stuck_at_off
+            ));
+        }
+        if !(v.adc_offset_lsb >= 0.0 && v.adc_offset_lsb.is_finite()) {
+            return err(format!(
+                "variation adc_offset_lsb {} must be finite and >= 0",
+                v.adc_offset_lsb
+            ));
+        }
+        if v.redundant_cols >= self.chiplet.xbar_cols {
+            return err(format!(
+                "variation redundant_cols {} must be < crossbar columns {}",
+                v.redundant_cols, self.chiplet.xbar_cols
+            ));
+        }
+        if v.mc_samples == 0 {
+            return err("variation mc_samples must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&v.accuracy_floor) {
+            return err(format!(
+                "variation accuracy_floor {} must be in [0, 1]",
+                v.accuracy_floor
+            ));
+        }
+        if !(v.refresh_interval_s >= 0.0 && v.refresh_interval_s.is_finite()) {
+            return err(format!(
+                "variation refresh_interval_s {} must be finite and >= 0 (0 = never)",
+                v.refresh_interval_s
+            ));
+        }
+        if !v.is_none() && self.has_hetero_classes() {
+            return err(
+                "analog variation modeling is not yet supported with \
+                 heterogeneous chiplet classes"
+                    .into(),
+            );
+        }
         if self.serve.fail_at_request.is_some() {
             if self.serve.mode != ServeMode::Open {
                 return err("serve fail_at_request requires mode = \"open\"".into());
@@ -352,6 +423,31 @@ mod tests {
         // bad dataset half of a workload entry
         cfg.serve.workloads = vec!["vgg19:svhn".into()];
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn variation_block_checked() {
+        let mut cfg = SiamConfig::default();
+        cfg.variation.sigma_program = -0.1;
+        assert!(cfg.validate().is_err());
+        cfg.variation.sigma_program = 0.1;
+        assert!(cfg.validate().is_ok());
+        cfg.variation.drift_nu = 1.0; // exponent >= 1 rejected
+        assert!(cfg.validate().is_err());
+        cfg.variation.drift_nu = 0.1;
+        cfg.variation.stuck_at_on = 1.0;
+        assert!(cfg.validate().is_err());
+        cfg.variation.stuck_at_on = 0.01;
+        cfg.variation.mc_samples = 0;
+        assert!(cfg.validate().is_err());
+        cfg.variation.mc_samples = 16;
+        cfg.variation.redundant_cols = cfg.chiplet.xbar_cols;
+        assert!(cfg.validate().is_err());
+        cfg.variation.redundant_cols = 4;
+        cfg.variation.drift_time_s = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.variation.drift_time_s = 3600.0;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

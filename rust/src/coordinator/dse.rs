@@ -87,6 +87,14 @@ pub enum FigureOfMerit {
     /// the spare-chiplet survival term; pinned to hand-computed values
     /// by the golden yield tests.
     YieldCost,
+    /// Accuracy-floor-constrained EDAP: points whose Monte-Carlo
+    /// variation accuracy proxy falls below the `[variation]
+    /// accuracy_floor` are pruned (ranked at `+∞`), the survivors rank
+    /// by EDAP. Needs a live `[variation]` block on the base config —
+    /// points without a variation report are treated as failing the
+    /// floor, so an EDAP-optimal but variation-blind point can never
+    /// win a variation-aware sweep by accident.
+    VariationAware,
 }
 
 impl FigureOfMerit {
@@ -109,6 +117,10 @@ impl FigureOfMerit {
                 let per_die_mm2 = report.silicon_area_mm2 / report.num_chiplets.max(1) as f64;
                 crate::cost::CostModel::default().yield_adjusted_cost(n, spares, per_die_mm2)
             }
+            FigureOfMerit::VariationAware => match &report.variation {
+                Some(v) if v.meets_floor => report.total.edap(),
+                _ => f64::INFINITY,
+            },
         }
     }
 
@@ -321,6 +333,17 @@ impl SweepBuilder {
     /// config shift the optimum — this axis finds the break-even.
     pub fn yield_aware(self) -> SweepBuilder {
         self.figure_of_merit(FigureOfMerit::YieldCost)
+    }
+
+    /// Variation-aware mode: rank points by EDAP among those whose
+    /// Monte-Carlo accuracy proxy meets the `[variation]
+    /// accuracy_floor`; points below the floor (or without a variation
+    /// report at all) are pruned to `+∞`
+    /// ([`FigureOfMerit::VariationAware`]). Requires a live
+    /// `[variation]` block on the base config — an inert block yields
+    /// no reports, so every point would be pruned.
+    pub fn variation_aware(self) -> SweepBuilder {
+        self.figure_of_merit(FigureOfMerit::VariationAware)
     }
 
     /// QoS mode: additionally run the serving simulator on every
@@ -839,6 +862,54 @@ mod tests {
                 ranked[0].tiles_per_chiplet
             );
         }
+    }
+
+    #[test]
+    fn variation_aware_sweep_prunes_points_below_the_accuracy_floor() {
+        let mut base = SiamConfig::paper_default();
+        base.variation.sigma_program = 0.05;
+        base.variation.drift_nu = 0.02;
+        base.variation.drift_time_s = 1.0e4;
+        base.variation.mc_samples = 16;
+        // a floor every noisy point clears: the sweep reduces to EDAP
+        base.variation.accuracy_floor = 0.0;
+        let res = SweepBuilder::new(&base)
+            .tiles(&[9, 16, 25])
+            .chiplet_counts(&[None])
+            .variation_aware()
+            .run()
+            .unwrap();
+        assert_eq!(res.fom, FigureOfMerit::VariationAware);
+        assert_eq!(res.len(), 3);
+        for p in &res.points {
+            let v = p.report.variation.as_ref().expect("noisy sweep attaches variation");
+            assert!(v.meets_floor);
+            let score = FigureOfMerit::VariationAware.score(&p.report);
+            assert_eq!(score.to_bits(), p.report.total.edap().to_bits());
+        }
+        let best = res.best().unwrap();
+        assert_eq!(
+            best.tiles_per_chiplet,
+            best_by_edap(&res.points).unwrap().tiles_per_chiplet,
+            "with every point above the floor, variation-aware = EDAP"
+        );
+        // a floor no noisy point can clear prunes the whole grid to +∞
+        let mut strict = base.clone();
+        strict.variation.accuracy_floor = 1.0;
+        let res = SweepBuilder::new(&strict)
+            .tiles(&[9, 16])
+            .chiplet_counts(&[None])
+            .variation_aware()
+            .run()
+            .unwrap();
+        for p in &res.points {
+            assert!(!p.report.variation.as_ref().unwrap().meets_floor);
+            assert_eq!(FigureOfMerit::VariationAware.score(&p.report), f64::INFINITY);
+        }
+        // variation-blind points (no [variation] block) never win
+        let blind = crate::coordinator::simulate(&SiamConfig::paper_default()).unwrap();
+        assert!(blind.variation.is_none());
+        assert_eq!(FigureOfMerit::VariationAware.score(&blind), f64::INFINITY);
     }
 
     #[test]

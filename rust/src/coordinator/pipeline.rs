@@ -264,6 +264,14 @@ pub fn run_point(
         )
     };
 
+    // the analog variation model consumes the circuit outputs before
+    // assembly moves them; the variation-free default skips this path
+    // entirely (zero-variation bit-identity, pinned in tests)
+    let variation = if cfg.variation.is_none() {
+        None
+    } else {
+        Some(crate::variation::evaluate(cfg, &map, imc_energy(&circuit)))
+    };
     let mut report = SimReport::assemble(
         cfg,
         &dnn,
@@ -276,7 +284,21 @@ pub fn run_point(
         t0.elapsed().as_secs_f64(),
     );
     report.fault = fault;
+    if let Some(v) = variation {
+        report.circuit.energy_pj += v.read_energy_delta_pj;
+        report.total.energy_pj += v.read_energy_delta_pj;
+        report.variation = Some(v);
+    }
     Ok(report)
+}
+
+/// The IMC compute (read) energy of a circuit report — the base the
+/// variation model's read-current perturbation scales.
+pub(crate) fn imc_energy(circuit: &CircuitReport) -> f64 {
+    circuit
+        .energy_breakdown
+        .get("imc_compute")
+        .map_or(0.0, |m| m.energy_pj)
 }
 
 #[cfg(test)]

@@ -86,6 +86,10 @@ pub struct SimReport {
     /// What the fault injection did to this point (`None` on fault-free
     /// runs — the default; set by [`crate::coordinator::pipeline::run_point`]).
     pub fault: Option<crate::fault::FaultReport>,
+    /// What the analog variation model predicts for this point (`None`
+    /// with `[variation]` absent or inert — the default; set by
+    /// [`crate::coordinator::pipeline::run_point`]).
+    pub variation: Option<crate::variation::VariationReport>,
     /// Wall-clock the simulation took, seconds.
     pub wall_seconds: f64,
 }
@@ -171,6 +175,7 @@ impl SimReport {
             nop_cycles: nop.cycles,
             silicon_area_mm2,
             fault: None,
+            variation: None,
             wall_seconds,
         }
     }
@@ -224,13 +229,29 @@ impl SimReport {
             ),
             None => String::new(),
         };
+        let variation_line = match &self.variation {
+            Some(v) => format!(
+                "\nvariation: accuracy proxy {mean:.4} ± {ci:.4} (floor {floor} {verdict}), \
+                 σ_prog {sp:.4}, drift {t:.0}s ×{f:.4} read E, {mc} MC samples (seed {seed})",
+                mean = v.accuracy_proxy_mean,
+                ci = v.accuracy_proxy_ci95,
+                floor = v.accuracy_floor,
+                verdict = if v.meets_floor { "met" } else { "MISSED" },
+                sp = v.sigma_program_effective,
+                t = v.drift_time_s,
+                f = v.drift_energy_factor,
+                mc = v.mc_samples,
+                seed = v.seed,
+            ),
+            None => String::new(),
+        };
         format!(
             "{model} on {ds}: {params:.2}M params, {chiplets} chiplets{classes} ({req} used), \
              {tiles} tiles, util {util:.1}%\n\
              area {area} mm² | energy {energy} µJ | latency {lat} ms | \
              power {pw} mW | EDAP {edap:.3e} pJ·ns·mm²\n\
              eff {eff:.1} inf/J | {ips:.2} inf/s | NoC {nocp:.1}% E, NoP {nopp:.1}% E | \
-             DRAM load {dram_ms:.2} ms / {dram_mj:.2} mJ | sim {wall:.2}s{fault_line}",
+             DRAM load {dram_ms:.2} ms / {dram_mj:.2} mJ | sim {wall:.2}s{fault_line}{variation_line}",
             model = self.model,
             ds = self.dataset,
             params = self.params as f64 / 1e6,
@@ -300,6 +321,9 @@ impl SimReport {
         }
         if let Some(f) = &self.fault {
             o.set("fault", f.to_json());
+        }
+        if let Some(v) = &self.variation {
+            o.set("variation", v.to_json());
         }
         o
     }
@@ -445,6 +469,10 @@ pub struct ServeReport {
     /// Mid-run chiplet-failure outcome (`[serve] fail_at_request`
     /// scenarios only).
     pub failover: Option<FailoverReport>,
+    /// Analog variation under serving load (`None` with `[variation]`
+    /// absent or inert): retention age capped at the drift-refresh
+    /// interval, refresh duty charged against stage service time.
+    pub variation: Option<crate::variation::VariationReport>,
     /// Wall-clock of the serving simulation, seconds.
     pub wall_seconds: f64,
 }
@@ -543,6 +571,25 @@ impl ServeReport {
                 shed = f.shed_total,
             ));
         }
+        if let Some(v) = &self.variation {
+            s.push_str(&format!(
+                "\nvariation: accuracy proxy {mean:.4} ± {ci:.4} (floor {floor} {verdict}), \
+                 aged {t:.0}s{refresh}",
+                mean = v.accuracy_proxy_mean,
+                ci = v.accuracy_proxy_ci95,
+                floor = v.accuracy_floor,
+                verdict = if v.meets_floor { "met" } else { "MISSED" },
+                t = v.drift_time_s,
+                refresh = if v.refresh_duty > 0.0 {
+                    format!(
+                        ", refresh every {:.0}s stealing {:.2e} of service time",
+                        v.refresh_interval_s, v.refresh_duty
+                    )
+                } else {
+                    String::new()
+                },
+            ));
+        }
         s
     }
 
@@ -590,6 +637,9 @@ impl ServeReport {
         o.set("weight_load", w);
         if let Some(f) = &self.failover {
             o.set("failover", f.to_json());
+        }
+        if let Some(v) = &self.variation {
+            o.set("variation", v.to_json());
         }
         o
     }

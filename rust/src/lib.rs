@@ -21,6 +21,10 @@
 //! * [`cost`] — Appendix-A fabrication cost / yield model.
 //! * [`fault`] — yield-aware fault injection and spare-chiplet
 //!   failover remap (docs/RELIABILITY.md).
+//! * [`variation`] — seeded Monte-Carlo analog device variation:
+//!   programming noise, conductance drift, stuck-at cells and ADC
+//!   offset propagated to a per-point accuracy proxy and perturbed
+//!   read energy (docs/RELIABILITY.md).
 //! * [`runtime`] — PJRT executor for the AOT-compiled Pallas crossbar
 //!   kernels (functional inference mode; Python never serves).
 //! * [`serve`] — discrete-event inference-serving simulator: streaming
@@ -67,6 +71,7 @@ pub mod nop;
 pub mod runtime;
 pub mod serve;
 pub mod util;
+pub mod variation;
 
 pub use config::SiamConfig;
 pub use metrics::Metrics;

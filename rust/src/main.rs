@@ -6,7 +6,7 @@
 //!                [--spares N] [--kill-chiplet 3,7] [--fault-seed S] [--json PATH]
 //! siam sweep     [--config F] [--model M --dataset D]
 //!                [--tiles 4,9,16,25,36] [--counts 16,36,64,100]
-//!                [--placement rowmajor|dataflow] [--fom edap|...|yield] [--json PATH]
+//!                [--placement rowmajor|dataflow] [--fom edap|...|yield|variation] [--json PATH]
 //! siam serve     [--config F] [--mode open|closed] [--rate QPS]
 //!                [--concurrency N] [--requests N] [--queue N] [--seed S]
 //!                [--fail-at N --fail-chiplet C --remap-latency US --spares N]
@@ -132,7 +132,10 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             "area" => FigureOfMerit::Area,
             "ipj" => FigureOfMerit::InferencesPerJoule,
             "yield" => FigureOfMerit::YieldCost,
-            other => bail!("--fom must be edap|edp|energy|latency|area|ipj|yield, got '{other}'"),
+            "variation" => FigureOfMerit::VariationAware,
+            other => {
+                bail!("--fom must be edap|edp|energy|latency|area|ipj|yield|variation, got '{other}'")
+            }
         });
     }
     let res = builder.run()?;
@@ -214,6 +217,14 @@ fn sweep_json(cfg: &SiamConfig, res: &coordinator::SweepResult) -> Json {
         }
         if let Some(xb) = &p.class_xbars {
             o.set("class_xbars", Json::Arr(xb.iter().map(|&x| Json::from(x)).collect()));
+        }
+        // reliability fragments ride along exactly as SimReport emits
+        // them, so sweep artifacts carry fault/variation provenance
+        if let Some(f) = &p.report.fault {
+            o.set("fault", f.to_json());
+        }
+        if let Some(v) = &p.report.variation {
+            o.set("variation", v.to_json());
         }
         points.push(o);
     }
@@ -451,7 +462,8 @@ const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config>
              [--spares 2] [--kill-chiplet 3,7] [--fault-seed 42]
              [--config file.toml] [--json out.json]
   sweep      --model resnet110 --dataset cifar10 [--tiles 4,9,16] [--counts 36,64]
-             [--placement rowmajor|dataflow] [--fom edap|edp|energy|latency|area|ipj|yield]
+             [--placement rowmajor|dataflow]
+             [--fom edap|edp|energy|latency|area|ipj|yield|variation]
              [--json out.json]
   serve      [--mode open|closed] [--rate 2000] [--concurrency 4]
              [--requests 1024] [--queue 4] [--seed 42] [--quick]
@@ -465,7 +477,11 @@ const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config>
   --spares reserves idle spare chiplets; --kill-chiplet injects faults
   (docs/RELIABILITY.md); serve --fail-at kills --fail-chiplet mid-run and
   hot-swaps the remapped pipeline after --remap-latency microseconds
-  (see docs/MODELS.md for the model-authoring format)";
+  (see docs/MODELS.md for the model-authoring format)
+  a [variation] config block adds analog device variation (programming
+  noise, drift, stuck-at cells, ADC offset) to every command; sweep
+  --fom variation prunes points below the accuracy floor
+  (configs/variation_demo.toml, docs/RELIABILITY.md)";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();

@@ -72,7 +72,11 @@ pub fn evaluate(cfg: &SiamConfig, ctx: &SweepContext) -> Result<ServeReport> {
 /// too) and calls this, so QoS ranking adds only the event loop.
 pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
     let t0 = std::time::Instant::now();
-    let services: Vec<f64> = graph.stages.iter().map(|s| s.service_ns).collect();
+    // periodic drift-refresh maintenance steals a duty-cycle fraction
+    // of every stage's service time; scale 1.0 (no variation, or no
+    // refresh) leaves the services bit-identical
+    let scale = graph.variation.as_ref().map_or(1.0, |v| v.service_scale());
+    let services: Vec<f64> = graph.stages.iter().map(|s| s.service_ns * scale).collect();
     let (workload, mode, offered_qps, concurrency) = match sc.mode {
         ServeMode::Open => {
             let rate = open_rate_qps(graph, sc);
@@ -184,6 +188,7 @@ fn assemble_report(
         qos_p99_target_ms: sc.qos_p99_ms,
         weight_load: graph.weight_load,
         failover: None,
+        variation: graph.variation.clone(),
         wall_seconds: t0.elapsed().as_secs_f64(),
     }
 }

@@ -75,6 +75,12 @@ pub struct StageGraph {
     pub weight_load: DramReport,
     /// The single-shot (batch-1, unloaded) report of the same point.
     pub single_shot: SimReport,
+    /// Analog variation under serving conditions (`None` with
+    /// `[variation]` absent or inert): retention age capped at the
+    /// drift-refresh interval. [`crate::serve::run_graph`] inflates the
+    /// stage service times by its refresh duty and the report carries
+    /// it as [`crate::coordinator::ServeReport::variation`].
+    pub variation: Option<crate::variation::VariationReport>,
 }
 
 impl StageGraph {
@@ -142,10 +148,25 @@ impl StageGraph {
             last.service_ns += residual_ns;
         }
 
-        let dynamic_energy_pj = (circuit.energy_pj - circuit.leakage_energy_pj)
+        // the analog variation model reads the circuit outputs before
+        // assembly moves them; variation-free points skip it entirely
+        // (zero-variation bit-identity, pinned in tests)
+        let (single_var, serve_var) = if cfg.variation.is_none() {
+            (None, None)
+        } else {
+            let imc = crate::coordinator::pipeline::imc_energy(&circuit);
+            (
+                Some(crate::variation::evaluate(cfg, &map, imc)),
+                Some(crate::variation::evaluate_serving(cfg, &map, imc)),
+            )
+        };
+        let mut dynamic_energy_pj = (circuit.energy_pj - circuit.leakage_energy_pj)
             + noc.metrics.energy_pj
             + nop.metrics.energy_pj
             + ingress.energy_pj;
+        if let Some(v) = &serve_var {
+            dynamic_energy_pj += v.read_energy_delta_pj;
+        }
         let num_chiplets = map.num_chiplets;
         // monolithic mode reports an unbounded chiplet capacity
         // (usize::MAX); the die physically contains exactly the mapped
@@ -158,6 +179,13 @@ impl StageGraph {
         let mut single_shot =
             SimReport::assemble(cfg, &dnn, &map, &traffic, circuit, noc, nop, weight_load, 0.0);
         single_shot.fault = fault;
+        if let Some(v) = single_var {
+            // keep the embedded single-shot consistent with `siam
+            // simulate` on the same point
+            single_shot.circuit.energy_pj += v.read_energy_delta_pj;
+            single_shot.total.energy_pj += v.read_energy_delta_pj;
+            single_shot.variation = Some(v);
+        }
 
         Ok(StageGraph {
             stages,
@@ -168,6 +196,7 @@ impl StageGraph {
             ingress,
             weight_load,
             single_shot,
+            variation: serve_var,
         })
     }
 

@@ -417,6 +417,87 @@ fn zero_fault_reports_are_bit_identical_to_the_classic_path() {
 }
 
 #[test]
+fn zero_variation_reports_are_bit_identical_to_the_classic_path() {
+    // the variation subsystem's do-no-harm pin: with every noise source
+    // zero the [variation] block (any seed / sample count) is invisible —
+    // single-shot and serving reports stay bit-identical to the classic
+    // path and no variation fragment appears in their JSON
+    let base = SiamConfig::paper_default();
+    let a = simulate(&base).unwrap();
+    assert!(a.variation.is_none(), "clean run must not carry a variation report");
+    assert!(!a.to_json().to_string_pretty().contains("\"variation\""));
+    let mut seeded = base.clone();
+    seeded.variation.seed = 0xFEED_FACE; // an unused stream must change nothing
+    seeded.variation.mc_samples = 999;
+    assert!(seeded.variation.is_none(), "seed/samples alone keep the block inert");
+    let b = simulate(&seeded).unwrap();
+    assert_sim_reports_bit_identical(&a, &b);
+
+    let mut scfg = base.clone().with_serve_requests(150);
+    let sa = siam::serve::serve(&scfg).unwrap();
+    assert!(sa.variation.is_none(), "clean serve must not carry a variation report");
+    assert!(!sa.to_json().to_string_pretty().contains("\"variation\""));
+    scfg.variation.seed = 0xFEED_FACE;
+    let sb = siam::serve::serve(&scfg).unwrap();
+    assert_eq!(sa.completed, sb.completed);
+    assert_eq!(sa.p50_ms.to_bits(), sb.p50_ms.to_bits());
+    assert_eq!(sa.p99_ms.to_bits(), sb.p99_ms.to_bits());
+    assert_eq!(sa.throughput_qps.to_bits(), sb.throughput_qps.to_bits());
+}
+
+#[test]
+fn variation_demo_preset_runs_end_to_end() {
+    // the checked-in demo drives the full pipeline: the report carries a
+    // Monte-Carlo variation fragment whose accuracy proxy is a real
+    // probability and whose mitigation accounting is live
+    let preset = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/variation_demo.toml");
+    let cfg = SiamConfig::from_toml_file(preset).unwrap();
+    assert!(!cfg.variation.is_none(), "demo preset must enable variation");
+    let rep = simulate(&cfg).unwrap();
+    let v = rep.variation.as_ref().expect("demo run attaches a variation report");
+    assert!(v.accuracy_proxy_mean > 0.0 && v.accuracy_proxy_mean < 1.0);
+    assert!(v.accuracy_proxy_ci95 >= 0.0);
+    assert!(v.program_energy_pj > 0.0, "write-verify cycles must charge energy");
+    assert_eq!(v.mc_samples, cfg.variation.mc_samples);
+    let j = rep.to_json().to_string_pretty();
+    let parsed = siam::util::json::parse(&j).unwrap();
+    let frag = parsed.get("variation").expect("variation fragment in JSON");
+    assert!(frag.get("accuracy_proxy_mean").is_some() && frag.get("meets_floor").is_some());
+
+    // Monte-Carlo results are bit-reproducible per (config, seed) through
+    // the full pipeline, and the seed genuinely feeds the draws
+    let again = simulate(&cfg).unwrap();
+    let w = again.variation.as_ref().unwrap();
+    assert_eq!(v.accuracy_proxy_mean.to_bits(), w.accuracy_proxy_mean.to_bits());
+    assert_eq!(v.read_energy_delta_pj.to_bits(), w.read_energy_delta_pj.to_bits());
+    let mut reseeded = cfg.clone();
+    reseeded.variation.seed ^= 0xA5A5;
+    let r = simulate(&reseeded).unwrap().variation.unwrap();
+    assert_ne!(
+        v.accuracy_proxy_mean.to_bits(),
+        r.accuracy_proxy_mean.to_bits(),
+        "a different seed must change the Monte-Carlo draws"
+    );
+
+    // serving on the same preset: drift-refresh maintenance steals
+    // service time, so the refreshed pipeline is strictly slower per
+    // request than the same point with variation disabled
+    let mut scfg = cfg.clone().with_serve_requests(96).with_refresh_interval(60.0);
+    let srep = siam::serve::serve(&scfg).unwrap();
+    let sv = srep.variation.as_ref().expect("serving attaches a variation report");
+    assert!(sv.refresh_duty > 0.0, "a 60 s refresh interval must cost duty");
+    assert!(srep.to_json().to_string_pretty().contains("\"variation\""));
+    scfg.variation = siam::config::VariationConfig::default();
+    let clean = siam::serve::serve(&scfg).unwrap();
+    assert!(
+        srep.p50_ms > clean.p50_ms,
+        "refresh duty must inflate latency: {} vs {}",
+        srep.p50_ms,
+        clean.p50_ms
+    );
+}
+
+#[test]
 fn spare_chiplets_are_charged_but_idle_until_faults() {
     // spares extend the architecture (area, chiplet count) without
     // touching the workload's mapping or latency while nothing fails

@@ -515,6 +515,51 @@ fn zero_fault_remap_is_the_identity_for_random_configs() {
 }
 
 #[test]
+fn fault_and_variation_seed_streams_are_isolated() {
+    // the two reliability subsystems own independent SplitMix64 streams:
+    // enabling [variation] must not shift a single fault draw, and
+    // enabling [fault] must not shift a single variation draw. The
+    // Monte-Carlo accuracy statistics depend only on the variation
+    // stream and the per-layer crossbar counts — which a fault remap
+    // preserves — so they pin the converse direction end to end.
+    use siam::config::FaultConfig;
+    use siam::coordinator::simulate;
+    check_property("fault_variation_stream_isolation", 8, 0x150A7E, |rng| {
+        let mut cfg = SiamConfig::paper_default().with_model("lenet5", "cifar10");
+        cfg.system.spare_chiplets = 1;
+        cfg.fault.xbar_fault_fraction = 0.05 * rng.f64();
+        cfg.fault.seed = rng.next_u64();
+        let mut noisy = cfg.clone();
+        noisy.variation.sigma_program = 0.02 + 0.1 * rng.f64();
+        noisy.variation.drift_nu = 0.05 * rng.f64();
+        noisy.variation.drift_time_s = 1.0e3;
+        noisy.variation.mc_samples = 8;
+        noisy.variation.seed = rng.next_u64();
+
+        // [variation] on vs absent: fault injection draws bit-identically
+        let plain = simulate(&cfg).unwrap();
+        let var = simulate(&noisy).unwrap();
+        assert!(plain.variation.is_none() && var.variation.is_some());
+        assert_eq!(plain.fault, var.fault, "variation shifted the fault stream");
+
+        // [fault] on vs absent: the Monte-Carlo draws are bit-identical
+        let mut unfaulted = noisy.clone();
+        unfaulted.system.spare_chiplets = 0;
+        unfaulted.fault = FaultConfig::default();
+        let v_clean = simulate(&unfaulted).unwrap().variation.unwrap();
+        let v_fault = var.variation.unwrap();
+        for (a, b, what) in [
+            (v_clean.accuracy_proxy_mean, v_fault.accuracy_proxy_mean, "accuracy mean"),
+            (v_clean.accuracy_proxy_ci95, v_fault.accuracy_proxy_ci95, "accuracy CI"),
+            (v_clean.drift_shift_ln_mean, v_fault.drift_shift_ln_mean, "drift shift"),
+            (v_clean.drift_energy_factor, v_fault.drift_energy_factor, "drift factor"),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits(), "faults shifted the variation stream: {what}");
+        }
+    });
+}
+
+#[test]
 fn metrics_composition_laws() {
     check_property("metrics_laws", 50, 0xABCD, |rng| {
         let m1 = siam::Metrics::new(rng.f64() * 100.0, rng.f64() * 100.0, rng.f64() * 100.0);
