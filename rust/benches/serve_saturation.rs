@@ -15,11 +15,12 @@
 //!   same ceiling from below as the pipeline fills.
 //!
 //! Every number is written to `BENCH_serve.json` at the repository root
-//! (schema `siam-bench-serve/v1`; see README, "Reading
+//! (schema `siam-bench-serve/v2`; see README, "Reading
 //! BENCH_serve.json"). Pass `--quick` for the CI smoke variant.
 
 use siam::config::SiamConfig;
 use siam::coordinator::{simulate, SweepContext};
+use siam::obs::RunMeta;
 use siam::serve;
 use siam::util::json::Json;
 use siam::util::table::Table;
@@ -27,6 +28,7 @@ use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
+    let bench_t0 = Instant::now();
     let requests: usize = if quick { 400 } else { 4000 };
     let base = SiamConfig::paper_default().with_serve_requests(requests);
     // one shared context: every serving run below replays the same
@@ -34,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let ctx = SweepContext::new(&base)?;
     let mut bench = Json::obj();
     bench
-        .set("schema", "siam-bench-serve/v1")
+        .set("schema", "siam-bench-serve/v2")
         .set("quick", quick)
         .set("model", base.dnn.model.as_str())
         .set("dataset", base.dnn.dataset.as_str())
@@ -176,6 +178,10 @@ fn main() -> anyhow::Result<()> {
     bench.set("concurrency_ladder", ladder);
 
     // ---- machine-readable trajectory file ----------------------------
+    let mut meta = RunMeta::for_config(&base);
+    meta.model_source = single.model_source.clone();
+    meta.wall_seconds = bench_t0.elapsed().as_secs_f64();
+    bench.set("meta", meta.to_json());
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
     std::fs::write(path, bench.to_string_pretty() + "\n")?;
     println!("\nwrote {path}");

@@ -27,8 +27,10 @@ use siam::coordinator::{simulate, SweepBuilder};
 use siam::dnn::build_model;
 use siam::mapping::{build_traffic, map_dnn, Flow, Placement, Traffic};
 use siam::noc::{EpochResult, FlowSim, Mesh, PacketSim};
+use siam::obs::{Profiler, RunMeta};
 use siam::util::json::Json;
 use siam::util::table::Table;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Serial accumulation of every NoC + NoP epoch of a traffic picture
@@ -50,8 +52,9 @@ where
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
+    let bench_t0 = Instant::now();
     let mut bench = Json::obj();
-    bench.set("schema", "siam-bench-noc/v1").set("quick", quick);
+    bench.set("schema", "siam-bench-noc/v2").set("quick", quick);
 
     // ---- Table 3: end-to-end simulation time per DNN -----------------
     println!("== Table 3: SIAM simulation time ==\n");
@@ -220,6 +223,9 @@ fn main() -> anyhow::Result<()> {
         "epoch cache",
     ]);
     let mut sweeps = Vec::new();
+    // one profiler across every parallel sweep: its per-stage host
+    // wall-clock breakdown lands in the "profile" fragment below
+    let prof = Arc::new(Profiler::new());
     for &(model, ds) in sweep_nets {
         let base = SiamConfig::paper_default().with_model(model, ds);
         let builder = SweepBuilder::new(&base).tiles(tiles).chiplet_counts(counts);
@@ -229,7 +235,7 @@ fn main() -> anyhow::Result<()> {
         let serial_s = t0.elapsed().as_secs_f64();
 
         let t0 = Instant::now();
-        let parallel = builder.run()?;
+        let parallel = builder.profile(prof.clone()).run()?;
         let parallel_s = t0.elapsed().as_secs_f64();
 
         // correctness gate: identical surviving points in identical order
@@ -268,8 +274,13 @@ fn main() -> anyhow::Result<()> {
     t.print();
     println!("\nrankings verified bit-identical between engines.");
     bench.set("sweeps", sweeps);
+    bench.set("profile", prof.to_json());
 
     // ---- machine-readable trajectory file ----------------------------
+    let mut meta = RunMeta::for_config(&SiamConfig::paper_default());
+    meta.model_source = "builtin".into();
+    meta.wall_seconds = bench_t0.elapsed().as_secs_f64();
+    bench.set("meta", meta.to_json());
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_noc.json");
     std::fs::write(path, bench.to_string_pretty() + "\n")?;
     println!("\nwrote {path}");

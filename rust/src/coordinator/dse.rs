@@ -18,12 +18,14 @@
 //! (asserted by the regression tests below and measured by
 //! `benches/table3_simtime.rs`).
 
-use super::pipeline::{run_point, SweepContext};
+use super::pipeline::{run_point_profiled, SweepContext};
 use super::{ServeReport, SimReport};
 use crate::config::{ChipletStructure, ServeMode, SiamConfig};
+use crate::noc::TierCounts;
+use crate::obs::{self, Profiler};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -144,7 +146,7 @@ impl FigureOfMerit {
 /// [`SweepContext`] after the grid completes. The epoch counters are
 /// the headline: they say how much NoC/NoP simulation the flow-level
 /// engine actually had to do versus replay.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct SweepStats {
     /// Epoch simulations answered from the shared [`EpochCache`].
     ///
@@ -154,6 +156,19 @@ pub struct SweepStats {
     pub epoch_misses: u64,
     /// Distinct epochs retained at the end of the sweep.
     pub epochs_cached: usize,
+    /// Per-shard `(hits, misses)` of the shared epoch cache, in shard
+    /// order.
+    pub shards: Vec<(u64, u64)>,
+    /// Flow-engine tier tally (closed-form / periodic / extrapolated /
+    /// packet-fallback answers) summed over every surviving point's
+    /// report — deterministic across thread counts, since cache hits
+    /// replay the tier tag recorded at fill time.
+    pub tiers: TierCounts,
+    /// Host wall-clock of the whole sweep, seconds.
+    pub wall_seconds: f64,
+    /// Grid points evaluated per second (skipped points included —
+    /// they cost a mapping attempt too).
+    pub points_per_sec: f64,
 }
 
 impl SweepStats {
@@ -238,6 +253,7 @@ pub struct SweepBuilder {
     threads: Option<usize>,
     budget: Option<usize>,
     qos_qps: Option<f64>,
+    profiler: Option<Arc<Profiler>>,
 }
 
 /// One coordinate of the sweep grid.
@@ -264,6 +280,7 @@ impl SweepBuilder {
             threads: None,
             budget: None,
             qos_qps: None,
+            profiler: None,
         }
     }
 
@@ -322,6 +339,15 @@ impl SweepBuilder {
     /// bounding coarse scans of large grids.
     pub fn budget(mut self, budget: usize) -> SweepBuilder {
         self.budget = Some(budget);
+        self
+    }
+
+    /// Attach a self-profiler: every grid point folds a `sweep:point`
+    /// wall-clock span into `prof` (and the staged pipeline adds its
+    /// `stage:*` spans). Profiling observes only — results are
+    /// bit-identical with and without it (`siam sweep --profile`).
+    pub fn profile(mut self, prof: Arc<Profiler>) -> SweepBuilder {
+        self.profiler = Some(prof);
         self
     }
 
@@ -442,23 +468,29 @@ impl SweepBuilder {
                 );
             }
         }
+        let t0 = std::time::Instant::now();
         let grid = self.grid();
         let ctx = SweepContext::new(&self.base)?;
         let threads = self
             .threads
             .unwrap_or_else(default_threads)
             .min(grid.len().max(1));
+        let prof = self.profiler.as_deref();
+        obs::log::verbose(&format!(
+            "sweep: {} grid point(s) on {threads} thread(s)",
+            grid.len()
+        ));
 
         if threads <= 1 {
             let mut points = Vec::with_capacity(grid.len());
             for gp in &grid {
-                if let Some(p) = eval_point(&self.base, &ctx, gp, self.qos_qps)? {
+                if let Some(p) = eval_point(&self.base, &ctx, gp, self.qos_qps, prof)? {
                     points.push(p);
                 }
             }
             return Ok(SweepResult {
+                stats: stats_of(&ctx, &points, grid.len(), t0),
                 points,
-                stats: stats_of(&ctx),
                 fom: self.fom,
             });
         }
@@ -477,7 +509,7 @@ impl SweepBuilder {
                     if i >= grid.len() {
                         break;
                     }
-                    let r = eval_point(&self.base, &ctx, &grid[i], self.qos_qps);
+                    let r = eval_point(&self.base, &ctx, &grid[i], self.qos_qps, prof);
                     *slots[i].lock().unwrap() = Some(r);
                 });
             }
@@ -493,20 +525,40 @@ impl SweepBuilder {
             }
         }
         Ok(SweepResult {
+            stats: stats_of(&ctx, &points, grid.len(), t0),
             points,
-            stats: stats_of(&ctx),
             fom: self.fom,
         })
     }
 }
 
-/// Read the shared-stage cache counters off a finished sweep's context.
-fn stats_of(ctx: &SweepContext) -> SweepStats {
+/// Read the shared-stage cache counters off a finished sweep's context
+/// and fold in the per-point engine-tier tallies and the run's host
+/// wall-clock.
+fn stats_of(
+    ctx: &SweepContext,
+    points: &[SweepPoint],
+    attempted: usize,
+    t0: std::time::Instant,
+) -> SweepStats {
     let cache = ctx.epoch_cache();
+    let mut tiers = TierCounts::default();
+    for p in points {
+        tiers.accumulate(&p.report.engine_tiers);
+    }
+    let wall_seconds = t0.elapsed().as_secs_f64();
     SweepStats {
         epoch_hits: cache.hits(),
         epoch_misses: cache.misses(),
         epochs_cached: cache.len(),
+        shards: cache.shard_stats(),
+        tiers,
+        wall_seconds,
+        points_per_sec: if wall_seconds > 0.0 {
+            attempted as f64 / wall_seconds
+        } else {
+            0.0
+        },
     }
 }
 
@@ -528,6 +580,7 @@ fn eval_point(
     ctx: &SweepContext,
     gp: &GridPoint,
     qos_qps: Option<f64>,
+    prof: Option<&Profiler>,
 ) -> Result<Option<SweepPoint>> {
     let (tiles, count) = (gp.tiles, gp.count);
     let mut cfg = match count {
@@ -548,10 +601,10 @@ fn eval_point(
             class.xbar_cols = n;
         }
     }
-    let outcome = match qos_qps {
-        None => run_point(&cfg, ctx, false).map(|report| (report, None)),
+    let evaluate = || match qos_qps {
+        None => run_point_profiled(&cfg, ctx, false, prof).map(|report| (report, None)),
         Some(qps) => {
-            let mut scfg = cfg;
+            let mut scfg = cfg.clone();
             scfg.serve.mode = ServeMode::Open;
             scfg.serve.rate_qps = qps;
             crate::serve::StageGraph::build(&scfg, ctx).map(|graph| {
@@ -560,6 +613,11 @@ fn eval_point(
             })
         }
     };
+    let outcome = match prof {
+        Some(p) => p.time("sweep:point", evaluate),
+        None => evaluate(),
+    };
+    obs::log::verbose(&format!("sweep: point tiles={tiles} chiplets={count:?} evaluated"));
     match outcome {
         Ok((report, serve)) => Ok(Some(SweepPoint {
             tiles_per_chiplet: tiles,
@@ -693,6 +751,41 @@ mod tests {
             s.epochs_cached <= s.epoch_misses as usize,
             "cannot retain more epochs than were simulated"
         );
+        // the new observability fields ride along
+        let shard_hits: u64 = s.shards.iter().map(|&(h, _)| h).sum();
+        let shard_misses: u64 = s.shards.iter().map(|&(_, m)| m).sum();
+        assert_eq!(shard_hits, s.epoch_hits);
+        assert_eq!(shard_misses, s.epoch_misses);
+        assert!(s.tiers.total() > 0, "mesh epochs must tally engine tiers");
+        assert!(s.wall_seconds > 0.0);
+        assert!(s.points_per_sec > 0.0);
+    }
+
+    #[test]
+    fn profiled_sweep_is_bit_identical_and_records_spans() {
+        let base = SiamConfig::paper_default();
+        let prof = Arc::new(Profiler::new());
+        let profiled = SweepBuilder::new(&base)
+            .tiles(&[9, 16])
+            .chiplet_counts(&[None])
+            .profile(prof.clone())
+            .run()
+            .unwrap();
+        let plain = SweepBuilder::new(&base)
+            .tiles(&[9, 16])
+            .chiplet_counts(&[None])
+            .run()
+            .unwrap();
+        assert_eq!(profiled.len(), plain.len());
+        for (a, b) in profiled.points.iter().zip(&plain.points) {
+            assert_reports_identical(&a.report, &b.report);
+        }
+        let snap = prof.snapshot();
+        let labels: Vec<&str> = snap.iter().map(|(l, _)| l.as_str()).collect();
+        assert!(labels.contains(&"sweep:point"));
+        assert!(labels.contains(&"stage:noc"), "pipeline spans fold in: {labels:?}");
+        let point = snap.iter().find(|(l, _)| l == "sweep:point").unwrap();
+        assert_eq!(point.1.calls, 2, "one span per grid point");
     }
 
     #[test]

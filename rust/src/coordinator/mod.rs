@@ -22,7 +22,7 @@ pub use dse::{
     best_by_edap, sweep, sweep_serial, FigureOfMerit, SweepBuilder, SweepPoint, SweepResult,
     SweepStats,
 };
-pub use pipeline::SweepContext;
+pub use pipeline::{attach_meta, run_point_profiled, trace_point, SweepContext};
 pub use report::{FailoverReport, ServeReport, SimReport};
 pub use sensitivity::{layer_cycles_vs_nop_speedup, layer_latency_vs_chiplets, LayerPoint};
 

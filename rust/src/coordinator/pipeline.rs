@@ -34,8 +34,10 @@ use crate::fault::FaultReport;
 use crate::dnn::{resolve_model, Dnn, DnnStats};
 use crate::dram::DramReport;
 use crate::mapping::{build_traffic, map_dnn, MappingResult, Placement, Traffic, TrafficMatrix};
-use crate::noc::{EpochCache, NocReport};
+use crate::noc::{EpochCache, EpochObs, NocReport};
 use crate::nop::NopReport;
+use crate::obs::{CacheSnapshot, Profiler, RunMeta, TraceBuffer};
+use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -231,23 +233,54 @@ pub fn run_point(
     ctx: &SweepContext,
     concurrent_engines: bool,
 ) -> Result<SimReport> {
+    run_point_profiled(cfg, ctx, concurrent_engines, None)
+}
+
+/// Run `f`, attributing its wall-clock to `label` when a profiler is
+/// attached. With `None` this is a plain call — profiling observes
+/// only, so profiled and unprofiled runs are bit-identical.
+fn timed<R>(prof: Option<&Profiler>, label: &str, f: impl FnOnce() -> R) -> R {
+    match prof {
+        Some(p) => p.time(label, f),
+        None => f(),
+    }
+}
+
+/// [`run_point`] with optional self-profiling: each pipeline stage's
+/// host wall-clock is folded into `prof` under a `stage:*` label
+/// (`stage:dnn`, `stage:mapping`, `stage:circuit`, `stage:noc`,
+/// `stage:nop`, `stage:dram`, `stage:variation`). The profiler is a
+/// pure observer; reports are bit-identical to [`run_point`]'s. With
+/// `concurrent_engines` the stage-3 spans overlap in wall time — the
+/// table reports per-stage attribution, not the critical path.
+pub fn run_point_profiled(
+    cfg: &SiamConfig,
+    ctx: &SweepContext,
+    concurrent_engines: bool,
+    prof: Option<&Profiler>,
+) -> Result<SimReport> {
     let t0 = std::time::Instant::now();
     cfg.validate()?;
-    let dnn = stage_dnn(cfg, ctx)?;
+    let dnn = timed(prof, "stage:dnn", || stage_dnn(cfg, ctx))?;
     let stats = if ctx.matches_model(cfg) {
         ctx.stats
     } else {
         dnn.stats()
     };
 
-    let (map, placement, traffic, fault) = stage_mapping(cfg, &dnn)?;
+    let (map, placement, traffic, fault) =
+        timed(prof, "stage:mapping", || stage_mapping(cfg, &dnn))?;
 
     let (circuit, noc, nop, dram) = if concurrent_engines {
         std::thread::scope(|s| {
-            let circuit = s.spawn(|| stage_circuit(cfg, ctx, &dnn, &map, &traffic));
-            let noc = s.spawn(|| stage_noc(cfg, ctx, &traffic, &map));
-            let nop = s.spawn(|| stage_nop(cfg, ctx, &traffic, &placement, &map));
-            let dram = s.spawn(|| stage_dram(cfg, ctx, &stats));
+            let circuit = s.spawn(|| {
+                timed(prof, "stage:circuit", || stage_circuit(cfg, ctx, &dnn, &map, &traffic))
+            });
+            let noc = s.spawn(|| timed(prof, "stage:noc", || stage_noc(cfg, ctx, &traffic, &map)));
+            let nop = s.spawn(|| {
+                timed(prof, "stage:nop", || stage_nop(cfg, ctx, &traffic, &placement, &map))
+            });
+            let dram = s.spawn(|| timed(prof, "stage:dram", || stage_dram(cfg, ctx, &stats)));
             (
                 circuit.join().expect("circuit engine"),
                 noc.join().expect("noc engine"),
@@ -257,10 +290,10 @@ pub fn run_point(
         })
     } else {
         (
-            stage_circuit(cfg, ctx, &dnn, &map, &traffic),
-            stage_noc(cfg, ctx, &traffic, &map),
-            stage_nop(cfg, ctx, &traffic, &placement, &map),
-            stage_dram(cfg, ctx, &stats),
+            timed(prof, "stage:circuit", || stage_circuit(cfg, ctx, &dnn, &map, &traffic)),
+            timed(prof, "stage:noc", || stage_noc(cfg, ctx, &traffic, &map)),
+            timed(prof, "stage:nop", || stage_nop(cfg, ctx, &traffic, &placement, &map)),
+            timed(prof, "stage:dram", || stage_dram(cfg, ctx, &stats)),
         )
     };
 
@@ -270,13 +303,36 @@ pub fn run_point(
     let variation = if cfg.variation.is_none() {
         None
     } else {
-        Some(crate::variation::evaluate(cfg, &map, imc_energy(&circuit)))
+        Some(timed(prof, "stage:variation", || {
+            crate::variation::evaluate(cfg, &map, imc_energy(&circuit))
+        }))
     };
+    Ok(assemble_point(cfg, &dnn, &map, &traffic, circuit, noc, nop, dram, fault, variation, t0))
+}
+
+/// Shared tail of [`run_point_profiled`] and [`trace_point`]: fold the
+/// engine outputs into a [`SimReport`] and attach the fault / variation
+/// outcomes — identical float operations in identical order on both
+/// paths, so traced runs stay bit-identical to untraced ones.
+#[allow(clippy::too_many_arguments)]
+fn assemble_point(
+    cfg: &SiamConfig,
+    dnn: &Dnn,
+    map: &MappingResult,
+    traffic: &Traffic,
+    circuit: CircuitReport,
+    noc: NocReport,
+    nop: NopReport,
+    dram: DramReport,
+    fault: Option<FaultReport>,
+    variation: Option<crate::variation::VariationReport>,
+    t0: std::time::Instant,
+) -> SimReport {
     let mut report = SimReport::assemble(
         cfg,
-        &dnn,
-        &map,
-        &traffic,
+        dnn,
+        map,
+        traffic,
         circuit,
         noc,
         nop,
@@ -289,7 +345,157 @@ pub fn run_point(
         report.total.energy_pj += v.read_energy_delta_pj;
         report.variation = Some(v);
     }
+    report
+}
+
+/// Attach the provenance `meta` block to a finished simulation report:
+/// config fingerprint, seeds, model source, the context's epoch-cache
+/// snapshot, and the report's own engine-tier tally and wall-clock.
+/// The CLI calls this after [`run_point`] / [`trace_point`]; library
+/// callers that don't need provenance can skip it.
+pub fn attach_meta(cfg: &SiamConfig, ctx: &SweepContext, report: &mut SimReport) {
+    let mut meta = RunMeta::for_config(cfg);
+    meta.model_source = report.model_source.clone();
+    meta.wall_seconds = report.wall_seconds;
+    meta.epoch_cache = Some(CacheSnapshot::capture(ctx.epoch_cache()));
+    meta.engine_tiers = Some(report.engine_tiers);
+    report.meta = Some(meta);
+}
+
+/// Process id of the simulation timeline in exported traces (the serve
+/// engine uses pid 1).
+const TRACE_PID_SIM: u32 = 2;
+
+/// [`run_point`] with the layer-by-layer dataflow rendered into a
+/// Chrome trace — the entry point behind `siam simulate --trace`.
+///
+/// The trace is in **simulated** time: per layer, the compute / NoC /
+/// NoP phases serialize (the paper's Algorithm-4 dataflow), drawn as
+/// `"X"` spans on three threads of one `simulate` process, and every
+/// interconnect epoch lands as an `"i"` instant (cache hit or miss,
+/// with its tier tally) at its layer's phase start. Engines run on the
+/// serial path through the shared epoch cache, so the report is
+/// bit-identical to [`run_point`]'s — regression-pinned by the
+/// observability tests. The `meta` block is attached.
+pub fn trace_point(
+    cfg: &SiamConfig,
+    ctx: &SweepContext,
+    trace: &mut TraceBuffer,
+) -> Result<SimReport> {
+    let t0 = std::time::Instant::now();
+    cfg.validate()?;
+    let dnn = stage_dnn(cfg, ctx)?;
+    let stats = if ctx.matches_model(cfg) {
+        ctx.stats
+    } else {
+        dnn.stats()
+    };
+    let (map, placement, traffic, fault) = stage_mapping(cfg, &dnn)?;
+
+    let circuit = stage_circuit(cfg, ctx, &dnn, &map, &traffic);
+    let mut noc_obs: Vec<EpochObs> = Vec::new();
+    let noc = {
+        let mut rec = |o: &EpochObs| noc_obs.push(*o);
+        let cache = Some(ctx.epoch_cache());
+        crate::noc::evaluate_mapped_obs(cfg, &traffic, &map, cache, Some(&mut rec))
+    };
+    let mut nop_obs: Vec<EpochObs> = Vec::new();
+    let nop = {
+        let mut rec = |o: &EpochObs| nop_obs.push(*o);
+        crate::nop::evaluate_mapped_obs(
+            cfg,
+            &traffic,
+            &placement,
+            &map,
+            Some(ctx.epoch_cache()),
+            Some(&mut rec),
+        )
+    };
+    let dram = stage_dram(cfg, ctx, &stats);
+
+    render_sim_trace(trace, &circuit, &noc, &nop, &dram, &noc_obs, &nop_obs);
+
+    let variation = if cfg.variation.is_none() {
+        None
+    } else {
+        Some(crate::variation::evaluate(cfg, &map, imc_energy(&circuit)))
+    };
+    let mut report =
+        assemble_point(cfg, &dnn, &map, &traffic, circuit, noc, nop, dram, fault, variation, t0);
+    attach_meta(cfg, ctx, &mut report);
     Ok(report)
+}
+
+/// Render one inference's layer-serial timeline into `trace`: named
+/// process/thread tracks, the whole-inference span, per-layer compute /
+/// NoC / NoP phase spans, the per-epoch instants, and the off-inference
+/// DRAM weight load as a marker at t = 0.
+fn render_sim_trace(
+    trace: &mut TraceBuffer,
+    circuit: &CircuitReport,
+    noc: &NocReport,
+    nop: &NopReport,
+    dram: &DramReport,
+    noc_obs: &[EpochObs],
+    nop_obs: &[EpochObs],
+) {
+    trace.process_name(TRACE_PID_SIM, "simulate");
+    trace.thread_name(TRACE_PID_SIM, 0, "inference");
+    trace.thread_name(TRACE_PID_SIM, 1, "compute");
+    trace.thread_name(TRACE_PID_SIM, 2, "noc");
+    trace.thread_name(TRACE_PID_SIM, 3, "nop");
+
+    let noc_ns: HashMap<usize, f64> = noc.per_layer_ns.iter().copied().collect();
+    let nop_clk_ns = 1.0e3 / nop.eff_freq_mhz;
+    let nop_ns: HashMap<usize, f64> = nop
+        .per_layer_cycles
+        .iter()
+        .map(|&(l, c)| (l, c as f64 * nop_clk_ns))
+        .collect();
+
+    // layer-serial cursor: compute, then NoC, then NoP per layer
+    let mut t = 0.0f64;
+    let mut noc_start: HashMap<usize, f64> = HashMap::new();
+    let mut nop_start: HashMap<usize, f64> = HashMap::new();
+    for (li, lc) in circuit.per_layer.iter().enumerate() {
+        let name = format!("layer {li} compute");
+        trace.complete(&name, t, lc.latency_ns, TRACE_PID_SIM, 1, Json::Null);
+        t += lc.latency_ns;
+        let n = noc_ns.get(&li).copied().unwrap_or(0.0);
+        if n > 0.0 {
+            trace.complete(&format!("layer {li} noc"), t, n, TRACE_PID_SIM, 2, Json::Null);
+        }
+        noc_start.insert(li, t);
+        t += n;
+        let p = nop_ns.get(&li).copied().unwrap_or(0.0);
+        if p > 0.0 {
+            trace.complete(&format!("layer {li} nop"), t, p, TRACE_PID_SIM, 3, Json::Null);
+        }
+        nop_start.insert(li, t);
+        t += p;
+    }
+    trace.complete("inference", 0.0, t, TRACE_PID_SIM, 0, Json::Null);
+
+    for (tid, starts, obs) in [(2u32, &noc_start, noc_obs), (3u32, &nop_start, nop_obs)] {
+        for o in obs {
+            let ts = starts.get(&o.layer).copied().unwrap_or(0.0);
+            let mut args = Json::obj();
+            args.set("layer", o.layer).set("tiers", o.tiers.to_json());
+            match o.chiplet {
+                Some(c) => args.set("chiplet", c),
+                None => args.set("chiplet", Json::Null),
+            };
+            let name = if o.hit { "epoch hit" } else { "epoch miss" };
+            trace.instant(name, ts, TRACE_PID_SIM, tid, args);
+        }
+    }
+
+    let mut dargs = Json::obj();
+    dargs
+        .set("latency_ns", dram.latency_ns)
+        .set("energy_pj", dram.energy_pj)
+        .set("requests", dram.requests);
+    trace.instant("dram weight load (off-inference)", 0.0, TRACE_PID_SIM, 0, dargs);
 }
 
 /// The IMC compute (read) energy of a circuit report — the base the

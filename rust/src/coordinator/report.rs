@@ -10,8 +10,9 @@ use crate::dnn::Dnn;
 use crate::dram::DramReport;
 use crate::mapping::{MappingResult, Traffic};
 use crate::metrics::{Breakdown, Metrics};
-use crate::noc::NocReport;
+use crate::noc::{NocReport, TierCounts};
 use crate::nop::NopReport;
+use crate::obs::RunMeta;
 use crate::util::json::Json;
 use crate::util::table::eng;
 
@@ -92,6 +93,16 @@ pub struct SimReport {
     pub variation: Option<crate::variation::VariationReport>,
     /// Wall-clock the simulation took, seconds.
     pub wall_seconds: f64,
+    /// How the interconnect epochs were answered (closed-form /
+    /// periodic-certificate / extrapolated / packet fallback), summed
+    /// over the NoC and NoP engines. Deterministic for a given
+    /// (config, cache state): cache hits replay the tag recorded at
+    /// fill time. Excluded from cross-run bit-compare helpers, which
+    /// assert the physics, not the instrumentation.
+    pub engine_tiers: TierCounts,
+    /// Provenance block (`None` until a front-end attaches it — the
+    /// CLI and benches do; library callers may leave it unset).
+    pub meta: Option<RunMeta>,
 }
 
 impl SimReport {
@@ -147,6 +158,8 @@ impl SimReport {
         total.energy_pj += noc.metrics.leakage_energy_pj() + nop.metrics.leakage_energy_pj();
         let silicon_area_mm2 =
             (c.area_um2 + noc.metrics.area_um2 + nop.die_area_um2) / 1.0e6;
+        let mut engine_tiers = noc.tiers;
+        engine_tiers.accumulate(&nop.tiers);
 
         SimReport {
             model: dnn.name.clone(),
@@ -177,6 +190,8 @@ impl SimReport {
             fault: None,
             variation: None,
             wall_seconds,
+            engine_tiers,
+            meta: None,
         }
     }
 
@@ -324,6 +339,10 @@ impl SimReport {
         }
         if let Some(v) = &self.variation {
             o.set("variation", v.to_json());
+        }
+        o.set("engine_tiers", self.engine_tiers.to_json());
+        if let Some(meta) = &self.meta {
+            o.set("meta", meta.to_json());
         }
         o
     }
@@ -475,6 +494,9 @@ pub struct ServeReport {
     pub variation: Option<crate::variation::VariationReport>,
     /// Wall-clock of the serving simulation, seconds.
     pub wall_seconds: f64,
+    /// Provenance block (attached by [`crate::serve::evaluate`];
+    /// `None` only on hand-built reports).
+    pub meta: Option<RunMeta>,
 }
 
 impl ServeReport {
@@ -640,6 +662,9 @@ impl ServeReport {
         }
         if let Some(v) = &self.variation {
             o.set("variation", v.to_json());
+        }
+        if let Some(meta) = &self.meta {
+            o.set("meta", meta.to_json());
         }
         o
     }

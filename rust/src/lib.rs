@@ -25,6 +25,10 @@
 //!   programming noise, conductance drift, stuck-at cells and ADC
 //!   offset propagated to a per-point accuracy proxy and perturbed
 //!   read energy (docs/RELIABILITY.md).
+//! * [`obs`] — observability: deterministic Chrome trace-event
+//!   emission, self-profiling wall-clock spans, leveled logging and the
+//!   self-describing `meta` run-metadata block
+//!   (docs/OBSERVABILITY.md).
 //! * [`runtime`] — PJRT executor for the AOT-compiled Pallas crossbar
 //!   kernels (functional inference mode; Python never serves).
 //! * [`serve`] — discrete-event inference-serving simulator: streaming
@@ -68,6 +72,7 @@ pub mod mapping;
 pub mod metrics;
 pub mod noc;
 pub mod nop;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod util;

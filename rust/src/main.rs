@@ -3,30 +3,37 @@
 //! ```text
 //! siam simulate  [--config F] [--model M --dataset D] [--tiles N]
 //!                [--chiplets N] [--monolithic] [--placement P]
-//!                [--spares N] [--kill-chiplet 3,7] [--fault-seed S] [--json PATH]
+//!                [--spares N] [--kill-chiplet 3,7] [--fault-seed S]
+//!                [--trace PATH] [--profile] [--json PATH]
 //! siam sweep     [--config F] [--model M --dataset D]
 //!                [--tiles 4,9,16,25,36] [--counts 16,36,64,100]
-//!                [--placement rowmajor|dataflow] [--fom edap|...|yield|variation] [--json PATH]
+//!                [--placement rowmajor|dataflow] [--fom edap|...|yield|variation]
+//!                [--profile] [--json PATH]
 //! siam serve     [--config F] [--mode open|closed] [--rate QPS]
 //!                [--concurrency N] [--requests N] [--queue N] [--seed S]
 //!                [--fail-at N --fail-chiplet C --remap-latency US --spares N]
-//!                [--quick] [--json PATH]
+//!                [--quick] [--trace PATH] [--json PATH]
 //! siam functional [--artifacts DIR] [--adc 8] [--seed 42]
 //! siam models    [--files DIR]
 //! siam config    (print the paper-default TOML)
 //! ```
 //!
 //! `--model` accepts a zoo name or a network-description file
-//! (`--model file:net.toml`, see `docs/MODELS.md`).
+//! (`--model file:net.toml`, see `docs/MODELS.md`). Every command
+//! accepts `--log-level quiet|normal|verbose`; `--trace` writes a
+//! deterministic Chrome trace and `--profile` a host wall-clock stage
+//! breakdown (`docs/OBSERVABILITY.md`).
 //!
 //! Argument parsing is in-tree (the offline build vendors no clap).
 
 use anyhow::{bail, Context, Result};
 use siam::config::{ChipMode, PlacementPolicy, ServeMode, SiamConfig};
-use siam::coordinator::{self, simulate, SweepBuilder};
+use siam::coordinator::{self, SweepBuilder};
+use siam::obs::{self, CacheSnapshot, LogLevel, Profiler, RunMeta, TraceBuffer};
 use siam::util::json::Json;
 use siam::util::table::{eng, Table};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)> {
     let mut pos = Vec::new();
@@ -35,7 +42,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
             // boolean flags take no value
-            if matches!(name, "monolithic" | "help" | "quick") {
+            if matches!(name, "monolithic" | "help" | "quick" | "profile") {
                 flags.insert(name.to_string(), "true".into());
                 i += 1;
             } else {
@@ -101,11 +108,40 @@ fn parse_list(s: &str) -> Result<Vec<usize>> {
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = build_config(flags)?;
-    let rep = simulate(&cfg)?;
+    let ctx = coordinator::SweepContext::new(&cfg)?;
+    let prof = flags.contains_key("profile").then(Profiler::new);
+    let mut trace = flags.get("trace").map(|_| TraceBuffer::new());
+
+    // --trace runs the serial engine path (the timeline is layer-serial
+    // anyway) and is bit-identical to the concurrent default
+    let mut rep = if let Some(buf) = trace.as_mut() {
+        let run = || coordinator::trace_point(&cfg, &ctx, buf);
+        match prof.as_ref() {
+            Some(p) => p.time("trace:point", run)?,
+            None => run()?,
+        }
+    } else {
+        coordinator::run_point_profiled(&cfg, &ctx, true, prof.as_ref())?
+    };
+    if rep.meta.is_none() {
+        coordinator::attach_meta(&cfg, &ctx, &mut rep);
+    }
     println!("{}", rep.summary());
+    if let Some(p) = &prof {
+        println!("\nself-profile (host wall-clock):");
+        println!("{}", p.render_table());
+    }
+    if let (Some(path), Some(buf)) = (flags.get("trace"), &trace) {
+        std::fs::write(path, buf.render())?;
+        obs::log::info(&format!("wrote {path} ({} trace events)", buf.len()));
+    }
     if let Some(path) = flags.get("json") {
-        std::fs::write(path, rep.to_json().to_string_pretty())?;
-        println!("wrote {path}");
+        let mut j = rep.to_json();
+        if let Some(p) = &prof {
+            j.set("profile", p.to_json());
+        }
+        std::fs::write(path, j.to_string_pretty())?;
+        obs::log::info(&format!("wrote {path}"));
     }
     Ok(())
 }
@@ -138,6 +174,10 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             }
         });
     }
+    let prof = flags.contains_key("profile").then(|| Arc::new(Profiler::new()));
+    if let Some(p) = &prof {
+        builder = builder.profile(p.clone());
+    }
     let res = builder.run()?;
     let pts = &res.points;
     let mut t = Table::new(&[
@@ -161,6 +201,18 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         ]);
     }
     t.print();
+    let s = &res.stats;
+    println!(
+        "\nepoch cache: {} hits / {} misses ({:.1}% hit rate), {} epochs cached",
+        s.epoch_hits,
+        s.epoch_misses,
+        100.0 * s.epoch_hit_rate(),
+        s.epochs_cached
+    );
+    let shard_line: Vec<String> = s.shards.iter().map(|&(h, m)| format!("{h}/{m}")).collect();
+    println!("epoch cache shards (hits/misses): {}", shard_line.join("  "));
+    println!("engine tiers: {}", s.tiers.render());
+    println!("sweep wall-clock: {:.2}s ({:.1} points/s)", s.wall_seconds, s.points_per_sec);
     if let Some(best) = coordinator::dse::best_by_edap(pts) {
         println!(
             "\nEDAP-optimal: {} tiles/chiplet, {} chiplets",
@@ -175,9 +227,17 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             );
         }
     }
+    if let Some(p) = &prof {
+        println!("\nself-profile (host wall-clock):");
+        println!("{}", p.render_table());
+    }
     if let Some(path) = flags.get("json") {
-        std::fs::write(path, sweep_json(&cfg, &res).to_string_pretty())?;
-        println!("wrote {path}");
+        let mut out = sweep_json(&cfg, &res);
+        if let Some(p) = &prof {
+            out.set("profile", p.to_json());
+        }
+        std::fs::write(path, out.to_string_pretty())?;
+        obs::log::info(&format!("wrote {path}"));
     }
     Ok(())
 }
@@ -233,7 +293,10 @@ fn sweep_json(cfg: &SiamConfig, res: &coordinator::SweepResult) -> Json {
         .set("epoch_hits", res.stats.epoch_hits)
         .set("epoch_misses", res.stats.epoch_misses)
         .set("epoch_hit_rate", res.stats.epoch_hit_rate())
-        .set("epochs_cached", res.stats.epochs_cached);
+        .set("epochs_cached", res.stats.epochs_cached)
+        .set("engine_tiers", res.stats.tiers.to_json())
+        .set("wall_seconds", res.stats.wall_seconds)
+        .set("points_per_sec", res.stats.points_per_sec);
     // provenance: builtin vs file path + content fingerprint, so sweep
     // artifacts can be traced to the exact network that produced them
     let model_source = res
@@ -247,13 +310,24 @@ fn sweep_json(cfg: &SiamConfig, res: &coordinator::SweepResult) -> Json {
                 "builtin".into()
             }
         });
+    let mut meta = RunMeta::for_config(cfg);
+    meta.model_source = model_source.clone();
+    meta.wall_seconds = res.stats.wall_seconds;
+    meta.epoch_cache = Some(CacheSnapshot {
+        hits: res.stats.epoch_hits,
+        misses: res.stats.epoch_misses,
+        entries: res.stats.epochs_cached,
+        shards: res.stats.shards.clone(),
+    });
+    meta.engine_tiers = Some(res.stats.tiers);
     let mut out = Json::obj();
-    out.set("schema", "siam-sweep/v1")
+    out.set("schema", "siam-sweep/v2")
         .set("model", cfg.dnn.model.as_str())
         .set("dataset", cfg.dnn.dataset.as_str())
         .set("model_source", model_source.as_str())
         .set("points", points)
-        .set("stats", stats);
+        .set("stats", stats)
+        .set("meta", meta.to_json());
     if let Some(best) = coordinator::dse::best_by_edap(&res.points) {
         let mut b = Json::obj();
         b.set("tiles_per_chiplet", best.tiles_per_chiplet)
@@ -331,9 +405,18 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         "util %",
     ]);
     let mut reports = Vec::new();
-    for (model, dataset) in &workloads {
+    // --trace captures the first workload's run (one trace file, one
+    // pid-1 "serve" process track); further workloads run untraced
+    let mut trace: Option<TraceBuffer> = None;
+    for (i, (model, dataset)) in workloads.iter().enumerate() {
         let wcfg = cfg.clone().with_model(model, dataset);
-        let rep = siam::serve::serve(&wcfg)?;
+        let rep = if i == 0 && flags.contains_key("trace") {
+            let (r, buf) = siam::serve::serve_traced(&wcfg)?;
+            trace = Some(buf);
+            r
+        } else {
+            siam::serve::serve(&wcfg)?
+        };
         t.row(&[
             format!("{model}/{dataset}"),
             rep.mode.clone(),
@@ -353,14 +436,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         reports.push(rep);
     }
     t.print();
+    if let (Some(path), Some(buf)) = (flags.get("trace"), &trace) {
+        std::fs::write(path, buf.render())?;
+        obs::log::info(&format!("wrote {path} ({} trace events)", buf.len()));
+    }
     if let Some(path) = flags.get("json") {
         let mut out = Json::obj();
-        out.set("schema", "siam-serve/v1").set(
-            "reports",
-            Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
-        );
+        out.set("schema", "siam-serve/v2")
+            .set("reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect()));
         std::fs::write(path, out.to_string_pretty())?;
-        println!("\nwrote {path}");
+        obs::log::info(&format!("wrote {path}"));
     }
     Ok(())
 }
@@ -460,19 +545,25 @@ const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config>
   simulate   --model resnet110 --dataset cifar10 [--tiles 16] [--chiplets 36]
              [--monolithic] [--placement rowmajor|dataflow]
              [--spares 2] [--kill-chiplet 3,7] [--fault-seed 42]
+             [--trace trace.json] [--profile]
              [--config file.toml] [--json out.json]
   sweep      --model resnet110 --dataset cifar10 [--tiles 4,9,16] [--counts 36,64]
              [--placement rowmajor|dataflow]
              [--fom edap|edp|energy|latency|area|ipj|yield|variation]
-             [--json out.json]
+             [--profile] [--json out.json]
   serve      [--mode open|closed] [--rate 2000] [--concurrency 4]
              [--requests 1024] [--queue 4] [--seed 42] [--quick]
              [--fail-at 64 --fail-chiplet 3 --remap-latency 100 --spares 1]
-             [--config file.toml] [--json out.json]
+             [--trace trace.json] [--config file.toml] [--json out.json]
   functional [--artifacts artifacts] [--adc 4|8] [--seed 42]
   models     [--files DIR] list builtin + file models (params/MACs/crossbars)
   config     print the paper-default configuration TOML
 
+  every command accepts --log-level quiet|normal|verbose (progress
+  narration on stderr; results stay on stdout)
+  --trace writes a deterministic Chrome trace (open in Perfetto or
+  chrome://tracing); --profile prints host wall-clock per stage and adds
+  a profile fragment to --json output (docs/OBSERVABILITY.md)
   --model also accepts a network-description file: --model file:net.toml
   --spares reserves idle spare chiplets; --kill-chiplet injects faults
   (docs/RELIABILITY.md); serve --fail-at kills --fail-chiplet mid-run and
@@ -486,6 +577,12 @@ const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config>
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, flags) = parse_flags(&args)?;
+    if let Some(l) = flags.get("log-level") {
+        match LogLevel::parse(l) {
+            Some(level) => obs::log::set_level(level),
+            None => bail!("--log-level must be quiet|normal|verbose, got '{l}'"),
+        }
+    }
     if flags.contains_key("help") || pos.is_empty() {
         println!("{USAGE}");
         return Ok(());

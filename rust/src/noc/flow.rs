@@ -37,7 +37,7 @@
 use super::mesh::Mesh;
 use super::sim::{
     steady_tail, uniform_stride, warmup_rounds, EpochCache, EpochKey, EpochResult, PacketSim,
-    ENGINE_FLOW,
+    TierCounts, ENGINE_FLOW,
 };
 use crate::mapping::Flow;
 use std::collections::HashMap;
@@ -177,9 +177,22 @@ impl<'m> FlowSim<'m> {
     /// assert_eq!(flow_level.run(&epoch), PacketSim::new(&mesh).run(&epoch));
     /// ```
     pub fn run(&mut self, flows: &[Flow]) -> EpochResult {
+        self.run_counted(flows).0
+    }
+
+    /// [`run`](FlowSim::run) plus the [`TierCounts`] tally of which
+    /// engine tier answered each piece of the epoch: one `closed_form`
+    /// per uncontended flow, one `periodic` per certificate fire, one
+    /// `extrapolated` per tier-2 tail, one `packet_fallback` per
+    /// wholesale delegation of an irregular trace. Fully-round-simulated
+    /// components (they finish before any certificate fires) are counted
+    /// nowhere — the counters tally tier *events*, not components. The
+    /// result half is bit-identical to [`run`](FlowSim::run).
+    pub fn run_counted(&mut self, flows: &[Flow]) -> (EpochResult, TierCounts) {
         let mut res = EpochResult::default();
+        let mut tiers = TierCounts::default();
         if flows.is_empty() {
-            return res;
+            return (res, tiers);
         }
 
         // Single-flow epochs (the dominant shape of small-CNN traces,
@@ -192,8 +205,9 @@ impl<'m> FlowSim<'m> {
                 let id = self.intern_route(f.src, f.dst);
                 let hops = self.arena.route_spans[id as usize].1 as u64;
                 singleton_result(f, hops, self.router_delay, self.flits_per_packet, &mut res);
+                tiers.closed_form += 1;
             }
-            return res;
+            return (res, tiers);
         }
 
         // Algorithm-2 epochs share one stride with all starts inside the
@@ -204,7 +218,8 @@ impl<'m> FlowSim<'m> {
             psim.router_delay = self.router_delay;
             psim.flits_per_packet = self.flits_per_packet;
             psim.extrapolate = self.extrapolate;
-            return psim.run(flows);
+            tiers.packet_fallback += 1;
+            return (psim.run(flows), tiers);
         };
 
         let n = flows.len();
@@ -291,6 +306,7 @@ impl<'m> FlowSim<'m> {
                 let fi = grouped[i].2;
                 let hops = routes.route(fi).len() as u64;
                 singleton_result(&flows[fi as usize], hops, d, fpp, &mut res);
+                tiers.closed_form += 1;
             } else {
                 run_component(
                     flows,
@@ -305,6 +321,7 @@ impl<'m> FlowSim<'m> {
                     state_links,
                     state_prev,
                     &mut res,
+                    &mut tiers,
                 );
             }
             i = j;
@@ -315,7 +332,7 @@ impl<'m> FlowSim<'m> {
             busy[l as usize] = 0;
         }
 
-        res
+        (res, tiers)
     }
 
     /// [`run`](FlowSim::run) through an [`EpochCache`]: identical epochs
@@ -323,6 +340,20 @@ impl<'m> FlowSim<'m> {
     /// simulated once and replayed thereafter. Results are bit-identical
     /// to the uncached path.
     pub fn run_cached(&mut self, flows: &[Flow], cache: &EpochCache) -> EpochResult {
+        self.run_cached_tagged(flows, cache).0
+    }
+
+    /// [`run_counted`](FlowSim::run_counted) through an [`EpochCache`].
+    /// The tier tally is stored in the cache entry beside the result, so
+    /// a hit replays the counts of the run that populated the entry —
+    /// tier counters are a pure function of the evaluation trace and
+    /// stay deterministic whether epochs are computed or replayed, in
+    /// serial or parallel sweeps. The final `bool` is the hit flag.
+    pub fn run_cached_tagged(
+        &mut self,
+        flows: &[Flow],
+        cache: &EpochCache,
+    ) -> (EpochResult, TierCounts, bool) {
         let key = EpochKey::fingerprint(
             ENGINE_FLOW,
             self.mesh,
@@ -331,7 +362,7 @@ impl<'m> FlowSim<'m> {
             self.extrapolate,
             flows,
         );
-        cache.get_or_compute(key, || self.run(flows))
+        cache.get_or_compute_tagged(key, || self.run_counted(flows))
     }
 }
 
@@ -395,6 +426,7 @@ fn run_component(
     state_links: &mut Vec<u32>,
     state_prev: &mut Vec<u64>,
     res: &mut EpochResult,
+    tiers: &mut TierCounts,
 ) {
     let max_count = members
         .iter()
@@ -476,6 +508,7 @@ fn run_component(
                 .zip(state_prev.iter())
                 .all(|(&l, &pb)| busy[l as usize] == pb + stride);
             if periodic {
+                tiers.periodic += 1;
                 let k = boundary - 1 - round;
                 res.packets += active_cnt * k;
                 res.flit_hops += active_hops * fpp * k;
@@ -509,6 +542,7 @@ fn run_component(
         if armed && same_delta_rounds >= 2 && round_lat >= prev.1 {
             let remaining = max_count - round - 1;
             if remaining > 0 {
+                tiers.extrapolated += 1;
                 let tail = steady_tail(
                     remaining,
                     active_cnt,
@@ -693,6 +727,43 @@ mod tests {
         assert_eq!(a, FlowSim::new(&m).run(&flows));
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn tier_counts_attribute_each_answer_to_its_tier() {
+        let m = Mesh::new(16);
+        // two uncontended flows: two closed forms, nothing else
+        let disjoint = [flow(0, 3, 4000, 0, 2), flow(12, 15, 4000, 1, 2)];
+        let (res, tiers) = FlowSim::new(&m).run_counted(&disjoint);
+        assert_eq!(res, FlowSim::new(&m).run(&disjoint), "counting must not perturb the result");
+        assert_eq!(tiers.closed_form, 2);
+        assert_eq!(tiers.periodic + tiers.extrapolated + tiers.packet_fallback, 0);
+
+        // irregular trace: one wholesale packet fallback
+        let irregular = [flow(0, 10, 50, 0, 2), flow(3, 10, 70, 5, 3)];
+        let (_, tiers) = FlowSim::new(&m).run_counted(&irregular);
+        assert_eq!(tiers.packet_fallback, 1);
+        assert_eq!(tiers.closed_form, 0);
+
+        // long contended component: the certificate (or, failing that,
+        // the tier-2 tail) must fire at least once
+        let contended = [flow(0, 10, 5000, 0, 3), flow(3, 10, 5000, 1, 3)];
+        let (_, tiers) = FlowSim::new(&m).run_counted(&contended);
+        assert!(tiers.periodic + tiers.extrapolated >= 1, "no tier fired: {tiers:?}");
+    }
+
+    #[test]
+    fn cached_tier_tags_replay_on_hits() {
+        let m = Mesh::new(16);
+        let cache = EpochCache::new();
+        let flows = vec![flow(0, 3, 4000, 0, 2), flow(12, 15, 4000, 1, 2)];
+        let mut sim = FlowSim::new(&m);
+        let (r1, t1, hit1) = sim.run_cached_tagged(&flows, &cache);
+        let (r2, t2, hit2) = sim.run_cached_tagged(&flows, &cache);
+        assert!(!hit1 && hit2);
+        assert_eq!(r1, r2);
+        assert_eq!(t1, t2, "hit must replay the stored tier tag");
+        assert_eq!(t1.closed_form, 2);
     }
 
     #[test]

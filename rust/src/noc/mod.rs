@@ -17,11 +17,34 @@ pub mod sim;
 
 pub use flow::FlowSim;
 pub use mesh::Mesh;
-pub use sim::{EpochCache, EpochResult, FlitSim, PacketSim};
+pub use sim::{EpochCache, EpochResult, FlitSim, PacketSim, TierCounts};
 
 use crate::config::{ChipMode, NocTopology, SiamConfig};
 use crate::mapping::{MappingResult, Traffic};
 use crate::metrics::Metrics;
+
+/// One observed epoch evaluation, as delivered to the tracing hook of
+/// [`evaluate_cached_obs`] / [`evaluate_mapped_obs`] (and their NoP
+/// counterparts): which layer (and chiplet, for chiplet-local NoC
+/// epochs) the epoch belongs to, whether an [`EpochCache`] replayed it,
+/// and the engine-tier tally of its answer. Observers are pure — they
+/// see results after the fact and cannot perturb them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EpochObs {
+    /// Weight-layer position the epoch belongs to.
+    pub layer: usize,
+    /// Chiplet index for chiplet-local (NoC) epochs; `None` for
+    /// package-level (NoP) epochs.
+    pub chiplet: Option<usize>,
+    /// Whether an [`EpochCache`] replayed the epoch.
+    pub hit: bool,
+    /// Engine-tier tally of this epoch's answer (zero for analytical
+    /// H-tree epochs, which bypass the tier hierarchy).
+    pub tiers: TierCounts,
+}
+
+/// The per-epoch observer callback type (see [`EpochObs`]).
+pub type EpochObserver<'a> = &'a mut dyn FnMut(&EpochObs);
 
 /// Aggregated NoC evaluation for a mapped DNN.
 #[derive(Debug, Clone, Default)]
@@ -43,6 +66,12 @@ pub struct NocReport {
     /// may clock differently, so the wall-clock figures live in
     /// `per_layer_ns` and this stays a raw-cycle diagnostic.
     pub per_layer_cycles: Vec<(usize, u64)>,
+    /// Engine-tier tally over all mesh epochs: which tier of the
+    /// flow/packet hierarchy answered each piece (zero on H-tree
+    /// topologies, which are analytical). Tags replay from the epoch
+    /// cache, so the tally is identical for cached/uncached and
+    /// serial/parallel evaluation.
+    pub tiers: TierCounts,
     /// Per-weight-layer serialized wall-clock time as `(layer position,
     /// ns)`, max-combined across the layer's chiplets in each chiplet's
     /// own clock domain. Sums to `metrics.latency_ns` under
@@ -71,6 +100,21 @@ pub fn evaluate_cached(
     num_chiplets: usize,
     cache: Option<&EpochCache>,
 ) -> NocReport {
+    evaluate_cached_obs(cfg, traffic, num_chiplets, cache, None)
+}
+
+/// [`evaluate_cached`] with an optional per-epoch observer — the tracing
+/// hook behind `siam simulate --trace`. The observer is invoked once per
+/// epoch, after it evaluates, with the epoch's layer/chiplet, cache-hit
+/// flag and tier tally ([`EpochObs`]); results are bit-identical with
+/// and without an observer.
+pub fn evaluate_cached_obs(
+    cfg: &SiamConfig,
+    traffic: &Traffic,
+    num_chiplets: usize,
+    cache: Option<&EpochCache>,
+    mut obs: Option<EpochObserver<'_>>,
+) -> NocReport {
     let tech = crate::circuit::Tech::from_device(&cfg.device);
     let tiles = cfg.chiplet.tiles_per_chiplet;
     let mesh = Mesh::new(tiles.max(2));
@@ -89,14 +133,29 @@ pub fn evaluate_cached(
     // epoch of this evaluation
     let mut fsim = FlowSim::new(&mesh);
 
+    let mut tiers = TierCounts::default();
     for ep in &traffic.noc_epochs {
-        let r = match cfg.chiplet.noc_topology {
+        let (r, t, hit) = match cfg.chiplet.noc_topology {
             NocTopology::Mesh => match cache {
-                Some(c) => fsim.run_cached(&ep.flows, c),
-                None => fsim.run(&ep.flows),
+                Some(c) => fsim.run_cached_tagged(&ep.flows, c),
+                None => {
+                    let (r, t) = fsim.run_counted(&ep.flows);
+                    (r, t, false)
+                }
             },
-            NocTopology::Tree | NocTopology::HTree => htree.run(&ep.flows),
+            NocTopology::Tree | NocTopology::HTree => {
+                (htree.run(&ep.flows), TierCounts::default(), false)
+            }
         };
+        tiers.accumulate(&t);
+        if let Some(o) = obs.as_deref_mut() {
+            o(&EpochObs {
+                layer: ep.layer,
+                chiplet: Some(ep.chiplet),
+                hit,
+                tiers: t,
+            });
+        }
         *per_key.entry((ep.layer, ep.chiplet)).or_default() += r.completion_cycles;
         packets += r.packets;
         flit_hops += r.flit_hops;
@@ -156,6 +215,7 @@ pub fn evaluate_cached(
         },
         per_layer_cycles,
         per_layer_ns,
+        tiers,
     }
 }
 
@@ -172,8 +232,20 @@ pub fn evaluate_mapped(
     map: &MappingResult,
     cache: Option<&EpochCache>,
 ) -> NocReport {
+    evaluate_mapped_obs(cfg, traffic, map, cache, None)
+}
+
+/// [`evaluate_mapped`] with an optional per-epoch observer (see
+/// [`evaluate_cached_obs`]).
+pub fn evaluate_mapped_obs(
+    cfg: &SiamConfig,
+    traffic: &Traffic,
+    map: &MappingResult,
+    cache: Option<&EpochCache>,
+    mut obs: Option<EpochObserver<'_>>,
+) -> NocReport {
     if !cfg.has_hetero_classes() || cfg.system.chip_mode == ChipMode::Monolithic {
-        return evaluate_cached(cfg, traffic, map.num_chiplets, cache);
+        return evaluate_cached_obs(cfg, traffic, map.num_chiplets, cache, obs);
     }
     let tech = crate::circuit::Tech::from_device(&cfg.device);
     let classes = cfg.resolved_chiplet_classes();
@@ -208,20 +280,36 @@ pub fn evaluate_mapped(
     let mut flit_hops = 0u64;
     let mut lat_sum = 0u64;
     let mut energy_pj = 0.0;
+    let mut tiers = TierCounts::default();
     for ep in &traffic.noc_epochs {
         let k = map.chiplet_class[ep.chiplet];
-        let (r, hop_pj) = match cfg.chiplet.noc_topology {
-            NocTopology::Mesh => (
-                match cache {
-                    Some(c) => sims[k].run_cached(&ep.flows, c),
-                    None => sims[k].run(&ep.flows),
-                },
-                mesh_hop_pj,
-            ),
-            NocTopology::Tree | NocTopology::HTree => {
-                (htrees[k].run(&ep.flows), htrees[k].flit_level_energy_pj)
+        let (r, t, hit, hop_pj) = match cfg.chiplet.noc_topology {
+            NocTopology::Mesh => {
+                let (r, t, hit) = match cache {
+                    Some(c) => sims[k].run_cached_tagged(&ep.flows, c),
+                    None => {
+                        let (r, t) = sims[k].run_counted(&ep.flows);
+                        (r, t, false)
+                    }
+                };
+                (r, t, hit, mesh_hop_pj)
             }
+            NocTopology::Tree | NocTopology::HTree => (
+                htrees[k].run(&ep.flows),
+                TierCounts::default(),
+                false,
+                htrees[k].flit_level_energy_pj,
+            ),
         };
+        tiers.accumulate(&t);
+        if let Some(o) = obs.as_deref_mut() {
+            o(&EpochObs {
+                layer: ep.layer,
+                chiplet: Some(ep.chiplet),
+                hit,
+                tiers: t,
+            });
+        }
         *per_key.entry((ep.layer, ep.chiplet)).or_default() += r.completion_cycles;
         packets += r.packets;
         flit_hops += r.flit_hops;
@@ -278,6 +366,7 @@ pub fn evaluate_mapped(
         },
         per_layer_cycles: layer_cycles.into_iter().collect(),
         per_layer_ns: layer_ns.into_iter().collect(),
+        tiers,
     }
 }
 
@@ -304,6 +393,38 @@ mod tests {
         assert!(rep.packets > 0);
         assert!(rep.metrics.energy_pj > 0.0);
         assert!(rep.metrics.area_um2 > 0.0);
+    }
+
+    #[test]
+    fn tier_tally_and_observer_see_every_mesh_epoch() {
+        let cfg = SiamConfig::paper_default();
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let mut seen = 0usize;
+        let mut observed = TierCounts::default();
+        let mut cb = |o: &EpochObs| {
+            seen += 1;
+            observed.accumulate(&o.tiers);
+            assert!(o.chiplet.is_some(), "NoC epochs are chiplet-local");
+        };
+        let rep = evaluate_cached_obs(&cfg, &traffic, map.num_chiplets, None, Some(&mut cb));
+        assert_eq!(seen, traffic.noc_epochs.len());
+        assert_eq!(observed, rep.tiers, "report tally must equal the per-epoch sum");
+        assert!(rep.tiers.total() > 0, "mesh epochs must attribute tiers");
+        // observed runs are bit-identical to unobserved ones
+        let plain = evaluate(&cfg, &traffic, map.num_chiplets);
+        assert_eq!(plain.cycles, rep.cycles);
+        assert_eq!(plain.tiers, rep.tiers);
+        assert_eq!(plain.metrics.energy_pj.to_bits(), rep.metrics.energy_pj.to_bits());
+        // warm cache replays the same tally via the stored tags
+        let cache = EpochCache::new();
+        let cold = evaluate_cached(&cfg, &traffic, map.num_chiplets, Some(&cache));
+        let warm = evaluate_cached(&cfg, &traffic, map.num_chiplets, Some(&cache));
+        assert!(cache.hits() > 0);
+        assert_eq!(cold.tiers, rep.tiers);
+        assert_eq!(warm.tiers, rep.tiers, "hits must replay the stored tier tags");
     }
 
     #[test]

@@ -63,6 +63,66 @@ impl EpochResult {
     }
 }
 
+/// Flow-engine tier counters: how many times each resolution tier of
+/// the engine hierarchy fired while simulating epochs (see
+/// `ARCHITECTURE.md`, "Three-tier interconnect engine", and
+/// `docs/OBSERVABILITY.md` for the taxonomy).
+///
+/// Counters are *tier events*, not epochs: one epoch may resolve
+/// several flows in closed form and still round-simulate a contended
+/// component. Tags are stored in the [`EpochCache`] next to their
+/// [`EpochResult`] and replayed on hits, so the counts are a pure
+/// function of the evaluation trace — identical for serial and
+/// parallel sweeps, warm and cold caches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierCounts {
+    /// Flows answered in closed form (uncontended / singleton flows).
+    pub closed_form: u64,
+    /// Contended components resolved by the shift-periodicity
+    /// certificate.
+    pub periodic: u64,
+    /// Oversaturated components resolved by the linear-growth
+    /// steady-state extrapolation.
+    pub extrapolated: u64,
+    /// Wholesale delegations to the per-packet scheduler (irregular
+    /// traces, or epochs simulated by [`PacketSim`] directly).
+    pub packet_fallback: u64,
+}
+
+impl TierCounts {
+    /// Fold another counter set in.
+    pub fn accumulate(&mut self, o: &TierCounts) {
+        self.closed_form += o.closed_form;
+        self.periodic += o.periodic;
+        self.extrapolated += o.extrapolated;
+        self.packet_fallback += o.packet_fallback;
+    }
+
+    /// Total tier events.
+    pub fn total(&self) -> u64 {
+        self.closed_form + self.periodic + self.extrapolated + self.packet_fallback
+    }
+
+    /// The `engine_tiers` JSON fragment.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("closed_form", self.closed_form)
+            .set("periodic", self.periodic)
+            .set("extrapolated", self.extrapolated)
+            .set("packet_fallback", self.packet_fallback);
+        o
+    }
+
+    /// Compact one-line rendering for summary tables, e.g.
+    /// `"closed 12  periodic 3  extrap 1  packet 0"`.
+    pub fn render(&self) -> String {
+        format!(
+            "closed {}  periodic {}  extrap {}  packet {}",
+            self.closed_form, self.periodic, self.extrapolated, self.packet_fallback
+        )
+    }
+}
+
 /// Shared-stride (Algorithm-2) trace test: `Some(stride)` when every
 /// flow has the same stride, starts inside the first round, and a
 /// positive count. This is the uniform-trace contract both
@@ -204,10 +264,14 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-/// One lock stripe of the cache, with its own hit/miss counters.
+/// One lock stripe of the cache, with its own hit/miss counters. The
+/// value carries the engine-tier tag next to the result so replays
+/// restore the same tier attribution the original simulation had —
+/// tier counts stay deterministic under racing double-computes and
+/// warm caches.
 #[derive(Debug, Default)]
 struct Shard {
-    map: Mutex<HashMap<EpochKey, EpochResult>>,
+    map: Mutex<HashMap<EpochKey, (EpochResult, TierCounts)>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -293,18 +357,31 @@ impl EpochCache {
         key: EpochKey,
         compute: impl FnOnce() -> EpochResult,
     ) -> EpochResult {
+        self.get_or_compute_tagged(key, || (compute(), TierCounts::default())).0
+    }
+
+    /// [`get_or_compute`](EpochCache::get_or_compute) with an
+    /// engine-tier tag stored (and replayed) next to the result: hits
+    /// return the tag the original simulation recorded, so per-point
+    /// tier attribution is a pure function of the evaluation trace no
+    /// matter which worker populated the entry.
+    pub(crate) fn get_or_compute_tagged(
+        &self,
+        key: EpochKey,
+        compute: impl FnOnce() -> (EpochResult, TierCounts),
+    ) -> (EpochResult, TierCounts, bool) {
         let shard = &self.shards[key.lo as usize & (SHARD_COUNT - 1)];
-        if let Some(r) = lock(&shard.map).get(&key) {
+        if let Some(&(r, t)) = lock(&shard.map).get(&key) {
             shard.hits.fetch_add(1, Ordering::Relaxed);
-            return *r;
+            return (r, t, true);
         }
         shard.misses.fetch_add(1, Ordering::Relaxed);
-        let r = compute();
+        let (r, t) = compute();
         let mut map = lock(&shard.map);
         if map.len() < SHARD_CAP {
-            map.insert(key, r);
+            map.insert(key, (r, t));
         }
-        r
+        (r, t, false)
     }
 
     /// Poison one shard's mutex (a worker panics mid-lock), for the
@@ -473,7 +550,12 @@ impl<'m> PacketSim<'m> {
             self.extrapolate,
             flows,
         );
-        cache.get_or_compute(key, || self.run(flows))
+        // a directly-scheduled epoch is one per-packet tier event
+        let tag = TierCounts {
+            packet_fallback: 1,
+            ..TierCounts::default()
+        };
+        cache.get_or_compute_tagged(key, || (self.run(flows), tag)).0
     }
 
     /// Schedule one packet along its route (wormhole list scheduling).
@@ -822,6 +904,34 @@ mod tests {
             "fingerprints failed to spread across shards: {stats:?}"
         );
         assert!((cache.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cache_replays_the_tier_tag_on_hits() {
+        // the tier attribution stored at miss time must come back on
+        // every hit — tier counts are a pure function of the trace
+        let m = Mesh::new(16);
+        let cache = EpochCache::new();
+        let flows = vec![flow(0, 10, 50, 0, 2)];
+        let key = EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 1, true, &flows);
+        let tag = TierCounts {
+            periodic: 2,
+            closed_form: 3,
+            ..TierCounts::default()
+        };
+        let sim = PacketSim::new(&m);
+        let (r0, t0, hit0) = cache.get_or_compute_tagged(key, || (sim.run(&flows), tag));
+        assert!(!hit0);
+        assert_eq!(t0, tag);
+        let (r1, t1, hit1) = cache.get_or_compute_tagged(key, || unreachable!("must hit"));
+        assert!(hit1);
+        assert_eq!((r0, t0), (r1, t1), "hit must replay result and tag");
+        let mut sum = TierCounts::default();
+        sum.accumulate(&t0);
+        sum.accumulate(&t1);
+        assert_eq!(sum.total(), 10);
+        assert!(sum.render().contains("periodic 4"));
+        assert!(sum.to_json().get("closed_form").is_some());
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub use wire::WireModel;
 use crate::config::{ChipMode, SiamConfig};
 use crate::mapping::{MappingResult, Placement, Traffic};
 use crate::metrics::Metrics;
-use crate::noc::{EpochCache, FlowSim, Mesh};
+use crate::noc::{EpochCache, EpochObs, EpochObserver, FlowSim, Mesh, TierCounts};
 
 /// Aggregated NoP evaluation.
 #[derive(Debug, Clone, Default)]
@@ -42,6 +42,10 @@ pub struct NopReport {
     /// Sums to `cycles`; the serving simulator turns these into
     /// per-stage service times.
     pub per_layer_cycles: Vec<(usize, u64)>,
+    /// Engine-tier tally over all interposer epochs (see
+    /// [`TierCounts`]); replayed from epoch-cache tags on hits, so the
+    /// tally is identical for cached/uncached evaluation.
+    pub tiers: TierCounts,
 }
 
 /// Evaluate the NoP for a mapped DNN: cycle-accurate latency over the
@@ -60,6 +64,21 @@ pub fn evaluate_cached(
     placement: &Placement,
     cache: Option<&EpochCache>,
 ) -> NopReport {
+    evaluate_cached_obs(cfg, traffic, placement, cache, None)
+}
+
+/// [`evaluate_cached`] with an optional per-epoch observer — the tracing
+/// hook behind `siam simulate --trace` (see
+/// [`crate::noc::evaluate_cached_obs`]). NoP epochs are package-level,
+/// so observers see `chiplet: None`; results are bit-identical with and
+/// without an observer.
+pub fn evaluate_cached_obs(
+    cfg: &SiamConfig,
+    traffic: &Traffic,
+    placement: &Placement,
+    cache: Option<&EpochCache>,
+    mut obs: Option<EpochObserver<'_>>,
+) -> NopReport {
     let tech = crate::circuit::Tech::from_device(&cfg.device);
     let wire = WireModel::new(&cfg.system.nop);
     let drv = DriverModel::new(&cfg.system.nop);
@@ -74,11 +93,24 @@ pub fn evaluate_cached(
     let mut per_layer: std::collections::BTreeMap<usize, u64> = Default::default();
     let mut packets = 0u64;
     let mut flit_hops = 0u64;
+    let mut tiers = TierCounts::default();
     for ep in &traffic.nop_epochs {
-        let r = match cache {
-            Some(c) => fsim.run_cached(&ep.flows, c),
-            None => fsim.run(&ep.flows),
+        let (r, t, hit) = match cache {
+            Some(c) => fsim.run_cached_tagged(&ep.flows, c),
+            None => {
+                let (r, t) = fsim.run_counted(&ep.flows);
+                (r, t, false)
+            }
         };
+        tiers.accumulate(&t);
+        if let Some(o) = obs.as_deref_mut() {
+            o(&EpochObs {
+                layer: ep.layer,
+                chiplet: None,
+                hit,
+                tiers: t,
+            });
+        }
         *per_layer.entry(ep.layer).or_default() += r.completion_cycles;
         packets += r.packets;
         flit_hops += r.flit_hops;
@@ -123,6 +155,7 @@ pub fn evaluate_cached(
         die_area_um2: die_area,
         interposer_area_um2: interposer_area,
         per_layer_cycles,
+        tiers,
     }
 }
 
@@ -142,8 +175,21 @@ pub fn evaluate_mapped(
     map: &MappingResult,
     cache: Option<&EpochCache>,
 ) -> NopReport {
+    evaluate_mapped_obs(cfg, traffic, placement, map, cache, None)
+}
+
+/// [`evaluate_mapped`] with an optional per-epoch observer (see
+/// [`evaluate_cached_obs`]).
+pub fn evaluate_mapped_obs(
+    cfg: &SiamConfig,
+    traffic: &Traffic,
+    placement: &Placement,
+    map: &MappingResult,
+    cache: Option<&EpochCache>,
+    mut obs: Option<EpochObserver<'_>>,
+) -> NopReport {
     if !cfg.has_hetero_classes() || cfg.system.chip_mode == ChipMode::Monolithic {
-        return evaluate_cached(cfg, traffic, placement, cache);
+        return evaluate_cached_obs(cfg, traffic, placement, cache, obs);
     }
     let tech = crate::circuit::Tech::from_device(&cfg.device);
     let wire = WireModel::new(&cfg.system.nop);
@@ -166,11 +212,24 @@ pub fn evaluate_mapped(
     let mut per_layer: std::collections::BTreeMap<usize, u64> = Default::default();
     let mut packets = 0u64;
     let mut flit_hops = 0u64;
+    let mut tiers = TierCounts::default();
     for ep in &traffic.nop_epochs {
-        let r = match cache {
-            Some(c) => fsim.run_cached(&ep.flows, c),
-            None => fsim.run(&ep.flows),
+        let (r, t, hit) = match cache {
+            Some(c) => fsim.run_cached_tagged(&ep.flows, c),
+            None => {
+                let (r, t) = fsim.run_counted(&ep.flows);
+                (r, t, false)
+            }
         };
+        tiers.accumulate(&t);
+        if let Some(o) = obs.as_deref_mut() {
+            o(&EpochObs {
+                layer: ep.layer,
+                chiplet: None,
+                hit,
+                tiers: t,
+            });
+        }
         *per_layer.entry(ep.layer).or_default() += r.completion_cycles;
         packets += r.packets;
         flit_hops += r.flit_hops;
@@ -225,6 +284,7 @@ pub fn evaluate_mapped(
         die_area_um2: die_area,
         interposer_area_um2: interposer_area,
         per_layer_cycles,
+        tiers,
     }
 }
 
@@ -253,6 +313,30 @@ mod tests {
         assert!((rep.eff_freq_mhz - 250.0).abs() < 1e-9);
         let sum: u64 = rep.per_layer_cycles.iter().map(|&(_, c)| c).sum();
         assert_eq!(sum, rep.cycles, "per-layer cycles partition the total");
+    }
+
+    #[test]
+    fn tier_tally_and_observer_see_every_nop_epoch() {
+        let cfg = SiamConfig::paper_default();
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let mut seen = 0usize;
+        let mut observed = TierCounts::default();
+        let mut cb = |o: &EpochObs| {
+            seen += 1;
+            observed.accumulate(&o.tiers);
+            assert!(o.chiplet.is_none(), "NoP epochs are package-level");
+        };
+        let rep = evaluate_cached_obs(&cfg, &traffic, &pl, None, Some(&mut cb));
+        assert_eq!(seen, traffic.nop_epochs.len());
+        assert_eq!(observed, rep.tiers);
+        assert!(rep.tiers.total() > 0);
+        let plain = evaluate(&cfg, &traffic, &pl);
+        assert_eq!(plain.cycles, rep.cycles);
+        assert_eq!(plain.tiers, rep.tiers);
+        assert_eq!(plain.metrics.energy_pj.to_bits(), rep.metrics.energy_pj.to_bits());
     }
 
     #[test]

@@ -1,0 +1,87 @@
+//! Leveled progress logging behind the `--log-level` CLI flag.
+//!
+//! One process-wide level (default [`LogLevel::Normal`]) gates the
+//! progress prints that used to be scattered `eprintln!`/`println!`
+//! calls: [`info`] for normal progress notes, [`verbose`] for chatty
+//! per-step detail. Primary program *output* (tables, reports, JSON)
+//! does not route through here — only narration about progress does, so
+//! `--log-level quiet` leaves the results readable and scripts
+//! parseable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// How much progress narration to print.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    /// Results only; no progress notes.
+    Quiet,
+    /// Default: one-line progress notes ([`info`]).
+    Normal,
+    /// Everything, including per-step detail ([`verbose`]).
+    Verbose,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(LogLevel::Normal as u8);
+
+impl LogLevel {
+    /// Parse a `--log-level` value (`quiet` / `normal` / `verbose`).
+    pub fn parse(s: &str) -> Option<LogLevel> {
+        match s {
+            "quiet" => Some(LogLevel::Quiet),
+            "normal" => Some(LogLevel::Normal),
+            "verbose" => Some(LogLevel::Verbose),
+            _ => None,
+        }
+    }
+}
+
+/// Set the process-wide log level.
+pub fn set_level(level: LogLevel) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// The current process-wide log level.
+pub fn level() -> LogLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => LogLevel::Quiet,
+        2 => LogLevel::Verbose,
+        _ => LogLevel::Normal,
+    }
+}
+
+/// Print a progress note at `Normal` and above (to stderr, keeping
+/// stdout clean for results).
+pub fn info(msg: &str) {
+    if level() >= LogLevel::Normal {
+        eprintln!("{msg}");
+    }
+}
+
+/// Print per-step detail at `Verbose` only (to stderr).
+pub fn verbose(msg: &str) {
+    if level() >= LogLevel::Verbose {
+        eprintln!("{msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_orders() {
+        assert_eq!(LogLevel::parse("quiet"), Some(LogLevel::Quiet));
+        assert_eq!(LogLevel::parse("normal"), Some(LogLevel::Normal));
+        assert_eq!(LogLevel::parse("verbose"), Some(LogLevel::Verbose));
+        assert_eq!(LogLevel::parse("debug"), None);
+        assert!(LogLevel::Quiet < LogLevel::Normal && LogLevel::Normal < LogLevel::Verbose);
+    }
+
+    #[test]
+    fn set_level_is_observable() {
+        let before = level();
+        set_level(LogLevel::Verbose);
+        assert_eq!(level(), LogLevel::Verbose);
+        set_level(before); // restore for other tests in the process
+    }
+}

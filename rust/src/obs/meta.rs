@@ -1,0 +1,192 @@
+//! Run metadata: the self-describing `meta` block every report and
+//! bench JSON carries.
+//!
+//! A [`RunMeta`] pins everything needed to reproduce and attribute one
+//! run: the meta-schema version, an FNV-1a fingerprint of the complete
+//! serialized configuration, the seeds in play, the resolved model
+//! source, host wall-clock, and — when an epoch cache / the flow engine
+//! were involved — the cache hit/miss/per-shard statistics and the
+//! engine-tier counters. The fingerprint covers `to_toml_string()`
+//! output, so any config drift (including defaults) changes it.
+
+use crate::config::SiamConfig;
+use crate::noc::{EpochCache, TierCounts};
+use crate::util::json::Json;
+
+/// Version tag of the `meta` block layout itself.
+pub const META_SCHEMA: &str = "siam-meta/v1";
+
+/// Point-in-time statistics of one [`EpochCache`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    /// Total lookup hits across all shards.
+    pub hits: u64,
+    /// Total lookup misses (= epoch simulations) across all shards.
+    pub misses: u64,
+    /// Entries resident in the cache.
+    pub entries: usize,
+    /// Per-shard `(hits, misses)` in shard order.
+    pub shards: Vec<(u64, u64)>,
+}
+
+impl CacheSnapshot {
+    /// Capture the current counters of `cache`.
+    pub fn capture(cache: &EpochCache) -> CacheSnapshot {
+        CacheSnapshot {
+            hits: cache.hits(),
+            misses: cache.misses(),
+            entries: cache.len(),
+            shards: cache.shard_stats(),
+        }
+    }
+
+    /// Hit fraction in [0, 1] (0 when no lookups happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// The `epoch_cache` JSON fragment.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("hits", self.hits)
+            .set("misses", self.misses)
+            .set("hit_rate", self.hit_rate())
+            .set("entries", self.entries);
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|&(h, m)| {
+                let mut s = Json::obj();
+                s.set("hits", h).set("misses", m);
+                s
+            })
+            .collect();
+        o.set("shards", shards);
+        o
+    }
+}
+
+/// The self-describing metadata of one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunMeta {
+    /// FNV-1a 64-bit fingerprint of the serialized config, `%016x`.
+    pub config_fingerprint: String,
+    /// Resolved workload provenance (`builtin` or `file:path#fp`).
+    pub model_source: String,
+    /// Named seeds feeding the run's random streams.
+    pub seeds: Vec<(String, u64)>,
+    /// Host wall-clock of the run, seconds.
+    pub wall_seconds: f64,
+    /// Epoch-cache statistics, when a cache served the run.
+    pub epoch_cache: Option<CacheSnapshot>,
+    /// Flow-engine tier counters, when mesh epochs were simulated.
+    pub engine_tiers: Option<TierCounts>,
+}
+
+impl RunMeta {
+    /// Start a meta block for `cfg`: fingerprint and seeds filled in,
+    /// everything else at its default for the caller to set.
+    pub fn for_config(cfg: &SiamConfig) -> RunMeta {
+        RunMeta {
+            config_fingerprint: config_fingerprint(cfg),
+            seeds: vec![
+                ("serve".into(), cfg.serve.seed),
+                ("fault".into(), cfg.fault.seed),
+                ("variation".into(), cfg.variation.seed),
+            ],
+            ..RunMeta::default()
+        }
+    }
+
+    /// The `meta` JSON fragment.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema", META_SCHEMA)
+            .set("config_fingerprint", self.config_fingerprint.as_str())
+            .set("model_source", self.model_source.as_str())
+            .set("wall_seconds", self.wall_seconds);
+        let mut seeds = Json::obj();
+        for (name, seed) in &self.seeds {
+            seeds.set(name, *seed);
+        }
+        o.set("seeds", seeds);
+        if let Some(c) = &self.epoch_cache {
+            o.set("epoch_cache", c.to_json());
+        }
+        if let Some(t) = &self.engine_tiers {
+            o.set("engine_tiers", t.to_json());
+        }
+        o
+    }
+}
+
+/// FNV-1a 64-bit hash of a byte string.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of the complete serialized configuration, `%016x`
+/// (empty-string hash if the config cannot serialize — it always can
+/// for validated configs).
+pub fn config_fingerprint(cfg: &SiamConfig) -> String {
+    let text = cfg.to_toml_string().unwrap_or_default();
+    format!("{:016x}", fnv1a(text.as_bytes()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_stable_and_config_sensitive() {
+        // pinned FNV-1a test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        let base = SiamConfig::paper_default();
+        let a = config_fingerprint(&base);
+        assert_eq!(a, config_fingerprint(&base), "fingerprint must be deterministic");
+        let b = config_fingerprint(&base.clone().with_tiles_per_chiplet(25));
+        assert_ne!(a, b, "a config change must change the fingerprint");
+        assert_eq!(a.len(), 16);
+    }
+
+    #[test]
+    fn meta_json_carries_the_stable_keys() {
+        let mut m = RunMeta::for_config(&SiamConfig::paper_default());
+        m.model_source = "builtin".into();
+        m.wall_seconds = 1.25;
+        m.epoch_cache = Some(CacheSnapshot {
+            hits: 3,
+            misses: 1,
+            entries: 1,
+            shards: vec![(3, 1)],
+        });
+        m.engine_tiers = Some(TierCounts::default());
+        let j = m.to_json();
+        let keys = [
+            "schema",
+            "config_fingerprint",
+            "model_source",
+            "seeds",
+            "wall_seconds",
+            "epoch_cache",
+            "engine_tiers",
+        ];
+        for key in keys {
+            assert!(j.get(key).is_some(), "meta missing {key}");
+        }
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(META_SCHEMA));
+        let cache = j.get("epoch_cache").unwrap();
+        assert_eq!(cache.get("hit_rate").and_then(Json::as_f64), Some(0.75));
+    }
+}

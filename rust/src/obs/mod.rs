@@ -1,0 +1,35 @@
+//! Observability: deterministic event tracing, self-profiling spans and
+//! run metadata — the instrumentation layer of the simulator.
+//!
+//! Three zero-dependency parts (see `docs/OBSERVABILITY.md` for the
+//! user-facing guide):
+//!
+//! * [`trace`] — a Chrome trace-event buffer ([`trace::TraceBuffer`])
+//!   that the serving event loop and the pipeline stages write
+//!   structured events into, in *simulated* time. The rendered JSON
+//!   loads directly into Perfetto / `chrome://tracing`. Tracing is
+//!   observational only: the producers call it through sink traits with
+//!   no-op defaults, so untraced runs stay bit-identical and
+//!   allocation-free on the hot path (regression-pinned).
+//! * [`profile`] — host wall-clock spans ([`profile::Profiler`])
+//!   aggregated per label into a table / JSON fragment, attributing
+//!   sweep and pipeline wall-clock to stages without perturbing any
+//!   simulated result.
+//! * [`meta`] — the self-describing run-metadata block
+//!   ([`meta::RunMeta`]) every report and bench JSON carries: schema
+//!   version, config fingerprint, seeds, model source, wall-clock,
+//!   epoch-cache statistics and engine-tier counters.
+//!
+//! [`log`] is the tiny leveled logging helper behind the `--log-level`
+//! CLI flag; progress prints route through it instead of ad-hoc
+//! `eprintln!` calls.
+
+pub mod log;
+pub mod meta;
+pub mod profile;
+pub mod trace;
+
+pub use log::LogLevel;
+pub use meta::{CacheSnapshot, RunMeta};
+pub use profile::Profiler;
+pub use trace::TraceBuffer;

@@ -1,0 +1,135 @@
+//! Self-profiling spans: host wall-clock timings aggregated per label.
+//!
+//! A [`Profiler`] is shared by reference across the pipeline stages and
+//! the sweep workers (it is `Sync`; the sweep builder holds it behind an
+//! `Arc`). Every span is folded into per-label statistics under a
+//! poison-tolerant mutex — profiling observes wall-clock only and never
+//! feeds back into simulated state, so profiled runs stay bit-identical
+//! to unprofiled ones (regression-pinned by the observability tests).
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, PoisonError};
+use std::time::Instant;
+
+/// Aggregated statistics of one span label.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpanStat {
+    /// Number of spans recorded under the label.
+    pub calls: u64,
+    /// Total wall-clock across all calls, seconds.
+    pub total_s: f64,
+    /// Longest single call, seconds.
+    pub max_s: f64,
+}
+
+/// Label-keyed span aggregator for host wall-clock attribution.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    spans: Mutex<BTreeMap<String, SpanStat>>,
+}
+
+impl Profiler {
+    /// An empty profiler.
+    pub fn new() -> Profiler {
+        Profiler::default()
+    }
+
+    /// Fold one span of `secs` seconds into `label`'s statistics.
+    pub fn record(&self, label: &str, secs: f64) {
+        let mut spans = self.spans.lock().unwrap_or_else(PoisonError::into_inner);
+        let s = spans.entry(label.to_string()).or_default();
+        s.calls += 1;
+        s.total_s += secs;
+        s.max_s = s.max_s.max(secs);
+    }
+
+    /// Run `f`, recording its wall-clock under `label`.
+    pub fn time<R>(&self, label: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.record(label, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.spans.lock().unwrap_or_else(PoisonError::into_inner).is_empty()
+    }
+
+    /// All labels and their statistics, sorted by total time
+    /// (descending; label breaks ties).
+    pub fn snapshot(&self) -> Vec<(String, SpanStat)> {
+        let spans = self.spans.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut v: Vec<(String, SpanStat)> =
+            spans.iter().map(|(k, s)| (k.clone(), *s)).collect();
+        v.sort_by(|a, b| b.1.total_s.total_cmp(&a.1.total_s).then_with(|| a.0.cmp(&b.0)));
+        v
+    }
+
+    /// Render the aggregated spans as an aligned table.
+    pub fn render_table(&self) -> String {
+        let snap = self.snapshot();
+        let grand: f64 = snap.iter().map(|(_, s)| s.total_s).sum();
+        let mut t = Table::new(&["span", "calls", "total ms", "mean ms", "max ms", "share %"]);
+        for (label, s) in &snap {
+            t.row(&[
+                label.clone(),
+                s.calls.to_string(),
+                format!("{:.3}", s.total_s * 1e3),
+                format!("{:.3}", s.total_s * 1e3 / s.calls.max(1) as f64),
+                format!("{:.3}", s.max_s * 1e3),
+                format!("{:.1}", 100.0 * s.total_s / grand.max(1e-12)),
+            ]);
+        }
+        t.render()
+    }
+
+    /// The `profile` JSON fragment: one object per label with
+    /// calls/total/mean/max in milliseconds.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (label, s) in self.snapshot() {
+            let mut e = Json::obj();
+            e.set("calls", s.calls)
+                .set("total_ms", s.total_s * 1e3)
+                .set("mean_ms", s.total_s * 1e3 / s.calls.max(1) as f64)
+                .set("max_ms", s.max_s * 1e3);
+            o.set(&label, e);
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_aggregate_per_label() {
+        let p = Profiler::new();
+        p.record("a", 0.010);
+        p.record("a", 0.030);
+        p.record("b", 0.005);
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "a", "sorted by total time");
+        assert_eq!(snap[0].1.calls, 2);
+        assert!((snap[0].1.total_s - 0.040).abs() < 1e-12);
+        assert!((snap[0].1.max_s - 0.030).abs() < 1e-12);
+        let table = p.render_table();
+        assert!(table.contains("span") && table.contains('a') && table.contains('b'));
+        let j = p.to_json();
+        assert!(j.get("a").and_then(|a| a.get("calls")).is_some());
+    }
+
+    #[test]
+    fn time_returns_the_closure_value() {
+        let p = Profiler::new();
+        let v = p.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(p.snapshot()[0].1.calls, 1);
+        assert!(!p.is_empty());
+    }
+}

@@ -1,0 +1,152 @@
+//! Chrome trace-event buffer: deterministic, simulated-time event
+//! streams rendered as Perfetto-loadable JSON.
+//!
+//! The format is the Trace Event Format's JSON-array flavour: the file
+//! is an array of event objects, each carrying at least `name`, `ph`
+//! (phase), `ts` (timestamp, microseconds), `pid` and `tid`. Three
+//! phases are emitted: `"X"` complete events (spans with `dur`), `"i"`
+//! instant events, and `"M"` metadata events naming the process/thread
+//! tracks. Timestamps come from the *simulation* clock (nanoseconds,
+//! converted to microseconds here), never from the host clock, so two
+//! traced runs of the same `(config, seed)` render byte-identical
+//! streams — asserted by the observability tests.
+
+use crate::util::json::Json;
+
+/// An append-only buffer of Chrome trace events.
+///
+/// Producers push events in deterministic order; [`TraceBuffer::render`]
+/// serializes them as a JSON array (keys within each event are sorted by
+/// the writer, so the bytes are a pure function of the pushed events).
+#[derive(Debug, Clone, Default)]
+pub struct TraceBuffer {
+    events: Vec<Json>,
+}
+
+/// Build the common `{name, ph, ts, pid, tid}` skeleton every event
+/// variant shares.
+fn base(name: &str, ph: &str, ts_us: f64, pid: u32, tid: u32) -> Json {
+    let mut e = Json::obj();
+    e.set("name", name)
+        .set("ph", ph)
+        .set("ts", ts_us)
+        .set("pid", pid as u64)
+        .set("tid", tid as u64);
+    e
+}
+
+impl TraceBuffer {
+    /// An empty buffer.
+    pub fn new() -> TraceBuffer {
+        TraceBuffer::default()
+    }
+
+    /// Number of events recorded so far.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when no event has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// A complete (`"X"`) span: `[ts, ts + dur)` on track `(pid, tid)`,
+    /// timestamps in simulated nanoseconds. Pass `Json::Null` for no
+    /// args.
+    pub fn complete(
+        &mut self,
+        name: &str,
+        ts_ns: f64,
+        dur_ns: f64,
+        pid: u32,
+        tid: u32,
+        args: Json,
+    ) {
+        let mut e = base(name, "X", ts_ns / 1e3, pid, tid);
+        e.set("dur", dur_ns / 1e3);
+        if !matches!(args, Json::Null) {
+            e.set("args", args);
+        }
+        self.events.push(e);
+    }
+
+    /// An instant (`"i"`) event at `ts_ns` on track `(pid, tid)`. Pass
+    /// `Json::Null` for no args.
+    pub fn instant(&mut self, name: &str, ts_ns: f64, pid: u32, tid: u32, args: Json) {
+        let mut e = base(name, "i", ts_ns / 1e3, pid, tid);
+        e.set("s", "t"); // thread-scoped instant
+        if !matches!(args, Json::Null) {
+            e.set("args", args);
+        }
+        self.events.push(e);
+    }
+
+    /// A `process_name` metadata event labelling `pid` in the viewer.
+    pub fn process_name(&mut self, pid: u32, name: &str) {
+        let mut e = base("process_name", "M", 0.0, pid, 0);
+        let mut args = Json::obj();
+        args.set("name", name);
+        e.set("args", args);
+        self.events.push(e);
+    }
+
+    /// A `thread_name` metadata event labelling `(pid, tid)` in the
+    /// viewer.
+    pub fn thread_name(&mut self, pid: u32, tid: u32, name: &str) {
+        let mut e = base("thread_name", "M", 0.0, pid, tid);
+        let mut args = Json::obj();
+        args.set("name", name);
+        e.set("args", args);
+        self.events.push(e);
+    }
+
+    /// The whole buffer as a JSON array value.
+    pub fn to_json(&self) -> Json {
+        Json::from(self.events.clone())
+    }
+
+    /// Render the Chrome trace JSON (an array of event objects).
+    pub fn render(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_carry_the_required_keys() {
+        let mut t = TraceBuffer::new();
+        t.process_name(1, "serve");
+        t.thread_name(1, 2, "stage 2");
+        t.complete("serve", 1500.0, 3000.0, 1, 2, Json::Null);
+        let mut args = Json::obj();
+        args.set("req", 7u64);
+        t.instant("admit", 500.0, 1, 0, args);
+        assert_eq!(t.len(), 4);
+        let arr = t.to_json();
+        let events = arr.as_arr().expect("trace is an array");
+        for e in events {
+            for key in ["name", "ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "event missing {key}");
+            }
+        }
+        // ns -> us conversion
+        assert_eq!(events[2].get("ts").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(events[2].get("dur").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        let build = || {
+            let mut t = TraceBuffer::new();
+            t.process_name(1, "p");
+            t.complete("a", 0.0, 10.0, 1, 1, Json::Null);
+            t.instant("b", 5.0, 1, 1, Json::Null);
+            t.render()
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -36,6 +36,51 @@ pub struct EngineParams {
     pub queue_depth: usize,
 }
 
+/// Observer of the engine's event stream — the tracing hook behind
+/// `siam serve --trace`.
+///
+/// Every method has a no-op default, so a sink implements only the
+/// events it cares about. Sinks are pure observers: the engine hands
+/// them timestamps and identifiers *after* each state update, and
+/// nothing flows back, so an instrumented run is bit-identical to an
+/// uninstrumented one (the [`NoopSink`] used by [`run`] /
+/// [`run_with_failover`] monomorphizes every call site away).
+///
+/// All timestamps are simulated nanoseconds — deterministic for a given
+/// `(stage graph, workload)` input, never host wall-clock.
+pub trait EngineSink {
+    /// Request `req` was admitted to the ingress queue.
+    fn admitted(&mut self, _t_ns: f64, _req: u32) {}
+    /// Closed-loop request `req` found the ingress full and waits.
+    fn queued(&mut self, _t_ns: f64, _req: u32) {}
+    /// Open-loop request `req` was shed at the full ingress.
+    fn shed(&mut self, _t_ns: f64, _req: u32) {}
+    /// Stage `stage` started serving request `req`.
+    fn serve_start(&mut self, _t_ns: f64, _stage: usize, _req: u32) {}
+    /// Stage `stage` finished serving request `req`.
+    fn serve_end(&mut self, _t_ns: f64, _stage: usize, _req: u32) {}
+    /// Stage `stage` finished `req` but the downstream queue is full —
+    /// the stage holds the request and stalls (blocking-after-service).
+    fn blocked(&mut self, _t_ns: f64, _stage: usize, _req: u32) {}
+    /// Stage `stage` handed its held request `req` downstream and is
+    /// free again.
+    fn unblocked(&mut self, _t_ns: f64, _stage: usize, _req: u32) {}
+    /// Request `req` completed the full pipeline with the given sojourn.
+    fn completed(&mut self, _t_ns: f64, _req: u32, _latency_ns: f64) {}
+    /// The failover plan's failure fired: `dead_stages` went down,
+    /// shedding `shed` in-flight requests.
+    fn failed(&mut self, _t_ns: f64, _dead_stages: &[usize], _shed: usize) {}
+    /// The failover plan's remap completed; all stages are back up.
+    fn resumed(&mut self, _t_ns: f64) {}
+}
+
+/// The do-nothing [`EngineSink`] behind the uninstrumented entry
+/// points; monomorphization erases every sink call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl EngineSink for NoopSink {}
+
 /// A mid-run chiplet-failure scenario for [`run_with_failover`].
 ///
 /// At `fail_time_ns` the `dead_stages` go down: their in-flight
@@ -219,7 +264,7 @@ impl Sim {
     /// the queue frees a slot, which back-fills from the blocked
     /// upstream stage (or, at the ingress, from waiting closed-loop
     /// clients), cascading as far up as space propagates.
-    fn pull(&mut self, j: usize, t: f64) {
+    fn pull<S: EngineSink>(&mut self, j: usize, t: f64, sink: &mut S) {
         if self.stages[j].down
             || self.stages[j].serving.is_some()
             || self.stages[j].blocked.is_some()
@@ -233,17 +278,19 @@ impl Sim {
         let s = self.stages[j].service_ns;
         let epoch = self.stages[j].epoch;
         self.stages[j].busy_ns += s;
+        sink.serve_start(t, j, r);
         self.push_event(t + s, Kind::Finish { j: j as u32, epoch });
-        self.backfill(j, t);
+        self.backfill(j, t, sink);
     }
 
     /// A slot just freed in stage `j`'s queue: refill it from upstream.
-    fn backfill(&mut self, j: usize, t: f64) {
+    fn backfill<S: EngineSink>(&mut self, j: usize, t: f64, sink: &mut S) {
         if j == 0 {
             if let Some(r) = self.pending.pop_front() {
                 debug_assert!(self.stages[0].queue.len() < self.cap);
                 self.stages[0].queue.push_back(r);
-                self.pull(0, t);
+                sink.admitted(t, r);
+                self.pull(0, t, sink);
             }
             return;
         }
@@ -251,60 +298,69 @@ impl Sim {
         if let Some(r) = self.stages[up].blocked.take() {
             debug_assert!(self.stages[j].queue.len() < self.cap);
             self.stages[j].queue.push_back(r);
-            self.pull(up, t);
+            sink.unblocked(t, up, r);
+            self.pull(up, t, sink);
         }
     }
 
-    fn finish(&mut self, j: usize, epoch: u32, t: f64) {
+    fn finish<S: EngineSink>(&mut self, j: usize, epoch: u32, t: f64, sink: &mut S) {
         if self.stages[j].epoch != epoch {
             // the chiplet hosting this stage died mid-service: the
             // request this finish would complete was already shed
             return;
         }
         let r = self.stages[j].serving.take().expect("finish on idle stage");
+        sink.serve_end(t, j, r);
         if j + 1 == self.stages.len() {
-            self.complete(r, t);
+            self.complete(r, t, sink);
         } else if self.stages[j + 1].queue.len() < self.cap {
             self.stages[j + 1].queue.push_back(r);
-            self.pull(j + 1, t);
+            self.pull(j + 1, t, sink);
         } else {
             // downstream full: hold the finished request, stall
             self.stages[j].blocked = Some(r);
+            sink.blocked(t, j, r);
             return;
         }
-        self.pull(j, t);
+        self.pull(j, t, sink);
     }
 
-    fn complete(&mut self, r: u32, t: f64) {
+    fn complete<S: EngineSink>(&mut self, r: u32, t: f64, sink: &mut S) {
         self.stats.completed += 1;
-        self.stats.latencies_ns.push(t - self.arrival_ns[r as usize]);
+        let latency = t - self.arrival_ns[r as usize];
+        self.stats.latencies_ns.push(latency);
         self.stats.completion_times_ns.push(t);
         self.stats.last_completion_ns = t;
+        sink.completed(t, r, latency);
         if self.to_issue > 0 {
             self.to_issue -= 1;
             let next = self.new_request(t);
-            self.admit_or_wait(next, t);
+            self.admit_or_wait(next, t, sink);
         }
     }
 
     /// Closed-loop admission: queue at the ingress if a slot is free,
     /// otherwise wait (latency accrues from issue time).
-    fn admit_or_wait(&mut self, r: u32, t: f64) {
+    fn admit_or_wait<S: EngineSink>(&mut self, r: u32, t: f64, sink: &mut S) {
         if self.stages[0].queue.len() < self.cap {
             self.stages[0].queue.push_back(r);
-            self.pull(0, t);
+            sink.admitted(t, r);
+            self.pull(0, t, sink);
         } else {
             self.pending.push_back(r);
+            sink.queued(t, r);
         }
     }
 
     /// Open-loop admission: shed when the ingress queue is full.
-    fn arrive(&mut self, r: u32, t: f64) {
+    fn arrive<S: EngineSink>(&mut self, r: u32, t: f64, sink: &mut S) {
         if self.stages[0].queue.len() < self.cap {
             self.stages[0].queue.push_back(r);
-            self.pull(0, t);
+            sink.admitted(t, r);
+            self.pull(0, t, sink);
         } else {
             self.stats.dropped += 1;
+            sink.shed(t, r);
         }
     }
 
@@ -313,7 +369,8 @@ impl Sim {
     /// the jammed upstream, so work keeps accumulating behind the dead
     /// stage during the outage (served after a resume, or stuck until
     /// the end of the run without one).
-    fn fail(&mut self, dead: &[usize], t: f64) {
+    fn fail<S: EngineSink>(&mut self, dead: &[usize], t: f64, sink: &mut S) {
+        let mut shed_total = 0usize;
         for &j in dead {
             let st = &mut self.stages[j];
             st.down = true;
@@ -327,22 +384,25 @@ impl Sim {
                 shed += 1;
             }
             self.stats.failover_shed += shed;
+            shed_total += shed;
             for _ in 0..self.cap {
-                self.backfill(j, t);
+                self.backfill(j, t, sink);
             }
         }
+        sink.failed(t, dead, shed_total);
     }
 
     /// Remap complete: every stage comes back up with the degraded
     /// pipeline's service times and queued work drains.
-    fn resume(&mut self, services: &[f64], t: f64) {
+    fn resume<S: EngineSink>(&mut self, services: &[f64], t: f64, sink: &mut S) {
         for (st, &s) in self.stages.iter_mut().zip(services) {
             st.down = false;
             st.service_ns = s;
         }
+        sink.resumed(t);
         for j in 0..self.stages.len() {
-            self.pull(j, t);
-            self.backfill(j, t);
+            self.pull(j, t, sink);
+            self.backfill(j, t, sink);
         }
     }
 }
@@ -362,6 +422,21 @@ pub fn run_with_failover(
     params: EngineParams,
     workload: Workload,
     plan: Option<&FailoverPlan>,
+) -> RunStats {
+    run_observed(service_ns, params, workload, plan, &mut NoopSink)
+}
+
+/// [`run_with_failover`] with an [`EngineSink`] observing the event
+/// stream — the instrumented entry point behind `siam serve --trace`.
+/// The sink sees every state transition (admission, shedding, service
+/// spans, blocking, failure/resume) in simulated time; statistics are
+/// bit-identical to the uninstrumented run.
+pub fn run_observed<S: EngineSink>(
+    service_ns: &[f64],
+    params: EngineParams,
+    workload: Workload,
+    plan: Option<&FailoverPlan>,
+    sink: &mut S,
 ) -> RunStats {
     assert!(!service_ns.is_empty(), "pipeline needs at least one stage");
     assert!(params.queue_depth > 0, "queues need at least one slot");
@@ -427,23 +502,23 @@ pub fn run_with_failover(
             sim.to_issue = requests - initial;
             for _ in 0..initial {
                 let id = sim.new_request(0.0);
-                sim.admit_or_wait(id, 0.0);
+                sim.admit_or_wait(id, 0.0, sink);
             }
         }
     }
 
     while let Some(Reverse(ev)) = sim.heap.pop() {
         match ev.kind {
-            Kind::Arrive(r) => sim.arrive(r, ev.t),
-            Kind::Finish { j, epoch } => sim.finish(j as usize, epoch, ev.t),
+            Kind::Arrive(r) => sim.arrive(r, ev.t, sink),
+            Kind::Finish { j, epoch } => sim.finish(j as usize, epoch, ev.t, sink),
             Kind::Fail => {
                 let dead = plan.expect("fail event without a plan").dead_stages.clone();
-                sim.fail(&dead, ev.t);
+                sim.fail(&dead, ev.t, sink);
             }
             Kind::Resume => {
                 let (_, services) =
                     plan.and_then(|p| p.resume.as_ref()).expect("resume event without a plan");
-                sim.resume(services, ev.t);
+                sim.resume(services, ev.t, sink);
             }
         }
     }
@@ -644,6 +719,112 @@ mod tests {
         assert_eq!(stats.completed, 0);
         assert_eq!(stats.failover_shed, 1);
         assert_eq!(stats.dropped, 0);
+    }
+
+    #[test]
+    fn sink_observes_conserved_events_without_perturbing_stats() {
+        #[derive(Default)]
+        struct Counter {
+            admitted: usize,
+            shed: usize,
+            starts: usize,
+            ends: usize,
+            completed: usize,
+            blocked: usize,
+            unblocked: usize,
+        }
+        impl EngineSink for Counter {
+            fn admitted(&mut self, _t: f64, _r: u32) {
+                self.admitted += 1;
+            }
+            fn shed(&mut self, _t: f64, _r: u32) {
+                self.shed += 1;
+            }
+            fn serve_start(&mut self, _t: f64, _j: usize, _r: u32) {
+                self.starts += 1;
+            }
+            fn serve_end(&mut self, _t: f64, _j: usize, _r: u32) {
+                self.ends += 1;
+            }
+            fn blocked(&mut self, _t: f64, _j: usize, _r: u32) {
+                self.blocked += 1;
+            }
+            fn unblocked(&mut self, _t: f64, _j: usize, _r: u32) {
+                self.unblocked += 1;
+            }
+            fn completed(&mut self, _t: f64, _r: u32, _l: f64) {
+                self.completed += 1;
+            }
+        }
+
+        let stages = [3.0, 7.5, 2.25, 11.0];
+        let mut sink = Counter::default();
+        let observed = run_observed(
+            &stages,
+            EngineParams { queue_depth: 1 },
+            open(4.0, 300),
+            None,
+            &mut sink,
+        );
+        let plain = run(&stages, EngineParams { queue_depth: 1 }, open(4.0, 300));
+
+        // observation is free: stats bit-identical to the plain run
+        assert_eq!(observed.completed, plain.completed);
+        assert_eq!(observed.dropped, plain.dropped);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&observed.latencies_ns), bits(&plain.latencies_ns));
+        assert_eq!(bits(&observed.stage_busy_ns), bits(&plain.stage_busy_ns));
+
+        // and the event stream is conserved
+        assert_eq!(sink.admitted, observed.completed + in_flight_at_end(&observed, &stages));
+        assert_eq!(sink.shed, observed.dropped);
+        assert_eq!(sink.completed, observed.completed);
+        assert_eq!(sink.starts, sink.ends, "every service span closes");
+        assert_eq!(sink.blocked, sink.unblocked, "every stall resolves in a drained run");
+        assert!(sink.blocked > 0, "queue_depth 1 under load must stall");
+    }
+
+    /// Requests admitted but still resident when the event heap drained
+    /// (none, for an open-loop run that fully drains).
+    fn in_flight_at_end(stats: &RunStats, _stages: &[f64]) -> usize {
+        stats.offered - stats.completed - stats.dropped
+    }
+
+    #[test]
+    fn sink_sees_failure_and_resume() {
+        #[derive(Default)]
+        struct FailWatch {
+            failed_at: Option<f64>,
+            shed: usize,
+            resumed_at: Option<f64>,
+        }
+        impl EngineSink for FailWatch {
+            fn failed(&mut self, t: f64, dead: &[usize], shed: usize) {
+                assert_eq!(dead, [1]);
+                self.failed_at = Some(t);
+                self.shed = shed;
+            }
+            fn resumed(&mut self, t: f64) {
+                self.resumed_at = Some(t);
+            }
+        }
+        let stages = [10.0, 20.0, 5.0];
+        let plan = FailoverPlan {
+            fail_time_ns: 1000.0,
+            dead_stages: vec![1],
+            resume: Some((1500.0, vec![10.0, 25.0, 5.0])),
+        };
+        let mut sink = FailWatch::default();
+        let stats = run_observed(
+            &stages,
+            EngineParams { queue_depth: 4 },
+            open(25.0, 200),
+            Some(&plan),
+            &mut sink,
+        );
+        assert_eq!(sink.failed_at, Some(1000.0));
+        assert_eq!(sink.resumed_at, Some(1500.0));
+        assert_eq!(sink.shed, stats.failover_shed);
     }
 
     #[test]

@@ -29,13 +29,123 @@ pub mod engine;
 pub mod stage;
 pub mod traffic;
 
-pub use engine::{run, run_with_failover, EngineParams, FailoverPlan, RunStats, Workload};
+pub use engine::{
+    run, run_observed, run_with_failover, EngineParams, EngineSink, FailoverPlan, NoopSink,
+    RunStats, Workload,
+};
 pub use stage::{StageGraph, StageSpec};
 pub use traffic::{poisson_arrivals, SplitMix64};
 
 use crate::config::{ServeConfig, ServeMode, SiamConfig};
 use crate::coordinator::{FailoverReport, ServeReport, SweepContext};
+use crate::obs::{CacheSnapshot, RunMeta, TraceBuffer};
+use crate::util::json::Json;
 use anyhow::Result;
+
+/// `pid` of the serving process in emitted Chrome traces.
+const TRACE_PID_SERVE: u32 = 1;
+
+/// An [`EngineSink`] that renders the serving engine's event stream
+/// into a Chrome [`TraceBuffer`] — the implementation behind
+/// `siam serve --trace`.
+///
+/// Track layout: process `pid = 1` ("serve"); `tid 0` carries the
+/// request lifecycle (admit / queue-wait / shed / complete instants and
+/// fail / resume markers); `tid j + 1` carries stage `j`'s occupancy —
+/// one `"X"` span per service and per blocking-after-service stall.
+/// All timestamps are simulated nanoseconds, so two traced runs of the
+/// same `(config, seed)` render byte-identical streams.
+#[derive(Debug)]
+pub struct ServeTracer {
+    buf: TraceBuffer,
+    /// Per-stage service start time of the in-flight request.
+    serve_start_ns: Vec<f64>,
+    /// Per-stage timestamp the current blocking stall began.
+    blocked_since_ns: Vec<f64>,
+}
+
+fn req_args(req: u32) -> Json {
+    let mut a = Json::obj();
+    a.set("req", req as u64);
+    a
+}
+
+impl ServeTracer {
+    /// A tracer for `graph`, with the process and per-stage thread
+    /// tracks pre-named after the pipeline's layers.
+    pub fn new(graph: &StageGraph) -> ServeTracer {
+        let mut buf = TraceBuffer::new();
+        buf.process_name(TRACE_PID_SERVE, "serve");
+        buf.thread_name(TRACE_PID_SERVE, 0, "requests");
+        for (j, s) in graph.stages.iter().enumerate() {
+            buf.thread_name(TRACE_PID_SERVE, j as u32 + 1, &format!("stage {j}: {}", s.name));
+        }
+        let n = graph.stages.len();
+        ServeTracer {
+            buf,
+            serve_start_ns: vec![0.0; n],
+            blocked_since_ns: vec![0.0; n],
+        }
+    }
+
+    /// The finished trace buffer.
+    pub fn into_buffer(self) -> TraceBuffer {
+        self.buf
+    }
+}
+
+impl EngineSink for ServeTracer {
+    fn admitted(&mut self, t_ns: f64, req: u32) {
+        self.buf.instant("admit", t_ns, TRACE_PID_SERVE, 0, req_args(req));
+    }
+    fn queued(&mut self, t_ns: f64, req: u32) {
+        self.buf.instant("queue-wait", t_ns, TRACE_PID_SERVE, 0, req_args(req));
+    }
+    fn shed(&mut self, t_ns: f64, req: u32) {
+        self.buf.instant("shed", t_ns, TRACE_PID_SERVE, 0, req_args(req));
+    }
+    fn serve_start(&mut self, t_ns: f64, stage: usize, _req: u32) {
+        self.serve_start_ns[stage] = t_ns;
+    }
+    fn serve_end(&mut self, t_ns: f64, stage: usize, req: u32) {
+        let start = self.serve_start_ns[stage];
+        self.buf.complete(
+            "serve",
+            start,
+            t_ns - start,
+            TRACE_PID_SERVE,
+            stage as u32 + 1,
+            req_args(req),
+        );
+    }
+    fn blocked(&mut self, t_ns: f64, stage: usize, _req: u32) {
+        self.blocked_since_ns[stage] = t_ns;
+    }
+    fn unblocked(&mut self, t_ns: f64, stage: usize, req: u32) {
+        let start = self.blocked_since_ns[stage];
+        self.buf.complete(
+            "blocked",
+            start,
+            t_ns - start,
+            TRACE_PID_SERVE,
+            stage as u32 + 1,
+            req_args(req),
+        );
+    }
+    fn completed(&mut self, t_ns: f64, req: u32, latency_ns: f64) {
+        let mut a = req_args(req);
+        a.set("latency_ns", latency_ns);
+        self.buf.instant("complete", t_ns, TRACE_PID_SERVE, 0, a);
+    }
+    fn failed(&mut self, t_ns: f64, dead_stages: &[usize], shed: usize) {
+        let mut a = Json::obj();
+        a.set("dead_stages", dead_stages.len() as u64).set("shed", shed as u64);
+        self.buf.instant("fail", t_ns, TRACE_PID_SERVE, 0, a);
+    }
+    fn resumed(&mut self, t_ns: f64) {
+        self.buf.instant("resume", t_ns, TRACE_PID_SERVE, 0, Json::Null);
+    }
+}
 
 /// Nearest-rank percentile of an **ascending-sorted** latency slice.
 /// Returns 0 for an empty slice.
@@ -55,22 +165,75 @@ pub fn serve(cfg: &SiamConfig) -> Result<ServeReport> {
     evaluate(cfg, &ctx)
 }
 
+/// [`serve`] with the engine's event stream rendered into a Chrome
+/// trace (`siam serve --trace`). The report is bit-identical to
+/// [`serve`]'s.
+pub fn serve_traced(cfg: &SiamConfig) -> Result<(ServeReport, TraceBuffer)> {
+    let ctx = SweepContext::new(cfg)?;
+    evaluate_traced(cfg, &ctx)
+}
+
 /// Run the serving simulator for one configuration against a shared
 /// sweep context: the stage service times come out of the context's
 /// layer-cost / epoch / DRAM caches, so a point the sweep already
 /// simulated costs only the event loop.
 pub fn evaluate(cfg: &SiamConfig, ctx: &SweepContext) -> Result<ServeReport> {
+    let t0 = std::time::Instant::now();
     let graph = StageGraph::build(cfg, ctx)?;
-    if cfg.serve.fail_at_request.is_some() {
-        return run_failover_graph(cfg, &graph, ctx);
-    }
-    Ok(run_graph(&graph, &cfg.serve))
+    evaluate_graph(cfg, ctx, &graph, &mut NoopSink, t0)
+}
+
+/// [`evaluate`] with the engine's event stream rendered into a Chrome
+/// trace (see [`ServeTracer`]) — the entry point behind
+/// `siam serve --trace`. The report is bit-identical to [`evaluate`]'s.
+pub fn evaluate_traced(cfg: &SiamConfig, ctx: &SweepContext) -> Result<(ServeReport, TraceBuffer)> {
+    let t0 = std::time::Instant::now();
+    let graph = StageGraph::build(cfg, ctx)?;
+    let mut tracer = ServeTracer::new(&graph);
+    let report = evaluate_graph(cfg, ctx, &graph, &mut tracer, t0)?;
+    Ok((report, tracer.into_buffer()))
+}
+
+/// Shared tail of [`evaluate`] / [`evaluate_traced`]: run the engine
+/// against the prebuilt graph with `sink` observing, then attach the
+/// run's `meta` block (config fingerprint, seeds, model source,
+/// wall-clock, epoch-cache snapshot and engine-tier tally).
+fn evaluate_graph<S: EngineSink>(
+    cfg: &SiamConfig,
+    ctx: &SweepContext,
+    graph: &StageGraph,
+    sink: &mut S,
+    t0: std::time::Instant,
+) -> Result<ServeReport> {
+    let mut report = if cfg.serve.fail_at_request.is_some() {
+        run_failover_graph(cfg, graph, ctx, sink)?
+    } else {
+        run_graph_sink(graph, &cfg.serve, sink)
+    };
+    let mut meta = RunMeta::for_config(cfg);
+    meta.model_source = graph.single_shot.model_source.clone();
+    meta.epoch_cache = Some(CacheSnapshot::capture(ctx.epoch_cache()));
+    meta.engine_tiers = Some(graph.single_shot.engine_tiers);
+    meta.wall_seconds = t0.elapsed().as_secs_f64();
+    report.meta = Some(meta);
+    Ok(report)
 }
 
 /// Run the serving engine on a prebuilt [`StageGraph`] — the QoS sweep
 /// builds each point's graph once (it carries the single-shot report
 /// too) and calls this, so QoS ranking adds only the event loop.
 pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
+    run_graph_sink(graph, sc, &mut NoopSink)
+}
+
+/// [`run_graph`] with an [`EngineSink`] observing the engine's event
+/// stream. The sink is a pure observer; the report is bit-identical to
+/// [`run_graph`]'s.
+pub fn run_graph_sink<S: EngineSink>(
+    graph: &StageGraph,
+    sc: &ServeConfig,
+    sink: &mut S,
+) -> ServeReport {
     let t0 = std::time::Instant::now();
     // periodic drift-refresh maintenance steals a duty-cycle fraction
     // of every stage's service time; scale 1.0 (no variation, or no
@@ -97,7 +260,8 @@ pub fn run_graph(graph: &StageGraph, sc: &ServeConfig) -> ServeReport {
         ),
     };
 
-    let stats = run(&services, EngineParams { queue_depth: sc.queue_depth }, workload);
+    let stats =
+        run_observed(&services, EngineParams { queue_depth: sc.queue_depth }, workload, None, sink);
     assemble_report(graph, sc, stats, mode, offered_qps, concurrency, t0)
 }
 
@@ -190,6 +354,7 @@ fn assemble_report(
         failover: None,
         variation: graph.variation.clone(),
         wall_seconds: t0.elapsed().as_secs_f64(),
+        meta: None,
     }
 }
 
@@ -200,10 +365,11 @@ fn assemble_report(
 /// degraded pipeline hot-swaps in after `remap_latency_us`. The
 /// returned report carries a [`FailoverReport`] with the shed counts
 /// and the before/during/after tail latency.
-fn run_failover_graph(
+fn run_failover_graph<S: EngineSink>(
     cfg: &SiamConfig,
     graph: &StageGraph,
     ctx: &SweepContext,
+    sink: &mut S,
 ) -> Result<ServeReport> {
     let t0 = std::time::Instant::now();
     let sc = &cfg.serve;
@@ -250,11 +416,12 @@ fn run_failover_graph(
     let resume_time_ns = resume.as_ref().map(|(t, _)| *t);
 
     let plan = FailoverPlan { fail_time_ns, dead_stages: dead_stages.clone(), resume };
-    let stats = run_with_failover(
+    let stats = run_observed(
         &graph.stages.iter().map(|s| s.service_ns).collect::<Vec<_>>(),
         EngineParams { queue_depth: sc.queue_depth },
         Workload::Open { arrivals },
         Some(&plan),
+        sink,
     );
 
     // windowed tails: completions before the failure, inside the

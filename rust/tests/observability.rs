@@ -1,0 +1,230 @@
+//! Observability regression gates: tracing, profiling and the meta
+//! block must be pure observers. A traced or profiled run has to stay
+//! bit-identical to the plain run, two traced runs of the same
+//! `(config, seed)` must render byte-identical Chrome traces, and every
+//! report JSON must carry a well-formed `meta` block.
+
+use siam::config::SiamConfig;
+use siam::coordinator::{self, SimReport, SweepContext};
+use siam::obs::{LogLevel, Profiler, TraceBuffer};
+use siam::serve;
+use siam::util::check_property;
+use siam::util::json::Json;
+
+/// The deterministic fields two [`SimReport`]s of the same point must
+/// share bit-for-bit (meta/wall-clock excluded — those carry host
+/// timing by design).
+fn assert_sim_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.model, b.model);
+    assert_eq!(a.num_chiplets, b.num_chiplets);
+    assert_eq!(a.total_tiles, b.total_tiles);
+    assert_eq!(a.noc_cycles, b.noc_cycles);
+    assert_eq!(a.nop_cycles, b.nop_cycles);
+    assert_eq!(a.engine_tiers, b.engine_tiers, "tier counters must be deterministic");
+    for (x, y) in [
+        (a.total.energy_pj, b.total.energy_pj),
+        (a.total.latency_ns, b.total.latency_ns),
+        (a.total.area_um2, b.total.area_um2),
+        (a.total.leakage_uw, b.total.leakage_uw),
+        (a.circuit.energy_pj, b.circuit.energy_pj),
+        (a.noc.energy_pj, b.noc.energy_pj),
+        (a.nop.energy_pj, b.nop.energy_pj),
+        (a.xbar_utilization, b.xbar_utilization),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+    }
+}
+
+/// The deterministic fields two serving reports of the same
+/// `(config, seed)` must share bit-for-bit.
+fn assert_serve_identical(a: &coordinator::ServeReport, b: &coordinator::ServeReport) {
+    assert_eq!(a.mode, b.mode);
+    assert_eq!(a.num_stages, b.num_stages);
+    assert_eq!(a.bottleneck_stage, b.bottleneck_stage);
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.dropped, b.dropped);
+    for (x, y) in [
+        (a.throughput_qps, b.throughput_qps),
+        (a.p50_ms, b.p50_ms),
+        (a.p95_ms, b.p95_ms),
+        (a.p99_ms, b.p99_ms),
+        (a.mean_ms, b.mean_ms),
+        (a.mean_utilization, b.mean_utilization),
+        (a.energy_per_inference_pj, b.energy_per_inference_pj),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+    }
+}
+
+/// Every event of a rendered trace carries the Trace Event Format's
+/// five required keys.
+fn assert_trace_wellformed(trace: &TraceBuffer) {
+    let arr = trace.to_json();
+    let events = arr.as_arr().expect("trace is a JSON array");
+    assert!(!events.is_empty(), "trace must record events");
+    for e in events {
+        for key in ["name", "ph", "ts", "pid", "tid"] {
+            assert!(e.get(key).is_some(), "event missing {key}: {}", e.to_string_pretty());
+        }
+    }
+}
+
+fn quick_serve_cfg() -> SiamConfig {
+    SiamConfig::paper_default()
+        .with_model("resnet20", "cifar10")
+        .with_serve_requests(256)
+}
+
+#[test]
+fn engine_sink_observation_is_bit_identical() {
+    // property: over random synthetic pipelines and loads, running the
+    // serve engine with a counting sink attached never perturbs the
+    // event sequence
+    use siam::serve::{poisson_arrivals, run, run_observed, EngineParams, EngineSink, Workload};
+
+    #[derive(Default)]
+    struct Counter {
+        admitted: usize,
+        completed: usize,
+    }
+    impl EngineSink for Counter {
+        fn admitted(&mut self, _t: f64, _r: u32) {
+            self.admitted += 1;
+        }
+        fn completed(&mut self, _t: f64, _r: u32, _l: f64) {
+            self.completed += 1;
+        }
+    }
+
+    check_property("engine_sink_bit_identical", 25, 0x0B5E, |rng| {
+        let stages: Vec<f64> = (0..rng.range(1, 20)).map(|_| 1.0 + rng.f64() * 300.0).collect();
+        let depth = rng.range(1, 5) as usize;
+        let seed = rng.next_u64();
+        let n = rng.range(10, 200) as usize;
+        let bottleneck = stages.iter().cloned().fold(0.0f64, f64::max);
+        let rate = (0.3 + 1.4 * rng.f64()) * 1.0e9 / bottleneck;
+        let workload = || Workload::Open {
+            arrivals: poisson_arrivals(rate, n, seed),
+        };
+        let plain = run(&stages, EngineParams { queue_depth: depth }, workload());
+        let mut sink = Counter::default();
+        let observed = run_observed(
+            &stages,
+            EngineParams { queue_depth: depth },
+            workload(),
+            None,
+            &mut sink,
+        );
+        assert_eq!(plain.completed, observed.completed);
+        assert_eq!(plain.dropped, observed.dropped);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&plain.latencies_ns), bits(&observed.latencies_ns));
+        // open loop drains: every admitted request completes
+        assert_eq!(sink.admitted, plain.completed);
+        assert_eq!(sink.completed, plain.completed);
+    });
+}
+
+#[test]
+fn traced_serve_is_bit_identical_and_byte_deterministic() {
+    let cfg = quick_serve_cfg();
+    let plain = serve::serve(&cfg).unwrap();
+    let (traced, trace_a) = serve::serve_traced(&cfg).unwrap();
+    let (_, trace_b) = serve::serve_traced(&cfg).unwrap();
+    assert_serve_identical(&plain, &traced);
+    assert_trace_wellformed(&trace_a);
+    // simulated-time timestamps only: two traced runs of the same
+    // (config, seed) render the same bytes
+    assert_eq!(trace_a.render(), trace_b.render(), "trace must be byte-deterministic");
+    // request lifecycle shows up on the serve track
+    let rendered = trace_a.render();
+    for name in ["process_name", "admit", "serve", "complete"] {
+        assert!(rendered.contains(name), "trace missing {name} events");
+    }
+}
+
+#[test]
+fn traced_failover_serve_records_fail_and_resume() {
+    let cfg = quick_serve_cfg().with_spare_chiplets(1).with_failover(64, 0, 100.0);
+    let plain = serve::serve(&cfg).unwrap();
+    let (traced, trace) = serve::serve_traced(&cfg).unwrap();
+    assert_serve_identical(&plain, &traced);
+    assert!(traced.failover.is_some(), "failover scenario must report");
+    let rendered = trace.render();
+    assert!(rendered.contains("\"fail\""), "trace missing the failure instant");
+    assert!(rendered.contains("\"resume\""), "trace missing the resume instant");
+}
+
+#[test]
+fn traced_simulate_matches_plain_and_is_byte_deterministic() {
+    let cfg = SiamConfig::paper_default().with_model("resnet20", "cifar10");
+    let plain = coordinator::simulate(&cfg).unwrap();
+    let ctx = SweepContext::new(&cfg).unwrap();
+    let mut trace_a = TraceBuffer::new();
+    let traced = coordinator::trace_point(&cfg, &ctx, &mut trace_a).unwrap();
+    assert_sim_identical(&plain, &traced);
+    assert_trace_wellformed(&trace_a);
+    let ctx_b = SweepContext::new(&cfg).unwrap();
+    let mut trace_b = TraceBuffer::new();
+    coordinator::trace_point(&cfg, &ctx_b, &mut trace_b).unwrap();
+    assert_eq!(trace_a.render(), trace_b.render(), "sim trace must be byte-deterministic");
+    // stage occupancy: compute spans plus the epoch cache instants
+    let rendered = trace_a.render();
+    for name in ["compute", "inference", "epoch"] {
+        assert!(rendered.contains(name), "sim trace missing {name} events");
+    }
+}
+
+#[test]
+fn profiled_simulate_is_bit_identical_and_records_stage_spans() {
+    let cfg = SiamConfig::paper_default().with_model("resnet20", "cifar10");
+    let plain = coordinator::simulate(&cfg).unwrap();
+    let ctx = SweepContext::new(&cfg).unwrap();
+    let prof = Profiler::new();
+    let profiled = coordinator::run_point_profiled(&cfg, &ctx, true, Some(&prof)).unwrap();
+    assert_sim_identical(&plain, &profiled);
+    let labels: Vec<String> = prof.snapshot().into_iter().map(|(l, _)| l).collect();
+    for stage in ["stage:dnn", "stage:mapping", "stage:circuit", "stage:noc", "stage:nop"] {
+        assert!(labels.iter().any(|l| l == stage), "missing span {stage} in {labels:?}");
+    }
+    let j = prof.to_json();
+    assert!(j.get("stage:circuit").and_then(|s| s.get("calls")).is_some());
+}
+
+#[test]
+fn reports_carry_a_wellformed_meta_block() {
+    let cfg = quick_serve_cfg();
+    let serve_rep = serve::serve(&cfg).unwrap();
+    let meta = serve_rep.meta.as_ref().expect("serve attaches meta");
+    assert_eq!(meta.config_fingerprint.len(), 16);
+    assert!(meta.epoch_cache.is_some() && meta.engine_tiers.is_some());
+
+    let ctx = SweepContext::new(&cfg).unwrap();
+    let mut sim_rep = coordinator::run_point_profiled(&cfg, &ctx, true, None).unwrap();
+    assert!(sim_rep.meta.is_none(), "meta is attached by the front-end");
+    coordinator::attach_meta(&cfg, &ctx, &mut sim_rep);
+
+    for (what, json) in [("serve", serve_rep.to_json()), ("simulate", sim_rep.to_json())] {
+        let m = json.get("meta").unwrap_or_else(|| panic!("{what} JSON missing meta"));
+        for key in ["schema", "config_fingerprint", "model_source", "seeds", "wall_seconds"] {
+            assert!(m.get(key).is_some(), "{what} meta missing {key}");
+        }
+        assert_eq!(m.get("schema").and_then(Json::as_str), Some("siam-meta/v1"));
+    }
+    // the same (config, seed) pins the same fingerprint
+    let again = serve::serve(&cfg).unwrap();
+    assert_eq!(
+        again.meta.unwrap().config_fingerprint,
+        meta.config_fingerprint,
+        "fingerprint must be a pure function of the config"
+    );
+}
+
+#[test]
+fn log_level_parses_and_rejects() {
+    assert_eq!(LogLevel::parse("quiet"), Some(LogLevel::Quiet));
+    assert_eq!(LogLevel::parse("normal"), Some(LogLevel::Normal));
+    assert_eq!(LogLevel::parse("verbose"), Some(LogLevel::Verbose));
+    assert_eq!(LogLevel::parse("debug"), None);
+}
