@@ -16,6 +16,11 @@
 //!   engine and the parallel memoizing engine (`SweepBuilder`), with
 //!   the rankings cross-checked point by point and the sharded epoch
 //!   cache's hit rate reported.
+//! * **Persistent cache** — the same grid swept cold (fresh
+//!   `--cache-file`) and warm (re-run against the file the cold sweep
+//!   wrote): the warm run must replay without a single epoch miss,
+//!   rank bit-identically, and beat the cold run ≥10× (full grid
+//!   only — the `--quick` grid is too small for a stable ratio).
 //!
 //! Every number is also written to `BENCH_noc.json` at the repository
 //! root (see README, "Reading BENCH_noc.json") so the perf trajectory
@@ -275,6 +280,84 @@ fn main() -> anyhow::Result<()> {
     println!("\nrankings verified bit-identical between engines.");
     bench.set("sweeps", sweeps);
     bench.set("profile", prof.to_json());
+
+    // ---- persistent epoch cache: cold vs warm re-sweep ---------------
+    println!("\n== Persistent epoch cache: cold vs warm re-sweep ==\n");
+    let cache_dir = std::env::temp_dir().join("siam_bench_cache");
+    std::fs::create_dir_all(&cache_dir)?;
+    let cache_path = cache_dir.join(format!("table3_{}.cache", std::process::id()));
+    let _ = std::fs::remove_file(&cache_path);
+    let cache_str = cache_path.to_str().expect("utf-8 temp path").to_string();
+    let base = SiamConfig::paper_default();
+    let cached_builder =
+        || SweepBuilder::new(&base).tiles(tiles).chiplet_counts(counts).cache_file(&cache_str);
+
+    let t0 = Instant::now();
+    let cold = cached_builder().run()?;
+    let cold_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let warm = cached_builder().run()?;
+    let warm_s = t0.elapsed().as_secs_f64();
+    let _ = std::fs::remove_file(&cache_path);
+
+    // correctness gates: a warm run replays — it never re-simulates and
+    // never changes a ranking
+    assert_eq!(warm.stats.epoch_misses, 0, "warm sweep re-simulated an epoch");
+    assert!(warm.stats.epochs_hydrated > 0, "warm sweep hydrated nothing");
+    // every grid point — evaluated or skipped as too small — was
+    // fingerprinted by the cold run
+    assert_eq!(
+        warm.stats.points_known,
+        tiles.len() * counts.len(),
+        "incremental bookkeeping lost points"
+    );
+    assert_eq!(cold.len(), warm.len(), "cold/warm point count differs");
+    for (c, w) in cold.points.iter().zip(&warm.points) {
+        assert_eq!(c.tiles_per_chiplet, w.tiles_per_chiplet);
+        assert_eq!(
+            c.edap().to_bits(),
+            w.edap().to_bits(),
+            "warm EDAP diverged at {} t/c",
+            c.tiles_per_chiplet
+        );
+    }
+    let warm_speedup = cold_s / warm_s.max(1e-9);
+    // perf gate: replaying epochs from disk must dominate re-simulating
+    // them. Only on the full grid — the --quick smoke grid is too small
+    // for a stable ratio.
+    if !quick {
+        assert!(
+            warm_speedup >= 10.0,
+            "warm re-sweep only {warm_speedup:.1}x over cold (gate: >=10x)"
+        );
+    }
+    let mut t = Table::new(&["run", "wall (s)", "epoch misses", "hydrated", "speedup"]);
+    t.row(&[
+        "cold".into(),
+        format!("{cold_s:.2}"),
+        cold.stats.epoch_misses.to_string(),
+        cold.stats.epochs_hydrated.to_string(),
+        "1.0x".into(),
+    ]);
+    t.row(&[
+        "warm".into(),
+        format!("{warm_s:.2}"),
+        warm.stats.epoch_misses.to_string(),
+        warm.stats.epochs_hydrated.to_string(),
+        format!("{warm_speedup:.1}x"),
+    ]);
+    t.print();
+    println!("\nwarm rankings verified bit-identical to cold.");
+    let mut co = Json::obj();
+    co.set("grid_points", cold.len())
+        .set("cold_s", cold_s)
+        .set("warm_s", warm_s)
+        .set("speedup", warm_speedup)
+        .set("cold_misses", cold.stats.epoch_misses)
+        .set("warm_misses", warm.stats.epoch_misses)
+        .set("warm_hydrated", warm.stats.epochs_hydrated)
+        .set("points_known", warm.stats.points_known);
+    bench.set("persistent_cache", co);
 
     // ---- machine-readable trajectory file ----------------------------
     let mut meta = RunMeta::for_config(&SiamConfig::paper_default());

@@ -375,6 +375,30 @@ mod tests {
     }
 
     #[test]
+    fn sweep_block_roundtrips_through_toml() {
+        let mut cfg = SiamConfig::paper_default();
+        cfg.sweep.cache_file = Some("epochs.cache".into());
+        cfg.sweep.search = SearchMode::Pareto;
+        cfg.sweep.halving_keep = 0.25;
+        assert!(cfg.validate().is_ok());
+        let text = cfg.to_toml_string().unwrap();
+        assert!(text.contains("[sweep]"), "{text}");
+        let back = SiamConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.sweep, cfg.sweep);
+        // bit-exact fixed point
+        assert_eq!(back.to_toml_string().unwrap(), text);
+    }
+
+    #[test]
+    fn default_sweep_config_writes_no_sweep_block() {
+        // the default config must serialize byte-identically to
+        // pre-cache output: no [sweep] block at all
+        let text = SiamConfig::paper_default().to_toml_string().unwrap();
+        assert!(!text.contains("sweep"), "{text}");
+        assert!(SiamConfig::paper_default().sweep.is_default());
+    }
+
+    #[test]
     fn fault_validation_bounds() {
         let base = SiamConfig::paper_default().with_total_chiplets(25);
         let mut cfg = base.clone();

@@ -254,6 +254,15 @@ fn serve_mode(v: &Value) -> Option<ServeMode> {
     }
 }
 
+fn search_mode(v: &Value) -> Option<SearchMode> {
+    match v {
+        Value::Str(s) if s == "exhaustive" => Some(SearchMode::Exhaustive),
+        Value::Str(s) if s == "pareto" => Some(SearchMode::Pareto),
+        Value::Str(s) if s == "halving" => Some(SearchMode::Halving),
+        _ => None,
+    }
+}
+
 fn u64v(v: &Value) -> Option<u64> {
     match v {
         Value::Int(i) if *i >= 0 => Some(*i as u64),
@@ -566,6 +575,14 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
     );
     take!(m, "variation.seed", cfg.variation.seed, u64v);
 
+    if let Some((v, line)) = m.remove("sweep.cache_file") {
+        cfg.sweep.cache_file = Some(
+            string(&v).ok_or(format!("line {line}: bad value for sweep.cache_file"))?,
+        );
+    }
+    take!(m, "sweep.search", cfg.sweep.search, search_mode);
+    take!(m, "sweep.halving_keep", cfg.sweep.halving_keep, Value::as_f64);
+
     // ---- [[system.chiplet_class]] blocks: fields omitted in a block
     // inherit the base [device]/[chiplet]/[system.nop] values parsed
     // above, so a bare block is the degenerate identity class.
@@ -790,6 +807,14 @@ pub fn write(cfg: &SiamConfig) -> String {
         writeln!(s, "refresh_interval_s = {}", v.refresh_interval_s).unwrap();
         writeln!(s, "seed = {}", v.seed).unwrap();
     }
+    if !cfg.sweep.is_default() {
+        writeln!(s, "\n[sweep]").unwrap();
+        if let Some(path) = &cfg.sweep.cache_file {
+            writeln!(s, "cache_file = \"{path}\"").unwrap();
+        }
+        writeln!(s, "search = \"{}\"", cfg.sweep.search.as_str()).unwrap();
+        writeln!(s, "halving_keep = {}", cfg.sweep.halving_keep).unwrap();
+    }
     s
 }
 
@@ -919,6 +944,19 @@ mod tests {
         assert_eq!(cfg.chiplet.tiles_per_chiplet, 36);
         assert_eq!(cfg.system.structure, ChipletStructure::Homogeneous);
         assert_eq!(cfg.system.total_chiplets, Some(64));
+    }
+
+    #[test]
+    fn sweep_section_applies() {
+        let cfg = apply(
+            SiamConfig::default(),
+            "[sweep]\ncache_file = \"epochs.cache\"\nsearch = \"halving\"\nhalving_keep = 0.25\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.sweep.cache_file.as_deref(), Some("epochs.cache"));
+        assert_eq!(cfg.sweep.search, SearchMode::Halving);
+        assert_eq!(cfg.sweep.halving_keep, 0.25);
+        assert!(apply(SiamConfig::default(), "[sweep]\nsearch = \"random\"\n").is_err());
     }
 
     #[test]

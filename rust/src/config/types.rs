@@ -617,6 +617,78 @@ impl Default for ServeConfig {
     }
 }
 
+/// Grid traversal strategy of the design-space sweep (`[sweep] search`).
+///
+/// The pruned modes evaluate a subset of the grid through the full
+/// engines, certified by a cheap closed-form lower-bound pass, and
+/// provably return the same best point as exhaustion for the active
+/// figure of merit (see `docs/CACHING.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SearchMode {
+    /// Evaluate every grid point through the full pipeline (default).
+    #[default]
+    Exhaustive,
+    /// Pareto-front pruning over (latency, energy, area): fully evaluate
+    /// the cheap-pass front, then discard only points whose cheap lower
+    /// bound is strictly dominated in all three axes by an evaluated
+    /// point's true vector.
+    Pareto,
+    /// Successive halving: rank all points by cheap lower-bound score,
+    /// promote the best `halving_keep` fraction to full evaluation, then
+    /// promote every survivor whose bound still undercuts the best full
+    /// score (the round that makes the argmax exact).
+    Halving,
+}
+
+impl SearchMode {
+    /// The mode's TOML / CLI spelling (`[sweep] search = "..."`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SearchMode::Exhaustive => "exhaustive",
+            SearchMode::Pareto => "pareto",
+            SearchMode::Halving => "halving",
+        }
+    }
+}
+
+/// Design-space sweep block (`[sweep]`): persistent epoch cache and
+/// search strategy of `SweepBuilder`. The defaults are inert — no cache
+/// file, exhaustive search — and the block is omitted from serialized
+/// configs when untouched, keeping default TOML output byte-stable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConfig {
+    /// Persistent epoch-cache file (`--cache-file`). Created on first
+    /// use; later sweeps hydrate the in-memory cache from it and append
+    /// what they computed. `None` = in-memory caching only.
+    pub cache_file: Option<String>,
+    /// Grid traversal strategy (see [`SearchMode`]).
+    pub search: SearchMode,
+    /// Fraction of cheap-ranked candidates the halving search promotes
+    /// to full evaluation per round, in (0, 1].
+    pub halving_keep: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            cache_file: None,
+            search: SearchMode::Exhaustive,
+            halving_keep: 0.5,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// True when every field still holds its default: no cache file,
+    /// exhaustive search, the stock promotion fraction. Such a block is
+    /// not serialized, so pre-sweep configs round-trip byte-identically.
+    pub fn is_default(&self) -> bool {
+        self.cache_file.is_none()
+            && self.search == SearchMode::Exhaustive
+            && self.halving_keep == 0.5
+    }
+}
+
 /// Complete SIAM configuration (all Table-2 blocks).
 #[derive(Debug, Clone, Default)]
 pub struct SiamConfig {
@@ -636,4 +708,6 @@ pub struct SiamConfig {
     pub fault: FaultConfig,
     /// Analog device-variation block (defaults perturb nothing).
     pub variation: VariationConfig,
+    /// Design-space sweep block (defaults change nothing).
+    pub sweep: SweepConfig,
 }

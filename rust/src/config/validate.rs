@@ -334,6 +334,18 @@ impl SiamConfig {
                     .into(),
             );
         }
+        if !(self.sweep.halving_keep.is_finite()
+            && self.sweep.halving_keep > 0.0
+            && self.sweep.halving_keep <= 1.0)
+        {
+            return err(format!(
+                "sweep halving_keep {} must be finite and in (0, 1]",
+                self.sweep.halving_keep
+            ));
+        }
+        if self.sweep.cache_file.as_deref() == Some("") {
+            return err("sweep cache_file must be a non-empty path".into());
+        }
         if self.serve.fail_at_request.is_some() {
             if self.serve.mode != ServeMode::Open {
                 return err("serve fail_at_request requires mode = \"open\"".into());
@@ -447,6 +459,23 @@ mod tests {
         cfg.variation.drift_time_s = 0.0;
         assert!(cfg.validate().is_err());
         cfg.variation.drift_time_s = 3600.0;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn sweep_block_checked() {
+        let mut cfg = SiamConfig::default();
+        cfg.sweep.halving_keep = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.sweep.halving_keep = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.sweep.halving_keep = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.sweep.halving_keep = 1.0;
+        assert!(cfg.validate().is_ok());
+        cfg.sweep.cache_file = Some("".into());
+        assert!(cfg.validate().is_err());
+        cfg.sweep.cache_file = Some("epochs.cache".into());
         assert!(cfg.validate().is_ok());
     }
 

@@ -17,11 +17,23 @@
 //! reads, so the parallel engine is bit-identical to the serial one
 //! (asserted by the regression tests below and measured by
 //! `benches/table3_simtime.rs`).
+//!
+//! Two certified pruned search modes ride on the same engine
+//! ([`SearchMode`]): Pareto-front pruning over (latency, energy, area)
+//! and successive halving. Both first score the whole grid with a
+//! closed-form lower-bound pass ([`run_point_bound`] — no packet
+//! simulation, no cache traffic) and only skip candidates the bound
+//! rules out, so both provably return the same best point as
+//! exhaustion. A sweep can also persist its epoch results across
+//! processes through an append-only [`EpochStore`] file (`[sweep]
+//! cache_file` / `--cache-file`), hydrating the in-memory cache on the
+//! next run and recording per-point config fingerprints for
+//! incremental re-sweeps (see `docs/CACHING.md`).
 
-use super::pipeline::{run_point_profiled, SweepContext};
+use super::pipeline::{run_point_bound, run_point_profiled, SweepContext};
 use super::{ServeReport, SimReport};
-use crate::config::{ChipletStructure, ServeMode, SiamConfig};
-use crate::noc::TierCounts;
+use crate::config::{ChipletStructure, SearchMode, ServeMode, SiamConfig};
+use crate::noc::{EpochStore, TierCounts};
 use crate::obs::{self, Profiler};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -169,6 +181,15 @@ pub struct SweepStats {
     /// Grid points evaluated per second (skipped points included —
     /// they cost a mapping attempt too).
     pub points_per_sec: f64,
+    /// Epochs hydrated into the in-memory cache from the persistent
+    /// store before evaluation began (0 without a cache file). Warm
+    /// replays count as hits, not misses — this field is what tells a
+    /// warm run apart from a miraculously lucky cold one.
+    pub epochs_hydrated: u64,
+    /// Grid points whose config fingerprints were already in the
+    /// persistent store, i.e. points a previous run had explored
+    /// (0 without a cache file).
+    pub points_known: usize,
 }
 
 impl SweepStats {
@@ -250,10 +271,13 @@ pub struct SweepBuilder {
     class_splits: Vec<Vec<Option<usize>>>,
     class_xbars: Vec<Vec<usize>>,
     fom: FigureOfMerit,
+    search: SearchMode,
+    halving_keep: f64,
     threads: Option<usize>,
     budget: Option<usize>,
     qos_qps: Option<f64>,
     profiler: Option<Arc<Profiler>>,
+    cache: Option<Arc<EpochStore>>,
 }
 
 /// One coordinate of the sweep grid.
@@ -277,10 +301,13 @@ impl SweepBuilder {
             class_splits: Vec::new(),
             class_xbars: Vec::new(),
             fom: FigureOfMerit::default(),
+            search: base.sweep.search,
+            halving_keep: base.sweep.halving_keep,
             threads: None,
             budget: None,
             qos_qps: None,
             profiler: None,
+            cache: None,
         }
     }
 
@@ -319,6 +346,45 @@ impl SweepBuilder {
     /// Set the ranking key (default: EDAP).
     pub fn figure_of_merit(mut self, fom: FigureOfMerit) -> SweepBuilder {
         self.fom = fom;
+        self
+    }
+
+    /// Select the grid traversal strategy (default: the base config's
+    /// `[sweep] search`, itself defaulting to exhaustive). The pruned
+    /// modes — [`SearchMode::Pareto`] and [`SearchMode::Halving`] —
+    /// push fewer points through the full engines but provably return
+    /// the same [`SweepResult::best`] as exhaustion (the certificates
+    /// live in `docs/CACHING.md` and the method docs below); only
+    /// fully evaluated points appear in [`SweepResult::points`].
+    pub fn search(mut self, mode: SearchMode) -> SweepBuilder {
+        self.search = mode;
+        self
+    }
+
+    /// Fraction of cheap-ranked candidates the halving search promotes
+    /// to full evaluation in its first round, in (0, 1] (default: the
+    /// base config's `[sweep] halving_keep`, itself defaulting to 0.5).
+    pub fn halving_keep(mut self, keep: f64) -> SweepBuilder {
+        self.halving_keep = keep;
+        self
+    }
+
+    /// Persist epochs across runs in the append-only cache file at
+    /// `path` (created on first use): the sweep hydrates the in-memory
+    /// cache from it before evaluating and appends whatever it had to
+    /// compute afterwards, alongside every grid point's config
+    /// fingerprint (the incremental re-sweep marker).
+    pub fn cache_file(mut self, path: &str) -> SweepBuilder {
+        self.base.sweep.cache_file = Some(path.to_string());
+        self
+    }
+
+    /// Share an already-open [`EpochStore`] handle instead of opening
+    /// `[sweep] cache_file` — several sweeps (or threads) appending
+    /// through one handle interleave at batch granularity and never
+    /// record an epoch or point fingerprint twice.
+    pub fn cache_store(mut self, store: Arc<EpochStore>) -> SweepBuilder {
+        self.cache = Some(store);
         self
     }
 
@@ -468,67 +534,281 @@ impl SweepBuilder {
                 );
             }
         }
+        match self.search {
+            SearchMode::Exhaustive => {}
+            SearchMode::Halving => {
+                if self.fom == FigureOfMerit::QosP99 {
+                    anyhow::bail!(
+                        "halving search cannot lower-bound serving p99; \
+                         QoS sweeps must stay exhaustive"
+                    );
+                }
+                if !(self.halving_keep.is_finite()
+                    && self.halving_keep > 0.0
+                    && self.halving_keep <= 1.0)
+                {
+                    anyhow::bail!(
+                        "halving_keep must be finite and in (0, 1], got {}",
+                        self.halving_keep
+                    );
+                }
+            }
+            SearchMode::Pareto => {
+                let supported = matches!(
+                    self.fom,
+                    FigureOfMerit::Edap
+                        | FigureOfMerit::Edp
+                        | FigureOfMerit::Energy
+                        | FigureOfMerit::Latency
+                        | FigureOfMerit::Area
+                        | FigureOfMerit::InferencesPerJoule
+                );
+                if !supported {
+                    anyhow::bail!(
+                        "pareto search prunes on the (latency, energy, area) axes and \
+                         supports only figures of merit monotone in them; \
+                         {:?} is not — use exhaustive search",
+                        self.fom
+                    );
+                }
+            }
+        }
         let t0 = std::time::Instant::now();
         let grid = self.grid();
         let ctx = SweepContext::new(&self.base)?;
+        let store = match (&self.cache, &self.base.sweep.cache_file) {
+            (Some(s), _) => Some(s.clone()),
+            (None, Some(path)) => {
+                let (s, loaded) = EpochStore::open(path)?;
+                obs::log::verbose(&format!(
+                    "sweep: cache {path}: {} epoch(s), {} point(s) loaded",
+                    loaded.epochs_loaded, loaded.points_loaded
+                ));
+                Some(Arc::new(s))
+            }
+            (None, None) => None,
+        };
+        if let Some(s) = &store {
+            s.hydrate(ctx.epoch_cache());
+        }
         let threads = self
             .threads
             .unwrap_or_else(default_threads)
             .min(grid.len().max(1));
         let prof = self.profiler.as_deref();
         obs::log::verbose(&format!(
-            "sweep: {} grid point(s) on {threads} thread(s)",
-            grid.len()
+            "sweep: {} grid point(s) on {threads} thread(s), {:?} search",
+            grid.len(),
+            self.search
         ));
 
-        if threads <= 1 {
-            let mut points = Vec::with_capacity(grid.len());
+        let indexed = match self.search {
+            SearchMode::Exhaustive => {
+                let all: Vec<usize> = (0..grid.len()).collect();
+                self.eval_indices(&grid, &all, &ctx, threads, prof)?
+            }
+            SearchMode::Halving => self.run_halving(&grid, &ctx, threads, prof)?,
+            SearchMode::Pareto => self.run_pareto(&grid, &ctx, threads, prof)?,
+        };
+        let points: Vec<SweepPoint> = indexed.into_iter().map(|(_, p)| p).collect();
+
+        let mut points_known = 0usize;
+        if let Some(s) = &store {
+            s.absorb(ctx.epoch_cache())?;
             for gp in &grid {
-                if let Some(p) = eval_point(&self.base, &ctx, gp, self.qos_qps, prof)? {
-                    points.push(p);
+                // the [sweep] block never changes a point's result, so
+                // strip it before fingerprinting: switching search mode
+                // or cache path must not un-know explored points
+                let mut pc = point_config(&self.base, gp);
+                pc.sweep = Default::default();
+                if !s.record_point(crate::obs::meta::point_fingerprint(&pc))? {
+                    points_known += 1;
                 }
             }
-            return Ok(SweepResult {
-                stats: stats_of(&ctx, &points, grid.len(), t0),
-                points,
-                fom: self.fom,
-            });
         }
-
-        // Work-stealing pool: workers claim the next unevaluated grid
-        // index from a shared counter and write into their point's slot,
-        // so results land in grid order no matter who finishes when.
-        // (`None` until claimed; `Ok(None)` marks a skipped point.)
-        type PointSlot = Mutex<Option<Result<Option<SweepPoint>>>>;
-        let next = AtomicUsize::new(0);
-        let slots: Vec<PointSlot> = grid.iter().map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..threads {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= grid.len() {
-                        break;
-                    }
-                    let r = eval_point(&self.base, &ctx, &grid[i], self.qos_qps, prof);
-                    *slots[i].lock().unwrap() = Some(r);
-                });
-            }
-        });
-
-        let mut points = Vec::with_capacity(grid.len());
-        for slot in slots {
-            match slot.into_inner().unwrap() {
-                Some(Ok(Some(p))) => points.push(p),
-                Some(Ok(None)) => {} // skipped: architecture too small
-                Some(Err(e)) => return Err(e),
-                None => unreachable!("every grid index is claimed by a worker"),
-            }
-        }
+        let mut stats = stats_of(&ctx, &points, grid.len(), t0);
+        stats.points_known = points_known;
         Ok(SweepResult {
-            stats: stats_of(&ctx, &points, grid.len(), t0),
+            stats,
             points,
             fom: self.fom,
         })
+    }
+
+    /// Fully evaluate the grid points at `which` (ascending grid
+    /// indices) and return the survivors tagged with their grid index.
+    /// `threads <= 1` is the in-order serial reference path; otherwise
+    /// a work-stealing pool claims indices from a shared counter and
+    /// results land in index order no matter who finishes when.
+    fn eval_indices(
+        &self,
+        grid: &[GridPoint],
+        which: &[usize],
+        ctx: &SweepContext,
+        threads: usize,
+        prof: Option<&Profiler>,
+    ) -> Result<Vec<(usize, SweepPoint)>> {
+        let threads = threads.min(which.len().max(1));
+        if threads <= 1 {
+            let mut points = Vec::with_capacity(which.len());
+            for &gi in which {
+                if let Some(p) = eval_point(&self.base, ctx, &grid[gi], self.qos_qps, prof)? {
+                    points.push((gi, p));
+                }
+            }
+            return Ok(points);
+        }
+        let outcomes = pooled(threads, which.len(), |i| {
+            eval_point(&self.base, ctx, &grid[which[i]], self.qos_qps, prof)
+        });
+        let mut points = Vec::with_capacity(which.len());
+        for (j, outcome) in outcomes.into_iter().enumerate() {
+            match outcome {
+                Ok(Some(p)) => points.push((which[j], p)),
+                Ok(None) => {} // skipped: architecture too small
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(points)
+    }
+
+    /// The cheap closed-form pass over the whole grid
+    /// ([`run_point_bound`]): one lower-bound report per grid index,
+    /// `None` where the architecture cannot fit the DNN — the same skip
+    /// path full evaluation takes, so pruned searches and exhaustion
+    /// always agree on which points exist.
+    fn cheap_pass(
+        &self,
+        grid: &[GridPoint],
+        ctx: &SweepContext,
+        threads: usize,
+        prof: Option<&Profiler>,
+    ) -> Result<Vec<Option<SimReport>>> {
+        let outcomes = pooled(threads.min(grid.len().max(1)), grid.len(), |i| {
+            let cfg = point_config(&self.base, &grid[i]);
+            let run = || run_point_bound(&cfg, ctx);
+            let outcome = match prof {
+                Some(p) => p.time("sweep:bound", run),
+                None => run(),
+            };
+            match outcome {
+                Ok(r) => Ok(Some(r)),
+                Err(e) if is_too_small(&e) => Ok(None),
+                Err(e) => Err(e),
+            }
+        });
+        outcomes.into_iter().collect()
+    }
+
+    /// Successive halving with a certificate. Round one ranks every
+    /// feasible point by its cheap lower-bound score and fully
+    /// evaluates the best `halving_keep` fraction; round two fully
+    /// evaluates every remaining point whose bound does not exceed the
+    /// best full score seen. The exhaustive argmin's bound never
+    /// exceeds its true score, and its true score never exceeds the
+    /// best evaluated one — so it is always promoted, and
+    /// [`SweepResult::best`] equals exhaustion's (ties included: the
+    /// threshold is non-strict, and ranking tie-breaks stay in grid
+    /// order because results merge back in grid order).
+    fn run_halving(
+        &self,
+        grid: &[GridPoint],
+        ctx: &SweepContext,
+        threads: usize,
+        prof: Option<&Profiler>,
+    ) -> Result<Vec<(usize, SweepPoint)>> {
+        let cheap = self.cheap_pass(grid, ctx, threads, prof)?;
+        let mut order: Vec<(f64, usize)> = cheap
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.as_ref().map(|r| (self.fom.score(r), i)))
+            .collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        if order.is_empty() {
+            return Ok(Vec::new());
+        }
+        let k = ((order.len() as f64 * self.halving_keep).ceil() as usize).clamp(1, order.len());
+        let mut promoted: Vec<usize> = order[..k].iter().map(|&(_, i)| i).collect();
+        promoted.sort_unstable();
+        let mut points = self.eval_indices(grid, &promoted, ctx, threads, prof)?;
+        let best = points
+            .iter()
+            .map(|(_, p)| self.fom.score_point(p))
+            .fold(f64::INFINITY, f64::min);
+        let mut second: Vec<usize> = order[k..]
+            .iter()
+            .filter(|&&(bound, _)| bound <= best)
+            .map(|&(_, i)| i)
+            .collect();
+        second.sort_unstable();
+        obs::log::verbose(&format!(
+            "sweep: halving promoted {k} + {} of {} candidate(s)",
+            second.len(),
+            order.len()
+        ));
+        points.extend(self.eval_indices(grid, &second, ctx, threads, prof)?);
+        points.sort_by_key(|&(i, _)| i);
+        Ok(points)
+    }
+
+    /// Pareto-front pruning with a certificate. Fully evaluate every
+    /// point on the cheap-pass (latency, energy, area) front, then
+    /// discard a remaining point only when an evaluated point's *true*
+    /// vector strictly dominates its cheap lower-bound vector in all
+    /// three axes: the bound sits below the truth componentwise, so the
+    /// discarded point is strictly dominated for real, and every
+    /// supported figure of merit strictly improves under all-axis
+    /// domination — no discarded point can tie or beat the evaluated
+    /// best. Everything not discarded is fully evaluated too.
+    fn run_pareto(
+        &self,
+        grid: &[GridPoint],
+        ctx: &SweepContext,
+        threads: usize,
+        prof: Option<&Profiler>,
+    ) -> Result<Vec<(usize, SweepPoint)>> {
+        let cheap = self.cheap_pass(grid, ctx, threads, prof)?;
+        let bounds: Vec<Option<[f64; 3]>> =
+            cheap.iter().map(|r| r.as_ref().map(pareto_axes)).collect();
+        let feasible: Vec<usize> = (0..grid.len()).filter(|&i| bounds[i].is_some()).collect();
+        // the cheap front: feasible points not strictly dominated in
+        // all three axes by another cheap vector (equal vectors never
+        // dominate each other, so exact ties all stay)
+        let front: Vec<usize> = feasible
+            .iter()
+            .copied()
+            .filter(|&i| {
+                let b = bounds[i].unwrap();
+                !feasible
+                    .iter()
+                    .any(|&j| j != i && dominates(bounds[j].unwrap(), b))
+            })
+            .collect();
+        let mut points = self.eval_indices(grid, &front, ctx, threads, prof)?;
+        let truths: Vec<[f64; 3]> =
+            points.iter().map(|(_, p)| pareto_axes(&p.report)).collect();
+        let mut on_front = vec![false; grid.len()];
+        for &i in &front {
+            on_front[i] = true;
+        }
+        let rest: Vec<usize> = feasible
+            .iter()
+            .copied()
+            .filter(|&i| !on_front[i])
+            .filter(|&i| {
+                let b = bounds[i].unwrap();
+                !truths.iter().any(|&t| dominates(t, b))
+            })
+            .collect();
+        obs::log::verbose(&format!(
+            "sweep: pareto evaluated {} front + {} undominated of {} candidate(s)",
+            front.len(),
+            rest.len(),
+            feasible.len()
+        ));
+        points.extend(self.eval_indices(grid, &rest, ctx, threads, prof)?);
+        points.sort_by_key(|&(i, _)| i);
+        Ok(points)
     }
 }
 
@@ -551,6 +831,8 @@ fn stats_of(
         epoch_hits: cache.hits(),
         epoch_misses: cache.misses(),
         epochs_cached: cache.len(),
+        epochs_hydrated: cache.hydrated(),
+        points_known: 0,
         shards: cache.shard_stats(),
         tiers,
         wall_seconds,
@@ -569,6 +851,92 @@ fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Run `f` over `0..n` on a work-stealing pool and return the results
+/// in index order. Workers claim the next index from a shared counter
+/// and write into that index's slot, so the output order is
+/// independent of scheduling — the serial/parallel bit-identity of
+/// every search mode rests on this.
+fn pooled<T: Send, F: Fn(usize) -> T + Sync>(threads: usize, n: usize, f: F) -> Vec<T> {
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .unwrap()
+                .expect("every index is claimed by a worker")
+        })
+        .collect()
+}
+
+/// The configuration a grid point denotes: the base config with the
+/// point's tile count, chiplet budget, class split, and crossbar sizes
+/// applied. Both the cheap bound pass and full evaluation derive their
+/// config here, so they can never disagree about what a point means.
+fn point_config(base: &SiamConfig, gp: &GridPoint) -> SiamConfig {
+    let mut cfg = match gp.count {
+        Some(c) => base
+            .clone()
+            .with_tiles_per_chiplet(gp.tiles)
+            .with_total_chiplets(c),
+        None => base
+            .clone()
+            .with_tiles_per_chiplet(gp.tiles)
+            .with_chiplet_structure(ChipletStructure::Custom),
+    };
+    if let Some(split) = &gp.split {
+        for (class, budget) in cfg.system.chiplet_classes.iter_mut().zip(split) {
+            class.count = *budget;
+        }
+    }
+    if let Some(xbars) = &gp.xbars {
+        for (class, &n) in cfg.system.chiplet_classes.iter_mut().zip(xbars) {
+            class.xbar_rows = n;
+            class.xbar_cols = n;
+        }
+    }
+    cfg
+}
+
+/// Whether `e` is the "architecture cannot fit the DNN" mapping error
+/// — the one sweep skip path (Algorithm 1's error path).
+fn is_too_small(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<crate::mapping::MappingError>()
+        .is_some_and(|m| matches!(m, crate::mapping::MappingError::ExceedsChiplets { .. }))
+}
+
+/// The three pruning axes of pareto search, in a fixed order:
+/// end-to-end latency (ns), total energy (pJ), total area (um^2).
+fn pareto_axes(report: &SimReport) -> [f64; 3] {
+    [
+        report.total.latency_ns,
+        report.total.energy_pj,
+        report.total.area_um2,
+    ]
+}
+
+/// Strict all-axis Pareto domination: `a` beats `b` in *every*
+/// coordinate. Deliberately strict — equal vectors never dominate each
+/// other, so exact ties survive pruning and dominance-based discards
+/// can never drop a point tied with the best.
+fn dominates(a: [f64; 3], b: [f64; 3]) -> bool {
+    a.iter().zip(b.iter()).all(|(x, y)| x < y)
+}
+
 /// Evaluate one grid point; `Ok(None)` means the point is skipped
 /// because the architecture cannot fit the DNN (homogeneous overflow or
 /// an infeasible class split). With a QoS target the point is evaluated
@@ -583,24 +951,7 @@ fn eval_point(
     prof: Option<&Profiler>,
 ) -> Result<Option<SweepPoint>> {
     let (tiles, count) = (gp.tiles, gp.count);
-    let mut cfg = match count {
-        Some(c) => base.clone().with_tiles_per_chiplet(tiles).with_total_chiplets(c),
-        None => base
-            .clone()
-            .with_tiles_per_chiplet(tiles)
-            .with_chiplet_structure(ChipletStructure::Custom),
-    };
-    if let Some(split) = &gp.split {
-        for (class, budget) in cfg.system.chiplet_classes.iter_mut().zip(split) {
-            class.count = *budget;
-        }
-    }
-    if let Some(xbars) = &gp.xbars {
-        for (class, &n) in cfg.system.chiplet_classes.iter_mut().zip(xbars) {
-            class.xbar_rows = n;
-            class.xbar_cols = n;
-        }
-    }
+    let cfg = point_config(base, gp);
     let evaluate = || match qos_qps {
         None => run_point_profiled(&cfg, ctx, false, prof).map(|report| (report, None)),
         Some(qps) => {
@@ -629,14 +980,7 @@ fn eval_point(
         })),
         // homogeneous architecture too small: skip the point
         // (Algorithm 1's error path)
-        Err(e)
-            if e.downcast_ref::<crate::mapping::MappingError>()
-                .is_some_and(|m| {
-                    matches!(m, crate::mapping::MappingError::ExceedsChiplets { .. })
-                }) =>
-        {
-            Ok(None)
-        }
+        Err(e) if is_too_small(&e) => Ok(None),
         Err(e) => Err(e),
     }
 }
@@ -1047,5 +1391,187 @@ mod tests {
         let s_with = m.system_survival(n2, 2, per_die2);
         let s_without = m.system_survival(n2, 0, per_die2);
         assert!(s_with > s_without, "{s_with} vs {s_without}");
+    }
+
+    /// Figures of merit both pruned search modes support.
+    const PRUNABLE: [FigureOfMerit; 6] = [
+        FigureOfMerit::Edap,
+        FigureOfMerit::Edp,
+        FigureOfMerit::Energy,
+        FigureOfMerit::Latency,
+        FigureOfMerit::Area,
+        FigureOfMerit::InferencesPerJoule,
+    ];
+
+    #[test]
+    fn pruned_searches_match_the_exhaustive_argmax() {
+        // the certificate in practice: on the paper-default grid both
+        // pruned modes must return exhaustion's best point, bit for
+        // bit, for every figure of merit they support
+        let base = SiamConfig::paper_default();
+        let tiles = [4, 9, 16, 25, 36];
+        let exhaustive = SweepBuilder::new(&base)
+            .tiles(&tiles)
+            .chiplet_counts(&[None])
+            .run()
+            .unwrap();
+        assert_eq!(exhaustive.len(), tiles.len());
+        for fom in PRUNABLE {
+            let want = SweepResult {
+                points: exhaustive.points.clone(),
+                stats: SweepStats::default(),
+                fom,
+            };
+            let want = want.best().unwrap();
+            for mode in [SearchMode::Pareto, SearchMode::Halving] {
+                let got = SweepBuilder::new(&base)
+                    .tiles(&tiles)
+                    .chiplet_counts(&[None])
+                    .figure_of_merit(fom)
+                    .search(mode)
+                    .run()
+                    .unwrap();
+                assert!(
+                    !got.points.is_empty() && got.len() <= tiles.len(),
+                    "{mode:?} must return a non-empty subset"
+                );
+                let best = got.best().unwrap();
+                assert_eq!(best.tiles_per_chiplet, want.tiles_per_chiplet, "{fom:?} {mode:?}");
+                assert_reports_identical(&best.report, &want.report);
+            }
+        }
+        // halving additionally covers YieldCost (cheap score is exact)
+        let want = SweepResult {
+            points: exhaustive.points.clone(),
+            stats: SweepStats::default(),
+            fom: FigureOfMerit::YieldCost,
+        };
+        let halved = SweepBuilder::new(&base)
+            .tiles(&tiles)
+            .chiplet_counts(&[None])
+            .figure_of_merit(FigureOfMerit::YieldCost)
+            .search(SearchMode::Halving)
+            .run()
+            .unwrap();
+        assert_eq!(
+            halved.best().unwrap().tiles_per_chiplet,
+            want.best().unwrap().tiles_per_chiplet
+        );
+    }
+
+    #[test]
+    fn pruned_searches_are_bit_identical_serial_vs_parallel() {
+        // pruning decisions depend only on deterministic bound scores,
+        // so thread count must not change which points survive or what
+        // they contain
+        let base = SiamConfig::paper_default();
+        for mode in [SearchMode::Pareto, SearchMode::Halving] {
+            let builder = SweepBuilder::new(&base)
+                .tiles(&[4, 9, 16])
+                .chiplet_counts(&[None])
+                .search(mode);
+            let serial = builder.clone().serial().run().unwrap();
+            let parallel = builder.run().unwrap();
+            assert_eq!(serial.len(), parallel.len(), "{mode:?}");
+            for (s, p) in serial.points.iter().zip(&parallel.points) {
+                assert_eq!(s.tiles_per_chiplet, p.tiles_per_chiplet);
+                assert_reports_identical(&s.report, &p.report);
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_searches_reject_unsupported_figures_of_merit() {
+        let base = SiamConfig::paper_default();
+        // pareto prunes on (latency, energy, area); anything else errs
+        for fom in [
+            FigureOfMerit::YieldCost,
+            FigureOfMerit::VariationAware,
+            FigureOfMerit::QosP99,
+        ] {
+            let err = SweepBuilder::new(&base)
+                .tiles(&[9])
+                .figure_of_merit(fom)
+                .search(SearchMode::Pareto)
+                .run();
+            assert!(err.is_err(), "pareto must reject {fom:?}");
+        }
+        // halving cannot lower-bound serving percentiles
+        let err = SweepBuilder::new(&base)
+            .tiles(&[9])
+            .qos(100.0)
+            .search(SearchMode::Halving)
+            .run();
+        assert!(err.is_err(), "halving must reject QoS sweeps");
+        // and its keep fraction must be a real fraction
+        let err = SweepBuilder::new(&base)
+            .tiles(&[9])
+            .search(SearchMode::Halving)
+            .halving_keep(0.0)
+            .run();
+        assert!(err.is_err(), "halving_keep(0.0) must be rejected");
+    }
+
+    #[test]
+    fn cheap_bounds_sit_below_every_supported_score() {
+        // the soundness invariant both certificates rest on: the
+        // closed-form pass never scores a point above its true score,
+        // on any supported figure of merit, and its pareto axes sit
+        // componentwise at or below the truth
+        let base = SiamConfig::paper_default();
+        let b = SweepBuilder::new(&base).tiles(&[4, 9, 16, 25]).chiplet_counts(&[None]);
+        let grid = b.grid();
+        let ctx = SweepContext::new(&base).unwrap();
+        let cheap = b.cheap_pass(&grid, &ctx, 1, None).unwrap();
+        let full = sweep_serial(&base, &[4, 9, 16, 25], &[None]).unwrap();
+        assert_eq!(cheap.len(), full.len());
+        for (bound, point) in cheap.iter().zip(&full) {
+            let bound = bound.as_ref().expect("every paper-default point fits");
+            let truth = &point.report;
+            for fom in PRUNABLE {
+                let (lb, s) = (fom.score(bound), fom.score(truth));
+                assert!(lb <= s, "{fom:?}: bound {lb} above true score {s}");
+            }
+            let (lb, t) = (pareto_axes(bound), pareto_axes(truth));
+            for k in 0..3 {
+                assert!(lb[k] <= t[k], "axis {k}: {} above {}", lb[k], t[k]);
+            }
+            // yield cost ignores timing, so the bound is exact
+            let fom = FigureOfMerit::YieldCost;
+            assert_eq!(fom.score(bound).to_bits(), fom.score(truth).to_bits());
+        }
+    }
+
+    #[test]
+    fn a_persistent_cache_file_makes_the_second_sweep_warm() {
+        let dir = std::env::temp_dir().join("siam_dse_cache_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("warm_{}.cache", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let path = path.to_str().unwrap().to_string();
+        let base = SiamConfig::paper_default();
+        let run = || {
+            SweepBuilder::new(&base)
+                .tiles(&[9, 16])
+                .chiplet_counts(&[None])
+                .cache_file(&path)
+                .run()
+                .unwrap()
+        };
+        let cold = run();
+        assert_eq!(cold.stats.epochs_hydrated, 0, "nothing to hydrate cold");
+        assert_eq!(cold.stats.points_known, 0, "no point is known cold");
+        assert!(cold.stats.epoch_misses > 0, "a cold sweep simulates");
+        let warm = run();
+        assert!(warm.stats.epochs_hydrated > 0, "warm runs hydrate from disk");
+        assert_eq!(warm.stats.points_known, 2, "both points were recorded");
+        assert_eq!(warm.stats.epoch_misses, 0, "a warm sweep only replays");
+        assert!(warm.stats.epoch_hits > 0);
+        // and warmth never changes results
+        assert_eq!(cold.len(), warm.len());
+        for (c, w) in cold.points.iter().zip(&warm.points) {
+            assert_reports_identical(&c.report, &w.report);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

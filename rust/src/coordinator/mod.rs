@@ -23,7 +23,7 @@ pub use dse::{
     SweepStats,
 };
 pub use pipeline::{attach_meta, run_point_profiled, trace_point, SweepContext};
-pub use report::{FailoverReport, ServeReport, SimReport};
+pub use report::{sweep_json, FailoverReport, ServeReport, SimReport};
 pub use sensitivity::{layer_cycles_vs_nop_speedup, layer_latency_vs_chiplets, LayerPoint};
 
 use crate::config::SiamConfig;

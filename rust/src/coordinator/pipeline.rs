@@ -310,6 +310,43 @@ pub fn run_point_profiled(
     Ok(assemble_point(cfg, &dnn, &map, &traffic, circuit, noc, nop, dram, fault, variation, t0))
 }
 
+/// Cheap closed-form-tier evaluation of one design point — the scoring
+/// pass behind the pruned search modes of [`crate::coordinator::dse`]
+/// (`SearchMode::Pareto` / `SearchMode::Halving`).
+///
+/// Identical staging to [`run_point`] (validation, mapping, circuit,
+/// DRAM, fault and variation handling, metric assembly) except that the
+/// NoC/NoP engines are replaced by their analytic bound evaluators
+/// ([`crate::noc::evaluate_mapped_bound`] /
+/// [`crate::nop::evaluate_mapped_bound`]). Every epoch-independent
+/// figure — engine energies, areas, leakage powers, packet and
+/// flit-hop counts — is **bit-identical** to the full pipeline, while
+/// every latency/cycle figure (and anything derived from latency, such
+/// as leakage *energy* inside the totals) is a provable lower bound.
+/// Nothing touches the shared epoch cache and no engine tiers are
+/// counted, so cheap passes never perturb full evaluations.
+pub fn run_point_bound(cfg: &SiamConfig, ctx: &SweepContext) -> Result<SimReport> {
+    let t0 = std::time::Instant::now();
+    cfg.validate()?;
+    let dnn = stage_dnn(cfg, ctx)?;
+    let stats = if ctx.matches_model(cfg) {
+        ctx.stats
+    } else {
+        dnn.stats()
+    };
+    let (map, placement, traffic, fault) = stage_mapping(cfg, &dnn)?;
+    let circuit = stage_circuit(cfg, ctx, &dnn, &map, &traffic);
+    let noc = crate::noc::evaluate_mapped_bound(cfg, &traffic, &map);
+    let nop = crate::nop::evaluate_mapped_bound(cfg, &traffic, &placement, &map);
+    let dram = stage_dram(cfg, ctx, &stats);
+    let variation = if cfg.variation.is_none() {
+        None
+    } else {
+        Some(crate::variation::evaluate(cfg, &map, imc_energy(&circuit)))
+    };
+    Ok(assemble_point(cfg, &dnn, &map, &traffic, circuit, noc, nop, dram, fault, variation, t0))
+}
+
 /// Shared tail of [`run_point_profiled`] and [`trace_point`]: fold the
 /// engine outputs into a [`SimReport`] and attach the fault / variation
 /// outcomes — identical float operations in identical order on both
@@ -552,6 +589,24 @@ pub(crate) mod tests {
         // the second point must have reused sweep-invariant work
         assert_eq!(shared.layer_costs().len(), 1);
         assert!(shared.epoch_cache().hits() > 0, "expected epoch reuse");
+    }
+
+    #[test]
+    fn bound_point_is_exact_off_the_epoch_axis_and_below_it_on_time() {
+        let cfg = SiamConfig::paper_default();
+        let ctx = SweepContext::new(&cfg).unwrap();
+        let lb = run_point_bound(&cfg, &ctx).unwrap();
+        assert_eq!(ctx.epoch_cache().len(), 0, "cheap pass must not touch the epoch cache");
+        let full = run_point(&cfg, &ctx, false).unwrap();
+        assert_eq!(lb.total.area_um2.to_bits(), full.total.area_um2.to_bits());
+        assert_eq!(lb.silicon_area_mm2.to_bits(), full.silicon_area_mm2.to_bits());
+        assert_eq!(lb.circuit.energy_pj.to_bits(), full.circuit.energy_pj.to_bits());
+        assert_eq!(lb.noc.energy_pj.to_bits(), full.noc.energy_pj.to_bits());
+        assert_eq!(lb.nop.energy_pj.to_bits(), full.nop.energy_pj.to_bits());
+        assert_eq!(lb.num_chiplets, full.num_chiplets);
+        assert!(lb.total.latency_ns <= full.total.latency_ns);
+        assert!(lb.total.energy_pj <= full.total.energy_pj);
+        assert_eq!(lb.engine_tiers.total(), 0, "no engine tier runs in the cheap pass");
     }
 
     #[test]

@@ -32,6 +32,107 @@ pub fn classes_json(classes: &[(String, usize)]) -> Json {
     )
 }
 
+/// Machine-readable sweep artifact (`siam sweep --json`, schema
+/// `siam-sweep/v3`): the table's fields per point, the shared-stage and
+/// persistent-cache counters, the search mode, and the run's
+/// self-describing `meta` block. v3 over v2: `stats.epochs_hydrated`,
+/// `stats.points_known`, `stats.search`, and `meta.epoch_cache.hydrated`
+/// (all additive — see `docs/CACHING.md`).
+pub fn sweep_json(cfg: &SiamConfig, res: &super::SweepResult) -> Json {
+    let mut points = Vec::with_capacity(res.points.len());
+    for p in &res.points {
+        let mut o = Json::obj();
+        o.set("tiles_per_chiplet", p.tiles_per_chiplet)
+            .set(
+                "total_chiplets",
+                p.total_chiplets.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set("num_chiplets", p.report.num_chiplets)
+            .set("area_mm2", p.report.total.area_mm2())
+            .set("energy_uj", p.report.total.energy_uj())
+            .set("latency_ms", p.report.total.latency_ms())
+            .set("edap", p.report.total.edap());
+        if !p.report.chiplets_per_class.is_empty() {
+            o.set("classes", classes_json(&p.report.chiplets_per_class));
+        }
+        if let Some(split) = &p.class_split {
+            o.set(
+                "class_split",
+                Json::Arr(
+                    split
+                        .iter()
+                        .map(|c| c.map(Json::from).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            );
+        }
+        if let Some(xb) = &p.class_xbars {
+            o.set("class_xbars", Json::Arr(xb.iter().map(|&x| Json::from(x)).collect()));
+        }
+        // reliability fragments ride along exactly as SimReport emits
+        // them, so sweep artifacts carry fault/variation provenance
+        if let Some(f) = &p.report.fault {
+            o.set("fault", f.to_json());
+        }
+        if let Some(v) = &p.report.variation {
+            o.set("variation", v.to_json());
+        }
+        points.push(o);
+    }
+    let mut stats = Json::obj();
+    stats
+        .set("epoch_hits", res.stats.epoch_hits)
+        .set("epoch_misses", res.stats.epoch_misses)
+        .set("epoch_hit_rate", res.stats.epoch_hit_rate())
+        .set("epochs_cached", res.stats.epochs_cached)
+        .set("epochs_hydrated", res.stats.epochs_hydrated)
+        .set("points_known", res.stats.points_known)
+        .set("search", cfg.sweep.search.as_str())
+        .set("engine_tiers", res.stats.tiers.to_json())
+        .set("wall_seconds", res.stats.wall_seconds)
+        .set("points_per_sec", res.stats.points_per_sec);
+    // provenance: builtin vs file path + content fingerprint, so sweep
+    // artifacts can be traced to the exact network that produced them
+    let model_source = res
+        .points
+        .first()
+        .map(|p| p.report.model_source.clone())
+        .unwrap_or_else(|| {
+            if cfg.dnn.model.starts_with("file:") {
+                cfg.dnn.model.clone()
+            } else {
+                "builtin".into()
+            }
+        });
+    let mut meta = RunMeta::for_config(cfg);
+    meta.model_source = model_source.clone();
+    meta.wall_seconds = res.stats.wall_seconds;
+    meta.epoch_cache = Some(crate::obs::CacheSnapshot {
+        hits: res.stats.epoch_hits,
+        misses: res.stats.epoch_misses,
+        entries: res.stats.epochs_cached,
+        hydrated: res.stats.epochs_hydrated,
+        shards: res.stats.shards.clone(),
+    });
+    meta.engine_tiers = Some(res.stats.tiers);
+    let mut out = Json::obj();
+    out.set("schema", "siam-sweep/v3")
+        .set("model", cfg.dnn.model.as_str())
+        .set("dataset", cfg.dnn.dataset.as_str())
+        .set("model_source", model_source.as_str())
+        .set("points", points)
+        .set("stats", stats)
+        .set("meta", meta.to_json());
+    if let Some(best) = super::best_by_edap(&res.points) {
+        let mut b = Json::obj();
+        b.set("tiles_per_chiplet", best.tiles_per_chiplet)
+            .set("num_chiplets", best.report.num_chiplets)
+            .set("edap", best.report.total.edap());
+        out.set("best_by_edap", b);
+    }
+    out
+}
+
 /// Complete output of one SIAM run.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -667,5 +768,59 @@ impl ServeReport {
             o.set("meta", meta.to_json());
         }
         o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SweepBuilder;
+
+    #[test]
+    fn sweep_json_pins_the_v3_schema_keys() {
+        // the machine-readable sweep artifact is a published contract:
+        // CI validates these keys, so renaming any of them is a
+        // schema bump, not a refactor
+        let cfg = SiamConfig::paper_default();
+        let res = SweepBuilder::new(&cfg)
+            .tiles(&[9, 16])
+            .chiplet_counts(&[None])
+            .run()
+            .unwrap();
+        let j = sweep_json(&cfg, &res);
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some("siam-sweep/v3")
+        );
+        for key in ["model", "dataset", "model_source", "points", "stats", "meta", "best_by_edap"]
+        {
+            assert!(j.get(key).is_some(), "sweep json missing {key}");
+        }
+        let stats = j.get("stats").unwrap();
+        for key in [
+            "epoch_hits",
+            "epoch_misses",
+            "epoch_hit_rate",
+            "epochs_cached",
+            "epochs_hydrated",
+            "points_known",
+            "search",
+            "engine_tiers",
+            "wall_seconds",
+            "points_per_sec",
+        ] {
+            assert!(stats.get(key).is_some(), "stats missing {key}");
+        }
+        assert_eq!(stats.get("search").and_then(Json::as_str), Some("exhaustive"));
+        // no cache file: nothing hydrated, nothing known
+        assert_eq!(stats.get("epochs_hydrated").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(stats.get("points_known").and_then(Json::as_f64), Some(0.0));
+        // the meta block mirrors the cache counters, hydration included
+        let cache = j.get("meta").unwrap().get("epoch_cache").unwrap();
+        for key in ["hits", "misses", "hit_rate", "entries", "hydrated", "shards"] {
+            assert!(cache.get(key).is_some(), "meta.epoch_cache missing {key}");
+        }
+        // the whole artifact round-trips through the JSON parser
+        crate::util::json::parse(&j.to_string_pretty()).expect("sweep JSON parses");
     }
 }

@@ -4,11 +4,12 @@
 //! siam simulate  [--config F] [--model M --dataset D] [--tiles N]
 //!                [--chiplets N] [--monolithic] [--placement P]
 //!                [--spares N] [--kill-chiplet 3,7] [--fault-seed S]
-//!                [--trace PATH] [--profile] [--json PATH]
+//!                [--cache-file PATH] [--trace PATH] [--profile] [--json PATH]
 //! siam sweep     [--config F] [--model M --dataset D]
 //!                [--tiles 4,9,16,25,36] [--counts 16,36,64,100]
 //!                [--placement rowmajor|dataflow] [--fom edap|...|yield|variation]
-//!                [--profile] [--json PATH]
+//!                [--cache-file PATH] [--search exhaustive|pareto|halving]
+//!                [--halving-keep 0.5] [--profile] [--json PATH]
 //! siam serve     [--config F] [--mode open|closed] [--rate QPS]
 //!                [--concurrency N] [--requests N] [--queue N] [--seed S]
 //!                [--fail-at N --fail-chiplet C --remap-latency US --spares N]
@@ -29,7 +30,7 @@
 use anyhow::{bail, Context, Result};
 use siam::config::{ChipMode, PlacementPolicy, ServeMode, SiamConfig};
 use siam::coordinator::{self, SweepBuilder};
-use siam::obs::{self, CacheSnapshot, LogLevel, Profiler, RunMeta, TraceBuffer};
+use siam::obs::{self, LogLevel, Profiler, TraceBuffer};
 use siam::util::json::Json;
 use siam::util::table::{eng, Table};
 use std::collections::HashMap;
@@ -96,6 +97,21 @@ fn build_config(flags: &HashMap<String, String>) -> Result<SiamConfig> {
     if let Some(s) = flags.get("fault-seed") {
         cfg.fault.seed = s.parse().context("--fault-seed")?;
     }
+    if let Some(path) = flags.get("cache-file") {
+        cfg.sweep.cache_file = Some(path.clone());
+    }
+    if let Some(s) = flags.get("search") {
+        use siam::config::SearchMode;
+        cfg.sweep.search = match s.as_str() {
+            "exhaustive" => SearchMode::Exhaustive,
+            "pareto" => SearchMode::Pareto,
+            "halving" => SearchMode::Halving,
+            other => bail!("--search must be exhaustive|pareto|halving, got '{other}'"),
+        };
+    }
+    if let Some(k) = flags.get("halving-keep") {
+        cfg.sweep.halving_keep = k.parse().context("--halving-keep")?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -109,6 +125,20 @@ fn parse_list(s: &str) -> Result<Vec<usize>> {
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = build_config(flags)?;
     let ctx = coordinator::SweepContext::new(&cfg)?;
+    // --cache-file: hydrate known epochs before the run, persist fresh
+    // ones after it (docs/CACHING.md)
+    let store = match &cfg.sweep.cache_file {
+        Some(path) => {
+            let (s, loaded) = siam::noc::EpochStore::open(path)?;
+            s.hydrate(ctx.epoch_cache());
+            obs::log::verbose(&format!(
+                "cache {path}: {} epoch(s) loaded",
+                loaded.epochs_loaded
+            ));
+            Some(s)
+        }
+        None => None,
+    };
     let prof = flags.contains_key("profile").then(Profiler::new);
     let mut trace = flags.get("trace").map(|_| TraceBuffer::new());
 
@@ -125,6 +155,9 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     };
     if rep.meta.is_none() {
         coordinator::attach_meta(&cfg, &ctx, &mut rep);
+    }
+    if let Some(s) = &store {
+        s.absorb(ctx.epoch_cache())?;
     }
     println!("{}", rep.summary());
     if let Some(p) = &prof {
@@ -209,6 +242,14 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         100.0 * s.epoch_hit_rate(),
         s.epochs_cached
     );
+    if cfg.sweep.cache_file.is_some() {
+        println!(
+            "persistent cache: {} epochs hydrated from disk, {} of {} points already known",
+            s.epochs_hydrated,
+            s.points_known,
+            pts.len()
+        );
+    }
     let shard_line: Vec<String> = s.shards.iter().map(|&(h, m)| format!("{h}/{m}")).collect();
     println!("epoch cache shards (hits/misses): {}", shard_line.join("  "));
     println!("engine tiers: {}", s.tiers.render());
@@ -232,7 +273,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         println!("{}", p.render_table());
     }
     if let Some(path) = flags.get("json") {
-        let mut out = sweep_json(&cfg, &res);
+        let mut out = coordinator::report::sweep_json(&cfg, &res);
         if let Some(p) = &prof {
             out.set("profile", p.to_json());
         }
@@ -240,102 +281,6 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         obs::log::info(&format!("wrote {path}"));
     }
     Ok(())
-}
-
-/// Machine-readable sweep result: the table's fields per point plus the
-/// shared-stage cache counters (`SweepResult::stats`).
-fn sweep_json(cfg: &SiamConfig, res: &coordinator::SweepResult) -> Json {
-    let mut points = Vec::with_capacity(res.points.len());
-    for p in &res.points {
-        let mut o = Json::obj();
-        o.set("tiles_per_chiplet", p.tiles_per_chiplet)
-            .set(
-                "total_chiplets",
-                p.total_chiplets.map(Json::from).unwrap_or(Json::Null),
-            )
-            .set("num_chiplets", p.report.num_chiplets)
-            .set("area_mm2", p.report.total.area_mm2())
-            .set("energy_uj", p.report.total.energy_uj())
-            .set("latency_ms", p.report.total.latency_ms())
-            .set("edap", p.report.total.edap());
-        if !p.report.chiplets_per_class.is_empty() {
-            o.set(
-                "classes",
-                coordinator::report::classes_json(&p.report.chiplets_per_class),
-            );
-        }
-        if let Some(split) = &p.class_split {
-            o.set(
-                "class_split",
-                Json::Arr(
-                    split
-                        .iter()
-                        .map(|c| c.map(Json::from).unwrap_or(Json::Null))
-                        .collect(),
-                ),
-            );
-        }
-        if let Some(xb) = &p.class_xbars {
-            o.set("class_xbars", Json::Arr(xb.iter().map(|&x| Json::from(x)).collect()));
-        }
-        // reliability fragments ride along exactly as SimReport emits
-        // them, so sweep artifacts carry fault/variation provenance
-        if let Some(f) = &p.report.fault {
-            o.set("fault", f.to_json());
-        }
-        if let Some(v) = &p.report.variation {
-            o.set("variation", v.to_json());
-        }
-        points.push(o);
-    }
-    let mut stats = Json::obj();
-    stats
-        .set("epoch_hits", res.stats.epoch_hits)
-        .set("epoch_misses", res.stats.epoch_misses)
-        .set("epoch_hit_rate", res.stats.epoch_hit_rate())
-        .set("epochs_cached", res.stats.epochs_cached)
-        .set("engine_tiers", res.stats.tiers.to_json())
-        .set("wall_seconds", res.stats.wall_seconds)
-        .set("points_per_sec", res.stats.points_per_sec);
-    // provenance: builtin vs file path + content fingerprint, so sweep
-    // artifacts can be traced to the exact network that produced them
-    let model_source = res
-        .points
-        .first()
-        .map(|p| p.report.model_source.clone())
-        .unwrap_or_else(|| {
-            if cfg.dnn.model.starts_with("file:") {
-                cfg.dnn.model.clone()
-            } else {
-                "builtin".into()
-            }
-        });
-    let mut meta = RunMeta::for_config(cfg);
-    meta.model_source = model_source.clone();
-    meta.wall_seconds = res.stats.wall_seconds;
-    meta.epoch_cache = Some(CacheSnapshot {
-        hits: res.stats.epoch_hits,
-        misses: res.stats.epoch_misses,
-        entries: res.stats.epochs_cached,
-        shards: res.stats.shards.clone(),
-    });
-    meta.engine_tiers = Some(res.stats.tiers);
-    let mut out = Json::obj();
-    out.set("schema", "siam-sweep/v2")
-        .set("model", cfg.dnn.model.as_str())
-        .set("dataset", cfg.dnn.dataset.as_str())
-        .set("model_source", model_source.as_str())
-        .set("points", points)
-        .set("stats", stats)
-        .set("meta", meta.to_json());
-    if let Some(best) = coordinator::dse::best_by_edap(&res.points) {
-        let mut b = Json::obj();
-        b.set("tiles_per_chiplet", best.tiles_per_chiplet)
-            .set("num_chiplets", best.report.num_chiplets)
-            .set("edap", best.report.total.edap());
-        out.set("best_by_edap", b);
-    }
-    out
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
@@ -545,16 +490,18 @@ const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config>
   simulate   --model resnet110 --dataset cifar10 [--tiles 16] [--chiplets 36]
              [--monolithic] [--placement rowmajor|dataflow]
              [--spares 2] [--kill-chiplet 3,7] [--fault-seed 42]
-             [--trace trace.json] [--profile]
+             [--cache-file epochs.cache] [--trace trace.json] [--profile]
              [--config file.toml] [--json out.json]
   sweep      --model resnet110 --dataset cifar10 [--tiles 4,9,16] [--counts 36,64]
              [--placement rowmajor|dataflow]
              [--fom edap|edp|energy|latency|area|ipj|yield|variation]
-             [--profile] [--json out.json]
+             [--cache-file epochs.cache] [--search exhaustive|pareto|halving]
+             [--halving-keep 0.5] [--profile] [--json out.json]
   serve      [--mode open|closed] [--rate 2000] [--concurrency 4]
              [--requests 1024] [--queue 4] [--seed 42] [--quick]
              [--fail-at 64 --fail-chiplet 3 --remap-latency 100 --spares 1]
-             [--trace trace.json] [--config file.toml] [--json out.json]
+             [--cache-file epochs.cache] [--trace trace.json]
+             [--config file.toml] [--json out.json]
   functional [--artifacts artifacts] [--adc 4|8] [--seed 42]
   models     [--files DIR] list builtin + file models (params/MACs/crossbars)
   config     print the paper-default configuration TOML
@@ -572,7 +519,11 @@ const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config>
   a [variation] config block adds analog device variation (programming
   noise, drift, stuck-at cells, ADC offset) to every command; sweep
   --fom variation prunes points below the accuracy floor
-  (configs/variation_demo.toml, docs/RELIABILITY.md)";
+  (configs/variation_demo.toml, docs/RELIABILITY.md)
+  --cache-file persists simulated NoC/NoP epochs across runs: warm runs
+  replay instead of re-simulating, bit-identically; sweep --search
+  pareto|halving prunes the grid with a certified cheap-bound pass and
+  still returns the exhaustive optimum (docs/CACHING.md)";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();

@@ -366,6 +366,49 @@ impl<'m> FlowSim<'m> {
     }
 }
 
+/// Analytic lower bound for one epoch on `mesh` — the scoring kernel of
+/// the cheap search tier (`sweep --search pareto|halving`, see
+/// `coordinator::dse`).
+///
+/// `packets` and `flit_hops` are **exact**: X–Y routes are
+/// deterministic, so every engine tier moves `count × hops ×
+/// flits_per_packet` flit-links per flow regardless of contention —
+/// which makes every downstream energy/area figure exact too.
+/// `completion_cycles` and `total_latency_cycles` are **provable lower
+/// bounds** of every tier's answer: contention only delays packets
+/// (per-link busy-until values are monotone in the set of competing
+/// flows), so each flow's private-route closed form bounds it from
+/// below, and each link serializes at one packet per
+/// `flits_per_packet` cycles, so the most-loaded link's drain time
+/// bounds the epoch completion.
+pub(crate) fn epoch_bound(
+    mesh: &Mesh,
+    router_delay: u64,
+    flits_per_packet: u64,
+    flows: &[Flow],
+) -> EpochResult {
+    let mut res = EpochResult::default();
+    let mut route = Vec::new();
+    let mut loads: HashMap<u32, u64> = HashMap::new();
+    for f in flows {
+        if f.count == 0 {
+            continue;
+        }
+        mesh.route(f.src, f.dst, &mut route);
+        singleton_result(f, route.len() as u64, router_delay, flits_per_packet, &mut res);
+        for &l in &route {
+            *loads.entry(l).or_default() += f.count;
+        }
+    }
+    let link_floor = loads
+        .values()
+        .map(|&p| p * flits_per_packet)
+        .max()
+        .unwrap_or(0);
+    res.completion_cycles = res.completion_cycles.max(link_floor);
+    res
+}
+
 /// Closed form for a flow whose links nobody else uses. Exact: with a
 /// private route the list schedule degenerates to per-link arithmetic —
 /// packets pipeline freely when `stride >= flits_per_packet` and queue
@@ -764,6 +807,39 @@ mod tests {
         assert_eq!(r1, r2);
         assert_eq!(t1, t2, "hit must replay the stored tier tag");
         assert_eq!(t1.closed_form, 2);
+    }
+
+    #[test]
+    fn epoch_bound_is_exact_on_counts_and_a_true_lower_bound_on_time() {
+        let m = Mesh::new(16);
+        let cases: Vec<Vec<Flow>> = vec![
+            vec![flow(0, 10, 300, 0, 2)], // singleton: bound is exact
+            vec![flow(0, 3, 4000, 0, 2), flow(12, 15, 4000, 1, 2)], // disjoint
+            vec![flow(0, 10, 5000, 0, 3), flow(3, 10, 5000, 1, 3), flow(12, 5, 5000, 2, 3)],
+            vec![flow(0, 2, 4000, 0, 2), flow(1, 2, 4000, 1, 2)], // hot sink
+            vec![flow(0, 10, 50, 0, 2), flow(3, 10, 70, 5, 3)],   // irregular
+            (1..6).map(|t| flow(0, t, 300, 0, 2)).collect(),      // saturated
+        ];
+        for (ci, flows) in cases.iter().enumerate() {
+            let full = FlowSim::new(&m).run(flows);
+            let lb = epoch_bound(&m, 2, 1, flows);
+            assert_eq!(lb.packets, full.packets, "case {ci}: packets are exact");
+            assert_eq!(lb.flit_hops, full.flit_hops, "case {ci}: flit-hops are exact");
+            assert!(
+                lb.completion_cycles <= full.completion_cycles,
+                "case {ci}: completion bound {} above the engine's {}",
+                lb.completion_cycles,
+                full.completion_cycles
+            );
+            assert!(
+                lb.total_latency_cycles <= full.total_latency_cycles,
+                "case {ci}: latency bound above the engine"
+            );
+        }
+        // Uncontended epochs collapse to the closed forms: bound == engine.
+        for flows in &cases[..2] {
+            assert_eq!(epoch_bound(&m, 2, 1, flows), FlowSim::new(&m).run(flows));
+        }
     }
 
     #[test]

@@ -14,10 +14,12 @@ pub mod htree;
 pub mod mesh;
 pub mod power;
 pub mod sim;
+pub mod store;
 
 pub use flow::FlowSim;
 pub use mesh::Mesh;
 pub use sim::{EpochCache, EpochResult, FlitSim, PacketSim, TierCounts};
+pub use store::{EpochStore, LoadReport};
 
 use crate::config::{ChipMode, NocTopology, SiamConfig};
 use crate::mapping::{MappingResult, Traffic};
@@ -216,6 +218,216 @@ pub fn evaluate_cached_obs(
         per_layer_cycles,
         per_layer_ns,
         tiers,
+    }
+}
+
+/// Analytic lower-bound NoC evaluation — the cheap scoring tier behind
+/// `sweep --search pareto|halving` (see `coordinator::dse`).
+///
+/// Epoch-independent figures (`metrics.energy_pj`, `metrics.area_um2`,
+/// `metrics.leakage_uw`, `packets`, `flit_hops`) are **bit-identical**
+/// to [`evaluate`]: flit-hop counts are trace-determined, so energy and
+/// area never depend on contention. `cycles`, `metrics.latency_ns` and
+/// the per-layer figures are **provable lower bounds** of the full
+/// engine's answer (see `flow::epoch_bound`); H-tree/P2P topologies are
+/// analytical to begin with, so there the whole report is identical.
+/// `tiers` stays zero — no engine tier ran.
+pub fn evaluate_bound(cfg: &SiamConfig, traffic: &Traffic, num_chiplets: usize) -> NocReport {
+    let tech = crate::circuit::Tech::from_device(&cfg.device);
+    let tiles = cfg.chiplet.tiles_per_chiplet;
+    let mesh = Mesh::new(tiles.max(2));
+    let tile_pitch_mm = 0.7; // ~sqrt of the 0.5 mm² calibrated tile
+    let htree = htree::HTreeModel::new(tiles.max(2), cfg.chiplet.noc_width, tile_pitch_mm, &tech);
+    let fsim = FlowSim::new(&mesh); // source of the engine defaults only
+
+    let mut per_key: std::collections::BTreeMap<(usize, usize), u64> = Default::default();
+    let mut packets = 0u64;
+    let mut flit_hops = 0u64;
+    let mut lat_sum = 0u64;
+    for ep in &traffic.noc_epochs {
+        let r = match cfg.chiplet.noc_topology {
+            NocTopology::Mesh => {
+                flow::epoch_bound(&mesh, fsim.router_delay, fsim.flits_per_packet, &ep.flows)
+            }
+            NocTopology::Tree | NocTopology::HTree => htree.run(&ep.flows),
+        };
+        *per_key.entry((ep.layer, ep.chiplet)).or_default() += r.completion_cycles;
+        packets += r.packets;
+        flit_hops += r.flit_hops;
+        lat_sum += r.total_latency_cycles;
+    }
+    let mut per_layer: std::collections::BTreeMap<usize, u64> = Default::default();
+    for ((layer, _chiplet), cyc) in per_key {
+        let e = per_layer.entry(layer).or_default();
+        *e = (*e).max(cyc);
+    }
+    let cycles: u64 = per_layer.values().sum();
+    let per_layer_cycles: Vec<(usize, u64)> = per_layer.into_iter().collect();
+
+    // ---- power & area: identical to `evaluate_cached_obs`
+    let router = power::router(
+        cfg.chiplet.noc_width,
+        cfg.chiplet.noc_buffer_depth,
+        5,
+        &tech,
+    );
+    let link = power::link(cfg.chiplet.noc_width, tile_pitch_mm, &tech);
+    let (area, leakage, e_per_hop) = match cfg.chiplet.noc_topology {
+        NocTopology::Mesh => {
+            let links = (2 * mesh.width * mesh.height - mesh.width - mesh.height) as f64;
+            (
+                num_chiplets as f64 * (tiles as f64 * router.area_um2 + links * link.area_um2),
+                num_chiplets as f64 * tiles as f64 * router.leakage_uw,
+                router.flit_energy_pj + link.flit_energy_pj,
+            )
+        }
+        NocTopology::Tree | NocTopology::HTree => (
+            num_chiplets as f64 * htree.area_um2,
+            num_chiplets as f64 * 2.0 * tech.leakage,
+            htree.flit_level_energy_pj,
+        ),
+    };
+
+    let clk_ns = 1.0e3 / cfg.chiplet.frequency_mhz;
+    let per_layer_ns: Vec<(usize, f64)> = per_layer_cycles
+        .iter()
+        .map(|&(l, c)| (l, c as f64 * clk_ns))
+        .collect();
+    NocReport {
+        metrics: Metrics {
+            area_um2: area,
+            energy_pj: flit_hops as f64 * e_per_hop,
+            latency_ns: cycles as f64 * clk_ns,
+            leakage_uw: leakage,
+        },
+        cycles,
+        packets,
+        flit_hops,
+        avg_packet_latency_cycles: if packets == 0 {
+            0.0
+        } else {
+            lat_sum as f64 / packets as f64
+        },
+        per_layer_cycles,
+        per_layer_ns,
+        tiers: TierCounts::default(),
+    }
+}
+
+/// Class-aware variant of [`evaluate_bound`], mirroring
+/// [`evaluate_mapped`]: single-kind systems take [`evaluate_bound`];
+/// heterogeneous systems bound each chiplet's epochs on its own class's
+/// mesh and max-combine a layer's chiplets in wall-clock ns. The same
+/// exactness split applies — energy/area/leakage bit-identical to
+/// [`evaluate_mapped`], timing a provable lower bound.
+pub fn evaluate_mapped_bound(cfg: &SiamConfig, traffic: &Traffic, map: &MappingResult) -> NocReport {
+    if !cfg.has_hetero_classes() || cfg.system.chip_mode == ChipMode::Monolithic {
+        return evaluate_bound(cfg, traffic, map.num_chiplets);
+    }
+    let tech = crate::circuit::Tech::from_device(&cfg.device);
+    let classes = cfg.resolved_chiplet_classes();
+    let tile_pitch_mm = 0.7; // ~sqrt of the 0.5 mm² calibrated tile
+    let meshes: Vec<Mesh> = classes
+        .iter()
+        .map(|c| Mesh::new(c.tiles_per_chiplet.max(2)))
+        .collect();
+    let htrees: Vec<htree::HTreeModel> = classes
+        .iter()
+        .map(|c| {
+            htree::HTreeModel::new(
+                c.tiles_per_chiplet.max(2),
+                cfg.chiplet.noc_width,
+                tile_pitch_mm,
+                &tech,
+            )
+        })
+        .collect();
+    let defaults = FlowSim::new(&meshes[0]); // engine defaults only
+    let router = power::router(
+        cfg.chiplet.noc_width,
+        cfg.chiplet.noc_buffer_depth,
+        5,
+        &tech,
+    );
+    let link = power::link(cfg.chiplet.noc_width, tile_pitch_mm, &tech);
+    let mesh_hop_pj = router.flit_energy_pj + link.flit_energy_pj;
+
+    let mut per_key: std::collections::BTreeMap<(usize, usize), u64> = Default::default();
+    let mut packets = 0u64;
+    let mut flit_hops = 0u64;
+    let mut lat_sum = 0u64;
+    let mut energy_pj = 0.0;
+    for ep in &traffic.noc_epochs {
+        let k = map.chiplet_class[ep.chiplet];
+        let (r, hop_pj) = match cfg.chiplet.noc_topology {
+            NocTopology::Mesh => (
+                flow::epoch_bound(
+                    &meshes[k],
+                    defaults.router_delay,
+                    defaults.flits_per_packet,
+                    &ep.flows,
+                ),
+                mesh_hop_pj,
+            ),
+            NocTopology::Tree | NocTopology::HTree => {
+                (htrees[k].run(&ep.flows), htrees[k].flit_level_energy_pj)
+            }
+        };
+        *per_key.entry((ep.layer, ep.chiplet)).or_default() += r.completion_cycles;
+        packets += r.packets;
+        flit_hops += r.flit_hops;
+        lat_sum += r.total_latency_cycles;
+        energy_pj += r.flit_hops as f64 * hop_pj;
+    }
+
+    let mut layer_ns: std::collections::BTreeMap<usize, f64> = Default::default();
+    let mut layer_cycles: std::collections::BTreeMap<usize, u64> = Default::default();
+    for ((layer, chiplet), cyc) in per_key {
+        let ns = cyc as f64 * classes[map.chiplet_class[chiplet]].clock_period_ns();
+        let e = layer_ns.entry(layer).or_insert(0.0);
+        *e = (*e).max(ns);
+        let ec = layer_cycles.entry(layer).or_default();
+        *ec = (*ec).max(cyc);
+    }
+    let latency_ns: f64 = layer_ns.values().sum();
+    let cycles: u64 = layer_cycles.values().sum();
+
+    // ---- power & area: identical to `evaluate_mapped_obs`
+    let (mut area, mut leakage) = (0.0f64, 0.0f64);
+    for &k in &map.chiplet_class {
+        match cfg.chiplet.noc_topology {
+            NocTopology::Mesh => {
+                let m = &meshes[k];
+                let links = (2 * m.width * m.height - m.width - m.height) as f64;
+                let tiles = classes[k].tiles_per_chiplet as f64;
+                area += tiles * router.area_um2 + links * link.area_um2;
+                leakage += tiles * router.leakage_uw;
+            }
+            NocTopology::Tree | NocTopology::HTree => {
+                area += htrees[k].area_um2;
+                leakage += 2.0 * tech.leakage;
+            }
+        }
+    }
+
+    NocReport {
+        metrics: Metrics {
+            area_um2: area,
+            energy_pj,
+            latency_ns,
+            leakage_uw: leakage,
+        },
+        cycles,
+        packets,
+        flit_hops,
+        avg_packet_latency_cycles: if packets == 0 {
+            0.0
+        } else {
+            lat_sum as f64 / packets as f64
+        },
+        per_layer_cycles: layer_cycles.into_iter().collect(),
+        per_layer_ns: layer_ns.into_iter().collect(),
+        tiers: TierCounts::default(),
     }
 }
 
@@ -520,6 +732,66 @@ mod tests {
             assert_eq!(r.metrics.energy_pj.to_bits(), rep.metrics.energy_pj.to_bits());
         }
         assert!(cache.hits() > 0, "second hetero evaluation must replay epochs");
+    }
+
+    #[test]
+    fn bound_is_exact_on_energy_area_and_a_lower_bound_on_time() {
+        let cfg = SiamConfig::paper_default();
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let full = evaluate_mapped(&cfg, &traffic, &map, None);
+        let lb = evaluate_mapped_bound(&cfg, &traffic, &map);
+        assert_eq!(lb.packets, full.packets);
+        assert_eq!(lb.flit_hops, full.flit_hops);
+        assert_eq!(lb.metrics.energy_pj.to_bits(), full.metrics.energy_pj.to_bits());
+        assert_eq!(lb.metrics.area_um2.to_bits(), full.metrics.area_um2.to_bits());
+        assert_eq!(lb.metrics.leakage_uw.to_bits(), full.metrics.leakage_uw.to_bits());
+        assert!(lb.cycles <= full.cycles, "{} > {}", lb.cycles, full.cycles);
+        assert!(lb.metrics.latency_ns <= full.metrics.latency_ns);
+        assert_eq!(lb.tiers, TierCounts::default(), "no engine tier runs in the bound");
+    }
+
+    #[test]
+    fn htree_bound_is_the_full_answer() {
+        // H-tree topologies are analytical to begin with: the cheap tier
+        // runs the same model, so the whole report is bit-identical.
+        let mut cfg = SiamConfig::paper_default();
+        cfg.chiplet.noc_topology = NocTopology::HTree;
+        let dnn = build_model("lenet5", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let full = evaluate(&cfg, &traffic, map.num_chiplets);
+        let lb = evaluate_bound(&cfg, &traffic, map.num_chiplets);
+        assert_eq!(lb.cycles, full.cycles);
+        assert_eq!(lb.metrics.energy_pj.to_bits(), full.metrics.energy_pj.to_bits());
+        assert_eq!(lb.metrics.latency_ns.to_bits(), full.metrics.latency_ns.to_bits());
+    }
+
+    #[test]
+    fn hetero_bound_keeps_the_exactness_split() {
+        use crate::config::{ChipletClassConfig, MemCell};
+        let base = SiamConfig::paper_default();
+        let big = ChipletClassConfig::from_base(&base, "big");
+        let mut little = ChipletClassConfig::from_base(&base, "little");
+        little.cell = MemCell::Sram;
+        little.xbar_rows = 64;
+        little.xbar_cols = 64;
+        little.adc_bits = 3;
+        little.frequency_mhz = 500.0;
+        let cfg = base.with_chiplet_classes(vec![big, little]);
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let full = evaluate_mapped(&cfg, &traffic, &map, None);
+        let lb = evaluate_mapped_bound(&cfg, &traffic, &map);
+        assert_eq!(lb.flit_hops, full.flit_hops);
+        assert_eq!(lb.metrics.energy_pj.to_bits(), full.metrics.energy_pj.to_bits());
+        assert_eq!(lb.metrics.area_um2.to_bits(), full.metrics.area_um2.to_bits());
+        assert!(lb.metrics.latency_ns <= full.metrics.latency_ns);
     }
 
     #[test]

@@ -206,10 +206,13 @@ fn mix(mut x: u64) -> u64 {
 /// lanes of independently seeded splitmix64 mixing put the probability
 /// for a sweep retaining `N` epochs at ~`N²/2^129`, far below any other
 /// source of error in the simulator.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub(crate) struct EpochKey {
-    lo: u64,
-    hi: u64,
+    /// Low fingerprint lane (also selects the cache shard). Exposed to
+    /// the persistent store (`noc::store`) for serialization.
+    pub(crate) lo: u64,
+    /// High fingerprint lane.
+    pub(crate) hi: u64,
 }
 
 impl EpochKey {
@@ -288,12 +291,17 @@ struct Shard {
 #[derive(Debug)]
 pub struct EpochCache {
     shards: [Shard; SHARD_COUNT],
+    /// Entries installed from a persistent store (`noc::store`) rather
+    /// than simulated this run — counted separately from hits/misses so
+    /// warm runs are attributable.
+    hydrated: AtomicU64,
 }
 
 impl Default for EpochCache {
     fn default() -> EpochCache {
         EpochCache {
             shards: std::array::from_fn(|_| Shard::default()),
+            hydrated: AtomicU64::new(0),
         }
     }
 }
@@ -346,6 +354,44 @@ impl EpochCache {
     /// True when no epoch has been stored yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Entries installed from a persistent store this run (not lookups:
+    /// hydration touches neither the hit nor the miss counters, so a
+    /// warm run's hit rate still describes the in-memory traffic).
+    pub fn hydrated(&self) -> u64 {
+        self.hydrated.load(Ordering::Relaxed)
+    }
+
+    /// Install a precomputed `(result, tiers)` entry (disk hydration).
+    /// Returns `true` when the entry was newly inserted; an existing
+    /// entry is left untouched (the fingerprint guarantees it is
+    /// identical) and a full shard rejects the insert, mirroring
+    /// [`get_or_compute_tagged`](EpochCache::get_or_compute_tagged)'s
+    /// cap. Only new inserts count as hydrated.
+    pub(crate) fn insert(&self, key: EpochKey, result: EpochResult, tiers: TierCounts) -> bool {
+        let shard = &self.shards[key.lo as usize & (SHARD_COUNT - 1)];
+        let mut map = lock(&shard.map);
+        if map.contains_key(&key) || map.len() >= SHARD_CAP {
+            return false;
+        }
+        map.insert(key, (result, tiers));
+        drop(map);
+        self.hydrated.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Every retained entry, sorted by fingerprint — a deterministic
+    /// order for the persistent store's append pass, independent of
+    /// shard iteration and hash-map ordering.
+    pub(crate) fn snapshot_entries(&self) -> Vec<(EpochKey, EpochResult, TierCounts)> {
+        let mut out: Vec<(EpochKey, EpochResult, TierCounts)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let map = lock(&shard.map);
+            out.extend(map.iter().map(|(&k, &(r, t))| (k, r, t)));
+        }
+        out.sort_unstable_by_key(|&(k, _, _)| k);
+        out
     }
 
     /// Replay `key` from its shard, or compute, store and return it. No
@@ -932,6 +978,37 @@ mod tests {
         assert_eq!(sum.total(), 10);
         assert!(sum.render().contains("periodic 4"));
         assert!(sum.to_json().get("closed_form").is_some());
+    }
+
+    #[test]
+    fn hydration_counts_only_new_inserts_and_skips_lookup_counters() {
+        let m = Mesh::new(16);
+        let sim = PacketSim::new(&m);
+        let cache = EpochCache::new();
+        let flows = vec![flow(0, 10, 50, 0, 2)];
+        let key = EpochKey::fingerprint(ENGINE_PACKET, &m, 2, 1, true, &flows);
+        let r = sim.run(&flows);
+        let tag = TierCounts {
+            packet_fallback: 1,
+            ..TierCounts::default()
+        };
+        assert!(cache.insert(key, r, tag), "fresh insert must hydrate");
+        assert!(!cache.insert(key, r, tag), "re-insert must be a no-op");
+        assert_eq!(cache.hydrated(), 1);
+        assert_eq!((cache.hits(), cache.misses()), (0, 0), "hydration is not a lookup");
+        // the hydrated entry replays like a simulated one
+        let warm = sim.run_cached(&flows, &cache);
+        assert_eq!(warm, r);
+        assert_eq!((cache.hits(), cache.misses()), (1, 0));
+        // snapshot is fingerprint-sorted and complete
+        let snap = cache.snapshot_entries();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0], (key, r, tag));
+        let other = vec![flow(3, 10, 50, 1, 2)];
+        sim.run_cached(&other, &cache);
+        let snap = cache.snapshot_entries();
+        assert_eq!(snap.len(), 2);
+        assert!(snap[0].0 <= snap[1].0, "snapshot must be key-sorted");
     }
 
     #[test]

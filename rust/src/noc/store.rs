@@ -1,0 +1,712 @@
+//! Persistent, append-only on-disk epoch cache (`--cache-file`).
+//!
+//! The in-memory [`EpochCache`](crate::noc::EpochCache) dies with the
+//! process; this module makes its contents durable so a re-run of
+//! `simulate`, `sweep` or `serve` replays previously computed epochs
+//! instead of re-simulating them. The file is a log of checksummed
+//! records keyed by the canonical 128-bit epoch fingerprints
+//! (`EpochKey::fingerprint`), which already encode every input that can
+//! change an epoch result (engine, mesh shape and embedding, router
+//! delay, packet length, extrapolation flag and the full flow list) —
+//! so a fingerprint hit is safe to replay across processes.
+//!
+//! # File format
+//!
+//! ```text
+//! header (24 bytes)
+//!   +0  magic       b"SIAMEPC1"            (8 bytes)
+//!   +8  version     u32 LE = 1
+//!   +12 reserved    u32 LE = 0
+//!   +16 generation  u64 LE = EPOCH_STORE_GENERATION
+//! records (repeated until EOF)
+//!   +0  len         u32 LE                 payload length in bytes
+//!   +4  checksum    u64 LE                 FNV-1a over the payload
+//!   +12 payload     len bytes
+//! epoch payload (kind 0, 81 bytes)
+//!   kind, key.lo, key.hi,
+//!   completion_cycles, packets, total_latency_cycles, flit_hops,
+//!   closed_form, periodic, extrapolated, packet_fallback
+//! point payload (kind 1, 17 bytes)
+//!   kind, fingerprint.lo, fingerprint.hi
+//! ```
+//!
+//! All integers are little-endian; `kind` is a single byte.
+//!
+//! # Recovery contract
+//!
+//! The invariant is *a torn tail is data loss, never wrong results*:
+//!
+//! * missing file → created with a fresh header;
+//! * zero-length file → re-initialised with a fresh header;
+//! * a partial header that is a byte-prefix of a fresh header (a torn
+//!   initial write) → re-initialised;
+//! * bad magic or unknown version → **hard error**; the store never
+//!   clobbers a file it does not recognise;
+//! * stale generation → the log is discarded and the file reset to a
+//!   fresh header ([`LoadReport::stale_generation`]);
+//! * the first invalid record (zero or oversized length, length past
+//!   EOF, checksum mismatch, unknown kind, wrong payload size) →
+//!   the file is truncated at the last valid record boundary
+//!   ([`LoadReport::truncated_bytes`]) and scanning stops.
+//!
+//! Appends go through a single `O_APPEND` handle with one `write` per
+//! batch, so concurrent writers interleave only at record boundaries;
+//! duplicate fingerprints written by independent handles are counted
+//! and ignored at load time ([`LoadReport::duplicate_records`]).
+//! See `docs/CACHING.md` for the user-facing guide.
+
+use std::collections::HashSet;
+use std::fs::{File, OpenOptions};
+use std::io::{ErrorKind, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use anyhow::{bail, Context, Result};
+
+use super::sim::{EpochCache, EpochKey, EpochResult, TierCounts};
+use crate::obs::meta::fnv1a;
+
+/// On-disk format version; bumped only on incompatible layout changes
+/// (an unknown version is a hard error, never a silent reset).
+pub const EPOCH_STORE_VERSION: u32 = 1;
+
+/// Cache generation: bumped whenever simulator semantics change in a
+/// way that invalidates previously recorded epoch results. A file with
+/// a different generation is discarded (reset to a fresh header) at
+/// open time rather than replayed.
+pub const EPOCH_STORE_GENERATION: u64 = 1;
+
+const MAGIC: [u8; 8] = *b"SIAMEPC1";
+const HEADER_LEN: usize = 24;
+/// Frame prefix: `u32` payload length + `u64` FNV-1a checksum.
+const FRAME_LEN: usize = 12;
+/// Upper bound on a single payload; anything larger is corruption.
+const MAX_RECORD_LEN: u32 = 4096;
+const KIND_EPOCH: u8 = 0;
+const KIND_POINT: u8 = 1;
+const EPOCH_PAYLOAD_LEN: usize = 1 + 10 * 8;
+const POINT_PAYLOAD_LEN: usize = 1 + 2 * 8;
+
+/// What `EpochStore::open` found (and repaired) in an existing file.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadReport {
+    /// Distinct epoch records replayed from the log.
+    pub epochs_loaded: usize,
+    /// Distinct sweep-point fingerprints replayed from the log.
+    pub points_loaded: usize,
+    /// Valid records whose fingerprint was already seen earlier in the
+    /// log (benign: concurrent handles may race the same entry).
+    pub duplicate_records: usize,
+    /// Bytes discarded from the tail (torn/corrupt records, or the
+    /// whole log on a stale generation). Zero for a clean file.
+    pub truncated_bytes: u64,
+    /// True when the file carried an outdated generation and its log
+    /// was discarded rather than replayed.
+    pub stale_generation: bool,
+}
+
+struct StoreInner {
+    file: File,
+    known: HashSet<EpochKey>,
+    known_points: HashSet<(u64, u64)>,
+    entries: Vec<(EpochKey, EpochResult, TierCounts)>,
+}
+
+/// A handle on a persistent epoch cache file.
+///
+/// Thread-safe: all mutation goes through an internal mutex and a
+/// single `O_APPEND` file handle, so one `EpochStore` can be shared
+/// (via `Arc`) by every worker of a parallel sweep.
+pub struct EpochStore {
+    path: PathBuf,
+    inner: Mutex<StoreInner>,
+}
+
+impl std::fmt::Debug for EpochStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = lock(&self.inner);
+        f.debug_struct("EpochStore")
+            .field("path", &self.path)
+            .field("epochs", &inner.entries.len())
+            .field("points", &inner.known_points.len())
+            .finish()
+    }
+}
+
+fn lock(m: &Mutex<StoreInner>) -> MutexGuard<'_, StoreInner> {
+    // A poisoned store mutex means a writer panicked between state
+    // updates; the on-disk recovery contract already handles any torn
+    // tail, so continuing with the in-memory view is safe.
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn header_bytes(generation: u64) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(&MAGIC);
+    h[8..12].copy_from_slice(&EPOCH_STORE_VERSION.to_le_bytes());
+    // bytes 12..16 stay zero (reserved)
+    h[16..24].copy_from_slice(&generation.to_le_bytes());
+    h
+}
+
+fn read_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().expect("8-byte slice"))
+}
+
+fn epoch_payload(key: EpochKey, r: EpochResult, t: TierCounts) -> [u8; EPOCH_PAYLOAD_LEN] {
+    let mut p = [0u8; EPOCH_PAYLOAD_LEN];
+    p[0] = KIND_EPOCH;
+    let words = [
+        key.lo,
+        key.hi,
+        r.completion_cycles,
+        r.packets,
+        r.total_latency_cycles,
+        r.flit_hops,
+        t.closed_form,
+        t.periodic,
+        t.extrapolated,
+        t.packet_fallback,
+    ];
+    for (i, w) in words.iter().enumerate() {
+        p[1 + i * 8..9 + i * 8].copy_from_slice(&w.to_le_bytes());
+    }
+    p
+}
+
+fn point_payload(fp: (u64, u64)) -> [u8; POINT_PAYLOAD_LEN] {
+    let mut p = [0u8; POINT_PAYLOAD_LEN];
+    p[0] = KIND_POINT;
+    p[1..9].copy_from_slice(&fp.0.to_le_bytes());
+    p[9..17].copy_from_slice(&fp.1.to_le_bytes());
+    p
+}
+
+/// Append one `[len][checksum][payload]` frame to `buf`.
+fn frame_into(buf: &mut Vec<u8>, payload: &[u8]) {
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+}
+
+enum Record {
+    Epoch(EpochKey, EpochResult, TierCounts),
+    Point((u64, u64)),
+}
+
+fn parse_payload(p: &[u8]) -> Option<Record> {
+    match p[0] {
+        KIND_EPOCH if p.len() == EPOCH_PAYLOAD_LEN => {
+            let w = |i: usize| read_u64(p, 1 + i * 8);
+            Some(Record::Epoch(
+                EpochKey { lo: w(0), hi: w(1) },
+                EpochResult {
+                    completion_cycles: w(2),
+                    packets: w(3),
+                    total_latency_cycles: w(4),
+                    flit_hops: w(5),
+                },
+                TierCounts {
+                    closed_form: w(6),
+                    periodic: w(7),
+                    extrapolated: w(8),
+                    packet_fallback: w(9),
+                },
+            ))
+        }
+        KIND_POINT if p.len() == POINT_PAYLOAD_LEN => {
+            Some(Record::Point((read_u64(p, 1), read_u64(p, 9))))
+        }
+        _ => None,
+    }
+}
+
+impl EpochStore {
+    /// Open (or create) the cache file at `path`, replaying every valid
+    /// record and repairing the tail per the module-level recovery
+    /// contract. Returns the store handle plus a [`LoadReport`]
+    /// describing what was loaded, deduplicated and discarded.
+    ///
+    /// Hard errors: unreadable file/directory, a file that is not a
+    /// SIAM epoch cache (bad magic), or an unknown format version —
+    /// the store refuses to overwrite data it does not understand.
+    pub fn open(path: impl AsRef<Path>) -> Result<(EpochStore, LoadReport)> {
+        let path = path.as_ref();
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == ErrorKind::NotFound => Vec::new(),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading cache file {}", path.display()))
+            }
+        };
+
+        let mut report = LoadReport::default();
+        let mut known = HashSet::new();
+        let mut known_points = HashSet::new();
+        let mut entries = Vec::new();
+        let fresh = header_bytes(EPOCH_STORE_GENERATION);
+        // `None` → rewrite the file as a fresh header; `Some(n)` →
+        // keep the first `n` bytes (truncating if shorter than now).
+        let mut keep: Option<u64> = None;
+
+        if bytes.is_empty() {
+            // Missing or zero-length: initialise in place.
+        } else if bytes.len() < HEADER_LEN {
+            if fresh[..bytes.len()] == bytes[..] {
+                // Torn initial header write from a previous run.
+                report.truncated_bytes = bytes.len() as u64;
+            } else {
+                bail!(
+                    "{} is not a SIAM epoch cache file (short, unrecognised header)",
+                    path.display()
+                );
+            }
+        } else if bytes[..8] != MAGIC {
+            bail!(
+                "{} is not a SIAM epoch cache file (bad magic); refusing to overwrite",
+                path.display()
+            );
+        } else {
+            let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4-byte slice"));
+            if version != EPOCH_STORE_VERSION {
+                bail!(
+                    "{}: unsupported epoch cache version {} (this build reads version {})",
+                    path.display(),
+                    version,
+                    EPOCH_STORE_VERSION
+                );
+            }
+            let generation = read_u64(&bytes, 16);
+            if generation != EPOCH_STORE_GENERATION {
+                report.stale_generation = true;
+                report.truncated_bytes = (bytes.len() - HEADER_LEN) as u64;
+            } else {
+                let mut off = HEADER_LEN;
+                while off < bytes.len() {
+                    let Some(end) = Self::record_end(&bytes, off) else {
+                        report.truncated_bytes = (bytes.len() - off) as u64;
+                        break;
+                    };
+                    match parse_payload(&bytes[off + FRAME_LEN..end]) {
+                        Some(Record::Epoch(key, result, tiers)) => {
+                            if known.insert(key) {
+                                entries.push((key, result, tiers));
+                                report.epochs_loaded += 1;
+                            } else {
+                                report.duplicate_records += 1;
+                            }
+                        }
+                        Some(Record::Point(fp)) => {
+                            if known_points.insert(fp) {
+                                report.points_loaded += 1;
+                            } else {
+                                report.duplicate_records += 1;
+                            }
+                        }
+                        None => {
+                            report.truncated_bytes = (bytes.len() - off) as u64;
+                            break;
+                        }
+                    }
+                    off = end;
+                }
+                keep = Some((bytes.len() as u64) - report.truncated_bytes);
+            }
+        }
+
+        match keep {
+            Some(valid_end) => {
+                if report.truncated_bytes > 0 {
+                    let f = OpenOptions::new()
+                        .write(true)
+                        .open(path)
+                        .with_context(|| format!("repairing cache file {}", path.display()))?;
+                    f.set_len(valid_end)
+                        .with_context(|| format!("truncating cache file {}", path.display()))?;
+                }
+            }
+            None => {
+                std::fs::write(path, fresh)
+                    .with_context(|| format!("initialising cache file {}", path.display()))?;
+            }
+        }
+
+        let file = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("opening cache file {} for append", path.display()))?;
+        let store = EpochStore {
+            path: path.to_path_buf(),
+            inner: Mutex::new(StoreInner {
+                file,
+                known,
+                known_points,
+                entries,
+            }),
+        };
+        Ok((store, report))
+    }
+
+    /// End offset of the record framed at `off`, or `None` if the
+    /// frame header, length or checksum is invalid (payload kinds are
+    /// validated by `parse_payload`, after the checksum).
+    fn record_end(bytes: &[u8], off: usize) -> Option<usize> {
+        if off + FRAME_LEN > bytes.len() {
+            return None;
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4-byte slice"));
+        if len == 0 || len > MAX_RECORD_LEN {
+            return None;
+        }
+        let start = off + FRAME_LEN;
+        let end = start + len as usize;
+        if end > bytes.len() {
+            return None;
+        }
+        if fnv1a(&bytes[start..end]) != read_u64(bytes, off + 4) {
+            return None;
+        }
+        Some(end)
+    }
+
+    /// Path this store was opened at.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of distinct epoch records held (loaded + absorbed).
+    pub fn epochs(&self) -> usize {
+        lock(&self.inner).known.len()
+    }
+
+    /// Number of distinct sweep-point fingerprints held.
+    pub fn points(&self) -> usize {
+        lock(&self.inner).known_points.len()
+    }
+
+    /// Copy every stored epoch into `cache`, returning how many were
+    /// actually inserted (entries already present, or dropped by the
+    /// shard capacity limit, do not count). Inserted entries bump the
+    /// cache's `hydrated` counter, never its hit/miss counters.
+    pub fn hydrate(&self, cache: &EpochCache) -> usize {
+        let inner = lock(&self.inner);
+        let mut fresh = 0;
+        for &(key, result, tiers) in &inner.entries {
+            if cache.insert(key, result, tiers) {
+                fresh += 1;
+            }
+        }
+        fresh
+    }
+
+    /// Append every cache entry not already on disk, returning how many
+    /// new records were written. The batch is framed in memory and
+    /// written with a single append so concurrent handles interleave
+    /// only at batch boundaries.
+    pub fn absorb(&self, cache: &EpochCache) -> Result<usize> {
+        let snapshot = cache.snapshot_entries();
+        let mut inner = lock(&self.inner);
+        let mut buf = Vec::new();
+        let mut fresh = 0;
+        for (key, result, tiers) in snapshot {
+            if !inner.known.insert(key) {
+                continue;
+            }
+            frame_into(&mut buf, &epoch_payload(key, result, tiers));
+            inner.entries.push((key, result, tiers));
+            fresh += 1;
+        }
+        if !buf.is_empty() {
+            inner
+                .file
+                .write_all(&buf)
+                .with_context(|| format!("appending to cache file {}", self.path.display()))?;
+        }
+        Ok(fresh)
+    }
+
+    /// True when `fingerprint` was recorded by a previous sweep run —
+    /// i.e. this exact point configuration has been evaluated before
+    /// and its epochs are already in the log.
+    pub fn known_point(&self, fingerprint: (u64, u64)) -> bool {
+        lock(&self.inner).known_points.contains(&fingerprint)
+    }
+
+    /// Record a sweep-point fingerprint. Returns `Ok(true)` if it was
+    /// new, `Ok(false)` if this handle already knew it (nothing
+    /// written).
+    pub fn record_point(&self, fingerprint: (u64, u64)) -> Result<bool> {
+        let mut inner = lock(&self.inner);
+        if !inner.known_points.insert(fingerprint) {
+            return Ok(false);
+        }
+        let mut buf = Vec::new();
+        frame_into(&mut buf, &point_payload(fingerprint));
+        inner
+            .file
+            .write_all(&buf)
+            .with_context(|| format!("appending to cache file {}", self.path.display()))?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("siam_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{}_{}.siamepc", name, std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    fn entry(i: u64) -> (EpochKey, EpochResult, TierCounts) {
+        (
+            EpochKey {
+                lo: i.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                hi: !i,
+            },
+            EpochResult {
+                completion_cycles: 100 + i,
+                packets: 10 + i,
+                total_latency_cycles: 1000 + i,
+                flit_hops: 40 + i,
+            },
+            TierCounts {
+                closed_form: i % 2,
+                periodic: (i + 1) % 2,
+                extrapolated: 0,
+                packet_fallback: 0,
+            },
+        )
+    }
+
+    fn populated_store(path: &Path, n: u64) -> EpochCache {
+        let cache = EpochCache::default();
+        for i in 0..n {
+            let (k, r, t) = entry(i);
+            assert!(cache.insert(k, r, t));
+        }
+        let (store, report) = EpochStore::open(path).unwrap();
+        assert_eq!(report, LoadReport::default());
+        assert_eq!(store.absorb(&cache).unwrap(), n as usize);
+        cache
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical_and_absorb_dedups() {
+        let path = tmp("round_trip");
+        let cache = populated_store(&path, 8);
+
+        let (store, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report.epochs_loaded, 8);
+        assert_eq!(report.truncated_bytes, 0);
+        assert_eq!(report.duplicate_records, 0);
+        assert!(!report.stale_generation);
+
+        let warm = EpochCache::default();
+        assert_eq!(store.hydrate(&warm), 8);
+        assert_eq!(warm.hydrated(), 8);
+        assert_eq!(warm.snapshot_entries(), cache.snapshot_entries());
+        // Everything hydrated is already known: nothing new to write.
+        assert_eq!(store.absorb(&warm).unwrap(), 0);
+        // Hydrating the same cache twice inserts nothing new.
+        assert_eq!(store.hydrate(&warm), 0);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_to_the_last_valid_record() {
+        let path = tmp("torn_tail");
+        populated_store(&path, 3);
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 5).unwrap(); // cut into the last record
+        drop(f);
+
+        let (store, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report.epochs_loaded, 2);
+        assert_eq!(report.truncated_bytes, (EPOCH_PAYLOAD_LEN + FRAME_LEN - 5) as u64);
+        assert_eq!(store.epochs(), 2);
+        // The repaired file reloads with nothing left to discard.
+        drop(store);
+        let (_, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report.truncated_bytes, 0);
+        assert_eq!(report.epochs_loaded, 2);
+    }
+
+    #[test]
+    fn flipped_checksum_byte_discards_the_tail_never_reads_garbage() {
+        let path = tmp("checksum_flip");
+        populated_store(&path, 3);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Corrupt one payload byte inside the *second* record.
+        let second = HEADER_LEN + (FRAME_LEN + EPOCH_PAYLOAD_LEN) + FRAME_LEN + 20;
+        bytes[second] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (store, report) = EpochStore::open(&path).unwrap();
+        // Record 1 survives; records 2 and 3 are gone (loss, not lies).
+        assert_eq!(report.epochs_loaded, 1);
+        assert_eq!(
+            report.truncated_bytes,
+            2 * (FRAME_LEN + EPOCH_PAYLOAD_LEN) as u64
+        );
+        let warm = EpochCache::default();
+        assert_eq!(store.hydrate(&warm), 1);
+        let (k, r, t) = entry(0);
+        assert_eq!(warm.snapshot_entries(), vec![(k, r, t)]);
+    }
+
+    #[test]
+    fn stale_generation_discards_the_log_and_resets_the_header() {
+        let path = tmp("stale_gen");
+        populated_store(&path, 4);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[16..24].copy_from_slice(&(EPOCH_STORE_GENERATION + 1).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (store, report) = EpochStore::open(&path).unwrap();
+        assert!(report.stale_generation);
+        assert_eq!(report.epochs_loaded, 0);
+        assert_eq!(
+            report.truncated_bytes,
+            4 * (FRAME_LEN + EPOCH_PAYLOAD_LEN) as u64
+        );
+        assert_eq!(store.epochs(), 0);
+        // The reset file is immediately reusable at the new generation.
+        drop(store);
+        let (_, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report, LoadReport::default());
+    }
+
+    #[test]
+    fn foreign_or_newer_files_are_hard_errors_and_left_untouched() {
+        let path = tmp("foreign");
+        std::fs::write(&path, b"definitely not an epoch cache file").unwrap();
+        let err = EpochStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            b"definitely not an epoch cache file"
+        );
+
+        let mut newer = header_bytes(EPOCH_STORE_GENERATION).to_vec();
+        newer[8..12].copy_from_slice(&(EPOCH_STORE_VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &newer).unwrap();
+        let err = EpochStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("unsupported epoch cache version"), "{err}");
+        assert_eq!(std::fs::read(&path).unwrap(), newer);
+    }
+
+    #[test]
+    fn empty_and_torn_header_files_are_initialised_in_place() {
+        let path = tmp("empty");
+        std::fs::write(&path, b"").unwrap();
+        let (store, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report, LoadReport::default());
+        assert_eq!(store.epochs(), 0);
+        drop(store);
+
+        // A prefix of a fresh header (torn initial write) re-inits.
+        std::fs::write(&path, &header_bytes(EPOCH_STORE_GENERATION)[..10]).unwrap();
+        let (_, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report.truncated_bytes, 10);
+        assert_eq!(report.epochs_loaded, 0);
+
+        // A short file that is NOT a header prefix is a hard error.
+        std::fs::write(&path, b"SIAMEPCX").unwrap();
+        assert!(EpochStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn record_length_past_eof_truncates_at_the_frame() {
+        let path = tmp("past_eof");
+        populated_store(&path, 2);
+        // Append a frame whose length claims bytes that do not exist.
+        let mut extra = Vec::new();
+        extra.extend_from_slice(&200u32.to_le_bytes());
+        extra.extend_from_slice(&0u64.to_le_bytes());
+        extra.extend_from_slice(&[0xAB; 30]);
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&extra).unwrap();
+        drop(f);
+
+        let (_, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report.epochs_loaded, 2);
+        assert_eq!(report.truncated_bytes, extra.len() as u64);
+    }
+
+    #[test]
+    fn unknown_record_kind_truncates_even_with_a_valid_checksum() {
+        let path = tmp("unknown_kind");
+        populated_store(&path, 1);
+        let payload = [9u8, 1, 2, 3];
+        let mut frame = Vec::new();
+        frame_into(&mut frame, &payload);
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&frame).unwrap();
+        drop(f);
+
+        let (_, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report.epochs_loaded, 1);
+        assert_eq!(report.truncated_bytes, frame.len() as u64);
+    }
+
+    #[test]
+    fn point_fingerprints_round_trip_and_dedup() {
+        let path = tmp("points");
+        let (store, _) = EpochStore::open(&path).unwrap();
+        assert!(store.record_point((7, 9)).unwrap());
+        assert!(!store.record_point((7, 9)).unwrap());
+        assert!(store.record_point((8, 0)).unwrap());
+        assert!(store.known_point((7, 9)));
+        assert!(!store.known_point((1, 1)));
+        drop(store);
+
+        let (store, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report.points_loaded, 2);
+        assert_eq!(report.duplicate_records, 0);
+        assert_eq!(store.points(), 2);
+        assert!(store.known_point((7, 9)) && store.known_point((8, 0)));
+    }
+
+    #[test]
+    fn duplicate_records_from_independent_handles_are_counted_once() {
+        let path = tmp("dup_handles");
+        let cache = EpochCache::default();
+        let (k, r, t) = entry(42);
+        cache.insert(k, r, t);
+        // Two handles on the same path: each has its own known-set, so
+        // a point raced by both handles lands in the log twice and the
+        // next load counts (and ignores) the duplicate.
+        let (a, _) = EpochStore::open(&path).unwrap();
+        a.absorb(&cache).unwrap();
+        let (b, _) = EpochStore::open(&path).unwrap();
+        assert_eq!(b.absorb(&cache).unwrap(), 0); // b loaded it already
+        b.record_point((1, 2)).unwrap();
+        a.record_point((1, 2)).unwrap(); // a does not know b wrote it
+        drop((a, b));
+
+        let (_, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report.epochs_loaded, 1);
+        assert_eq!(report.points_loaded, 1);
+        assert_eq!(report.duplicate_records, 1);
+        assert_eq!(report.truncated_bytes, 0);
+    }
+
+    #[test]
+    fn missing_file_is_created_with_a_fresh_header() {
+        let path = tmp("fresh");
+        let (store, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report, LoadReport::default());
+        assert_eq!(store.path(), path.as_path());
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            header_bytes(EPOCH_STORE_GENERATION)
+        );
+    }
+}

@@ -159,6 +159,167 @@ pub fn evaluate_cached_obs(
     }
 }
 
+/// Analytic lower-bound NoP evaluation — the cheap scoring tier behind
+/// `sweep --search pareto|halving` (see `coordinator::dse`).
+///
+/// As for [`crate::noc::evaluate_bound`]: `packets`, `flit_hops`,
+/// `bits` and every energy/area/leakage figure are **bit-identical** to
+/// [`evaluate`] (flit-hop counts are trace-determined); `cycles` and
+/// `metrics.latency_ns` are provable lower bounds. `tiers` stays zero.
+pub fn evaluate_bound(cfg: &SiamConfig, traffic: &Traffic, placement: &Placement) -> NopReport {
+    let tech = crate::circuit::Tech::from_device(&cfg.device);
+    let wire = WireModel::new(&cfg.system.nop);
+    let drv = DriverModel::new(&cfg.system.nop);
+    let mesh = Mesh::from_placement(placement);
+    let defaults = FlowSim::new(&mesh); // engine defaults only
+
+    let mut per_layer: std::collections::BTreeMap<usize, u64> = Default::default();
+    let mut packets = 0u64;
+    let mut flit_hops = 0u64;
+    for ep in &traffic.nop_epochs {
+        let r = crate::noc::flow::epoch_bound(
+            &mesh,
+            defaults.router_delay,
+            defaults.flits_per_packet,
+            &ep.flows,
+        );
+        *per_layer.entry(ep.layer).or_default() += r.completion_cycles;
+        packets += r.packets;
+        flit_hops += r.flit_hops;
+    }
+    let cycles: u64 = per_layer.values().sum();
+    let per_layer_cycles: Vec<(usize, u64)> = per_layer.into_iter().collect();
+
+    // ---- energy & area: identical to `evaluate_cached_obs`
+    let bits_per_flit = cfg.system.nop.bits_per_cycle() as f64;
+    let bits = flit_hops as f64 * bits_per_flit;
+    let router_e = crate::noc::power::router(
+        cfg.system.nop.channel_width,
+        4,
+        cfg.system.nop.router_ports,
+        &tech,
+    );
+    let energy_pj = drv.energy_pj(bits) + flit_hops as f64 * router_e.flit_energy_pj;
+    let nodes = placement.nodes() as f64;
+    let ports_per_node = 4.0_f64.min(cfg.system.nop.router_ports as f64 - 1.0);
+    let die_area = nodes * (ports_per_node * drv.area_per_chiplet_um2 + router_e.area_um2);
+    let interposer_area = placement.links() as f64 * wire.link_area_um2;
+
+    let clk_ns = 1.0e3 / wire.eff_freq_mhz;
+    NopReport {
+        metrics: Metrics {
+            area_um2: die_area + interposer_area,
+            energy_pj,
+            latency_ns: cycles as f64 * clk_ns,
+            leakage_uw: nodes * (ports_per_node * drv.leakage_uw + router_e.leakage_uw),
+        },
+        cycles,
+        packets,
+        flit_hops,
+        eff_freq_mhz: wire.eff_freq_mhz,
+        bits,
+        die_area_um2: die_area,
+        interposer_area_um2: interposer_area,
+        per_layer_cycles,
+        tiers: TierCounts::default(),
+    }
+}
+
+/// Class-aware variant of [`evaluate_bound`], mirroring
+/// [`evaluate_mapped`]: per-class TX/RX driver energy, area and leakage
+/// are bit-identical to the full evaluator (they are pure functions of
+/// the trace), timing is a provable lower bound. Single-kind systems
+/// take [`evaluate_bound`].
+pub fn evaluate_mapped_bound(
+    cfg: &SiamConfig,
+    traffic: &Traffic,
+    placement: &Placement,
+    map: &MappingResult,
+) -> NopReport {
+    if !cfg.has_hetero_classes() || cfg.system.chip_mode == ChipMode::Monolithic {
+        return evaluate_bound(cfg, traffic, placement);
+    }
+    let tech = crate::circuit::Tech::from_device(&cfg.device);
+    let wire = WireModel::new(&cfg.system.nop);
+    let classes = cfg.resolved_chiplet_classes();
+    let drvs: Vec<DriverModel> = classes
+        .iter()
+        .map(|c| DriverModel::new(&c.nop_effective(&cfg.system.nop)))
+        .collect();
+    let base_drv = DriverModel::new(&cfg.system.nop);
+    let drv_of = |node: usize| -> &DriverModel {
+        if node < map.num_chiplets {
+            &drvs[map.chiplet_class[node]]
+        } else {
+            &base_drv
+        }
+    };
+    let mesh = Mesh::from_placement(placement);
+    let defaults = FlowSim::new(&mesh); // engine defaults only
+
+    let mut per_layer: std::collections::BTreeMap<usize, u64> = Default::default();
+    let mut packets = 0u64;
+    let mut flit_hops = 0u64;
+    for ep in &traffic.nop_epochs {
+        let r = crate::noc::flow::epoch_bound(
+            &mesh,
+            defaults.router_delay,
+            defaults.flits_per_packet,
+            &ep.flows,
+        );
+        *per_layer.entry(ep.layer).or_default() += r.completion_cycles;
+        packets += r.packets;
+        flit_hops += r.flit_hops;
+    }
+    let cycles: u64 = per_layer.values().sum();
+    let per_layer_cycles: Vec<(usize, u64)> = per_layer.into_iter().collect();
+
+    // ---- energy & area: identical to `evaluate_mapped_obs`
+    let bits_per_flit = cfg.system.nop.bits_per_cycle() as f64;
+    let bits = flit_hops as f64 * bits_per_flit;
+    let router_e = crate::noc::power::router(
+        cfg.system.nop.channel_width,
+        4,
+        cfg.system.nop.router_ports,
+        &tech,
+    );
+    let mut drv_energy = 0.0;
+    for ep in &traffic.nop_epochs {
+        for f in &ep.flows {
+            let flow_bits = (f.count * mesh.hops(f.src, f.dst) as u64) as f64 * bits_per_flit;
+            drv_energy += flow_bits * drv_of(f.src as usize).ebit_pj;
+        }
+    }
+    let energy_pj = drv_energy + flit_hops as f64 * router_e.flit_energy_pj;
+    let ports_per_node = 4.0_f64.min(cfg.system.nop.router_ports as f64 - 1.0);
+    let (mut die_area, mut leakage) = (0.0f64, 0.0f64);
+    for node in 0..placement.nodes() {
+        let d = drv_of(node);
+        die_area += ports_per_node * d.area_per_chiplet_um2 + router_e.area_um2;
+        leakage += ports_per_node * d.leakage_uw + router_e.leakage_uw;
+    }
+    let interposer_area = placement.links() as f64 * wire.link_area_um2;
+
+    let clk_ns = 1.0e3 / wire.eff_freq_mhz;
+    NopReport {
+        metrics: Metrics {
+            area_um2: die_area + interposer_area,
+            energy_pj,
+            latency_ns: cycles as f64 * clk_ns,
+            leakage_uw: leakage,
+        },
+        cycles,
+        packets,
+        flit_hops,
+        eff_freq_mhz: wire.eff_freq_mhz,
+        bits,
+        die_area_um2: die_area,
+        interposer_area_um2: interposer_area,
+        per_layer_cycles,
+        tiers: TierCounts::default(),
+    }
+}
+
 /// Class-aware NoP evaluation: like [`evaluate_cached`], but every
 /// chiplet carries its own class's TX/RX driver macro — each link
 /// traversal is re-driven at the *source chiplet's* per-bit energy, and
@@ -416,6 +577,25 @@ mod tests {
         );
         // both classes host chiplets, so some traffic pays each rate
         assert!(map.chiplets_per_class().iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn bound_is_exact_on_energy_area_and_a_lower_bound_on_time() {
+        let cfg = SiamConfig::paper_default();
+        let dnn = build_model("resnet110", "cifar10").unwrap();
+        let map = map_dnn(&dnn, &cfg).unwrap();
+        let pl = Placement::new(map.num_chiplets);
+        let traffic = build_traffic(&dnn, &map, &pl, &cfg);
+        let full = evaluate_mapped(&cfg, &traffic, &pl, &map, None);
+        let lb = evaluate_mapped_bound(&cfg, &traffic, &pl, &map);
+        assert_eq!(lb.packets, full.packets);
+        assert_eq!(lb.flit_hops, full.flit_hops);
+        assert_eq!(lb.bits.to_bits(), full.bits.to_bits());
+        assert_eq!(lb.metrics.energy_pj.to_bits(), full.metrics.energy_pj.to_bits());
+        assert_eq!(lb.metrics.area_um2.to_bits(), full.metrics.area_um2.to_bits());
+        assert_eq!(lb.metrics.leakage_uw.to_bits(), full.metrics.leakage_uw.to_bits());
+        assert!(lb.cycles <= full.cycles, "{} > {}", lb.cycles, full.cycles);
+        assert!(lb.metrics.latency_ns <= full.metrics.latency_ns);
     }
 
     #[test]

@@ -25,6 +25,10 @@ pub struct CacheSnapshot {
     pub misses: u64,
     /// Entries resident in the cache.
     pub entries: usize,
+    /// Entries hydrated from a persistent store rather than computed —
+    /// warm runs report their reuse here instead of masquerading as
+    /// fresh simulations.
+    pub hydrated: u64,
     /// Per-shard `(hits, misses)` in shard order.
     pub shards: Vec<(u64, u64)>,
 }
@@ -36,6 +40,7 @@ impl CacheSnapshot {
             hits: cache.hits(),
             misses: cache.misses(),
             entries: cache.len(),
+            hydrated: cache.hydrated(),
             shards: cache.shard_stats(),
         }
     }
@@ -56,7 +61,8 @@ impl CacheSnapshot {
         o.set("hits", self.hits)
             .set("misses", self.misses)
             .set("hit_rate", self.hit_rate())
-            .set("entries", self.entries);
+            .set("entries", self.entries)
+            .set("hydrated", self.hydrated);
         let shards: Vec<Json> = self
             .shards
             .iter()
@@ -127,12 +133,31 @@ impl RunMeta {
 
 /// FNV-1a 64-bit hash of a byte string.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    fnv1a_seeded(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// FNV-1a with a caller-chosen initial state — the second lane of the
+/// 128-bit point fingerprint decorrelates from the first by seeding
+/// with a perturbed copy of it.
+fn fnv1a_seeded(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// 128-bit fingerprint of one complete configuration, as two FNV-1a
+/// lanes over the serialized TOML: the standard hash, and a second pass
+/// seeded from the first (golden-ratio perturbed). Sweep runs record
+/// these in the persistent epoch cache so re-runs can tell edited
+/// design points from already-explored ones.
+pub fn point_fingerprint(cfg: &SiamConfig) -> (u64, u64) {
+    let text = cfg.to_toml_string().unwrap_or_default();
+    let lo = fnv1a(text.as_bytes());
+    let hi = fnv1a_seeded(lo ^ 0x9e37_79b9_7f4a_7c15, text.as_bytes());
+    (lo, hi)
 }
 
 /// Fingerprint of the complete serialized configuration, `%016x`
@@ -161,6 +186,18 @@ mod tests {
     }
 
     #[test]
+    fn point_fingerprints_are_stable_and_lane_independent() {
+        let base = SiamConfig::paper_default();
+        let (lo, hi) = point_fingerprint(&base);
+        assert_eq!((lo, hi), point_fingerprint(&base), "must be deterministic");
+        assert_ne!(lo, hi, "the two lanes must decorrelate");
+        // the first lane is the config fingerprint everyone else reports
+        assert_eq!(format!("{lo:016x}"), config_fingerprint(&base));
+        let edited = point_fingerprint(&base.clone().with_tiles_per_chiplet(25));
+        assert_ne!((lo, hi), edited, "a config edit must change the fingerprint");
+    }
+
+    #[test]
     fn meta_json_carries_the_stable_keys() {
         let mut m = RunMeta::for_config(&SiamConfig::paper_default());
         m.model_source = "builtin".into();
@@ -169,6 +206,7 @@ mod tests {
             hits: 3,
             misses: 1,
             entries: 1,
+            hydrated: 2,
             shards: vec![(3, 1)],
         });
         m.engine_tiers = Some(TierCounts::default());
@@ -188,5 +226,6 @@ mod tests {
         assert_eq!(j.get("schema").and_then(Json::as_str), Some(META_SCHEMA));
         let cache = j.get("epoch_cache").unwrap();
         assert_eq!(cache.get("hit_rate").and_then(Json::as_f64), Some(0.75));
+        assert_eq!(cache.get("hydrated").and_then(Json::as_f64), Some(2.0));
     }
 }

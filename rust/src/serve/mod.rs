@@ -160,9 +160,31 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// Run the serving simulator for one configuration, building a fresh
 /// [`SweepContext`]. Sweeping many points this way wastes the shared
 /// caches — use [`evaluate`] against a shared context instead.
+///
+/// A `[sweep] cache_file` on the config is honored: known epochs are
+/// hydrated before the run and fresh ones persisted after it, so a
+/// serve run warms (and is warmed by) sweeps of the same design.
 pub fn serve(cfg: &SiamConfig) -> Result<ServeReport> {
     let ctx = SweepContext::new(cfg)?;
-    evaluate(cfg, &ctx)
+    let store = open_store(cfg, &ctx)?;
+    let report = evaluate(cfg, &ctx)?;
+    if let Some(s) = &store {
+        s.absorb(ctx.epoch_cache())?;
+    }
+    Ok(report)
+}
+
+/// Open the config's persistent epoch cache (if any) and hydrate the
+/// context's in-memory cache from it.
+fn open_store(cfg: &SiamConfig, ctx: &SweepContext) -> Result<Option<crate::noc::EpochStore>> {
+    match &cfg.sweep.cache_file {
+        Some(path) => {
+            let (s, _) = crate::noc::EpochStore::open(path)?;
+            s.hydrate(ctx.epoch_cache());
+            Ok(Some(s))
+        }
+        None => Ok(None),
+    }
 }
 
 /// [`serve`] with the engine's event stream rendered into a Chrome
@@ -170,7 +192,12 @@ pub fn serve(cfg: &SiamConfig) -> Result<ServeReport> {
 /// [`serve`]'s.
 pub fn serve_traced(cfg: &SiamConfig) -> Result<(ServeReport, TraceBuffer)> {
     let ctx = SweepContext::new(cfg)?;
-    evaluate_traced(cfg, &ctx)
+    let store = open_store(cfg, &ctx)?;
+    let out = evaluate_traced(cfg, &ctx)?;
+    if let Some(s) = &store {
+        s.absorb(ctx.epoch_cache())?;
+    }
+    Ok(out)
 }
 
 /// Run the serving simulator for one configuration against a shared

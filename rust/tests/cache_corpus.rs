@@ -1,0 +1,183 @@
+//! Corruption-recovery suite for the persistent epoch cache
+//! (`siam::noc::EpochStore`).
+//!
+//! Fixtures live in `tests/cache_corpus/*.cache` — binary epoch-cache
+//! files each damaged in one specific way (regenerate them with
+//! `gen_fixtures.py` in the same directory). The recovery contract
+//! under test is *a torn tail is data loss, never wrong results*: every
+//! byte of corruption costs at most the records it touches, nothing
+//! corrupt is ever replayed, and the repaired file reopens clean.
+//!
+//! `EpochStore::open` repairs files in place, so each test copies its
+//! fixture into a scratch directory first — the checked-in corpus is
+//! immutable.
+
+use siam::noc::{EpochCache, EpochStore, LoadReport};
+use std::path::PathBuf;
+
+/// Frame overhead + payload of one epoch record, in bytes.
+const EPOCH_RECORD: u64 = 12 + 81;
+/// Frame overhead + payload of one point record, in bytes.
+const POINT_RECORD: u64 = 12 + 17;
+const HEADER: u64 = 24;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("cache_corpus")
+        .join(name)
+}
+
+/// Copy `name` into a scratch path (open() repairs in place) and
+/// return the copy's location.
+fn scratch_copy(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("siam_cache_corpus_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dst = dir.join(format!("{}_{}", std::process::id(), name));
+    let _ = std::fs::remove_file(&dst);
+    std::fs::copy(fixture(name), &dst)
+        .unwrap_or_else(|e| panic!("copying fixture {name}: {e}"));
+    dst
+}
+
+/// Open the damaged copy, assert the exact [`LoadReport`], then assert
+/// the file was repaired: a reopen is clean (nothing further truncated,
+/// same record counts) and the file has shrunk to `repaired_len`.
+fn assert_recovery(name: &str, want: LoadReport, repaired_len: u64) {
+    let path = scratch_copy(name);
+    let (store, report) = EpochStore::open(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+    assert_eq!(report, want, "{name}: first-open load report");
+    assert_eq!(store.epochs(), want.epochs_loaded, "{name}: epochs held");
+    assert_eq!(store.points(), want.points_loaded, "{name}: points held");
+    // hydration hands a cache exactly the surviving records — the
+    // corrupt ones are gone, not garbled
+    let cache = EpochCache::new();
+    let fresh = store.hydrate(&cache);
+    assert_eq!(fresh, want.epochs_loaded, "{name}: hydrated entries");
+    assert_eq!(cache.len(), want.epochs_loaded);
+    assert_eq!(cache.hydrated(), want.epochs_loaded as u64);
+    assert_eq!((cache.hits(), cache.misses()), (0u64, 0u64), "{name}: hydration is not traffic");
+    drop(store);
+    assert_eq!(
+        std::fs::metadata(&path).unwrap().len(),
+        repaired_len,
+        "{name}: repaired file length"
+    );
+    let (store, second) = EpochStore::open(&path).unwrap();
+    assert_eq!(second.truncated_bytes, 0, "{name}: reopen must be clean");
+    assert!(!second.stale_generation, "{name}: repaired generation is current");
+    assert_eq!(second.epochs_loaded, want.epochs_loaded, "{name}: reopen epochs");
+    assert_eq!(second.points_loaded, want.points_loaded, "{name}: reopen points");
+    drop(store);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corpus_is_populated() {
+    for name in [
+        "truncated_tail.cache",
+        "flipped_checksum.cache",
+        "stale_generation.cache",
+        "zero_length.cache",
+        "length_past_eof.cache",
+    ] {
+        assert!(fixture(name).exists(), "missing fixture {name}");
+    }
+}
+
+#[test]
+fn truncated_tail_loses_only_the_torn_record() {
+    // header + 2 epochs + 1 point + 40 bytes of a torn epoch append:
+    // everything before the tear survives, the tear is discarded
+    assert_recovery(
+        "truncated_tail.cache",
+        LoadReport {
+            epochs_loaded: 2,
+            points_loaded: 1,
+            duplicate_records: 0,
+            truncated_bytes: 40,
+            stale_generation: false,
+        },
+        HEADER + 2 * EPOCH_RECORD + POINT_RECORD,
+    );
+}
+
+#[test]
+fn flipped_checksum_byte_drops_the_record_not_the_file() {
+    // the third record's checksum was flipped: its payload bytes are
+    // intact but unverifiable, so it must be dropped — replaying a
+    // record that fails its checksum would risk wrong epoch results
+    assert_recovery(
+        "flipped_checksum.cache",
+        LoadReport {
+            epochs_loaded: 2,
+            points_loaded: 0,
+            duplicate_records: 0,
+            truncated_bytes: EPOCH_RECORD,
+            stale_generation: false,
+        },
+        HEADER + 2 * EPOCH_RECORD,
+    );
+}
+
+#[test]
+fn stale_generation_discards_the_whole_log() {
+    // generation 0 log under a generation-1 reader: every record was
+    // produced by incompatible simulator semantics, so none may be
+    // replayed — the file resets to a fresh current-generation header
+    assert_recovery(
+        "stale_generation.cache",
+        LoadReport {
+            epochs_loaded: 0,
+            points_loaded: 0,
+            duplicate_records: 0,
+            truncated_bytes: 2 * EPOCH_RECORD,
+            stale_generation: true,
+        },
+        HEADER,
+    );
+}
+
+#[test]
+fn zero_length_file_is_initialised_in_place() {
+    // an interrupted create left an empty file: treated like a missing
+    // one — fresh header, nothing lost because nothing existed
+    assert_recovery("zero_length.cache", LoadReport::default(), HEADER);
+}
+
+#[test]
+fn length_past_eof_truncates_at_the_last_valid_record() {
+    // the second frame claims an 81-byte payload but the file ends 10
+    // bytes in: the frame (and its 10 orphan bytes) are discarded
+    assert_recovery(
+        "length_past_eof.cache",
+        LoadReport {
+            epochs_loaded: 1,
+            points_loaded: 0,
+            duplicate_records: 0,
+            truncated_bytes: 12 + 10,
+            stale_generation: false,
+        },
+        HEADER + EPOCH_RECORD,
+    );
+}
+
+#[test]
+fn recovered_files_accept_new_appends() {
+    // recovery must leave a healthy log: appending a point fingerprint
+    // after repair and reopening keeps every prior record plus the new
+    // one (the repaired tail is a valid record boundary)
+    let path = scratch_copy("truncated_tail.cache");
+    let (store, _) = EpochStore::open(&path).unwrap();
+    assert!(store.record_point((0xAB, 0xCD)).unwrap());
+    assert!(!store.record_point((0xAB, 0xCD)).unwrap(), "second write is a no-op");
+    drop(store);
+    let (store, report) = EpochStore::open(&path).unwrap();
+    assert_eq!(report.truncated_bytes, 0);
+    assert_eq!(report.epochs_loaded, 2);
+    assert_eq!(report.points_loaded, 2, "the old and the new point");
+    assert!(store.known_point((0xAB, 0xCD)));
+    assert!(store.known_point((0x55, 0x66)), "the fixture's point survived");
+    drop(store);
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Regenerate the binary corruption fixtures for tests/cache_corpus.rs.
+
+Each fixture is a SIAM epoch-cache file (see rust/src/noc/store.rs for
+the format) damaged in one specific way. The harness asserts the
+documented recovery for every file, so any change here must be mirrored
+in the expectations of cache_corpus.rs.
+
+Run from this directory: python3 gen_fixtures.py
+"""
+
+import struct
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+
+MAGIC = b"SIAMEPC1"
+VERSION = 1
+GENERATION = 1
+
+
+def fnv1a(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x00000100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def header(generation: int = GENERATION) -> bytes:
+    return MAGIC + struct.pack("<II", VERSION, 0) + struct.pack("<Q", generation)
+
+
+def frame(payload: bytes) -> bytes:
+    return struct.pack("<IQ", len(payload), fnv1a(payload)) + payload
+
+
+def epoch(lo, hi, completion, packets, latency, hops, cf, per, ext, pf) -> bytes:
+    return frame(
+        b"\x00"
+        + struct.pack("<10Q", lo, hi, completion, packets, latency, hops, cf, per, ext, pf)
+    )
+
+
+def point(lo, hi) -> bytes:
+    return frame(b"\x01" + struct.pack("<QQ", lo, hi))
+
+
+# the shared record set the harness knows by heart
+A = epoch(0x11, 0x22, 100, 7, 350, 21, 5, 1, 1, 0)
+B = epoch(0x33, 0x44, 200, 9, 900, 63, 9, 0, 0, 0)
+C = epoch(0x77, 0x88, 300, 11, 1500, 99, 11, 0, 0, 0)
+P = point(0x55, 0x66)
+assert len(A) == len(B) == len(C) == 12 + 81
+assert len(P) == 12 + 17
+
+FIXTURES = {
+    # a torn append: the last record stops mid-payload
+    "truncated_tail.cache": header() + A + B + P + C[:40],
+    # one flipped checksum byte on the final record
+    "flipped_checksum.cache": header() + A + B + C[:4] + bytes([C[4] ^ 0xFF]) + C[5:],
+    # a log written by an outdated simulator generation
+    "stale_generation.cache": header(generation=0) + A + B,
+    # an interrupted create: the file exists but holds nothing
+    "zero_length.cache": b"",
+    # a frame whose declared length runs past end-of-file
+    "length_past_eof.cache": header() + A + struct.pack("<IQ", 81, 0xDEADBEEF) + b"\x00" * 10,
+}
+
+for name, data in FIXTURES.items():
+    (HERE / name).write_bytes(data)
+    print(f"{name}: {len(data)} bytes")

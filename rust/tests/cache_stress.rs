@@ -1,0 +1,119 @@
+//! Concurrency stress for the persistent epoch cache: several threads
+//! share one `EpochStore` handle while sweeping disjoint shards of the
+//! design grid. The file must come out of it healthy — it reloads
+//! cleanly, every shard's point fingerprint is present exactly once,
+//! and the results match the single-threaded no-cache reference bit
+//! for bit.
+
+use siam::config::{ChipletStructure, SiamConfig};
+use siam::coordinator::{SweepBuilder, SweepPoint};
+use siam::noc::EpochStore;
+use siam::obs::meta::point_fingerprint;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// The sharded grid: each inner slice is one thread's tile axis.
+const SHARDS: [&[usize]; 4] = [&[4], &[9], &[16], &[25]];
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("siam_cache_stress_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{}_{}.cache", name, std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+/// The bit pattern of everything a sweep point reports that the
+/// rankings depend on.
+fn point_bits(p: &SweepPoint) -> (usize, u64, u64, u64, u64) {
+    (
+        p.report.num_chiplets,
+        p.report.total.latency_ns.to_bits(),
+        p.report.total.energy_pj.to_bits(),
+        p.report.total.area_um2.to_bits(),
+        p.report.total.edap().to_bits(),
+    )
+}
+
+#[test]
+fn concurrent_shards_share_one_cache_file_safely() {
+    let base = SiamConfig::paper_default();
+    let path = scratch("shards");
+    let store = Arc::new(EpochStore::open(&path).unwrap().0);
+
+    // one thread per shard, all appending through the same handle
+    let shard_points: Vec<Vec<SweepPoint>> = std::thread::scope(|s| {
+        let handles: Vec<_> = SHARDS
+            .iter()
+            .map(|&tiles| {
+                let store = store.clone();
+                let base = &base;
+                s.spawn(move || {
+                    SweepBuilder::new(base)
+                        .tiles(tiles)
+                        .chiplet_counts(&[None])
+                        .cache_store(store)
+                        .run()
+                        .unwrap()
+                        .points
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // the single-threaded, cache-free reference over the merged grid
+    let all_tiles: Vec<usize> = SHARDS.iter().flat_map(|s| s.iter().copied()).collect();
+    let reference = SweepBuilder::new(&base)
+        .tiles(&all_tiles)
+        .chiplet_counts(&[None])
+        .serial()
+        .run()
+        .unwrap();
+    assert_eq!(reference.len(), SHARDS.len());
+
+    // every shard's single point matches its reference point bitwise
+    for (shard, reference_point) in shard_points.iter().zip(&reference.points) {
+        assert_eq!(shard.len(), 1);
+        assert_eq!(shard[0].tiles_per_chiplet, reference_point.tiles_per_chiplet);
+        assert_eq!(point_bits(&shard[0]), point_bits(reference_point));
+    }
+
+    // the file the threads raced on reloads cleanly: no torn tail, no
+    // duplicate records, every shard's fingerprint present exactly once
+    drop(store);
+    let (store, report) = EpochStore::open(&path).unwrap();
+    assert_eq!(report.truncated_bytes, 0, "no torn tail");
+    assert!(!report.stale_generation);
+    assert_eq!(report.duplicate_records, 0, "each record written exactly once");
+    assert_eq!(report.points_loaded, SHARDS.len(), "one fingerprint per shard point");
+    assert!(report.epochs_loaded > 0, "the shards' epochs were persisted");
+    for &tiles in &SHARDS {
+        let pc = base
+            .clone()
+            .with_tiles_per_chiplet(tiles[0])
+            .with_chiplet_structure(ChipletStructure::Custom);
+        assert!(
+            store.known_point(point_fingerprint(&pc)),
+            "tiles={} fingerprint missing",
+            tiles[0]
+        );
+    }
+
+    // a warm merged sweep over the reloaded store replays everything
+    // and still ranks exactly like the reference
+    let warm = SweepBuilder::new(&base)
+        .tiles(&all_tiles)
+        .chiplet_counts(&[None])
+        .cache_store(Arc::new(store))
+        .run()
+        .unwrap();
+    assert_eq!(warm.stats.epoch_misses, 0, "warm run must only replay");
+    assert!(warm.stats.epochs_hydrated > 0);
+    assert_eq!(warm.stats.points_known, SHARDS.len());
+    assert_eq!(warm.len(), reference.len());
+    for (w, r) in warm.points.iter().zip(&reference.points) {
+        assert_eq!(point_bits(w), point_bits(r));
+    }
+    let _ = std::fs::remove_file(&path);
+}

@@ -574,3 +574,156 @@ fn metrics_composition_laws() {
         assert!((r.latency_ns - m1.latency_ns).abs() < 1e-9);
     });
 }
+
+// ---------------------------------------------------------------------------
+// persistent epoch cache (noc::store) + pruned sweep searches
+// ---------------------------------------------------------------------------
+
+/// Scratch path for one persistent-cache property case, unique per
+/// process and call.
+fn cache_scratch(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join("siam_proptest_cache");
+    std::fs::create_dir_all(&dir).unwrap();
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let path = dir.join(format!("{tag}_{}_{n}.cache", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+#[test]
+fn cache_file_round_trips_sweeps_bit_identically() {
+    use siam::coordinator::SweepBuilder;
+    // write-then-load over randomized epoch batches, through the public
+    // surface: a cold sweep persists its epochs, a warm re-run replays
+    // them from disk — and every report must come back bit-identical,
+    // with zero fresh simulation
+    check_property("cache_round_trip", 6, 0xCAC4E, |rng| {
+        let (model, ds) = MODELS[rng.below(3) as usize]; // small models
+        let cfg = random_cfg(rng).with_model(model, ds);
+        let tiles = [rng.range(4, 12) as usize, rng.range(13, 30) as usize];
+        let path = cache_scratch("round_trip");
+        let spath = path.to_str().unwrap().to_string();
+        let run = || {
+            SweepBuilder::new(&cfg)
+                .tiles(&tiles)
+                .chiplet_counts(&[None])
+                .cache_file(&spath)
+                .run()
+                .unwrap()
+        };
+        let cold = run();
+        let warm = run();
+        assert_eq!(warm.stats.epoch_misses, 0, "warm run must only replay");
+        assert!(warm.stats.epochs_hydrated > 0);
+        // every grid point (evaluated or skipped) was fingerprinted
+        assert_eq!(warm.stats.points_known, tiles.len());
+        assert_eq!(cold.len(), warm.len());
+        for (c, w) in cold.points.iter().zip(&warm.points) {
+            assert_eq!(c.tiles_per_chiplet, w.tiles_per_chiplet);
+            assert_eq!(
+                c.report.total.latency_ns.to_bits(),
+                w.report.total.latency_ns.to_bits()
+            );
+            assert_eq!(c.report.total.energy_pj.to_bits(), w.report.total.energy_pj.to_bits());
+            assert_eq!(c.report.total.area_um2.to_bits(), w.report.total.area_um2.to_bits());
+            assert_eq!(c.report.engine_tiers, w.report.engine_tiers);
+        }
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+#[test]
+fn pruned_searches_find_the_exhaustive_best_on_random_grids() {
+    use siam::config::SearchMode;
+    use siam::coordinator::{FigureOfMerit, SweepBuilder};
+    const FOMS: [FigureOfMerit; 6] = [
+        FigureOfMerit::Edap,
+        FigureOfMerit::Edp,
+        FigureOfMerit::Energy,
+        FigureOfMerit::Latency,
+        FigureOfMerit::Area,
+        FigureOfMerit::InferencesPerJoule,
+    ];
+    const TILE_POOL: [usize; 10] = [2, 4, 6, 9, 12, 16, 20, 25, 30, 36];
+    check_property("pruned_search_argmax", 8, 0x9A2370, |rng| {
+        let (model, ds) = MODELS[rng.below(3) as usize]; // small models
+        let cfg = random_cfg(rng).with_model(model, ds);
+        // a random 3..5-point tile grid from the pool, ascending
+        let mut tiles: Vec<usize> = TILE_POOL.to_vec();
+        while tiles.len() > rng.range(3, 5) as usize {
+            tiles.remove(rng.below(tiles.len() as u64) as usize);
+        }
+        let fom = FOMS[rng.below(FOMS.len() as u64) as usize];
+        let keep = 0.1 + 0.9 * (rng.below(1000) as f64 / 1000.0);
+        let exhaustive = SweepBuilder::new(&cfg)
+            .tiles(&tiles)
+            .chiplet_counts(&[None])
+            .figure_of_merit(fom)
+            .serial()
+            .run()
+            .unwrap();
+        let Some(want) = exhaustive.best() else {
+            return; // nothing fits this grid: both modes must agree on that
+        };
+        let want_key = (want.tiles_per_chiplet, want.report.total.edap().to_bits());
+        for mode in [SearchMode::Pareto, SearchMode::Halving] {
+            let got = SweepBuilder::new(&cfg)
+                .tiles(&tiles)
+                .chiplet_counts(&[None])
+                .figure_of_merit(fom)
+                .search(mode)
+                .halving_keep(keep)
+                .run()
+                .unwrap();
+            let best = got.best().unwrap_or_else(|| {
+                panic!("{mode:?} lost the grid: exhaustive found {want_key:?}")
+            });
+            assert_eq!(
+                (best.tiles_per_chiplet, best.report.total.edap().to_bits()),
+                want_key,
+                "{fom:?} {mode:?} keep={keep}"
+            );
+        }
+    });
+}
+
+#[test]
+fn interleaved_appends_from_two_handles_never_corrupt_reads() {
+    use siam::noc::EpochStore;
+    // two handles on the same file, appends interleaved record by
+    // record from two threads: every record must survive, exactly once,
+    // with nothing torn — appends interleave only at record boundaries
+    check_property("two_handle_interleave", 10, 0x2F11E5, |rng| {
+        let path = cache_scratch("interleave");
+        let a = EpochStore::open(&path).unwrap().0;
+        let b = EpochStore::open(&path).unwrap().0;
+        let n = rng.range(8, 64);
+        std::thread::scope(|s| {
+            let ta = s.spawn(|| {
+                for i in 0..n {
+                    a.record_point((i, 0xA)).unwrap();
+                }
+            });
+            let tb = s.spawn(|| {
+                for i in 0..n {
+                    b.record_point((i, 0xB)).unwrap();
+                }
+            });
+            ta.join().unwrap();
+            tb.join().unwrap();
+        });
+        drop((a, b));
+        let (store, report) = EpochStore::open(&path).unwrap();
+        assert_eq!(report.truncated_bytes, 0, "no torn record");
+        assert_eq!(report.duplicate_records, 0, "disjoint writers never duplicate");
+        assert_eq!(report.points_loaded, 2 * n as usize, "every append survived");
+        for i in 0..n {
+            assert!(store.known_point((i, 0xA)));
+            assert!(store.known_point((i, 0xB)));
+        }
+        drop(store);
+        let _ = std::fs::remove_file(&path);
+    });
+}
