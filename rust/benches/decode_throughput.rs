@@ -1,0 +1,238 @@
+//! Autoregressive decode serving bench: prefill/decode split, KV-cache
+//! residency and continuous batching for the zoo decoder (`gpt2_small`).
+//!
+//! Three sections, each gated on a calibration invariant before any
+//! number is written:
+//!
+//! * **Closed loop, concurrency 1** — delivered tokens/s must equal the
+//!   reciprocal of the analytic per-token latency (prefill amortised
+//!   over the decode trajectory) within 1 %.
+//! * **Continuous-batching ladder** — closed loop at batch cap `B`
+//!   must strictly beat `B` sequential single-request runs (the fixed
+//!   per-step cost amortises across the batch; the KV cache is sized to
+//!   stay on chip so the identity is analytic).
+//! * **KV-pressure sweep** — shrinking the global buffer must move the
+//!   KV cache from fully resident (zero spill) to spilling through the
+//!   DRAM model (non-zero spill bytes and latency).
+//!
+//! A final same-seed open-loop pair asserts bit-identical reports.
+//! Every number is written to `BENCH_decode.json` at the repository
+//! root (schema `siam-bench-decode/v1`). Pass `--quick` for the CI
+//! smoke variant.
+
+use siam::config::SiamConfig;
+use siam::coordinator::SweepContext;
+use siam::obs::RunMeta;
+use siam::serve;
+use siam::util::json::Json;
+use siam::util::table::Table;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench_t0 = Instant::now();
+    let requests: usize = if quick { 8 } else { 32 };
+    let tokens: usize = if quick { 8 } else { 32 };
+    // Short prompt + a generous global buffer keep the KV cache fully
+    // on chip for the calibration sections; the pressure sweep below
+    // shrinks the buffer deliberately.
+    let mut base = SiamConfig::paper_default()
+        .with_model("gpt2_small", "seq32")
+        .with_decode(tokens, 8, 1)
+        .with_serve_requests(requests);
+    base.system.global_buffer_kb = 64 * 1024;
+    let ctx = SweepContext::new(&base)?;
+    let mut bench = Json::obj();
+    bench
+        .set("schema", "siam-bench-decode/v1")
+        .set("quick", quick)
+        .set("model", base.dnn.model.as_str())
+        .set("dataset", base.dnn.dataset.as_str())
+        .set("requests", requests)
+        .set("max_new_tokens", tokens);
+
+    // ---- closed loop, concurrency 1: the calibration gate ------------
+    println!("== Closed loop, concurrency 1: decode vs closed form ==\n");
+    let t0 = Instant::now();
+    let c1 = serve::evaluate_decode(&base.clone().with_serve_closed(1), &ctx)?;
+    let c1_wall = t0.elapsed().as_secs_f64();
+    let d1 = c1.decode.clone().expect("decode report");
+    let want_tps = 1.0e9 / d1.per_token_ns;
+    let rel_err = (d1.tokens_per_second - want_tps).abs() / want_tps;
+    println!(
+        "prefill {:.3} ms + {} decode steps => {:.2} tok/s closed form; delivered {:.2} tok/s (rel err {:.2e})",
+        d1.prefill_ns / 1e6,
+        d1.max_new_tokens - 1,
+        want_tps,
+        d1.tokens_per_second,
+        rel_err
+    );
+    assert!(
+        rel_err < 0.01,
+        "closed-loop concurrency 1 diverged from per-token closed form: {rel_err}"
+    );
+    assert_eq!(
+        d1.kv_spill_bytes_peak, 0,
+        "calibration config must keep the KV cache on chip"
+    );
+    let mut co = Json::obj();
+    co.set("concurrency_1_tokens_per_second", d1.tokens_per_second)
+        .set("closed_form_tokens_per_second", want_tps)
+        .set("per_token_ms", d1.per_token_ns / 1e6)
+        .set("prefill_ms", d1.prefill_ns / 1e6)
+        .set("ttft_p50_ms", d1.ttft_p50_ms)
+        .set("tpot_p50_ms", d1.tpot_p50_ms)
+        .set("rel_err", rel_err)
+        .set("sim_s", c1_wall);
+    bench.set("closed_loop_calibration", co);
+
+    // ---- continuous-batching ladder ----------------------------------
+    println!("\n== Continuous-batching ladder (closed loop at batch cap) ==\n");
+    let caps: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let mut t = Table::new(&[
+        "batch cap",
+        "tok/s",
+        "speedup",
+        "TTFT p50 ms",
+        "TPOT p50 ms",
+        "occ peak",
+        "KV peak kB",
+    ]);
+    let mut ladder = Vec::new();
+    let mut tps_1 = 0.0;
+    let mut tps_cap = 0.0;
+    for &b in caps {
+        let cfg = base
+            .clone()
+            .with_decode(tokens, 8, b)
+            .with_serve_closed(b)
+            .with_serve_requests(requests.max(b));
+        let rep = serve::evaluate_decode(&cfg, &ctx)?;
+        let d = rep.decode.clone().expect("decode report");
+        if b == 1 {
+            tps_1 = d.tokens_per_second;
+        }
+        tps_cap = d.tokens_per_second;
+        t.row(&[
+            b.to_string(),
+            format!("{:.1}", d.tokens_per_second),
+            format!("{:.2}x", d.tokens_per_second / tps_1),
+            format!("{:.3}", d.ttft_p50_ms),
+            format!("{:.3}", d.tpot_p50_ms),
+            d.occupancy_peak.to_string(),
+            format!("{:.1}", d.kv_peak_bytes as f64 / 1024.0),
+        ]);
+        let mut o = Json::obj();
+        o.set("batch_cap", b)
+            .set("tokens_per_second", d.tokens_per_second)
+            .set("speedup", d.tokens_per_second / tps_1)
+            .set("ttft_p50_ms", d.ttft_p50_ms)
+            .set("tpot_p50_ms", d.tpot_p50_ms)
+            .set("occupancy_peak", d.occupancy_peak)
+            .set("occupancy_mean", d.occupancy_mean)
+            .set("kv_peak_bytes", d.kv_peak_bytes as u64);
+        ladder.push(o);
+    }
+    t.print();
+    // batching gate: a batch of B sequential single-request runs takes
+    // B times the closed-1 wall clock for the same token count, so
+    // tokens/s at cap B must strictly exceed the closed-1 rate
+    assert!(
+        tps_cap > tps_1,
+        "continuous batching at cap {} ({tps_cap} tok/s) failed to beat sequential ({tps_1} tok/s)",
+        caps.last().unwrap()
+    );
+    println!(
+        "\nbatching verified: cap {} delivers {:.1} tok/s vs {:.1} tok/s sequential ({:.2}x)\n",
+        caps.last().unwrap(),
+        tps_cap,
+        tps_1,
+        tps_cap / tps_1
+    );
+    bench.set("batching_ladder", ladder);
+    let mut bo = Json::obj();
+    bo.set("sequential_tokens_per_second", tps_1)
+        .set("batched_tokens_per_second", tps_cap)
+        .set("speedup", tps_cap / tps_1);
+    bench.set("batching", bo);
+
+    // ---- KV-pressure sweep -------------------------------------------
+    println!("== KV-pressure sweep (global buffer kB vs spill) ==\n");
+    let buffers_kb: &[usize] = if quick {
+        &[64 * 1024, 256]
+    } else {
+        &[64 * 1024, 4096, 1024, 256]
+    };
+    let mut t = Table::new(&[
+        "buffer kB",
+        "KV peak kB",
+        "spill peak kB",
+        "spill ms",
+        "tok/s",
+    ]);
+    let mut sweep = Vec::new();
+    let mut spill_small = 0usize;
+    let mut spill_large = usize::MAX;
+    for &kb in buffers_kb {
+        let mut cfg = base
+            .clone()
+            .with_decode(tokens, 8, 4)
+            .with_serve_closed(4)
+            .with_serve_requests(requests.max(4));
+        cfg.system.global_buffer_kb = kb;
+        let rep = serve::evaluate_decode(&cfg, &SweepContext::new(&cfg)?)?;
+        let d = rep.decode.clone().expect("decode report");
+        if kb == *buffers_kb.first().unwrap() {
+            spill_large = d.kv_spill_bytes_peak;
+        }
+        spill_small = d.kv_spill_bytes_peak;
+        t.row(&[
+            kb.to_string(),
+            format!("{:.1}", d.kv_peak_bytes as f64 / 1024.0),
+            format!("{:.1}", d.kv_spill_bytes_peak as f64 / 1024.0),
+            format!("{:.3}", d.spill_latency_ns / 1e6),
+            format!("{:.1}", d.tokens_per_second),
+        ]);
+        let mut o = Json::obj();
+        o.set("global_buffer_kb", kb)
+            .set("kv_peak_bytes", d.kv_peak_bytes as u64)
+            .set("kv_spill_bytes_peak", d.kv_spill_bytes_peak as u64)
+            .set("spill_latency_ns", d.spill_latency_ns)
+            .set("kv_nop_ns", d.kv_nop_ns)
+            .set("tokens_per_second", d.tokens_per_second);
+        sweep.push(o);
+    }
+    t.print();
+    // pressure gate: resident at the large buffer, spilling at the small
+    assert_eq!(spill_large, 0, "large buffer must hold the KV cache");
+    assert!(
+        spill_small > 0,
+        "small buffer must force KV spill through the DRAM model"
+    );
+    println!("\npressure verified: spill 0 B at {} kB, {} B at {} kB\n", buffers_kb.first().unwrap(), spill_small, buffers_kb.last().unwrap());
+    bench.set("kv_pressure", sweep);
+
+    // ---- same-seed determinism gate ----------------------------------
+    println!("== Same-seed determinism (open loop) ==\n");
+    let mut open = base.clone().with_serve_open(0.0).with_decode(tokens, 8, 4);
+    open.serve.seed = 42;
+    let a = serve::evaluate_decode(&open, &ctx)?.to_json().to_string_pretty();
+    let b = serve::evaluate_decode(&open, &ctx)?.to_json().to_string_pretty();
+    assert_eq!(a, b, "same-seed decode runs must be bit-identical");
+    println!("verified: two seed-42 open-loop reports are byte-identical\n");
+    bench.set("determinism", {
+        let mut o = Json::obj();
+        o.set("seed", 42u64).set("bit_identical", true);
+        o
+    });
+
+    // ---- machine-readable trajectory file ----------------------------
+    let mut meta = RunMeta::for_config(&base);
+    meta.model_source = c1.model_source.clone();
+    meta.wall_seconds = bench_t0.elapsed().as_secs_f64();
+    bench.set("meta", meta.to_json());
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
+    std::fs::write(path, bench.to_string_pretty() + "\n")?;
+    println!("wrote {path}");
+    Ok(())
+}

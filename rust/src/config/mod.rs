@@ -238,6 +238,28 @@ impl SiamConfig {
         self
     }
 
+    /// Builder-style override: autoregressive decode scenario for
+    /// `siam serve --decode` (`[decode]` block) — tokens generated per
+    /// request, KV-cache precision and the continuous-batching cap.
+    pub fn with_decode(
+        mut self,
+        max_new_tokens: usize,
+        kv_precision_bits: usize,
+        batch_cap: usize,
+    ) -> Self {
+        self.decode.max_new_tokens = max_new_tokens;
+        self.decode.kv_precision_bits = kv_precision_bits;
+        self.decode.batch_cap = batch_cap;
+        self
+    }
+
+    /// Builder-style override: chunked prefill — the prompt is processed
+    /// in `ceil(seq / chunk)` sequential passes (`[decode] prefill_chunk`).
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.decode.prefill_chunk = chunk;
+        self
+    }
+
     /// Builder-style override: lognormal programming-noise sigma of the
     /// analog variation model (`[variation] sigma_program`).
     pub fn with_variation_noise(mut self, sigma: f64) -> Self {
@@ -396,6 +418,30 @@ mod tests {
         let text = SiamConfig::paper_default().to_toml_string().unwrap();
         assert!(!text.contains("sweep"), "{text}");
         assert!(SiamConfig::paper_default().sweep.is_default());
+    }
+
+    #[test]
+    fn decode_roundtrips_through_toml() {
+        let cfg = SiamConfig::paper_default()
+            .with_decode(64, 16, 4)
+            .with_prefill_chunk(32);
+        assert!(cfg.validate().is_ok());
+        let text = cfg.to_toml_string().unwrap();
+        assert!(text.contains("[decode]"), "{text}");
+        assert!(text.contains("max_new_tokens = 64"), "{text}");
+        let back = SiamConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.decode, cfg.decode);
+        // bit-exact fixed point
+        assert_eq!(back.to_toml_string().unwrap(), text);
+    }
+
+    #[test]
+    fn default_decode_config_writes_no_decode_block() {
+        // the default config must serialize byte-identically to
+        // pre-decode output: no [decode] block at all
+        let text = SiamConfig::paper_default().to_toml_string().unwrap();
+        assert!(!text.contains("decode"), "{text}");
+        assert!(SiamConfig::paper_default().decode.is_default());
     }
 
     #[test]

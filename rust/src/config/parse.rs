@@ -583,6 +583,26 @@ pub fn apply(mut cfg: SiamConfig, text: &str) -> Result<SiamConfig, String> {
     take!(m, "sweep.search", cfg.sweep.search, search_mode);
     take!(m, "sweep.halving_keep", cfg.sweep.halving_keep, Value::as_f64);
 
+    take!(
+        m,
+        "decode.max_new_tokens",
+        cfg.decode.max_new_tokens,
+        Value::as_usize
+    );
+    take!(
+        m,
+        "decode.kv_precision_bits",
+        cfg.decode.kv_precision_bits,
+        Value::as_usize
+    );
+    take!(m, "decode.batch_cap", cfg.decode.batch_cap, Value::as_usize);
+    take!(
+        m,
+        "decode.prefill_chunk",
+        cfg.decode.prefill_chunk,
+        Value::as_usize
+    );
+
     // ---- [[system.chiplet_class]] blocks: fields omitted in a block
     // inherit the base [device]/[chiplet]/[system.nop] values parsed
     // above, so a bare block is the degenerate identity class.
@@ -815,6 +835,13 @@ pub fn write(cfg: &SiamConfig) -> String {
         writeln!(s, "search = \"{}\"", cfg.sweep.search.as_str()).unwrap();
         writeln!(s, "halving_keep = {}", cfg.sweep.halving_keep).unwrap();
     }
+    if !cfg.decode.is_default() {
+        writeln!(s, "\n[decode]").unwrap();
+        writeln!(s, "max_new_tokens = {}", cfg.decode.max_new_tokens).unwrap();
+        writeln!(s, "kv_precision_bits = {}", cfg.decode.kv_precision_bits).unwrap();
+        writeln!(s, "batch_cap = {}", cfg.decode.batch_cap).unwrap();
+        writeln!(s, "prefill_chunk = {}", cfg.decode.prefill_chunk).unwrap();
+    }
     s
 }
 
@@ -957,6 +984,26 @@ mod tests {
         assert_eq!(cfg.sweep.search, SearchMode::Halving);
         assert_eq!(cfg.sweep.halving_keep, 0.25);
         assert!(apply(SiamConfig::default(), "[sweep]\nsearch = \"random\"\n").is_err());
+    }
+
+    #[test]
+    fn decode_section_applies() {
+        let cfg = apply(
+            SiamConfig::default(),
+            "[decode]\nmax_new_tokens = 64\nkv_precision_bits = 16\nbatch_cap = 4\nprefill_chunk = 32\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.decode.max_new_tokens, 64);
+        assert_eq!(cfg.decode.kv_precision_bits, 16);
+        assert_eq!(cfg.decode.batch_cap, 4);
+        assert_eq!(cfg.decode.prefill_chunk, 32);
+        assert!(!cfg.decode.is_default());
+        // negative / non-integer values are rejected with the line number
+        let err = apply(SiamConfig::default(), "[decode]\nbatch_cap = -1\n")
+            .unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        // unknown decode keys are rejected like every other section
+        assert!(apply(SiamConfig::default(), "[decode]\nkv_bits = 8\n").is_err());
     }
 
     #[test]

@@ -689,6 +689,57 @@ impl SweepConfig {
     }
 }
 
+/// Autoregressive decode-serving block (`[decode]`): the token-level
+/// generation scenario evaluated by `siam serve --decode`.
+///
+/// Generation is modeled as one prefill pass over the prompt followed by
+/// `max_new_tokens` decode steps of one token each. Decode steps reuse
+/// the weight-stationary mapping — crossbar geometry is sequence-length
+/// independent — with dynamic work collapsed to a single token (the
+/// `seq1` graph), and each resident sequence charges a KV cache of
+/// `2 · causal_layers · dim · kv_precision_bits / 8` bytes per token
+/// against the global buffer, spilling to DRAM when it overflows (see
+/// `crate::serve::decode`). The defaults are inert: the block is omitted
+/// from serialized configs when untouched and nothing changes for
+/// encoder/CNN serving, keeping every pre-decode report byte-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeConfig {
+    /// Tokens generated per request after prefill, ≥ 1.
+    pub max_new_tokens: usize,
+    /// KV-cache element precision, bits per stored key/value scalar,
+    /// in 1..=32 (8 = int8 cache, 16 = fp16).
+    pub kv_precision_bits: usize,
+    /// Continuous-batching occupancy cap: decode steps serve at most
+    /// this many resident sequences, ≥ 1. Closed-loop runs require
+    /// `batch_cap >= serve.concurrency` so no client starves.
+    pub batch_cap: usize,
+    /// Prefill chunk size in tokens; `0` = whole-prompt prefill in one
+    /// pass, otherwise the prompt is processed in `ceil(seq / chunk)`
+    /// sequential chunks (bounds TTFT memory at the cost of latency).
+    pub prefill_chunk: usize,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        DecodeConfig {
+            max_new_tokens: 32,
+            kv_precision_bits: 8,
+            batch_cap: 8,
+            prefill_chunk: 0,
+        }
+    }
+}
+
+impl DecodeConfig {
+    /// True when every field still holds its default. Such a block is
+    /// not serialized and decode mode stays opt-in (`--decode` / an
+    /// explicit `[decode]` block), so pre-decode configs round-trip
+    /// byte-identically.
+    pub fn is_default(&self) -> bool {
+        *self == DecodeConfig::default()
+    }
+}
+
 /// Complete SIAM configuration (all Table-2 blocks).
 #[derive(Debug, Clone, Default)]
 pub struct SiamConfig {
@@ -710,4 +761,6 @@ pub struct SiamConfig {
     pub variation: VariationConfig,
     /// Design-space sweep block (defaults change nothing).
     pub sweep: SweepConfig,
+    /// Autoregressive decode-serving block (defaults change nothing).
+    pub decode: DecodeConfig,
 }

@@ -357,6 +357,29 @@ impl SiamConfig {
                 ));
             }
         }
+        if !self.decode.is_default() {
+            if self.decode.max_new_tokens == 0 {
+                return err("decode max_new_tokens must be >= 1".into());
+            }
+            if !(1..=32).contains(&self.decode.kv_precision_bits) {
+                return err(format!(
+                    "decode kv_precision_bits {} must be in 1..=32",
+                    self.decode.kv_precision_bits
+                ));
+            }
+            if self.decode.batch_cap == 0 {
+                return err("decode batch_cap must be >= 1".into());
+            }
+            if self.serve.mode == ServeMode::Closed
+                && self.decode.batch_cap < self.serve.concurrency
+            {
+                return err(format!(
+                    "decode batch_cap {} must be >= serve concurrency {} \
+                     in closed-loop mode (every client needs a batch slot)",
+                    self.decode.batch_cap, self.serve.concurrency
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -494,5 +517,32 @@ mod tests {
         cfg.serve.requests = 16;
         cfg.serve.workloads = vec!["resnet110".into(), "".into()];
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn decode_block_checked() {
+        let mut cfg = SiamConfig::default();
+        cfg.decode.max_new_tokens = 0;
+        assert!(cfg.validate().is_err());
+        cfg.decode.max_new_tokens = 16;
+        assert!(cfg.validate().is_ok());
+        cfg.decode.kv_precision_bits = 0;
+        assert!(cfg.validate().is_err());
+        cfg.decode.kv_precision_bits = 33;
+        assert!(cfg.validate().is_err());
+        cfg.decode.kv_precision_bits = 16;
+        cfg.decode.batch_cap = 0;
+        assert!(cfg.validate().is_err());
+        // closed loop: every client needs a batch slot
+        cfg.decode.batch_cap = 2;
+        cfg.serve.mode = ServeMode::Closed;
+        cfg.serve.concurrency = 4;
+        assert!(cfg.validate().is_err());
+        cfg.decode.batch_cap = 4;
+        assert!(cfg.validate().is_ok());
+        // open loop has no concurrency floor
+        cfg.serve.mode = ServeMode::Open;
+        cfg.decode.batch_cap = 2;
+        assert!(cfg.validate().is_ok());
     }
 }

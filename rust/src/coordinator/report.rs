@@ -589,6 +589,10 @@ pub struct ServeReport {
     /// Mid-run chiplet-failure outcome (`[serve] fail_at_request`
     /// scenarios only).
     pub failover: Option<FailoverReport>,
+    /// Token-level generation metrics (`siam serve --decode` runs only;
+    /// `None` on classic per-request serving, keeping its JSON
+    /// byte-identical).
+    pub decode: Option<crate::serve::decode::DecodeReport>,
     /// Analog variation under serving load (`None` with `[variation]`
     /// absent or inert): retention age capped at the drift-refresh
     /// interval, refresh duty charged against stage service time.
@@ -694,6 +698,31 @@ impl ServeReport {
                 shed = f.shed_total,
             ));
         }
+        if let Some(d) = &self.decode {
+            s.push_str(&format!(
+                "\ndecode: {toks} tokens @ {tps:.1} tok/s | TTFT p50/p99 \
+                 {tf50:.3}/{tf99:.3} ms | TPOT p50/p99 {tp50:.4}/{tp99:.4} ms | \
+                 KV {kvb} B/token, peak {kvp:.1} kB{spill} | batch mean {om:.2} / peak {op}",
+                toks = d.total_tokens,
+                tps = d.tokens_per_second,
+                tf50 = d.ttft_p50_ms,
+                tf99 = d.ttft_p99_ms,
+                tp50 = d.tpot_p50_ms,
+                tp99 = d.tpot_p99_ms,
+                kvb = d.kv_bytes_per_token,
+                kvp = d.kv_peak_bytes as f64 / 1024.0,
+                spill = if d.kv_spill_bytes_peak > 0 {
+                    format!(
+                        ", spilled {:.1} kB to DRAM",
+                        d.kv_spill_bytes_peak as f64 / 1024.0
+                    )
+                } else {
+                    String::new()
+                },
+                om = d.occupancy_mean,
+                op = d.occupancy_peak,
+            ));
+        }
         if let Some(v) = &self.variation {
             s.push_str(&format!(
                 "\nvariation: accuracy proxy {mean:.4} ± {ci:.4} (floor {floor} {verdict}), \
@@ -760,6 +789,9 @@ impl ServeReport {
         o.set("weight_load", w);
         if let Some(f) = &self.failover {
             o.set("failover", f.to_json());
+        }
+        if let Some(d) = &self.decode {
+            o.set("decode", d.to_json());
         }
         if let Some(v) = &self.variation {
             o.set("variation", v.to_json());

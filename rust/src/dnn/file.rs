@@ -330,7 +330,7 @@ pub fn parse_model_str(text: &str) -> Result<Dnn, String> {
             "sigmoid" => LayerKind::Sigmoid,
             "gelu" => LayerKind::Gelu,
             "layernorm" => LayerKind::LayerNorm,
-            "attention" => {
+            "attention" | "causal_attention" => {
                 let heads = req_key!("heads");
                 let dim = int_key!("dim", cur.c);
                 if dim != cur.c {
@@ -345,17 +345,22 @@ pub fn parse_model_str(text: &str) -> Result<Dnn, String> {
                          dim {dim}"
                     ));
                 }
-                LayerKind::Attention { heads, dim }
+                if ty == "causal_attention" {
+                    LayerKind::CausalAttention { heads, dim }
+                } else {
+                    LayerKind::Attention { heads, dim }
+                }
             }
             "matmul" => LayerKind::Matmul { out_features: req_key!("out_features") },
             "embedding" => LayerKind::Embedding { vocab: req_key!("vocab"), dim: req_key!("dim") },
+            "tied_unembed" => LayerKind::TiedUnembed { vocab: req_key!("vocab") },
             "residual" => LayerKind::ResidualAdd { from: from_ref!() },
             "concat" => LayerKind::Concat { from: from_ref!() },
             other => {
                 return Err(format!(
                     "line {block_line}: layer {i} has unknown type '{other}' \
                      (conv|fc|maxpool|avgpool|gap|relu|sigmoid|gelu|layernorm|attention|\
-                     matmul|embedding|residual|concat)"
+                     causal_attention|matmul|embedding|tied_unembed|residual|concat)"
                 ))
             }
         };
@@ -462,8 +467,10 @@ pub fn to_model_toml(dnn: &Dnn) -> Result<String, String> {
             LayerKind::Gelu => "gelu",
             LayerKind::LayerNorm => "layernorm",
             LayerKind::Attention { .. } => "attention",
+            LayerKind::CausalAttention { .. } => "causal_attention",
             LayerKind::Matmul { .. } => "matmul",
             LayerKind::Embedding { .. } => "embedding",
+            LayerKind::TiedUnembed { .. } => "tied_unembed",
             LayerKind::ResidualAdd { .. } => "residual",
             LayerKind::Concat { .. } => "concat",
         };
@@ -506,11 +513,14 @@ pub fn to_model_toml(dnn: &Dnn) -> Result<String, String> {
                 writeln!(s, "stride = {stride}").unwrap();
                 writeln!(s, "padding = {padding}").unwrap();
             }
-            LayerKind::Attention { heads, .. } => writeln!(s, "heads = {heads}").unwrap(),
+            LayerKind::Attention { heads, .. } | LayerKind::CausalAttention { heads, .. } => {
+                writeln!(s, "heads = {heads}").unwrap()
+            }
             LayerKind::Embedding { vocab, dim } => {
                 writeln!(s, "vocab = {vocab}").unwrap();
                 writeln!(s, "dim = {dim}").unwrap();
             }
+            LayerKind::TiedUnembed { vocab } => writeln!(s, "vocab = {vocab}").unwrap(),
             LayerKind::ResidualAdd { from } | LayerKind::Concat { from } => {
                 writeln!(s, "from = {from}").unwrap();
             }
@@ -676,6 +686,37 @@ out_features = 10
         )
         .unwrap_err();
         assert!(err.contains("incompatible"), "{err}");
+    }
+
+    #[test]
+    fn decoder_kinds_parse_and_roundtrip() {
+        let text = "[model]\nname = \"mini_dec\"\ninput = [1, 16, 1]\n\
+             [[layer]]\ntype = \"embedding\"\nname = \"wte\"\nvocab = 100\ndim = 32\n\
+             [[layer]]\ntype = \"causal_attention\"\nheads = 4\n\
+             [[layer]]\ntype = \"tied_unembed\"\nvocab = 100\n";
+        let dnn = parse_model_str(text).unwrap();
+        assert_eq!(
+            dnn.layers[1].kind,
+            LayerKind::CausalAttention { heads: 4, dim: 32 }
+        );
+        assert_eq!(dnn.layers[2].kind, LayerKind::TiedUnembed { vocab: 100 });
+        assert_eq!(dnn.layers[2].ofm.c, 100);
+        // tied: only the embedding table counts parameters
+        assert_eq!(dnn.stats().params, 100 * 32);
+        let back = parse_model_str(&to_model_toml(&dnn).unwrap()).unwrap();
+        assert!(dnn.same_graph(&back));
+        // causal attention enforces the same head/dim rules
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [1, 4, 10]\n[[layer]]\ntype = \"causal_attention\"\nheads = 3\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("must divide"), "{err}");
+        // tied_unembed requires vocab
+        let err = parse_model_str(
+            "[model]\nname = \"m\"\ninput = [1, 4, 8]\n[[layer]]\ntype = \"tied_unembed\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("vocab"), "{err}");
     }
 
     #[test]

@@ -131,7 +131,8 @@ impl Dnn {
                         ));
                     }
                 }
-                LayerKind::Attention { heads, dim } => {
+                LayerKind::Attention { heads, dim }
+                | LayerKind::CausalAttention { heads, dim } => {
                     if dim != l.ifm.c {
                         return Err(format!(
                             "layer {i} ({}) attention dim {dim} != input channels {}",
@@ -141,6 +142,14 @@ impl Dnn {
                     if heads == 0 || dim % heads != 0 {
                         return Err(format!(
                             "layer {i} ({}) attention heads {heads} must divide dim {dim}",
+                            l.name
+                        ));
+                    }
+                }
+                LayerKind::TiedUnembed { vocab } => {
+                    if vocab == 0 {
+                        return Err(format!(
+                            "layer {i} ({}) tied_unembed vocab must be >= 1",
                             l.name
                         ));
                     }
@@ -280,6 +289,18 @@ impl DnnBuilder {
     pub fn attention(&mut self, name: impl Into<String>, heads: usize) -> usize {
         let dim = self.cur.c;
         self.push(name, LayerKind::Attention { heads, dim })
+    }
+
+    /// Append a causally-masked self-attention block over the current
+    /// sequence (`dim` = current channel count) — decoder blocks.
+    pub fn causal_attention(&mut self, name: impl Into<String>, heads: usize) -> usize {
+        let dim = self.cur.c;
+        self.push(name, LayerKind::CausalAttention { heads, dim })
+    }
+
+    /// Append a weight-tied unembedding projection onto `vocab` logits.
+    pub fn tied_unembed(&mut self, name: impl Into<String>, vocab: usize) -> usize {
+        self.push(name, LayerKind::TiedUnembed { vocab })
     }
 
     /// Append a layer normalization.

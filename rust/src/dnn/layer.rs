@@ -129,6 +129,30 @@ pub enum LayerKind {
         /// Embedding width; becomes the output channel count.
         dim: usize,
     },
+    /// Causally-masked multi-head self-attention (decoder blocks): the
+    /// Q/K/V/O projections are identical to [`LayerKind::Attention`]
+    /// (one fused `dim × 4·dim` weight matrix on crossbars, one input
+    /// vector per token), but the dynamic score/value matmuls only see
+    /// the lower-triangular mask — token `i` attends to `i + 1` keys,
+    /// so the digital work is `L·(L+1)·D` instead of `2·L²·D`. During
+    /// autoregressive decode the K/V rows of earlier tokens are the KV
+    /// cache ([`crate::serve::decode`] charges its residency).
+    CausalAttention {
+        /// Number of attention heads (must divide `dim`).
+        heads: usize,
+        /// Model (hidden) dimension; must equal the input channel count.
+        dim: usize,
+    },
+    /// Output projection onto the vocabulary with the *transposed token
+    /// embedding* as its weight matrix (GPT-2 weight tying). Owns
+    /// crossbars like [`LayerKind::Fc`] — the tied table must still be
+    /// programmed somewhere to run in a weight-stationary IMC — but
+    /// contributes **zero** parameters: they are already counted by the
+    /// tied [`LayerKind::Embedding`].
+    TiedUnembed {
+        /// Vocabulary size; becomes the output channel count.
+        vocab: usize,
+    },
 }
 
 /// One node of the DNN graph with inferred input/output shapes.
@@ -159,9 +183,13 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { kh, kw, out_ch, .. } => kh * kw * self.ifm.c * out_ch + out_ch,
             LayerKind::Fc { out_features } => self.ifm.elems() * out_features + out_features,
-            LayerKind::Attention { dim, .. } => 4 * dim * dim + 4 * dim,
+            LayerKind::Attention { dim, .. } | LayerKind::CausalAttention { dim, .. } => {
+                4 * dim * dim + 4 * dim
+            }
             LayerKind::LayerNorm => 2 * self.ifm.c,
             LayerKind::Embedding { vocab, dim } => vocab * dim,
+            // weight-tied with the token embedding: counted there
+            LayerKind::TiedUnembed { .. } => 0,
             _ => 0,
         }
     }
@@ -173,10 +201,12 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { kh, kw, .. } => self.ofm.elems() * kh * kw * self.ifm.c,
             LayerKind::Fc { out_features } => self.ifm.elems() * out_features,
-            // Q/K/V/O projections (L·4·D²) + score/value matmuls (2·L²·D)
-            LayerKind::Attention { dim, .. } => {
+            // Q/K/V/O projections (L·4·D²) + score/value matmuls (2·L²·D
+            // bidirectional, L·(L+1)·D causal)
+            LayerKind::Attention { dim, .. } | LayerKind::CausalAttention { dim, .. } => {
                 self.seq_len() * 4 * dim * dim + self.digital_macs()
             }
+            LayerKind::TiedUnembed { vocab } => self.seq_len() * self.ifm.c * vocab,
             LayerKind::Matmul { .. } => self.digital_macs(),
             _ => 0,
         }
@@ -192,6 +222,11 @@ impl Layer {
                 let l = self.seq_len();
                 2 * l * l * dim
             }
+            // causal mask: token i sees i+1 keys — Σ 2·(i+1)·D = L·(L+1)·D
+            LayerKind::CausalAttention { dim, .. } => {
+                let l = self.seq_len();
+                l * (l + 1) * dim
+            }
             LayerKind::Matmul { out_features } => self.ifm.elems() * out_features,
             _ => 0,
         }
@@ -201,7 +236,11 @@ impl Layer {
     pub fn is_weight_layer(&self) -> bool {
         matches!(
             self.kind,
-            LayerKind::Conv { .. } | LayerKind::Fc { .. } | LayerKind::Attention { .. }
+            LayerKind::Conv { .. }
+                | LayerKind::Fc { .. }
+                | LayerKind::Attention { .. }
+                | LayerKind::CausalAttention { .. }
+                | LayerKind::TiedUnembed { .. }
         )
     }
 
@@ -211,7 +250,8 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { kh, kw, .. } => kh * kw * self.ifm.c,
             LayerKind::Fc { .. } => self.ifm.elems(),
-            LayerKind::Attention { dim, .. } => dim,
+            LayerKind::Attention { dim, .. } | LayerKind::CausalAttention { dim, .. } => dim,
+            LayerKind::TiedUnembed { .. } => self.ifm.c,
             _ => 0,
         }
     }
@@ -223,7 +263,8 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { out_ch, .. } => out_ch,
             LayerKind::Fc { out_features } => out_features,
-            LayerKind::Attention { dim, .. } => 4 * dim,
+            LayerKind::Attention { dim, .. } | LayerKind::CausalAttention { dim, .. } => 4 * dim,
+            LayerKind::TiedUnembed { vocab } => vocab,
             _ => 0,
         }
     }
@@ -235,7 +276,9 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { .. } => self.ofm.h * self.ofm.w,
             LayerKind::Fc { .. } => 1,
-            LayerKind::Attention { .. } => self.seq_len(),
+            LayerKind::Attention { .. }
+            | LayerKind::CausalAttention { .. }
+            | LayerKind::TiedUnembed { .. } => self.seq_len(),
             _ => 0,
         }
     }
@@ -269,10 +312,12 @@ pub fn infer_ofm(kind: &LayerKind, ifm: TensorShape) -> TensorShape {
         | LayerKind::Gelu
         | LayerKind::LayerNorm
         | LayerKind::Attention { .. }
+        | LayerKind::CausalAttention { .. }
         | LayerKind::ResidualAdd { .. } => ifm,
         LayerKind::Concat { .. } => ifm, // channel count fixed by the builder
         LayerKind::Matmul { out_features } => TensorShape::new(ifm.h, ifm.w, out_features),
         LayerKind::Embedding { dim, .. } => TensorShape::new(ifm.h, ifm.w, dim),
+        LayerKind::TiedUnembed { vocab } => TensorShape::new(ifm.h, ifm.w, vocab),
     }
 }
 
@@ -374,6 +419,49 @@ mod tests {
         let l = Layer { name: "em".into(), kind: em, ifm, ofm: infer_ofm(&em, ifm) };
         assert_eq!(l.params(), 2400);
         assert!(!l.is_weight_layer());
+    }
+
+    #[test]
+    fn causal_attention_geometry_and_macs() {
+        // 128 tokens × 768 channels (a GPT-2-small block)
+        let ifm = TensorShape::new(1, 128, 768);
+        let kind = LayerKind::CausalAttention { heads: 12, dim: 768 };
+        assert_eq!(infer_ofm(&kind, ifm), ifm);
+        let l = Layer { name: "cattn".into(), kind, ifm, ofm: ifm };
+        assert!(l.is_weight_layer());
+        assert_eq!(l.seq_len(), 128);
+        // projections identical to bidirectional attention...
+        assert_eq!(l.params(), 4 * 768 * 768 + 4 * 768);
+        assert_eq!(l.weight_rows(), 768);
+        assert_eq!(l.weight_cols(), 4 * 768);
+        assert_eq!(l.input_vectors(), 128);
+        // ...but the masked score/value matmuls halve (L+1 vs 2L)
+        assert_eq!(l.digital_macs(), 128 * 129 * 768);
+        assert_eq!(l.macs(), 128 * 4 * 768 * 768 + 128 * 129 * 768);
+        let bidi = Layer {
+            name: "attn".into(),
+            kind: LayerKind::Attention { heads: 12, dim: 768 },
+            ifm,
+            ofm: ifm,
+        };
+        assert!(l.digital_macs() < bidi.digital_macs());
+    }
+
+    #[test]
+    fn tied_unembed_geometry() {
+        let ifm = TensorShape::new(1, 128, 768);
+        let kind = LayerKind::TiedUnembed { vocab: 50257 };
+        assert_eq!(infer_ofm(&kind, ifm), TensorShape::new(1, 128, 50257));
+        let l = Layer { name: "unembed".into(), kind, ifm, ofm: infer_ofm(&kind, ifm) };
+        // owns crossbars (the tied table must be programmed) but the
+        // parameters are counted by the tied embedding, not here
+        assert!(l.is_weight_layer());
+        assert_eq!(l.params(), 0);
+        assert_eq!(l.weight_rows(), 768);
+        assert_eq!(l.weight_cols(), 50257);
+        assert_eq!(l.input_vectors(), 128);
+        assert_eq!(l.macs(), 128 * 768 * 50257);
+        assert_eq!(l.digital_macs(), 0);
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! DNN workload representation: layer graph, shape inference, the model
 //! zoo the paper evaluates (LeNet-5, ResNet-20/56/110, ResNet-50,
 //! VGG-16/19, DenseNet, NiN, DriveNet) plus transformer workloads
-//! (ViT-Tiny/Small, a BERT-base-class encoder), and the file-based
-//! network frontend (`model = "file:net.toml"`, see [`file`]).
+//! (ViT-Tiny/Small, a BERT-base-class encoder, a GPT-2-class decoder),
+//! and the file-based network frontend (`model = "file:net.toml"`, see
+//! [`file`]).
 //!
 //! The partition & mapping engine consumes only layer *shapes* — kernel
 //! geometry, feature-map sizes, branch structure — so the zoo builds
@@ -42,22 +43,30 @@ pub fn dataset_spec(dataset: &str) -> Option<((usize, usize, usize), usize)> {
         "cifar100" => Some(((32, 32, 3), 100)),
         "imagenet" => Some(((224, 224, 3), 1000)),
         "drivenet" | "driving" => Some(((66, 200, 3), 10)),
-        // a 128-token id sequence, binary classification (BERT-class
-        // encoders; GLUE-style fine-tuning heads)
-        "seq128" => Some(((1, 128, 1), 2)),
-        _ => None,
+        // `seq<N>`: an N-token id sequence (binary classification head
+        // for BERT-class encoders; decoder graphs ignore the class
+        // count). `seq128` is the canonical published-figure length;
+        // `seq1` is the autoregressive decode-step graph.
+        other => {
+            let n: usize = other.strip_prefix("seq")?.parse().ok()?;
+            if n == 0 {
+                return None;
+            }
+            Some(((1, n, 1), 2))
+        }
     }
 }
 
-/// The token-id `seq128` input is 1×128×1 — convolutional stems would
-/// underflow on it, so it only pairs with token models. Shared by
+/// The token-id `seq<N>` inputs are 1×N×1 — convolutional stems would
+/// underflow on them, so they only pair with token models. Shared by
 /// [`build_model`] and [`check_model_name`] so the crashing combination
 /// is rejected at validate time, never mid-run.
 fn dataset_supports_model(name: &str, ds: &str) -> Result<(), String> {
-    if ds == "seq128" && name != "bert_base" {
+    let token_model = matches!(name, "bert_base" | "gpt2_small");
+    if ds.starts_with("seq") && !token_model {
         return Err(format!(
-            "dataset 'seq128' is a token-id sequence; model '{name}' needs an image \
-             dataset (seq128 pairs with bert_base)"
+            "dataset '{ds}' is a token-id sequence; model '{name}' needs an image \
+             dataset (seq<N> pairs with bert_base|gpt2_small)"
         ));
     }
     Ok(())
@@ -71,7 +80,7 @@ fn dataset_supports_model(name: &str, ds: &str) -> Result<(), String> {
 pub fn build_model(name: &str, dataset: &str) -> Result<Dnn> {
     let ds = dataset.to_ascii_lowercase();
     let Some((input, classes)) = dataset_spec(&ds) else {
-        bail!("unknown dataset '{ds}' (cifar10|cifar100|imagenet|drivenet|seq128)");
+        bail!("unknown dataset '{ds}' (cifar10|cifar100|imagenet|drivenet|seq<N>)");
     };
     let name_lc = name.to_ascii_lowercase();
     if let Err(e) = dataset_supports_model(&name_lc, &ds) {
@@ -107,9 +116,19 @@ fn build_zoo_entry(name: &str, input: (usize, usize, usize), classes: usize) -> 
             input,
             classes,
         )),
+        // decoder: no classifier head — `classes` does not apply
+        "gpt2_small" => Ok(models::transformer::gpt2(
+            "gpt2_small",
+            12,
+            768,
+            12,
+            50257,
+            1024,
+            input,
+        )),
         other => bail!(
             "unknown model '{other}' (lenet5|nin|resnet20|resnet56|resnet110|resnet50|vgg16|\
-             vgg19|densenet40|densenet110|drivenet|vit_tiny|vit_small|bert_base)"
+             vgg19|densenet40|densenet110|drivenet|vit_tiny|vit_small|bert_base|gpt2_small)"
         ),
     }
 }
@@ -131,6 +150,7 @@ pub fn zoo_names() -> &'static [&'static str] {
         "vit_tiny",
         "vit_small",
         "bert_base",
+        "gpt2_small",
     ]
 }
 
@@ -141,7 +161,7 @@ pub fn default_dataset(name: &str) -> &'static str {
         "resnet50" | "vgg16" | "vit_tiny" | "vit_small" => "imagenet",
         "vgg19" => "cifar100",
         "drivenet" => "drivenet",
-        "bert_base" => "seq128",
+        "bert_base" | "gpt2_small" => "seq128",
         _ => "cifar10",
     }
 }
@@ -183,7 +203,7 @@ pub fn check_model_name(model: &str, dataset: &str) -> Result<(), String> {
     }
     if dataset_spec(dataset).is_none() {
         return Err(format!(
-            "unknown dataset '{dataset}' (cifar10|cifar100|imagenet|drivenet|seq128)"
+            "unknown dataset '{dataset}' (cifar10|cifar100|imagenet|drivenet|seq<N>)"
         ));
     }
     dataset_supports_model(&name, &dataset.to_ascii_lowercase())
@@ -224,6 +244,30 @@ mod tests {
         assert!(check_model_name("lenet5", "seq128").is_err());
         assert!(check_model_name("bert_base", "seq128").is_ok());
         assert!(build_model("bert_base", "seq128").is_ok());
+        assert!(check_model_name("gpt2_small", "seq128").is_ok());
+        assert!(build_model("gpt2_small", "seq128").is_ok());
+        assert!(build_model("resnet110", "seq64").is_err());
+    }
+
+    #[test]
+    fn seq_datasets_are_length_parameterized() {
+        // seq<N> resolves for any positive N; the graph's sequence
+        // length follows the dataset, weight geometry does not
+        assert_eq!(dataset_spec("seq128"), Some(((1, 128, 1), 2)));
+        assert_eq!(dataset_spec("seq1"), Some(((1, 1, 1), 2)));
+        assert_eq!(dataset_spec("seq256"), Some(((1, 256, 1), 2)));
+        assert_eq!(dataset_spec("seq0"), None);
+        assert_eq!(dataset_spec("seq"), None);
+        assert_eq!(dataset_spec("seqx"), None);
+        assert_eq!(dataset_spec("sequence"), None);
+        let long = build_model("gpt2_small", "seq256").unwrap();
+        let step = build_model("gpt2_small", "seq1").unwrap();
+        assert_eq!(long.dataset, "seq256");
+        assert_eq!(step.dataset, "seq1");
+        assert_eq!(long.stats().params, step.stats().params);
+        assert!(step.stats().macs < long.stats().macs);
+        assert!(check_model_name("bert_base", "seq64").is_ok());
+        assert!(check_model_name("gpt2_small", "seqx").is_err());
     }
 
     #[test]
@@ -319,5 +363,10 @@ mod tests {
         let bb = build_model("bert_base", "seq128").unwrap().stats();
         close(bb.params, 109.5e6, 0.02, "bert_base params");
         close(bb.macs, 11.2e9, 0.05, "bert_base MACs");
+        // gpt2_small is pinned *exactly* (tied unembedding makes the
+        // count land on the published 124.4M to the digit)
+        let g = build_model("gpt2_small", "seq128").unwrap().stats();
+        assert_eq!(g.params, 124_439_808, "gpt2_small params");
+        assert_eq!(g.macs, 15_964_274_688, "gpt2_small MACs at seq128");
     }
 }

@@ -1,6 +1,7 @@
 //! Transformer builders: ViT image encoders (patch-embedding
-//! convolution + pre-norm encoder blocks) and a BERT-class text encoder
-//! (token/positional embeddings + the same block structure).
+//! convolution + pre-norm encoder blocks), a BERT-class text encoder
+//! (token/positional embeddings + the same block structure), and a
+//! GPT-2-class decoder (causal attention, weight-tied unembedding).
 //!
 //! Both express a token sequence of length `L` with hidden size `D` as
 //! an `(h, w, c)` tensor with `h·w = L`, `c = D` (the patch grid for
@@ -13,6 +14,10 @@
 //! golden param tests read honestly): the ViT class token (we pool with
 //! a global average instead, as DeiT-style models do), BERT's
 //! token-type embeddings and pooler head. Both are < 1 % of parameters.
+//! The GPT-2 decoder ties the unembedding projection to the token
+//! embedding exactly as the reference does, so its [`crate::dnn::LayerKind::TiedUnembed`]
+//! layer owns crossbars but contributes zero parameters — the 124.4M
+//! golden count matches the published figure without adjustment.
 
 use crate::dnn::graph::{Dnn, DnnBuilder};
 
@@ -65,6 +70,31 @@ pub fn bert_encoder(
     b.build()
 }
 
+/// A GPT-2-class decoder: token embedding (`vocab × dim`), learned
+/// positional embeddings over `max_pos` positions, `depth` pre-norm
+/// decoder blocks (causal attention, 4× MLP), final LayerNorm and a
+/// weight-tied unembedding onto the vocabulary. The input is a
+/// `1 × seq × 1` token-id sequence; the sequence length comes from the
+/// dataset (`seq<N>`), so the same builder serves full-context prefill
+/// graphs and the `seq1` decode-step graph.
+pub fn gpt2(
+    name: &str,
+    depth: usize,
+    dim: usize,
+    heads: usize,
+    vocab: usize,
+    max_pos: usize,
+    input: (usize, usize, usize),
+) -> Dnn {
+    let mut b = DnnBuilder::new(name, "seq128", input);
+    b.embedding("wte", vocab, dim);
+    b.embedding("wpe", max_pos, dim);
+    decoder_blocks(&mut b, depth, heads, dim);
+    b.layer_norm("ln_f");
+    b.tied_unembed("unembed", vocab);
+    b.build()
+}
+
 /// `depth` pre-norm encoder blocks: LN → MHSA → add, LN → 1×1-conv MLP
 /// (4× expansion, GELU) → add.
 fn encoder_blocks(b: &mut DnnBuilder, depth: usize, heads: usize, dim: usize) {
@@ -72,6 +102,22 @@ fn encoder_blocks(b: &mut DnnBuilder, depth: usize, heads: usize, dim: usize) {
         let block_in = b.last_index();
         b.layer_norm(format!("blk{blk}_ln1"));
         b.attention(format!("blk{blk}_attn"), heads);
+        let attn_out = b.residual_add(format!("blk{blk}_add1"), block_in);
+        b.layer_norm(format!("blk{blk}_ln2"));
+        b.conv(format!("blk{blk}_mlp_fc1"), 1, 1, 0, 4 * dim);
+        b.gelu(format!("blk{blk}_gelu"));
+        b.conv(format!("blk{blk}_mlp_fc2"), 1, 1, 0, dim);
+        b.residual_add(format!("blk{blk}_add2"), attn_out);
+    }
+}
+
+/// `depth` pre-norm decoder blocks: identical to [`encoder_blocks`]
+/// except the attention carries the causal mask.
+fn decoder_blocks(b: &mut DnnBuilder, depth: usize, heads: usize, dim: usize) {
+    for blk in 0..depth {
+        let block_in = b.last_index();
+        b.layer_norm(format!("blk{blk}_ln1"));
+        b.causal_attention(format!("blk{blk}_attn"), heads);
         let attn_out = b.residual_add(format!("blk{blk}_add1"), block_in);
         b.layer_norm(format!("blk{blk}_ln2"));
         b.conv(format!("blk{blk}_mlp_fc1"), 1, 1, 0, 4 * dim);
@@ -126,6 +172,55 @@ mod tests {
         // token lookup rewrites channels: 1×128×1 -> 1×128×768
         assert_eq!(d.layers[0].ofm.c, 768);
         assert_eq!(d.layers[0].ofm.w, 128);
+    }
+
+    #[test]
+    fn gpt2_small_matches_published_figures_exactly() {
+        // huggingface gpt2 (decoder, tied unembedding): 124,439,808
+        // parameters — wte 50257×768 + wpe 1024×768 + 12 blocks ×
+        // 7,087,872 + ln_f 1536, unembed tied (0)
+        let d = gpt2("gpt2_small", 12, 768, 12, 50257, 1024, (1, 128, 1));
+        let s = d.stats();
+        assert_eq!(s.params, 124_439_808, "gpt2_small params");
+        close(s.params, 124.4e6, 0.001, "gpt2_small params vs published");
+        // MACs at seq 128, exact closed form: 12 blocks ×
+        // (128·4·768² QKVO + 128·129·768 causal scores + 2 × 128·768·3072
+        // MLP halves) + 128·768·50257 unembed
+        let block = 128 * 4 * 768 * 768 + 128 * 129 * 768 + 2 * (128 * 3072 * 768);
+        assert_eq!(block, 918_650_880);
+        assert_eq!(s.macs, 12 * block + 128 * 768 * 50257, "gpt2_small macs");
+        assert_eq!(s.macs, 15_964_274_688usize);
+        // causal scores are the only digital MACs
+        assert_eq!(s.digital_macs, 12 * 128 * 129 * 768);
+        // 12 × (attn + 2 mlp convs) + tied unembed own crossbars
+        assert_eq!(s.weight_layers, 37);
+        assert!(d.check().is_ok());
+        // token lookup rewrites channels: 1×128×1 -> 1×128×768
+        assert_eq!(d.layers[0].ofm.c, 768);
+        // unembed projects onto the vocabulary
+        assert_eq!(d.layers.last().unwrap().ofm.c, 50257);
+    }
+
+    #[test]
+    fn gpt2_decode_step_graph_shrinks_with_seq() {
+        // the same builder at seq 1 is the decode-step graph: weight
+        // geometry identical, dynamic work collapses to one token
+        let full = gpt2("gpt2_small", 12, 768, 12, 50257, 1024, (1, 128, 1));
+        let step = gpt2("gpt2_small", 12, 768, 12, 50257, 1024, (1, 1, 1));
+        assert_eq!(full.stats().params, step.stats().params);
+        assert_eq!(full.weight_layers().len(), step.weight_layers().len());
+        assert!(step.stats().macs < full.stats().macs / 100);
+        // per-layer crossbar geometry (rows/cols) is seq-independent
+        for (&a, &b) in full.weight_layers().iter().zip(&step.weight_layers()) {
+            assert_eq!(
+                full.layers[a].weight_rows(),
+                step.layers[b].weight_rows()
+            );
+            assert_eq!(
+                full.layers[a].weight_cols(),
+                step.layers[b].weight_cols()
+            );
+        }
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! siam serve     [--config F] [--mode open|closed] [--rate QPS]
 //!                [--concurrency N] [--requests N] [--queue N] [--seed S]
 //!                [--fail-at N --fail-chiplet C --remap-latency US --spares N]
+//!                [--decode] [--max-new-tokens N] [--kv-bits B]
+//!                [--batch-cap N] [--prefill-chunk N]
 //!                [--quick] [--trace PATH] [--json PATH]
 //! siam functional [--artifacts DIR] [--adc 8] [--seed 42]
 //! siam models    [--files DIR]
@@ -43,7 +45,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
             // boolean flags take no value
-            if matches!(name, "monolithic" | "help" | "quick" | "profile") {
+            if matches!(name, "monolithic" | "help" | "quick" | "profile" | "decode") {
                 flags.insert(name.to_string(), "true".into());
                 i += 1;
             } else {
@@ -317,10 +319,40 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(us) = flags.get("remap-latency") {
         cfg.serve.remap_latency_us = us.parse().context("--remap-latency")?;
     }
+    // autoregressive decode serving ([decode] block overrides)
+    if let Some(n) = flags.get("max-new-tokens") {
+        cfg.decode.max_new_tokens = n.parse().context("--max-new-tokens")?;
+    }
+    if let Some(b) = flags.get("kv-bits") {
+        cfg.decode.kv_precision_bits = b.parse().context("--kv-bits")?;
+    }
+    if let Some(b) = flags.get("batch-cap") {
+        cfg.decode.batch_cap = b.parse().context("--batch-cap")?;
+    }
+    if let Some(c) = flags.get("prefill-chunk") {
+        cfg.decode.prefill_chunk = c.parse().context("--prefill-chunk")?;
+    }
+    if flags.contains_key("decode")
+        && flags.get("model").is_none()
+        && flags.get("config").is_none()
+        && !cfg.dnn.dataset.starts_with("seq")
+    {
+        // --decode without an explicit model: default to the zoo decoder
+        cfg = cfg.with_model("gpt2_small", siam::dnn::default_dataset("gpt2_small"));
+    }
     if flags.contains_key("quick") {
         cfg.serve.requests = cfg.serve.requests.min(200);
+        if flags.contains_key("decode") {
+            // token-level runs cost a pipeline pass per token: clamp the
+            // stream and the generation length too
+            cfg.serve.requests = cfg.serve.requests.min(32);
+            cfg.decode.max_new_tokens = cfg.decode.max_new_tokens.min(8);
+        }
     }
     cfg.validate()?;
+    if flags.contains_key("decode") {
+        return cmd_serve_decode(&cfg, flags);
+    }
 
     // workload mix: "model", "model:dataset" or "file:path" entries;
     // empty = the [dnn] model
@@ -389,6 +421,57 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         let mut out = Json::obj();
         out.set("schema", "siam-serve/v2")
             .set("reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect()));
+        std::fs::write(path, out.to_string_pretty())?;
+        obs::log::info(&format!("wrote {path}"));
+    }
+    Ok(())
+}
+
+/// `siam serve --decode`: token-level autoregressive serving — one
+/// decoder occupies the whole system, so there is no workload mix.
+fn cmd_serve_decode(cfg: &SiamConfig, flags: &HashMap<String, String>) -> Result<()> {
+    let (rep, trace) = if flags.contains_key("trace") {
+        let (r, buf) = siam::serve::serve_decode_traced(cfg)?;
+        (r, Some(buf))
+    } else {
+        (siam::serve::serve_decode(cfg)?, None)
+    };
+    println!("{}\n", rep.summary());
+    let d = rep.decode.as_ref().expect("decode runs attach their block");
+    let mut t = Table::new(&[
+        "model",
+        "mode",
+        "offered",
+        "tok/s",
+        "TTFT p50 ms",
+        "TPOT p50 ms",
+        "batch peak",
+        "KV peak kB",
+        "shed %",
+    ]);
+    t.row(&[
+        format!("{}/{}", rep.model, rep.dataset),
+        rep.mode.clone(),
+        match rep.mode.as_str() {
+            "open" => format!("{:.0} qps", rep.offered_qps),
+            _ => format!("conc {}", rep.concurrency),
+        },
+        format!("{:.1}", d.tokens_per_second),
+        format!("{:.3}", d.ttft_p50_ms),
+        format!("{:.4}", d.tpot_p50_ms),
+        d.occupancy_peak.to_string(),
+        format!("{:.1}", d.kv_peak_bytes as f64 / 1024.0),
+        format!("{:.1}", 100.0 * rep.drop_rate()),
+    ]);
+    t.print();
+    if let (Some(path), Some(buf)) = (flags.get("trace"), &trace) {
+        std::fs::write(path, buf.render())?;
+        obs::log::info(&format!("wrote {path} ({} trace events)", buf.len()));
+    }
+    if let Some(path) = flags.get("json") {
+        let mut out = Json::obj();
+        out.set("schema", "siam-serve/v2")
+            .set("reports", Json::Arr(vec![rep.to_json()]));
         std::fs::write(path, out.to_string_pretty())?;
         obs::log::info(&format!("wrote {path}"));
     }
@@ -500,6 +583,8 @@ const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config>
   serve      [--mode open|closed] [--rate 2000] [--concurrency 4]
              [--requests 1024] [--queue 4] [--seed 42] [--quick]
              [--fail-at 64 --fail-chiplet 3 --remap-latency 100 --spares 1]
+             [--decode] [--max-new-tokens 32] [--kv-bits 8]
+             [--batch-cap 8] [--prefill-chunk 0]
              [--cache-file epochs.cache] [--trace trace.json]
              [--config file.toml] [--json out.json]
   functional [--artifacts artifacts] [--adc 4|8] [--seed 42]
@@ -516,6 +601,10 @@ const USAGE: &str = "usage: siam <simulate|sweep|serve|functional|models|config>
   (docs/RELIABILITY.md); serve --fail-at kills --fail-chiplet mid-run and
   hot-swaps the remapped pipeline after --remap-latency microseconds
   (see docs/MODELS.md for the model-authoring format)
+  serve --decode runs token-level autoregressive serving on a decoder
+  (prefill + per-token decode steps, KV-cache residency with DRAM spill,
+  continuous batching up to --batch-cap); TTFT/TPOT/tokens-per-second
+  land in the report's decode block (docs/MODELS.md)
   a [variation] config block adds analog device variation (programming
   noise, drift, stuck-at cells, ADC offset) to every command; sweep
   --fom variation prunes points below the accuracy floor

@@ -239,7 +239,9 @@ pub fn build_traffic(
         // `L·D/n` output slice to every peer. Layers that fit one
         // chiplet concatenate locally and add nothing.
         if lm.spans_chiplets() {
-            if let LayerKind::Attention { dim, .. } = layer.kind {
+            if let LayerKind::Attention { dim, .. } | LayerKind::CausalAttention { dim, .. } =
+                layer.kind
+            {
                 let seq = (layer.ifm.h * layer.ifm.w) as u64;
                 let n = src_chiplets.len() as u64;
                 let slice_bits = (seq * dim as u64 * q).div_ceil(n);

@@ -1,0 +1,1309 @@
+//! Autoregressive decode serving: prefill/decode split, KV-cache
+//! residency, and iteration-level continuous batching.
+//!
+//! Generation on a weight-stationary IMC system is one **prefill** pass
+//! over the full prompt (the existing stage pipeline, emitting the
+//! first token) followed by one **decode step** per further token. A
+//! decode step re-runs every weight layer on a single-token input, so
+//! its cost comes from the `seq1` stage graph of the same design point:
+//! the per-request analog compute (`var_ns`, scales with batch
+//! occupancy) plus the shared ingress / NoC / NoP overhead (`fixed_ns`,
+//! paid once per step).
+//!
+//! The KV cache holds `2 · causal_layers · dim · kv_precision_bits`
+//! bits per cached token. Residency is charged against the global
+//! buffer; the overflow spills to the DRAM chiplet through the existing
+//! [`crate::dram`] timing model (read latency and energy per step), and
+//! the on-chip share is re-read by the causal-attention chiplets over
+//! the interposer — a NoP epoch through the shared flow caches, exactly
+//! like weight-layer traffic.
+//!
+//! The engine batches at iteration granularity: requests join a running
+//! batch between decode steps (after a sequential prefill pass) and
+//! leave it when their `max_new_tokens` are out, so per-step service
+//! time tracks the live occupancy. Open-loop arrivals shed beyond
+//! `[serve] queue_depth`; closed-loop clients re-issue on completion;
+//! the mid-run chiplet-failure scenario sheds the in-flight batch and
+//! resumes on a remapped [`DecodeModel`] after the remap latency.
+//!
+//! Calibration invariants (asserted by tests and the `decode_throughput`
+//! bench):
+//!
+//! * closed-loop concurrency-1 tokens/second equals the reciprocal of
+//!   the analytic per-token closed form (same cost helper, so the two
+//!   differ only by float accumulation order);
+//! * continuous batching at `batch_cap` B beats B sequential
+//!   single-request runs whenever the KV cache fits on chip
+//!   (`fixed_ns > 0` is amortized over the batch);
+//! * fixed seed ⇒ bit-identical reports.
+
+use std::collections::{BTreeSet, VecDeque};
+
+use crate::config::{DecodeConfig, DramConfig, ServeConfig, ServeMode, SiamConfig};
+use crate::coordinator::pipeline::stage_dnn;
+use crate::coordinator::{FailoverReport, ServeReport, SweepContext};
+use crate::dnn::LayerKind;
+use crate::mapping::{canonicalize_flows, Flow};
+use crate::noc::{EpochCache, Mesh, PacketSim};
+use crate::obs::{CacheSnapshot, RunMeta, TraceBuffer};
+use crate::serve::stage::StageGraph;
+use crate::serve::{percentile, poisson_arrivals};
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Result};
+
+/// `pid` of the decode-serving process in emitted Chrome traces
+/// (distinct from the classic serving engine's `pid 1`).
+const TRACE_PID_DECODE: u32 = 2;
+
+/// Observer of the decode engine's event stream. All methods default to
+/// no-ops; implementations are pure observers — the report is
+/// bit-identical with or without a sink attached.
+pub trait DecodeSink {
+    /// A request entered the waiting queue at `t_ns`.
+    fn admitted(&mut self, _t_ns: f64, _req: u32) {}
+    /// A request was shed (queue full, or lost to a chiplet failure).
+    fn shed(&mut self, _t_ns: f64, _req: u32) {}
+    /// A prefill pass ran over `[start_ns, start_ns + dur_ns)`.
+    fn prefill(&mut self, _start_ns: f64, _dur_ns: f64, _req: u32) {}
+    /// A decode step at occupancy `batch` ran over
+    /// `[start_ns, start_ns + dur_ns)`.
+    fn step(&mut self, _start_ns: f64, _dur_ns: f64, _batch: usize) {}
+    /// Request `req` emitted its `token`-th generated token at `t_ns`.
+    fn token(&mut self, _t_ns: f64, _req: u32, _token: usize) {}
+    /// A request finished all its tokens.
+    fn completed(&mut self, _t_ns: f64, _req: u32, _latency_ns: f64) {}
+    /// The failure scenario triggered, shedding `shed` in-flight
+    /// requests.
+    fn failed(&mut self, _t_ns: f64, _shed: usize) {}
+    /// The remapped pipeline came back up.
+    fn resumed(&mut self, _t_ns: f64) {}
+}
+
+/// A [`DecodeSink`] that ignores every event.
+#[derive(Debug, Default)]
+pub struct NoopDecodeSink;
+
+impl DecodeSink for NoopDecodeSink {}
+
+/// A [`DecodeSink`] that renders the token-level event stream into a
+/// Chrome [`TraceBuffer`] — the implementation behind
+/// `siam serve --decode --trace`.
+///
+/// Track layout: process `pid = 2` ("decode"); `tid 0` carries the
+/// request lifecycle (admit / shed / complete / fail / resume
+/// instants); `tid 1` carries prefill spans; `tid 2` carries decode-step
+/// spans (with the batch occupancy as an argument); `tid 3` carries one
+/// instant per generated token. All timestamps are simulated
+/// nanoseconds, so two traced runs of the same `(config, seed)` render
+/// byte-identical streams.
+#[derive(Debug)]
+pub struct DecodeTracer {
+    buf: TraceBuffer,
+}
+
+impl DecodeTracer {
+    /// A tracer with the decode process and track names pre-registered.
+    pub fn new() -> DecodeTracer {
+        let mut buf = TraceBuffer::new();
+        buf.process_name(TRACE_PID_DECODE, "decode");
+        buf.thread_name(TRACE_PID_DECODE, 0, "requests");
+        buf.thread_name(TRACE_PID_DECODE, 1, "prefill");
+        buf.thread_name(TRACE_PID_DECODE, 2, "decode-steps");
+        buf.thread_name(TRACE_PID_DECODE, 3, "tokens");
+        DecodeTracer { buf }
+    }
+
+    /// The finished trace buffer.
+    pub fn into_buffer(self) -> TraceBuffer {
+        self.buf
+    }
+}
+
+impl Default for DecodeTracer {
+    fn default() -> Self {
+        DecodeTracer::new()
+    }
+}
+
+fn req_args(req: u32) -> Json {
+    let mut a = Json::obj();
+    a.set("req", req as u64);
+    a
+}
+
+impl DecodeSink for DecodeTracer {
+    fn admitted(&mut self, t_ns: f64, req: u32) {
+        self.buf.instant("admit", t_ns, TRACE_PID_DECODE, 0, req_args(req));
+    }
+    fn shed(&mut self, t_ns: f64, req: u32) {
+        self.buf.instant("shed", t_ns, TRACE_PID_DECODE, 0, req_args(req));
+    }
+    fn prefill(&mut self, start_ns: f64, dur_ns: f64, req: u32) {
+        self.buf.complete("prefill", start_ns, dur_ns, TRACE_PID_DECODE, 1, req_args(req));
+    }
+    fn step(&mut self, start_ns: f64, dur_ns: f64, batch: usize) {
+        let mut a = Json::obj();
+        a.set("batch", batch as u64);
+        self.buf.complete("decode-step", start_ns, dur_ns, TRACE_PID_DECODE, 2, a);
+    }
+    fn token(&mut self, t_ns: f64, req: u32, token: usize) {
+        let mut a = req_args(req);
+        a.set("token", token as u64);
+        self.buf.instant("token", t_ns, TRACE_PID_DECODE, 3, a);
+    }
+    fn completed(&mut self, t_ns: f64, req: u32, latency_ns: f64) {
+        let mut a = req_args(req);
+        a.set("latency_ns", latency_ns);
+        self.buf.instant("complete", t_ns, TRACE_PID_DECODE, 0, a);
+    }
+    fn failed(&mut self, t_ns: f64, shed: usize) {
+        let mut a = Json::obj();
+        a.set("shed", shed as u64);
+        self.buf.instant("fail", t_ns, TRACE_PID_DECODE, 0, a);
+    }
+    fn resumed(&mut self, t_ns: f64) {
+        self.buf.instant("resume", t_ns, TRACE_PID_DECODE, 0, Json::Null);
+    }
+}
+
+/// The deterministic cost of one decode step at a given batch of
+/// context lengths, decomposed the way the report accounts it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepCost {
+    /// Total step latency, ns (fixed + occupancy · var + spill + NoP).
+    pub latency_ns: f64,
+    /// Total step dynamic energy, pJ.
+    pub energy_pj: f64,
+    /// KV bytes the batch holds at this step (before any spill).
+    pub residency_bytes: usize,
+    /// KV bytes past the global buffer, re-read from DRAM this step.
+    pub spill_bytes: usize,
+    /// DRAM latency of the spilled re-read, ns.
+    pub spill_latency_ns: f64,
+    /// DRAM energy of the spilled re-read, pJ.
+    pub spill_energy_pj: f64,
+    /// Interposer latency of the on-chip KV reads, ns.
+    pub kv_nop_ns: f64,
+    /// Interposer energy of the on-chip KV reads, pJ.
+    pub kv_nop_energy_pj: f64,
+}
+
+/// The analytic cost model of autoregressive generation on one design
+/// point: prefill cost, per-token decode cost split into fixed and
+/// occupancy-scaled shares, KV-cache geometry, and the chiplets whose
+/// causal-attention layers read the cache each step.
+pub struct DecodeModel {
+    prompt_tokens: usize,
+    max_new_tokens: usize,
+    kv_bytes_per_token: usize,
+    kv_capacity_bytes: usize,
+    prefill_ns: f64,
+    prefill_energy_pj: f64,
+    prefill_chunks: usize,
+    fixed_ns: f64,
+    var_ns: f64,
+    token_energy_pj: f64,
+    kv_chiplets: Vec<usize>,
+    num_chiplets: usize,
+    mesh: Mesh,
+    nop_clock_ns: f64,
+    nop_ebit_pj: f64,
+    nop_bits_per_cycle: u64,
+    dram: DramConfig,
+    /// Per-chiplet busy-ns of one whole-prompt prefill (share-weighted,
+    /// already scaled to the chunked prefill duration).
+    prefill_busy: Vec<f64>,
+    /// Per-chiplet busy-ns of one generated token.
+    token_busy: Vec<f64>,
+}
+
+impl DecodeModel {
+    /// Build the decode cost model for `cfg` against a shared sweep
+    /// context, returning it with the full-prompt prefill stage graph
+    /// (the deployment's reference pipeline, reused by the report).
+    ///
+    /// Decode serving needs a `seq<N>` dataset, a zoo model with at
+    /// least one causal-attention layer (`file:` models pin their
+    /// sequence length in the TOML, so they cannot express the `seq1`
+    /// step graph), and no mixed `[serve] workloads`.
+    pub fn build(cfg: &SiamConfig, ctx: &SweepContext) -> Result<(DecodeModel, StageGraph)> {
+        cfg.validate()?;
+        let dc = &cfg.decode;
+        ensure!(
+            cfg.serve.workloads.is_empty(),
+            "decode serving does not mix with [serve] workloads (one decoder occupies \
+             the whole system)"
+        );
+        ensure!(
+            !cfg.dnn.model.starts_with("file:"),
+            "decode serving needs a zoo decoder (file: models pin their sequence length, \
+             so the seq1 decode-step graph cannot be derived)"
+        );
+        let ds = cfg.dnn.dataset.to_ascii_lowercase();
+        let prompt_tokens: usize = ds
+            .strip_prefix("seq")
+            .and_then(|n| n.parse().ok())
+            .filter(|&n| n > 0)
+            .ok_or_else(|| {
+                anyhow!(
+                    "decode serving needs a token dataset 'seq<N>' (got '{}')",
+                    cfg.dnn.dataset
+                )
+            })?;
+
+        let full = StageGraph::build(cfg, ctx)?;
+        let dnn = stage_dnn(cfg, ctx)?;
+        let mut n_causal = 0usize;
+        let mut dim = 0usize;
+        let mut attn_names: BTreeSet<String> = BTreeSet::new();
+        for l in &dnn.layers {
+            if let LayerKind::CausalAttention { dim: d, .. } = l.kind {
+                n_causal += 1;
+                dim = d;
+                attn_names.insert(l.name.clone());
+            }
+        }
+        ensure!(
+            n_causal > 0,
+            "model '{}' has no causal-attention layers; decode serving needs a decoder \
+             (gpt2_small)",
+            cfg.dnn.model
+        );
+
+        // the decode-step pipeline: the same design point on a
+        // single-token input, through the same shared caches
+        let mut step_cfg = cfg.clone();
+        step_cfg.dnn.dataset = "seq1".into();
+        let step = StageGraph::build(&step_cfg, ctx)?;
+        let var_ns = step.single_shot.circuit.latency_ns;
+        let fixed_ns = (step.single_pass_ns() - var_ns).max(0.0);
+
+        // chunked prefill: `prefill_chunk` tokens per pass trade buffer
+        // pressure for extra passes (0 = whole prompt in one pass);
+        // chunk graphs approximate each pass's attention at chunk length
+        let (prefill_ns, prefill_energy_pj, prefill_chunks) =
+            if dc.prefill_chunk == 0 || dc.prefill_chunk >= prompt_tokens {
+                (full.single_pass_ns(), full.dynamic_energy_pj, 1)
+            } else {
+                let whole = prompt_tokens / dc.prefill_chunk;
+                let rem = prompt_tokens % dc.prefill_chunk;
+                let mut c_cfg = cfg.clone();
+                c_cfg.dnn.dataset = format!("seq{}", dc.prefill_chunk);
+                let cg = StageGraph::build(&c_cfg, ctx)?;
+                let mut ns = whole as f64 * cg.single_pass_ns();
+                let mut e = whole as f64 * cg.dynamic_energy_pj;
+                let mut chunks = whole;
+                if rem > 0 {
+                    let mut r_cfg = cfg.clone();
+                    r_cfg.dnn.dataset = format!("seq{rem}");
+                    let rg = StageGraph::build(&r_cfg, ctx)?;
+                    ns += rg.single_pass_ns();
+                    e += rg.dynamic_energy_pj;
+                    chunks += 1;
+                }
+                (ns, e, chunks)
+            };
+
+        // share-weighted per-chiplet busy-ns of one pass of a graph
+        let busy_of = |g: &StageGraph| -> Vec<f64> {
+            let mut v = vec![0.0f64; g.num_chiplets];
+            for s in &g.stages {
+                for &(c, x) in &s.shares {
+                    let cap = g.chiplet_capacities_xbars[c].max(1) as f64;
+                    v[c] += s.service_ns * x as f64 / cap;
+                }
+            }
+            v
+        };
+        let mut prefill_busy = busy_of(&full);
+        let scale = prefill_ns / full.single_pass_ns().max(1e-9);
+        for b in &mut prefill_busy {
+            *b *= scale;
+        }
+        let token_busy = busy_of(&step);
+
+        // the chiplets whose causal-attention shares read the KV cache
+        // every step — their on-chip reads cross the interposer from
+        // the global-buffer port (chiplet 0)
+        let mut kvset: BTreeSet<usize> = BTreeSet::new();
+        for s in &step.stages {
+            if s.layer.is_some() && attn_names.contains(&s.name) {
+                for &(c, _) in &s.shares {
+                    kvset.insert(c);
+                }
+            }
+        }
+
+        let nop = &cfg.system.nop;
+        let model = DecodeModel {
+            prompt_tokens,
+            max_new_tokens: dc.max_new_tokens,
+            kv_bytes_per_token: (2 * n_causal * dim * dc.kv_precision_bits).div_ceil(8),
+            kv_capacity_bytes: cfg.system.global_buffer_kb * 1024,
+            prefill_ns,
+            prefill_energy_pj,
+            prefill_chunks,
+            fixed_ns,
+            var_ns,
+            token_energy_pj: step.dynamic_energy_pj,
+            kv_chiplets: kvset.into_iter().collect(),
+            num_chiplets: step.num_chiplets,
+            mesh: Mesh::new(step.num_chiplets.max(1)),
+            nop_clock_ns: 1.0e3 / nop.frequency_mhz,
+            nop_ebit_pj: nop.ebit_pj,
+            nop_bits_per_cycle: nop.bits_per_cycle().max(1),
+            dram: cfg.dram.clone(),
+            prefill_busy,
+            token_busy,
+        };
+        Ok((model, full))
+    }
+
+    /// KV-cache bytes a batch with the given per-request context
+    /// lengths (prompt + generated tokens) holds.
+    pub fn kv_residency_bytes(&self, contexts: &[usize]) -> usize {
+        contexts.iter().map(|&c| self.kv_bytes_per_token * c).sum()
+    }
+
+    /// The deterministic cost of one decode step over `contexts` (one
+    /// context length per batched request): fixed overhead + occupancy
+    /// · per-request compute + DRAM spill re-read + on-chip KV NoP
+    /// epoch (simulated through the shared epoch `cache`).
+    pub fn step_cost(&self, contexts: &[usize], cache: &EpochCache) -> StepCost {
+        let residency = self.kv_residency_bytes(contexts);
+        let overflow = residency.saturating_sub(self.kv_capacity_bytes);
+        let (spill_latency_ns, spill_energy_pj) = if overflow > 0 {
+            let d = crate::dram::estimate_with(overflow, &self.dram);
+            (d.latency_ns, d.energy_pj)
+        } else {
+            (0.0, 0.0)
+        };
+
+        // the on-chip share streams from the global-buffer port
+        // (chiplet 0) to every causal-attention chiplet; a co-located
+        // share reads locally and pays no interposer hop
+        let resident_bits = (residency - overflow) as u64 * 8;
+        let remote: Vec<u32> =
+            self.kv_chiplets.iter().filter(|&&c| c != 0).map(|&c| c as u32).collect();
+        let (kv_nop_ns, kv_nop_energy_pj) = if resident_bits > 0 && !remote.is_empty() {
+            let per_chiplet_bits = resident_bits.div_ceil(self.kv_chiplets.len() as u64);
+            let count = per_chiplet_bits.div_ceil(self.nop_bits_per_cycle).max(1);
+            let mut flows: Vec<Flow> = remote
+                .iter()
+                .map(|&c| Flow { src: 0, dst: c, count, start: 0, stride: 2 })
+                .collect();
+            canonicalize_flows(&mut flows);
+            let r = PacketSim::new(&self.mesh).run_cached(&flows, cache);
+            (
+                r.completion_cycles as f64 * self.nop_clock_ns,
+                (per_chiplet_bits * remote.len() as u64) as f64 * self.nop_ebit_pj,
+            )
+        } else {
+            (0.0, 0.0)
+        };
+
+        let b = contexts.len() as f64;
+        StepCost {
+            latency_ns: self.fixed_ns + b * self.var_ns + spill_latency_ns + kv_nop_ns,
+            energy_pj: b * self.token_energy_pj + spill_energy_pj + kv_nop_energy_pj,
+            residency_bytes: residency,
+            spill_bytes: overflow,
+            spill_latency_ns,
+            spill_energy_pj,
+            kv_nop_ns,
+            kv_nop_energy_pj,
+        }
+    }
+
+    /// The analytic per-token latency of one isolated request: prefill
+    /// plus every decode step at its exact context length, divided by
+    /// the tokens generated. Closed-loop concurrency-1 serving delivers
+    /// exactly `1e9 / per_token_ns` tokens/second (same cost helper in
+    /// the same order — the acceptance identity).
+    pub fn per_token_closed_form_ns(&self, cache: &EpochCache) -> f64 {
+        let n = self.max_new_tokens;
+        let mut total = self.prefill_ns;
+        for t in 1..n {
+            total += self.step_cost(&[self.prompt_tokens + t], cache).latency_ns;
+        }
+        total / n as f64
+    }
+}
+
+/// Token-level generation metrics of one decode-serving run, attached
+/// to the [`ServeReport`] as its `decode` block (`None` on classic
+/// per-request serving, keeping that JSON byte-identical).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeReport {
+    /// Tokens generated per request (`[decode] max_new_tokens`).
+    pub max_new_tokens: usize,
+    /// KV-cache precision, bits per element.
+    pub kv_precision_bits: usize,
+    /// Continuous-batching occupancy cap.
+    pub batch_cap: usize,
+    /// Prefill chunk length (0 = whole prompt in one pass).
+    pub prefill_chunk: usize,
+    /// Prompt length from the `seq<N>` dataset, tokens.
+    pub prompt_tokens: usize,
+    /// Graph passes one prefill takes under chunking.
+    pub prefill_chunks: usize,
+    /// Latency of one whole-prompt prefill, ns.
+    pub prefill_ns: f64,
+    /// Per-step overhead paid once regardless of occupancy, ns.
+    pub decode_fixed_ns: f64,
+    /// Per-request compute latency of one decode step, ns.
+    pub decode_var_ns: f64,
+    /// Analytic per-token latency of one isolated request, ns.
+    pub per_token_ns: f64,
+    /// Tokens generated across the run.
+    pub total_tokens: u64,
+    /// Decode steps executed.
+    pub decode_steps: u64,
+    /// Delivered tokens per second over the serving window.
+    pub tokens_per_second: f64,
+    /// Time-to-first-token p50, ms.
+    pub ttft_p50_ms: f64,
+    /// Time-to-first-token p95, ms.
+    pub ttft_p95_ms: f64,
+    /// Time-to-first-token p99, ms.
+    pub ttft_p99_ms: f64,
+    /// Time-per-output-token p50, ms.
+    pub tpot_p50_ms: f64,
+    /// Time-per-output-token p95, ms.
+    pub tpot_p95_ms: f64,
+    /// Time-per-output-token p99, ms.
+    pub tpot_p99_ms: f64,
+    /// Mean batch occupancy across decode steps.
+    pub occupancy_mean: f64,
+    /// Peak batch occupancy.
+    pub occupancy_peak: usize,
+    /// KV bytes one cached token costs.
+    pub kv_bytes_per_token: usize,
+    /// Global-buffer capacity the cache is charged against, bytes.
+    pub kv_capacity_bytes: usize,
+    /// Peak KV residency across decode steps, bytes.
+    pub kv_peak_bytes: usize,
+    /// Peak single-step DRAM spill, bytes (0 = always fit on chip).
+    pub kv_spill_bytes_peak: usize,
+    /// Total DRAM spill re-read latency, ns.
+    pub spill_latency_ns: f64,
+    /// Total DRAM spill re-read energy, pJ.
+    pub spill_energy_pj: f64,
+    /// Total interposer latency of on-chip KV reads, ns.
+    pub kv_nop_ns: f64,
+    /// Total interposer energy of on-chip KV reads, pJ.
+    pub kv_nop_energy_pj: f64,
+}
+
+impl DecodeReport {
+    /// The report as a JSON object (all fields, snake_case).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("max_new_tokens", self.max_new_tokens as u64);
+        o.set("kv_precision_bits", self.kv_precision_bits as u64);
+        o.set("batch_cap", self.batch_cap as u64);
+        o.set("prefill_chunk", self.prefill_chunk as u64);
+        o.set("prompt_tokens", self.prompt_tokens as u64);
+        o.set("prefill_chunks", self.prefill_chunks as u64);
+        o.set("prefill_ns", self.prefill_ns);
+        o.set("decode_fixed_ns", self.decode_fixed_ns);
+        o.set("decode_var_ns", self.decode_var_ns);
+        o.set("per_token_ns", self.per_token_ns);
+        o.set("total_tokens", self.total_tokens);
+        o.set("decode_steps", self.decode_steps);
+        o.set("tokens_per_second", self.tokens_per_second);
+        o.set("ttft_p50_ms", self.ttft_p50_ms);
+        o.set("ttft_p95_ms", self.ttft_p95_ms);
+        o.set("ttft_p99_ms", self.ttft_p99_ms);
+        o.set("tpot_p50_ms", self.tpot_p50_ms);
+        o.set("tpot_p95_ms", self.tpot_p95_ms);
+        o.set("tpot_p99_ms", self.tpot_p99_ms);
+        o.set("occupancy_mean", self.occupancy_mean);
+        o.set("occupancy_peak", self.occupancy_peak as u64);
+        o.set("kv_bytes_per_token", self.kv_bytes_per_token as u64);
+        o.set("kv_capacity_bytes", self.kv_capacity_bytes as u64);
+        o.set("kv_peak_bytes", self.kv_peak_bytes as u64);
+        o.set("kv_spill_bytes_peak", self.kv_spill_bytes_peak as u64);
+        o.set("spill_latency_ns", self.spill_latency_ns);
+        o.set("spill_energy_pj", self.spill_energy_pj);
+        o.set("kv_nop_ns", self.kv_nop_ns);
+        o.set("kv_nop_energy_pj", self.kv_nop_energy_pj);
+        o
+    }
+}
+
+/// One batched request mid-generation.
+struct Slot {
+    req: u32,
+    arrival_ns: f64,
+    prefill_end_ns: f64,
+    tokens: usize,
+}
+
+/// Raw statistics of one decode-engine run.
+#[derive(Default)]
+struct DecodeRun {
+    offered: usize,
+    completed: usize,
+    shed: usize,
+    failover_shed: usize,
+    total_tokens: u64,
+    decode_steps: u64,
+    prefills: usize,
+    end_ns: f64,
+    latencies_ns: Vec<f64>,
+    completion_times_ns: Vec<f64>,
+    ttft_ns: Vec<f64>,
+    tpot_ns: Vec<f64>,
+    occupancy_sum: u64,
+    occupancy_peak: usize,
+    kv_peak_bytes: usize,
+    kv_spill_bytes_peak: usize,
+    spill_latency_ns: f64,
+    spill_energy_pj: f64,
+    kv_nop_ns: f64,
+    kv_nop_energy_pj: f64,
+    resume_time_ns: Option<f64>,
+}
+
+/// Everything the engine needs up front: the healthy model, the
+/// prebuilt remap target (failure scenario only), and the open-loop
+/// arrival stream (`None` = closed loop).
+struct DecodePlan<'a> {
+    model: &'a DecodeModel,
+    degraded: Option<&'a DecodeModel>,
+    arrivals: Option<&'a [f64]>,
+    fail_time_ns: Option<f64>,
+    remap_ns: f64,
+}
+
+/// The iteration-level continuous-batching event loop.
+struct Engine<'a, S: DecodeSink> {
+    sc: &'a ServeConfig,
+    model: &'a DecodeModel,
+    cache: &'a EpochCache,
+    sink: &'a mut S,
+    /// Batch occupancy cap (`[decode] batch_cap`).
+    cap: usize,
+    /// Closed-loop mode: clients re-issue on completion, nothing sheds.
+    closed: bool,
+    batch: Vec<Slot>,
+    waiting: VecDeque<(u32, f64)>,
+    /// Closed-loop requests issued so far.
+    spawned: usize,
+    t: f64,
+    run: DecodeRun,
+}
+
+impl<S: DecodeSink> Engine<'_, S> {
+    /// Admit every open-loop arrival at or before the current time,
+    /// shedding beyond the `[serve] queue_depth` waiting bound.
+    fn admit_open(&mut self, arrivals: &[f64], next: &mut usize) {
+        while *next < arrivals.len() && arrivals[*next] <= self.t {
+            let req = *next as u32;
+            let at = arrivals[*next];
+            if self.waiting.len() >= self.sc.queue_depth {
+                self.run.shed += 1;
+                self.sink.shed(at, req);
+            } else {
+                self.waiting.push_back((req, at));
+                self.sink.admitted(at, req);
+            }
+            *next += 1;
+        }
+    }
+
+    /// Fill free batch slots from the waiting queue, one sequential
+    /// prefill pass each (the first generated token falls out of
+    /// prefill, so TTFT is measured here).
+    fn fill_batch(&mut self) {
+        while self.batch.len() < self.cap && !self.waiting.is_empty() {
+            let (req, arrival_ns) = self.waiting.pop_front().expect("checked non-empty");
+            let start = self.t;
+            self.t += self.model.prefill_ns;
+            self.run.prefills += 1;
+            self.sink.prefill(start, self.model.prefill_ns, req);
+            self.run.total_tokens += 1;
+            self.sink.token(self.t, req, 1);
+            self.run.ttft_ns.push(self.t - arrival_ns);
+            self.batch.push(Slot { req, arrival_ns, prefill_end_ns: self.t, tokens: 1 });
+        }
+    }
+
+    /// Run one decode step over the live batch, advancing every
+    /// request by one token.
+    fn step(&mut self) {
+        let contexts: Vec<usize> =
+            self.batch.iter().map(|s| self.model.prompt_tokens + s.tokens).collect();
+        let cost = self.model.step_cost(&contexts, self.cache);
+        let start = self.t;
+        self.t += cost.latency_ns;
+        self.run.decode_steps += 1;
+        self.run.occupancy_sum += self.batch.len() as u64;
+        self.run.occupancy_peak = self.run.occupancy_peak.max(self.batch.len());
+        self.run.kv_peak_bytes = self.run.kv_peak_bytes.max(cost.residency_bytes);
+        self.run.kv_spill_bytes_peak = self.run.kv_spill_bytes_peak.max(cost.spill_bytes);
+        self.run.spill_latency_ns += cost.spill_latency_ns;
+        self.run.spill_energy_pj += cost.spill_energy_pj;
+        self.run.kv_nop_ns += cost.kv_nop_ns;
+        self.run.kv_nop_energy_pj += cost.kv_nop_energy_pj;
+        self.sink.step(start, cost.latency_ns, self.batch.len());
+        for slot in &mut self.batch {
+            slot.tokens += 1;
+            self.run.total_tokens += 1;
+            self.sink.token(self.t, slot.req, slot.tokens);
+        }
+    }
+
+    /// Retire every request that has all its tokens; closed-loop
+    /// clients immediately re-issue at the completion time.
+    fn retire(&mut self) {
+        let n = self.model.max_new_tokens;
+        let mut i = 0;
+        while i < self.batch.len() {
+            if self.batch[i].tokens < n {
+                i += 1;
+                continue;
+            }
+            let s = self.batch.remove(i);
+            let latency = self.t - s.arrival_ns;
+            self.run.completed += 1;
+            self.run.latencies_ns.push(latency);
+            self.run.completion_times_ns.push(self.t);
+            if s.tokens > 1 {
+                self.run.tpot_ns.push((self.t - s.prefill_end_ns) / (s.tokens - 1) as f64);
+            }
+            self.sink.completed(self.t, s.req, latency);
+            if self.closed && self.spawned < self.sc.requests {
+                let req = self.spawned as u32;
+                self.spawned += 1;
+                self.run.offered += 1;
+                self.waiting.push_back((req, self.t));
+                self.sink.admitted(self.t, req);
+            }
+        }
+    }
+
+    /// Shed the in-flight batch and waiting queue at the failure
+    /// instant (in-flight counts separately for the failover report).
+    fn shed_all(&mut self) -> usize {
+        let mut n = 0;
+        for s in self.batch.drain(..) {
+            self.run.failover_shed += 1;
+            n += 1;
+            self.sink.shed(self.t, s.req);
+        }
+        for (req, _) in self.waiting.drain(..) {
+            self.run.shed += 1;
+            n += 1;
+            self.sink.shed(self.t, req);
+        }
+        n
+    }
+}
+
+/// Run the continuous-batching decode engine to drain, returning the
+/// raw run statistics.
+fn run_decode<S: DecodeSink>(
+    sc: &ServeConfig,
+    dec: &DecodeConfig,
+    plan: &DecodePlan<'_>,
+    cache: &EpochCache,
+    sink: &mut S,
+) -> DecodeRun {
+    let closed = plan.arrivals.is_none();
+    let mut eng = Engine {
+        sc,
+        model: plan.model,
+        cache,
+        sink,
+        cap: dec.batch_cap.max(1),
+        closed,
+        batch: Vec::new(),
+        waiting: VecDeque::new(),
+        spawned: 0,
+        t: 0.0,
+        run: DecodeRun::default(),
+    };
+
+    let mut next_arrival = 0usize;
+    if closed {
+        let initial = sc.concurrency.min(sc.requests).max(1);
+        for _ in 0..initial {
+            let req = eng.spawned as u32;
+            eng.spawned += 1;
+            eng.run.offered += 1;
+            eng.waiting.push_back((req, 0.0));
+            eng.sink.admitted(0.0, req);
+        }
+    } else {
+        eng.run.offered = plan.arrivals.map_or(0, <[f64]>::len);
+    }
+
+    let mut failed = false;
+    loop {
+        // mid-run chiplet failure: shed everything in flight, then
+        // either hot-swap the prebuilt remapped model after the remap
+        // latency or stay down for the rest of the stream
+        if let Some(ft) = plan.fail_time_ns {
+            if !failed && eng.t >= ft {
+                failed = true;
+                let lost = eng.shed_all();
+                eng.sink.failed(eng.t, lost);
+                match plan.degraded {
+                    Some(m) => {
+                        eng.model = m;
+                        eng.t = ft + plan.remap_ns;
+                        eng.run.resume_time_ns = Some(eng.t);
+                        eng.sink.resumed(eng.t);
+                    }
+                    None => {
+                        if let Some(arr) = plan.arrivals {
+                            while next_arrival < arr.len() {
+                                eng.run.shed += 1;
+                                eng.sink.shed(arr[next_arrival], next_arrival as u32);
+                                next_arrival += 1;
+                            }
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+
+        if let Some(arr) = plan.arrivals {
+            eng.admit_open(arr, &mut next_arrival);
+        }
+        eng.fill_batch();
+        eng.retire();
+        if !eng.batch.is_empty() {
+            eng.step();
+            eng.retire();
+            continue;
+        }
+        if !eng.waiting.is_empty() {
+            continue;
+        }
+        match plan.arrivals {
+            Some(arr) if next_arrival < arr.len() => {
+                eng.t = eng.t.max(arr[next_arrival]);
+            }
+            _ => break,
+        }
+    }
+    eng.run.end_ns = eng.t;
+    eng.run
+}
+
+/// Precomputed per-run context the report assembly needs alongside the
+/// raw statistics.
+struct RunEnv {
+    mode: &'static str,
+    offered_qps: f64,
+    concurrency: usize,
+    per_token_ns: f64,
+    failover: Option<FailoverReport>,
+}
+
+/// Turn raw decode-engine statistics into a full [`ServeReport`] with
+/// its `decode` block attached.
+fn assemble_decode_report(
+    cfg: &SiamConfig,
+    model: &DecodeModel,
+    full: &StageGraph,
+    run: &DecodeRun,
+    env: RunEnv,
+    t0: std::time::Instant,
+) -> ServeReport {
+    let sort = |v: &[f64]| {
+        let mut s = v.to_vec();
+        s.sort_by(|a, b| a.total_cmp(b));
+        s
+    };
+    let lat = sort(&run.latencies_ns);
+    let ttft = sort(&run.ttft_ns);
+    let tpot = sort(&run.tpot_ns);
+    let mean_ns = if lat.is_empty() {
+        0.0
+    } else {
+        lat.iter().sum::<f64>() / lat.len() as f64
+    };
+
+    let window_ns = run.end_ns.max(1e-9);
+    let mut util = vec![0.0f64; full.num_chiplets];
+    for (c, u) in util.iter_mut().enumerate() {
+        let busy = run.prefills as f64 * model.prefill_busy[c]
+            + run.total_tokens as f64 * model.token_busy[c];
+        *u = (busy / window_ns).min(1.0);
+    }
+    let mean_utilization = if util.is_empty() {
+        0.0
+    } else {
+        util.iter().sum::<f64>() / util.len() as f64
+    };
+    let peak_utilization = util.iter().copied().fold(0.0f64, f64::max);
+
+    let total_energy_pj = run.prefills as f64 * model.prefill_energy_pj
+        + run.total_tokens as f64 * model.token_energy_pj
+        + run.spill_energy_pj
+        + run.kv_nop_energy_pj;
+    let leak_share_pj = if run.completed > 0 {
+        full.leakage_uw * window_ns / run.completed as f64 / 1.0e3
+    } else {
+        0.0
+    };
+    let energy_per_inference_pj = if run.completed > 0 {
+        total_energy_pj / run.completed as f64 + leak_share_pj
+    } else {
+        0.0
+    };
+
+    let decode = DecodeReport {
+        max_new_tokens: cfg.decode.max_new_tokens,
+        kv_precision_bits: cfg.decode.kv_precision_bits,
+        batch_cap: cfg.decode.batch_cap,
+        prefill_chunk: cfg.decode.prefill_chunk,
+        prompt_tokens: model.prompt_tokens,
+        prefill_chunks: model.prefill_chunks,
+        prefill_ns: model.prefill_ns,
+        decode_fixed_ns: model.fixed_ns,
+        decode_var_ns: model.var_ns,
+        per_token_ns: env.per_token_ns,
+        total_tokens: run.total_tokens,
+        decode_steps: run.decode_steps,
+        tokens_per_second: run.total_tokens as f64 * 1.0e9 / window_ns,
+        ttft_p50_ms: percentile(&ttft, 50.0) / 1.0e6,
+        ttft_p95_ms: percentile(&ttft, 95.0) / 1.0e6,
+        ttft_p99_ms: percentile(&ttft, 99.0) / 1.0e6,
+        tpot_p50_ms: percentile(&tpot, 50.0) / 1.0e6,
+        tpot_p95_ms: percentile(&tpot, 95.0) / 1.0e6,
+        tpot_p99_ms: percentile(&tpot, 99.0) / 1.0e6,
+        occupancy_mean: if run.decode_steps > 0 {
+            run.occupancy_sum as f64 / run.decode_steps as f64
+        } else {
+            0.0
+        },
+        occupancy_peak: run.occupancy_peak,
+        kv_bytes_per_token: model.kv_bytes_per_token,
+        kv_capacity_bytes: model.kv_capacity_bytes,
+        kv_peak_bytes: run.kv_peak_bytes,
+        kv_spill_bytes_peak: run.kv_spill_bytes_peak,
+        spill_latency_ns: run.spill_latency_ns,
+        spill_energy_pj: run.spill_energy_pj,
+        kv_nop_ns: run.kv_nop_ns,
+        kv_nop_energy_pj: run.kv_nop_energy_pj,
+    };
+
+    let (bottleneck_stage, bottleneck_service_ns) = full.bottleneck();
+    ServeReport {
+        model: full.single_shot.model.clone(),
+        dataset: full.single_shot.dataset.clone(),
+        model_source: full.single_shot.model_source.clone(),
+        mode: env.mode.into(),
+        offered_qps: env.offered_qps,
+        concurrency: env.concurrency,
+        num_stages: full.stages.len(),
+        num_chiplets: full.num_chiplets,
+        classes: full.single_shot.chiplets_per_class.clone(),
+        bottleneck_stage,
+        bottleneck_service_ns,
+        bottleneck_qps: full.bottleneck_qps(),
+        single_pass_ns: full.single_pass_ns(),
+        single_shot_latency_ns: full.single_shot.total.latency_ns,
+        single_shot_energy_pj: full.single_shot.total.energy_pj,
+        requests: run.offered,
+        completed: run.completed,
+        dropped: run.shed + run.failover_shed,
+        throughput_qps: run.completed as f64 * 1.0e9 / window_ns,
+        p50_ms: percentile(&lat, 50.0) / 1.0e6,
+        p95_ms: percentile(&lat, 95.0) / 1.0e6,
+        p99_ms: percentile(&lat, 99.0) / 1.0e6,
+        mean_ms: mean_ns / 1.0e6,
+        chiplet_utilization: util,
+        mean_utilization,
+        peak_utilization,
+        energy_per_inference_pj,
+        qos_p99_target_ms: cfg.serve.qos_p99_ms,
+        weight_load: full.weight_load,
+        failover: env.failover,
+        decode: Some(decode),
+        variation: full.variation.clone(),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        meta: None,
+    }
+}
+
+/// Run decode serving for one configuration against a shared sweep
+/// context (the decode analogue of [`crate::serve::evaluate`]).
+pub fn evaluate_decode(cfg: &SiamConfig, ctx: &SweepContext) -> Result<ServeReport> {
+    let t0 = std::time::Instant::now();
+    let (model, full) = DecodeModel::build(cfg, ctx)?;
+    decode_graph(cfg, ctx, &model, &full, &mut NoopDecodeSink, t0)
+}
+
+/// [`evaluate_decode`] with the token-level event stream rendered into
+/// a Chrome trace (see [`DecodeTracer`]). The report is bit-identical
+/// to [`evaluate_decode`]'s.
+pub fn evaluate_decode_traced(
+    cfg: &SiamConfig,
+    ctx: &SweepContext,
+) -> Result<(ServeReport, TraceBuffer)> {
+    let t0 = std::time::Instant::now();
+    let (model, full) = DecodeModel::build(cfg, ctx)?;
+    let mut tracer = DecodeTracer::new();
+    let report = decode_graph(cfg, ctx, &model, &full, &mut tracer, t0)?;
+    Ok((report, tracer.into_buffer()))
+}
+
+/// Run decode serving for one configuration, building a fresh
+/// [`SweepContext`] (the decode analogue of [`crate::serve::serve`]).
+/// A `[sweep] cache_file` on the config is honored.
+pub fn serve_decode(cfg: &SiamConfig) -> Result<ServeReport> {
+    let ctx = SweepContext::new(cfg)?;
+    let store = crate::serve::open_store(cfg, &ctx)?;
+    let report = evaluate_decode(cfg, &ctx)?;
+    if let Some(s) = &store {
+        s.absorb(ctx.epoch_cache())?;
+    }
+    Ok(report)
+}
+
+/// [`serve_decode`] with the token-level event stream rendered into a
+/// Chrome trace — the entry point behind `siam serve --decode --trace`.
+pub fn serve_decode_traced(cfg: &SiamConfig) -> Result<(ServeReport, TraceBuffer)> {
+    let ctx = SweepContext::new(cfg)?;
+    let store = crate::serve::open_store(cfg, &ctx)?;
+    let out = evaluate_decode_traced(cfg, &ctx)?;
+    if let Some(s) = &store {
+        s.absorb(ctx.epoch_cache())?;
+    }
+    Ok(out)
+}
+
+/// Shared tail of the decode entry points: plan the workload (and the
+/// failure scenario, if configured), run the engine, assemble the
+/// report, and attach the run's `meta` block.
+fn decode_graph<S: DecodeSink>(
+    cfg: &SiamConfig,
+    ctx: &SweepContext,
+    model: &DecodeModel,
+    full: &StageGraph,
+    sink: &mut S,
+    t0: std::time::Instant,
+) -> Result<ServeReport> {
+    let sc = &cfg.serve;
+    let cache = ctx.epoch_cache();
+    let per_token_ns = model.per_token_closed_form_ns(cache);
+    let request_ns = per_token_ns * cfg.decode.max_new_tokens as f64;
+
+    let (arrivals, mode, offered_qps, concurrency) = match sc.mode {
+        ServeMode::Open => {
+            // auto rate: 80 % of the sequential single-request service
+            // rate — loaded but stable, batching headroom on top
+            let rate = if sc.rate_qps > 0.0 {
+                sc.rate_qps
+            } else {
+                0.8e9 / request_ns
+            };
+            (Some(poisson_arrivals(rate, sc.requests, sc.seed)), "open", rate, 0)
+        }
+        ServeMode::Closed => (None, "closed", 0.0, sc.concurrency),
+    };
+
+    // the failure scenario: prebuild the remapped model exactly like
+    // the classic path prebuilds its degraded stage graph
+    let mut fail_time_ns = None;
+    let mut degraded = None;
+    let mut remap_error = None;
+    if let Some(fail_at) = sc.fail_at_request {
+        let arr = arrivals
+            .as_deref()
+            .ok_or_else(|| anyhow!("decode failover needs open-loop serving ([serve] mode)"))?;
+        ensure!(
+            fail_at < sc.requests,
+            "serve.fail_at_request = {fail_at} is outside the {} offered requests",
+            sc.requests
+        );
+        ensure!(
+            sc.fail_chiplet < model.num_chiplets,
+            "serve.fail_chiplet = {} but the architecture has {} chiplets (spares included)",
+            sc.fail_chiplet,
+            model.num_chiplets
+        );
+        fail_time_ns = Some(arr[fail_at]);
+        let mut dcfg = cfg.clone();
+        dcfg.serve.fail_at_request = None;
+        if !dcfg.fault.kill_chiplets.contains(&sc.fail_chiplet) {
+            dcfg.fault.kill_chiplets.push(sc.fail_chiplet);
+        }
+        match DecodeModel::build(&dcfg, ctx) {
+            Ok((m, _)) => degraded = Some(m),
+            Err(e) => remap_error = Some(format!("{e:#}")),
+        }
+    }
+
+    let plan = DecodePlan {
+        model,
+        degraded: degraded.as_ref(),
+        arrivals: arrivals.as_deref(),
+        fail_time_ns,
+        remap_ns: sc.remap_latency_us * 1.0e3,
+    };
+    let run = run_decode(sc, &cfg.decode, &plan, cache, sink);
+
+    let failover = fail_time_ns.map(|ft| {
+        let dead_stages = full
+            .stages
+            .iter()
+            .filter(|s| s.shares.iter().any(|&(c, _)| c == sc.fail_chiplet))
+            .count();
+        let resume = run.resume_time_ns;
+        let (mut before, mut during, mut after) = (Vec::new(), Vec::new(), Vec::new());
+        let mut first_after_ns = f64::INFINITY;
+        for (&t, &l) in run.completion_times_ns.iter().zip(&run.latencies_ns) {
+            if t < ft {
+                before.push(l);
+            } else if resume.is_none_or(|rt| t < rt) {
+                during.push(l);
+            } else {
+                first_after_ns = first_after_ns.min(t);
+                after.push(l);
+            }
+        }
+        for w in [&mut before, &mut during, &mut after] {
+            w.sort_by(|a, b| a.total_cmp(b));
+        }
+        let recovered = !after.is_empty();
+        FailoverReport {
+            fail_chiplet: sc.fail_chiplet,
+            fail_time_ms: ft / 1.0e6,
+            remap_latency_ms: sc.remap_latency_us / 1.0e3,
+            dead_stages,
+            recovered,
+            recovery_ms: if recovered { (first_after_ns - ft) / 1.0e6 } else { 0.0 },
+            shed_total: run.failover_shed + run.shed,
+            shed_in_flight: run.failover_shed,
+            p99_before_ms: percentile(&before, 99.0) / 1.0e6,
+            p99_during_ms: percentile(&during, 99.0) / 1.0e6,
+            p99_after_ms: percentile(&after, 99.0) / 1.0e6,
+            spare_chiplets: cfg.system.spare_chiplets,
+            remap_error,
+        }
+    });
+
+    let env = RunEnv { mode, offered_qps, concurrency, per_token_ns, failover };
+    let mut report = assemble_decode_report(cfg, model, full, &run, env, t0);
+    let mut meta = RunMeta::for_config(cfg);
+    meta.model_source = full.single_shot.model_source.clone();
+    meta.epoch_cache = Some(CacheSnapshot::capture(ctx.epoch_cache()));
+    meta.engine_tiers = Some(full.single_shot.engine_tiers);
+    meta.wall_seconds = t0.elapsed().as_secs_f64();
+    report.meta = Some(meta);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A hand-built model with simple round numbers, for exact
+    /// KV-accounting and step-cost arithmetic.
+    fn synthetic(kv_bpt: usize, cap: usize, kv_chiplets: Vec<usize>) -> DecodeModel {
+        DecodeModel {
+            prompt_tokens: 4,
+            max_new_tokens: 4,
+            kv_bytes_per_token: kv_bpt,
+            kv_capacity_bytes: cap,
+            prefill_ns: 100.0,
+            prefill_energy_pj: 10.0,
+            prefill_chunks: 1,
+            fixed_ns: 5.0,
+            var_ns: 2.0,
+            token_energy_pj: 1.0,
+            kv_chiplets,
+            num_chiplets: 4,
+            mesh: Mesh::new(4),
+            nop_clock_ns: 4.0,
+            nop_ebit_pj: 0.54,
+            nop_bits_per_cycle: 128,
+            dram: SiamConfig::paper_default().dram,
+            prefill_busy: vec![0.0; 4],
+            token_busy: vec![0.0; 4],
+        }
+    }
+
+    #[test]
+    fn kv_residency_matches_closed_form() {
+        let m = synthetic(64, 1 << 20, vec![]);
+        assert_eq!(m.kv_residency_bytes(&[]), 0);
+        assert_eq!(m.kv_residency_bytes(&[5]), 320);
+        assert_eq!(m.kv_residency_bytes(&[5, 7, 9]), 64 * 21);
+        // decode-step trajectory of one request: prompt 4, tokens 1..
+        for t in 1..10usize {
+            assert_eq!(m.kv_residency_bytes(&[4 + t]), 64 * (4 + t));
+        }
+    }
+
+    #[test]
+    fn kv_spill_boundary_is_one_byte_exact() {
+        let cache = EpochCache::new();
+        // 16 cached tokens at 64 B/token = exactly 1024 B
+        let fit = synthetic(64, 1024, vec![]);
+        let c = fit.step_cost(&[16], &cache);
+        assert_eq!(c.residency_bytes, 1024);
+        assert_eq!(c.spill_bytes, 0);
+        assert_eq!(c.spill_latency_ns, 0.0);
+        assert_eq!(c.spill_energy_pj, 0.0);
+        // one byte less capacity: exactly one byte spills, and the DRAM
+        // model charges real latency and energy for the re-read
+        let over = synthetic(64, 1023, vec![]);
+        let c = over.step_cost(&[16], &cache);
+        assert_eq!(c.spill_bytes, 1);
+        assert!(c.spill_latency_ns > 0.0);
+        assert!(c.spill_energy_pj > 0.0);
+        assert!(c.latency_ns > fit.step_cost(&[16], &cache).latency_ns);
+    }
+
+    #[test]
+    fn step_cost_composes_fixed_var_and_nop() {
+        let cache = EpochCache::new();
+        // no KV chiplets, no spill: pure fixed + B·var
+        let m = synthetic(64, 1 << 20, vec![]);
+        for b in 1..5usize {
+            let contexts = vec![8; b];
+            let c = m.step_cost(&contexts, &cache);
+            assert_eq!(c.latency_ns, 5.0 + b as f64 * 2.0);
+            assert_eq!(c.energy_pj, b as f64);
+            assert_eq!(c.kv_nop_ns, 0.0);
+        }
+        // a remote KV chiplet adds a NoP epoch with real latency/energy
+        let r = synthetic(64, 1 << 20, vec![1, 2]);
+        let c = r.step_cost(&[8], &cache);
+        assert!(c.kv_nop_ns > 0.0);
+        assert!(c.kv_nop_energy_pj > 0.0);
+        assert!(c.latency_ns > 5.0 + 2.0);
+        // a KV share co-located with the buffer port pays no NoP
+        let local = synthetic(64, 1 << 20, vec![0]);
+        let c = local.step_cost(&[8], &cache);
+        assert_eq!(c.kv_nop_ns, 0.0);
+        assert_eq!(c.kv_nop_energy_pj, 0.0);
+    }
+
+    #[test]
+    fn per_token_closed_form_sums_step_trajectory() {
+        let cache = EpochCache::new();
+        let m = synthetic(64, 1 << 20, vec![]);
+        // prompt 4, n 4: prefill + steps at contexts 5, 6, 7
+        let want = (100.0
+            + m.step_cost(&[5], &cache).latency_ns
+            + m.step_cost(&[6], &cache).latency_ns
+            + m.step_cost(&[7], &cache).latency_ns)
+            / 4.0;
+        assert_eq!(m.per_token_closed_form_ns(&cache), want);
+    }
+
+    fn decode_cfg() -> SiamConfig {
+        SiamConfig::paper_default()
+            .with_model("gpt2_small", "seq16")
+            .with_decode(4, 8, 4)
+            .with_serve_requests(8)
+    }
+
+    #[test]
+    fn closed_loop_concurrency_one_matches_closed_form() {
+        let cfg = decode_cfg().with_serve_closed(1);
+        let rep = serve_decode(&cfg).unwrap();
+        let d = rep.decode.as_ref().expect("decode block attached");
+        let want = 1.0e9 / d.per_token_ns;
+        let rel = (d.tokens_per_second - want).abs() / want;
+        assert!(rel < 1e-9, "tokens/s {} vs closed form {want} (rel {rel})", d.tokens_per_second);
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.completed, 8);
+        assert_eq!(d.total_tokens, 8 * 4);
+        // concurrency 1 never batches, and TTFT is exactly the prefill
+        assert_eq!(d.occupancy_peak, 1);
+        let rel = (d.ttft_p50_ms - d.prefill_ns / 1.0e6).abs() / (d.prefill_ns / 1.0e6);
+        assert!(rel < 1e-12, "ttft {} vs prefill {}", d.ttft_p50_ms, d.prefill_ns / 1.0e6);
+        assert!(d.decode_fixed_ns > 0.0 && d.decode_var_ns > 0.0);
+    }
+
+    #[test]
+    fn continuous_batching_conserves_and_respects_cap() {
+        // open-loop auto rate: whatever the queue sheds or completes,
+        // every offered request is accounted for at drain
+        let cfg = decode_cfg().with_serve_open(0.0);
+        let rep = serve_decode(&cfg).unwrap();
+        let d = rep.decode.as_ref().unwrap();
+        assert_eq!(rep.requests, rep.completed + rep.dropped, "conservation at drain");
+        assert!(d.occupancy_peak <= 4, "occupancy {} exceeds cap", d.occupancy_peak);
+        assert!(d.occupancy_mean <= d.occupancy_peak as f64);
+        assert!(d.tokens_per_second > 0.0);
+        assert!(d.kv_peak_bytes >= d.kv_bytes_per_token * (16 + 1));
+        // the decode block appears exactly once in the JSON
+        let j = rep.to_json().to_string_pretty();
+        assert_eq!(j.matches("\"decode\"").count(), 1);
+        assert_eq!(j.matches("\"kv_spill_bytes_peak\"").count(), 1);
+        let back = crate::util::json::parse(&j).expect("decode JSON parses");
+        let db = back.get("decode").expect("decode key");
+        assert!(db.get("tokens_per_second").and_then(|v| v.as_f64()).is_some());
+    }
+
+    #[test]
+    fn batching_amortizes_fixed_cost() {
+        let base = decode_cfg();
+        let seq = serve_decode(&base.clone().with_serve_closed(1)).unwrap();
+        let bat = serve_decode(&base.with_serve_closed(4)).unwrap();
+        let (ds, db) = (seq.decode.as_ref().unwrap(), bat.decode.as_ref().unwrap());
+        assert!(db.occupancy_peak > 1, "closed-4 must batch");
+        assert!(
+            db.tokens_per_second > ds.tokens_per_second,
+            "batched {} vs sequential {} tokens/s",
+            db.tokens_per_second,
+            ds.tokens_per_second
+        );
+    }
+
+    #[test]
+    fn decode_seed_determinism_bitwise() {
+        let cfg = decode_cfg().with_serve_open(0.0);
+        let a = serve_decode(&cfg).unwrap();
+        let b = serve_decode(&cfg).unwrap();
+        let (da, db) = (a.decode.as_ref().unwrap(), b.decode.as_ref().unwrap());
+        assert_eq!(da.tokens_per_second.to_bits(), db.tokens_per_second.to_bits());
+        assert_eq!(da.ttft_p99_ms.to_bits(), db.ttft_p99_ms.to_bits());
+        assert_eq!(da.tpot_p99_ms.to_bits(), db.tpot_p99_ms.to_bits());
+        assert_eq!(da.total_tokens, db.total_tokens);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+    }
+
+    #[test]
+    fn decode_gating_rejects_non_decoders() {
+        // image datasets / models without causal attention are rejected
+        // with actionable messages before any engine work
+        let cfg = SiamConfig::paper_default().with_decode(4, 8, 4);
+        let ctx = SweepContext::new(&cfg).unwrap();
+        let e = DecodeModel::build(&cfg, &ctx).unwrap_err().to_string();
+        assert!(e.contains("seq<N>"), "{e}");
+        let mut wl = decode_cfg();
+        wl.serve.workloads = vec!["lenet5:cifar10".into()];
+        let ctx2 = SweepContext::new(&decode_cfg()).unwrap();
+        let e = DecodeModel::build(&wl, &ctx2).unwrap_err().to_string();
+        assert!(e.contains("workloads"), "{e}");
+    }
+
+    #[test]
+    fn decode_trace_carries_token_events() {
+        let cfg = decode_cfg().with_serve_closed(2).with_serve_requests(4);
+        let (rep, buf) = serve_decode_traced(&cfg).unwrap();
+        let text = buf.render();
+        for ev in ["\"prefill\"", "\"decode-step\"", "\"token\"", "\"complete\""] {
+            assert!(text.contains(ev), "trace missing {ev}");
+        }
+        // tracing is a pure observer
+        let plain = serve_decode(&cfg).unwrap();
+        let (dt, dp) = (rep.decode.as_ref().unwrap(), plain.decode.as_ref().unwrap());
+        assert_eq!(dt.tokens_per_second.to_bits(), dp.tokens_per_second.to_bits());
+        assert_eq!(dt.total_tokens, dp.total_tokens);
+    }
+}

@@ -25,10 +25,15 @@
 //! * fixed seed ⇒ bit-identical percentiles, on any machine and under
 //!   any sweep thread count.
 
+pub mod decode;
 pub mod engine;
 pub mod stage;
 pub mod traffic;
 
+pub use decode::{
+    evaluate_decode, evaluate_decode_traced, serve_decode, serve_decode_traced, DecodeModel,
+    DecodeReport, DecodeTracer,
+};
 pub use engine::{
     run, run_observed, run_with_failover, EngineParams, EngineSink, FailoverPlan, NoopSink,
     RunStats, Workload,
@@ -379,6 +384,7 @@ fn assemble_report(
         qos_p99_target_ms: sc.qos_p99_ms,
         weight_load: graph.weight_load,
         failover: None,
+        decode: None,
         variation: graph.variation.clone(),
         wall_seconds: t0.elapsed().as_secs_f64(),
         meta: None,

@@ -269,7 +269,12 @@ fn assert_sim_reports_bit_identical(
 fn checked_in_model_files_match_builtin_exports() {
     // the zoo files are exactly what `to_model_toml` exports from the
     // builtin builders — the frontend is self-hosting, byte for byte
-    for (name, ds) in [("vit_tiny", "imagenet"), ("vit_small", "imagenet"), ("bert_base", "seq128")]
+    for (name, ds) in [
+        ("vit_tiny", "imagenet"),
+        ("vit_small", "imagenet"),
+        ("bert_base", "seq128"),
+        ("gpt2_small", "seq128"),
+    ]
     {
         let builtin = siam::dnn::build_model(name, ds).unwrap();
         let exported = siam::dnn::to_model_toml(&builtin)
@@ -538,6 +543,9 @@ fn zoo_golden_params_and_crossbars_are_stable() {
         ("vit_tiny", 5717032, 3366),
         ("vit_small", 22049896, 10701),
         ("bert_base", 108891650, 41478),
+        // decoder: 12 blocks x (attn 1152 + fc1 1152 + fc2 1152) +
+        // tied unembed 6*ceil(50257*8/128) = 18852 crossbars
+        ("gpt2_small", 124439808, 60324),
     ];
     assert_eq!(golden.len(), siam::dnn::zoo_names().len(), "golden table covers the zoo");
     for &(name, params, xbars) in golden {
@@ -546,4 +554,49 @@ fn zoo_golden_params_and_crossbars_are_stable() {
         let map = siam::mapping::map_dnn(&dnn, &SiamConfig::paper_default()).unwrap();
         assert_eq!(map.total_xbars(), xbars, "{name} mapped crossbars drifted");
     }
+}
+
+#[test]
+fn decode_block_is_inert_for_existing_paths() {
+    // the decode subsystem rides behind `[decode]`: with the block
+    // absent, single-shot and classic serving reports carry no decode
+    // fragment and the exported config carries no [decode] section —
+    // pre-decode artifact consumers see byte-identical shapes
+    let cfg = SiamConfig::paper_default();
+    assert!(cfg.decode.is_default(), "paper default must leave decode inert");
+    assert!(
+        !cfg.to_toml_string().contains("[decode]"),
+        "inert decode config must not export a [decode] section"
+    );
+    let sim = simulate(&cfg).unwrap().to_json().to_string_pretty();
+    assert!(!sim.contains("\"decode\""), "SimReport grew a decode key");
+    let mut scfg = cfg.clone().with_serve_closed(2);
+    scfg.serve.requests = 64;
+    let srv = siam::serve::serve(&scfg).unwrap().to_json().to_string_pretty();
+    assert!(!srv.contains("\"decode\""), "classic ServeReport grew a decode key");
+    // and the decode entry point refuses non-decoder workloads instead
+    // of silently changing them
+    let err = siam::serve::serve_decode(&scfg).unwrap_err().to_string();
+    assert!(err.contains("seq<N>"), "unexpected gating error: {err}");
+}
+
+#[test]
+fn decode_serving_end_to_end_smoke() {
+    // full pipeline through the public entry point: gpt2_small prefill +
+    // decode epochs, KV accounting and percentiles land in the report
+    let mut cfg = SiamConfig::paper_default()
+        .with_model("gpt2_small", "seq32")
+        .with_decode(4, 8, 2)
+        .with_serve_closed(2);
+    cfg.serve.requests = 4;
+    let rep = siam::serve::serve_decode(&cfg).unwrap();
+    assert_eq!(rep.completed, 4);
+    let d = rep.decode.as_ref().expect("decode fragment");
+    assert_eq!(d.total_tokens, 16);
+    assert!(d.tokens_per_second > 0.0 && d.ttft_p50_ms > 0.0 && d.tpot_p50_ms > 0.0);
+    // KV geometry: 2 directions x 12 layers x 768 channels x 8 bits
+    assert_eq!(d.kv_bytes_per_token, 2 * 12 * 768);
+    let j = rep.to_json().to_string_pretty();
+    let parsed = siam::util::json::parse(&j).unwrap();
+    assert!(parsed.get("decode").is_some(), "decode fragment missing from JSON");
 }

@@ -727,3 +727,78 @@ fn interleaved_appends_from_two_handles_never_corrupt_reads() {
         let _ = std::fs::remove_file(&path);
     });
 }
+
+// ---------------------------------------------------------------------
+// autoregressive decode serving: continuous-batching invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn decode_batching_invariants_hold_for_random_draws() {
+    use siam::coordinator::SweepContext;
+    // one shared context: every decode run below replays the same
+    // cached stage outputs instead of re-simulating the design point
+    let base = SiamConfig::paper_default().with_model("gpt2_small", "seq16");
+    let ctx = SweepContext::new(&base).unwrap();
+    check_property("decode_batching_invariants", 12, 0xDEC0DE, |rng| {
+        let tokens = rng.range(2, 8) as usize;
+        let cap = rng.range(1, 6) as usize;
+        let requests = rng.range(2, 24) as usize;
+        let kv_bits = [4, 8, 16][rng.below(3) as usize];
+        let mut cfg = base
+            .clone()
+            .with_decode(tokens, kv_bits, cap)
+            .with_serve_open(0.0)
+            .with_serve_requests(requests);
+        cfg.serve.seed = rng.next_u64();
+        let a = siam::serve::evaluate_decode(&cfg, &ctx).unwrap();
+        let b = siam::serve::evaluate_decode(&cfg, &ctx).unwrap();
+        // same seed => bit-identical serialized reports
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "same-seed decode runs diverged"
+        );
+        // conservation at drain: every offered request either finished
+        // its trajectory or was shed; nothing stays in flight
+        assert_eq!(a.requests, requests, "offered count drifted");
+        assert_eq!(a.requests, a.completed + a.dropped, "requests leaked");
+        let d = a.decode.as_ref().expect("decode fragment");
+        // the batch never exceeds its cap, and every completed request
+        // contributed exactly max_new_tokens tokens
+        assert!(d.occupancy_peak <= cap, "occupancy {} > cap {cap}", d.occupancy_peak);
+        assert_eq!(d.total_tokens, (a.completed * tokens) as u64, "token accounting");
+        // KV accounting: the peak is at least one request's full
+        // trajectory whenever anything completed, and spill never
+        // exceeds the peak residency demand
+        if a.completed > 0 {
+            assert!(d.kv_peak_bytes >= d.kv_bytes_per_token * (16 + tokens - 1));
+            assert!(d.kv_spill_bytes_peak <= d.kv_peak_bytes);
+        }
+    });
+}
+
+#[test]
+fn decode_closed_concurrency_one_matches_closed_form_for_random_draws() {
+    use siam::coordinator::SweepContext;
+    // concurrency 1 degenerates to sequential generation: delivered
+    // tokens/s must equal the analytic per-token reciprocal to fp
+    // accumulation error, for any trajectory length or KV precision
+    let base = SiamConfig::paper_default().with_model("gpt2_small", "seq16");
+    let ctx = SweepContext::new(&base).unwrap();
+    check_property("decode_conc1_closed_form", 8, 0x70C_E115, |rng| {
+        let tokens = rng.range(2, 8) as usize;
+        let kv_bits = [4, 8, 16][rng.below(3) as usize];
+        let requests = rng.range(1, 6) as usize;
+        let cfg = base
+            .clone()
+            .with_decode(tokens, kv_bits, 1)
+            .with_serve_closed(1)
+            .with_serve_requests(requests);
+        let rep = siam::serve::evaluate_decode(&cfg, &ctx).unwrap();
+        let d = rep.decode.as_ref().expect("decode fragment");
+        let want = 1.0e9 / d.per_token_ns;
+        let rel = (d.tokens_per_second - want).abs() / want;
+        assert!(rel < 1e-9, "closed-1 tokens/s {} vs closed form {want}: rel {rel}", d.tokens_per_second);
+        assert_eq!(d.occupancy_peak, 1, "concurrency 1 batches");
+    });
+}

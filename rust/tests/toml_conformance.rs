@@ -72,8 +72,8 @@ fn lookup<'a>(
 #[test]
 fn corpus_is_populated() {
     // the suite only means something at toml-test scale
-    assert!(corpus("valid").len() >= 44, "valid corpus shrank");
-    assert!(corpus("invalid").len() >= 30, "invalid corpus shrank");
+    assert!(corpus("valid").len() >= 47, "valid corpus shrank");
+    assert!(corpus("invalid").len() >= 34, "invalid corpus shrank");
 }
 
 #[test]
